@@ -1,0 +1,82 @@
+//! Layer-wise precision heterogeneity study — the paper's §II-A
+//! motivation quantified: sweep per-layer precision policies on a
+//! trained model and chart the accuracy / energy / cycles frontier.
+//!
+//! Policies swept: uniform P8/P16/P32, "first-k layers at P8, rest at
+//! P16/P32" ladders, and the all-but-classifier-low policy.
+//!
+//! Run: `cargo run --release --example precision_sweep
+//!       [-- --model lenet5 --limit 200]`
+
+use anyhow::Result;
+
+use spade::data::Dataset;
+use spade::engine::Mode;
+use spade::nn::{self, Backend, Model, Precision, Tensor};
+use spade::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model_name = args.get_or("model", "lenet5");
+    let limit: usize = args.num_or("limit", 200);
+
+    let model = Model::load(&model_name)?;
+    let ds = Dataset::load_artifact(&model.spec.dataset, "test")?;
+    let n = limit.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+    let layers = model.spec.mac_layers();
+
+    println!("precision sweep: {model_name} ({layers} MAC layers, {n} \
+              images)\n");
+    let (f32_logits, _) =
+        nn::exec::forward(&model, &x, Precision::F32, Backend::F32)?;
+    let f32_acc = nn::exec::accuracy(&f32_logits, labels);
+    println!("f32 baseline accuracy: {f32_acc:.4}\n");
+    println!("{:<28} {:>8} {:>12} {:>12} {:>10}", "policy", "acc",
+             "cycles", "energy(uJ)", "vs P32");
+
+    let p8 = Precision::Posit(Mode::P8x4);
+    let p16 = Precision::Posit(Mode::P16x2);
+    let p32 = Precision::Posit(Mode::P32x1);
+
+    let mut policies: Vec<(String, Vec<Precision>)> = vec![
+        ("uniform p32".into(), vec![p32; layers]),
+        ("uniform p16".into(), vec![p16; layers]),
+        ("uniform p8".into(), vec![p8; layers]),
+    ];
+    // ladder: first k layers at p8, remainder p16
+    for k in 1..layers {
+        let mut pol = vec![p8; layers];
+        for p in pol.iter_mut().skip(k) {
+            *p = p16;
+        }
+        policies.push((format!("p8 x{k} then p16"), pol));
+    }
+    // classifier-guarded: everything p8, last layer p32
+    let mut pol = vec![p8; layers];
+    *pol.last_mut().unwrap() = p32;
+    policies.push(("p8 + p32 classifier".into(), pol));
+
+    let mut base_cycles = 0u64;
+    for (name, policy) in &policies {
+        let (logits, stats) =
+            nn::exec::forward_policy(&model, &x, policy, Backend::Posit)?;
+        let acc = nn::exec::accuracy(&logits, labels);
+        if name == "uniform p32" {
+            base_cycles = stats.cycles;
+        }
+        println!("{:<28} {:>8.4} {:>12} {:>12.1} {:>9.2}x", name, acc,
+                 stats.cycles, stats.energy_pj / 1e6,
+                 base_cycles as f64 / stats.cycles as f64);
+    }
+
+    println!("\nper-layer MAC distribution:");
+    for (i, m) in model.spec.layer_macs().iter().enumerate() {
+        println!("  MAC layer {i}: {m} MACs/image");
+    }
+    println!("\nreading: early layers dominate MACs -> running them in \
+              P8 mode buys most of the 4x throughput while the \
+              classifier keeps higher precision (paper §II-A).");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: posit arithmetic, the SPADE engine, and one model layer.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use spade::engine::{pack_lanes, MacEngine, Mode};
+use spade::nn::{self, Backend, Model, Precision, Tensor};
+use spade::posit::{Quire, P16, P8};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. posit arithmetic -------------------------------------------
+    let a = P8::from_f64(1.5);
+    let b = P8::from_f64(-2.25);
+    println!("P8: {a} * {b} = {}", a * b);
+    assert_eq!((a * b).to_f64(), -3.375);
+
+    // exact accumulation through the quire
+    let mut q = Quire::new(P16::FMT);
+    for _ in 0..1000 {
+        q.mac(P16::from_f64(0.125).word() as u64,
+              P16::from_f64(0.5).word() as u64);
+    }
+    println!("quire: 1000 x 0.125*0.5 = {}",
+             spade::posit::to_f64(q.to_posit(), P16::FMT));
+
+    // --- 2. the SIMD engine --------------------------------------------
+    let mode = Mode::P8x4;
+    let fmt = mode.format();
+    let mut eng = MacEngine::new(mode);
+    let x = pack_lanes(&(1..=4).map(|i| spade::posit::from_f64(i as f64,
+        fmt)).collect::<Vec<_>>(), mode);
+    let y = pack_lanes(&vec![spade::posit::from_f64(2.0, fmt); 4], mode);
+    eng.mac(x, y, true);
+    let out = eng.read();
+    println!("SIMD P8x4: [1,2,3,4] * 2 = {:?}",
+             (0..4).map(|i| spade::posit::to_f64(
+                 spade::engine::lane_extract(out, mode, i), fmt))
+                 .collect::<Vec<_>>());
+    println!("engine activity: {:?}", eng.activity());
+
+    // --- 3. a trained model under posit inference ----------------------
+    let model = Model::load("lenet5")?;
+    let ds = spade::data::Dataset::load_artifact("mnist_syn", "test")?;
+    let n = 64.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+
+    for prec in [Precision::F32, Precision::Posit(Mode::P16x2),
+                 Precision::Posit(Mode::P8x4)] {
+        let backend = if prec == Precision::F32 { Backend::F32 }
+                      else { Backend::Posit };
+        let (logits, stats) = nn::exec::forward(&model, &x, prec,
+                                                backend)?;
+        let acc = nn::exec::accuracy(&logits, labels);
+        println!("lenet5 @ {:<4}: acc {:.3} ({} MACs, {} cycles)",
+                 prec.name(), acc, stats.macs, stats.cycles);
+    }
+    Ok(())
+}

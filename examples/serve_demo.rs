@@ -1,0 +1,63 @@
+//! Serving demo: the precision-adaptive coordinator under synthetic
+//! Poisson traffic with mixed precision pins, reporting latency
+//! percentiles per mode and end-to-end throughput.
+//!
+//! Run: `cargo run --release --example serve_demo
+//!       [-- --requests 512 --rate-us 150 --policy balanced]`
+
+use anyhow::Result;
+
+use spade::coordinator::{Coordinator, CoordinatorConfig,
+                         InferenceRequest, RoutePolicy};
+use spade::data::TrafficGen;
+use spade::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let requests: usize = args.num_or("requests", 512);
+    let rate_us: u64 = args.num_or("rate-us", 150);
+    let policy = match args.get_or("policy", "energy").as_str() {
+        "accuracy" => RoutePolicy::AccuracyFirst,
+        "balanced" => RoutePolicy::Balanced,
+        _ => RoutePolicy::EnergyFirst,
+    };
+
+    println!("starting coordinator (model=mlp, policy={policy:?}) ...");
+    let coord = Coordinator::start(CoordinatorConfig {
+        model: "mlp".into(),
+        policy,
+        ..Default::default()
+    })?;
+
+    let mut traffic = TrafficGen::new(99, rate_us, coord.input_len());
+    println!("submitting {requests} requests (mean inter-arrival \
+              {rate_us} us; ~25% pin an explicit precision) ...\n");
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for r in traffic.burst(requests) {
+        pending.push(coord.submit(InferenceRequest {
+            id: r.id,
+            input: r.input,
+            mode: r.mode,
+        }));
+    }
+    let mut mode_counts = std::collections::BTreeMap::new();
+    for rx in pending {
+        let resp = rx.recv()?;
+        *mode_counts.entry(format!("{:?}", resp.mode)).or_insert(0u32)
+            += 1;
+    }
+    let wall = t0.elapsed();
+
+    let metrics = coord.shutdown();
+    println!("{}", metrics.summary());
+    println!("batch-mode distribution: {mode_counts:?}");
+    println!("end-to-end: {requests} requests in {:.2}s -> {:.0} req/s",
+             wall.as_secs_f64(),
+             requests as f64 / wall.as_secs_f64());
+    println!("\n(the energy-first policy routes unpinned traffic to \
+              P8x4 — 4 lanes/cycle — while explicit P16/P32 pins are \
+              honored per batch; compare --policy accuracy)");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT export: lower the L2 posit inference graphs to HLO *text*.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md and DESIGN.md §2.
+
+Exports, per MODE in {f32, p8, p16, p32}:
+  * mlp_<mode>_b1.hlo.txt, mlp_<mode>_b32.hlo.txt
+  * lenet5_<mode>_b32.hlo.txt
+  * quant_<mode>_1024.hlo.txt  (elementwise quantize — runtime smoke test)
+
+Model graphs take the weights as leading arguments in sorted-name order,
+followed by the input batch; the Rust runtime (`runtime::Executable`)
+feeds the SPDW tensors in the same order. A manifest.json records the
+argument signature of every artifact.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.posit_matmul import posit_quantize_op  # noqa: E402
+
+MODES = ["f32", "p8", "p16", "p32"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, mode: str, batch: int):
+    """Lower forward_posit(params..., x) with params as leading args."""
+    spec = model.ZOO[name]
+    params0 = model.init_params(name, seed=0)
+    keys = sorted(params0)
+
+    def fn(*args):
+        params = dict(zip(keys, args[:-1]))
+        return (model.forward_posit(params, name, args[-1], mode),)
+
+    arg_specs = [jax.ShapeDtypeStruct(params0[k].shape, jnp.float32)
+                 for k in keys]
+    arg_specs.append(jax.ShapeDtypeStruct([batch] + spec["input"],
+                                          jnp.float32))
+    lowered = jax.jit(fn).lower(*arg_specs)
+    sig = {"params": {k: list(params0[k].shape) for k in keys},
+           "param_order": keys,
+           "input": [batch] + spec["input"],
+           "output": [batch, spec["classes"]]}
+    return to_hlo_text(lowered), sig
+
+
+def lower_quant(mode: str, n: int = 1024):
+    def fn(x):
+        return (posit_quantize_op(x, mode=mode),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((n,), jnp.float32))
+    return to_hlo_text(lowered), {"params": {}, "param_order": [],
+                                  "input": [n], "output": [n]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,lenet5")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+
+    for mode in MODES:
+        text, sig = lower_quant(mode)
+        fname = f"quant_{mode}_1024.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest[fname] = sig
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    jobs = []
+    for m in args.models.split(","):
+        jobs.append((m, 32))
+        if m == "mlp":
+            jobs.append((m, 1))
+    for name, batch in jobs:
+        for mode in MODES:
+            text, sig = lower_model(name, mode, batch)
+            fname = f"{name}_{mode}_b{batch}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest[fname] = sig
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

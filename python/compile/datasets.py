@@ -1,0 +1,204 @@
+"""Synthetic procedural datasets standing in for MNIST / CIFAR-10 /
+CIFAR-100 / alphabet (DESIGN.md §1: dataset substitution).
+
+Fig. 4's claim is iso-accuracy of posit vs float *inference pipelines*, a
+property of the numeric format, not of the specific images. These
+generators produce deterministic labelled datasets exercising the same
+quantized inference path:
+
+* digits / alphabet — 5x7 glyph bitmaps upscaled to 28x28 with random
+  shift, scale jitter, stroke-intensity jitter and pixel noise
+  (MNIST-like / EMNIST-letters-like);
+* class-conditional RGB textures — per-class frequency/orientation/color
+  signatures plus instance-level phase, rotation-ish shear and noise
+  (CIFAR-10/100-like).
+
+Datasets are generated once at build time and written under
+`artifacts/data/` in a flat binary format (SPDD) that the Rust side loads;
+this avoids any cross-language RNG drift between training and evaluation.
+
+SPDD format (little-endian): magic 'SPDD', u32 version=1, u32 n, u32 h,
+u32 w, u32 c, u32 nclasses, u8 labels[n], f32 data[n*h*w*c] (NHWC, [0,1]).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+# --- 5x7 glyph font (rows of 5 chars, '#' = on) -------------------------
+
+_FONT = {
+    "0": ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    "1": ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    "2": ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    "3": ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    "4": ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    "5": ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    "6": ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    "7": ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    "8": ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    "9": ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+    "A": ["01110", "10001", "10001", "11111", "10001", "10001", "10001"],
+    "B": ["11110", "10001", "10001", "11110", "10001", "10001", "11110"],
+    "C": ["01110", "10001", "10000", "10000", "10000", "10001", "01110"],
+    "D": ["11100", "10010", "10001", "10001", "10001", "10010", "11100"],
+    "E": ["11111", "10000", "10000", "11110", "10000", "10000", "11111"],
+    "F": ["11111", "10000", "10000", "11110", "10000", "10000", "10000"],
+    "G": ["01110", "10001", "10000", "10111", "10001", "10001", "01111"],
+    "H": ["10001", "10001", "10001", "11111", "10001", "10001", "10001"],
+    "I": ["01110", "00100", "00100", "00100", "00100", "00100", "01110"],
+    "J": ["00111", "00010", "00010", "00010", "00010", "10010", "01100"],
+    "K": ["10001", "10010", "10100", "11000", "10100", "10010", "10001"],
+    "L": ["10000", "10000", "10000", "10000", "10000", "10000", "11111"],
+    "M": ["10001", "11011", "10101", "10101", "10001", "10001", "10001"],
+    "N": ["10001", "10001", "11001", "10101", "10011", "10001", "10001"],
+    "O": ["01110", "10001", "10001", "10001", "10001", "10001", "01110"],
+    "P": ["11110", "10001", "10001", "11110", "10000", "10000", "10000"],
+    "Q": ["01110", "10001", "10001", "10001", "10101", "10010", "01101"],
+    "R": ["11110", "10001", "10001", "11110", "10100", "10010", "10001"],
+    "S": ["01111", "10000", "10000", "01110", "00001", "00001", "11110"],
+    "T": ["11111", "00100", "00100", "00100", "00100", "00100", "00100"],
+    "U": ["10001", "10001", "10001", "10001", "10001", "10001", "01110"],
+    "V": ["10001", "10001", "10001", "10001", "10001", "01010", "00100"],
+    "W": ["10001", "10001", "10001", "10101", "10101", "11011", "10001"],
+    "X": ["10001", "10001", "01010", "00100", "01010", "10001", "10001"],
+    "Y": ["10001", "10001", "01010", "00100", "00100", "00100", "00100"],
+    "Z": ["11111", "00001", "00010", "00100", "01000", "10000", "11111"],
+}
+
+_DIGITS = "0123456789"
+_LETTERS = "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+
+
+def _glyph_array(ch: str) -> np.ndarray:
+    rows = _FONT[ch]
+    return np.array([[1.0 if c == "1" else 0.0 for c in r] for r in rows],
+                    dtype=np.float32)
+
+
+def _render_glyph(ch: str, rng: np.random.Generator, size: int = 28
+                  ) -> np.ndarray:
+    """Upscale a 5x7 glyph with jittered placement/scale/intensity/noise."""
+    g = _glyph_array(ch)
+    # jitter scale: glyph occupies roughly 60-90% of the canvas
+    sh = rng.uniform(0.60, 0.90)
+    sw = rng.uniform(0.60, 0.90)
+    th = max(7, int(round(size * sh)))
+    tw = max(5, int(round(size * sw * 5 / 7)))
+    # nearest-neighbour upscale with fractional sampling (cheap, dependency
+    # free, and identical semantics on every platform)
+    yy = np.minimum((np.arange(th) * 7 // th), 6)
+    xx = np.minimum((np.arange(tw) * 5 // tw), 4)
+    big = g[np.ix_(yy, xx)]
+    # stroke intensity jitter + slight blur via 3x3 box smoothing
+    big = big * rng.uniform(0.75, 1.0)
+    img = np.zeros((size, size), dtype=np.float32)
+    oy = rng.integers(0, size - th + 1)
+    ox = rng.integers(0, size - tw + 1)
+    img[oy:oy + th, ox:ox + tw] = big
+    k = np.pad(img, 1)
+    img = (k[:-2, :-2] + k[:-2, 1:-1] + k[:-2, 2:] +
+           k[1:-1, :-2] + 2 * k[1:-1, 1:-1] + k[1:-1, 2:] +
+           k[2:, :-2] + k[2:, 1:-1] + k[2:, 2:]) / 10.0
+    img += rng.normal(0, 0.06, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)[..., None]  # HWC, C=1
+
+
+def _render_texture(cls: int, nclasses: int, rng: np.random.Generator,
+                    size: int = 32) -> np.ndarray:
+    """Class-conditional RGB texture (CIFAR-like stand-in).
+
+    The class identity is carried by a deterministic per-class signature
+    (two spatial frequencies, orientation, color mixing); the instance
+    varies phase, shift and noise so the task is learnable but not trivial.
+    """
+    crng = np.random.default_rng(1234567 + cls)  # per-class signature
+    f1 = crng.uniform(1.0, 6.0)
+    f2 = crng.uniform(1.0, 6.0)
+    theta = crng.uniform(0, np.pi)
+    color = crng.uniform(0.2, 1.0, size=(3, 2))
+    blob_c = crng.uniform(0.2, 0.8, size=3)
+
+    ph1 = rng.uniform(0, 2 * np.pi)
+    ph2 = rng.uniform(0, 2 * np.pi)
+    y, x = np.mgrid[0:size, 0:size] / size
+    u = np.cos(theta) * x + np.sin(theta) * y
+    v = -np.sin(theta) * x + np.cos(theta) * y
+    a = 0.5 + 0.5 * np.sin(2 * np.pi * f1 * u + ph1)
+    b = 0.5 + 0.5 * np.sin(2 * np.pi * f2 * v + ph2)
+    img = np.stack([color[c, 0] * a + color[c, 1] * b for c in range(3)],
+                   axis=-1).astype(np.float32) / 2.0
+    # instance blob
+    cy, cx = rng.uniform(0.2, 0.8, 2)
+    r2 = (y - cy) ** 2 + (x - cx) ** 2
+    blob = np.exp(-r2 / 0.02).astype(np.float32)
+    img += blob[..., None] * blob_c[None, None, :] * 0.5
+    img += rng.normal(0, 0.05, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+# --- dataset builders ----------------------------------------------------
+
+def make_glyph_dataset(chars: str, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, len(chars), size=n).astype(np.uint8)
+    imgs = np.stack([_render_glyph(chars[l], rng) for l in labels])
+    return imgs.astype(np.float32), labels
+
+
+def make_texture_dataset(nclasses: int, n: int, seed: int, size: int = 32):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, nclasses, size=n).astype(np.uint8)
+    imgs = np.stack([_render_texture(int(l), nclasses, rng, size)
+                     for l in labels])
+    return imgs.astype(np.float32), labels
+
+
+SPECS = {
+    # name: (builder, nclasses, train_n, test_n)
+    "mnist_syn": (lambda n, s: make_glyph_dataset(_DIGITS, n, s), 10,
+                  3000, 600),
+    "alpha_syn": (lambda n, s: make_glyph_dataset(_LETTERS, n, s), 26,
+                  3900, 780),
+    "cifar10_syn": (lambda n, s: make_texture_dataset(10, n, s), 10,
+                    3000, 600),
+    "cifar100_syn": (lambda n, s: make_texture_dataset(100, n, s), 100,
+                     6000, 1200),
+}
+
+
+def write_spdd(path: str, imgs: np.ndarray, labels: np.ndarray,
+               nclasses: int) -> None:
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        f.write(b"SPDD")
+        f.write(struct.pack("<IIIIII", 1, n, h, w, c, nclasses))
+        f.write(labels.astype(np.uint8).tobytes())
+        f.write(imgs.astype("<f4").tobytes())
+
+
+def read_spdd(path: str):
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SPDD"
+        ver, n, h, w, c, nclasses = struct.unpack("<IIIIII", f.read(24))
+        assert ver == 1
+        labels = np.frombuffer(f.read(n), dtype=np.uint8)
+        data = np.frombuffer(f.read(n * h * w * c * 4), dtype="<f4")
+    return data.reshape(n, h, w, c).copy(), labels.copy(), nclasses
+
+
+def build_all(out_dir: str, seed: int = 7):
+    os.makedirs(out_dir, exist_ok=True)
+    built = {}
+    for name, (builder, nclasses, ntr, nte) in SPECS.items():
+        tr_imgs, tr_lab = builder(ntr, seed)
+        te_imgs, te_lab = builder(nte, seed + 1)
+        write_spdd(os.path.join(out_dir, f"{name}_train.bin"),
+                   tr_imgs, tr_lab, nclasses)
+        write_spdd(os.path.join(out_dir, f"{name}_test.bin"),
+                   te_imgs, te_lab, nclasses)
+        built[name] = (tr_imgs.shape, te_imgs.shape)
+    return built

@@ -1,0 +1,189 @@
+"""Vectorized posit(n, es) encode / decode / quantize in pure jnp integer ops.
+
+This is the *golden twin* of the Rust core (`rust/src/posit/`): both sides
+implement the identical assemble-then-round-to-nearest-even algorithm, and
+`compile/golden.py` exports exhaustive/random vectors that `cargo test
+golden_vs_python` checks bit-for-bit.
+
+Why integer bit-manipulation instead of table lookups: it vectorizes on the
+VPU, needs no 65536-entry constants in the kernel, and is the same algorithm
+the SPADE RTL implements (LOD regime decode -> shift -> field extraction),
+so the Pallas kernel structurally mirrors the datapath it models.
+
+All functions operate on int64/float64 (jax_enable_x64 must be on — aot.py,
+train.py and the tests set it). Posit special values: 0 -> 0,
+NaR (1000...0) <- NaN/Inf. Rounding: round-to-nearest-even on the monotone
+word encoding (the standard posit rounding), values in (0, minpos] round to
+minpos, values >= maxpos clamp to maxpos.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Extra fraction bits carried through the assemble step before rounding.
+# Wide enough that guard+sticky are exact for every format we support
+# (P32 keeps <= 27 fraction bits; regime <= 31 bits; 29+2+31 = 62 < 63).
+_F = 29
+
+_F64_EXP_MASK = (1 << 11) - 1
+_F64_FRAC_MASK = (1 << 52) - 1
+
+
+def _msb_index(x):
+    """Index of the highest set bit of positive int64 x (exact for x < 2^53).
+
+    Implemented via the exponent field of the float64 conversion — there is
+    no clz in jnp, but the conversion is exact below 2^53 which covers every
+    field width we ever scan (<= 2^31).
+    """
+    f = jnp.asarray(x).astype(jnp.float64)
+    bits = f.view(jnp.int64)
+    return ((bits >> 52) & _F64_EXP_MASK) - 1023
+
+
+def posit_encode(v, nbits: int, es: int):
+    """Round float64 array `v` to the nearest posit(nbits, es) word (int64).
+
+    Returns the canonical unsigned word in [0, 2^nbits).
+    """
+    v = jnp.asarray(v, jnp.float64)
+    n = nbits
+    es2 = 1 << es
+    mask = (1 << n) - 1
+    maxpos = (1 << (n - 1)) - 1
+    nar = 1 << (n - 1)
+
+    bits = v.view(jnp.int64)
+    sign = (bits >> 63) & 1
+    e_raw = (bits >> 52) & _F64_EXP_MASK
+    frac52 = bits & _F64_FRAC_MASK
+
+    is_zero = (e_raw == 0) & (frac52 == 0)
+    is_nar = e_raw == _F64_EXP_MASK  # inf or nan
+    # Subnormal float64 inputs are far below minpos for every posit format
+    # we support — fold them into the "tiny" clamp below by treating the
+    # scale as very negative.
+    sc = jnp.where(e_raw == 0, jnp.int64(-4096), e_raw - 1023)
+
+    k = sc >> es  # floor division (arithmetic shift)
+    ex = sc - (k << es)  # in [0, es2)
+
+    # Regime clamps: k >= n-2 saturates to maxpos, k <= -(n-1) to minpos.
+    too_big = k >= (n - 2)
+    too_small = k <= -(n - 1)
+    k_c = jnp.clip(k, -(n - 2), n - 3)
+    rlen = jnp.where(k_c >= 0, k_c + 2, 1 - k_c)
+
+    # Assemble [regime | exponent | fraction(_F bits)] into one integer.
+    regime_val = jnp.where(k_c >= 0, ((jnp.int64(1) << (k_c + 1)) - 1) << 1,
+                           jnp.int64(1))
+    frac_hi = frac52 >> (52 - _F)
+    sticky_low = (frac52 & ((1 << (52 - _F)) - 1)) != 0
+
+    x = (regime_val << (es + _F)) | (ex.astype(jnp.int64) << _F) | frac_hi
+    shift = rlen + es + _F - (n - 1)  # always >= 1 given _F >= n
+    q = x >> shift
+    round_bit = (x >> (shift - 1)) & 1
+    sticky = ((x & ((jnp.int64(1) << (shift - 1)) - 1)) != 0) | sticky_low
+    q = q + (round_bit & (sticky.astype(jnp.int64) | (q & 1)))
+
+    # Monotone-word rounding can only move within the positive range;
+    # clamp the extremes per the posit standard (no overflow to NaR,
+    # no underflow to zero).
+    q = jnp.where(too_big, jnp.int64(maxpos), q)
+    q = jnp.where(too_small, jnp.int64(1), q)
+    q = jnp.clip(q, 1, maxpos)
+
+    word = jnp.where(sign == 1, (-q) & mask, q)
+    word = jnp.where(is_zero, jnp.int64(0), word)
+    word = jnp.where(is_nar, jnp.int64(nar), word)
+    return word.astype(jnp.int64)
+
+
+def posit_decode(words, nbits: int, es: int):
+    """Decode posit(nbits, es) words (int64, canonical unsigned) to float64.
+
+    NaR decodes to NaN.
+    """
+    p = jnp.asarray(words, jnp.int64) & ((1 << nbits) - 1)
+    n = nbits
+    es2 = 1 << es
+    mask = (1 << n) - 1
+    nar = 1 << (n - 1)
+
+    is_zero = p == 0
+    is_nar = p == nar
+
+    s = (p >> (n - 1)) & 1
+    mag = jnp.where(s == 1, (-p) & mask, p)
+    body = mag & ((1 << (n - 1)) - 1)  # bits n-2..0
+    r0 = (mag >> (n - 2)) & 1
+
+    # Regime run length via MSB scan of (body or its complement).
+    body_mask = (1 << (n - 1)) - 1
+    t_ones = (~body) & body_mask  # first 0 marks end of a 1-run
+    t_zeros = body
+    # Guard against all-ones / all-zeros bodies (j scan on 0 is undefined);
+    # substitute 1 and fix up afterwards.
+    t1 = jnp.where(t_ones == 0, jnp.int64(1), t_ones)
+    t0 = jnp.where(t_zeros == 0, jnp.int64(1), t_zeros)
+    j_ones = _msb_index(t1)
+    j_zeros = _msb_index(t0)
+
+    # r0 == 1: run of m ones from bit n-2 down; first zero at j_ones.
+    m_ones = (n - 2) - j_ones
+    k_ones = m_ones - 1
+    # all-ones body: k = n-2, no terminator, no exp/frac
+    k_ones = jnp.where(t_ones == 0, jnp.int64(n - 2), k_ones)
+    j_term_ones = jnp.where(t_ones == 0, jnp.int64(-1), j_ones)
+
+    # r0 == 0: run of zeros ends at the terminating 1 at j_zeros.
+    m_zeros = (n - 2) - j_zeros
+    k_zeros = -m_zeros
+    # body == 0 with mag != 0 cannot happen for valid nonzero posits
+    j_term_zeros = jnp.where(t_zeros == 0, jnp.int64(-1), j_zeros)
+
+    k = jnp.where(r0 == 1, k_ones, k_zeros)
+    j = jnp.where(r0 == 1, j_term_ones, j_term_zeros)  # terminator position
+
+    # Bits below the terminator: first min(es, j) are exponent MSBs.
+    j_pos = jnp.maximum(j, 0)
+    have = jnp.minimum(jnp.int64(es), j_pos)
+    field = body & ((jnp.int64(1) << j_pos) - 1)
+    ex = (field >> (j_pos - have)) << (es - have)
+    fbits = j_pos - have
+    frac = field & ((jnp.int64(1) << fbits) - 1)
+
+    scale = k * es2 + ex
+    # Assemble the float64 directly from bit fields — jnp.exp2 is not
+    # guaranteed bit-exact on every backend, and decode values must be
+    # exact for the golden cross-check with the Rust core. The posit
+    # scale range (|scale| <= 120 for P32) is always a normal float64.
+    val_bits = ((1023 + scale) << 52) | (frac << (52 - fbits))
+    val = val_bits.view(jnp.float64)
+    val = jnp.where(s == 1, -val, val)
+    val = jnp.where(is_zero, 0.0, val)
+    val = jnp.where(is_nar, jnp.float64(jnp.nan), val)
+    return val
+
+
+def posit_quantize(v, nbits: int, es: int):
+    """Round float64 array to the nearest posit(nbits, es) value (float64)."""
+    return posit_decode(posit_encode(v, nbits, es), nbits, es)
+
+
+# Standard SPADE formats: MODE 0/1/2 from the paper's 2-bit MODE signal.
+FORMATS = {
+    "p8": (8, 0),
+    "p16": (16, 1),
+    "p32": (32, 2),
+}
+
+
+def quantize_mode(v, mode: str):
+    """Quantize through one of the SPADE MODE formats, or pass through f32."""
+    if mode == "f32":
+        return jnp.asarray(v, jnp.float64)
+    n, es = FORMATS[mode]
+    return posit_quantize(v, n, es)

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: the SPADE MAC hot-spot as posit-quantized matmuls.
+
+Hardware adaptation (DESIGN.md §5): the paper's SIMD lane fusion — one wide
+datapath running 4x Posit-8 / 2x Posit-16 / 1x Posit-32 MACs per cycle —
+becomes MODE-dependent *BlockSpec tiling*: at equal VMEM budget the P8
+kernel streams 4x the tile area of the P32 kernel per grid step (operands
+model 8-bit storage), the matmul itself stays on the MXU path
+(`jnp.dot`), and the quire's exact no-intermediate-rounding accumulation
+becomes an f64 accumulator with a single posit RNE at the end.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that both pytest and the
+Rust runtime can run. Correctness is therefore the target of this layer;
+TPU-perf is estimated structurally in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .posit import FORMATS, posit_quantize
+
+# MODE -> (bm, bn) tile shape. P8 lanes are 4x denser than P32 lanes at the
+# same VMEM footprint (8-bit vs 32-bit storage), mirroring the paper's
+# 4x/2x/1x per-cycle throughput. K is kept whole inside the block so the
+# accumulation models the quire: no intermediate rounding along K.
+MODE_TILES = {
+    "p8": (64, 64),
+    "p16": (32, 64),
+    "p32": (32, 32),
+    "f32": (32, 32),
+}
+
+
+def _quant(x, mode: str):
+    if mode == "f32":
+        return x
+    n, es = FORMATS[mode]
+    return posit_quantize(x, n, es)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, mode: str, out_mode: str):
+    x = x_ref[...].astype(jnp.float64)
+    w = w_ref[...].astype(jnp.float64)
+    xq = _quant(x, mode)
+    wq = _quant(w, mode)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float64)
+    o_ref[...] = _quant(acc, out_mode).astype(jnp.float32)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, mode: str, relu: bool):
+    x = x_ref[...].astype(jnp.float64)
+    w = w_ref[...].astype(jnp.float64)
+    b = b_ref[...].astype(jnp.float64)
+    xq = _quant(x, mode)
+    wq = _quant(w, mode)
+    bq = _quant(b, mode)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float64) + bq
+    out = _quant(acc, mode)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(jnp.float32)
+
+
+def _pad_dim(d: int, b: int) -> int:
+    return (d + b - 1) // b * b
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_mode"))
+def posit_matmul(x, w, mode: str = "p16", out_mode: str | None = None):
+    """Posit(MODE)-quantized matmul via a tiled Pallas kernel.
+
+    x: [M, K] f32, w: [K, N] f32 -> [M, N] f32 on the posit grid.
+    Shapes are padded to the MODE tile internally and cropped back.
+    """
+    out_mode = out_mode or mode
+    bm, bn = MODE_TILES[mode]
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    mp, np_ = _pad_dim(m, bm), _pad_dim(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, mode=mode, out_mode=out_mode),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "relu"))
+def posit_dense(x, w, b, mode: str = "p16", relu: bool = True):
+    """Fused dense layer: posit matmul + bias in the quire + optional ReLU.
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N] f32 on the posit grid.
+    """
+    bm, bn = MODE_TILES[mode]
+    m, k = x.shape
+    _, n = w.shape
+    mp, np_ = _pad_dim(m, bm), _pad_dim(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, mode=mode, relu=relu),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def posit_quantize_op(x, mode: str = "p16"):
+    """Elementwise posit quantization as a Pallas kernel (whole-array block).
+
+    Models Stage 1/Stage 5 of the pipeline in isolation; used by the Rust
+    runtime tests as a minimal PJRT artifact exercising posit semantics.
+    """
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = _quant(x_ref[...].astype(jnp.float64), mode).astype(
+            jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Same math as `posit_matmul.py` without pallas: quantize operands to the
+posit(n, es) grid, exact high-precision accumulation (f64 — the quire
+proxy, see DESIGN.md §6), one final posit rounding. pytest checks the
+Pallas kernels against these under hypothesis-driven shape/format sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .posit import FORMATS, posit_quantize
+
+
+def quantize_ref(x, mode: str):
+    """Elementwise posit quantization oracle (f32 passthrough)."""
+    x = jnp.asarray(x, jnp.float64)
+    if mode == "f32":
+        return x
+    n, es = FORMATS[mode]
+    return posit_quantize(x, n, es)
+
+
+def matmul_ref(x, w, mode: str, out_mode: str | None = None):
+    """Posit MAC oracle: q(x) @ q(w) with exact accumulation, final round.
+
+    Mirrors the SPADE pipeline: Stage 1-2 quantized operands and exact
+    products, Stage 3 quire accumulation (no intermediate rounding),
+    Stage 4-5 a single reconstruction + RNE at the end.
+    """
+    out_mode = out_mode or mode
+    xq = quantize_ref(x, mode)
+    wq = quantize_ref(w, mode)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float64)
+    return quantize_ref(acc, out_mode)
+
+
+def dense_ref(x, w, b, mode: str, relu: bool = True):
+    """Dense layer oracle: posit matmul + bias into the quire + activation."""
+    xq = quantize_ref(x, mode)
+    wq = quantize_ref(w, mode)
+    bq = quantize_ref(b, mode)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float64) + bq
+    out = quantize_ref(acc, mode)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,286 @@
+"""L2 — JAX model zoo: forward/backward graphs built on the L1 kernels.
+
+Two forward paths per model:
+
+* `forward_train` — plain f32 jnp/lax ops (fast CPU training at build
+  time; `train.py` differentiates through it);
+* `forward_posit` — the inference graph used for AOT export and accuracy
+  evaluation: every MAC layer routed through the L1 Pallas posit kernels
+  (conv lowered to im2col + `posit_dense`), mirroring execution on the
+  SPADE systolic array where conv is mapped as GEMM (Fig. 3).
+
+Models are described by a declarative layer spec (JSON-serializable) that
+the Rust side (`nn::model`) consumes verbatim, so both languages build the
+identical graph over the identical weights.
+
+Layout conventions (shared with Rust): activations NHWC, conv weights
+HWIO, im2col patch ordering (ky, kx, c), maxpool 2x2/2 valid.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.posit_matmul import posit_dense, posit_matmul
+
+# --- model zoo -----------------------------------------------------------
+# Layer kinds: conv(k, out, pad), maxpool(k), relu, flatten, dense(out).
+# ReLU is folded into conv/dense via `relu: true` (the systolic PE applies
+# activation at drain time).
+
+ZOO = {
+    "mlp": {
+        "input": [28, 28, 1], "classes": 10,
+        "layers": [
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 128, "relu": True},
+            {"kind": "dense", "out": 10, "relu": False},
+        ],
+    },
+    "lenet5": {
+        "input": [28, 28, 1], "classes": 10,
+        "layers": [
+            {"kind": "conv", "k": 5, "out": 6, "pad": "valid", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 5, "out": 16, "pad": "valid", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 120, "relu": True},
+            {"kind": "dense", "out": 84, "relu": True},
+            {"kind": "dense", "out": 10, "relu": False},
+        ],
+    },
+    "cnn5": {
+        "input": [32, 32, 3], "classes": 10,
+        "layers": [
+            {"kind": "conv", "k": 3, "out": 32, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 128, "relu": True},
+            {"kind": "dense", "out": 10, "relu": False},
+        ],
+    },
+    "alexnet_mini": {
+        "input": [32, 32, 3], "classes": 10,
+        "layers": [
+            {"kind": "conv", "k": 3, "out": 48, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 256, "relu": True},
+            {"kind": "dense", "out": 10, "relu": False},
+        ],
+    },
+    "vgg16_mini": {
+        # VGG-16 structure at 1/8 width for build-time CPU training
+        "input": [32, 32, 3], "classes": 100,
+        "layers": [
+            {"kind": "conv", "k": 3, "out": 16, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 16, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 32, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 32, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 64, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "conv", "k": 3, "out": 96, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 256, "relu": True},
+            {"kind": "dense", "out": 100, "relu": False},
+        ],
+    },
+    "alpha_cnn": {
+        # the paper's 4-layer CNN for alphabet recognition
+        "input": [28, 28, 1], "classes": 26,
+        "layers": [
+            {"kind": "conv", "k": 3, "out": 16, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "conv", "k": 3, "out": 32, "pad": "same", "relu": True},
+            {"kind": "maxpool", "k": 2},
+            {"kind": "flatten"},
+            {"kind": "dense", "out": 64, "relu": True},
+            {"kind": "dense", "out": 26, "relu": False},
+        ],
+    },
+}
+
+# dataset each model is trained/evaluated on (paper Fig. 4 pairing)
+MODEL_DATASET = {
+    "mlp": "mnist_syn",
+    "lenet5": "mnist_syn",
+    "cnn5": "cifar10_syn",
+    "alexnet_mini": "cifar10_syn",
+    "vgg16_mini": "cifar100_syn",
+    "alpha_cnn": "alpha_syn",
+}
+
+
+def _out_hw(h, w, k, pad):
+    if pad == "same":
+        return h, w
+    return h - k + 1, w - k + 1
+
+
+def shapes_through(name: str):
+    """Yield (layer, in_shape, out_shape) walking the spec symbolically."""
+    spec = ZOO[name]
+    h, w, c = spec["input"]
+    feat = None
+    out = []
+    for layer in spec["layers"]:
+        kind = layer["kind"]
+        ishape = (h, w, c) if feat is None else (feat,)
+        if kind == "conv":
+            h, w = _out_hw(h, w, layer["k"], layer["pad"])
+            c = layer["out"]
+            oshape = (h, w, c)
+        elif kind == "maxpool":
+            h, w = h // layer["k"], w // layer["k"]
+            oshape = (h, w, c)
+        elif kind == "flatten":
+            feat = h * w * c
+            oshape = (feat,)
+        elif kind == "dense":
+            feat = layer["out"]
+            oshape = (feat,)
+        elif kind == "relu":
+            oshape = ishape
+        else:
+            raise ValueError(kind)
+        out.append((layer, ishape, oshape))
+    return out
+
+
+def init_params(name: str, seed: int = 0):
+    """He-init parameters keyed 'layer{i}/w' and 'layer{i}/b'."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for i, (layer, ishape, _) in enumerate(shapes_through(name)):
+        kind = layer["kind"]
+        if kind == "conv":
+            k, o = layer["k"], layer["out"]
+            cin = ishape[2]
+            fan_in = k * k * cin
+            params[f"layer{i}/w"] = (rng.normal(0, np.sqrt(2 / fan_in),
+                                                (k, k, cin, o))
+                                     .astype(np.float32))
+            params[f"layer{i}/b"] = np.zeros(o, np.float32)
+        elif kind == "dense":
+            fan_in = ishape[0]
+            params[f"layer{i}/w"] = (rng.normal(0, np.sqrt(2 / fan_in),
+                                                (fan_in, layer["out"]))
+                                     .astype(np.float32))
+            params[f"layer{i}/b"] = np.zeros(layer["out"], np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+# --- f32 training forward (plain lax ops, fast & differentiable) ---------
+
+def forward_train(params, name: str, x):
+    """x: [N, H, W, C] f32 -> logits [N, classes]."""
+    spec = ZOO[name]
+    for i, layer in enumerate(spec["layers"]):
+        kind = layer["kind"]
+        if kind == "conv":
+            w = params[f"layer{i}/w"]
+            b = params[f"layer{i}/b"]
+            pad = "SAME" if layer["pad"] == "same" else "VALID"
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding=pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+            if layer.get("relu"):
+                x = jnp.maximum(x, 0.0)
+        elif kind == "maxpool":
+            k = layer["k"]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1),
+                "VALID")
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "dense":
+            x = x @ params[f"layer{i}/w"] + params[f"layer{i}/b"]
+            if layer.get("relu"):
+                x = jnp.maximum(x, 0.0)
+    return x
+
+
+# --- posit inference forward (L1 Pallas kernels, conv as im2col GEMM) ----
+
+def _im2col(x, k: int, pad: str):
+    """[N,H,W,C] -> [N,Ho,Wo,k*k*C] with (ky, kx, c) patch ordering."""
+    if pad == "same":
+        p = (k - 1) // 2
+        q = k - 1 - p
+        x = jnp.pad(x, ((0, 0), (p, q), (p, q), (0, 0)))
+    n, h, w, c = x.shape
+    ho, wo = h - k + 1, w - k + 1
+    cols = [x[:, i:i + ho, j:j + wo, :] for i in range(k) for j in range(k)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def forward_posit(params, name: str, x, mode: str):
+    """Posit(MODE) inference graph — every MAC through the L1 kernel."""
+    spec = ZOO[name]
+    for i, layer in enumerate(spec["layers"]):
+        kind = layer["kind"]
+        if kind == "conv":
+            w = params[f"layer{i}/w"]
+            b = params[f"layer{i}/b"]
+            k = layer["k"]
+            patches = _im2col(x, k, layer["pad"])
+            n, ho, wo, pc = patches.shape
+            wmat = w.reshape(-1, w.shape[-1])
+            y = posit_dense(patches.reshape(-1, pc), wmat, b, mode=mode,
+                            relu=bool(layer.get("relu")))
+            x = y.reshape(n, ho, wo, -1)
+        elif kind == "maxpool":
+            k = layer["k"]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1),
+                "VALID")
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "dense":
+            x = posit_dense(x, params[f"layer{i}/w"], params[f"layer{i}/b"],
+                            mode=mode, relu=bool(layer.get("relu")))
+    return x
+
+
+# --- losses / metrics -----------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(
+        jnp.float32))
+
+
+def spec_json(name: str) -> str:
+    spec = dict(ZOO[name])
+    spec["name"] = name
+    spec["dataset"] = MODEL_DATASET[name]
+    return json.dumps(spec, indent=1)

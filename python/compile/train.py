@@ -1,0 +1,144 @@
+"""Build-time training of the Fig. 4 model zoo on the synthetic datasets.
+
+Pure-JAX Adam on the f32 `forward_train` graph. Runs ONCE under
+`make artifacts`; exports per-model weights (SPDW), the layer spec (JSON),
+and f32 train/test accuracy (metrics.json). The Rust side then evaluates
+the same weights under posit quantization for the Fig. 4 reproduction —
+python never appears on the inference path.
+
+Usage: python -m compile.train --out-dir ../artifacts/weights
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+from .weights_io import write_spdw
+
+# (steps, batch, lr) per model — sized for a few minutes of CPU total.
+TRAIN_CFG = {
+    "mlp": (400, 64, 1e-3),
+    "lenet5": (500, 64, 1e-3),
+    "cnn5": (500, 64, 1e-3),
+    "alexnet_mini": (400, 64, 1e-3),
+    "vgg16_mini": (2000, 64, 1e-3),
+    "alpha_cnn": (500, 64, 1e-3),
+}
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, st, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = st["t"] + 1
+    m = {k: b1 * st["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * st["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1 ** t) for k in params}
+    vhat = {k: v[k] / (1 - b2 ** t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_model(name: str, data_dir: str, log=print):
+    steps, batch, lr = TRAIN_CFG[name]
+    ds = model.MODEL_DATASET[name]
+    xtr, ytr, _ = datasets.read_spdd(os.path.join(data_dir,
+                                                  f"{ds}_train.bin"))
+    xte, yte, _ = datasets.read_spdd(os.path.join(data_dir,
+                                                  f"{ds}_test.bin"))
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr.astype(np.int32))
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte.astype(np.int32))
+
+    params = model.init_params(name, seed=0)
+    st = adam_init(params)
+
+    def loss_fn(p, x, y):
+        return model.cross_entropy(model.forward_train(p, name, x), y)
+
+    @jax.jit
+    def step(p, s, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, s2 = adam_update(p, g, s, lr)
+        return p2, s2, loss
+
+    rng = np.random.default_rng(42)
+    t0 = time.time()
+    loss_curve = []
+    for i in range(steps):
+        idx = rng.integers(0, xtr.shape[0], size=batch)
+        params, st, loss = step(params, st, xtr[idx], ytr[idx])
+        if i % 50 == 0 or i == steps - 1:
+            loss_curve.append((i, float(loss)))
+            log(f"  [{name}] step {i:4d} loss {float(loss):.4f}")
+
+    @jax.jit
+    def logits_fn(p, x):
+        return model.forward_train(p, name, x)
+
+    def eval_acc(x, y):
+        accs, n = 0.0, 0
+        for i in range(0, x.shape[0], 256):
+            lg = logits_fn(params, x[i:i + 256])
+            accs += float(jnp.sum((jnp.argmax(lg, 1) == y[i:i + 256])))
+            n += int(x.shape[0] - i if i + 256 > x.shape[0] else 256)
+        return accs / x.shape[0]
+
+    tr_acc, te_acc = eval_acc(xtr, ytr), eval_acc(xte, yte)
+    dt = time.time() - t0
+    log(f"  [{name}] train_acc={tr_acc:.4f} test_acc={te_acc:.4f} "
+        f"({dt:.1f}s)")
+    return params, {"train_acc": tr_acc, "test_acc": te_acc,
+                    "steps": steps, "seconds": dt,
+                    "loss_curve": loss_curve}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/weights")
+    ap.add_argument("--models", default=",".join(TRAIN_CFG))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    data_dir = os.path.join(os.path.dirname(args.out_dir), "data")
+    os.makedirs(data_dir, exist_ok=True)
+    need = {model.MODEL_DATASET[m] for m in args.models.split(",")}
+    missing = [d for d in need
+               if not os.path.exists(os.path.join(data_dir,
+                                                  f"{d}_train.bin"))]
+    if missing:
+        print(f"building synthetic datasets -> {data_dir}")
+        datasets.build_all(data_dir)
+
+    # merge with any existing metrics so partial retrains keep rows
+    metrics = {}
+    mpath = os.path.join(args.out_dir, "metrics.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            metrics = json.load(f)
+    for name in args.models.split(","):
+        print(f"training {name} ...")
+        params, m = train_model(name, data_dir)
+        write_spdw(os.path.join(args.out_dir, f"{name}.spdw"),
+                   {k: np.asarray(v) for k, v in params.items()})
+        with open(os.path.join(args.out_dir, f"{name}.json"), "w") as f:
+            f.write(model.spec_json(name))
+        metrics[name] = m
+    with open(mpath, "w") as f:
+        json.dump(metrics, f, indent=1)
+    print("wrote", args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""SPDW flat weight container shared with the Rust loader (`nn::weights`).
+
+Format (little-endian): magic 'SPDW', u32 version=1, u32 count, then per
+tensor: u16 name_len, name bytes (utf-8), u8 ndim, u32 dims[ndim],
+f32 data (row-major).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+
+def write_spdw(path: str, tensors: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(b"SPDW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.asarray(tensors[name], dtype="<f4")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_spdw(path: str) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SPDW"
+        ver, count = struct.unpack("<II", f.read(8))
+        assert ver == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4")
+            out[name] = data.reshape(dims).copy()
+    return out

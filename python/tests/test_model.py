@@ -1,0 +1,82 @@
+"""L2 model-zoo tests: shapes, spec walking, posit-vs-train-forward parity."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+SMALL = ["mlp", "lenet5", "alpha_cnn"]
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_shapes_walk(name):
+    walked = model.shapes_through(name)
+    assert walked[-1][2] == (model.ZOO[name]["classes"],)
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_init_params_match_spec(name):
+    params = model.init_params(name)
+    for i, (layer, ishape, oshape) in enumerate(model.shapes_through(name)):
+        if layer["kind"] == "conv":
+            assert params[f"layer{i}/w"].shape == \
+                (layer["k"], layer["k"], ishape[2], layer["out"])
+        elif layer["kind"] == "dense":
+            assert params[f"layer{i}/w"].shape == (ishape[0], layer["out"])
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_forward_train_shape(name):
+    spec = model.ZOO[name]
+    params = model.init_params(name)
+    x = jnp.zeros([4] + spec["input"], jnp.float32)
+    y = model.forward_train(params, name, x)
+    assert y.shape == (4, spec["classes"])
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_forward_posit_f32_matches_train(name):
+    """f32 'posit' mode = no quantization -> must match the lax graph."""
+    spec = model.ZOO[name]
+    params = model.init_params(name, seed=3)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=[2] + spec["input"]).astype(np.float32))
+    yt = np.array(model.forward_train(params, name, x))
+    yp = np.array(model.forward_posit(params, name, x, "f32"))
+    np.testing.assert_allclose(yp, yt, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["p8", "p16", "p32"])
+def test_forward_posit_runs_all_modes(mode):
+    params = model.init_params("mlp", seed=1)
+    x = jnp.zeros([2, 28, 28, 1], jnp.float32)
+    y = model.forward_posit(params, "mlp", x, mode)
+    assert y.shape == (2, 10)
+    assert np.all(np.isfinite(np.array(y)))
+
+
+def test_posit_close_to_f32_forward():
+    """Fig. 4 premise in miniature: P16/P32 logits track f32 logits."""
+    params = model.init_params("mlp", seed=2)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 1, size=[8, 28, 28, 1])
+                    .astype(np.float32))
+    y32 = np.array(model.forward_posit(params, "mlp", x, "f32"))
+    for mode, tol in [("p32", 1e-5), ("p16", 5e-2)]:
+        ym = np.array(model.forward_posit(params, "mlp", x, mode))
+        rel = np.max(np.abs(ym - y32) / (np.abs(y32) + 1.0))
+        assert rel < tol, (mode, rel)
+
+
+def test_spec_json_round_trip():
+    import json
+    for name in model.ZOO:
+        spec = json.loads(model.spec_json(name))
+        assert spec["name"] == name
+        assert spec["layers"] == model.ZOO[name]["layers"]
+        assert spec["dataset"] == model.MODEL_DATASET[name]

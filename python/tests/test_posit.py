@@ -1,0 +1,126 @@
+"""Posit encode/decode/quantize unit + property tests (jnp golden twin)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import posit as P
+
+FORMATS = [(8, 0), (16, 1), (32, 2)]
+
+
+def decode_table(n, es):
+    words = jnp.arange(1 << n, dtype=jnp.int64)
+    return np.array(P.posit_decode(words, n, es))
+
+
+@pytest.mark.parametrize("n,es", [(8, 0), (16, 1)])
+def test_decode_monotone_and_symmetric(n, es):
+    vals = decode_table(n, es)
+    assert vals[0] == 0.0
+    assert np.isnan(vals[1 << (n - 1)])
+    pos = vals[1:(1 << (n - 1))]
+    assert np.all(np.diff(pos) > 0), "positive ramp must be strictly monotone"
+    neg = vals[(1 << (n - 1)) + 1:]
+    np.testing.assert_array_equal(neg, -pos[::-1])
+
+
+@pytest.mark.parametrize("n,es", [(8, 0), (16, 1)])
+def test_exact_round_trip_exhaustive(n, es):
+    vals = decode_table(n, es)
+    enc = np.array(P.posit_encode(jnp.asarray(vals), n, es))
+    words = np.arange(1 << n)
+    ok = (enc == words) | np.isnan(vals)
+    assert ok.all()
+
+
+@pytest.mark.parametrize("n,es", FORMATS)
+def test_extremes(n, es):
+    useed_pow = (n - 2) * (1 << es)
+    minpos = np.exp2(-useed_pow)
+    maxpos = np.exp2(useed_pow)
+    assert float(P.posit_decode(jnp.int64(1), n, es)) == minpos
+    assert float(P.posit_decode(jnp.int64((1 << (n - 1)) - 1), n, es)) \
+        == maxpos
+    # no underflow to zero, no overflow to NaR
+    assert float(P.posit_quantize(jnp.float64(minpos / 1000), n, es)) \
+        == minpos
+    assert float(P.posit_quantize(jnp.float64(maxpos * 1000), n, es)) \
+        == maxpos
+
+
+@pytest.mark.parametrize("n,es", FORMATS)
+def test_specials(n, es):
+    assert int(P.posit_encode(jnp.float64(0.0), n, es)) == 0
+    nar = 1 << (n - 1)
+    assert int(P.posit_encode(jnp.float64(np.nan), n, es)) == nar
+    assert int(P.posit_encode(jnp.float64(np.inf), n, es)) == nar
+    assert int(P.posit_encode(jnp.float64(-np.inf), n, es)) == nar
+    assert np.isnan(float(P.posit_decode(jnp.int64(nar), n, es)))
+
+
+@pytest.mark.parametrize("n,es", FORMATS)
+def test_exact_small_integers(n, es):
+    """Small integers are exactly representable in every SPADE format."""
+    top = {8: 8, 16: 64, 32: 1024}[n]
+    xs = np.arange(-top, top + 1, dtype=np.float64)
+    q = np.array(P.posit_quantize(jnp.asarray(xs), n, es))
+    np.testing.assert_array_equal(q, xs)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.floats(min_value=-1e20, max_value=1e20,
+                 allow_nan=False, allow_infinity=False),
+       st.sampled_from(FORMATS))
+def test_quantize_idempotent(x, fmt):
+    n, es = fmt
+    q1 = float(P.posit_quantize(jnp.float64(x), n, es))
+    q2 = float(P.posit_quantize(jnp.float64(q1), n, es))
+    assert q1 == q2
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.floats(min_value=1e-18, max_value=1e18), st.sampled_from(FORMATS))
+def test_quantize_sign_symmetry(x, fmt):
+    n, es = fmt
+    qp = float(P.posit_quantize(jnp.float64(x), n, es))
+    qn = float(P.posit_quantize(jnp.float64(-x), n, es))
+    assert qp == -qn
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=1e-15, max_value=1e15), st.sampled_from(FORMATS))
+def test_quantize_relative_error_bound(x, fmt):
+    """Within the regime-flat region the error is bounded by the format's
+    worst-case relative ULP; the tapered extremes are clamped instead."""
+    from hypothesis import assume
+    n, es = fmt
+    useed_pow = (n - 2) * (1 << es)
+    assume(np.exp2(-useed_pow) <= x <= np.exp2(useed_pow))
+    q = float(P.posit_quantize(jnp.float64(x), n, es))
+    scale = np.floor(np.log2(x))
+    k = int(scale) >> es
+    rlen = (k + 2) if k >= 0 else (1 - k)
+    fbits = max(n - 1 - rlen - es, 0)
+    assert abs(q - x) <= np.exp2(scale - fbits) * (1 + 1e-12)
+
+
+def test_rne_ties_to_even_word():
+    # P(8,0): between 1.0 (0x40) and 1.015625? No — neighbors of 1.0 are
+    # 1 +- 1/64. Take the exact midpoint between consecutive posits and
+    # check the even word wins.
+    vals = decode_table(8, 0)
+    pos = vals[1:128]
+    for i in [20, 40, 63, 64, 90, 100]:
+        lo, hi = pos[i], pos[i + 1]
+        mid = (lo + hi) / 2
+        q = float(P.posit_quantize(jnp.float64(mid), 8, 0))
+        w_lo = i + 1
+        expected = lo if w_lo % 2 == 0 else hi
+        assert q == expected, (mid, q, expected)

@@ -1,0 +1,31 @@
+//! Shared helpers for the bench harnesses (custom harness = false:
+//! criterion is unavailable offline, and these benches regenerate paper
+//! tables — wall-clock timing helpers included where relevant).
+
+use std::time::Instant;
+
+/// Print a section banner.
+pub fn banner(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+/// Measure median wall time of `f` over `iters` runs (after 1 warmup).
+pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f();
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Relative delta in percent.
+pub fn pct(ours: f64, theirs: f64) -> f64 {
+    (1.0 - ours / theirs) * 100.0
+}

@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks for the §Perf optimization loop: posit
+//! encode/decode, quire MAC, engine MAC step, functional GEMM, PJRT
+//! dispatch. Each prints ops/s so before/after deltas are one diff
+//! away. (criterion is unavailable offline; median-of-N timing.)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use spade::engine::{MacEngine, Mode};
+use spade::posit::{from_f64, to_f64, Quire, P16_FMT, P32_FMT, P8_FMT};
+use spade::systolic::{ArrayConfig, SystolicGemm};
+use spade::util::SplitMix64;
+
+fn main() {
+    common::banner("posit core hot paths (single thread)");
+    let mut rng = SplitMix64::new(9001);
+    let xs: Vec<f64> = (0..65536).map(|_| rng.wide(-12, 12)).collect();
+
+    for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                        ("p32", P32_FMT)] {
+        let mut sink = 0u64;
+        let t = common::time_median(5, || {
+            for &x in &xs {
+                sink = sink.wrapping_add(from_f64(x, fmt));
+            }
+        });
+        println!("encode {name}: {:>7.1} M/s", xs.len() as f64 / t / 1e6);
+        let words: Vec<u64> =
+            xs.iter().map(|&x| from_f64(x, fmt)).collect();
+        let mut fsink = 0.0f64;
+        let t = common::time_median(5, || {
+            for &w in &words {
+                fsink += to_f64(w, fmt);
+            }
+        });
+        println!("decode {name}: {:>7.1} M/s ({:e})",
+                 words.len() as f64 / t / 1e6, fsink);
+    }
+
+    common::banner("quire MAC (decode+multiply+wide add)");
+    for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                        ("p32", P32_FMT)] {
+        let words: Vec<u64> =
+            xs.iter().map(|&x| from_f64(x, fmt)).collect();
+        let mut q = Quire::new(fmt);
+        let t = common::time_median(5, || {
+            q.clear();
+            for w in words.chunks_exact(2) {
+                q.mac(w[0], w[1]);
+            }
+        });
+        println!("quire.mac {name}: {:>7.1} M MAC/s",
+                 (words.len() / 2) as f64 / t / 1e6);
+    }
+
+    common::banner("bit-accurate engine MAC issue");
+    for mode in Mode::ALL {
+        let mut eng = MacEngine::new(mode);
+        let iters = 100_000u64;
+        let t = common::time_median(5, || {
+            for i in 0..iters {
+                eng.mac(0x3F1A_4C2B ^ (i as u32), 0x4D2E_7F11
+                        ^ ((i as u32) << 7), true);
+            }
+        });
+        println!("{mode:?}: {:>7.2} M issues/s  ({:.1} M lane-MACs/s)",
+                 iters as f64 / t / 1e6,
+                 (iters * mode.lanes() as u64) as f64 / t / 1e6);
+    }
+
+    common::banner("functional posit GEMM (fast path, 256x256x256)");
+    let n = 256usize;
+    let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    for mode in Mode::ALL {
+        let cfg = ArrayConfig { rows: 8, cols: 8, mode };
+        let g = SystolicGemm::new(cfg);
+        let t = common::time_median(3, || {
+            let _ = g.run(&a, &b, n, n, n);
+        });
+        let flops = 2.0 * (n * n * n) as f64;
+        println!("{mode:?}: {:>6.3} s -> {:>7.2} GFLOP/s-equivalent", t,
+                 flops / t / 1e9);
+    }
+
+    common::banner("PJRT artifact dispatch (mlp_p16_b32)");
+    if spade::artifacts_dir().join("manifest.json").is_file() {
+        let rt = spade::runtime::Runtime::new().unwrap();
+        let weights =
+            spade::nn::weights::load_model_weights("mlp").unwrap();
+        let exe = rt.load("mlp_p16_b32", &weights).unwrap();
+        let input: Vec<f32> =
+            (0..32 * 784).map(|_| rng.f32()).collect();
+        let t = common::time_median(5, || {
+            let _ = exe.run(&input).unwrap();
+        });
+        println!("batch-32 forward: {:.2} ms -> {:.0} img/s", t * 1e3,
+                 32.0 / t);
+        let exe1 = rt.load("mlp_p16_b1", &weights).unwrap();
+        let one: Vec<f32> = input[..784].to_vec();
+        let t = common::time_median(5, || {
+            let _ = exe1.run(&one).unwrap();
+        });
+        println!("batch-1 forward:  {:.3} ms", t * 1e3);
+        let _ = BTreeMap::<String, ()>::new();
+    } else {
+        println!("(skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,56 @@
+//! Regenerates **Table II** (ASIC 28 nm comparison) and the §III node
+//! scaling study (28/65/180 nm).
+//!
+//! Run: `cargo bench --bench table2_asic`
+
+mod common;
+
+use spade::cost::{baselines, AsicReport, DesignKind, TechNode};
+
+fn main() {
+    common::banner("Table II — ASIC resources, TSMC 28 nm class");
+    println!("{:<18} {:>10} {:>11} {:>11} {:>11}", "Design",
+             "Supply(V)", "Freq(GHz)", "Area(mm2)", "Power(mW)");
+    println!("{:-<66}", "");
+    let r = AsicReport::for_design(DesignKind::SimdUnified, TechNode::N28);
+    println!("{:<18} {:>10.2} {:>11.2} {:>11.3} {:>11.2}", "This Work",
+             TechNode::N28.vdd(), r.freq_ghz, r.area_mm2(), r.power_mw);
+    for b in baselines::ASIC_BASELINES {
+        println!("{:<18} {:>10.2} {:>11.2} {:>11.3} {:>11.2}  *",
+                 b.cite, b.supply_v, b.freq_ghz, b.area_mm2, b.power_mw);
+    }
+    println!("(* = paper-reported)");
+
+    let (pv, pf, pa, pp) = baselines::paper_reported::TABLE2;
+    println!("\npaper-vs-model: freq {:+.1}%  area {:+.1}%  power {:+.1}% \
+              (paper: {pv} V, {pf} GHz, {pa} mm2, {pp} mW)",
+             (r.freq_ghz / pf - 1.0) * 100.0,
+             (r.area_mm2() / pa - 1.0) * 100.0,
+             (r.power_mw / pp - 1.0) * 100.0);
+
+    common::banner("Technology scaling (§III): 28 / 65 / 180 nm");
+    println!("{:<8} {:>12} {:>11} {:>11} {:>14}", "Node", "Area(um2)",
+             "Freq(GHz)", "Power(mW)", "Energy(pJ/op)");
+    for node in TechNode::ALL {
+        let r = AsicReport::for_design(DesignKind::SimdUnified, node);
+        println!("{:<8} {:>12.0} {:>11.2} {:>11.2} {:>14.2}",
+                 format!("{}nm", node.nm()), r.area_um2, r.freq_ghz,
+                 r.power_mw, r.power_mw / r.freq_ghz);
+    }
+    let a28 = AsicReport::for_design(DesignKind::SimdUnified,
+                                     TechNode::N28).area_um2;
+    let a65 = AsicReport::for_design(DesignKind::SimdUnified,
+                                     TechNode::N65).area_um2;
+    let a180 = AsicReport::for_design(DesignKind::SimdUnified,
+                                      TechNode::N180).area_um2;
+    println!("\narea scaling 28->65: {:.2}x (paper's standalone-MAC \
+              scaling: 4.53x), 65->180: {:.2}x (paper: 7.88x)",
+             a65 / a28, a180 / a65);
+
+    common::banner("Per-design ASIC summary at 28 nm");
+    for kind in DesignKind::ALL {
+        let r = AsicReport::for_design(kind, TechNode::N28);
+        println!("{:<22} {:>9.0} um2 {:>7.2} GHz {:>8.2} mW", kind.name(),
+                 r.area_um2, r.freq_ghz, r.power_mw);
+    }
+}

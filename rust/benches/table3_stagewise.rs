@@ -1,0 +1,64 @@
+//! Regenerates **Table III**: stage-wise area/power split of the SPADE
+//! pipeline vs prior works (28 nm).
+//!
+//! Run: `cargo bench --bench table3_stagewise`
+
+mod common;
+
+use spade::cost::{baselines, AsicReport, DesignKind, PipelineStage,
+                  TechNode};
+
+fn main() {
+    common::banner("Table III — stage-wise resources (28 nm)");
+    let r = AsicReport::for_design(DesignKind::SimdUnified, TechNode::N28);
+
+    println!("{:<30} {:>12} {:>11}", "Stage (This Work, model)",
+             "Area(um2)", "Power(mW)");
+    println!("{:-<56}", "");
+    let mut ta = 0.0;
+    let mut tp = 0.0;
+    for s in PipelineStage::ALL {
+        let (a, p) = r.stages[&s];
+        ta += a;
+        tp += p;
+        println!("{:<30} {:>12.0} {:>11.2}", s.name(), a, p);
+    }
+    println!("{:<30} {:>12.0} {:>11.2}", "Total", ta, tp);
+
+    common::banner("Paper-reported 'This Work' rows (deltas)");
+    for ((name, pa, pp), s) in baselines::paper_reported::TABLE3
+        .iter()
+        .zip(PipelineStage::ALL)
+    {
+        let (a, p) = r.stages[&s];
+        println!("{:<30} area {:+6.1}%  power {:+6.1}%   (paper: {pa} \
+                  um2, {pp} mW)",
+                 name, (a / pa - 1.0) * 100.0, (p / pp - 1.0) * 100.0);
+    }
+    let (pta, ptp) = baselines::paper_reported::TABLE3_TOTAL;
+    println!("{:<30} area {:+6.1}%  power {:+6.1}%", "Total",
+             (ta / pta - 1.0) * 100.0, (tp / ptp - 1.0) * 100.0);
+
+    common::banner("Prior-work stage splits (paper-reported)");
+    for b in baselines::STAGE_BASELINES {
+        print!("{:<18}", b.cite);
+        let labels = ["input", "mult+exp", "accum", "output"];
+        for (i, l) in labels.iter().enumerate() {
+            match (b.area_um2[i], b.power_mw[i]) {
+                (Some(a), Some(p)) => print!(" {l}: {a:.0}um2/{p}mW"),
+                _ => print!(" {l}: (merged)"),
+            }
+        }
+        println!("\n{:<18} total: {:.0} um2 / {:.1} mW", "",
+                 b.total_area_um2, b.total_power_mw);
+    }
+
+    common::banner("Shape check vs prior works");
+    println!("This Work total {ta:.0} um2 @ {tp:.2} mW — lowest power \
+              among designs with comparable area:");
+    for b in baselines::STAGE_BASELINES {
+        let ratio = b.total_power_mw / tp;
+        println!("  vs {:<16} {:.1}x our power at {:.2}x our area",
+                 b.cite, ratio, b.total_area_um2 / ta);
+    }
+}

@@ -1,0 +1,70 @@
+//! Regenerates the paper's headline efficiency claim (§III/abstract):
+//! "up to 4x higher effective MACs/W in Posit-8 mode compared to
+//! standalone Posit-32 designs", plus effective-throughput scaling and
+//! a GEMM workload sweep on the systolic model.
+//!
+//! Run: `cargo bench --bench throughput_per_watt`
+
+mod common;
+
+use spade::cost::{AsicReport, DesignKind, TechNode};
+use spade::engine::Mode;
+use spade::systolic::{ArrayConfig, SystolicGemm};
+
+fn main() {
+    common::banner("Effective MACs/W — SIMD modes vs standalone P32 \
+                    (28 nm model)");
+    let simd = AsicReport::for_design(DesignKind::SimdUnified,
+                                      TechNode::N28);
+    let p32 = AsicReport::for_design(DesignKind::StandaloneP32,
+                                     TechNode::N28);
+    let base = p32.gmacs_per_watt(1);
+    println!("{:<26} {:>10} {:>12} {:>12}", "Configuration",
+             "MACs/cyc", "GMACs/W", "vs P32 MAC");
+    println!("{:-<64}", "");
+    println!("{:<26} {:>10} {:>12.1} {:>11.2}x",
+             "standalone Posit-32", 1, base, 1.0);
+    for (mode, lanes) in [(Mode::P32x1, 1u32), (Mode::P16x2, 2),
+                          (Mode::P8x4, 4)] {
+        let g = simd.gmacs_per_watt(lanes);
+        println!("{:<26} {:>10} {:>12.1} {:>11.2}x",
+                 format!("SIMD in {mode:?}"), lanes, g, g / base);
+    }
+    let claim = simd.gmacs_per_watt(4) / base;
+    println!("\nheadline: {claim:.2}x MACs/W in P8 mode (paper: up to \
+              4x)");
+
+    common::banner("End-to-end GEMM sweep (8x8 PE array, dataflow \
+                    model)");
+    println!("{:<10} {:>8} {:>12} {:>12} {:>14} {:>12}", "mode", "K",
+             "cycles", "MACs/cyc", "energy(nJ)", "GMACs/J");
+    for mode in [Mode::P32x1, Mode::P16x2, Mode::P8x4] {
+        for k in [64usize, 256, 1024] {
+            let cfg = ArrayConfig { rows: 8, cols: 8, mode };
+            let g = SystolicGemm::new(cfg);
+            let (m, n) = (64, 256);
+            let s = g.analytic_stats(m, k, n);
+            let useful_macs = (m * n * k) as f64;
+            println!("{:<10} {:>8} {:>12} {:>12.1} {:>14.1} {:>12.2}",
+                     format!("{mode:?}"), k, s.cycles,
+                     s.macs_per_cycle(),
+                     s.total_energy_pj() / 1e3,
+                     useful_macs / s.total_energy_pj() / 1e-3);
+        }
+    }
+
+    common::banner("Wall-clock of the bit-accurate engine (simulator \
+                    perf, see EXPERIMENTS.md §Perf)");
+    for mode in Mode::ALL {
+        let mut eng = spade::engine::MacEngine::new(mode);
+        let iters = 200_000u64;
+        let t = common::time_median(3, || {
+            for i in 0..iters {
+                eng.mac(0x3F1A_4C2B ^ i as u32, 0x4D2E_7F11, true);
+            }
+        });
+        let macs = iters * mode.lanes() as u64;
+        println!("{mode:?}: {:.1} M engine-MACs/s single thread",
+                 macs as f64 / t / 1e6);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dynamic batcher: group requests up to a target size or a deadline,
+//! whichever comes first (the vLLM-style continuous-batching front end,
+//! scaled to this engine).
+
+use std::time::Duration;
+
+/// Batching parameters.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Preferred batch size (matches the b32 artifacts).
+    pub target: usize,
+    /// Max time the first request in a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { target: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    /// The grouped items, arrival order.
+    pub items: Vec<T>,
+}
+
+/// Accumulates items into batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    pending: Vec<T>,
+}
+
+impl<T> Batcher<T> {
+    /// New batcher.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, pending: Vec::new() }
+    }
+
+    /// Deadline budget for the current batch.
+    pub fn max_wait(&self) -> Duration {
+        self.cfg.max_wait
+    }
+
+    /// Add an item.
+    pub fn push(&mut self, item: T) {
+        self.pending.push(item);
+    }
+
+    /// True once the primary batch is full.
+    pub fn primary_full(&self) -> bool {
+        self.pending.len() >= self.cfg.target
+    }
+
+    /// Pending count.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True if nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain everything into target-sized batches (last may be short).
+    pub fn flush(&mut self) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        while !self.pending.is_empty() {
+            let take = self.pending.len().min(self.cfg.target);
+            let items: Vec<T> = self.pending.drain(..take).collect();
+            out.push(Batch { items });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_at_target() {
+        let mut b = Batcher::new(BatcherConfig {
+            target: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        for i in 0..10 {
+            b.push(i);
+        }
+        assert!(b.primary_full());
+        let batches = b.flush();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].items, vec![0, 1, 2, 3]);
+        assert_eq!(batches[2].items, vec![8, 9]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_empty_is_empty() {
+        let mut b: Batcher<u32> = Batcher::new(BatcherConfig::default());
+        assert!(b.flush().is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! Serving metrics: latency percentiles per mode, batch-size histogram,
+//! request counts. Feeds the serve_demo example and the throughput
+//! bench.
+
+use std::collections::BTreeMap;
+
+use crate::engine::Mode;
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Total requests served.
+    pub total_requests: u64,
+    /// Latency samples (us) per mode.
+    pub latencies_us: BTreeMap<&'static str, Vec<u64>>,
+    /// Batch sizes seen.
+    pub batch_sizes: Vec<usize>,
+}
+
+fn mode_key(mode: Mode) -> &'static str {
+    match mode {
+        Mode::P8x4 => "p8",
+        Mode::P16x2 => "p16",
+        Mode::P32x1 => "p32",
+    }
+}
+
+impl Metrics {
+    /// Record one served request.
+    pub fn record(&mut self, mode: Mode, latency_us: u64,
+                  batch_size: usize) {
+        self.total_requests += 1;
+        self.latencies_us.entry(mode_key(mode)).or_default()
+            .push(latency_us);
+        self.batch_sizes.push(batch_size);
+    }
+
+    /// Latency percentile (0..100) for a mode key, if sampled.
+    pub fn percentile(&self, mode: &str, pct: f64) -> Option<u64> {
+        let xs = self.latencies_us.get(mode)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let idx = ((pct / 100.0) * (sorted.len() - 1) as f64).round()
+            as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64
+            / self.batch_sizes.len() as f64
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let mut s = format!("requests: {}, mean batch {:.1}\n",
+                            self.total_requests, self.mean_batch());
+        for (mode, xs) in &self.latencies_us {
+            let p50 = self.percentile(mode, 50.0).unwrap_or(0);
+            let p99 = self.percentile(mode, 99.0).unwrap_or(0);
+            s += &format!("  {mode:<4} n={:<6} p50={p50}us p99={p99}us\n",
+                          xs.len());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(Mode::P8x4, i * 10, 4);
+        }
+        assert_eq!(m.total_requests, 100);
+        // nearest-rank on 100 samples: round(0.5 * 99) = index 50 -> 510
+        assert_eq!(m.percentile("p8", 50.0), Some(510));
+        assert_eq!(m.percentile("p8", 99.0), Some(990));
+        assert_eq!(m.percentile("p16", 50.0), None);
+        assert_eq!(m.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn summary_contains_modes() {
+        let mut m = Metrics::default();
+        m.record(Mode::P16x2, 42, 1);
+        let s = m.summary();
+        assert!(s.contains("p16"));
+        assert!(s.contains("requests: 1"));
+    }
+}

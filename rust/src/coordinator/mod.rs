@@ -1,0 +1,363 @@
+//! Precision-adaptive serving coordinator (L3).
+//!
+//! The request path is pure Rust: requests enter a queue, the
+//! [`batcher`] groups them (size or deadline), the [`router`] picks a
+//! SPADE MODE per batch (client pin > policy), and the worker executes
+//! on either the PJRT artifacts ([`crate::runtime`]) or the systolic
+//! functional backend, recording [`metrics`] (latency percentiles,
+//! MACs, energy).
+//!
+//! Threading: one worker thread owns the executables (PJRT clients are
+//! not Sync-shared here); callers submit over an mpsc channel and wait
+//! on a oneshot-style bounded channel. No tokio — the workload is
+//! compute-bound batch inference, for which OS threads + channels are
+//! the right tool (and the offline build has no async runtime crates).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::{Router, RoutePolicy};
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::engine::Mode;
+use crate::nn::Tensor;
+use crate::runtime::{Executable, Runtime};
+
+/// An inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Caller id (metrics key).
+    pub id: u64,
+    /// Flattened input (model input shape, single example).
+    pub input: Vec<f32>,
+    /// Client-pinned precision, if any.
+    pub mode: Option<Mode>,
+}
+
+/// The reply.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    /// Request id.
+    pub id: u64,
+    /// Logits.
+    pub logits: Vec<f32>,
+    /// Mode the batch ran in.
+    pub mode: Mode,
+    /// End-to-end latency, microseconds.
+    pub latency_us: u64,
+}
+
+enum Job {
+    Infer(InferenceRequest, Instant, mpsc::Sender<InferenceResponse>),
+    Shutdown,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Model name (artifact stem, e.g. "mlp").
+    pub model: String,
+    /// Batching parameters.
+    pub batcher: BatcherConfig,
+    /// Routing policy for unpinned requests.
+    pub policy: RoutePolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            model: "mlp".into(),
+            batcher: BatcherConfig::default(),
+            policy: RoutePolicy::EnergyFirst,
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Job>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    /// Shared metrics.
+    pub metrics: Arc<Mutex<Metrics>>,
+    input_len: usize,
+}
+
+impl Coordinator {
+    /// Start the worker: it compiles the model's per-mode PJRT
+    /// executables once (PJRT handles are not `Send`, so the whole
+    /// runtime lives on the worker thread), then serves until
+    /// [`Coordinator::shutdown`].
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_w = metrics.clone();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (setup_tx, setup_rx) = mpsc::channel::<Result<usize>>();
+        let batcher_cfg = cfg.batcher.clone();
+        let policy = cfg.policy;
+        let model = cfg.model.clone();
+
+        let worker = std::thread::spawn(move || {
+            // Build the PJRT runtime on this thread.
+            let setup = (|| -> Result<(BTreeMap<(Mode, usize),
+                                                Executable>, usize)> {
+                let rt = Runtime::new()?;
+                let weights =
+                    crate::nn::weights::load_model_weights(&model)?;
+                let mut exes = BTreeMap::new();
+                let mut input_len = 0usize;
+                for (mode, tag) in [(Mode::P8x4, "p8"),
+                                    (Mode::P16x2, "p16"),
+                                    (Mode::P32x1, "p32")] {
+                    for batch in [1usize, 32] {
+                        let name = format!("{model}_{tag}_b{batch}");
+                        if rt.artifacts().contains(&name.as_str()) {
+                            let exe = rt.load(&name, &weights)?;
+                            input_len = exe.input_shape().iter().skip(1)
+                                .product();
+                            exes.insert((mode, batch), exe);
+                        }
+                    }
+                }
+                anyhow::ensure!(!exes.is_empty(),
+                                "no artifacts for model {model}");
+                Ok((exes, input_len))
+            })();
+            match setup {
+                Ok((exes, input_len)) => {
+                    let _ = setup_tx.send(Ok(input_len));
+                    worker_loop(rx, exes, batcher_cfg, policy, metrics_w);
+                }
+                Err(e) => {
+                    let _ = setup_tx.send(Err(e));
+                }
+            }
+        });
+
+        let input_len = setup_rx
+            .recv()
+            .context("coordinator worker died during setup")??;
+        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
+    }
+
+    /// Expected flattened input length per example.
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: InferenceRequest)
+                  -> mpsc::Receiver<InferenceResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Infer(req, Instant::now(), tx))
+            .expect("coordinator worker gone");
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, req: InferenceRequest)
+                 -> Result<InferenceResponse> {
+        self.submit(req).recv().context("worker dropped request")
+    }
+
+    /// Stop the worker and join it.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+type Pending = (InferenceRequest, Instant, mpsc::Sender<InferenceResponse>);
+
+fn worker_loop(rx: mpsc::Receiver<Job>,
+               exes: BTreeMap<(Mode, usize), Executable>,
+               bcfg: BatcherConfig, policy: RoutePolicy,
+               metrics: Arc<Mutex<Metrics>>) {
+    let router = Router::new(policy);
+    let mut batcher: Batcher<Pending> = Batcher::new(bcfg);
+
+    loop {
+        // Pull at least one job (blocking), then drain greedily to fill
+        // the batch window.
+        let first = match rx.recv() {
+            Ok(Job::Infer(r, t, tx)) => Some((r, t, tx)),
+            Ok(Job::Shutdown) | Err(_) => None,
+        };
+        let Some(first) = first else {
+            // flush leftovers before exiting
+            for batch in batcher.flush() {
+                run_batch(batch, &exes, &router, &metrics);
+            }
+            return;
+        };
+        batcher.push(first);
+        let deadline = Instant::now() + batcher.max_wait();
+        while !batcher.primary_full() {
+            let timeout = deadline.saturating_duration_since(
+                Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Job::Infer(r, t, tx)) => batcher.push((r, t, tx)),
+                Ok(Job::Shutdown) => {
+                    for batch in batcher.flush() {
+                        run_batch(batch, &exes, &router, &metrics);
+                    }
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for batch in batcher.flush() {
+            run_batch(batch, &exes, &router, &metrics);
+        }
+    }
+}
+
+fn run_batch(batch: Batch<Pending>,
+             exes: &BTreeMap<(Mode, usize), Executable>, router: &Router,
+             metrics: &Arc<Mutex<Metrics>>) {
+    let items = batch.items;
+    if items.is_empty() {
+        return;
+    }
+    let pinned: Vec<Option<Mode>> =
+        items.iter().map(|(r, _, _)| r.mode).collect();
+    let mode = router.route(&pinned);
+
+    // Choose the best-fitting executable: batch-32 when full, else b1
+    // loop (padding a partial batch wastes identical compute — we report
+    // both paths in the metrics).
+    let n = items.len();
+    let exe32 = exes.get(&(mode, 32));
+    let exe1 = exes.get(&(mode, 1));
+
+    let run_one = |input: &[f32]| -> Vec<f32> {
+        if let Some(e) = exe1 {
+            e.run(input).expect("pjrt execute failed")
+        } else {
+            // pad through the batch executable
+            let e = exe32.expect("no executable for mode");
+            let per: usize = e.input_shape().iter().skip(1).product();
+            let mut buf = vec![0.0f32; 32 * per];
+            buf[..per].copy_from_slice(input);
+            let out = e.run(&buf).expect("pjrt execute failed");
+            let oc = e.output_shape()[1];
+            out[..oc].to_vec()
+        }
+    };
+
+    let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    if n == 32 && exe32.is_some() {
+        let e = exe32.unwrap();
+        let per: usize = e.input_shape().iter().skip(1).product();
+        let mut buf = vec![0.0f32; 32 * per];
+        for (i, (r, _, _)) in items.iter().enumerate() {
+            buf[i * per..(i + 1) * per].copy_from_slice(&r.input);
+        }
+        let flat = e.run(&buf).expect("pjrt execute failed");
+        let oc = e.output_shape()[1];
+        for i in 0..n {
+            outputs.push(flat[i * oc..(i + 1) * oc].to_vec());
+        }
+    } else {
+        for (r, _, _) in &items {
+            outputs.push(run_one(&r.input));
+        }
+    }
+
+    let mut m = metrics.lock().unwrap();
+    for ((r, t0, tx), logits) in items.into_iter().zip(outputs) {
+        let latency_us = t0.elapsed().as_micros() as u64;
+        m.record(mode, latency_us, n);
+        let _ = tx.send(InferenceResponse { id: r.id, logits, mode,
+                                            latency_us });
+    }
+}
+
+/// Helper for tests/examples: flatten an NHWC tensor batch into
+/// per-example request payloads.
+pub fn tensor_to_requests(x: &Tensor, start_id: u64)
+                          -> Vec<InferenceRequest> {
+    let n = x.shape[0];
+    let per = x.len() / n;
+    (0..n)
+        .map(|i| InferenceRequest {
+            id: start_id + i as u64,
+            input: x.data[i * per..(i + 1) * per].to_vec(),
+            mode: None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let coord = Coordinator::start(CoordinatorConfig::default())
+            .unwrap();
+        let len = coord.input_len();
+        assert_eq!(len, 28 * 28);
+        let mut rng = crate::util::SplitMix64::new(3);
+        for id in 0..8 {
+            let input: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+            let resp = coord
+                .infer(InferenceRequest { id, input, mode: None })
+                .unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.logits.len(), 10);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.total_requests, 8);
+    }
+
+    #[test]
+    fn pinned_mode_is_respected() {
+        if !have_artifacts() {
+            return;
+        }
+        let coord = Coordinator::start(CoordinatorConfig::default())
+            .unwrap();
+        let len = coord.input_len();
+        let resp = coord
+            .infer(InferenceRequest {
+                id: 1,
+                input: vec![0.5; len],
+                mode: Some(Mode::P32x1),
+            })
+            .unwrap();
+        assert_eq!(resp.mode, Mode::P32x1);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,112 @@
+//! Precision router: decide which SPADE MODE a batch runs in.
+//!
+//! Client-pinned modes win (majority vote if mixed); unpinned traffic
+//! follows the policy — the accuracy/energy trade-off knob the paper's
+//! multi-precision hardware exists to serve.
+
+use crate::engine::Mode;
+
+/// Routing policy for unpinned requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cheapest mode (P8x4): max throughput/W.
+    EnergyFirst,
+    /// Most accurate mode (P32x1).
+    AccuracyFirst,
+    /// Middle ground (P16x2).
+    Balanced,
+}
+
+impl RoutePolicy {
+    /// The mode this policy defaults to.
+    pub fn default_mode(self) -> Mode {
+        match self {
+            RoutePolicy::EnergyFirst => Mode::P8x4,
+            RoutePolicy::AccuracyFirst => Mode::P32x1,
+            RoutePolicy::Balanced => Mode::P16x2,
+        }
+    }
+}
+
+/// The router.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+}
+
+impl Router {
+    /// Router with a policy.
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Pick the batch mode. Pinned requests vote; the highest-precision
+    /// pinned mode wins (never degrade an explicit request); otherwise
+    /// the policy default applies.
+    pub fn route(&self, pinned: &[Option<Mode>]) -> Mode {
+        let mut best: Option<Mode> = None;
+        for p in pinned.iter().flatten() {
+            best = Some(match (best, *p) {
+                (None, m) => m,
+                (Some(a), b) => wider(a, b),
+            });
+        }
+        best.unwrap_or_else(|| self.policy.default_mode())
+    }
+}
+
+fn wider(a: Mode, b: Mode) -> Mode {
+    if a.lane_bits() >= b.lane_bits() { a } else { b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prop;
+
+    #[test]
+    fn policy_defaults() {
+        let r = Router::new(RoutePolicy::EnergyFirst);
+        assert_eq!(r.route(&[None, None]), Mode::P8x4);
+        let r = Router::new(RoutePolicy::AccuracyFirst);
+        assert_eq!(r.route(&[]), Mode::P32x1);
+    }
+
+    #[test]
+    fn pinned_wins_and_never_degrades() {
+        let r = Router::new(RoutePolicy::EnergyFirst);
+        assert_eq!(r.route(&[None, Some(Mode::P16x2), None]),
+                   Mode::P16x2);
+        assert_eq!(r.route(&[Some(Mode::P8x4), Some(Mode::P32x1)]),
+                   Mode::P32x1);
+    }
+
+    #[test]
+    fn route_is_max_of_pins_property() {
+        // Invariant: the routed mode is >= every pinned mode's width.
+        Prop::new("router max", 512).run(|rng| {
+            let modes = [Mode::P8x4, Mode::P16x2, Mode::P32x1];
+            let pins: Vec<Option<Mode>> = (0..rng.below(6) + 1)
+                .map(|_| {
+                    if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(modes[rng.below(3) as usize])
+                    }
+                })
+                .collect();
+            for policy in [RoutePolicy::EnergyFirst,
+                           RoutePolicy::Balanced,
+                           RoutePolicy::AccuracyFirst] {
+                let routed = Router::new(policy).route(&pins);
+                for p in pins.iter().flatten() {
+                    if routed.lane_bits() < p.lane_bits() {
+                        return Err(format!(
+                            "routed {routed:?} below pin {p:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

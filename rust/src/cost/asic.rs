@@ -1,0 +1,138 @@
+//! ASIC synthesis model across TSMC nodes (Tables II and III).
+//!
+//! GE -> um^2 via per-node cell area; fmax from logic depth x per-level
+//! delay; power from per-GE switching energy x activity x frequency +
+//! leakage. Coefficients calibrated once against the paper's 28 nm
+//! totals (1.38 GHz, 0.025 mm^2, 6.1 mW for the SIMD design); node
+//! scaling follows the classical area ~ node^2, delay ~ node,
+//! power ~ node * V^2 rules the paper's own 28/65/180 numbers track.
+
+use std::collections::BTreeMap;
+
+use super::gates::{self, DesignKind, PipelineStage};
+
+/// TSMC technology node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TechNode {
+    /// 28 nm HPC, 0.9 V.
+    N28,
+    /// 65 nm GP, 1.0 V.
+    N65,
+    /// 180 nm, 1.8 V.
+    N180,
+}
+
+impl TechNode {
+    /// Feature size in nm.
+    pub fn nm(self) -> f64 {
+        match self {
+            TechNode::N28 => 28.0,
+            TechNode::N65 => 65.0,
+            TechNode::N180 => 180.0,
+        }
+    }
+
+    /// Nominal supply voltage.
+    pub fn vdd(self) -> f64 {
+        match self {
+            TechNode::N28 => 0.9,
+            TechNode::N65 => 1.0,
+            TechNode::N180 => 1.8,
+        }
+    }
+
+    /// All nodes, 28 nm first.
+    pub const ALL: [TechNode; 3] = [TechNode::N28, TechNode::N65,
+                                    TechNode::N180];
+
+    fn area_scale(self) -> f64 {
+        let r = self.nm() / 28.0;
+        r * r
+    }
+
+    fn delay_scale(self) -> f64 {
+        self.nm() / 28.0
+    }
+
+    fn power_scale(self) -> f64 {
+        let v = self.vdd() / TechNode::N28.vdd();
+        (self.nm() / 28.0) * v * v
+    }
+}
+
+/// um^2 per GE at 28 nm (calibrated to the paper's 0.025 mm^2 total).
+const UM2_PER_GE_28: f64 = 2.2747;
+/// Per-logic-level delay at 28 nm, ns (calibrated to 1.38 GHz).
+const LEVEL_DELAY_NS_28: f64 = 0.0275;
+/// Fixed setup/clk overhead per stage, ns.
+const DELAY_FLOOR_NS_28: f64 = 0.10;
+/// Switching power per GE per GHz at 28 nm, mW (calibrated to 6.1 mW).
+const MW_PER_GE_GHZ_28: f64 = 1.692e-3;
+/// Activity factor of the MAC datapath under random operands.
+const ACTIVITY: f64 = 0.22;
+/// Leakage fraction of total power at 28 nm.
+const LEAKAGE_FRAC: f64 = 0.08;
+
+/// One Table II row / Table III column for "This Work".
+#[derive(Debug, Clone)]
+pub struct AsicReport {
+    /// Design point.
+    pub kind: DesignKind,
+    /// Node.
+    pub node: TechNode,
+    /// Area in um^2.
+    pub area_um2: f64,
+    /// Max frequency in GHz (pipeline stage critical path).
+    pub freq_ghz: f64,
+    /// Power at fmax, mW.
+    pub power_mw: f64,
+    /// Stage-wise area/power split (Table III).
+    pub stages: BTreeMap<PipelineStage, (f64, f64)>,
+}
+
+impl AsicReport {
+    /// Synthesize the model for a design point at a node.
+    pub fn for_design(kind: DesignKind, node: TechNode) -> Self {
+        let stages = gates::stage_inventories(kind);
+        let total = gates::total_inventory(kind);
+
+        // Critical stage depth sets fmax (pipelined design).
+        let crit_depth = stages.values().map(|i| i.depth)
+            .fold(0.0f64, f64::max);
+        let period = (DELAY_FLOOR_NS_28 + crit_depth * LEVEL_DELAY_NS_28)
+            * node.delay_scale();
+        let freq_ghz = 1.0 / period;
+
+        let area_um2 = total.ge * UM2_PER_GE_28 * node.area_scale();
+
+        let dyn_mw = total.ge * MW_PER_GE_GHZ_28 * ACTIVITY * freq_ghz
+            * node.power_scale();
+        let power_mw = dyn_mw / (1.0 - LEAKAGE_FRAC);
+
+        let mut stage_map = BTreeMap::new();
+        for (s, inv) in &stages {
+            let a = inv.ge * UM2_PER_GE_28 * node.area_scale();
+            let p = power_mw * (inv.ge / total.ge);
+            stage_map.insert(*s, (a, p));
+        }
+
+        AsicReport { kind, node, area_um2, freq_ghz, power_mw,
+                     stages: stage_map }
+    }
+
+    /// Area in mm^2.
+    pub fn area_mm2(&self) -> f64 {
+        self.area_um2 / 1e6
+    }
+
+    /// Effective MACs per second in a given mode (lanes x fmax).
+    pub fn macs_per_sec(&self, lanes: u32) -> f64 {
+        self.freq_ghz * 1e9 * lanes as f64
+    }
+
+    /// Effective GMACs per watt in a given mode — the paper's headline
+    /// "up to 4x higher effective MACs/W in Posit-8 mode".
+    pub fn gmacs_per_watt(&self, lanes: u32) -> f64 {
+        self.macs_per_sec(lanes) / 1e9 / (self.power_mw / 1e3)
+    }
+}

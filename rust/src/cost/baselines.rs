@@ -1,0 +1,135 @@
+//! Prior-work comparison rows for Tables I, II and III.
+//!
+//! These are the *published* numbers from the cited papers — we cannot
+//! re-synthesize third-party RTL (DESIGN.md §6) — so every row carries
+//! its citation label and is printed under a "paper-reported" banner by
+//! the bench harnesses. "This Work" rows always come from the model.
+
+/// A Table I (FPGA) comparison row.
+#[derive(Debug, Clone)]
+pub struct FpgaBaseline {
+    /// Citation label as in the paper.
+    pub cite: &'static str,
+    /// Precision description.
+    pub precision: &'static str,
+    /// LUT count.
+    pub luts: u32,
+    /// Flip-flop count.
+    pub ffs: u32,
+    /// Delay (ns).
+    pub delay_ns: f64,
+    /// Power (mW).
+    pub power_mw: f64,
+}
+
+/// Table I prior-work rows (as printed in the paper).
+pub const FPGA_BASELINES: &[FpgaBaseline] = &[
+    FpgaBaseline { cite: "ISCAS'25 [14]", precision:
+                   "Approx. SIMD Log Posit 8/16/32",
+                   luts: 4613, ffs: 2078, delay_ns: 6.2, power_mw: 276.0 },
+    FpgaBaseline { cite: "TCAS-II'24 [5]", precision:
+                   "SIMD INT4/FP8/16/32",
+                   luts: 8054, ffs: 1718, delay_ns: 4.62, power_mw: 296.0 },
+    FpgaBaseline { cite: "TVLSI'23 [15]", precision: "SIMD FP16/32/64",
+                   luts: 8065, ffs: 1072, delay_ns: 5.56, power_mw: 376.0 },
+    FpgaBaseline { cite: "TCAS-II'22 [16]", precision: "POSIT-FP8/16/32",
+                   luts: 5972, ffs: 1634, delay_ns: 3.74, power_mw: 99.0 },
+];
+
+/// A Table II (ASIC 28 nm-class) comparison row.
+#[derive(Debug, Clone)]
+pub struct AsicBaseline {
+    /// Citation label.
+    pub cite: &'static str,
+    /// Supply voltage (V).
+    pub supply_v: f64,
+    /// Frequency (GHz).
+    pub freq_ghz: f64,
+    /// Area (mm^2).
+    pub area_mm2: f64,
+    /// Power (mW).
+    pub power_mw: f64,
+}
+
+/// Table II prior-work rows.
+pub const ASIC_BASELINES: &[AsicBaseline] = &[
+    AsicBaseline { cite: "TVLSI'25 [2]", supply_v: 0.9, freq_ghz: 1.36,
+                   area_mm2: 0.049, power_mw: 7.3 },
+    AsicBaseline { cite: "ISCAS'25 [14]", supply_v: 0.9, freq_ghz: 1.12,
+                   area_mm2: 0.024, power_mw: 32.68 },
+    AsicBaseline { cite: "TCAD'24 [17]", supply_v: 1.0, freq_ghz: 1.47,
+                   area_mm2: 0.024, power_mw: 82.4 },
+    AsicBaseline { cite: "TCAS-II'24 [18]", supply_v: 1.0, freq_ghz: 1.56,
+                   area_mm2: 0.022, power_mw: 72.3 },
+    AsicBaseline { cite: "TCAS-II'24 [5]", supply_v: 1.0, freq_ghz: 1.47,
+                   area_mm2: 0.01, power_mw: 15.87 },
+    AsicBaseline { cite: "TCAS-II'22 [16]", supply_v: 1.05, freq_ghz: 0.67,
+                   area_mm2: 0.052, power_mw: 99.0 },
+];
+
+/// A Table III stage-wise comparison entry (um^2, mW per stage).
+#[derive(Debug, Clone)]
+pub struct StageBaseline {
+    /// Citation label.
+    pub cite: &'static str,
+    /// (input, mult+exp, accum, output) area um^2 — `None` where the
+    /// paper merges rows.
+    pub area_um2: [Option<f64>; 4],
+    /// Same for power (mW).
+    pub power_mw: [Option<f64>; 4],
+    /// Totals as printed.
+    pub total_area_um2: f64,
+    /// Total power (mW).
+    pub total_power_mw: f64,
+}
+
+/// Table III prior-work columns.
+pub const STAGE_BASELINES: &[StageBaseline] = &[
+    StageBaseline { cite: "TCAD'24 [17]",
+                    area_um2: [Some(14735.0), None, Some(3058.0),
+                               Some(6320.0)],
+                    power_mw: [Some(45.0), None, Some(12.0), Some(25.5)],
+                    total_area_um2: 24113.0, total_power_mw: 82.5 },
+    StageBaseline { cite: "TCAS-II'24 [5]",
+                    area_um2: [Some(13432.0), None, Some(5636.0),
+                               Some(2849.0)],
+                    power_mw: [Some(41.0), None, Some(20.0), Some(11.4)],
+                    total_area_um2: 21917.0, total_power_mw: 72.4 },
+    StageBaseline { cite: "TVLSI'23 [15]",
+                    area_um2: [Some(6575.0), None, Some(1540.0),
+                               Some(4914.0)],
+                    power_mw: [Some(24.5), None, Some(8.7), Some(26.0)],
+                    total_area_um2: 13029.0, total_power_mw: 59.2 },
+    StageBaseline { cite: "TCAS-II'22 [16]",
+                    area_um2: [Some(8079.0), Some(22772.0), Some(13274.0),
+                               Some(5855.0)],
+                    power_mw: [Some(16.2), Some(43.5), Some(26.0),
+                               Some(26.0)],
+                    total_area_um2: 49980.0, total_power_mw: 111.7 },
+];
+
+/// The paper's own "This Work" reported rows (used by tests/benches to
+/// print paper-vs-model deltas, never as model output).
+pub mod paper_reported {
+    /// Table I "This Work": (precision, LUT, FF, delay ns, power mW).
+    pub const TABLE1: &[(&str, u32, u32, f64, f64)] = &[
+        ("POSIT-8", 366, 41, 1.22, 93.0),
+        ("POSIT-16", 1341, 144, 1.52, 119.0),
+        ("POSIT-32", 5097, 544, 2.45, 402.0),
+        ("SIMD POSIT 8/16/32", 5674, 625, 2.51, 569.0),
+    ];
+
+    /// Table II "This Work" at 28 nm.
+    pub const TABLE2: (f64, f64, f64, f64) = (0.9, 1.38, 0.025, 6.1);
+
+    /// Table III "This Work" stage rows (area um^2, power mW).
+    pub const TABLE3: &[(&str, f64, f64)] = &[
+        ("Input Proc.", 3754.0, 1.21),
+        ("Mantissa Mult. & Exp Proc.", 10550.0, 2.14),
+        ("Accumulation", 5432.0, 1.73),
+        ("Output Proc.", 5120.0, 1.03),
+    ];
+
+    /// Table III "This Work" totals.
+    pub const TABLE3_TOTAL: (f64, f64) = (24856.0, 6.11);
+}

@@ -1,0 +1,125 @@
+//! IDX (LeCun MNIST format) loader — when real MNIST files are present
+//! (`train-images-idx3-ubyte` etc.), Fig. 4 evaluation can run on them
+//! instead of the synthetic stand-ins (DESIGN.md §1 notes real IDX data
+//! is auto-used if present).
+//!
+//! Format: u32 magic (0x0000_0803 for u8 3-D images, 0x0000_0801 for
+//! labels), big-endian dims, raw u8 payload.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::spdd::Dataset;
+
+fn read_be_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Load an IDX image file (`magic 0x803`, dims \[n, h, w\]).
+pub fn load_images(path: &Path) -> Result<(Vec<f32>, usize, usize,
+                                           usize)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let magic = read_be_u32(&mut f)?;
+    if magic != 0x0803 {
+        bail!("{}: bad image magic {magic:#x}", path.display());
+    }
+    let n = read_be_u32(&mut f)? as usize;
+    let h = read_be_u32(&mut f)? as usize;
+    let w = read_be_u32(&mut f)? as usize;
+    let mut raw = vec![0u8; n * h * w];
+    f.read_exact(&mut raw)?;
+    let data = raw.iter().map(|&b| b as f32 / 255.0).collect();
+    Ok((data, n, h, w))
+}
+
+/// Load an IDX label file (`magic 0x801`).
+pub fn load_labels(path: &Path) -> Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let magic = read_be_u32(&mut f)?;
+    if magic != 0x0801 {
+        bail!("{}: bad label magic {magic:#x}", path.display());
+    }
+    let n = read_be_u32(&mut f)? as usize;
+    let mut raw = vec![0u8; n];
+    f.read_exact(&mut raw)?;
+    Ok(raw)
+}
+
+/// Assemble a [`Dataset`] from an IDX image/label pair.
+pub fn load_pair(images: &Path, labels: &Path, nclasses: usize)
+                 -> Result<Dataset> {
+    let (data, n, h, w) = load_images(images)?;
+    let labels = load_labels(labels)?;
+    if labels.len() != n {
+        bail!("image/label count mismatch: {n} vs {}", labels.len());
+    }
+    Ok(Dataset { n, h, w, c: 1, nclasses, labels, data })
+}
+
+/// If real MNIST IDX files exist under `dir`, load the test split.
+pub fn try_real_mnist(dir: &Path) -> Option<Dataset> {
+    let img = dir.join("t10k-images-idx3-ubyte");
+    let lab = dir.join("t10k-labels-idx1-ubyte");
+    if img.is_file() && lab.is_file() {
+        load_pair(&img, &lab, 10).ok()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx_pair(dir: &Path) {
+        // 2 images of 2x3 + labels
+        let mut f = std::fs::File::create(
+            dir.join("t10k-images-idx3-ubyte")).unwrap();
+        f.write_all(&0x0803u32.to_be_bytes()).unwrap();
+        f.write_all(&2u32.to_be_bytes()).unwrap();
+        f.write_all(&2u32.to_be_bytes()).unwrap();
+        f.write_all(&3u32.to_be_bytes()).unwrap();
+        f.write_all(&[0, 51, 102, 153, 204, 255,
+                      255, 204, 153, 102, 51, 0]).unwrap();
+        let mut f = std::fs::File::create(
+            dir.join("t10k-labels-idx1-ubyte")).unwrap();
+        f.write_all(&0x0801u32.to_be_bytes()).unwrap();
+        f.write_all(&2u32.to_be_bytes()).unwrap();
+        f.write_all(&[7, 3]).unwrap();
+    }
+
+    #[test]
+    fn round_trips_idx_pair() {
+        let dir = std::env::temp_dir().join("spade_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_idx_pair(&dir);
+        let ds = try_real_mnist(&dir).expect("pair should load");
+        assert_eq!((ds.n, ds.h, ds.w, ds.c), (2, 2, 3, 1));
+        assert_eq!(ds.labels, vec![7, 3]);
+        assert_eq!(ds.data[0], 0.0);
+        assert_eq!(ds.data[5], 1.0);
+        assert!((ds.data[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("spade_idx_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad");
+        std::fs::write(&p, 0xdeadbeefu32.to_be_bytes()).unwrap();
+        assert!(load_images(&p).is_err());
+        assert!(load_labels(&p).is_err());
+    }
+
+    #[test]
+    fn absent_files_return_none() {
+        assert!(try_real_mnist(Path::new("/nonexistent")).is_none());
+    }
+}

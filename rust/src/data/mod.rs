@@ -1,0 +1,11 @@
+//! Dataset access: the SPDD binary container written at build time by
+//! `python/compile/datasets.py` (synthetic MNIST/CIFAR/alphabet
+//! stand-ins — DESIGN.md §1), plus a synthetic request-traffic generator
+//! for the serving coordinator.
+
+pub mod idx;
+pub mod spdd;
+pub mod traffic;
+
+pub use spdd::Dataset;
+pub use traffic::TrafficGen;

@@ -1,0 +1,124 @@
+//! SPDD dataset container (little-endian):
+//! `magic 'SPDD', u32 version=1, u32 n, u32 h, u32 w, u32 c,
+//! u32 nclasses, u8 labels[n], f32 data[n*h*w*c]` (NHWC, range 0..1).
+//!
+//! Mirror of `python/compile/datasets.py::write_spdd` — the datasets are
+//! generated once at build time so training (python) and evaluation
+//! (rust) see bit-identical pixels.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A labelled image dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Image count.
+    pub n: usize,
+    /// Height, width, channels.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Number of classes.
+    pub nclasses: usize,
+    /// Labels, length `n`.
+    pub labels: Vec<u8>,
+    /// Pixels, NHWC row-major, length `n*h*w*c`.
+    pub data: Vec<f32>,
+}
+
+impl Dataset {
+    /// Load an SPDD file.
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"SPDD" {
+            bail!("{}: bad magic {magic:?}", path.display());
+        }
+        let mut hdr = [0u8; 24];
+        f.read_exact(&mut hdr)?;
+        let rd = |i: usize| {
+            u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap())
+                as usize
+        };
+        let (ver, n, h, w, c, nclasses) =
+            (rd(0), rd(1), rd(2), rd(3), rd(4), rd(5));
+        if ver != 1 {
+            bail!("unsupported SPDD version {ver}");
+        }
+        let mut labels = vec![0u8; n];
+        f.read_exact(&mut labels)?;
+        let mut raw = vec![0u8; n * h * w * c * 4];
+        f.read_exact(&mut raw)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Dataset { n, h, w, c, nclasses, labels, data })
+    }
+
+    /// Load `artifacts/data/<name>_<split>.bin`.
+    pub fn load_artifact(name: &str, split: &str) -> Result<Dataset> {
+        let p = crate::artifacts_dir()
+            .join("data")
+            .join(format!("{name}_{split}.bin"));
+        Self::load(&p)
+    }
+
+    /// One image as an f32 slice (HWC).
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+
+    /// A batch of images as a contiguous NHWC buffer.
+    pub fn batch(&self, start: usize, count: usize) -> (Vec<f32>, &[u8]) {
+        let sz = self.h * self.w * self.c;
+        let end = (start + count).min(self.n);
+        (
+            self.data[start * sz..end * sz].to_vec(),
+            &self.labels[start..end],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("data").is_dir()
+    }
+
+    #[test]
+    fn loads_mnist_syn() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+        assert_eq!((ds.h, ds.w, ds.c), (28, 28, 1));
+        assert_eq!(ds.nclasses, 10);
+        assert_eq!(ds.labels.len(), ds.n);
+        assert_eq!(ds.data.len(), ds.n * 28 * 28);
+        assert!(ds.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn batch_slicing() {
+        if !have_artifacts() {
+            return;
+        }
+        let ds = Dataset::load_artifact("alpha_syn", "test").unwrap();
+        let (pix, lab) = ds.batch(3, 5);
+        assert_eq!(lab.len(), 5);
+        assert_eq!(pix.len(), 5 * ds.h * ds.w * ds.c);
+        assert_eq!(&pix[..4], &ds.image(3)[..4]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Mode-aware SIMD two's complementor (Fig. 2b).
+//!
+//! Stage 1 uses it to rectify negative posit words before field
+//! extraction; Stage 3 uses it on the aligned mantissa products. The RTL
+//! is an invert-XOR layer followed by an increment whose carry chain is
+//! *segmented* by the MODE signal: no inter-lane carry in P8 mode,
+//! pairwise-localized carry in P16 mode, full-width carry in P32 mode.
+//! We model the carry chain bit-for-bit (nibble-group ripple, like the
+//! RTL's carry-select groups) rather than calling `wrapping_neg`, so the
+//! lane-isolation behaviour is the tested artifact.
+
+use super::Mode;
+
+/// Conditionally two's-complement each active lane of `x`.
+///
+/// `neg[i]` selects complementation for lane `i` (length must equal
+/// `mode.lanes()`).
+pub fn simd_complement(x: u32, neg: &[bool], mode: Mode) -> u32 {
+    debug_assert_eq!(neg.len(), mode.lanes());
+    let lane_w = mode.lane_bits();
+
+    // Invert layer: XOR each lane with its negate control.
+    let mut inverted = 0u32;
+    for i in 0..mode.lanes() {
+        let lane = super::lane_extract(x, mode, i) as u32;
+        let v = if neg[i] { !lane } else { lane };
+        inverted = super::lane_insert(inverted, mode, i,
+                                      (v as u64) & ((1u64 << lane_w) - 1).min(u32::MAX as u64));
+    }
+
+    // Increment layer: per-bit ripple with carries cut at lane borders.
+    let mut out = 0u32;
+    let mut carry = 0u32;
+    for bit in 0..32 {
+        let lane_idx = (bit / lane_w) as usize;
+        if bit % lane_w == 0 {
+            // MODE gate: a fresh carry-in = neg for this lane's segment
+            carry = neg[lane_idx] as u32;
+        }
+        let a = (inverted >> bit) & 1;
+        let s = a ^ carry;
+        carry &= a; // carry propagates only through 1-bits (a+1 ripple)
+        out |= s << bit;
+    }
+    out
+}
+
+/// Reference lane-wise negate using ordinary integer ops (oracle).
+pub fn reference(x: u32, neg: &[bool], mode: Mode) -> u32 {
+    let w = mode.lane_bits();
+    let mask: u64 = if w == 32 { 0xFFFF_FFFF } else { (1u64 << w) - 1 };
+    let mut out = 0u32;
+    for i in 0..mode.lanes() {
+        let lane = super::lane_extract(x, mode, i);
+        let v = if neg[i] { lane.wrapping_neg() & mask } else { lane };
+        out = super::lane_insert(out, mode, i, v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn negs(bits: u32, mode: Mode) -> Vec<bool> {
+        (0..mode.lanes()).map(|i| (bits >> i) & 1 == 1).collect()
+    }
+
+    #[test]
+    fn matches_reference_all_modes() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..100_000 {
+            let x = rng.next_u64() as u32;
+            for mode in Mode::ALL {
+                for nb in 0..(1u32 << mode.lanes()) {
+                    let n = negs(nb, mode);
+                    assert_eq!(simd_complement(x, &n, mode),
+                               reference(x, &n, mode),
+                               "x={x:#x} mode={mode:?} neg={n:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn carry_does_not_cross_lanes_in_p8() {
+        // lane0 = 0x00 -> two's comp = 0x00 with carry-out that must NOT
+        // increment lane1.
+        let x = 0x0000_FF00u32; // lane1 = 0xFF
+        let out = simd_complement(x, &[true, true, false, false],
+                                  Mode::P8x4);
+        assert_eq!(out & 0xFF, 0x00); // -0 = 0
+        assert_eq!((out >> 8) & 0xFF, 0x01); // -0xFF = 0x01, no extra carry
+    }
+
+    #[test]
+    fn carry_crosses_bytes_in_p32() {
+        // -1 over the full 32-bit word
+        let out = simd_complement(1, &[true], Mode::P32x1);
+        assert_eq!(out, 0xFFFF_FFFF);
+        // and -(0x0000_0100)
+        let out = simd_complement(0x100, &[true], Mode::P32x1);
+        assert_eq!(out, 0x100u32.wrapping_neg());
+    }
+
+    #[test]
+    fn noop_when_not_negating() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..1000 {
+            let x = rng.next_u64() as u32;
+            for mode in Mode::ALL {
+                let n = vec![false; mode.lanes()];
+                assert_eq!(simd_complement(x, &n, mode), x);
+            }
+        }
+    }
+}

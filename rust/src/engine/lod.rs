@@ -1,0 +1,127 @@
+//! SIMD Leading-One Detector (Fig. 2a).
+//!
+//! The RTL builds a 32-bit LOD from four 8-bit LOD blocks whose
+//! valid/position outputs are combined pairwise by mode multiplexers:
+//! in P8 mode each block reports its own lane; in P16 mode pairs fuse
+//! (high block wins, else low block + 8); in P32 all four fuse. This
+//! module reproduces that gate-level composition literally — `lod8` is
+//! a priority encoder and the fusion layers are the 2:1 mux trees —
+//! so the cost model can count the same structure the simulator runs.
+
+use super::Mode;
+
+/// Output of one LOD block: `valid` and the bit position of the leading
+/// one within the block (block-local, MSB-relative position in the RTL;
+/// we report the absolute bit index from the lane's LSB for convenience).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LodOut {
+    /// True if any bit in the segment is set.
+    pub valid: bool,
+    /// Index (from segment LSB) of the most significant set bit.
+    pub pos: u32,
+}
+
+/// 8-bit leading-one detector: the leaf block of the hierarchy.
+#[inline]
+pub fn lod8(x: u8) -> LodOut {
+    if x == 0 {
+        LodOut { valid: false, pos: 0 }
+    } else {
+        LodOut { valid: true, pos: 7 - x.leading_zeros() }
+    }
+}
+
+/// Fuse two adjacent LOD results (hi covers bits [w..2w), lo [0..w)).
+#[inline]
+pub fn lod_fuse(hi: LodOut, lo: LodOut, w: u32) -> LodOut {
+    if hi.valid {
+        LodOut { valid: true, pos: hi.pos + w }
+    } else {
+        LodOut { valid: lo.valid, pos: lo.pos }
+    }
+}
+
+/// SIMD LOD over a packed 32-bit word: per active lane, the position of
+/// the leading one (used for regime decode and quire renormalization).
+pub fn simd_lod(x: u32, mode: Mode) -> Vec<LodOut> {
+    simd_lod4(x, mode)[..mode.lanes()].to_vec()
+}
+
+/// Allocation-free variant for the pipeline hot path: results in the
+/// first `mode.lanes()` slots, the rest zeroed.
+#[inline]
+pub fn simd_lod4(x: u32, mode: Mode) -> [LodOut; 4] {
+    let b: [u8; 4] = x.to_le_bytes();
+    let l = [lod8(b[0]), lod8(b[1]), lod8(b[2]), lod8(b[3])];
+    let zero = LodOut { valid: false, pos: 0 };
+    match mode {
+        Mode::P8x4 => l,
+        Mode::P16x2 => [
+            lod_fuse(l[1], l[0], 8),
+            lod_fuse(l[3], l[2], 8),
+            zero,
+            zero,
+        ],
+        Mode::P32x1 => {
+            let lo16 = lod_fuse(l[1], l[0], 8);
+            let hi16 = lod_fuse(l[3], l[2], 8);
+            [lod_fuse(hi16, lo16, 16), zero, zero, zero]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn lod8_matches_leading_zeros() {
+        for x in 0u16..=255 {
+            let x = x as u8;
+            let out = lod8(x);
+            if x == 0 {
+                assert!(!out.valid);
+            } else {
+                assert!(out.valid);
+                assert_eq!(out.pos, 7 - x.leading_zeros());
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_reference_all_modes() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..100_000 {
+            let x = rng.next_u64() as u32;
+            for mode in Mode::ALL {
+                let outs = simd_lod(x, mode);
+                let w = mode.lane_bits();
+                for (i, o) in outs.iter().enumerate() {
+                    let lane = super::super::lane_extract(x, mode, i);
+                    if lane == 0 {
+                        assert!(!o.valid);
+                    } else {
+                        assert!(o.valid);
+                        assert_eq!(o.pos,
+                                   w - 1 - (lane << (64 - w))
+                                       .leading_zeros() as u32
+                                       % 64,
+                                   "x={x:#x} mode={mode:?} lane={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_p32_spans_lanes() {
+        // leading one in byte 2 must be found by the fused 32-bit LOD
+        let out = simd_lod(0x0004_0000, Mode::P32x1);
+        assert_eq!(out[0], LodOut { valid: true, pos: 18 });
+        // but in P8 mode lanes 0,1,3 are invalid and lane 2 reports 2
+        let out = simd_lod(0x0004_0000, Mode::P8x4);
+        assert!(!out[0].valid && !out[1].valid && !out[3].valid);
+        assert_eq!(out[2], LodOut { valid: true, pos: 2 });
+    }
+}

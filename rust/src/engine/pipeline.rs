@@ -1,0 +1,440 @@
+//! The five-stage SPADE MAC pipeline (§II-B, Fig. 1).
+//!
+//! Stage 1 — Posit unpacking & field extraction (sign check, mode-aware
+//!           complementor, SIMD LOD regime decode, barrel-shift field
+//!           alignment);
+//! Stage 2 — partitioned Booth mantissa multiplication + scale addition;
+//! Stage 3 — quire accumulation (exact, enable-gated for bypass);
+//! Stage 4 — reconstruction & normalization (quire LOD, regime/exponent
+//!           recompute);
+//! Stage 5 — round-to-nearest-even packing.
+//!
+//! Timing model: the pipeline is fully pipelined with II = 1 and depth 5
+//! and has no data hazards (the quire is a same-stage accumulator), so
+//! functional results are computed combinationally at issue while the
+//! cycle counter advances exactly as the RTL would: `cycles = issues +
+//! (depth - 1)` per drain. Per-stage activity counters feed the energy
+//! model in [`crate::cost`].
+//!
+//! Stage 1 is implemented *structurally* through the SIMD submodules
+//! (complementor / LOD / shifter), not by calling the golden
+//! `posit::decode` — the unit tests assert the two agree exhaustively,
+//! which is exactly the RTL-vs-SoftPosit check of §III.
+
+use super::{booth, complementor, lod, shifter, Mode};
+use crate::posit::{PositClass, Quire};
+
+/// Per-stage switching-activity counters (feed the ASIC energy model).
+#[derive(Debug, Clone, Default)]
+pub struct StageActivity {
+    /// Cycles the engine has been stepped (including drain latency).
+    pub cycles: u64,
+    /// Lane-operand unpacks performed in Stage 1.
+    pub unpacks: u64,
+    /// Lane multiplies in Stage 2.
+    pub mults: u64,
+    /// Booth partial products generated in Stage 2.
+    pub partial_products: u64,
+    /// Quire adds in Stage 3 (excludes bypassed/zero products).
+    pub quire_adds: u64,
+    /// Stage 3 issues gated off by the enable signal (bypass).
+    pub bypassed: u64,
+    /// Stage 4/5 normalize+round events (accumulator drains).
+    pub rounds: u64,
+}
+
+impl StageActivity {
+    /// Effective MAC operations performed (lane-level).
+    pub fn macs(&self) -> u64 {
+        self.mults
+    }
+}
+
+/// Decoded lane fields produced by the structural Stage 1.
+#[derive(Debug, Clone, Copy)]
+struct LaneFields {
+    class: PositClass,
+    sign: bool,
+    scale: i32,
+    /// Significand with implicit leading one, `fbits + 1` bits.
+    sig: u64,
+    fbits: u32,
+}
+
+/// Structural Stage 1 for one packed operand word: sign strip via the
+/// mode-aware complementor, regime decode via the SIMD LOD, field
+/// alignment via the barrel shifter.
+///
+/// Allocation-free (fixed 4-slot arrays; unused lanes report Zero) —
+/// this is the simulator's hottest function (see EXPERIMENTS.md §Perf).
+fn unpack_word(word: u32, mode: Mode) -> [LaneFields; 4] {
+    let fmt = mode.format();
+    let n = fmt.nbits;
+    let lanes = mode.lanes();
+
+    // sign bits and special-case detection per lane
+    let mut signs = [false; 4];
+    for (i, s) in signs.iter_mut().enumerate().take(lanes) {
+        *s = (super::lane_extract(word, mode, i) >> (n - 1)) & 1 == 1;
+    }
+
+    // Mode-aware two's complement of negative lanes (Fig. 2b).
+    let mag_word =
+        complementor::simd_complement(word, &signs[..lanes], mode);
+
+    // Regime decode: LOD over (body XOR r0-extended) — a run of r0 bits
+    // ends where a bit differs, which is the leading one of t.
+    let mut t_word = 0u32;
+    let mut r0s = [false; 4];
+    for i in 0..lanes {
+        let mag = super::lane_extract(mag_word, mode, i);
+        let body = mag & ((1u64 << (n - 1)) - 1);
+        let r0 = (mag >> (n - 2)) & 1 == 1;
+        r0s[i] = r0;
+        let t = if r0 { !body & ((1u64 << (n - 1)) - 1) } else { body };
+        t_word = super::lane_insert(t_word, mode, i, t);
+    }
+    let lods = lod::simd_lod4(t_word, mode);
+
+    // Field alignment: shift the body left so exponent+fraction sit at
+    // the top, then slice (Fig. 2c usage).
+    let mut shift_amts = [0u32; 4];
+    let mut ks = [0i32; 4];
+    let mut term = [-1i32; 4];
+    for i in 0..lanes {
+        let j = if lods[i].valid { lods[i].pos as i32 } else { -1 };
+        let run = (n as i32 - 2) - j;
+        ks[i] = if r0s[i] {
+            if lods[i].valid { run - 1 } else { n as i32 - 2 }
+        } else {
+            // body == 0 can only be the zero/NaR words, handled below
+            -run
+        };
+        term[i] = if r0s[i] && !lods[i].valid { -1 } else { j };
+        // left-shift amount to bring the terminator out: n-1 - j bits
+        shift_amts[i] = (n as i32 - 1 - term[i].max(0)) as u32;
+    }
+    let aligned = shifter::simd_shift(
+        t_align_input(mag_word, mode), &shift_amts[..lanes],
+        shifter::Dir::Left, mode);
+
+    let zero_fields = LaneFields { class: PositClass::Zero, sign: false,
+                                   scale: 0, sig: 0, fbits: 0 };
+    let mut out = [zero_fields; 4];
+    for i in 0..lanes {
+        let raw = super::lane_extract(word, mode, i);
+        if raw == 0 {
+            continue;
+        }
+        if raw == fmt.nar() {
+            out[i].class = PositClass::NaR;
+            continue;
+        }
+        let j = term[i].max(0) as u32;
+        let have = fmt.es.min(j);
+        // `aligned` holds the low j bits of the body shifted to the
+        // top of the lane: bits [n-1-j .. n-2] hold exp+frac.
+        let lane_aligned = super::lane_extract(aligned, mode, i);
+        let field = lane_aligned >> (n - 1 - j).min(63);
+        let field = field & ((1u64 << j) - 1);
+        let exp = ((field >> (j - have)) << (fmt.es - have)) as u32;
+        let fbits = j - have;
+        let frac = field & ((1u64 << fbits) - 1);
+        let scale = ks[i] * fmt.useed_pow() + exp as i32;
+        out[i] = LaneFields {
+            class: PositClass::Normal,
+            sign: signs[i],
+            scale,
+            sig: (1u64 << fbits) | frac,
+            fbits,
+        };
+    }
+    out
+}
+
+/// The body bits enter the shifter masked to n-1 bits (sign removed).
+fn t_align_input(mag_word: u32, mode: Mode) -> u32 {
+    let n = mode.lane_bits();
+    let mut out = 0u32;
+    for i in 0..mode.lanes() {
+        let mag = super::lane_extract(mag_word, mode, i);
+        let body = mag & ((1u64 << (n - 1)) - 1);
+        out = super::lane_insert(out, mode, i, body);
+    }
+    out
+}
+
+/// The SPADE MAC engine: one PE datapath in a chosen MODE.
+///
+/// Issue packed operand pairs with [`MacEngine::mac`]; drain the
+/// per-lane quires to packed posit results with [`MacEngine::read`].
+#[derive(Debug, Clone)]
+pub struct MacEngine {
+    mode: Mode,
+    quires: Vec<Quire>,
+    activity: StageActivity,
+}
+
+/// Pipeline depth (five stages -> 4 cycles of drain latency).
+pub const PIPE_DEPTH: u64 = 5;
+
+impl MacEngine {
+    /// New engine in `mode` with cleared accumulators.
+    pub fn new(mode: Mode) -> Self {
+        Self {
+            mode,
+            quires: (0..mode.lanes()).map(|_| Quire::new(mode.format()))
+                .collect(),
+            activity: StageActivity::default(),
+        }
+    }
+
+    /// Current mode.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Switch MODE: drains (flushes) the pipeline and clears the quires,
+    /// exactly as the RTL must between precision regions.
+    pub fn set_mode(&mut self, mode: Mode) {
+        self.activity.cycles += PIPE_DEPTH - 1; // drain
+        self.mode = mode;
+        self.quires = (0..mode.lanes()).map(|_| Quire::new(mode.format()))
+            .collect();
+    }
+
+    /// Activity counters.
+    pub fn activity(&self) -> &StageActivity {
+        &self.activity
+    }
+
+    /// Issue one packed MAC: per active lane, `acc[i] += a[i] * b[i]`.
+    ///
+    /// `enable = false` models the Stage 3 bypass gate: the operands
+    /// flow through Stages 1-2 but the quire is not touched.
+    pub fn mac(&mut self, a: u32, b: u32, enable: bool) {
+        self.activity.cycles += 1;
+        let fa = unpack_word(a, self.mode);
+        let fb = unpack_word(b, self.mode);
+        self.activity.unpacks += 2 * self.mode.lanes() as u64;
+
+        // Stage 2: partitioned Booth multiply of the significands.
+        let sig_a = [fa[0].sig, fa[1].sig, fa[2].sig, fa[3].sig];
+        let sig_b = [fb[0].sig, fb[1].sig, fb[2].sig, fb[3].sig];
+        let (products, pps) =
+            booth::simd_booth_mul4(&sig_a, &sig_b, self.mode);
+        self.activity.mults += self.mode.lanes() as u64;
+        self.activity.partial_products += pps as u64;
+
+        if !enable {
+            self.activity.bypassed += self.mode.lanes() as u64;
+            return;
+        }
+
+        // Stage 3: exact quire accumulation.
+        for i in 0..self.mode.lanes() {
+            match (fa[i].class, fb[i].class) {
+                (PositClass::NaR, _) | (_, PositClass::NaR) => {
+                    self.quires[i].set_nar();
+                }
+                (PositClass::Zero, _) | (_, PositClass::Zero) => {}
+                _ => {
+                    let weight = fa[i].scale + fb[i].scale
+                        - (fa[i].fbits + fb[i].fbits) as i32;
+                    self.quires[i].mac_raw(
+                        products[i],
+                        weight,
+                        fa[i].sign ^ fb[i].sign,
+                    );
+                    self.activity.quire_adds += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain Stages 4-5: normalize + round each lane's quire into a
+    /// packed posit word. Accounts the pipeline drain latency.
+    pub fn read(&mut self) -> u32 {
+        self.activity.cycles += PIPE_DEPTH - 1;
+        self.activity.rounds += self.mode.lanes() as u64;
+        let lanes: Vec<u64> =
+            self.quires.iter().map(|q| q.to_posit()).collect();
+        super::pack_lanes(&lanes, self.mode)
+    }
+
+    /// Clear the accumulators without draining the pipe (new tile).
+    pub fn clear(&mut self) {
+        for q in &mut self.quires {
+            q.clear();
+        }
+    }
+
+    /// Convenience: full dot product of packed operand streams, returning
+    /// the packed posit result.
+    pub fn dot(&mut self, a: &[u32], b: &[u32]) -> u32 {
+        assert_eq!(a.len(), b.len());
+        self.clear();
+        for (&x, &y) in a.iter().zip(b) {
+            self.mac(x, y, true);
+        }
+        self.read()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{decode, from_f64, to_f64};
+    use crate::util::SplitMix64;
+
+    /// Structural Stage 1 must agree with the golden decoder — the
+    /// module-level RTL-vs-SoftPosit check, exhaustive for P8.
+    #[test]
+    fn unpack_matches_decode_exhaustive_p8() {
+        for w in 0u32..=0xFFFF_FFFF_u32.min(0xFFFF) {
+            // pack the same 8-bit word in all four lanes plus a varying
+            // neighbour to catch cross-lane leakage
+            let a = (w & 0xFF) as u32;
+            let word = a | (a.wrapping_add(1) & 0xFF) << 8
+                | (a.wrapping_add(77) & 0xFF) << 16 | (a ^ 0x5A) << 24;
+            let fields = unpack_word(word, Mode::P8x4);
+            for (i, f) in fields.iter().enumerate() {
+                let lane = super::super::lane_extract(word, Mode::P8x4, i);
+                let d = decode(lane, Mode::P8x4.format());
+                assert_eq!(f.class, d.class, "lane word {lane:#x}");
+                if d.class == PositClass::Normal {
+                    assert_eq!(f.sign, d.sign, "word {lane:#x}");
+                    assert_eq!(f.scale, d.scale, "word {lane:#x}");
+                    assert_eq!(f.sig, d.significand(), "word {lane:#x}");
+                    assert_eq!(f.fbits, d.fbits, "word {lane:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_matches_decode_p16_p32_random() {
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..200_000 {
+            let word = rng.next_u64() as u32;
+            for mode in [Mode::P16x2, Mode::P32x1] {
+                let fields = unpack_word(word, mode);
+                for (i, f) in fields.iter().take(mode.lanes())
+                    .enumerate()
+                {
+                    let lane = super::super::lane_extract(word, mode, i);
+                    let d = decode(lane, mode.format());
+                    assert_eq!(f.class, d.class);
+                    if d.class == PositClass::Normal {
+                        assert_eq!((f.sign, f.scale, f.sig, f.fbits),
+                                   (d.sign, d.scale, d.significand(),
+                                    d.fbits),
+                                   "mode {mode:?} word {lane:#x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_mac_equals_golden_mul() {
+        let mut rng = SplitMix64::new(9);
+        for mode in Mode::ALL {
+            let fmt = mode.format();
+            for _ in 0..20_000 {
+                let a: Vec<u64> = (0..mode.lanes())
+                    .map(|_| rng.next_u64() & fmt.mask()).collect();
+                let b: Vec<u64> = (0..mode.lanes())
+                    .map(|_| rng.next_u64() & fmt.mask()).collect();
+                let mut eng = MacEngine::new(mode);
+                eng.mac(super::super::pack_lanes(&a, mode),
+                        super::super::pack_lanes(&b, mode), true);
+                let out = eng.read();
+                for i in 0..mode.lanes() {
+                    let want = crate::posit::p_mul(a[i], b[i], fmt);
+                    let got = super::super::lane_extract(out, mode, i);
+                    assert_eq!(got, want,
+                               "mode {mode:?} {:#x}*{:#x}", a[i], b[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bypass_gate_blocks_accumulation() {
+        let mode = Mode::P16x2;
+        let one = from_f64(1.0, mode.format());
+        let word = super::super::pack_lanes(&[one, one], mode);
+        let mut eng = MacEngine::new(mode);
+        eng.mac(word, word, false); // bypassed
+        eng.mac(word, word, true);
+        let out = eng.read();
+        for i in 0..2 {
+            assert_eq!(to_f64(super::super::lane_extract(out, mode, i),
+                              mode.format()), 1.0);
+        }
+        assert_eq!(eng.activity().bypassed, 2);
+    }
+
+    #[test]
+    fn cycle_accounting() {
+        let mut eng = MacEngine::new(Mode::P8x4);
+        for _ in 0..10 {
+            eng.mac(0, 0, true);
+        }
+        let _ = eng.read();
+        assert_eq!(eng.activity().cycles, 10 + PIPE_DEPTH - 1);
+        assert_eq!(eng.activity().macs(), 40); // 4 lanes x 10 issues
+    }
+
+    #[test]
+    fn throughput_scales_with_mode() {
+        // The headline claim: 4x / 2x / 1x MACs per cycle.
+        for (mode, per_cycle) in
+            [(Mode::P8x4, 4), (Mode::P16x2, 2), (Mode::P32x1, 1)]
+        {
+            let mut eng = MacEngine::new(mode);
+            for _ in 0..100 {
+                eng.mac(0x3F3F_3F3F, 0x4242_4242, true);
+            }
+            assert_eq!(eng.activity().macs(), 100 * per_cycle);
+        }
+    }
+
+    #[test]
+    fn dot_matches_quire_golden() {
+        let mut rng = SplitMix64::new(10);
+        for mode in Mode::ALL {
+            let fmt = mode.format();
+            for _ in 0..500 {
+                let len = 16;
+                let mut lanes_a = vec![Vec::new(); mode.lanes()];
+                let mut lanes_b = vec![Vec::new(); mode.lanes()];
+                let mut packed_a = Vec::new();
+                let mut packed_b = Vec::new();
+                for _ in 0..len {
+                    let a: Vec<u64> = (0..mode.lanes())
+                        .map(|_| from_f64(rng.wide(-4, 4), fmt)).collect();
+                    let b: Vec<u64> = (0..mode.lanes())
+                        .map(|_| from_f64(rng.wide(-4, 4), fmt)).collect();
+                    for i in 0..mode.lanes() {
+                        lanes_a[i].push(a[i]);
+                        lanes_b[i].push(b[i]);
+                    }
+                    packed_a.push(super::super::pack_lanes(&a, mode));
+                    packed_b.push(super::super::pack_lanes(&b, mode));
+                }
+                let mut eng = MacEngine::new(mode);
+                let out = eng.dot(&packed_a, &packed_b);
+                for i in 0..mode.lanes() {
+                    let mut q = Quire::new(fmt);
+                    for k in 0..len {
+                        q.mac(lanes_a[i][k], lanes_b[i][k]);
+                    }
+                    assert_eq!(super::super::lane_extract(out, mode, i),
+                               q.to_posit(), "mode {mode:?} lane {i}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! # SPADE — SIMD Posit-enabled compute engine for accelerating DNN efficiency
+//!
+//! Software-defined reproduction of the SPADE paper (Kumar et al., CS.AR
+//! 2026): a unified multi-precision SIMD Posit MAC architecture supporting
+//! Posit(8,0), Posit(16,1) and Posit(32,2) in a single datapath.
+//!
+//! The original artifact is Verilog RTL synthesized to a Virtex-7 FPGA and
+//! TSMC 28/65/180 nm ASIC nodes; this crate rebuilds the full system as a
+//! hardware/software co-design stack (see `DESIGN.md` for the substitution
+//! map):
+//!
+//! * [`posit`] — from-scratch posit arithmetic: generic (n, es)
+//!   decode/encode with hardware-faithful round-to-nearest-even on the
+//!   packed encoding, exact multiply/add/divide, and the exact wide
+//!   fixed-point **quire** accumulator. This is the SoftPosit-equivalent
+//!   golden model the paper validates against.
+//! * [`engine`] — the bit-accurate SPADE MAC datapath of Fig. 1/Fig. 2:
+//!   SIMD leading-one detector, mode-aware complementor, logarithmic
+//!   barrel shifter, partitioned radix-4 Booth multiplier, and the
+//!   five-stage pipeline with quire accumulation, in all three MODEs
+//!   (4x Posit-8, 2x Posit-16, 1x Posit-32).
+//! * [`cost`] — structural hardware cost model regenerating the paper's
+//!   Table I (Virtex-7 LUT/FF/delay/power), Table II (TSMC 28 nm
+//!   freq/area/power) and Table III (stage-wise breakdown), plus the
+//!   published prior-work comparison rows.
+//! * [`systolic`] — cycle-level weight-stationary systolic array of SPADE
+//!   PEs with banked scratchpads and a Cheshire-like command controller
+//!   (Fig. 3).
+//! * [`nn`] / [`data`] — posit-quantized DNN inference stack (tensors,
+//!   layers, model zoo, SPDW weight loading) and the synthetic datasets
+//!   used for the Fig. 4 accuracy reproduction.
+//! * [`runtime`] — PJRT CPU runtime loading the AOT HLO artifacts
+//!   produced by the build-time JAX/Pallas layers (`python/compile/`).
+//! * [`coordinator`] — precision-adaptive serving: request queue, dynamic
+//!   batcher, precision router and energy/latency metrics.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use spade::posit::{P8, Quire};
+//!
+//! let a = P8::from_f64(1.5);
+//! let b = P8::from_f64(-2.25);
+//! assert_eq!((a * b).to_f64(), -3.375);
+//!
+//! // Exact MAC through the quire: no intermediate rounding.
+//! let mut q = Quire::new(spade::posit::P8_FMT);
+//! for _ in 0..100 {
+//!     q.mac(a.word() as u64, b.word() as u64);
+//! }
+//! let dot = q.to_posit();
+//! # let _ = dot;
+//! ```
+
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod engine;
+pub mod nn;
+pub mod posit;
+pub mod runtime;
+pub mod systolic;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory (AOT outputs of `make artifacts`).
+///
+/// Checks `$SPADE_ARTIFACTS`, then `./artifacts`, then walks up from the
+/// executable — tests and examples all run from different CWDs.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SPADE_ARTIFACTS") {
+        return p.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! `spade` CLI — leader entrypoint for the reproduction stack.
+//!
+//! Subcommands:
+//!   tables            print Tables I, II, III (model vs paper)
+//!   eval              Fig. 4 accuracy sweep (--model, --limit, --modes)
+//!   serve             run the precision-adaptive coordinator on
+//!                     synthetic traffic (--requests, --rate-us,
+//!                     --policy)
+//!   trace             cycle-accurate systolic trace of a small GEMM
+//!   info              artifact + model inventory
+
+use anyhow::Result;
+
+use spade::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use spade::cost::{baselines, AsicReport, DesignKind, FpgaReport,
+                  PipelineStage, TechNode};
+use spade::data::{Dataset, TrafficGen};
+use spade::engine::Mode;
+use spade::nn::{self, Backend, Model, Precision, Tensor};
+use spade::systolic::{ArrayConfig, SystolicGemm};
+use spade::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("tables") => cmd_tables(),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: spade <tables|eval|serve|trace|info> [options]\n\
+                 see `cargo doc` or README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables() -> Result<()> {
+    println!("== Table I: FPGA (Virtex-7) — model output ==");
+    println!("{:<22} {:>6} {:>6} {:>9} {:>9}", "design", "LUT", "FF",
+             "delay ns", "power mW");
+    for r in FpgaReport::table1() {
+        println!("{:<22} {:>6} {:>6} {:>9.2} {:>9.0}", r.kind.name(),
+                 r.luts, r.ffs, r.delay_ns, r.power_mw);
+    }
+    for b in baselines::FPGA_BASELINES {
+        println!("{:<22} {:>6} {:>6} {:>9.2} {:>9.0}  [paper-reported]",
+                 b.cite, b.luts, b.ffs, b.delay_ns, b.power_mw);
+    }
+    let (lut_ovh, ff_ovh) = FpgaReport::simd_overhead_pct();
+    println!("SIMD overhead vs standalone P32: {lut_ovh:.1}% LUT, \
+              {ff_ovh:.1}% FF\n");
+
+    println!("== Table II: ASIC 28 nm — model output ==");
+    let r = AsicReport::for_design(DesignKind::SimdUnified, TechNode::N28);
+    println!("This Work   0.9 V  {:.2} GHz  {:.3} mm2  {:.1} mW",
+             r.freq_ghz, r.area_mm2(), r.power_mw);
+    for b in baselines::ASIC_BASELINES {
+        println!("{:<12}{:.2} V  {:.2} GHz  {:.3} mm2  {:.1} mW  \
+                  [paper-reported]",
+                 b.cite, b.supply_v, b.freq_ghz, b.area_mm2, b.power_mw);
+    }
+
+    println!("\n== Table III: stage-wise (28 nm) — model output ==");
+    for s in PipelineStage::ALL {
+        let (a, p) = r.stages[&s];
+        println!("{:<28} {:>8.0} um2 {:>7.2} mW", s.name(), a, p);
+    }
+    println!("{:<28} {:>8.0} um2 {:>7.2} mW", "Total", r.area_um2,
+             r.power_mw);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "lenet5");
+    let limit: usize = args.num_or("limit", 256);
+    let modes = args.get_or("modes", "f32,p32,p16,p8");
+
+    let model = Model::load(&model_name)?;
+    let ds = Dataset::load_artifact(&model.spec.dataset, "test")?;
+    let n = limit.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+
+    println!("{model_name} on {} ({n} images)", model.spec.dataset);
+    for mode in modes.split(',') {
+        let prec = Precision::parse(mode)?;
+        let backend = if prec == Precision::F32 { Backend::F32 }
+                      else { Backend::Posit };
+        let t0 = std::time::Instant::now();
+        let (logits, stats) = nn::exec::forward(&model, &x, prec,
+                                                backend)?;
+        let acc = nn::exec::accuracy(&logits, labels);
+        println!("  {:<4} acc {:.4}  ({} MACs, {} cycles, {:.1} uJ) \
+                  [{:.1}s wall]",
+                 prec.name(), acc, stats.macs, stats.cycles,
+                 stats.energy_pj / 1e6, t0.elapsed().as_secs_f32());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests: usize = args.num_or("requests", 256);
+    let rate_us: u64 = args.num_or("rate-us", 200);
+    let policy = match args.get_or("policy", "energy").as_str() {
+        "accuracy" => RoutePolicy::AccuracyFirst,
+        "balanced" => RoutePolicy::Balanced,
+        _ => RoutePolicy::EnergyFirst,
+    };
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        model: args.get_or("model", "mlp"),
+        policy,
+        ..Default::default()
+    })?;
+    let mut gen = TrafficGen::new(7, rate_us, coord.input_len());
+
+    println!("serving {requests} requests (mean gap {rate_us} us, \
+              policy {policy:?}) ...");
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for r in gen.burst(requests) {
+        rxs.push(coord.submit(spade::coordinator::InferenceRequest {
+            id: r.id,
+            input: r.input,
+            mode: r.mode,
+        }));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    println!("throughput: {:.0} req/s",
+             requests as f64 / wall.as_secs_f64());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let m: usize = args.num_or("m", 8);
+    let k: usize = args.num_or("k", 16);
+    let n: usize = args.num_or("n", 8);
+    for mode in Mode::ALL {
+        let cfg = ArrayConfig { rows: 4, cols: 2, mode };
+        let g = SystolicGemm::new(cfg);
+        let a = vec![0.5; m * k];
+        let b = vec![0.25; k * n];
+        let (_, stats) = g.run_cycle_accurate(&a, &b, m, k, n);
+        println!("{mode:?}: {} cycles, {} MACs ({:.2} MACs/cycle), \
+                  {:.1} nJ",
+                 stats.cycles, stats.macs, stats.macs_per_cycle(),
+                 stats.total_energy_pj() / 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = spade::artifacts_dir();
+    println!("artifacts: {}", dir.display());
+    if let Ok(rt) = spade::runtime::Runtime::new() {
+        println!("{rt:?}");
+        for a in rt.artifacts() {
+            println!("  {a}");
+        }
+    } else {
+        println!("  (no manifest — run `make artifacts`)");
+    }
+    for name in ["mlp", "lenet5", "cnn5", "alexnet_mini", "vgg16_mini",
+                 "alpha_cnn"] {
+        match Model::load(name) {
+            Ok(m) => {
+                let macs: u64 = m.spec.layer_macs().iter().sum();
+                println!("model {name:<14} {} layers, {} MAC layers, \
+                          {macs} MACs/image",
+                         m.spec.layers.len(), m.spec.mac_layers());
+            }
+            Err(e) => println!("model {name:<14} unavailable: {e}"),
+        }
+    }
+    Ok(())
+}

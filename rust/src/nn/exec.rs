@@ -1,0 +1,320 @@
+//! Inference execution backends.
+//!
+//! * [`Backend::F32`] — plain f32 (the Fig. 4 floating-point baseline);
+//! * [`Backend::Posit`] — functional posit through the systolic fast
+//!   path: quantized operands, exact accumulation, one rounding per
+//!   output, **plus** cycle/energy statistics from the dataflow model —
+//!   this is what full-network evaluation and the throughput bench use;
+//! * [`Backend::PositExact`] — quire-exact bit-level path through
+//!   [`crate::posit::Quire`] (slow; validates the functional path).
+//!
+//! A per-MAC-layer [`Precision`] policy expresses the paper's layer-wise
+//! precision heterogeneity; `forward_policy` switches the array MODE
+//! between layers exactly as the SIMD engine would.
+
+use anyhow::{ensure, Result};
+
+use crate::engine::Mode;
+use crate::posit::{from_f64, to_f64, Quire};
+use crate::systolic::{ArrayConfig, GemmStats, SystolicGemm};
+
+use super::layers::{self};
+use super::model::{LayerSpec, Model, Precision};
+use super::tensor::Tensor;
+
+/// Execution backend selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// f32 reference.
+    F32,
+    /// Functional posit on the systolic fast path (with stats).
+    Posit,
+    /// Bit-exact quire path (slow; small batches only).
+    PositExact,
+}
+
+/// Aggregated execution statistics of one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Array cycles (systolic dataflow model).
+    pub cycles: u64,
+    /// Lane-level MACs issued.
+    pub macs: u64,
+    /// Total accelerator energy (pJ).
+    pub energy_pj: f64,
+    /// Per-layer (name, precision, cycles, macs).
+    pub layers: Vec<(String, &'static str, u64, u64)>,
+}
+
+impl NetStats {
+    fn absorb(&mut self, name: String, prec: &'static str, s: &GemmStats) {
+        self.cycles += s.cycles;
+        self.macs += s.macs;
+        self.energy_pj += s.total_energy_pj();
+        self.layers.push((name, prec, s.cycles, s.macs));
+    }
+}
+
+/// Default array geometry for full-network runs (8x8 PEs, Fig. 3 scale).
+pub const DEFAULT_ROWS: usize = 8;
+/// Default PE columns.
+pub const DEFAULT_COLS: usize = 8;
+
+/// Run `model` on an NHWC input batch under a uniform precision.
+pub fn forward(model: &Model, x: &Tensor, prec: Precision,
+               backend: Backend) -> Result<(Tensor, NetStats)> {
+    let policy = vec![prec; model.spec.mac_layers()];
+    forward_policy(model, x, &policy, backend)
+}
+
+/// Run with a per-MAC-layer precision policy.
+pub fn forward_policy(model: &Model, x: &Tensor, policy: &[Precision],
+                      backend: Backend) -> Result<(Tensor, NetStats)> {
+    ensure!(policy.len() == model.spec.mac_layers(),
+            "policy length {} != MAC layers {}", policy.len(),
+            model.spec.mac_layers());
+    ensure!(x.shape.len() == 4, "input must be NHWC");
+    let n = x.shape[0];
+
+    let mut act = x.clone();
+    let mut stats = NetStats::default();
+    let mut mac_idx = 0usize;
+
+    for (i, layer) in model.spec.layers.iter().enumerate() {
+        match *layer {
+            LayerSpec::Conv { k, out, pad, relu } => {
+                let w = &model.params[&format!("layer{i}/w")];
+                let b = &model.params[&format!("layer{i}/b")];
+                let (patches, ho, wo) = layers::im2col(&act, k, pad);
+                let wmat = Tensor::from_vec(
+                    &[w.shape[0] * w.shape[1] * w.shape[2], w.shape[3]],
+                    w.data.clone(),
+                );
+                let prec = policy[mac_idx];
+                mac_idx += 1;
+                let mut y = mac_layer(&patches, &wmat, &b.data, prec,
+                                      backend, &mut stats,
+                                      format!("layer{i}:conv{k}x{k}"))?;
+                if relu {
+                    layers::relu(&mut y);
+                }
+                act = y.reshape(&[n, ho, wo, out]);
+            }
+            LayerSpec::MaxPool { k } => {
+                act = layers::maxpool(&act, k);
+            }
+            LayerSpec::Flatten => {
+                let feat = act.len() / n;
+                act = act.reshape(&[n, feat]);
+            }
+            LayerSpec::Dense { relu, .. } => {
+                let w = &model.params[&format!("layer{i}/w")];
+                let b = &model.params[&format!("layer{i}/b")];
+                let prec = policy[mac_idx];
+                mac_idx += 1;
+                let mut y = mac_layer(&act, w, &b.data, prec, backend,
+                                      &mut stats,
+                                      format!("layer{i}:dense"))?;
+                if relu {
+                    layers::relu(&mut y);
+                }
+                act = y;
+            }
+        }
+    }
+    Ok((act, stats))
+}
+
+/// One MAC layer through the selected backend. Bias enters the quire
+/// before the final rounding (matching `posit_dense` in the kernels).
+fn mac_layer(a: &Tensor, w: &Tensor, bias: &[f32], prec: Precision,
+             backend: Backend, stats: &mut NetStats, name: String)
+             -> Result<Tensor> {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let nn = w.shape[1];
+
+    let mode = match (prec, backend) {
+        (Precision::F32, _) | (_, Backend::F32) => {
+            return Ok(layers::gemm_bias_f32(a, w, bias));
+        }
+        (Precision::Posit(mode), _) => mode,
+    };
+
+    match backend {
+        Backend::F32 => unreachable!(),
+        Backend::Posit => {
+            let cfg = ArrayConfig { rows: DEFAULT_ROWS, cols: DEFAULT_COLS,
+                                    mode };
+            let g = SystolicGemm::new(cfg);
+            let af: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+            let wf: Vec<f64> = w.data.iter().map(|&v| v as f64).collect();
+            let bf: Vec<f64> = bias.iter().map(|&v| v as f64).collect();
+            // bias joins the accumulator before the single final rounding
+            let (out, gs) = g.run_bias(&af, &wf, Some(&bf), m, k, nn);
+            stats.absorb(name, mode_name(mode), &gs);
+            Ok(Tensor::from_vec(&[m, nn],
+                                out.iter().map(|&v| v as f32).collect()))
+        }
+        Backend::PositExact => {
+            let fmt = mode.format();
+            let aw: Vec<u64> =
+                a.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+            let ww: Vec<u64> =
+                w.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+            let bw: Vec<u64> =
+                bias.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+            let mut out = vec![0.0f32; m * nn];
+            let mut q = Quire::new(fmt);
+            for i in 0..m {
+                for j in 0..nn {
+                    q.clear();
+                    for kk in 0..k {
+                        q.mac(aw[i * k + kk], ww[kk * nn + j]);
+                    }
+                    q.add_posit(bw[j]);
+                    out[i * nn + j] = to_f64(q.to_posit(), fmt) as f32;
+                }
+            }
+            // stats follow the same dataflow formulas
+            let cfg = ArrayConfig { rows: DEFAULT_ROWS, cols: DEFAULT_COLS,
+                                    mode };
+            let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
+            stats.absorb(name, mode_name(mode), &gs);
+            Ok(Tensor::from_vec(&[m, nn], out))
+        }
+    }
+}
+
+fn mode_name(mode: Mode) -> &'static str {
+    match mode {
+        Mode::P8x4 => "p8",
+        Mode::P16x2 => "p16",
+        Mode::P32x1 => "p32",
+    }
+}
+
+/// Top-1 accuracy of logits against labels.
+pub fn accuracy(logits: &Tensor, labels: &[u8]) -> f64 {
+    let preds = logits.argmax_rows();
+    let hits = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    hits as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::BTreeMap;
+
+    /// Tiny hand-built model for backend cross-checks.
+    fn tiny_model() -> Model {
+        let spec = super::super::model::ModelSpec::parse(
+            r#"{"name": "tiny", "dataset": "d", "input": [4, 4, 1],
+                "classes": 3,
+                "layers": [
+                  {"kind": "conv", "k": 3, "out": 2, "pad": "same",
+                   "relu": true},
+                  {"kind": "maxpool", "k": 2},
+                  {"kind": "flatten"},
+                  {"kind": "dense", "out": 3, "relu": false}]}"#,
+        )
+        .unwrap();
+        let mut rng = SplitMix64::new(55);
+        let mut params = BTreeMap::new();
+        params.insert("layer0/w".into(),
+                      Tensor::from_vec(&[3, 3, 1, 2],
+                                       (0..18).map(|_| rng.normal() as f32)
+                                           .collect()));
+        params.insert("layer0/b".into(),
+                      Tensor::from_vec(&[2], vec![0.1, -0.1]));
+        params.insert("layer3/w".into(),
+                      Tensor::from_vec(&[8, 3],
+                                       (0..24).map(|_| rng.normal() as f32)
+                                           .collect()));
+        params.insert("layer3/b".into(),
+                      Tensor::from_vec(&[3], vec![0.0, 0.05, -0.05]));
+        let m = Model { spec, params };
+        m.validate().unwrap();
+        m
+    }
+
+    fn rand_input(n: usize, seed: u64) -> Tensor {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::from_vec(&[n, 4, 4, 1],
+                         (0..n * 16).map(|_| rng.f32()).collect())
+    }
+
+    #[test]
+    fn posit_fast_matches_exact_p8_p16() {
+        let m = tiny_model();
+        let x = rand_input(3, 6);
+        for prec in [Precision::Posit(Mode::P8x4),
+                     Precision::Posit(Mode::P16x2)] {
+            let (fast, _) = forward(&m, &x, prec, Backend::Posit).unwrap();
+            let (exact, _) =
+                forward(&m, &x, prec, Backend::PositExact).unwrap();
+            assert_eq!(fast.data, exact.data, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn p32_tracks_f32_closely() {
+        let m = tiny_model();
+        let x = rand_input(4, 7);
+        let (f, _) = forward(&m, &x, Precision::F32, Backend::F32).unwrap();
+        let (p, _) = forward(&m, &x, Precision::Posit(Mode::P32x1),
+                             Backend::Posit).unwrap();
+        for (a, b) in f.data.iter().zip(&p.data) {
+            assert!((a - b).abs() < 1e-4 + 1e-3 * a.abs(),
+                    "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn policy_mixes_precisions() {
+        let m = tiny_model();
+        let x = rand_input(2, 8);
+        let policy = [Precision::Posit(Mode::P8x4),
+                      Precision::Posit(Mode::P32x1)];
+        let (_, stats) =
+            forward_policy(&m, &x, &policy, Backend::Posit).unwrap();
+        assert_eq!(stats.layers.len(), 2);
+        assert_eq!(stats.layers[0].1, "p8");
+        assert_eq!(stats.layers[1].1, "p32");
+        assert!(stats.cycles > 0 && stats.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn policy_length_checked() {
+        let m = tiny_model();
+        let x = rand_input(1, 9);
+        let bad = [Precision::F32];
+        assert!(forward_policy(&m, &x, &bad, Backend::F32).is_err());
+    }
+
+    #[test]
+    fn accuracy_metric() {
+        let logits = Tensor::from_vec(&[2, 3],
+                                      vec![0.1, 0.8, 0.1, 0.9, 0.0, 0.1]);
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[2, 2]), 0.0);
+    }
+
+    #[test]
+    fn cheaper_modes_cost_fewer_cycles() {
+        let m = tiny_model();
+        let x = rand_input(4, 10);
+        let mut cycles = Vec::new();
+        for mode in [Mode::P8x4, Mode::P16x2, Mode::P32x1] {
+            let (_, s) = forward(&m, &x, Precision::Posit(mode),
+                                 Backend::Posit).unwrap();
+            cycles.push(s.cycles);
+        }
+        assert!(cycles[0] <= cycles[1] && cycles[1] <= cycles[2],
+                "{cycles:?}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Layer primitives matching the JAX graph exactly (layout contract in
+//! the module docs of [`super`]). Conv is lowered to im2col + GEMM — the
+//! same mapping `model.py::forward_posit` uses and the same GEMM the
+//! systolic array executes, so all three implementations are
+//! numerically comparable layer by layer.
+
+use super::tensor::Tensor;
+
+/// Padding mode of a convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pad {
+    /// Output spatial size = input (left pad (k-1)/2, right k-1-left).
+    Same,
+    /// No padding; output shrinks by k-1.
+    Valid,
+}
+
+/// im2col: `[N,H,W,C] -> [N*Ho*Wo, k*k*C]` with (ky, kx, c) patch order
+/// — identical to `model.py::_im2col`.
+pub fn im2col(x: &Tensor, k: usize, pad: Pad) -> (Tensor, usize, usize) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (p_lo, p_hi) = match pad {
+        Pad::Same => ((k - 1) / 2, k - 1 - (k - 1) / 2),
+        Pad::Valid => (0, 0),
+    };
+    let hp = h + p_lo + p_hi;
+    let wp = w + p_lo + p_hi;
+    let ho = hp - k + 1;
+    let wo = wp - k + 1;
+
+    let mut out = vec![0.0f32; n * ho * wo * k * k * c];
+    let row_len = k * k * c;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst_base = ((b * ho + oy) * wo + ox) * row_len;
+                for ky in 0..k {
+                    let iy = oy + ky;
+                    if iy < p_lo || iy >= p_lo + h {
+                        continue; // zero padding
+                    }
+                    let sy = iy - p_lo;
+                    for kx in 0..k {
+                        let ix = ox + kx;
+                        if ix < p_lo || ix >= p_lo + w {
+                            continue;
+                        }
+                        let sx = ix - p_lo;
+                        let src = ((b * h + sy) * w + sx) * c;
+                        let dst = dst_base + (ky * k + kx) * c;
+                        out[dst..dst + c]
+                            .copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::from_vec(&[n * ho * wo, row_len], out), ho, wo)
+}
+
+/// 2x2 (or kxk) max pooling, stride k, VALID.
+pub fn maxpool(x: &Tensor, k: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (ho, wo) = (h / k, w / k);
+    let mut out = vec![f32::NEG_INFINITY; n * ho * wo * c];
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let src =
+                            ((b * h + oy * k + ky) * w + ox * k + kx) * c;
+                        let dst = ((b * ho + oy) * wo + ox) * c;
+                        for ch in 0..c {
+                            let v = x.data[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, ho, wo, c], out)
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Plain f32 GEMM + bias: `[m,k] x [k,n] + [n] -> [m,n]` (reference
+/// backend; the posit backends route through `systolic::gemm`).
+pub fn gemm_bias_f32(a: &Tensor, b: &Tensor, bias: &[f32]) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    assert_eq!(bias.len(), n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.copy_from_slice(bias);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_valid_3x3() {
+        // 1x3x3x1 image, k=3 valid -> single patch = the image itself
+        let x = Tensor::from_vec(&[1, 3, 3, 1],
+                                 (1..=9).map(|v| v as f32).collect());
+        let (p, ho, wo) = im2col(&x, 3, Pad::Valid);
+        assert_eq!((ho, wo), (1, 1));
+        assert_eq!(p.shape, vec![1, 9]);
+        assert_eq!(p.data, (1..=9).map(|v| v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn im2col_same_pads_zeros() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        let (p, ho, wo) = im2col(&x, 3, Pad::Same);
+        assert_eq!((ho, wo), (2, 2));
+        // patch at (0,0): rows ky=0 all zero-padded, centre = pixel 1
+        let row = &p.data[0..9];
+        assert_eq!(row, &[0., 0., 0., 0., 1., 2., 0., 3., 4.]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 5., 3., 2.]);
+        let y = maxpool(&x, 2);
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn gemm_bias() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        let y = gemm_bias_f32(&a, &b, &[10.0, 20.0]);
+        assert_eq!(y.data, vec![11., 22., 13., 24.]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::from_vec(&[1, 3], vec![-1.0, 0.0, 2.0]);
+        relu(&mut t);
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0]);
+    }
+}

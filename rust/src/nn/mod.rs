@@ -1,0 +1,29 @@
+//! Posit-quantized DNN inference stack.
+//!
+//! Consumes the build-time artifacts: layer specs (JSON) and trained
+//! weights (SPDW) exported by `python/compile/train.py`, and runs the
+//! *same* graph the JAX side defines (layout contract: NHWC activations,
+//! HWIO conv weights, (ky, kx, c) im2col patch order, 2x2/2 maxpool).
+//!
+//! * [`tensor`] — minimal row-major f32 tensor;
+//! * [`layers`] — conv (as im2col GEMM, exactly how the systolic array
+//!   maps it), dense, maxpool, relu, flatten;
+//! * [`quant`] — posit tensor quantization;
+//! * [`model`] — spec parsing + sequential execution with a per-layer
+//!   precision policy (the paper's layer-wise heterogeneity);
+//! * [`exec`] — backends: f32 reference, functional posit (systolic
+//!   fast path with cycle/energy stats), quire-exact posit (validation);
+//! * [`weights`] — SPDW container loader.
+
+pub mod exec;
+pub mod layers;
+pub mod policy;
+pub mod model;
+pub mod quant;
+pub mod tensor;
+pub mod weights;
+
+pub use exec::{Backend, NetStats};
+pub use policy::{search as policy_search, PolicyResult};
+pub use model::{LayerSpec, Model, ModelSpec, Precision};
+pub use tensor::Tensor;

@@ -1,0 +1,320 @@
+//! Model spec (the JSON layer description exported by `model.py`) and
+//! sequential execution with per-layer precision policies.
+//!
+//! The policy is the paper's motivation (§II-A): "early convolution
+//! layers are typically error-resilient ... while deeper layers demand
+//! higher fidelity" — SPADE runs each layer in the cheapest MODE that
+//! preserves accuracy, switching the array's MODE signal between layers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::Mode;
+use crate::util::Json;
+
+use super::layers::Pad;
+use super::tensor::Tensor;
+
+/// Numeric precision of one MAC layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE f32 reference (no accelerator).
+    F32,
+    /// A SPADE mode (P8x4 / P16x2 / P32x1).
+    Posit(Mode),
+}
+
+impl Precision {
+    /// Parse "f32" | "p8" | "p16" | "p32".
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "p8" => Precision::Posit(Mode::P8x4),
+            "p16" => Precision::Posit(Mode::P16x2),
+            "p32" => Precision::Posit(Mode::P32x1),
+            _ => bail!("unknown precision {s:?}"),
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Posit(Mode::P8x4) => "p8",
+            Precision::Posit(Mode::P16x2) => "p16",
+            Precision::Posit(Mode::P32x1) => "p32",
+        }
+    }
+
+    /// The four standard precisions.
+    pub const ALL: [Precision; 4] = [
+        Precision::F32,
+        Precision::Posit(Mode::P32x1),
+        Precision::Posit(Mode::P16x2),
+        Precision::Posit(Mode::P8x4),
+    ];
+}
+
+/// One layer of the sequential graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerSpec {
+    /// k x k convolution to `out` channels (+ optional fused ReLU).
+    Conv { k: usize, out: usize, pad: Pad, relu: bool },
+    /// k x k max pooling, stride k.
+    MaxPool { k: usize },
+    /// Flatten NHWC to [N, features].
+    Flatten,
+    /// Dense layer to `out` features (+ optional fused ReLU).
+    Dense { out: usize, relu: bool },
+}
+
+impl LayerSpec {
+    /// True for layers that perform MACs (and therefore have weights and
+    /// take a precision assignment).
+    pub fn is_mac(&self) -> bool {
+        matches!(self, LayerSpec::Conv { .. } | LayerSpec::Dense { .. })
+    }
+}
+
+/// Parsed model description.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Model name (artifact stem).
+    pub name: String,
+    /// Input shape [h, w, c].
+    pub input: [usize; 3],
+    /// Class count.
+    pub classes: usize,
+    /// Dataset name the model was trained on.
+    pub dataset: String,
+    /// Layers in execution order.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Parse the JSON exported by `model.py::spec_json`.
+    pub fn parse(src: &str) -> Result<ModelSpec> {
+        let j = Json::parse(src).map_err(|e| anyhow::anyhow!(e))?;
+        let name = j.get("name").and_then(Json::as_str)
+            .context("name")?.to_string();
+        let dataset = j.get("dataset").and_then(Json::as_str)
+            .unwrap_or("").to_string();
+        let input_arr = j.get("input").and_then(Json::as_arr)
+            .context("input")?;
+        let input = [
+            input_arr[0].as_usize().context("h")?,
+            input_arr[1].as_usize().context("w")?,
+            input_arr[2].as_usize().context("c")?,
+        ];
+        let classes = j.get("classes").and_then(Json::as_usize)
+            .context("classes")?;
+        let mut layers = Vec::new();
+        for l in j.get("layers").and_then(Json::as_arr)
+            .context("layers")?
+        {
+            let kind = l.get("kind").and_then(Json::as_str)
+                .context("kind")?;
+            layers.push(match kind {
+                "conv" => LayerSpec::Conv {
+                    k: l.get("k").and_then(Json::as_usize).context("k")?,
+                    out: l.get("out").and_then(Json::as_usize)
+                        .context("out")?,
+                    pad: match l.get("pad").and_then(Json::as_str) {
+                        Some("same") => Pad::Same,
+                        Some("valid") => Pad::Valid,
+                        p => bail!("bad pad {p:?}"),
+                    },
+                    relu: l.get("relu").and_then(Json::as_bool)
+                        .unwrap_or(false),
+                },
+                "maxpool" => LayerSpec::MaxPool {
+                    k: l.get("k").and_then(Json::as_usize).context("k")?,
+                },
+                "flatten" => LayerSpec::Flatten,
+                "dense" => LayerSpec::Dense {
+                    out: l.get("out").and_then(Json::as_usize)
+                        .context("out")?,
+                    relu: l.get("relu").and_then(Json::as_bool)
+                        .unwrap_or(false),
+                },
+                other => bail!("unknown layer kind {other:?}"),
+            });
+        }
+        Ok(ModelSpec { name, input, classes, dataset, layers })
+    }
+
+    /// Load `artifacts/weights/<name>.json`.
+    pub fn load(name: &str) -> Result<ModelSpec> {
+        let p = crate::artifacts_dir().join("weights")
+            .join(format!("{name}.json"));
+        let src = std::fs::read_to_string(&p)
+            .with_context(|| format!("read {}", p.display()))?;
+        Self::parse(&src)
+    }
+
+    /// Number of MAC layers (length a precision policy must have).
+    pub fn mac_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_mac()).count()
+    }
+
+    /// MAC counts per MAC-layer for one input (precision planning).
+    pub fn layer_macs(&self) -> Vec<u64> {
+        let (mut h, mut w, mut c) = (self.input[0], self.input[1],
+                                     self.input[2]);
+        let mut feat = 0usize;
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match *l {
+                LayerSpec::Conv { k, out: oc, pad, .. } => {
+                    let (ho, wo) = match pad {
+                        Pad::Same => (h, w),
+                        Pad::Valid => (h - k + 1, w - k + 1),
+                    };
+                    out.push((ho * wo * oc * k * k * c) as u64);
+                    h = ho;
+                    w = wo;
+                    c = oc;
+                }
+                LayerSpec::MaxPool { k } => {
+                    h /= k;
+                    w /= k;
+                }
+                LayerSpec::Flatten => feat = h * w * c,
+                LayerSpec::Dense { out: o, .. } => {
+                    out.push((feat * o) as u64);
+                    feat = o;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A spec bound to its trained weights.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// The graph description.
+    pub spec: ModelSpec,
+    /// Parameters keyed `layer{i}/w`, `layer{i}/b`.
+    pub params: BTreeMap<String, Tensor>,
+}
+
+impl Model {
+    /// Load spec + weights from the artifacts directory.
+    pub fn load(name: &str) -> Result<Model> {
+        let spec = ModelSpec::load(name)?;
+        let params = super::weights::load_model_weights(name)?;
+        let m = Model { spec, params };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load from explicit paths (tests).
+    pub fn load_from(spec_path: &Path, weights_path: &Path)
+                     -> Result<Model> {
+        let spec =
+            ModelSpec::parse(&std::fs::read_to_string(spec_path)?)?;
+        let params = super::weights::load_spdw(weights_path)?;
+        let m = Model { spec, params };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check weights match the spec shapes.
+    pub fn validate(&self) -> Result<()> {
+        let (mut h, mut w, mut c) = (self.spec.input[0],
+                                     self.spec.input[1],
+                                     self.spec.input[2]);
+        let mut feat = 0usize;
+        for (i, l) in self.spec.layers.iter().enumerate() {
+            match *l {
+                LayerSpec::Conv { k, out, pad, .. } => {
+                    let wt = self.params.get(&format!("layer{i}/w"))
+                        .with_context(|| format!("missing layer{i}/w"))?;
+                    if wt.shape != vec![k, k, c, out] {
+                        bail!("layer{i}/w shape {:?} != {:?}", wt.shape,
+                              [k, k, c, out]);
+                    }
+                    let (ho, wo) = match pad {
+                        Pad::Same => (h, w),
+                        Pad::Valid => (h - k + 1, w - k + 1),
+                    };
+                    h = ho;
+                    w = wo;
+                    c = out;
+                }
+                LayerSpec::MaxPool { k } => {
+                    h /= k;
+                    w /= k;
+                }
+                LayerSpec::Flatten => feat = h * w * c,
+                LayerSpec::Dense { out, .. } => {
+                    let wt = self.params.get(&format!("layer{i}/w"))
+                        .with_context(|| format!("missing layer{i}/w"))?;
+                    if wt.shape != vec![feat, out] {
+                        bail!("layer{i}/w shape {:?} != [{feat},{out}]",
+                              wt.shape);
+                    }
+                    feat = out;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{"name": "tiny", "dataset": "d",
+        "input": [4, 4, 1], "classes": 2,
+        "layers": [
+          {"kind": "conv", "k": 3, "out": 2, "pad": "same", "relu": true},
+          {"kind": "maxpool", "k": 2},
+          {"kind": "flatten"},
+          {"kind": "dense", "out": 2, "relu": false}]}"#;
+
+    #[test]
+    fn parses_spec() {
+        let s = ModelSpec::parse(SPEC).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.input, [4, 4, 1]);
+        assert_eq!(s.layers.len(), 4);
+        assert_eq!(s.mac_layers(), 2);
+        assert_eq!(s.layers[0],
+                   LayerSpec::Conv { k: 3, out: 2, pad: Pad::Same,
+                                     relu: true });
+    }
+
+    #[test]
+    fn layer_macs_counts() {
+        let s = ModelSpec::parse(SPEC).unwrap();
+        let m = s.layer_macs();
+        // conv: 4*4*2 outputs x 9*1 taps = 288; dense: 8 x 2 = 16
+        assert_eq!(m, vec![288, 16]);
+    }
+
+    #[test]
+    fn precision_parse_round_trip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert!(Precision::parse("fp64").is_err());
+    }
+
+    #[test]
+    fn loads_all_trained_models() {
+        if !crate::artifacts_dir().join("weights").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        for name in ["mlp", "lenet5", "cnn5", "alexnet_mini",
+                     "vgg16_mini", "alpha_cnn"] {
+            let m = Model::load(name).unwrap();
+            assert!(m.spec.mac_layers() >= 2, "{name}");
+        }
+    }
+}

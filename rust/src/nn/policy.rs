@@ -1,0 +1,163 @@
+//! Automatic per-layer precision policy search.
+//!
+//! The paper's motivation (§II-A): DNN layers have heterogeneous
+//! precision needs, so a multi-precision MAC should run each layer in
+//! the cheapest MODE that preserves accuracy. This module
+//! operationalizes that with a greedy search on a calibration set:
+//!
+//! 1. start from the uniform highest-precision policy (P32);
+//! 2. repeatedly try demoting the layer with the largest remaining MAC
+//!    count one precision step (P32 -> P16 -> P8);
+//! 3. keep the demotion if calibration accuracy stays within
+//!    `tolerance` of the f32 baseline, else freeze that layer.
+//!
+//! The result is the accuracy/energy frontier point the SPADE hardware
+//! exists to exploit; `precision_sweep` and the throughput bench
+//! consume it.
+
+use anyhow::Result;
+
+use crate::engine::Mode;
+
+use super::exec::{accuracy, forward, forward_policy, Backend};
+use super::model::{Model, Precision};
+use super::tensor::Tensor;
+
+/// Result of a policy search.
+#[derive(Debug, Clone)]
+pub struct PolicyResult {
+    /// Chosen per-MAC-layer precisions.
+    pub policy: Vec<Precision>,
+    /// f32 baseline accuracy on the calibration set.
+    pub baseline_acc: f64,
+    /// Accuracy of the chosen policy.
+    pub policy_acc: f64,
+    /// Cycles under the chosen policy.
+    pub cycles: u64,
+    /// Cycles under uniform P32 (for the speedup ratio).
+    pub p32_cycles: u64,
+    /// Demotions attempted / kept (search telemetry).
+    pub tried: u32,
+    /// Demotions kept.
+    pub kept: u32,
+}
+
+impl PolicyResult {
+    /// Cycle speedup of the found policy over uniform P32.
+    pub fn speedup(&self) -> f64 {
+        self.p32_cycles as f64 / self.cycles.max(1) as f64
+    }
+}
+
+fn demote(p: Precision) -> Option<Precision> {
+    match p {
+        Precision::Posit(Mode::P32x1) => {
+            Some(Precision::Posit(Mode::P16x2))
+        }
+        Precision::Posit(Mode::P16x2) => Some(Precision::Posit(Mode::P8x4)),
+        _ => None,
+    }
+}
+
+/// Greedy MAC-count-ordered precision search (see module docs).
+///
+/// `x`/`labels` form the calibration set; `tolerance` is the allowed
+/// accuracy drop vs the f32 baseline (e.g. 0.01 = one point).
+pub fn search(model: &Model, x: &Tensor, labels: &[u8], tolerance: f64)
+              -> Result<PolicyResult> {
+    let layers = model.spec.mac_layers();
+    let macs = model.spec.layer_macs();
+
+    let (f32_logits, _) = forward(model, x, Precision::F32, Backend::F32)?;
+    let baseline_acc = accuracy(&f32_logits, labels);
+
+    let mut policy = vec![Precision::Posit(Mode::P32x1); layers];
+    let (_, p32_stats) = forward_policy(model, x, &policy,
+                                        Backend::Posit)?;
+    let p32_cycles = p32_stats.cycles;
+
+    // visit layers by descending MAC weight, two demotion rounds
+    let mut order: Vec<usize> = (0..layers).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(macs[i]));
+
+    let mut tried = 0;
+    let mut kept = 0;
+    let mut frozen = vec![false; layers];
+    for _round in 0..2 {
+        for &li in &order {
+            if frozen[li] {
+                continue;
+            }
+            let Some(cand) = demote(policy[li]) else {
+                frozen[li] = true;
+                continue;
+            };
+            let mut trial = policy.clone();
+            trial[li] = cand;
+            tried += 1;
+            let (logits, _) = forward_policy(model, x, &trial,
+                                             Backend::Posit)?;
+            let acc = accuracy(&logits, labels);
+            if acc >= baseline_acc - tolerance {
+                policy = trial;
+                kept += 1;
+            } else {
+                frozen[li] = true;
+            }
+        }
+    }
+
+    let (logits, stats) = forward_policy(model, x, &policy,
+                                         Backend::Posit)?;
+    Ok(PolicyResult {
+        policy,
+        baseline_acc,
+        policy_acc: accuracy(&logits, labels),
+        cycles: stats.cycles,
+        p32_cycles,
+        tried,
+        kept,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn search_finds_cheaper_policy_on_lenet() {
+        if !crate::artifacts_dir().join("weights").is_dir() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let model = Model::load("lenet5").unwrap();
+        let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+        let n = 64.min(ds.n);
+        let (pix, labels) = ds.batch(0, n);
+        let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+
+        let r = search(&model, &x, labels, 0.02).unwrap();
+        assert!(r.speedup() > 1.2, "speedup {}", r.speedup());
+        assert!(r.policy_acc >= r.baseline_acc - 0.02,
+                "{} vs {}", r.policy_acc, r.baseline_acc);
+        // at least one layer must have been demoted below P32
+        assert!(r.policy.iter()
+            .any(|p| *p != Precision::Posit(Mode::P32x1)));
+        assert!(r.kept >= 1 && r.tried >= r.kept);
+    }
+
+    #[test]
+    fn tolerance_zero_is_conservative() {
+        if !crate::artifacts_dir().join("weights").is_dir() {
+            return;
+        }
+        let model = Model::load("mlp").unwrap();
+        let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+        let n = 48.min(ds.n);
+        let (pix, labels) = ds.batch(0, n);
+        let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+        let r = search(&model, &x, labels, 0.0).unwrap();
+        assert!(r.policy_acc >= r.baseline_acc);
+    }
+}

@@ -1,0 +1,70 @@
+//! Posit tensor quantization (the operand path into the accelerator).
+
+use crate::engine::Mode;
+use crate::posit::{from_f64, to_f64};
+
+use super::tensor::Tensor;
+
+/// Quantize a tensor to the posit grid of `mode` (round-trip through the
+/// exact encoder — the same RNE the hardware Stage 5 applies).
+pub fn quantize(x: &Tensor, mode: Mode) -> Tensor {
+    let fmt = mode.format();
+    let data = x
+        .data
+        .iter()
+        .map(|&v| to_f64(from_f64(v as f64, fmt), fmt) as f32)
+        .collect();
+    Tensor { shape: x.shape.clone(), data }
+}
+
+/// Mean absolute quantization error of a tensor under `mode`.
+pub fn quant_error(x: &Tensor, mode: Mode) -> f64 {
+    let q = quantize(x, mode);
+    x.data
+        .iter()
+        .zip(&q.data)
+        .map(|(&a, &b)| (a as f64 - b as f64).abs())
+        .sum::<f64>()
+        / x.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn rand_tensor(n: usize, seed: u64) -> Tensor {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::from_vec(&[n], (0..n).map(|_| rng.normal() as f32)
+            .collect())
+    }
+
+    #[test]
+    fn idempotent() {
+        let t = rand_tensor(256, 1);
+        for mode in Mode::ALL {
+            let q1 = quantize(&t, mode);
+            let q2 = quantize(&q1, mode);
+            assert_eq!(q1.data, q2.data, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn error_ordering() {
+        // More bits -> less error, on average.
+        let t = rand_tensor(4096, 2);
+        let e8 = quant_error(&t, Mode::P8x4);
+        let e16 = quant_error(&t, Mode::P16x2);
+        let e32 = quant_error(&t, Mode::P32x1);
+        assert!(e32 < e16 && e16 < e8, "{e8} {e16} {e32}");
+    }
+
+    #[test]
+    fn p32_near_lossless_for_f32_unit_range() {
+        // f32 values near 1 carry 24 significand bits; P32 carries up to
+        // 28 there, so quantization error is zero.
+        let t = Tensor::from_vec(&[4], vec![0.5, 1.25, -0.75, 0.999]);
+        let q = quantize(&t, Mode::P32x1);
+        assert_eq!(q.data, t.data);
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal row-major f32 tensor with the shape algebra the layer zoo
+//! needs. Deliberately simple: contiguous storage, NHWC convention for
+//! 4-D activations, no views/strides.
+
+use std::fmt;
+
+/// Row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes.
+    pub shape: Vec<usize>,
+    /// Contiguous row-major data; `len == shape.product()`.
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    /// Zero tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(),
+                 data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Wrap existing data (checks the element count).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(),
+                   "shape {shape:?} vs {} elems", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Max |x| (used by quantization diagnostics).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Row-major index of a 2-D tensor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// argmax over the last axis per row of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_reshape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        let t = t.reshape(&[3, 2]);
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::from_vec(&[2, 3],
+                                 vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,83 @@
+//! SPDW weight container loader — mirror of
+//! `python/compile/weights_io.py` (little-endian: magic 'SPDW',
+//! u32 version=1, u32 count, then per tensor: u16 name_len, name,
+//! u8 ndim, u32 dims[], f32 data).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// Load an SPDW file into name -> tensor.
+pub fn load_spdw(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"SPDW" {
+        bail!("{}: bad magic", path.display());
+    }
+    let mut hdr = [0u8; 8];
+    f.read_exact(&mut hdr)?;
+    let ver = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    let count = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if ver != 1 {
+        bail!("unsupported SPDW version {ver}");
+    }
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let mut nl = [0u8; 2];
+        f.read_exact(&mut nl)?;
+        let nlen = u16::from_le_bytes(nl) as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut nd = [0u8; 1];
+        f.read_exact(&mut nd)?;
+        let ndim = nd[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut d = [0u8; 4];
+            f.read_exact(&mut d)?;
+            dims.push(u32::from_le_bytes(d) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        out.insert(name, Tensor::from_vec(&dims, data));
+    }
+    Ok(out)
+}
+
+/// Load `artifacts/weights/<model>.spdw`.
+pub fn load_model_weights(model: &str) -> Result<BTreeMap<String, Tensor>> {
+    load_spdw(&crate::artifacts_dir()
+        .join("weights")
+        .join(format!("{model}.spdw")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_trained_mlp() {
+        if !crate::artifacts_dir().join("weights").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let w = load_model_weights("mlp").unwrap();
+        assert!(w.contains_key("layer1/w"), "keys: {:?}",
+                w.keys().collect::<Vec<_>>());
+        let t = &w["layer1/w"];
+        assert_eq!(t.shape, vec![784, 128]);
+        assert!(t.abs_max() > 0.0, "weights must be trained, not zero");
+    }
+}

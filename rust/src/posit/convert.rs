@@ -1,0 +1,164 @@
+//! f64 <-> posit conversions (exact, bit-assembly based).
+//!
+//! `to_f64` is exact for every posit we support (max 27 fraction bits vs
+//! f64's 52; scales within ±120 are always normal f64). `from_f64`
+//! applies the hardware RNE of [`super::encode_from_parts`].
+
+use super::{decode, encode_from_parts, Parts, PositClass, PositFormat};
+
+const F64_EXP_MASK: u64 = (1 << 11) - 1;
+const F64_FRAC_MASK: u64 = (1 << 52) - 1;
+
+/// Round an f64 to the nearest posit word of `fmt`.
+///
+/// NaN and ±Inf map to NaR; ±0 maps to 0; subnormals (all far below
+/// minpos of every supported format) clamp to ±minpos.
+pub fn from_f64(v: f64, fmt: PositFormat) -> u64 {
+    let bits = v.to_bits();
+    let sign = bits >> 63 == 1;
+    let e_raw = (bits >> 52) & F64_EXP_MASK;
+    let frac52 = bits & F64_FRAC_MASK;
+
+    if e_raw == F64_EXP_MASK {
+        return fmt.nar(); // NaN or Inf
+    }
+    if e_raw == 0 && frac52 == 0 {
+        return 0;
+    }
+    // Subnormal f64: value < 2^-1022, below minpos of every posit <= 32
+    // bits; encode_from_parts clamps via the huge negative scale.
+    let scale = if e_raw == 0 { -4096 } else { e_raw as i32 - 1023 };
+
+    encode_from_parts(
+        Parts { sign, scale, frac: frac52, fbits: 52, sticky: false },
+        fmt,
+    )
+}
+
+/// Decode a posit word to f64 (exact; NaR -> NaN).
+pub fn to_f64(word: u64, fmt: PositFormat) -> f64 {
+    let d = decode(word, fmt);
+    match d.class {
+        PositClass::Zero => 0.0,
+        PositClass::NaR => f64::NAN,
+        PositClass::Normal => {
+            // Assemble the f64 directly from fields — exact by
+            // construction (same approach as the python twin).
+            let bits = (((1023 + d.scale) as u64) << 52)
+                | (d.frac << (52 - d.fbits));
+            let v = f64::from_bits(bits);
+            if d.sign { -v } else { v }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{P16_FMT, P32_FMT, P8_FMT};
+    use super::*;
+    use crate::util::{Prop, SplitMix64};
+
+    #[test]
+    fn simple_values() {
+        assert_eq!(from_f64(1.0, P8_FMT), 0x40);
+        assert_eq!(to_f64(0x40, P8_FMT), 1.0);
+        assert_eq!(from_f64(-1.0, P8_FMT), 0xC0);
+        assert_eq!(to_f64(0xC0, P8_FMT), -1.0);
+        assert_eq!(from_f64(0.0, P32_FMT), 0);
+        assert_eq!(to_f64(0x50, P8_FMT), 1.5);
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(from_f64(f64::NAN, P16_FMT), P16_FMT.nar());
+        assert_eq!(from_f64(f64::INFINITY, P16_FMT), P16_FMT.nar());
+        assert_eq!(from_f64(f64::NEG_INFINITY, P16_FMT), P16_FMT.nar());
+        assert!(to_f64(P16_FMT.nar(), P16_FMT).is_nan());
+    }
+
+    #[test]
+    fn extremes_clamp() {
+        assert_eq!(from_f64(1e300, P8_FMT), 0x7F);
+        assert_eq!(from_f64(-1e300, P8_FMT), 0x81);
+        assert_eq!(from_f64(1e-300, P8_FMT), 0x01);
+        assert_eq!(from_f64(f64::MIN_POSITIVE / 2.0, P8_FMT), 0x01);
+        assert_eq!(to_f64(0x7F, P8_FMT), 64.0);
+        assert_eq!(to_f64(1, P8_FMT), 1.0 / 64.0);
+    }
+
+    #[test]
+    fn exact_round_trip_exhaustive_p8_p16() {
+        for fmt in [P8_FMT, P16_FMT] {
+            for w in 0..(1u64 << fmt.nbits) {
+                if w == fmt.nar() {
+                    continue;
+                }
+                let v = to_f64(w, fmt);
+                assert_eq!(from_f64(v, fmt), w,
+                           "fmt {fmt:?} word {w:#x} val {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn p32_round_trip_random_words() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..200_000 {
+            let w = rng.next_u64() & P32_FMT.mask();
+            if w == P32_FMT.nar() {
+                continue;
+            }
+            let v = to_f64(w, P32_FMT);
+            assert_eq!(from_f64(v, P32_FMT), w, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent_property() {
+        Prop::new("quantize idempotent", 4096).run(|rng| {
+            let x = rng.wide(-60, 60);
+            for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+                let q1 = to_f64(from_f64(x, fmt), fmt);
+                let q2 = to_f64(from_f64(q1, fmt), fmt);
+                if q1.to_bits() != q2.to_bits() {
+                    return Err(format!("{fmt:?} x={x:e} q1={q1:e} q2={q2:e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sign_symmetry_property() {
+        Prop::new("sign symmetry", 4096).run(|rng| {
+            let x = rng.wide(-60, 60).abs();
+            for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+                let qp = to_f64(from_f64(x, fmt), fmt);
+                let qn = to_f64(from_f64(-x, fmt), fmt);
+                if qp != -qn {
+                    return Err(format!("{fmt:?} x={x:e} {qp:e} vs {qn:e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_quantization_property() {
+        // x <= y implies q(x) <= q(y): the tapered grid preserves order.
+        Prop::new("monotone", 2048).run(|rng| {
+            let a = rng.wide(-30, 30);
+            let b = rng.wide(-30, 30);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+                let ql = to_f64(from_f64(lo, fmt), fmt);
+                let qh = to_f64(from_f64(hi, fmt), fmt);
+                if ql > qh {
+                    return Err(format!("{fmt:?}: q({lo:e})={ql:e} > \
+                                        q({hi:e})={qh:e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

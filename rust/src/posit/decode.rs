@@ -1,0 +1,198 @@
+//! Posit word decoding: the software mirror of SPADE Stage 1
+//! ("Posit Unpacking and Field Extraction").
+//!
+//! The hardware path: sign check -> two's complement if negative -> LOD
+//! over the regime run -> left shift -> exponent / mantissa extraction.
+//! This module performs the same steps with ordinary integer ops and is
+//! the reference the bit-accurate `engine::unpack` stage is tested
+//! against.
+
+use super::PositFormat;
+
+/// Classification of a decoded word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PositClass {
+    /// Exact zero (word 0).
+    Zero,
+    /// Not-a-Real (word `10...0`): the posit exception value.
+    NaR,
+    /// Ordinary nonzero real.
+    Normal,
+}
+
+/// Decoded posit fields.
+///
+/// For `Normal`: value = (-1)^sign * 2^scale * (1 + frac / 2^fbits),
+/// where `scale = k * 2^es + exp` combines regime and exponent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decoded {
+    /// Value class; `sign`..`fbits` are meaningful only for `Normal`.
+    pub class: PositClass,
+    /// Sign bit (true = negative).
+    pub sign: bool,
+    /// Regime value k (run length encoded).
+    pub regime: i32,
+    /// Exponent field (already left-aligned: missing low bits are 0).
+    pub exp: u32,
+    /// Combined scale `k * 2^es + exp`.
+    pub scale: i32,
+    /// Fraction field (below the implicit leading 1).
+    pub frac: u64,
+    /// Number of fraction bits actually present in the encoding.
+    pub fbits: u32,
+}
+
+impl Decoded {
+    /// The implicit-1 mantissa: `1.frac` as an integer of `fbits+1` bits.
+    #[inline]
+    pub fn significand(&self) -> u64 {
+        (1u64 << self.fbits) | self.frac
+    }
+}
+
+/// Decode a posit word (low `fmt.nbits` bits of `word`).
+pub fn decode(word: u64, fmt: PositFormat) -> Decoded {
+    let n = fmt.nbits;
+    let p = word & fmt.mask();
+
+    if p == 0 {
+        return Decoded { class: PositClass::Zero, sign: false, regime: 0,
+                         exp: 0, scale: 0, frac: 0, fbits: 0 };
+    }
+    if p == fmt.nar() {
+        return Decoded { class: PositClass::NaR, sign: false, regime: 0,
+                         exp: 0, scale: 0, frac: 0, fbits: 0 };
+    }
+
+    let sign = (p >> (n - 1)) & 1 == 1;
+    // Two's complement of the whole word for negatives (posit convention),
+    // then drop the sign bit: `body` holds bits n-2..0.
+    let mag = if sign { fmt.negate(p) } else { p };
+    let body = mag & ((1u64 << (n - 1)) - 1);
+    let r0 = (mag >> (n - 2)) & 1;
+
+    // Regime run length via leading-one/zero detection — the LOD of
+    // Fig. 2(a). `body` has n-1 significant positions (n-2 downto 0).
+    let width = n - 1;
+    let (k, term_pos): (i32, i32) = if r0 == 1 {
+        let t = !body & ((1u64 << width) - 1); // first 0 ends the run
+        if t == 0 {
+            (width as i32 - 1, -1) // all ones: k = n-2, no terminator
+        } else {
+            let j = 63 - t.leading_zeros() as i32; // MSB index of t
+            let run = (n as i32 - 2) - j;
+            (run - 1, j)
+        }
+    } else {
+        // body != 0 here (zero word handled above), so the terminating 1
+        // exists.
+        let j = 63 - body.leading_zeros() as i32;
+        let run = (n as i32 - 2) - j;
+        (-run, j)
+    };
+
+    // Bits below the terminator: first min(es, j) are the exponent MSBs;
+    // truncated exponent low bits read as 0 (standard semantics).
+    let j = term_pos.max(0) as u32;
+    let have = fmt.es.min(j);
+    let field = body & ((1u64 << j) - 1);
+    let exp = ((field >> (j - have)) << (fmt.es - have)) as u32;
+    let fbits = j - have;
+    let frac = field & ((1u64 << fbits) - 1);
+
+    let scale = k * fmt.useed_pow() + exp as i32;
+    Decoded { class: PositClass::Normal, sign, regime: k, exp, scale, frac,
+              fbits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{P16_FMT, P32_FMT, P8_FMT};
+    use super::*;
+
+    #[test]
+    fn decodes_one() {
+        // +1.0 = 0 1 0 ... : regime k=0, exp 0, frac 0
+        let d = decode(0x40, P8_FMT);
+        assert_eq!(d.class, PositClass::Normal);
+        assert!(!d.sign);
+        assert_eq!(d.scale, 0);
+        assert_eq!(d.frac, 0);
+        let d = decode(0x4000, P16_FMT);
+        assert_eq!(d.scale, 0);
+        let d = decode(0x4000_0000, P32_FMT);
+        assert_eq!(d.scale, 0);
+    }
+
+    #[test]
+    fn decodes_specials() {
+        assert_eq!(decode(0, P8_FMT).class, PositClass::Zero);
+        assert_eq!(decode(0x80, P8_FMT).class, PositClass::NaR);
+        assert_eq!(decode(0x8000_0000, P32_FMT).class, PositClass::NaR);
+    }
+
+    #[test]
+    fn decodes_minpos_maxpos() {
+        // minpos = word 1: regime all-zeros then 1 -> k = -(n-2)
+        let d = decode(1, P8_FMT);
+        assert_eq!(d.scale, -6);
+        assert_eq!(d.fbits, 0);
+        // maxpos = 0111...1: regime all ones -> k = n-2
+        let d = decode(0x7F, P8_FMT);
+        assert_eq!(d.scale, 6);
+        let d = decode(0x7FFF_FFFF, P32_FMT);
+        assert_eq!(d.scale, 120);
+    }
+
+    #[test]
+    fn decodes_negative_two() {
+        // +2.0 = 0 110 0000 = 0x60; -2.0 is its two's complement 0xA0.
+        let d = decode(0xA0, P8_FMT);
+        assert!(d.sign);
+        assert_eq!(d.scale, 1);
+        assert_eq!(d.frac, 0);
+        // and 0xB0 is -(0x50) = -1.5
+        let d = decode(0xB0, P8_FMT);
+        assert!(d.sign);
+        assert_eq!(d.scale, 0);
+        assert_eq!(d.frac, 0b10000);
+    }
+
+    #[test]
+    fn decodes_fraction() {
+        // P8 1.5 = 0 10 ... no: 1.5 = 2^0 * 1.5 -> 0 1 0 1 1000? P(8,0):
+        // sign 0, regime 10 (k=0), frac 1000 0 -> word 0 10 10000? n=8:
+        // bits: s r r f f f f f? regime "10" is 2 bits, so 5 frac bits:
+        // 0 10 10000 = 0x50? That's 2.0's encoding above... careful:
+        // +2.0: k=1 -> regime "110", 4 frac bits: 0 110 0000 = 0x60.
+        let d = decode(0x60, P8_FMT);
+        assert_eq!(d.scale, 1);
+        // 1.5: 0 10 11000? no — k=0 regime "10", frac bits 5: frac=10000
+        // word = 0_10_10000 = 0x50
+        let d = decode(0x50, P8_FMT);
+        assert_eq!(d.scale, 0);
+        assert_eq!(d.fbits, 5);
+        assert_eq!(d.frac, 0b10000);
+        assert_eq!(d.significand(), 0b110000);
+    }
+
+    #[test]
+    fn exponent_truncation_reads_zero() {
+        // P(16,1) near-maxpos words where the regime leaves < es bits.
+        // word 0x7FFE: body = 111 1111 1111 1110 (15 bits), run of 14
+        // ones -> k = 13? No: t = ~body has MSB at j=0, run = 14-0 = 14,
+        // k = 13, terminator at j=0, no exponent bits -> exp = 0.
+        let d = decode(0x7FFE, P16_FMT);
+        assert_eq!(d.regime, 13);
+        assert_eq!(d.exp, 0);
+        assert_eq!(d.scale, 26);
+        assert_eq!(d.fbits, 0);
+    }
+
+    #[test]
+    fn significand_has_implicit_one() {
+        let d = decode(0x48, P8_FMT); // 0 10 01000 -> 1.25
+        assert_eq!(d.scale, 0);
+        assert_eq!(d.significand(), 0b101000);
+    }
+}

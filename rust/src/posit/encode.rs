@@ -1,0 +1,209 @@
+//! Posit encoding: the software mirror of SPADE Stages 4-5
+//! ("Reconstruction & Normalization" + "Rounding & Packing").
+//!
+//! The contract is *hardware* round-to-nearest-even: assemble
+//! `[regime | exponent | fraction]` at full precision, then round the
+//! packed encoding with guard/round/sticky — exactly what the RTL (and
+//! SoftPosit) do. Because the posit word encoding is monotone in value,
+//! a carry out of the fraction rolls into exponent/regime and produces
+//! the correct neighbouring posit automatically, including regime
+//! lengthening.
+//!
+//! Note: in the tapered extremes (where the cut bits include exponent or
+//! regime bits) this differs from naive round-to-nearest in *value*
+//! space — the guard bit there has geometric rather than arithmetic
+//! meaning. This is intentional and matches SoftPosit; see DESIGN.md.
+
+use super::PositFormat;
+
+/// Unpacked value heading into the encoder.
+///
+/// Value = (-1)^sign * 2^scale * (1 + frac / 2^fbits); `sticky` carries
+/// "bits were lost below frac" from earlier pipeline stages so rounding
+/// stays exact end-to-end.
+#[derive(Debug, Clone, Copy)]
+pub struct Parts {
+    /// Sign of the value.
+    pub sign: bool,
+    /// Power-of-two scale of the leading 1.
+    pub scale: i32,
+    /// Fraction field below the implicit leading 1 (`fbits` wide).
+    pub frac: u64,
+    /// Width of `frac` in bits (0..=63).
+    pub fbits: u32,
+    /// True if nonzero bits were discarded below `frac`.
+    pub sticky: bool,
+}
+
+/// Encode `Parts` into the nearest posit word (round-to-nearest-even on
+/// the packed encoding; clamps to maxpos / minpos per the standard —
+/// never overflows to NaR, never underflows to zero).
+pub fn encode_from_parts(p: Parts, fmt: PositFormat) -> u64 {
+    let n = fmt.nbits as i32;
+    let es = fmt.es as i32;
+    let maxpos = fmt.maxpos_word();
+
+    let k = p.scale >> es; // floor division
+    let ex = (p.scale - (k << es)) as u64; // in [0, 2^es)
+
+    // Regime saturation: |scale| beyond the representable regime range
+    // clamps to maxpos / minpos (words maxpos and 1).
+    if k >= n - 2 {
+        let w = maxpos;
+        return if p.sign { fmt.negate(w) } else { w };
+    }
+    if k <= -(n - 1) {
+        let w = 1;
+        return if p.sign { fmt.negate(w) } else { w };
+    }
+
+    let rlen = if k >= 0 { k + 2 } else { 1 - k } as u32;
+    let regime_val: u128 = if k >= 0 {
+        ((1u128 << (k + 1)) - 1) << 1 // k+1 ones then a zero
+    } else {
+        1 // zeros then a one
+    };
+
+    // Normalize the fraction to a fixed working width F so the assembled
+    // integer always has >= 1 cut bit. F = 2n covers every format
+    // (regime <= n-1, es <= 3, F = 2n: total < 3n + 3 <= 99 < 128).
+    let f_width = (2 * n) as u32;
+    let (frac_w, extra_sticky) = if p.fbits <= f_width {
+        ((p.frac as u128) << (f_width - p.fbits), false)
+    } else {
+        let drop = p.fbits - f_width;
+        (
+            (p.frac >> drop) as u128,
+            (p.frac & ((1u64 << drop) - 1)) != 0,
+        )
+    };
+    let sticky_in = p.sticky || extra_sticky;
+
+    let x: u128 = (regime_val << (es as u32 + f_width))
+        | ((ex as u128) << f_width)
+        | frac_w;
+
+    // Round the packed encoding to n-1 bits: guard/round/sticky RNE.
+    let shift = rlen + es as u32 + f_width - (n as u32 - 1);
+    let mut q = (x >> shift) as u64;
+    let round_bit = ((x >> (shift - 1)) & 1) as u64;
+    let sticky =
+        (x & ((1u128 << (shift - 1)) - 1)) != 0 || sticky_in;
+    q += round_bit & (sticky as u64 | (q & 1));
+
+    // Clamp per standard: nonzero inputs never round to 0 or NaR.
+    let q = q.clamp(1, maxpos);
+    if p.sign { fmt.negate(q) } else { q }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{decode, PositClass, P16_FMT, P32_FMT, P8_FMT};
+    use super::*;
+
+    fn parts(sign: bool, scale: i32, frac: u64, fbits: u32) -> Parts {
+        Parts { sign, scale, frac, fbits, sticky: false }
+    }
+
+    #[test]
+    fn encodes_one_and_two() {
+        assert_eq!(encode_from_parts(parts(false, 0, 0, 0), P8_FMT), 0x40);
+        assert_eq!(encode_from_parts(parts(false, 1, 0, 0), P8_FMT), 0x60);
+        assert_eq!(encode_from_parts(parts(true, 0, 0, 0), P8_FMT), 0xC0);
+        assert_eq!(encode_from_parts(parts(false, 0, 0, 0), P32_FMT),
+                   0x4000_0000);
+    }
+
+    #[test]
+    fn round_trips_all_p8_words() {
+        for w in 0u64..256 {
+            let d = decode(w, P8_FMT);
+            if d.class != PositClass::Normal {
+                continue;
+            }
+            let e = encode_from_parts(
+                Parts { sign: d.sign, scale: d.scale, frac: d.frac,
+                        fbits: d.fbits, sticky: false },
+                P8_FMT,
+            );
+            assert_eq!(e, w, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn round_trips_all_p16_words() {
+        for w in 0u64..65536 {
+            let d = decode(w, P16_FMT);
+            if d.class != PositClass::Normal {
+                continue;
+            }
+            let e = encode_from_parts(
+                Parts { sign: d.sign, scale: d.scale, frac: d.frac,
+                        fbits: d.fbits, sticky: false },
+                P16_FMT,
+            );
+            assert_eq!(e, w, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn saturates_not_overflows() {
+        // scale far beyond max -> maxpos, not NaR
+        let w = encode_from_parts(parts(false, 1000, 0, 0), P8_FMT);
+        assert_eq!(w, 0x7F);
+        let w = encode_from_parts(parts(true, 1000, 0, 0), P8_FMT);
+        assert_eq!(w, P8_FMT.negate(0x7F));
+        // scale far below min -> minpos, not zero
+        let w = encode_from_parts(parts(false, -1000, 0, 0), P8_FMT);
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // P(8,0), between 1.0 (0x40, frac 00000) and 1.03125 (0x41):
+        // tie at frac = 0.5 ulp -> round to even word 0x40.
+        let w = encode_from_parts(parts(false, 0, 1, 6), P8_FMT);
+        assert_eq!(w, 0x40);
+        // between 0x41 and 0x42, tie -> 0x42 (even)
+        let w = encode_from_parts(parts(false, 0, 3, 6), P8_FMT);
+        assert_eq!(w, 0x42);
+        // sticky breaks the tie upward
+        let w = encode_from_parts(
+            Parts { sign: false, scale: 0, frac: 1, fbits: 6, sticky: true },
+            P8_FMT,
+        );
+        assert_eq!(w, 0x41);
+    }
+
+    #[test]
+    fn carry_can_lengthen_regime() {
+        // Just below 2.0: 1 + 63.9/64 with sticky -> rounds to 2.0 whose
+        // regime is one bit longer. P(8,0): frac=0b111111 (6 bits) + round
+        let w = encode_from_parts(
+            Parts { sign: false, scale: 0, frac: 0x3F, fbits: 6,
+                    sticky: true },
+            P8_FMT,
+        );
+        assert_eq!(w, 0x60); // 2.0
+    }
+
+    #[test]
+    fn wide_fraction_sticky_collapses() {
+        // 40-bit fraction, nonzero only in the very low bits: must still
+        // influence rounding via sticky at every format.
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let exact = encode_from_parts(
+                Parts { sign: false, scale: 0, frac: 1 << 39, fbits: 40,
+                        sticky: false },
+                fmt,
+            );
+            // halfway + tiny -> rounds up (away from even)
+            let nudged = encode_from_parts(
+                Parts { sign: false, scale: 0, frac: (1 << 39) | 1,
+                        fbits: 40, sticky: false },
+                fmt,
+            );
+            assert!(nudged >= exact);
+        }
+    }
+}

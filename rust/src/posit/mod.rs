@@ -1,0 +1,126 @@
+//! From-scratch posit arithmetic — the SoftPosit-equivalent golden model.
+//!
+//! The paper (§III) validates its RTL against the SoftPosit library with
+//! exact agreement over randomized vectors; this module plays that role
+//! here. It implements generic posit(n, es) for 2 <= n <= 32:
+//!
+//! * [`decode`]/[`encode_from_parts`] — word <-> (sign, scale, fraction) fields with
+//!   the *hardware* rounding semantics: round-to-nearest-even applied to
+//!   the packed encoding via guard/round/sticky (exactly the paper's
+//!   Stage 5), which is also what SoftPosit implements. Note this differs
+//!   from naive value-space nearest in the tapered extremes — see
+//!   `DESIGN.md` and `encode.rs` docs.
+//! * ops ([`p_mul`], [`p_add`], [`p_div`]...) — exact multiply / add / subtract / divide built on integer
+//!   field arithmetic (never through f64), plus comparisons.
+//! * [`Quire`] — the exact wide fixed-point accumulator (n²/2 bits per
+//!   the posit standard: 32/128/512 for P8/P16/P32) used by Stage 3 for
+//!   error-free accumulation.
+//! * typed wrappers — ergonomic `P8`/`P16`/`P32` newtypes with operator
+//!   overloads.
+//!
+//! Independence: the algorithmic twin lives in
+//! `python/compile/kernels/posit.py`; `cargo test golden_vs_python`
+//! cross-checks the two bit-for-bit (exhaustive for P8).
+
+mod convert;
+mod decode;
+mod encode;
+mod ops;
+mod quire;
+mod types;
+
+pub use convert::{from_f64, to_f64};
+pub use decode::{decode, Decoded, PositClass};
+pub use encode::{encode_from_parts, Parts};
+pub use ops::{p_add, p_cmp, p_div, p_mul, p_neg, p_sub};
+pub use quire::Quire;
+pub use types::{P16, P32, P8};
+
+/// A posit format: word width and exponent-field width.
+///
+/// SPADE's 2-bit MODE signal selects one of [`P8_FMT`], [`P16_FMT`],
+/// [`P32_FMT`] (standard posits: es = log2(n)/8-ish per the 2019 drafts
+/// the paper follows: es = 0, 1, 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PositFormat {
+    /// Total word width in bits (2..=32).
+    pub nbits: u32,
+    /// Exponent field width in bits (0..=3 supported).
+    pub es: u32,
+}
+
+/// Posit(8, 0) — MODE 0, four SIMD lanes.
+pub const P8_FMT: PositFormat = PositFormat { nbits: 8, es: 0 };
+/// Posit(16, 1) — MODE 1, two SIMD lanes.
+pub const P16_FMT: PositFormat = PositFormat { nbits: 16, es: 1 };
+/// Posit(32, 2) — MODE 2, one fused lane.
+pub const P32_FMT: PositFormat = PositFormat { nbits: 32, es: 2 };
+
+impl PositFormat {
+    /// Bit mask of the word (`2^nbits - 1`).
+    #[inline]
+    pub const fn mask(&self) -> u64 {
+        if self.nbits >= 64 { u64::MAX } else { (1u64 << self.nbits) - 1 }
+    }
+
+    /// NaR encoding: `1 0...0`.
+    #[inline]
+    pub const fn nar(&self) -> u64 {
+        1u64 << (self.nbits - 1)
+    }
+
+    /// Largest positive word (`0 1...1`).
+    #[inline]
+    pub const fn maxpos_word(&self) -> u64 {
+        (1u64 << (self.nbits - 1)) - 1
+    }
+
+    /// Exponent scaling `2^es`.
+    #[inline]
+    pub const fn useed_pow(&self) -> i32 {
+        1 << self.es
+    }
+
+    /// Maximum scale: `(n-2) * 2^es` (maxpos = 2^max_scale).
+    #[inline]
+    pub const fn max_scale(&self) -> i32 {
+        (self.nbits as i32 - 2) * (1 << self.es)
+    }
+
+    /// Quire width in bits per the posit standard (n²/2).
+    #[inline]
+    pub const fn quire_bits(&self) -> u32 {
+        self.nbits * self.nbits / 2
+    }
+
+    /// Two's-complement negation of a word in this format.
+    #[inline]
+    pub const fn negate(&self, word: u64) -> u64 {
+        word.wrapping_neg() & self.mask()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_constants() {
+        assert_eq!(P8_FMT.mask(), 0xFF);
+        assert_eq!(P8_FMT.nar(), 0x80);
+        assert_eq!(P8_FMT.maxpos_word(), 0x7F);
+        assert_eq!(P8_FMT.max_scale(), 6);
+        assert_eq!(P16_FMT.max_scale(), 28);
+        assert_eq!(P32_FMT.max_scale(), 120);
+        assert_eq!(P8_FMT.quire_bits(), 32);
+        assert_eq!(P16_FMT.quire_bits(), 128);
+        assert_eq!(P32_FMT.quire_bits(), 512);
+    }
+
+    #[test]
+    fn negate_wraps_in_width() {
+        assert_eq!(P8_FMT.negate(0x01), 0xFF);
+        assert_eq!(P8_FMT.negate(0x80), 0x80); // NaR is its own negation
+        assert_eq!(P16_FMT.negate(0x0001), 0xFFFF);
+    }
+}

@@ -1,0 +1,407 @@
+//! The quire: exact wide fixed-point accumulator (SPADE Stage 3).
+//!
+//! Per the posit standard the quire for posit(n, es) is an n²/2-bit
+//! two's-complement fixed-point register able to accumulate products of
+//! any two posits *exactly* — "error-free accumulation without
+//! intermediate rounding" (§II-B Stage 3). Widths: 32 (P8), 128 (P16),
+//! 512 (P32); layout: 1 sign bit, carry-guard bits, `2*max_scale + 1`
+//! integer bits, `2*max_scale` fraction bits.
+//!
+//! Implemented as a little-endian `[u64; 8]` two's-complement bignum
+//! (the P32 quire needs 512 bits; smaller formats use a prefix). The
+//! hot-path entry point is [`Quire::mac`], used by both the golden model
+//! and the bit-accurate engine's accumulation stage.
+
+use super::{decode, encode_from_parts, Parts, PositClass, PositFormat};
+
+const LIMBS: usize = 8;
+
+/// Exact posit accumulator. See module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Quire {
+    /// Two's-complement value, little-endian limbs. The binary point sits
+    /// `frac_offset` bits above bit 0.
+    limbs: [u64; LIMBS],
+    fmt: PositFormat,
+    /// Bit position of 2^0 within the register.
+    frac_offset: u32,
+    /// Limbs actually used by this format (1 for P8, 2 for P16, 8 for
+    /// P32) — keeps the hot loops off the unused tail.
+    nlimbs: usize,
+    /// Set when a NaR entered the accumulation (absorbing).
+    nar: bool,
+}
+
+impl Quire {
+    /// Fresh zero quire for a format.
+    pub fn new(fmt: PositFormat) -> Self {
+        // fraction field must hold scales down to -2*max_scale; limb
+        // count covers product msb (4*max_scale + ~60 bits) + guard.
+        let frac_offset = (2 * fmt.max_scale()) as u32;
+        let bits = 4 * fmt.max_scale() as usize + 64;
+        let nlimbs = bits.div_ceil(64).min(LIMBS);
+        Self { limbs: [0; LIMBS], fmt, frac_offset, nlimbs, nar: false }
+    }
+
+    /// Reset to zero (cheaper than re-constructing in the PE hot loop).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.limbs[..self.nlimbs].fill(0);
+        self.nar = false;
+    }
+
+    /// True if a NaR has poisoned this accumulation.
+    #[inline]
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    /// Fused multiply-accumulate of two posit words: `self += a * b`,
+    /// exactly. This is the Stage 2 -> Stage 3 hand-off: the full-width
+    /// mantissa product is aligned by its scale and added with no
+    /// rounding of any kind.
+    pub fn mac(&mut self, a: u64, b: u64) {
+        let da = decode(a, self.fmt);
+        let db = decode(b, self.fmt);
+        match (da.class, db.class) {
+            (PositClass::NaR, _) | (_, PositClass::NaR) => self.nar = true,
+            (PositClass::Zero, _) | (_, PositClass::Zero) => {}
+            _ => {
+                let neg = da.sign ^ db.sign;
+                let prod =
+                    da.significand() as u128 * db.significand() as u128;
+                // prod = mantissa product with (fa + fb) fraction bits;
+                // true value = prod * 2^(scale_a + scale_b - fa - fb).
+                let weight = da.scale + db.scale
+                    - (da.fbits + db.fbits) as i32;
+                let pos = weight + self.frac_offset as i32;
+                debug_assert!(pos >= 0, "quire fraction field underflow");
+                self.add_shifted(prod, pos as u32, neg);
+            }
+        }
+    }
+
+    /// Accumulate a raw mantissa product: `self += (-1)^neg * prod *
+    /// 2^weight`. This is the Stage 2 -> Stage 3 interface the SPADE
+    /// engine uses: the Booth array hands over the full-width product and
+    /// the combined scale, and the quire aligns and adds it exactly.
+    pub fn mac_raw(&mut self, prod: u128, weight: i32, neg: bool) {
+        if prod == 0 {
+            return;
+        }
+        let pos = weight + self.frac_offset as i32;
+        debug_assert!(pos >= 0, "quire fraction field underflow");
+        self.add_shifted(prod, pos as u32, neg);
+    }
+
+    /// Mark the accumulation as poisoned by NaR (engine Stage 1 raises
+    /// this when an operand decodes to NaR).
+    #[inline]
+    pub fn set_nar(&mut self) {
+        self.nar = true;
+    }
+
+    /// Accumulate a single posit word (bias add in the dense layers).
+    pub fn add_posit(&mut self, a: u64) {
+        let d = decode(a, self.fmt);
+        match d.class {
+            PositClass::NaR => self.nar = true,
+            PositClass::Zero => {}
+            PositClass::Normal => {
+                let pos = d.scale - d.fbits as i32 + self.frac_offset as i32;
+                debug_assert!(pos >= 0);
+                self.add_shifted(d.significand() as u128, pos as u32,
+                                 d.sign);
+            }
+        }
+    }
+
+    /// Add or subtract `value << shift` into the two's-complement bignum.
+    fn add_shifted(&mut self, value: u128, shift: u32, negative: bool) {
+        let nl = self.nlimbs;
+        // Split the shifted 128-bit value into limb-aligned chunks.
+        let limb = (shift / 64) as usize;
+        let off = shift % 64;
+        let lo = (value << off) as u64;
+        let (mid, hi) = if off == 0 {
+            ((value >> 64) as u64, 0u64)
+        } else {
+            ((value >> (64 - off)) as u64, (value >> (128 - off)) as u64)
+        };
+        let chunks = [lo, mid, hi];
+
+        if !negative {
+            let mut carry = 0u64;
+            for (i, &c) in chunks.iter().enumerate() {
+                if limb + i >= nl {
+                    break;
+                }
+                let (s1, o1) = self.limbs[limb + i].overflowing_add(c);
+                let (s2, o2) = s1.overflowing_add(carry);
+                self.limbs[limb + i] = s2;
+                carry = (o1 as u64) + (o2 as u64);
+            }
+            let mut i = limb + 3;
+            while carry != 0 && i < nl {
+                let (s, o) = self.limbs[i].overflowing_add(carry);
+                self.limbs[i] = s;
+                carry = o as u64;
+                i += 1;
+            }
+        } else {
+            let mut borrow = 0u64;
+            for (i, &c) in chunks.iter().enumerate() {
+                if limb + i >= nl {
+                    break;
+                }
+                let (s1, o1) = self.limbs[limb + i].overflowing_sub(c);
+                let (s2, o2) = s1.overflowing_sub(borrow);
+                self.limbs[limb + i] = s2;
+                borrow = (o1 as u64) + (o2 as u64);
+            }
+            let mut i = limb + 3;
+            while borrow != 0 && i < nl {
+                let (s, o) = self.limbs[i].overflowing_sub(borrow);
+                self.limbs[i] = s;
+                borrow = o as u64;
+                i += 1;
+            }
+        }
+    }
+
+    /// True if the accumulated value is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.limbs[..self.nlimbs].iter().all(|&l| l == 0)
+    }
+
+    /// Round the accumulated value back to a posit word — SPADE Stage 4
+    /// (SIMD-LOD renormalization, regime/exponent recomputation) +
+    /// Stage 5 (RNE packing) in one step.
+    pub fn to_posit(&self) -> u64 {
+        if self.nar {
+            return self.fmt.nar();
+        }
+        let nl = self.nlimbs;
+        let negative = self.limbs[nl - 1] >> 63 == 1;
+        // magnitude = |value| (two's complement negate if negative)
+        let mut mag = self.limbs;
+        if negative {
+            let mut carry = 1u64;
+            for l in mag[..nl].iter_mut() {
+                let (x, o1) = (!*l).overflowing_add(carry);
+                *l = x;
+                carry = o1 as u64;
+            }
+        }
+        // Leading-one detection across limbs (the SIMD LOD, word level).
+        let mut top_limb = None;
+        for i in (0..nl).rev() {
+            if mag[i] != 0 {
+                top_limb = Some(i);
+                break;
+            }
+        }
+        let Some(tl) = top_limb else { return 0 };
+        let top_bit = 63 - mag[tl].leading_zeros();
+        let msb = tl as u32 * 64 + top_bit; // global bit index
+        let scale = msb as i32 - self.frac_offset as i32;
+
+        // Extract up to 63 fraction bits below the leading 1 + sticky.
+        let mut frac: u64 = 0;
+        let mut fbits: u32 = 0;
+        let mut sticky = false;
+        // Walk bits from msb-1 downwards, limb-wise.
+        let take = 63u32.min(msb);
+        for k in 0..take {
+            let bit_idx = msb - 1 - k;
+            let l = (bit_idx / 64) as usize;
+            let b = (mag[l] >> (bit_idx % 64)) & 1;
+            frac = (frac << 1) | b;
+            fbits += 1;
+        }
+        if msb > take {
+            // any set bit below the extracted window -> sticky
+            let cut = msb - take; // number of remaining low bits
+            for (i, &l) in mag.iter().enumerate() {
+                let base = i as u32 * 64;
+                if base >= cut {
+                    break;
+                }
+                let width = (cut - base).min(64);
+                let m = if width == 64 { u64::MAX } else { (1 << width) - 1 };
+                if l & m != 0 {
+                    sticky = true;
+                    break;
+                }
+            }
+        }
+
+        encode_from_parts(
+            Parts { sign: negative, scale, frac, fbits, sticky }, self.fmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_f64, to_f64, P16_FMT, P32_FMT, P8_FMT};
+    use super::*;
+    use crate::util::{Prop, SplitMix64};
+
+    #[test]
+    fn single_mac_equals_mul() {
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let mut rng = SplitMix64::new(5);
+            for _ in 0..20_000 {
+                let a = rng.next_u64() & fmt.mask();
+                let b = rng.next_u64() & fmt.mask();
+                if a == fmt.nar() || b == fmt.nar() {
+                    continue;
+                }
+                let mut q = Quire::new(fmt);
+                q.mac(a, b);
+                assert_eq!(q.to_posit(), super::super::p_mul(a, b, fmt),
+                           "{fmt:?} {a:#x}*{b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_products_fit() {
+        // maxpos * maxpos and minpos * minpos must land inside the quire.
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let maxpos = fmt.maxpos_word();
+            let minpos = 1u64;
+            let mut q = Quire::new(fmt);
+            q.mac(maxpos, maxpos);
+            assert_eq!(q.to_posit(), maxpos); // clamps to maxpos
+            let mut q = Quire::new(fmt);
+            q.mac(minpos, minpos);
+            assert_eq!(q.to_posit(), 1); // clamps to minpos
+        }
+    }
+
+    #[test]
+    fn exact_cancellation() {
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let a = from_f64(1.375, fmt);
+            let b = from_f64(2.5, fmt);
+            let mut q = Quire::new(fmt);
+            q.mac(a, b);
+            q.mac(fmt.negate(a), b);
+            assert!(q.is_zero());
+            assert_eq!(q.to_posit(), 0);
+        }
+    }
+
+    #[test]
+    fn dot_product_matches_f64_small() {
+        // For P8/P16 all products and partial sums are exactly
+        // representable in f64 for short vectors in a modest range, so an
+        // f64 dot product followed by one rounding is the oracle.
+        let mut rng = SplitMix64::new(77);
+        for fmt in [P8_FMT, P16_FMT] {
+            for _ in 0..2000 {
+                let mut q = Quire::new(fmt);
+                let mut acc = 0.0f64;
+                for _ in 0..32 {
+                    let a = from_f64(rng.wide(-4, 4), fmt);
+                    let b = from_f64(rng.wide(-4, 4), fmt);
+                    q.mac(a, b);
+                    acc += to_f64(a, fmt) * to_f64(b, fmt);
+                }
+                assert_eq!(q.to_posit(), from_f64(acc, fmt), "{fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn quire_is_order_invariant() {
+        // Exact accumulation must not depend on summation order — the
+        // property floating-point accumulators lack.
+        Prop::new("quire order invariance", 500).run(|rng| {
+            let fmt = P16_FMT;
+            let pairs: Vec<(u64, u64)> = (0..24)
+                .map(|_| (from_f64(rng.wide(-10, 10), fmt),
+                          from_f64(rng.wide(-10, 10), fmt)))
+                .collect();
+            let mut fwd = Quire::new(fmt);
+            for &(a, b) in &pairs {
+                fwd.mac(a, b);
+            }
+            let mut rev = Quire::new(fmt);
+            for &(a, b) in pairs.iter().rev() {
+                rev.mac(a, b);
+            }
+            if fwd.to_posit() != rev.to_posit() {
+                return Err("order changed the quire result".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quire_beats_sequential_rounding() {
+        // The motivating example: accumulating many small terms into a
+        // big one. Sequential posit adds round every step and lose them;
+        // the quire keeps all of them.
+        let fmt = P16_FMT;
+        let big = from_f64(256.0, fmt);
+        let tiny = from_f64(0.0078125, fmt); // 2^-7
+        let one = from_f64(1.0, fmt);
+
+        let mut q = Quire::new(fmt);
+        q.mac(big, one);
+        for _ in 0..512 {
+            q.mac(tiny, one);
+        }
+        let exact = 256.0 + 512.0 * 0.0078125; // 260
+
+        let mut seq = big;
+        for _ in 0..512 {
+            seq = super::super::p_add(seq, tiny, fmt);
+        }
+        let quire_err = (to_f64(q.to_posit(), fmt) - exact).abs();
+        let seq_err = (to_f64(seq, fmt) - exact).abs();
+        assert!(quire_err <= seq_err);
+        assert_eq!(to_f64(q.to_posit(), fmt), 260.0);
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let fmt = P8_FMT;
+        let mut q = Quire::new(fmt);
+        q.mac(from_f64(2.0, fmt), fmt.nar());
+        q.mac(from_f64(2.0, fmt), from_f64(2.0, fmt));
+        assert!(q.is_nar());
+        assert_eq!(q.to_posit(), fmt.nar());
+    }
+
+    #[test]
+    fn add_posit_bias() {
+        let fmt = P16_FMT;
+        let mut q = Quire::new(fmt);
+        q.mac(from_f64(3.0, fmt), from_f64(4.0, fmt));
+        q.add_posit(from_f64(0.5, fmt));
+        assert_eq!(to_f64(q.to_posit(), fmt), 12.5);
+        q.add_posit(fmt.negate(from_f64(12.5, fmt)));
+        assert!(q.is_zero());
+    }
+
+    #[test]
+    fn long_p32_accumulation_stays_exact() {
+        // 10k alternating near-cancelling products — the quire must track
+        // the residual exactly where f64 cannot.
+        let fmt = P32_FMT;
+        let a = from_f64(1.0 + 2f64.powi(-20), fmt);
+        let na = fmt.negate(a);
+        let one = from_f64(1.0, fmt);
+        let mut q = Quire::new(fmt);
+        for _ in 0..10_000 {
+            q.mac(a, one);
+            q.mac(na, one);
+        }
+        assert!(q.is_zero());
+        q.mac(a, one);
+        assert_eq!(q.to_posit(), a);
+    }
+}

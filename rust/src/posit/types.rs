@@ -1,0 +1,196 @@
+//! Ergonomic typed posits: `P8`, `P16`, `P32` newtypes with operator
+//! overloads over the exact word-level arithmetic in [`super::ops`].
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+use super::{from_f64, p_add, p_cmp, p_div, p_mul, p_neg, p_sub, to_f64,
+            PositFormat, P16_FMT, P32_FMT, P8_FMT};
+
+macro_rules! posit_type {
+    ($name:ident, $repr:ty, $fmt:expr, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+        pub struct $name($repr);
+
+        impl $name {
+            /// The format of this type.
+            pub const FMT: PositFormat = $fmt;
+            /// Zero.
+            pub const ZERO: Self = Self(0);
+            /// Not-a-Real.
+            pub const NAR: Self = Self(1 << ($fmt.nbits - 1));
+
+            /// Wrap a raw word (low bits used).
+            #[inline]
+            pub fn from_bits(w: $repr) -> Self {
+                Self(w)
+            }
+
+            /// Raw word.
+            #[inline]
+            pub fn word(self) -> $repr {
+                self.0
+            }
+
+            /// Round an f64 to this posit format.
+            #[inline]
+            pub fn from_f64(v: f64) -> Self {
+                Self(from_f64(v, $fmt) as $repr)
+            }
+
+            /// Round an f32 to this posit format.
+            #[inline]
+            pub fn from_f32(v: f32) -> Self {
+                Self::from_f64(v as f64)
+            }
+
+            /// Exact decode to f64 (NaR -> NaN).
+            #[inline]
+            pub fn to_f64(self) -> f64 {
+                to_f64(self.0 as u64, $fmt)
+            }
+
+            /// Decode to f32 (may round — P32 carries up to 27 fraction
+            /// bits, f32 only 23).
+            #[inline]
+            pub fn to_f32(self) -> f32 {
+                self.to_f64() as f32
+            }
+
+            /// True if this is the NaR exception value.
+            #[inline]
+            pub fn is_nar(self) -> bool {
+                self == Self::NAR
+            }
+        }
+
+        impl Neg for $name {
+            type Output = Self;
+            #[inline]
+            fn neg(self) -> Self {
+                Self(p_neg(self.0 as u64, $fmt) as $repr)
+            }
+        }
+
+        impl Add for $name {
+            type Output = Self;
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                Self(p_add(self.0 as u64, rhs.0 as u64, $fmt) as $repr)
+            }
+        }
+
+        impl Sub for $name {
+            type Output = Self;
+            #[inline]
+            fn sub(self, rhs: Self) -> Self {
+                Self(p_sub(self.0 as u64, rhs.0 as u64, $fmt) as $repr)
+            }
+        }
+
+        impl Mul for $name {
+            type Output = Self;
+            #[inline]
+            fn mul(self, rhs: Self) -> Self {
+                Self(p_mul(self.0 as u64, rhs.0 as u64, $fmt) as $repr)
+            }
+        }
+
+        impl Div for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, rhs: Self) -> Self {
+                Self(p_div(self.0 as u64, rhs.0 as u64, $fmt) as $repr)
+            }
+        }
+
+        impl PartialOrd for $name {
+            #[inline]
+            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+                Some(p_cmp(self.0 as u64, other.0 as u64, $fmt))
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}", self.to_f64())
+            }
+        }
+
+        impl From<f64> for $name {
+            fn from(v: f64) -> Self {
+                Self::from_f64(v)
+            }
+        }
+    };
+}
+
+posit_type!(P8, u8, P8_FMT, "Posit(8, 0) — SPADE MODE 0 (4 SIMD lanes).");
+posit_type!(P16, u16, P16_FMT, "Posit(16, 1) — SPADE MODE 1 (2 lanes).");
+posit_type!(P32, u32, P32_FMT, "Posit(32, 2) — SPADE MODE 2 (1 lane).");
+
+impl From<P8> for P16 {
+    /// Widening is exact: every P8 value is representable in P16.
+    fn from(v: P8) -> Self {
+        P16::from_f64(v.to_f64())
+    }
+}
+
+impl From<P16> for P32 {
+    /// Widening is exact: every P16 value is representable in P32.
+    fn from(v: P16) -> Self {
+        P32::from_f64(v.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_arithmetic() {
+        let a = P8::from_f64(1.5);
+        let b = P8::from_f64(-2.25);
+        assert_eq!((a * b).to_f64(), -3.375);
+        assert_eq!((a + a).to_f64(), 3.0);
+        assert_eq!((a - a).to_f64(), 0.0);
+        assert_eq!((b / b).to_f64(), 1.0);
+        assert_eq!((-a).to_f64(), -1.5);
+    }
+
+    #[test]
+    fn widening_is_exact() {
+        for w in 0u16..=255 {
+            let p = P8::from_bits(w as u8);
+            if p.is_nar() {
+                continue;
+            }
+            let wide: P16 = p.into();
+            assert_eq!(wide.to_f64(), p.to_f64());
+            let wider: P32 = wide.into();
+            assert_eq!(wider.to_f64(), p.to_f64());
+        }
+    }
+
+    #[test]
+    fn ordering() {
+        let xs = [-4.0, -0.5, 0.0, 0.25, 1.0, 17.0];
+        for w in xs.windows(2) {
+            assert!(P16::from_f64(w[0]) < P16::from_f64(w[1]));
+        }
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(P8::from_f64(1.5).to_string(), "1.5");
+    }
+
+    #[test]
+    fn nar_constants() {
+        assert!(P8::NAR.is_nar());
+        assert!(P8::NAR.to_f64().is_nan());
+        assert_eq!(P32::NAR.word(), 0x8000_0000);
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts.
+//!
+//! The build-time JAX/Pallas layers lower every (model, precision,
+//! batch) variant to HLO *text* (`python/compile/aot.py`); this module
+//! compiles them once on the PJRT CPU client (`xla` crate) and serves
+//! them from the L3 hot path — python never runs at inference time.
+//!
+//! Artifact calling convention (see `aot.py`): arguments are the model
+//! parameters in sorted-name order followed by the input batch; the
+//! result is a 1-tuple (jax lowers with `return_tuple=True`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::Tensor;
+use crate::util::Json;
+
+/// Signature of one artifact (from `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    /// Parameter name -> shape, in the exported order.
+    pub param_order: Vec<(String, Vec<usize>)>,
+    /// Input shape (batch leading for models).
+    pub input: Vec<usize>,
+    /// Output shape.
+    pub output: Vec<usize>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    /// Artifact file stem (e.g. `mlp_p16_b32`).
+    pub name: String,
+    sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+    /// Pre-converted parameter literals (weights bound once).
+    params: Vec<xla::Literal>,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({}, in={:?}, out={:?})", self.name,
+               self.sig.input, self.sig.output)
+    }
+}
+
+/// The PJRT CPU runtime: client + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: BTreeMap<String, ArtifactSig>,
+    dir: PathBuf,
+    /// Compile count (for metrics).
+    pub compiles: Mutex<u32>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Runtime(platform={}, artifacts={})",
+               self.client.platform_name(), self.manifest.len())
+    }
+}
+
+fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl Runtime {
+    /// Start a CPU PJRT client over the artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(crate::artifacts_dir())
+    }
+
+    /// Start over an explicit artifact directory.
+    pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!(e))?;
+        let mut manifest = BTreeMap::new();
+        for (file, sig) in j.as_obj().context("manifest object")? {
+            let order: Vec<String> = sig
+                .get("param_order")
+                .and_then(Json::as_arr)
+                .context("param_order")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+            let params = sig.get("params").and_then(Json::as_obj)
+                .context("params")?;
+            let dims = |v: &Json| -> Vec<usize> {
+                v.as_arr()
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            };
+            let param_order = order
+                .iter()
+                .map(|k| (k.clone(), dims(&params[k])))
+                .collect();
+            manifest.insert(
+                file.trim_end_matches(".hlo.txt").to_string(),
+                ArtifactSig {
+                    param_order,
+                    input: dims(sig.get("input").context("input")?),
+                    output: dims(sig.get("output").context("output")?),
+                },
+            );
+        }
+        Ok(Runtime { client, manifest, dir, compiles: Mutex::new(0) })
+    }
+
+    /// Names of all available artifacts.
+    pub fn artifacts(&self) -> Vec<&str> {
+        self.manifest.keys().map(String::as_str).collect()
+    }
+
+    /// Compile an artifact and bind its parameters (weights looked up by
+    /// name from `weights`; pass an empty map for parameterless
+    /// artifacts like the quantize kernels).
+    pub fn load(&self, name: &str,
+                weights: &BTreeMap<String, Tensor>) -> Result<Executable> {
+        let sig = self.manifest.get(name)
+            .with_context(|| format!("unknown artifact {name:?}; have \
+                                      {:?}", self.artifacts()))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compiles.lock().unwrap() += 1;
+
+        let mut params = Vec::with_capacity(sig.param_order.len());
+        for (pname, shape) in &sig.param_order {
+            let t = weights.get(pname).with_context(|| {
+                format!("artifact {name} needs weight {pname:?}")
+            })?;
+            if &t.shape != shape {
+                bail!("{name}: weight {pname} shape {:?} != {:?}",
+                      t.shape, shape);
+            }
+            params.push(literal_from_f32(&t.data, shape)?);
+        }
+        Ok(Executable { name: name.to_string(), sig, exe, params })
+    }
+}
+
+impl Executable {
+    /// Expected input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.sig.input
+    }
+
+    /// Output shape.
+    pub fn output_shape(&self) -> &[usize] {
+        &self.sig.output
+    }
+
+    /// Execute on one input buffer (row-major f32, must match the
+    /// input shape). Returns the flattened f32 output.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.sig.input.iter().product();
+        if input.len() != want {
+            bail!("{}: input has {} elems, artifact wants {want}",
+                  self.name, input.len());
+        }
+        let x = literal_from_f32(input, &self.sig.input)?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&x);
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let names = rt.artifacts();
+        assert!(names.iter().any(|n| n.starts_with("quant_p8")),
+                "{names:?}");
+        assert!(names.iter().any(|n| n.starts_with("mlp_p16_b32")));
+    }
+
+    #[test]
+    fn quant_artifact_matches_rust_core() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load("quant_p8_1024", &BTreeMap::new()).unwrap();
+        let mut rng = crate::util::SplitMix64::new(13);
+        let input: Vec<f32> =
+            (0..1024).map(|_| (rng.normal() * 4.0) as f32).collect();
+        let out = exe.run(&input).unwrap();
+        let fmt = crate::posit::P8_FMT;
+        for (i, (&x, &y)) in input.iter().zip(&out).enumerate() {
+            let want = crate::posit::to_f64(
+                crate::posit::from_f64(x as f64, fmt), fmt) as f32;
+            assert_eq!(y, want, "elem {i}: quant({x})");
+        }
+    }
+}

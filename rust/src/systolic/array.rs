@@ -1,0 +1,241 @@
+//! The R x C output-stationary systolic grid with skewed streaming.
+//!
+//! Tile semantics: the array computes `C_tile = A_tile x B_tile` where
+//! `A_tile` is R x K (one row per PE row) and `B_tile` is K x (C * L)
+//! with L = lanes(mode): each PE column carries L adjacent output
+//! columns in its SIMD lanes. `a` words replicate the scalar across
+//! lanes; `b` words pack L consecutive columns.
+//!
+//! Streaming is the classical diagonal skew: row i's operand stream is
+//! delayed i cycles, column j's by j cycles, so PE(i, j) sees matching
+//! k-indices. Total tile latency = K + R + C + drain.
+
+use crate::engine::{pack_lanes, Mode};
+use crate::posit::from_f64;
+
+use super::pe::Pe;
+
+/// Array geometry + mode.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayConfig {
+    /// PE rows (output rows per tile).
+    pub rows: usize,
+    /// PE columns (output column *groups* per tile; each group is
+    /// `mode.lanes()` columns wide).
+    pub cols: usize,
+    /// SIMD mode of every PE.
+    pub mode: Mode,
+}
+
+impl ArrayConfig {
+    /// Output columns covered per tile (cols x lanes).
+    pub fn out_cols(&self) -> usize {
+        self.cols * self.mode.lanes()
+    }
+}
+
+/// The systolic grid.
+#[derive(Debug)]
+pub struct SystolicArray {
+    /// Geometry.
+    pub cfg: ArrayConfig,
+    pes: Vec<Pe>,
+    /// Cycles stepped.
+    pub cycles: u64,
+}
+
+impl SystolicArray {
+    /// Build an array; all PEs in `cfg.mode`.
+    pub fn new(cfg: ArrayConfig) -> Self {
+        let pes = (0..cfg.rows * cfg.cols).map(|_| Pe::new(cfg.mode))
+            .collect();
+        Self { cfg, pes, cycles: 0 }
+    }
+
+    /// Total lane-level MACs issued.
+    pub fn total_macs(&self) -> u64 {
+        self.pes.iter().map(|p| p.macs).sum()
+    }
+
+    /// Run one tile: `a` is R x K (row-major), `b` is K x out_cols
+    /// (row-major), returns the R x out_cols result as f64 values
+    /// decoded from the drained posits. Values are quantized to the
+    /// array's posit format on entry (the paper's operand path).
+    pub fn run_tile(&mut self, a: &[f64], b: &[f64], k: usize)
+                    -> Vec<f64> {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let mode = self.cfg.mode;
+        let fmt = mode.format();
+        let lanes = mode.lanes();
+        let out_cols = self.cfg.out_cols();
+        assert_eq!(a.len(), rows * k);
+        assert_eq!(b.len(), k * out_cols);
+
+        for pe in &mut self.pes {
+            pe.flush_regs();
+            pe.engine.clear();
+        }
+
+        // Pre-quantize operands to posit words.
+        let a_words: Vec<u32> = (0..rows * k)
+            .map(|i| {
+                let w = from_f64(a[i], fmt);
+                pack_lanes(&vec![w; lanes], mode)
+            })
+            .collect();
+        let b_words: Vec<u32> = (0..k * cols)
+            .map(|i| {
+                let (kk, cg) = (i / cols, i % cols);
+                let lane_vals: Vec<u64> = (0..lanes)
+                    .map(|l| from_f64(b[kk * out_cols + cg * lanes + l],
+                                      fmt))
+                    .collect();
+                pack_lanes(&lane_vals, mode)
+            })
+            .collect();
+
+        // Skewed streaming: at cycle t, row i receives a[i][t - i] on its
+        // west edge; column j receives b[t - j][j] on its north edge.
+        // March until every PE has consumed all K pairs.
+        let total_cycles = k + rows + cols + 1;
+        // Mesh wires: a flows east along rows, b flows south along cols.
+        let mut a_wire = vec![vec![None; cols + 1]; rows];
+        let mut b_wire = vec![vec![None; cols]; rows + 1];
+        for t in 0..total_cycles {
+            // edge injections
+            for (i, row) in a_wire.iter_mut().enumerate() {
+                row[0] = if t >= i && t - i < k {
+                    Some(a_words[i * k + (t - i)])
+                } else {
+                    None
+                };
+            }
+            for (j, slot) in b_wire[0].iter_mut().enumerate() {
+                *slot = if t >= j && t - j < k {
+                    Some(b_words[(t - j) * cols + j])
+                } else {
+                    None
+                };
+            }
+            // step PEs; collect forwarded operands into the next wires
+            let mut a_next = vec![vec![None; cols + 1]; rows];
+            let mut b_next = vec![vec![None; cols]; rows + 1];
+            for i in 0..rows {
+                a_next[i][0] = a_wire[i][0];
+            }
+            b_next[0].clone_from_slice(&b_wire[0]);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let pe = &mut self.pes[i * cols + j];
+                    let (east, south) =
+                        pe.step(a_next[i][j], b_next[i][j]);
+                    a_next[i][j + 1] = east;
+                    b_next[i + 1][j] = south;
+                }
+            }
+            a_wire = a_next;
+            b_wire = b_next;
+            self.cycles += 1;
+        }
+        // final flush: PEs have operands latched from the last cycle
+        for pe in &mut self.pes {
+            pe.step(None, None);
+        }
+        self.cycles += 1;
+
+        // Drain stage: read the quires.
+        let mut out = vec![0.0f64; rows * out_cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let idx = i * self.cfg.cols + j;
+                let word = self.pes[idx].drain();
+                for l in 0..lanes {
+                    let lane =
+                        crate::engine::lane_extract(word, mode, l);
+                    out[i * out_cols + j * lanes + l] =
+                        crate::posit::to_f64(lane, fmt);
+                }
+            }
+        }
+        self.cycles += 2; // drain bus
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::to_f64;
+    use crate::util::SplitMix64;
+
+    /// Functional oracle: posit-quantize operands, exact dot, one round.
+    fn oracle(a: &[f64], b: &[f64], rows: usize, k: usize,
+              out_cols: usize, mode: Mode) -> Vec<f64> {
+        let fmt = mode.format();
+        let mut out = vec![0.0; rows * out_cols];
+        for i in 0..rows {
+            for j in 0..out_cols {
+                let mut q = crate::posit::Quire::new(fmt);
+                for kk in 0..k {
+                    q.mac(from_f64(a[i * k + kk], fmt),
+                          from_f64(b[kk * out_cols + j], fmt));
+                }
+                out[i * out_cols + j] = to_f64(q.to_posit(), fmt);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tile_matches_quire_oracle_all_modes() {
+        let mut rng = SplitMix64::new(31);
+        for mode in Mode::ALL {
+            let cfg = ArrayConfig { rows: 3, cols: 2, mode };
+            let mut arr = SystolicArray::new(cfg);
+            let k = 9;
+            let oc = cfg.out_cols();
+            let a: Vec<f64> = (0..cfg.rows * k).map(|_| rng.normal())
+                .collect();
+            let b: Vec<f64> = (0..k * oc).map(|_| rng.normal()).collect();
+            let got = arr.run_tile(&a, &b, k);
+            let want = oracle(&a, &b, cfg.rows, k, oc, mode);
+            assert_eq!(got, want, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn mac_count_matches_workload() {
+        for mode in Mode::ALL {
+            let cfg = ArrayConfig { rows: 2, cols: 2, mode };
+            let mut arr = SystolicArray::new(cfg);
+            let k = 5;
+            let a = vec![1.0; cfg.rows * k];
+            let b = vec![1.0; k * cfg.out_cols()];
+            let _ = arr.run_tile(&a, &b, k);
+            // every PE must issue exactly K lane-MAC groups
+            assert_eq!(arr.total_macs(),
+                       (cfg.rows * cfg.cols * k * mode.lanes()) as u64);
+        }
+    }
+
+    #[test]
+    fn cycles_match_formula() {
+        for mode in Mode::ALL {
+            let cfg = ArrayConfig { rows: 4, cols: 3, mode };
+            let mut arr = SystolicArray::new(cfg);
+            let k = 7;
+            let a = vec![0.5; cfg.rows * k];
+            let b = vec![0.25; k * cfg.out_cols()];
+            let _ = arr.run_tile(&a, &b, k);
+            let expect = (k + cfg.rows + cfg.cols + 1) as u64 + 1 + 2;
+            assert_eq!(arr.cycles, expect, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn p8_mode_quadruples_columns_per_tile() {
+        let c8 = ArrayConfig { rows: 2, cols: 2, mode: Mode::P8x4 };
+        let c32 = ArrayConfig { rows: 2, cols: 2, mode: Mode::P32x1 };
+        assert_eq!(c8.out_cols(), 4 * c32.out_cols());
+    }
+}

@@ -1,0 +1,316 @@
+//! Tiled GEMM on the systolic array — the accelerator's workhorse.
+//!
+//! Two execution paths with identical numerics:
+//!
+//! * **cycle-accurate** (`run_cycle_accurate`) — drives the PE grid tile
+//!   by tile through the bit-accurate engines; used for validation and
+//!   the `systolic_trace` example;
+//! * **fast functional** (`run`) — posit-quantize, exact-accumulate,
+//!   final-round per output (the same math the quires perform), with
+//!   cycle/energy statistics computed from the dataflow formula that the
+//!   tests assert equal to the cycle-accurate counters. Full-network
+//!   inference (Fig. 4) runs this path.
+//!
+//! Energy model: per-PE-cycle energy from the calibrated 28 nm ASIC
+//! report (power / fmax), plus scratchpad access energy from
+//! [`super::memory::MemStats`] coefficients.
+
+use crate::cost::{AsicReport, DesignKind, TechNode};
+use crate::posit::{from_f64, to_f64};
+
+use super::array::ArrayConfig;
+use super::controller::{Command, Controller, Response};
+
+/// Statistics of one GEMM execution.
+#[derive(Debug, Clone, Default)]
+pub struct GemmStats {
+    /// Total array cycles (tile pipeline included).
+    pub cycles: u64,
+    /// Lane-level MAC operations.
+    pub macs: u64,
+    /// Scratchpad words moved (reads + writes).
+    pub mem_words: u64,
+    /// PE array energy, picojoules.
+    pub pe_energy_pj: f64,
+    /// Scratchpad energy, picojoules.
+    pub mem_energy_pj: f64,
+}
+
+impl GemmStats {
+    /// Total energy (pJ).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.pe_energy_pj + self.mem_energy_pj
+    }
+
+    /// Effective MACs per cycle (array-level utilization metric).
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1) as f64
+    }
+
+    /// GMACs per watt at the modelled frequency.
+    pub fn gmacs_per_watt(&self, freq_ghz: f64) -> f64 {
+        let seconds = self.cycles as f64 / (freq_ghz * 1e9);
+        let watts = self.total_energy_pj() * 1e-12 / seconds;
+        self.macs as f64 / 1e9 / (seconds * watts).max(1e-30) * seconds
+    }
+}
+
+/// Cycle count of one `rows x cols` tile at depth `k` (matches
+/// `SystolicArray::run_tile` exactly; asserted by tests).
+pub fn tile_cycles(rows: usize, cols: usize, k: usize) -> u64 {
+    (k + rows + cols + 1) as u64 + 1 + 2
+}
+
+/// Analytic cycle count of a full `m x k x n` GEMM on `cfg`.
+pub fn gemm_cycles(m: usize, k: usize, n: usize, cfg: ArrayConfig) -> u64 {
+    let tiles_m = m.div_ceil(cfg.rows);
+    let tiles_n = n.div_ceil(cfg.out_cols());
+    (tiles_m * tiles_n) as u64 * tile_cycles(cfg.rows, cfg.cols, k)
+}
+
+/// GEMM executor bound to an array configuration.
+#[derive(Debug, Clone)]
+pub struct SystolicGemm {
+    /// Array geometry + mode.
+    pub cfg: ArrayConfig,
+    /// Per-PE-cycle energy at 28 nm (pJ), from the calibrated model.
+    pub pe_cycle_pj: f64,
+    /// Modelled clock (GHz).
+    pub freq_ghz: f64,
+}
+
+impl SystolicGemm {
+    /// Executor with the calibrated 28 nm SIMD PE energy/frequency.
+    pub fn new(cfg: ArrayConfig) -> Self {
+        let rep = AsicReport::for_design(DesignKind::SimdUnified,
+                                         TechNode::N28);
+        SystolicGemm {
+            cfg,
+            pe_cycle_pj: rep.power_mw * 1e-3 / (rep.freq_ghz * 1e9) * 1e12,
+            freq_ghz: rep.freq_ghz,
+        }
+    }
+
+    /// Fast functional path: identical numerics (posit-quantized
+    /// operands, exact accumulation, one final rounding), analytic
+    /// cycle/energy statistics.
+    ///
+    /// `a`: m x k row-major, `b`: k x n row-major -> m x n.
+    pub fn run(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize)
+               -> (Vec<f64>, GemmStats) {
+        self.run_bias(a, b, None, m, k, n)
+    }
+
+    /// [`Self::run`] with an optional bias row folded into the
+    /// accumulator *before* the single final rounding — the hardware
+    /// semantics of a dense layer (bias enters the quire, Stage 3).
+    pub fn run_bias(&self, a: &[f64], b: &[f64], bias: Option<&[f64]>,
+                    m: usize, k: usize, n: usize)
+                    -> (Vec<f64>, GemmStats) {
+        let fmt = self.cfg.mode.format();
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+
+        // Quantize once (operand fetch does this in hardware).
+        let aq: Vec<f64> =
+            a.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect();
+        let bq: Vec<f64> =
+            b.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect();
+
+        // f64 accumulation is the quire proxy (DESIGN.md §6): exact for
+        // P8/P16 workloads, near-exact for P32; the bit-exact path is
+        // `run_cycle_accurate`.
+        let biasq: Option<Vec<f64>> = bias.map(|bs| {
+            bs.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect()
+        });
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            let ar = &aq[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            if let Some(bq_row) = &biasq {
+                or.copy_from_slice(bq_row);
+            }
+            for (kk, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let br = &bq[kk * n..(kk + 1) * n];
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+            for o in or.iter_mut() {
+                *o = to_f64(from_f64(*o, fmt), fmt);
+            }
+        }
+
+        let stats = self.analytic_stats(m, k, n);
+        (out, stats)
+    }
+
+    /// Statistics from the dataflow formulas (validated vs the
+    /// cycle-accurate path in tests).
+    pub fn analytic_stats(&self, m: usize, k: usize, n: usize)
+                          -> GemmStats {
+        let cfg = self.cfg;
+        let tiles_m = m.div_ceil(cfg.rows);
+        let tiles_n = n.div_ceil(cfg.out_cols());
+        let tiles = (tiles_m * tiles_n) as u64;
+        let cycles = tiles * tile_cycles(cfg.rows, cfg.cols, k);
+        // MAC issue: every PE runs K lane-groups per tile (padding lanes
+        // included — they burn energy exactly like the RTL would).
+        let macs = tiles
+            * (cfg.rows * cfg.cols * k) as u64
+            * cfg.mode.lanes() as u64;
+        let a_words = tiles_n as u64 * (m * k) as u64;
+        let b_words = tiles_m as u64 * (k * n) as u64;
+        let c_words = (m * n) as u64;
+        let mem_words = a_words + b_words + 2 * c_words;
+        let pe_cycles = tiles * tile_cycles(cfg.rows, cfg.cols, k)
+            * (cfg.rows * cfg.cols) as u64;
+        GemmStats {
+            cycles,
+            macs,
+            mem_words,
+            pe_energy_pj: pe_cycles as f64 * self.pe_cycle_pj,
+            mem_energy_pj: (a_words + b_words) as f64 * 4.0 * 0.35
+                + 2.0 * c_words as f64 * 4.0 * 0.45,
+        }
+    }
+
+    /// Cycle-accurate path through the controller + bit-accurate PEs.
+    /// Pads the last partial tiles with zeros (as the DMA would).
+    pub fn run_cycle_accurate(&self, a: &[f64], b: &[f64], m: usize,
+                              k: usize, n: usize)
+                              -> (Vec<f64>, GemmStats) {
+        let cfg = self.cfg;
+        let oc = cfg.out_cols();
+        let mut ctl = Controller::new(cfg.rows, cfg.cols, cfg.mode);
+        let mut out = vec![0.0f64; m * n];
+        let mut macs = 0u64;
+
+        for ti in 0..m.div_ceil(cfg.rows) {
+            for tj in 0..n.div_ceil(oc) {
+                // gather padded tiles
+                let mut at = vec![0.0; cfg.rows * k];
+                for r in 0..cfg.rows {
+                    let i = ti * cfg.rows + r;
+                    if i < m {
+                        at[r * k..(r + 1) * k]
+                            .copy_from_slice(&a[i * k..(i + 1) * k]);
+                    }
+                }
+                let mut bt = vec![0.0; k * oc];
+                for kk in 0..k {
+                    for c in 0..oc {
+                        let j = tj * oc + c;
+                        if j < n {
+                            bt[kk * oc + c] = b[kk * n + j];
+                        }
+                    }
+                }
+                ctl.execute(Command::LoadA { data: at, k });
+                ctl.execute(Command::LoadB { data: bt, k });
+                ctl.execute(Command::Compute);
+                let tile = match ctl.execute(Command::Drain) {
+                    Response::Tile(t) => t,
+                    _ => unreachable!(),
+                };
+                for r in 0..cfg.rows {
+                    let i = ti * cfg.rows + r;
+                    if i >= m {
+                        continue;
+                    }
+                    for c in 0..oc {
+                        let j = tj * oc + c;
+                        if j < n {
+                            out[i * n + j] = tile[r * oc + c];
+                        }
+                    }
+                }
+            }
+        }
+        macs += ctl.array.total_macs();
+
+        let mem = ctl.bank_a.stats.reads + ctl.bank_a.stats.writes
+            + ctl.bank_b.stats.reads + ctl.bank_b.stats.writes
+            + ctl.bank_c.stats.reads + ctl.bank_c.stats.writes;
+        let pe_cycles =
+            ctl.array.cycles * (cfg.rows * cfg.cols) as u64;
+        let stats = GemmStats {
+            cycles: ctl.array.cycles,
+            macs,
+            mem_words: mem,
+            pe_energy_pj: pe_cycles as f64 * self.pe_cycle_pj,
+            mem_energy_pj: ctl.bank_a.stats.energy_pj()
+                + ctl.bank_b.stats.energy_pj()
+                + ctl.bank_c.stats.energy_pj(),
+        };
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Mode;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn fast_matches_cycle_accurate_numerics() {
+        let mut rng = SplitMix64::new(41);
+        for mode in [Mode::P8x4, Mode::P16x2] {
+            let cfg = ArrayConfig { rows: 2, cols: 2, mode };
+            let g = SystolicGemm::new(cfg);
+            let (m, k, n) = (5, 11, 7);
+            let a: Vec<f64> =
+                (0..m * k).map(|_| rng.normal() * 2.0).collect();
+            let b: Vec<f64> =
+                (0..k * n).map(|_| rng.normal() * 2.0).collect();
+            let (fast, fstats) = g.run(&a, &b, m, k, n);
+            let (slow, sstats) = g.run_cycle_accurate(&a, &b, m, k, n);
+            assert_eq!(fast, slow, "mode {mode:?}");
+            assert_eq!(fstats.cycles, sstats.cycles,
+                       "cycle formula diverged ({mode:?})");
+        }
+    }
+
+    #[test]
+    fn analytic_macs_match_cycle_accurate() {
+        let cfg = ArrayConfig { rows: 3, cols: 2, mode: Mode::P16x2 };
+        let g = SystolicGemm::new(cfg);
+        let (m, k, n) = (6, 5, 8);
+        let a = vec![1.0; m * k];
+        let b = vec![1.0; k * n];
+        let (_, fstats) = g.run(&a, &b, m, k, n);
+        let (_, sstats) = g.run_cycle_accurate(&a, &b, m, k, n);
+        assert_eq!(fstats.macs, sstats.macs);
+    }
+
+    #[test]
+    fn mode_throughput_scaling() {
+        // Same GEMM, same grid: P8 mode needs ~4x fewer cycles than P32.
+        let (m, k, n) = (16, 32, 64);
+        let mk = |mode| {
+            let cfg = ArrayConfig { rows: 4, cols: 4, mode };
+            gemm_cycles(m, k, n, cfg)
+        };
+        let c8 = mk(Mode::P8x4) as f64;
+        let c32 = mk(Mode::P32x1) as f64;
+        assert!(c32 / c8 > 3.0, "P8 speedup only {}", c32 / c8);
+    }
+
+    #[test]
+    fn identity_gemm() {
+        let cfg = ArrayConfig { rows: 2, cols: 2, mode: Mode::P32x1 };
+        let g = SystolicGemm::new(cfg);
+        let n = 4;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let b: Vec<f64> = (0..n * n).map(|i| i as f64).collect();
+        let (out, _) = g.run(&eye, &b, n, n, n);
+        assert_eq!(out, b);
+    }
+}

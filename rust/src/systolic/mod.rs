@@ -1,0 +1,31 @@
+//! Cycle-level systolic-array accelerator built from SPADE PEs (Fig. 3).
+//!
+//! The paper integrates the SIMD MAC into a weight/output-stationary
+//! systolic array fronted by a Cheshire (CVA6) host interface, a control
+//! unit and banked memories. This module rebuilds that system:
+//!
+//! * [`pe`] — one processing element wrapping the bit-accurate
+//!   [`crate::engine::MacEngine`] plus its operand registers;
+//! * [`array`](mod@array) — an R x C output-stationary grid with skewed operand
+//!   streaming and per-lane quire accumulation. In P8 mode each PE
+//!   carries four output columns (lane packing along N), in P16 two,
+//!   in P32 one — the paper's 4x/2x/1x effective-throughput claim;
+//! * [`memory`] — double-buffered operand/result scratchpads with
+//!   access counting for the energy model;
+//! * [`controller`] — a command-queue front-end (LOAD/COMPUTE/DRAIN/
+//!   SET_MODE) standing in for the Cheshire CSR plug-in interface;
+//! * [`gemm`] — tiled GEMM/conv mapping with two execution paths: the
+//!   cycle-accurate array simulation, and a fast functional path with
+//!   identical numerics and *analytically identical* cycle/energy
+//!   accounting (asserted equal by tests) for full-network runs.
+
+pub mod array;
+pub mod controller;
+pub mod gemm;
+pub mod memory;
+pub mod pe;
+
+pub use array::{ArrayConfig, SystolicArray};
+pub use controller::{Command, Controller, Response};
+pub use gemm::{gemm_cycles, GemmStats, SystolicGemm};
+pub use memory::{MemBank, MemStats};

@@ -1,0 +1,109 @@
+//! One systolic processing element: a SPADE MAC engine plus the operand
+//! pass-through registers that form the systolic mesh.
+//!
+//! Output-stationary dataflow: `a` words enter from the west and are
+//! forwarded east; `b` words enter from the north and are forwarded
+//! south; each PE multiplies-accumulates its (a, b) pair into the
+//! per-lane quires every cycle both operands are valid.
+
+use crate::engine::{MacEngine, Mode};
+
+/// A processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// The SIMD MAC datapath.
+    pub engine: MacEngine,
+    /// West-input register (packed a word, replicated lanes).
+    pub a_reg: Option<u32>,
+    /// North-input register (packed b word, lane = output column).
+    pub b_reg: Option<u32>,
+    /// MACs issued by this PE (lane-level).
+    pub macs: u64,
+}
+
+impl Pe {
+    /// New PE in `mode`.
+    pub fn new(mode: Mode) -> Self {
+        Self { engine: MacEngine::new(mode), a_reg: None, b_reg: None,
+               macs: 0 }
+    }
+
+    /// One clock: consume the registered operands (if both valid) into
+    /// the quires, then latch the incoming operands. Returns the operand
+    /// pair this PE forwards (east, south) next cycle.
+    pub fn step(&mut self, a_in: Option<u32>, b_in: Option<u32>)
+                -> (Option<u32>, Option<u32>) {
+        if let (Some(a), Some(b)) = (self.a_reg, self.b_reg) {
+            self.engine.mac(a, b, true);
+            self.macs += self.engine.mode().lanes() as u64;
+        }
+        let fwd = (self.a_reg, self.b_reg);
+        self.a_reg = a_in;
+        self.b_reg = b_in;
+        fwd
+    }
+
+    /// Drain the accumulators to a packed posit word and clear.
+    pub fn drain(&mut self) -> u32 {
+        let out = self.engine.read();
+        self.engine.clear();
+        out
+    }
+
+    /// Reset mesh registers (tile boundary).
+    pub fn flush_regs(&mut self) {
+        self.a_reg = None;
+        self.b_reg = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{lane_extract, pack_lanes};
+    use crate::posit::{from_f64, to_f64};
+
+    #[test]
+    fn pe_accumulates_when_both_valid() {
+        let mode = Mode::P32x1;
+        let fmt = mode.format();
+        let two = from_f64(2.0, fmt) as u32;
+        let three = from_f64(3.0, fmt) as u32;
+        let mut pe = Pe::new(mode);
+        // cycle 1: latch
+        pe.step(Some(two), Some(three));
+        // cycle 2: mac happens
+        pe.step(None, None);
+        let out = pe.drain();
+        assert_eq!(to_f64(out as u64, fmt), 6.0);
+        assert_eq!(pe.macs, 1);
+    }
+
+    #[test]
+    fn pe_forwards_operands() {
+        let mode = Mode::P8x4;
+        let w = pack_lanes(&[1, 2, 3, 4], mode);
+        let mut pe = Pe::new(mode);
+        let (e0, s0) = pe.step(Some(w), Some(0x55));
+        assert_eq!((e0, s0), (None, None)); // nothing latched yet
+        let (e1, s1) = pe.step(None, None);
+        assert_eq!(e1, Some(w));
+        assert_eq!(s1, Some(0x55));
+        assert_eq!(lane_extract(e1.unwrap(), mode, 2), 3);
+    }
+
+    #[test]
+    fn lanes_accumulate_independently() {
+        let mode = Mode::P16x2;
+        let fmt = mode.format();
+        let a = pack_lanes(&[from_f64(1.5, fmt), from_f64(1.5, fmt)], mode);
+        let b = pack_lanes(&[from_f64(2.0, fmt), from_f64(-4.0, fmt)],
+                           mode);
+        let mut pe = Pe::new(mode);
+        pe.step(Some(a), Some(b));
+        pe.step(None, None);
+        let out = pe.drain();
+        assert_eq!(to_f64(lane_extract(out, mode, 0) as u64, fmt), 3.0);
+        assert_eq!(to_f64(lane_extract(out, mode, 1) as u64, fmt), -6.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Zero-dependency CLI argument parsing (offline stand-in for `clap`).
+//!
+//! Grammar: `program <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs and bare `--flag`s (value `"true"`).
+    pub options: HashMap<String, String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — see [`Args::from_env`].
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let is_flag = it
+                    .peek()
+                    .map(|n| n.starts_with("--"))
+                    .unwrap_or(true);
+                let val = if is_flag {
+                    "true".to_string()
+                } else {
+                    it.next().unwrap()
+                };
+                out.options.insert(key.to_string(), val);
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv\[0\]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option value with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    /// Parsed numeric option with a default; panics with a clear message
+    /// on malformed input (CLI surface, not library surface).
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|e| {
+                panic!("invalid value for --{key}: {s:?} ({e})")
+            }),
+        }
+    }
+
+    /// True if `--key` was passed (as flag or with any value but "false").
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_positional() {
+        // NB: a bare flag directly followed by a positional is ambiguous
+        // ("--verbose input.bin" reads as --verbose=input.bin); the CLI
+        // convention here is flags go last or take explicit values.
+        let a = Args::parse(toks("serve --batch 8 input.bin --verbose"));
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_or("batch", "1"), "8");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn num_or_defaults() {
+        let a = Args::parse(toks("run --n 32"));
+        assert_eq!(a.num_or("n", 0u32), 32);
+        assert_eq!(a.num_or("m", 7u32), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(toks("x --fast"));
+        assert!(a.flag("fast"));
+    }
+}

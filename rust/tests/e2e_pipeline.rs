@@ -1,0 +1,148 @@
+//! Full-pipeline end-to-end test: trained weights -> posit inference
+//! (all three backends + PJRT) -> Fig. 4-style accuracy parity, plus
+//! the coordinator serving real model traffic.
+
+use spade::coordinator::{Coordinator, CoordinatorConfig,
+                         InferenceRequest, RoutePolicy};
+use spade::data::Dataset;
+use spade::engine::Mode;
+use spade::nn::{self, Backend, Model, Precision, Tensor};
+
+fn have_artifacts() -> bool {
+    let ok = spade::artifacts_dir().join("manifest.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn fig4_parity_lenet_small_sample() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = Model::load("lenet5").unwrap();
+    let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+    let n = 128.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+
+    let (f32_logits, _) =
+        nn::exec::forward(&model, &x, Precision::F32, Backend::F32)
+            .unwrap();
+    let f32_acc = nn::exec::accuracy(&f32_logits, labels);
+    assert!(f32_acc > 0.9, "f32 baseline acc {f32_acc}");
+
+    // Fig. 4 claim: posit inference is iso-accurate with float.
+    for mode in [Mode::P32x1, Mode::P16x2] {
+        let (logits, _) = nn::exec::forward(
+            &model, &x, Precision::Posit(mode), Backend::Posit).unwrap();
+        let acc = nn::exec::accuracy(&logits, labels);
+        assert!((acc - f32_acc).abs() < 0.03,
+                "{mode:?}: acc {acc} vs f32 {f32_acc}");
+    }
+    // P8 may drop a little but must stay in the same regime.
+    let (logits, _) = nn::exec::forward(
+        &model, &x, Precision::Posit(Mode::P8x4), Backend::Posit)
+        .unwrap();
+    let acc8 = nn::exec::accuracy(&logits, labels);
+    assert!(acc8 > f32_acc - 0.10, "p8 acc {acc8} vs f32 {f32_acc}");
+}
+
+#[test]
+fn exact_backend_agrees_on_predictions() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = Model::load("mlp").unwrap();
+    let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+    let n = 16;
+    let (pix, _) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+    for mode in [Mode::P8x4, Mode::P16x2] {
+        let (fast, _) = nn::exec::forward(
+            &model, &x, Precision::Posit(mode), Backend::Posit).unwrap();
+        let (exact, _) = nn::exec::forward(
+            &model, &x, Precision::Posit(mode), Backend::PositExact)
+            .unwrap();
+        assert_eq!(fast.data, exact.data, "{mode:?}");
+    }
+}
+
+#[test]
+fn layerwise_policy_saves_energy_at_iso_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's motivating experiment: early layers at P8, final
+    // classifier at P16 — cheaper than all-P16, near-equal accuracy.
+    let model = Model::load("lenet5").unwrap();
+    let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+    let n = 96.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
+
+    let uniform = vec![Precision::Posit(Mode::P16x2);
+                       model.spec.mac_layers()];
+    let mut mixed = vec![Precision::Posit(Mode::P8x4);
+                         model.spec.mac_layers()];
+    *mixed.last_mut().unwrap() = Precision::Posit(Mode::P16x2);
+
+    let (lu, su) =
+        nn::exec::forward_policy(&model, &x, &uniform, Backend::Posit)
+            .unwrap();
+    let (lm, sm) =
+        nn::exec::forward_policy(&model, &x, &mixed, Backend::Posit)
+            .unwrap();
+    let acc_u = nn::exec::accuracy(&lu, labels);
+    let acc_m = nn::exec::accuracy(&lm, labels);
+    assert!(sm.cycles < su.cycles,
+            "mixed {} should beat uniform {}", sm.cycles, su.cycles);
+    assert!(sm.energy_pj < su.energy_pj);
+    assert!(acc_m > acc_u - 0.08, "mixed {acc_m} vs uniform {acc_u}");
+}
+
+#[test]
+fn coordinator_serves_dataset_traffic_correctly() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        model: "mlp".into(),
+        policy: RoutePolicy::Balanced,
+        ..Default::default()
+    })
+    .unwrap();
+    let ds = Dataset::load_artifact("mnist_syn", "test").unwrap();
+    let n = 64.min(ds.n);
+    let (pix, labels) = ds.batch(0, n);
+    let per = ds.h * ds.w * ds.c;
+
+    let mut hits = 0;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            coord.submit(InferenceRequest {
+                id: i as u64,
+                input: pix[i * per..(i + 1) * per].to_vec(),
+                mode: None,
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == labels[i] as usize {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    assert!(acc > 0.85, "served accuracy {acc}");
+    let m = coord.shutdown();
+    assert_eq!(m.total_requests, n as u64);
+}

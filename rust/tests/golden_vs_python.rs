@@ -1,0 +1,114 @@
+//! Cross-language golden check: the Rust posit core vs the independent
+//! jnp implementation (python/compile/kernels/posit.py), bit-for-bit,
+//! over the vectors exported by `python -m compile.golden`.
+//!
+//! Two independent implementations agreeing exhaustively is this
+//! reproduction's version of the paper's SoftPosit cross-validation.
+
+use std::path::PathBuf;
+
+use spade::posit::{from_f64, to_f64, PositFormat, Quire, P16_FMT,
+                   P32_FMT, P8_FMT};
+
+fn golden_dir() -> Option<PathBuf> {
+    let d = spade::artifacts_dir().join("golden");
+    if d.is_dir() {
+        Some(d)
+    } else {
+        eprintln!("skipping: run `make artifacts` to export golden \
+                   vectors");
+        None
+    }
+}
+
+fn read_u64s(path: &PathBuf) -> Vec<u64> {
+    let raw = std::fs::read(path).unwrap();
+    raw.chunks_exact(8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .collect()
+}
+
+#[test]
+fn p8_decode_table_matches_python() {
+    let Some(dir) = golden_dir() else { return };
+    let vals = read_u64s(&dir.join("p8_decode.bin"));
+    assert_eq!(vals.len(), 256);
+    for (w, &bits) in vals.iter().enumerate() {
+        let want = f64::from_bits(bits);
+        let got = to_f64(w as u64, P8_FMT);
+        if want.is_nan() {
+            assert!(got.is_nan(), "word {w:#x}");
+        } else {
+            assert_eq!(got.to_bits(), bits,
+                       "word {w:#x}: rust {got:e} python {want:e}");
+        }
+    }
+}
+
+fn check_encode(fmt: PositFormat, file: &str) {
+    let Some(dir) = golden_dir() else { return };
+    let flat = read_u64s(&dir.join(file));
+    assert_eq!(flat.len(), 4096 * 2);
+    for pair in flat.chunks_exact(2) {
+        let x = f64::from_bits(pair[0]);
+        let want = pair[1] & fmt.mask();
+        let got = from_f64(x, fmt);
+        assert_eq!(got, want,
+                   "{file}: encode({x:e}) rust {got:#x} python {want:#x}");
+    }
+}
+
+#[test]
+fn p8_encode_matches_python() {
+    check_encode(P8_FMT, "p8_encode.bin");
+}
+
+#[test]
+fn p16_encode_matches_python() {
+    check_encode(P16_FMT, "p16_encode.bin");
+}
+
+#[test]
+fn p32_encode_matches_python() {
+    check_encode(P32_FMT, "p32_encode.bin");
+}
+
+fn check_mac(fmt: PositFormat, file: &str, exact: bool) {
+    let Some(dir) = golden_dir() else { return };
+    let flat = read_u64s(&dir.join(file));
+    let rec = 65; // 32 pairs + expected word
+    assert_eq!(flat.len(), 64 * rec);
+    for (s, chunk) in flat.chunks_exact(rec).enumerate() {
+        let mut q = Quire::new(fmt);
+        for i in 0..32 {
+            let a = from_f64(f64::from_bits(chunk[2 * i]), fmt);
+            let b = from_f64(f64::from_bits(chunk[2 * i + 1]), fmt);
+            q.mac(a, b);
+        }
+        let got = q.to_posit();
+        let want = chunk[64] & fmt.mask();
+        if exact {
+            assert_eq!(got, want, "{file} seq {s}");
+        } else {
+            // P32: python's f64 quire proxy may differ from the true
+            // 512-bit quire by at most 1 ulp (word distance 1).
+            let d = got.abs_diff(want);
+            assert!(d <= 1, "{file} seq {s}: got {got:#x} want {want:#x}");
+        }
+    }
+}
+
+#[test]
+fn p8_mac_matches_python() {
+    check_mac(P8_FMT, "p8_mac.bin", true);
+}
+
+#[test]
+fn p16_mac_matches_python() {
+    check_mac(P16_FMT, "p16_mac.bin", true);
+}
+
+#[test]
+fn p32_mac_matches_python_within_ulp() {
+    check_mac(P32_FMT, "p32_mac.bin", false);
+}

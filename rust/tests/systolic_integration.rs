@@ -1,0 +1,142 @@
+//! Systolic-array integration: tiled GEMMs against plain references,
+//! controller command sequences, and the mode-throughput claims.
+
+use spade::engine::Mode;
+use spade::systolic::{gemm_cycles, ArrayConfig, Command, Controller,
+                      Response, SystolicGemm};
+use spade::util::SplitMix64;
+
+/// f64 GEMM reference (no quantization).
+fn gemm_ref(a: &[f64], b: &[f64], m: usize, k: usize, n: usize)
+            -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn p32_gemm_tracks_f64_reference() {
+    let mut rng = SplitMix64::new(71);
+    let (m, k, n) = (13, 29, 17);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let cfg = ArrayConfig { rows: 4, cols: 4, mode: Mode::P32x1 };
+    let (got, stats) = SystolicGemm::new(cfg).run(&a, &b, m, k, n);
+    let want = gemm_ref(&a, &b, m, k, n);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+    assert!(stats.macs > 0 && stats.cycles > 0);
+}
+
+#[test]
+fn quantization_error_decreases_with_precision() {
+    let mut rng = SplitMix64::new(72);
+    let (m, k, n) = (8, 32, 8);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let want = gemm_ref(&a, &b, m, k, n);
+    let mut errs = Vec::new();
+    for mode in [Mode::P8x4, Mode::P16x2, Mode::P32x1] {
+        let cfg = ArrayConfig { rows: 4, cols: 2, mode };
+        let (got, _) = SystolicGemm::new(cfg).run(&a, &b, m, k, n);
+        let err: f64 = got.iter().zip(&want)
+            .map(|(g, w)| (g - w).abs()).sum::<f64>() / want.len() as f64;
+        errs.push(err);
+    }
+    assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+}
+
+#[test]
+fn cycle_accurate_equals_fast_on_odd_shapes() {
+    // shapes that do NOT divide the array evenly (padding path)
+    let mut rng = SplitMix64::new(73);
+    for mode in [Mode::P8x4, Mode::P16x2] {
+        let cfg = ArrayConfig { rows: 3, cols: 2, mode };
+        let g = SystolicGemm::new(cfg);
+        let (m, k, n) = (7, 5, 9);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let (fast, fs) = g.run(&a, &b, m, k, n);
+        let (slow, ss) = g.run_cycle_accurate(&a, &b, m, k, n);
+        assert_eq!(fast, slow, "{mode:?}");
+        assert_eq!(fs.cycles, ss.cycles, "{mode:?}");
+        assert_eq!(fs.macs, ss.macs, "{mode:?}");
+    }
+}
+
+#[test]
+fn effective_throughput_claim_4x_2x_1x() {
+    // The paper's headline: same silicon, 4x/2x/1x MACs per cycle.
+    let (m, k, n) = (32, 64, 128);
+    let cycles: Vec<f64> = Mode::ALL
+        .iter()
+        .map(|&mode| {
+            let cfg = ArrayConfig { rows: 8, cols: 4, mode };
+            gemm_cycles(m, k, n, cfg) as f64
+        })
+        .collect();
+    // cycles[0]=p8, [1]=p16, [2]=p32
+    let s8 = cycles[2] / cycles[0];
+    let s16 = cycles[2] / cycles[1];
+    assert!(s8 > 3.2 && s8 <= 4.2, "P8 speedup {s8}");
+    assert!(s16 > 1.7 && s16 <= 2.2, "P16 speedup {s16}");
+}
+
+#[test]
+fn controller_multi_tile_session() {
+    let mut rng = SplitMix64::new(74);
+    let mut ctl = Controller::new(2, 2, Mode::P16x2);
+    let oc = ctl.array.cfg.out_cols();
+    // two Compute rounds with different data; memory stats accumulate
+    for round in 0..2 {
+        let k = 6;
+        let a: Vec<f64> = (0..2 * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * oc).map(|_| rng.normal()).collect();
+        ctl.execute(Command::LoadA { data: a.clone(), k });
+        ctl.execute(Command::LoadB { data: b.clone(), k });
+        ctl.execute(Command::Compute);
+        match ctl.execute(Command::Drain) {
+            Response::Tile(t) => {
+                let want = gemm_ref(&a, &b, 2, k, oc);
+                for (g, w) in t.iter().zip(&want) {
+                    assert!((g - w).abs() < 0.05 * (1.0 + w.abs()),
+                            "round {round}: {g} vs {w}");
+                }
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+    assert!(ctl.bank_a.stats.writes > 0);
+    assert!(ctl.bank_c.stats.reads > 0);
+    assert_eq!(ctl.retired, 8);
+}
+
+#[test]
+fn mode_switch_mid_session() {
+    let mut ctl = Controller::new(2, 2, Mode::P32x1);
+    let k = 3;
+    ctl.execute(Command::LoadA { data: vec![1.0; 2 * k], k });
+    ctl.execute(Command::LoadB { data: vec![1.0; k * 2], k });
+    ctl.execute(Command::Compute);
+    ctl.execute(Command::SetMode(Mode::P8x4));
+    // array rebuilt: new out_cols, fresh accumulators
+    assert_eq!(ctl.array.cfg.out_cols(), 8);
+    ctl.execute(Command::LoadA { data: vec![2.0; 2 * k], k });
+    ctl.execute(Command::LoadB { data: vec![0.5; k * 8], k });
+    ctl.execute(Command::Compute);
+    match ctl.execute(Command::Drain) {
+        Response::Tile(t) => {
+            assert_eq!(t.len(), 2 * 8);
+            assert!(t.iter().all(|&v| v == 3.0), "{t:?}");
+        }
+        r => panic!("{r:?}"),
+    }
+}
