@@ -12,6 +12,7 @@ pub fn banner(title: &str) {
 }
 
 /// Measure median wall time of `f` over `iters` runs (after 1 warmup).
+#[allow(dead_code)]
 pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     f();
     let mut samples: Vec<f64> = (0..iters)
@@ -26,6 +27,43 @@ pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
 }
 
 /// Relative delta in percent.
+#[allow(dead_code)]
 pub fn pct(ours: f64, theirs: f64) -> f64 {
     (1.0 - ours / theirs) * 100.0
+}
+
+/// Machine-readable bench log: (metric name -> ops/s in M/s), written
+/// as flat JSON so the perf trajectory can be diffed across PRs.
+#[allow(dead_code)]
+#[derive(Default)]
+pub struct BenchLog {
+    entries: Vec<(String, f64)>,
+}
+
+#[allow(dead_code)]
+impl BenchLog {
+    /// New empty log.
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    /// Record one metric (M ops/s, or any rate — name it clearly).
+    pub fn record(&mut self, name: &str, mops_per_s: f64) {
+        self.entries.push((name.to_string(), mops_per_s));
+    }
+
+    /// Write the log as a flat JSON object. Failures are non-fatal
+    /// (benches must still print their human output on read-only FS).
+    pub fn write_json(&self, path: &str) {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            s.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+        }
+        s.push_str("}\n");
+        match std::fs::write(path, s) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nbench json write failed: {e}"),
+        }
+    }
 }

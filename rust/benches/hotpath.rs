@@ -1,7 +1,10 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop: posit
-//! encode/decode, quire MAC, engine MAC step, functional GEMM, PJRT
-//! dispatch. Each prints ops/s so before/after deltas are one diff
-//! away. (criterion is unavailable offline; median-of-N timing.)
+//! encode/decode, P8 LUT multiply, quire MAC, engine MAC step, planar
+//! plan build, planar-vs-scalar functional GEMM, kernel thread scaling,
+//! PJRT dispatch. Each prints ops/s so before/after deltas are one diff
+//! away, and every metric is also written to `BENCH_hotpath.json`
+//! (op name -> M/s) for cross-PR tracking. (criterion is unavailable
+//! offline; median-of-N timing.)
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -10,11 +13,15 @@ mod common;
 use std::collections::BTreeMap;
 
 use spade::engine::{MacEngine, Mode};
-use spade::posit::{from_f64, to_f64, Quire, P16_FMT, P32_FMT, P8_FMT};
+use spade::kernel::{self, DecodedPlan};
+use spade::posit::{from_f64, p_mul, to_f64, Quire, P16_FMT, P32_FMT,
+                   P8_FMT};
 use spade::systolic::{ArrayConfig, SystolicGemm};
 use spade::util::SplitMix64;
 
 fn main() {
+    let mut log = common::BenchLog::new();
+
     common::banner("posit core hot paths (single thread)");
     let mut rng = SplitMix64::new(9001);
     let xs: Vec<f64> = (0..65536).map(|_| rng.wide(-12, 12)).collect();
@@ -27,7 +34,9 @@ fn main() {
                 sink = sink.wrapping_add(from_f64(x, fmt));
             }
         });
-        println!("encode {name}: {:>7.1} M/s", xs.len() as f64 / t / 1e6);
+        let mps = xs.len() as f64 / t / 1e6;
+        println!("encode {name}: {mps:>7.1} M/s");
+        log.record(&format!("encode_{name}"), mps);
         let words: Vec<u64> =
             xs.iter().map(|&x| from_f64(x, fmt)).collect();
         let mut fsink = 0.0f64;
@@ -36,9 +45,35 @@ fn main() {
                 fsink += to_f64(w, fmt);
             }
         });
-        println!("decode {name}: {:>7.1} M/s ({:e})",
-                 words.len() as f64 / t / 1e6, fsink);
+        let mps = words.len() as f64 / t / 1e6;
+        println!("decode {name}: {mps:>7.1} M/s ({fsink:e})");
+        log.record(&format!("decode_{name}"), mps);
     }
+
+    common::banner("P8 multiply: field arithmetic vs 256x256 LUT");
+    let words8: Vec<u8> =
+        xs.iter().map(|&x| from_f64(x, P8_FMT) as u8).collect();
+    let mut sink = 0u64;
+    let t = common::time_median(5, || {
+        for w in words8.chunks_exact(2) {
+            sink = sink.wrapping_add(
+                p_mul(w[0] as u64, w[1] as u64, P8_FMT));
+        }
+    });
+    let scalar_mps = (words8.len() / 2) as f64 / t / 1e6;
+    println!("p_mul (decode per op): {scalar_mps:>7.1} M/s");
+    log.record("p8_mul_scalar", scalar_mps);
+    let mut sink8 = 0u8;
+    let t = common::time_median(5, || {
+        for w in words8.chunks_exact(2) {
+            sink8 = sink8.wrapping_add(kernel::p8_mul(w[0], w[1]));
+        }
+    });
+    let lut_mps = (words8.len() / 2) as f64 / t / 1e6;
+    println!("p8_mul (LUT):          {lut_mps:>7.1} M/s  \
+              ({:.1}x, sink {sink} {sink8})",
+             lut_mps / scalar_mps);
+    log.record("p8_mul_lut", lut_mps);
 
     common::banner("quire MAC (decode+multiply+wide add)");
     for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
@@ -52,8 +87,9 @@ fn main() {
                 q.mac(w[0], w[1]);
             }
         });
-        println!("quire.mac {name}: {:>7.1} M MAC/s",
-                 (words.len() / 2) as f64 / t / 1e6);
+        let mps = (words.len() / 2) as f64 / t / 1e6;
+        println!("quire.mac {name}: {mps:>7.1} M MAC/s");
+        log.record(&format!("quire_mac_{name}"), mps);
     }
 
     common::banner("bit-accurate engine MAC issue");
@@ -69,21 +105,83 @@ fn main() {
         println!("{mode:?}: {:>7.2} M issues/s  ({:.1} M lane-MACs/s)",
                  iters as f64 / t / 1e6,
                  (iters * mode.lanes() as u64) as f64 / t / 1e6);
+        log.record(&format!("engine_mac_{}", mode.tag()),
+                   iters as f64 / t / 1e6);
     }
 
-    common::banner("functional posit GEMM (fast path, 256x256x256)");
+    common::banner("planar plan build (quantize + decode once)");
     let n = 256usize;
     let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                        ("p32", P32_FMT)] {
+        let t = common::time_median(5, || {
+            let _ = DecodedPlan::from_f64(&a, n, n, fmt);
+        });
+        let mps = (n * n) as f64 / t / 1e6;
+        println!("plan {name} 256x256: {mps:>7.1} M elems/s");
+        log.record(&format!("plan_build_{name}"), mps);
+    }
+
+    common::banner(
+        "functional posit GEMM 256x256x256: planar kernel vs scalar ref");
+    let macs = (n * n * n) as f64;
     for mode in Mode::ALL {
         let cfg = ArrayConfig { rows: 8, cols: 8, mode };
         let g = SystolicGemm::new(cfg);
-        let t = common::time_median(3, || {
+        let fmt = mode.format();
+        let tag = mode.tag();
+        let ts = common::time_median(3, || {
+            let _ = g.run_scalar(&a, &b, None, n, n, n);
+        });
+        // Single-thread planar, end to end (plan build included), so
+        // the algorithmic gain is separable from thread scaling.
+        let tp1 = common::time_median(3, || {
+            let pa = DecodedPlan::from_f64(&a, n, n, fmt);
+            let pb = DecodedPlan::from_f64(&b, n, n, fmt);
+            let _ = kernel::gemm_with_threads(&pa, &pb, None, 1);
+        });
+        let tp = common::time_median(3, || {
             let _ = g.run(&a, &b, n, n, n);
         });
-        let flops = 2.0 * (n * n * n) as f64;
-        println!("{mode:?}: {:>6.3} s -> {:>7.2} GFLOP/s-equivalent", t,
-                 flops / t / 1e9);
+        let s_mps = macs / ts / 1e6;
+        let p1_mps = macs / tp1 / 1e6;
+        let p_mps = macs / tp / 1e6;
+        println!("{mode:?}: scalar {ts:>6.3} s ({s_mps:>8.1} M MAC/s)  \
+                  planar-1t {tp1:>6.3} s ({p1_mps:>8.1})  \
+                  planar-auto {tp:>6.3} s ({p_mps:>8.1})  \
+                  speedup {:>5.2}x (1t {:>5.2}x)",
+                 ts / tp, ts / tp1);
+        log.record(&format!("gemm256_{tag}_scalar"), s_mps);
+        log.record(&format!("gemm256_{tag}_planar_1t"), p1_mps);
+        log.record(&format!("gemm256_{tag}_planar"), p_mps);
+        log.record(&format!("gemm256_{tag}_speedup_1t"), ts / tp1);
+        log.record(&format!("gemm256_{tag}_speedup"), ts / tp);
+    }
+
+    common::banner("planar kernel thread scaling (256x256x256)");
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!("available parallelism: {hw}");
+    for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT)] {
+        let pa = DecodedPlan::from_f64(&a, n, n, fmt);
+        let pb = DecodedPlan::from_f64(&b, n, n, fmt);
+        let mut t1 = 0.0;
+        for threads in [1usize, 2, 4, 8] {
+            let t = common::time_median(3, || {
+                let _ = kernel::gemm_with_threads(&pa, &pb, None,
+                                                  threads);
+            });
+            if threads == 1 {
+                t1 = t;
+            }
+            let mps = macs / t / 1e6;
+            println!("{name} x{threads}: {t:>6.3} s ({mps:>8.1} \
+                      M MAC/s, {:.2}x vs 1 thread)",
+                     t1 / t);
+            log.record(&format!("kernel_{name}_t{threads}"), mps);
+        }
     }
 
     common::banner("PJRT artifact dispatch (mlp_p16_b32)");
@@ -99,6 +197,7 @@ fn main() {
         });
         println!("batch-32 forward: {:.2} ms -> {:.0} img/s", t * 1e3,
                  32.0 / t);
+        log.record("pjrt_b32_img_per_s", 32.0 / t);
         let exe1 = rt.load("mlp_p16_b1", &weights).unwrap();
         let one: Vec<f32> = input[..784].to_vec();
         let t = common::time_median(5, || {
@@ -109,4 +208,6 @@ fn main() {
     } else {
         println!("(skipped: run `make artifacts`)");
     }
+
+    log.write_json("BENCH_hotpath.json");
 }

@@ -17,20 +17,12 @@ pub struct Metrics {
     pub batch_sizes: Vec<usize>,
 }
 
-fn mode_key(mode: Mode) -> &'static str {
-    match mode {
-        Mode::P8x4 => "p8",
-        Mode::P16x2 => "p16",
-        Mode::P32x1 => "p32",
-    }
-}
-
 impl Metrics {
     /// Record one served request.
     pub fn record(&mut self, mode: Mode, latency_us: u64,
                   batch_size: usize) {
         self.total_requests += 1;
-        self.latencies_us.entry(mode_key(mode)).or_default()
+        self.latencies_us.entry(mode.tag()).or_default()
             .push(latency_us);
         self.batch_sizes.push(batch_size);
     }

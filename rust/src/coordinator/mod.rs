@@ -3,9 +3,11 @@
 //! The request path is pure Rust: requests enter a queue, the
 //! [`batcher`] groups them (size or deadline), the [`router`] picks a
 //! SPADE MODE per batch (client pin > policy), and the worker executes
-//! on either the PJRT artifacts ([`crate::runtime`]) or the systolic
-//! functional backend, recording [`metrics`] (latency percentiles,
-//! MACs, energy).
+//! on either the PJRT artifacts ([`crate::runtime`]) or the planar
+//! posit kernel ([`crate::kernel`] via an owned [`Session`] whose
+//! weight plans persist across batches — see
+//! [`Coordinator::start_with_model`]), recording [`metrics`] (latency
+//! percentiles, MACs, energy).
 //!
 //! Threading: one worker thread owns the executables (PJRT clients are
 //! not Sync-shared here); callers submit over an mpsc channel and wait
@@ -29,7 +31,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::engine::Mode;
-use crate::nn::Tensor;
+use crate::nn::{Backend, Model, Precision, Session, Tensor};
 use crate::runtime::{Executable, Runtime};
 
 /// An inference request.
@@ -134,7 +136,8 @@ impl Coordinator {
             match setup {
                 Ok((exes, input_len)) => {
                     let _ = setup_tx.send(Ok(input_len));
-                    worker_loop(rx, exes, batcher_cfg, policy, metrics_w);
+                    worker_loop(rx, ServeEngine::Pjrt(exes), batcher_cfg,
+                                policy, metrics_w);
                 }
                 Err(e) => {
                     let _ = setup_tx.send(Err(e));
@@ -148,14 +151,41 @@ impl Coordinator {
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
     }
 
+    /// Start a worker that serves an in-memory [`Model`] on the planar
+    /// posit kernel — no PJRT artifacts required. The worker owns a
+    /// [`Session`], so each (layer, mode) weight tensor is
+    /// quantized+decoded once and reused across every batch.
+    pub fn start_with_model(model: Model, cfg: CoordinatorConfig)
+                            -> Result<Coordinator> {
+        model.validate()?;
+        let input_len: usize = model.spec.input.iter().product();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_w = metrics.clone();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let bcfg = cfg.batcher.clone();
+        let policy = cfg.policy;
+        let worker = std::thread::spawn(move || {
+            worker_loop(rx, ServeEngine::Planar(Session::owned(model)),
+                        bcfg, policy, metrics_w);
+        });
+        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
+    }
+
     /// Expected flattened input length per example.
     pub fn input_len(&self) -> usize {
         self.input_len
     }
 
     /// Submit a request; returns a receiver for the response.
+    ///
+    /// Panics (in the calling thread) if the input length does not
+    /// match [`Coordinator::input_len`] — a malformed request must
+    /// neither kill the shared worker nor silently produce logits.
     pub fn submit(&self, req: InferenceRequest)
                   -> mpsc::Receiver<InferenceResponse> {
+        assert_eq!(req.input.len(), self.input_len,
+                   "request {}: input length {} != model input {}",
+                   req.id, req.input.len(), self.input_len);
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Job::Infer(req, Instant::now(), tx))
@@ -190,8 +220,16 @@ impl Drop for Coordinator {
 
 type Pending = (InferenceRequest, Instant, mpsc::Sender<InferenceResponse>);
 
-fn worker_loop(rx: mpsc::Receiver<Job>,
-               exes: BTreeMap<(Mode, usize), Executable>,
+/// What the worker executes batches on.
+enum ServeEngine {
+    /// Compiled PJRT artifacts keyed by (mode, batch size).
+    Pjrt(BTreeMap<(Mode, usize), Executable>),
+    /// Owned planar-kernel session: its (layer, mode) weight plans are
+    /// decoded on first use and reused for every subsequent batch.
+    Planar(Session<'static>),
+}
+
+fn worker_loop(rx: mpsc::Receiver<Job>, mut engine: ServeEngine,
                bcfg: BatcherConfig, policy: RoutePolicy,
                metrics: Arc<Mutex<Metrics>>) {
     let router = Router::new(policy);
@@ -207,7 +245,7 @@ fn worker_loop(rx: mpsc::Receiver<Job>,
         let Some(first) = first else {
             // flush leftovers before exiting
             for batch in batcher.flush() {
-                run_batch(batch, &exes, &router, &metrics);
+                run_batch(batch, &mut engine, &router, &metrics);
             }
             return;
         };
@@ -220,7 +258,8 @@ fn worker_loop(rx: mpsc::Receiver<Job>,
                 Ok(Job::Infer(r, t, tx)) => batcher.push((r, t, tx)),
                 Ok(Job::Shutdown) => {
                     for batch in batcher.flush() {
-                        run_batch(batch, &exes, &router, &metrics);
+                        run_batch(batch, &mut engine, &router,
+                                  &metrics);
                     }
                     return;
                 }
@@ -229,14 +268,13 @@ fn worker_loop(rx: mpsc::Receiver<Job>,
             }
         }
         for batch in batcher.flush() {
-            run_batch(batch, &exes, &router, &metrics);
+            run_batch(batch, &mut engine, &router, &metrics);
         }
     }
 }
 
-fn run_batch(batch: Batch<Pending>,
-             exes: &BTreeMap<(Mode, usize), Executable>, router: &Router,
-             metrics: &Arc<Mutex<Metrics>>) {
+fn run_batch(batch: Batch<Pending>, engine: &mut ServeEngine,
+             router: &Router, metrics: &Arc<Mutex<Metrics>>) {
     let items = batch.items;
     if items.is_empty() {
         return;
@@ -244,7 +282,27 @@ fn run_batch(batch: Batch<Pending>,
     let pinned: Vec<Option<Mode>> =
         items.iter().map(|(r, _, _)| r.mode).collect();
     let mode = router.route(&pinned);
+    let n = items.len();
 
+    let outputs = match engine {
+        ServeEngine::Pjrt(exes) => run_pjrt_batch(&items, mode, exes),
+        ServeEngine::Planar(sess) => {
+            run_planar_batch(&items, mode, sess)
+        }
+    };
+
+    let mut m = metrics.lock().unwrap();
+    for ((r, t0, tx), logits) in items.into_iter().zip(outputs) {
+        let latency_us = t0.elapsed().as_micros() as u64;
+        m.record(mode, latency_us, n);
+        let _ = tx.send(InferenceResponse { id: r.id, logits, mode,
+                                            latency_us });
+    }
+}
+
+fn run_pjrt_batch(items: &[Pending], mode: Mode,
+                  exes: &BTreeMap<(Mode, usize), Executable>)
+                  -> Vec<Vec<f32>> {
     // Choose the best-fitting executable: batch-32 when full, else b1
     // loop (padding a partial batch wastes identical compute — we report
     // both paths in the metrics).
@@ -281,18 +339,34 @@ fn run_batch(batch: Batch<Pending>,
             outputs.push(flat[i * oc..(i + 1) * oc].to_vec());
         }
     } else {
-        for (r, _, _) in &items {
+        for (r, _, _) in items {
             outputs.push(run_one(&r.input));
         }
     }
+    outputs
+}
 
-    let mut m = metrics.lock().unwrap();
-    for ((r, t0, tx), logits) in items.into_iter().zip(outputs) {
-        let latency_us = t0.elapsed().as_micros() as u64;
-        m.record(mode, latency_us, n);
-        let _ = tx.send(InferenceResponse { id: r.id, logits, mode,
-                                            latency_us });
+/// Execute a whole batch through the planar kernel in one forward pass
+/// (the batch dimension rides the GEMM's m axis).
+fn run_planar_batch(items: &[Pending], mode: Mode,
+                    sess: &mut Session<'static>) -> Vec<Vec<f32>> {
+    let [h, w, c] = sess.model().spec.input;
+    let per = h * w * c;
+    let n = items.len();
+    let mut buf = vec![0.0f32; n * per];
+    for (i, (r, _, _)) in items.iter().enumerate() {
+        // Lengths are validated at submit(); copy_from_slice would
+        // panic on any mismatch rather than serve wrong logits.
+        buf[i * per..(i + 1) * per].copy_from_slice(&r.input);
     }
+    let x = Tensor::from_vec(&[n, h, w, c], buf);
+    let (logits, _stats) = sess
+        .forward(&x, Precision::Posit(mode), Backend::Posit)
+        .expect("planar forward failed");
+    let classes = logits.shape[1];
+    (0..n)
+        .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
+        .collect()
 }
 
 /// Helper for tests/examples: flatten an NHWC tensor batch into
@@ -313,9 +387,80 @@ pub fn tensor_to_requests(x: &Tensor, start_id: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::{ModelSpec, Tensor};
+    use std::collections::BTreeMap as Map;
 
     fn have_artifacts() -> bool {
         crate::artifacts_dir().join("manifest.json").is_file()
+    }
+
+    /// Tiny hand-built model (mirrors `nn::exec` tests) so the planar
+    /// serving path is testable without any artifacts on disk.
+    fn tiny_model() -> Model {
+        let spec = ModelSpec::parse(
+            r#"{"name": "tiny", "dataset": "d", "input": [4, 4, 1],
+                "classes": 3,
+                "layers": [
+                  {"kind": "conv", "k": 3, "out": 2, "pad": "same",
+                   "relu": true},
+                  {"kind": "maxpool", "k": 2},
+                  {"kind": "flatten"},
+                  {"kind": "dense", "out": 3, "relu": false}]}"#,
+        )
+        .unwrap();
+        let mut rng = crate::util::SplitMix64::new(55);
+        let mut params = Map::new();
+        params.insert(
+            "layer0/w".to_string(),
+            Tensor::from_vec(&[3, 3, 1, 2],
+                             (0..18).map(|_| rng.normal() as f32)
+                                 .collect()),
+        );
+        params.insert("layer0/b".to_string(),
+                      Tensor::from_vec(&[2], vec![0.1, -0.1]));
+        params.insert(
+            "layer3/w".to_string(),
+            Tensor::from_vec(&[8, 3],
+                             (0..24).map(|_| rng.normal() as f32)
+                                 .collect()),
+        );
+        params.insert("layer3/b".to_string(),
+                      Tensor::from_vec(&[3], vec![0.0, 0.05, -0.05]));
+        Model { spec, params }
+    }
+
+    #[test]
+    fn planar_backend_serves_without_artifacts() {
+        let coord = Coordinator::start_with_model(
+            tiny_model(), CoordinatorConfig::default()).unwrap();
+        assert_eq!(coord.input_len(), 16);
+        let mut rng = crate::util::SplitMix64::new(17);
+        for id in 0..6 {
+            let input: Vec<f32> = (0..16).map(|_| rng.f32()).collect();
+            let resp = coord
+                .infer(InferenceRequest { id, input, mode: None })
+                .unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.logits.len(), 3);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.total_requests, 6);
+    }
+
+    #[test]
+    fn planar_backend_respects_pinned_mode() {
+        let coord = Coordinator::start_with_model(
+            tiny_model(), CoordinatorConfig::default()).unwrap();
+        let resp = coord
+            .infer(InferenceRequest {
+                id: 1,
+                input: vec![0.5; 16],
+                mode: Some(Mode::P32x1),
+            })
+            .unwrap();
+        assert_eq!(resp.mode, Mode::P32x1);
+        coord.shutdown();
     }
 
     #[test]

@@ -78,6 +78,17 @@ impl Mode {
         }
     }
 
+    /// Canonical short tag ("p8" / "p16" / "p32") — the single source
+    /// for metric keys, bench labels and stats rows.
+    #[inline]
+    pub const fn tag(self) -> &'static str {
+        match self {
+            Mode::P8x4 => "p8",
+            Mode::P16x2 => "p16",
+            Mode::P32x1 => "p32",
+        }
+    }
+
     /// All modes, for sweeps.
     pub const ALL: [Mode; 3] = [Mode::P8x4, Mode::P16x2, Mode::P32x1];
 }

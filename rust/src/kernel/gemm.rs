@@ -1,0 +1,471 @@
+//! Decode-free fused-MAC GEMM over [`DecodedPlan`] operands.
+//!
+//! Per output element the kernel accumulates **exact** products in wide
+//! integer fixed point and rounds **once** at the end — the same
+//! contract as the quire (`Backend::PositExact` is the oracle; the
+//! property tests require bit-identical words). Three inner loops:
+//!
+//! * **P8** — one `i64` add per MAC through the 256×256 exact-product
+//!   LUT (offset 2^-12; headroom for k up to 2^39);
+//! * **P16** — `i64` significand product + `i128` fixed-point add
+//!   (offset 2^-56; exact for k ≤ [`lut::P16_CHUNK`], the quire path
+//!   takes over beyond that);
+//! * **P32 / long-k** — planar fields streamed into [`Quire::mac_raw`]
+//!   (no per-MAC decode; the 512-bit register handles any depth).
+//!
+//! Row-block tiling fans the output rows across `std::thread::scope`
+//! threads when [`auto_threads`] judges the matrix big enough; operand
+//! plans are shared read-only, each thread owns a disjoint output
+//! slice, so results are identical at any thread count.
+
+use crate::posit::{encode_from_parts, Parts, PositFormat, Quire,
+                   P16_FMT, P8_FMT};
+
+use super::lut::{self, P16_ACC_FRAC_OFFSET, P16_CHUNK,
+                 P8_ACC_FRAC_OFFSET};
+use super::plan::DecodedPlan;
+
+/// Below this many MACs a single thread always wins (spawn cost).
+const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Target MACs per thread when scaling the worker count with the
+/// problem instead of jumping straight to all cores.
+const PAR_GRAIN: usize = 1 << 15;
+
+/// Pick a worker count for an `m`×`k`×`n` GEMM: 1 for small problems,
+/// then one thread per [`PAR_GRAIN`] MACs up to the hardware
+/// parallelism (and never more than `m`, the tiling unit). The
+/// `SPADE_KERNEL_THREADS` environment variable overrides.
+pub fn auto_threads(m: usize, k: usize, n: usize) -> usize {
+    if let Ok(s) = std::env::var("SPADE_KERNEL_THREADS") {
+        if let Ok(v) = s.parse::<usize>() {
+            return v.clamp(1, m.max(1));
+        }
+    }
+    let work = m.saturating_mul(k).saturating_mul(n);
+    if work < PAR_THRESHOLD {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    hw.min(m.max(1)).min((work / PAR_GRAIN).max(1))
+}
+
+/// Planar GEMM with automatic threading: `a` (m×k) · `b` (k×n)
+/// [+ bias], one rounding per output. Returns the m×n output words.
+pub fn gemm(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>)
+            -> Vec<u64> {
+    gemm_with_threads(a, b, bias, auto_threads(a.rows, a.cols, b.cols))
+}
+
+/// [`gemm`] with an explicit worker count (1 = fully sequential).
+/// The result is bit-identical at every thread count.
+pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
+                         bias: Option<&[u64]>, threads: usize)
+                         -> Vec<u64> {
+    assert_eq!(a.fmt, b.fmt, "operand formats differ");
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), n, "bias length");
+    }
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+
+    let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let mut out = vec![0u64; m * n];
+
+    let t = threads.clamp(1, m);
+    if t <= 1 {
+        gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out);
+    } else {
+        let rows_per = m.div_ceil(t);
+        std::thread::scope(|s| {
+            for (ti, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let bd = bias_dec.as_ref();
+                s.spawn(move || {
+                    gemm_rows(a, b, bd, ti * rows_per, chunk);
+                });
+            }
+        });
+    }
+
+    // NaR poisoning pass: any NaR operand in the reduction (or bias)
+    // poisons that output, exactly like the quire's absorbing NaR.
+    let bias_nar = bias_dec.as_ref().is_some_and(|bd| bd.has_nar);
+    if a.has_nar || b.has_nar || bias_nar {
+        let nar = a.fmt.nar();
+        for i in 0..m {
+            let row_nar = a.has_nar && a.nar_rows[i];
+            for j in 0..n {
+                if row_nar
+                    || (b.has_nar && b.nar_cols[j])
+                    || (bias_nar
+                        && bias_dec.as_ref().unwrap().nar[j])
+                {
+                    out[i * n + j] = nar;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bias row decoded once into planar fields.
+struct BiasDec {
+    sig: Vec<i64>,
+    w: Vec<i32>,
+    nar: Vec<bool>,
+    has_nar: bool,
+}
+
+impl BiasDec {
+    fn new(words: &[u64], fmt: PositFormat) -> BiasDec {
+        let p = DecodedPlan::from_words(words.to_vec(), 1, words.len(),
+                                        fmt);
+        let has_nar = p.has_nar;
+        // `nar` is only read when `has_nar` (it is empty otherwise).
+        BiasDec { sig: p.sig, w: p.w, nar: p.nar_cols, has_nar }
+    }
+}
+
+/// Compute output rows `i0 ..` into `out` (a whole-rows slice).
+fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+             i0: usize, out: &mut [u64]) {
+    let n = b.cols;
+    let nrows = out.len() / n;
+    // The LUT / fixed-offset fast paths are specific to the exact
+    // standard formats; anything else goes through the generic quire
+    // path (correct for any posit(n, es) the crate supports).
+    if a.fmt == P8_FMT {
+        rows_p8(a, b, bias, i0, nrows, out);
+    } else if a.fmt == P16_FMT && a.cols <= P16_CHUNK {
+        rows_p16(a, b, bias, i0, nrows, out);
+    } else {
+        rows_quire(a, b, bias, i0, nrows, out);
+    }
+}
+
+/// P8: one LUT add per MAC into an `i64` accumulator row.
+fn rows_p8(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+           i0: usize, nrows: usize, out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let mut acc = vec![0i64; n];
+    for r in 0..nrows {
+        let i = i0 + r;
+        match bias {
+            Some(bd) => {
+                for j in 0..n {
+                    acc[j] =
+                        bd.sig[j] << (bd.w[j] + P8_ACC_FRAC_OFFSET as i32);
+                }
+            }
+            None => acc.fill(0),
+        }
+        let arow = &a.words[i * k..(i + 1) * k];
+        for (kk, &aw) in arow.iter().enumerate() {
+            if aw == 0 {
+                continue;
+            }
+            let base = (aw as usize) << 8;
+            let brow = &b.words[kk * n..(kk + 1) * n];
+            for (accj, &bw) in acc.iter_mut().zip(brow) {
+                *accj += lut[base | bw as usize];
+            }
+        }
+        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+        }
+    }
+}
+
+/// P16 (k ≤ [`P16_CHUNK`]): significand product + `i128` add per MAC.
+fn rows_p16(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+            i0: usize, nrows: usize, out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    let mut acc = vec![0i128; n];
+    for r in 0..nrows {
+        let i = i0 + r;
+        match bias {
+            Some(bd) => {
+                for j in 0..n {
+                    acc[j] = (bd.sig[j] as i128) << (bd.w[j] + off);
+                }
+            }
+            None => acc.fill(0),
+        }
+        for kk in 0..k {
+            let sa = a.sig[i * k + kk];
+            if sa == 0 {
+                continue;
+            }
+            let wa = a.w[i * k + kk];
+            let bsig = &b.sig[kk * n..(kk + 1) * n];
+            let bw = &b.w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                let p = sa * bsig[j];
+                if p != 0 {
+                    acc[j] += (p as i128) << (wa + bw[j] + off);
+                }
+            }
+        }
+        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = encode_acc_i128(v, P16_ACC_FRAC_OFFSET, fmt);
+        }
+    }
+}
+
+/// P32 (any k) and P16 beyond the `i128` headroom: stream planar
+/// significand products into reusable quires — still decode-free.
+fn rows_quire(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+              i0: usize, nrows: usize, out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let mut quires: Vec<Quire> = (0..n).map(|_| Quire::new(fmt)).collect();
+    for r in 0..nrows {
+        let i = i0 + r;
+        for q in quires.iter_mut() {
+            q.clear();
+        }
+        if let Some(bd) = bias {
+            for (j, q) in quires.iter_mut().enumerate() {
+                let s = bd.sig[j];
+                if s != 0 {
+                    q.mac_raw(s.unsigned_abs() as u128, bd.w[j], s < 0);
+                }
+            }
+        }
+        for kk in 0..k {
+            let sa = a.sig[i * k + kk];
+            if sa == 0 {
+                continue;
+            }
+            let wa = a.w[i * k + kk];
+            let bsig = &b.sig[kk * n..(kk + 1) * n];
+            let bw = &b.w[kk * n..(kk + 1) * n];
+            for (j, q) in quires.iter_mut().enumerate() {
+                let p = sa * bsig[j];
+                if p != 0 {
+                    q.mac_raw(p.unsigned_abs() as u128, wa + bw[j],
+                              p < 0);
+                }
+            }
+        }
+        for (o, q) in out[r * n..(r + 1) * n].iter_mut().zip(&quires) {
+            *o = q.to_posit();
+        }
+    }
+}
+
+/// Round an exact `i64` fixed-point accumulator (value =
+/// `acc * 2^-frac_offset`) to a posit word — the kernel's single
+/// final rounding, identical to `Quire::to_posit`.
+pub fn encode_acc_i64(acc: i64, frac_offset: u32, fmt: PositFormat)
+                      -> u64 {
+    if acc == 0 {
+        return 0;
+    }
+    let neg = acc < 0;
+    let mag = acc.unsigned_abs();
+    let top = 63 - mag.leading_zeros();
+    let frac = if top == 0 { 0 } else { mag & ((1u64 << top) - 1) };
+    encode_from_parts(
+        Parts {
+            sign: neg,
+            scale: top as i32 - frac_offset as i32,
+            frac,
+            fbits: top,
+            sticky: false,
+        },
+        fmt,
+    )
+}
+
+/// `i128` variant of [`encode_acc_i64`]: fractions beyond 63 bits are
+/// compressed with a sticky bit, exactly like the quire readout.
+pub fn encode_acc_i128(acc: i128, frac_offset: u32, fmt: PositFormat)
+                       -> u64 {
+    if acc == 0 {
+        return 0;
+    }
+    let neg = acc < 0;
+    let mag = acc.unsigned_abs();
+    let top = 127 - mag.leading_zeros();
+    let frac_wide = if top == 0 {
+        0u128
+    } else {
+        mag & ((1u128 << top) - 1)
+    };
+    let (frac, fbits, sticky) = if top <= 63 {
+        (frac_wide as u64, top, false)
+    } else {
+        let drop = top - 63;
+        ((frac_wide >> drop) as u64, 63,
+         (frac_wide & ((1u128 << drop) - 1)) != 0)
+    };
+    encode_from_parts(
+        Parts {
+            sign: neg,
+            scale: top as i32 - frac_offset as i32,
+            frac,
+            fbits,
+            sticky,
+        },
+        fmt,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{from_f64, p_mul, to_f64, P16_FMT, P32_FMT,
+                       P8_FMT};
+    use crate::util::SplitMix64;
+
+    /// Scalar decode-per-MAC reference: one quire per output.
+    fn quire_ref(aw: &[u64], bw: &[u64], bias: Option<&[u64]>, m: usize,
+                 k: usize, n: usize, fmt: PositFormat) -> Vec<u64> {
+        let mut out = vec![0u64; m * n];
+        let mut q = Quire::new(fmt);
+        for i in 0..m {
+            for j in 0..n {
+                q.clear();
+                for kk in 0..k {
+                    q.mac(aw[i * k + kk], bw[kk * n + j]);
+                }
+                if let Some(bs) = bias {
+                    q.add_posit(bs[j]);
+                }
+                out[i * n + j] = q.to_posit();
+            }
+        }
+        out
+    }
+
+    fn rand_words(rng: &mut SplitMix64, len: usize, fmt: PositFormat)
+                  -> Vec<u64> {
+        (0..len)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    rng.next_u64() & fmt.mask() // raw patterns, NaR incl.
+                } else {
+                    from_f64(rng.wide(-6, 6), fmt)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_quire_reference_all_formats() {
+        let mut rng = SplitMix64::new(2024);
+        let shapes = [(1, 1, 1), (2, 3, 2), (3, 7, 5), (5, 11, 4),
+                      (4, 0, 3), (1, 33, 2), (6, 2, 6)];
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for (t, &(m, k, n)) in
+                shapes.iter().cycle().take(24).enumerate()
+            {
+                let aw = rand_words(&mut rng, m * k, fmt);
+                let bw = rand_words(&mut rng, k * n, fmt);
+                let bias = if t % 3 == 0 {
+                    None
+                } else {
+                    Some(rand_words(&mut rng, n, fmt))
+                };
+                let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+                let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+                let got = gemm(&pa, &pb, bias.as_deref());
+                let want =
+                    quire_ref(&aw, &bw, bias.as_deref(), m, k, n, fmt);
+                assert_eq!(got, want,
+                           "{fmt:?} shape ({m},{k},{n}) trial {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = SplitMix64::new(7);
+        let fmt = P16_FMT;
+        let (m, k, n) = (13, 9, 11); // deliberately non-divisible
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let seq = gemm_with_threads(&pa, &pb, None, 1);
+        for t in [2, 3, 5, 16, 64] {
+            assert_eq!(gemm_with_threads(&pa, &pb, None, t), seq,
+                       "threads={t}");
+        }
+    }
+
+    #[test]
+    fn single_mac_equals_p_mul() {
+        // A 1x1x1 GEMM is just a multiply; it must round like p_mul.
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let mut rng = SplitMix64::new(17);
+            for _ in 0..5_000 {
+                let a = rng.next_u64() & fmt.mask();
+                let b = rng.next_u64() & fmt.mask();
+                let pa = DecodedPlan::from_words(vec![a], 1, 1, fmt);
+                let pb = DecodedPlan::from_words(vec![b], 1, 1, fmt);
+                let got = gemm(&pa, &pb, None)[0];
+                assert_eq!(got, p_mul(a, b, fmt),
+                           "{fmt:?} {a:#x}*{b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn p16_long_k_takes_quire_path_exactly() {
+        // k beyond the i128 headroom bound must still be exact: all
+        // maxpos products (the worst case for accumulator growth).
+        let fmt = P16_FMT;
+        let k = P16_CHUNK + 3;
+        let mp = fmt.maxpos_word();
+        let aw = vec![mp; k];
+        let bw = vec![mp; k];
+        let pa = DecodedPlan::from_words(aw.clone(), 1, k, fmt);
+        let pb = DecodedPlan::from_words(bw.clone(), k, 1, fmt);
+        let got = gemm(&pa, &pb, None);
+        let want = quire_ref(&aw, &bw, None, 1, k, 1, fmt);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn bias_enters_before_rounding() {
+        // quire semantics: bias joins the exact accumulator, so
+        // sum+bias rounds once (not round(sum) + round-add(bias)).
+        let fmt = P8_FMT;
+        let a = from_f64(1.0, fmt);
+        let pa = DecodedPlan::from_words(vec![a; 4], 1, 4, fmt);
+        let pb = DecodedPlan::from_words(
+            vec![from_f64(16.0, fmt); 4], 4, 1, fmt);
+        let bias = vec![from_f64(0.25, fmt)];
+        let got = gemm(&pa, &pb, Some(bias.as_slice()))[0];
+        let want = quire_ref(&pa.words, &pb.words, Some(&bias), 1, 4, 1,
+                             fmt)[0];
+        assert_eq!(got, want);
+        // and differs from the post-rounded chain on this instance
+        assert_eq!(to_f64(got, fmt), 64.0); // 64.25 rounds to 64 once
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let fmt = P32_FMT;
+        let pa = DecodedPlan::from_words(vec![], 0, 5, fmt);
+        let pb = DecodedPlan::from_words(vec![0u64; 15], 5, 3, fmt);
+        assert!(gemm(&pa, &pb, None).is_empty());
+        // k = 0: outputs are just the rounded bias
+        let pa = DecodedPlan::from_words(vec![], 2, 0, fmt);
+        let pb = DecodedPlan::from_words(vec![], 0, 2, fmt);
+        let bias = vec![from_f64(1.5, fmt), 0];
+        let out = gemm(&pa, &pb, Some(bias.as_slice()));
+        assert_eq!(out, vec![bias[0], 0, bias[0], 0]);
+    }
+}

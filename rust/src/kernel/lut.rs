@@ -1,0 +1,194 @@
+//! Lazily-built lookup tables for the decode-once kernel.
+//!
+//! * per-format **decode LUTs** (8- and 16-bit words → planar
+//!   sign-folded significand + LSB exponent) — the software analogue of
+//!   the paper's Stage 1 unpack hardware, paid once per table instead of
+//!   once per MAC;
+//! * the **P8 exact-product LUT**: all 256×256 word pairs → the exact
+//!   product as a fixed-point integer at 2^-12 (every product of two
+//!   P(8,0) values is an integer multiple of 2^-12 with magnitude
+//!   ≤ 2^12, so an `i64` entry is exact). The GEMM inner loop for P8 is
+//!   then a single table add per MAC — no decode, no multiply, no shift;
+//! * the **P8 rounded-multiply LUT**: all word pairs → `p_mul` words,
+//!   for scalar/elementwise multiply traffic (verified exhaustively
+//!   against `p_mul` by `tests/kernel_planar.rs`).
+//!
+//! All tables build on first use behind `OnceLock` (~0.6 MB total) and
+//! are shared by every thread of the tiled GEMM.
+
+use std::sync::OnceLock;
+
+use crate::posit::{decode, p_mul, PositClass, PositFormat, P16_FMT,
+                   P8_FMT};
+
+/// Fixed-point LSB weight of the P8 accumulator: products of two P(8,0)
+/// values are exact multiples of 2^-12 (minpos² = 2^-12).
+pub const P8_ACC_FRAC_OFFSET: u32 = 12;
+
+/// Fixed-point LSB weight of the P16 accumulator: minpos² = 2^-56.
+pub const P16_ACC_FRAC_OFFSET: u32 = 56;
+
+/// Max accumulation depth of the P16 `i128` fast path before headroom
+/// could run out: |product| ≤ 2^112 at offset 56, so 2^14 terms keep the
+/// magnitude below 2^126. Longer reductions take the quire path.
+pub const P16_CHUNK: usize = 16384;
+
+/// One decoded word in planar form.
+///
+/// `sig` is the sign-folded significand (`±(1.frac)` as an integer,
+/// zero for posit 0 *and* for NaR — NaR is tracked out of band by
+/// [`super::DecodedPlan`]); `w` is the exponent of the significand's
+/// LSB (`scale - fbits`), so the represented value is `sig * 2^w`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecEntry {
+    /// Sign-folded significand (0 for zero/NaR).
+    pub sig: i32,
+    /// Exponent of the LSB: `scale - fbits`.
+    pub w: i16,
+    /// True for the NaR word.
+    pub nar: bool,
+}
+
+fn build_decode_lut(fmt: PositFormat) -> Vec<DecEntry> {
+    let size = 1usize << fmt.nbits;
+    let mut t = Vec::with_capacity(size);
+    for word in 0..size as u64 {
+        let d = decode(word, fmt);
+        t.push(match d.class {
+            PositClass::Zero => DecEntry { sig: 0, w: 0, nar: false },
+            PositClass::NaR => DecEntry { sig: 0, w: 0, nar: true },
+            PositClass::Normal => {
+                let s = d.significand() as i32;
+                DecEntry {
+                    sig: if d.sign { -s } else { s },
+                    w: (d.scale - d.fbits as i32) as i16,
+                    nar: false,
+                }
+            }
+        });
+    }
+    t
+}
+
+/// Decode LUT for P(8,0): word → planar fields.
+pub fn p8_decode_lut() -> &'static [DecEntry] {
+    static LUT: OnceLock<Vec<DecEntry>> = OnceLock::new();
+    LUT.get_or_init(|| build_decode_lut(P8_FMT))
+}
+
+/// Decode LUT for P(16,1): word → planar fields.
+pub fn p16_decode_lut() -> &'static [DecEntry] {
+    static LUT: OnceLock<Vec<DecEntry>> = OnceLock::new();
+    LUT.get_or_init(|| build_decode_lut(P16_FMT))
+}
+
+/// Exact-product LUT: entry `(a << 8) | b` holds the product of the P8
+/// values `a`·`b` as a signed fixed-point integer scaled by
+/// 2^[`P8_ACC_FRAC_OFFSET`]. Zero and NaR operands yield 0 (NaR is
+/// poisoned at the plan level).
+pub fn p8_prod_lut() -> &'static [i64] {
+    static LUT: OnceLock<Vec<i64>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let dec = p8_decode_lut();
+        let mut t = vec![0i64; 1 << 16];
+        for a in 0..256usize {
+            let da = dec[a];
+            if da.sig == 0 {
+                continue;
+            }
+            for b in 0..256usize {
+                let db = dec[b];
+                let p = da.sig as i64 * db.sig as i64;
+                if p != 0 {
+                    let shift = da.w as i32 + db.w as i32
+                        + P8_ACC_FRAC_OFFSET as i32;
+                    debug_assert!((0..=24).contains(&shift));
+                    t[(a << 8) | b] = p << shift;
+                }
+            }
+        }
+        t
+    })
+}
+
+/// Rounded-multiply LUT: entry `(a << 8) | b` is `p_mul(a, b)` — the
+/// full P8 multiplier as one load.
+pub fn p8_mul_lut() -> &'static [u8] {
+    static LUT: OnceLock<Vec<u8>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0u8; 1 << 16];
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                t[((a << 8) | b) as usize] = p_mul(a, b, P8_FMT) as u8;
+            }
+        }
+        t
+    })
+}
+
+/// Table-lookup P8 multiply (bit-identical to `p_mul` on P8 words).
+#[inline]
+pub fn p8_mul(a: u8, b: u8) -> u8 {
+    p8_mul_lut()[((a as usize) << 8) | b as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::to_f64;
+
+    /// Exact 2^e as f64 (e within the normal range).
+    fn pow2(e: i32) -> f64 {
+        f64::from_bits(((1023 + e as i64) as u64) << 52)
+    }
+
+    #[test]
+    fn decode_lut_matches_decode() {
+        for fmt in [P8_FMT, P16_FMT] {
+            let lut = if fmt.nbits == 8 {
+                p8_decode_lut()
+            } else {
+                p16_decode_lut()
+            };
+            for word in 0..(1u64 << fmt.nbits) {
+                let e = lut[word as usize];
+                if word == fmt.nar() {
+                    assert!(e.nar && e.sig == 0);
+                    continue;
+                }
+                assert!(!e.nar);
+                let v = to_f64(word, fmt);
+                let mine = e.sig as f64 * pow2(e.w as i32);
+                assert_eq!(mine, v, "{fmt:?} word {word:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn prod_lut_is_exact() {
+        let lut = p8_prod_lut();
+        let scale = pow2(P8_ACC_FRAC_OFFSET as i32);
+        for a in 0..256u64 {
+            let va = to_f64(a, P8_FMT);
+            for b in 0..256u64 {
+                let vb = to_f64(b, P8_FMT);
+                let want = if va.is_nan() || vb.is_nan() {
+                    0.0
+                } else {
+                    va * vb * scale
+                };
+                let got = lut[((a << 8) | b) as usize] as f64;
+                assert_eq!(got, want, "{a:#x} * {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_lut_spot_checks() {
+        use crate::posit::from_f64;
+        let w = |v: f64| from_f64(v, P8_FMT) as u8;
+        assert_eq!(p8_mul(w(1.5), w(-2.25)), w(-3.375));
+        assert_eq!(p8_mul(w(0.0), w(7.0)), 0);
+        assert_eq!(p8_mul(0x80, w(1.0)), 0x80); // NaR absorbs
+    }
+}

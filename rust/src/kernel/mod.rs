@@ -1,0 +1,54 @@
+//! Decode-once planar compute kernel — the functional hot path.
+//!
+//! ## Why
+//!
+//! SPADE's architectural claim (§II) is that a SIMD posit datapath pays
+//! the expensive unpack machinery — leading-one detector, complementor,
+//! barrel shifter — **once per word**, shared across lanes, rather than
+//! once per scalar operation. The original functional path here had the
+//! software equivalent of the opposite: every MAC re-ran the full
+//! regime/exponent/fraction decode of both operands. This module is the
+//! software mirror of the paper's lane-fused datapath, with the decode
+//! amortization pushed one level further (PDPU, Li et al. 2023 does the
+//! same in RTL for fused dot products):
+//!
+//! * **Stage 1 (unpack) → [`DecodedPlan`]**: each operand tensor is
+//!   decoded *once* into planar (structure-of-arrays) field vectors —
+//!   sign-folded significand and LSB exponent. A k-deep GEMM reuses
+//!   each decoded element n (or m) times, so per-MAC decode cost goes
+//!   to ~zero. For 8/16-bit words decode itself is a table lookup
+//!   ([`lut`]); ExPAN(N)D (Nambi et al. 2020) shows P8's 2^16 pair
+//!   space makes even full multiply tables practically free, which the
+//!   [`lut::p8_prod_lut`] exploits: the whole P8 MAC becomes one
+//!   indexed `i64` add.
+//! * **Stages 2–3 (multiply + quire) → fused integer MAC**: products of
+//!   planar significands accumulate in wide fixed point (`i64` for P8,
+//!   `i128` for P16, the 512-bit [`crate::posit::Quire`] via `mac_raw`
+//!   for P32) with **no intermediate rounding** — numerically identical
+//!   to the quire contract, which `Backend::PositExact` oracles in the
+//!   property tests.
+//! * **Stages 4–5 (normalize + round) → one `encode_from_parts` per
+//!   output**, exactly like the hardware's single Stage-5 rounding.
+//! * **Row-block tiling** fans output rows across scoped threads
+//!   ([`gemm::auto_threads`] decides when it pays); results are
+//!   bit-identical at any thread count because each output element's
+//!   reduction is sequential and exact.
+//!
+//! ## Who uses it
+//!
+//! [`crate::systolic::gemm::SystolicGemm::run`] (the functional GEMM),
+//! [`crate::nn::exec`]'s `Backend::Posit` (with weight plans cached per
+//! (layer, mode) in [`crate::nn::exec::Session`]), and the
+//! [`crate::coordinator`] planar serving backend all route through
+//! [`gemm()`]. `benches/hotpath.rs` tracks planar-vs-scalar throughput
+//! and thread scaling.
+
+pub mod gemm;
+pub mod lut;
+pub mod plan;
+
+pub use gemm::{auto_threads, encode_acc_i128, encode_acc_i64, gemm,
+               gemm_with_threads};
+pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
+              p16_decode_lut, DecEntry};
+pub use plan::DecodedPlan;

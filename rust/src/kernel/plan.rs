@@ -1,0 +1,216 @@
+//! Planar (structure-of-arrays) decoded tensors.
+//!
+//! A [`DecodedPlan`] holds a matrix of posit words **decoded once** into
+//! parallel field arrays: the sign-folded significand `sig[i]` and the
+//! LSB exponent `w[i]` (value = `sig * 2^w`). Every downstream MAC then
+//! reads two integers instead of re-running the regime/exponent/fraction
+//! unpack — the software analogue of SPADE's shared Stage-1 decode
+//! hardware, amortized across the whole tensor instead of per lane-op.
+//!
+//! Zero encodes as `sig == 0` (it vanishes in products automatically);
+//! NaR also stores `sig == 0` and is tracked out of band via the
+//! row/column masks, which the GEMM applies as a final poisoning pass —
+//! exactly the quire's absorbing-NaR semantics.
+
+use crate::posit::{decode, from_f64, to_f64, PositClass, PositFormat,
+                   P16_FMT, P8_FMT};
+
+use super::lut;
+
+/// A posit matrix decoded once into planar field arrays. See module
+/// docs.
+#[derive(Debug, Clone)]
+pub struct DecodedPlan {
+    /// Posit format of every element.
+    pub fmt: PositFormat,
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// The quantized posit words (row-major) — kept for the P8
+    /// product-LUT path and for re-encoding-free round trips.
+    pub words: Vec<u64>,
+    /// Sign-folded significands (0 for zero and NaR).
+    pub sig: Vec<i64>,
+    /// LSB exponents (`scale - fbits`): value = `sig * 2^w`.
+    pub w: Vec<i32>,
+    /// True if any element is NaR.
+    pub has_nar: bool,
+    /// Per-row NaR mask (empty unless `has_nar`).
+    pub nar_rows: Vec<bool>,
+    /// Per-column NaR mask (empty unless `has_nar`).
+    pub nar_cols: Vec<bool>,
+}
+
+impl DecodedPlan {
+    /// Decode a row-major word matrix. For 8/16-bit formats the decode
+    /// runs through the lazily-built LUTs; wider formats decode
+    /// directly (a 2^32-entry table is not worth its memory).
+    pub fn from_words(words: Vec<u64>, rows: usize, cols: usize,
+                      fmt: PositFormat) -> DecodedPlan {
+        assert_eq!(words.len(), rows * cols,
+                   "plan shape {rows}x{cols} vs {} words", words.len());
+        // Canonicalize to the low nbits (the LUT paths index by word).
+        let words: Vec<u64> =
+            words.into_iter().map(|w| w & fmt.mask()).collect();
+        let len = words.len();
+        let mut sig = Vec::with_capacity(len);
+        let mut w = Vec::with_capacity(len);
+        let mut has_nar = false;
+        let mut nar_rows: Vec<bool> = Vec::new();
+        let mut nar_cols: Vec<bool> = Vec::new();
+
+        let nar_at = |idx: usize, nr: &mut Vec<bool>,
+                          nc: &mut Vec<bool>, seen: &mut bool| {
+            if !*seen {
+                *seen = true;
+                *nr = vec![false; rows];
+                *nc = vec![false; cols];
+            }
+            nr[idx / cols] = true;
+            nc[idx % cols] = true;
+        };
+
+        // LUT fast paths apply only to the exact standard formats the
+        // tables were built for; any other (nbits, es) combination —
+        // PositFormat is freely constructible — decodes generically.
+        if fmt == P8_FMT || fmt == P16_FMT {
+            let t = if fmt == P8_FMT {
+                lut::p8_decode_lut()
+            } else {
+                lut::p16_decode_lut()
+            };
+            for (idx, &word) in words.iter().enumerate() {
+                let e = t[word as usize];
+                sig.push(e.sig as i64);
+                w.push(e.w as i32);
+                if e.nar {
+                    nar_at(idx, &mut nar_rows, &mut nar_cols,
+                           &mut has_nar);
+                }
+            }
+        } else {
+            for (idx, &word) in words.iter().enumerate() {
+                let d = decode(word, fmt);
+                match d.class {
+                    PositClass::Zero => {
+                        sig.push(0);
+                        w.push(0);
+                    }
+                    PositClass::NaR => {
+                        sig.push(0);
+                        w.push(0);
+                        nar_at(idx, &mut nar_rows, &mut nar_cols,
+                               &mut has_nar);
+                    }
+                    PositClass::Normal => {
+                        let s = d.significand() as i64;
+                        sig.push(if d.sign { -s } else { s });
+                        w.push(d.scale - d.fbits as i32);
+                    }
+                }
+            }
+        }
+
+        DecodedPlan { fmt, rows, cols, words, sig, w, has_nar, nar_rows,
+                      nar_cols }
+    }
+
+    /// Quantize an f64 matrix to `fmt` and decode it (one pass).
+    pub fn from_f64(data: &[f64], rows: usize, cols: usize,
+                    fmt: PositFormat) -> DecodedPlan {
+        let words = data.iter().map(|&v| from_f64(v, fmt)).collect();
+        Self::from_words(words, rows, cols, fmt)
+    }
+
+    /// Quantize an f32 matrix to `fmt` and decode it.
+    pub fn from_f32(data: &[f32], rows: usize, cols: usize,
+                    fmt: PositFormat) -> DecodedPlan {
+        let words =
+            data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+        Self::from_words(words, rows, cols, fmt)
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True if the plan has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Word at (row, col).
+    #[inline]
+    pub fn word(&self, r: usize, c: usize) -> u64 {
+        self.words[r * self.cols + c]
+    }
+
+    /// Decode back to f64 values (NaR → NaN).
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.words.iter().map(|&wd| to_f64(wd, self.fmt)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16_FMT, P32_FMT, P8_FMT};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn planar_fields_reconstruct_values() {
+        // sig * 2^w must equal the decoded value for every word, all
+        // three formats (p32 sampled).
+        for fmt in [P8_FMT, P16_FMT] {
+            for word in 0..(1u64 << fmt.nbits) {
+                let p = DecodedPlan::from_words(vec![word], 1, 1, fmt);
+                let v = to_f64(word, fmt);
+                if word == fmt.nar() {
+                    assert!(p.has_nar && p.sig[0] == 0);
+                    continue;
+                }
+                let mine = p.sig[0] as f64
+                    * f64::from_bits(((1023 + p.w[0] as i64) as u64)
+                                     << 52);
+                assert_eq!(mine, v, "{fmt:?} {word:#x}");
+            }
+        }
+        let mut rng = SplitMix64::new(91);
+        for _ in 0..50_000 {
+            let word = rng.next_u64() & P32_FMT.mask();
+            if word == P32_FMT.nar() {
+                continue;
+            }
+            let p = DecodedPlan::from_words(vec![word], 1, 1, P32_FMT);
+            let v = to_f64(word, P32_FMT);
+            let mine = p.sig[0] as f64
+                * f64::from_bits(((1023 + p.w[0] as i64) as u64) << 52);
+            assert_eq!(mine, v, "{word:#x}");
+        }
+    }
+
+    #[test]
+    fn nar_masks_mark_rows_and_cols() {
+        let fmt = P8_FMT;
+        let words = vec![0x40, 0x80, 0x40,
+                         0x40, 0x40, 0x40]; // NaR at (0, 1)
+        let p = DecodedPlan::from_words(words, 2, 3, fmt);
+        assert!(p.has_nar);
+        assert_eq!(p.nar_rows, vec![true, false]);
+        assert_eq!(p.nar_cols, vec![false, true, false]);
+    }
+
+    #[test]
+    fn quantize_round_trip() {
+        let fmt = P16_FMT;
+        let vals = [0.0, 1.5, -2.25, 100.0, 1e-4];
+        let p = DecodedPlan::from_f64(&vals, 1, 5, fmt);
+        let back = p.to_f64();
+        for (v, b) in vals.iter().zip(&back) {
+            assert_eq!(*b, to_f64(from_f64(*v, fmt), fmt));
+        }
+        assert!(!p.has_nar && p.nar_rows.is_empty());
+    }
+}

@@ -26,6 +26,12 @@
 //! * [`systolic`] — cycle-level weight-stationary systolic array of SPADE
 //!   PEs with banked scratchpads and a Cheshire-like command controller
 //!   (Fig. 3).
+//! * [`kernel`] — the decode-once planar compute kernel: operand tensors
+//!   decoded once into structure-of-arrays fields, P8 table-lookup
+//!   multiply, exact fused-MAC accumulation with a single final
+//!   rounding, and multithreaded row-block tiling. This is the
+//!   functional hot path behind the systolic fast GEMM, `nn` inference
+//!   and coordinator serving.
 //! * [`nn`] / [`data`] — posit-quantized DNN inference stack (tensors,
 //!   layers, model zoo, SPDW weight loading) and the synthetic datasets
 //!   used for the Fig. 4 accuracy reproduction.
@@ -56,6 +62,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod data;
 pub mod engine;
+pub mod kernel;
 pub mod nn;
 pub mod posit;
 pub mod runtime;

@@ -1,20 +1,35 @@
 //! Inference execution backends.
 //!
 //! * [`Backend::F32`] — plain f32 (the Fig. 4 floating-point baseline);
-//! * [`Backend::Posit`] — functional posit through the systolic fast
-//!   path: quantized operands, exact accumulation, one rounding per
-//!   output, **plus** cycle/energy statistics from the dataflow model —
-//!   this is what full-network evaluation and the throughput bench use;
+//! * [`Backend::Posit`] — functional posit through the decode-once
+//!   planar kernel ([`crate::kernel`]): quantized operands decoded once,
+//!   exact accumulation, one rounding per output, **plus** cycle/energy
+//!   statistics from the systolic dataflow model — this is what
+//!   full-network evaluation and the throughput bench use;
 //! * [`Backend::PositExact`] — quire-exact bit-level path through
-//!   [`crate::posit::Quire`] (slow; validates the functional path).
+//!   [`crate::posit::Quire`] (slow; the oracle the planar kernel is
+//!   property-tested against).
 //!
 //! A per-MAC-layer [`Precision`] policy expresses the paper's layer-wise
 //! precision heterogeneity; `forward_policy` switches the array MODE
 //! between layers exactly as the SIMD engine would.
+//!
+//! [`Session`] is the stateful entry point: it caches each weight
+//! tensor's quantization+decode ([`DecodedPlan`]) per (layer, mode), so
+//! repeated forwards — batch serving, accuracy sweeps, policy search —
+//! pay weight decode once instead of per call. The cache key includes
+//! the mode, so changing the precision policy transparently invalidates
+//! stale plans. The free [`forward`] / [`forward_policy`] functions keep
+//! the original stateless API (fresh session per call).
 
-use anyhow::{ensure, Result};
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
 
 use crate::engine::Mode;
+use crate::kernel::{self, DecodedPlan};
 use crate::posit::{from_f64, to_f64, Quire};
 use crate::systolic::{ArrayConfig, GemmStats, SystolicGemm};
 
@@ -27,7 +42,7 @@ use super::tensor::Tensor;
 pub enum Backend {
     /// f32 reference.
     F32,
-    /// Functional posit on the systolic fast path (with stats).
+    /// Functional posit on the planar kernel (with stats).
     Posit,
     /// Bit-exact quire path (slow; small batches only).
     PositExact,
@@ -60,137 +75,273 @@ pub const DEFAULT_ROWS: usize = 8;
 /// Default PE columns.
 pub const DEFAULT_COLS: usize = 8;
 
-/// Run `model` on an NHWC input batch under a uniform precision.
+/// Stateful executor: a model plus cached per-(layer, mode) weight
+/// plans. See module docs.
+pub struct Session<'m> {
+    model: Cow<'m, Model>,
+    weight_plans: HashMap<(usize, Mode), Arc<DecodedPlan>>,
+    bias_words: HashMap<(usize, Mode), Arc<Vec<u64>>>,
+    /// Weight-plan cache hits (telemetry; bias rides along uncounted).
+    pub cache_hits: u64,
+    /// Weight-plan cache misses (each one quantizes+decodes a tensor).
+    pub cache_misses: u64,
+}
+
+impl<'m> Session<'m> {
+    /// Session borrowing a model.
+    pub fn new(model: &'m Model) -> Session<'m> {
+        Session {
+            model: Cow::Borrowed(model),
+            weight_plans: HashMap::new(),
+            bias_words: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// Session owning its model (for worker threads).
+    pub fn owned(model: Model) -> Session<'static> {
+        Session {
+            model: Cow::Owned(model),
+            weight_plans: HashMap::new(),
+            bias_words: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// The model this session executes.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Number of cached weight plans.
+    pub fn cached_plans(&self) -> usize {
+        self.weight_plans.len()
+    }
+
+    /// Run the model on an NHWC input batch under a uniform precision.
+    pub fn forward(&mut self, x: &Tensor, prec: Precision,
+                   backend: Backend) -> Result<(Tensor, NetStats)> {
+        let policy = vec![prec; self.model.spec.mac_layers()];
+        self.forward_policy(x, &policy, backend)
+    }
+
+    /// Run with a per-MAC-layer precision policy.
+    pub fn forward_policy(&mut self, x: &Tensor, policy: &[Precision],
+                          backend: Backend)
+                          -> Result<(Tensor, NetStats)> {
+        ensure!(policy.len() == self.model.spec.mac_layers(),
+                "policy length {} != MAC layers {}", policy.len(),
+                self.model.spec.mac_layers());
+        ensure!(x.shape.len() == 4, "input must be NHWC");
+        let n = x.shape[0];
+
+        let nlayers = self.model.spec.layers.len();
+        let mut act = x.clone();
+        let mut stats = NetStats::default();
+        let mut mac_idx = 0usize;
+
+        for i in 0..nlayers {
+            // One cheap per-layer clone (LayerSpec holds only scalars)
+            // rather than cloning the whole spec Vec per forward.
+            let layer = self.model.spec.layers[i].clone();
+            match layer {
+                LayerSpec::Conv { k, out, pad, relu } => {
+                    let (patches, ho, wo) = layers::im2col(&act, k, pad);
+                    let prec = policy[mac_idx];
+                    mac_idx += 1;
+                    let mut y = self.mac_layer(
+                        &patches, i, prec, backend, &mut stats,
+                        format!("layer{i}:conv{k}x{k}"))?;
+                    if relu {
+                        layers::relu(&mut y);
+                    }
+                    act = y.reshape(&[n, ho, wo, out]);
+                }
+                LayerSpec::MaxPool { k } => {
+                    act = layers::maxpool(&act, k);
+                }
+                LayerSpec::Flatten => {
+                    let feat = act.len() / n;
+                    act = act.reshape(&[n, feat]);
+                }
+                LayerSpec::Dense { relu, .. } => {
+                    let prec = policy[mac_idx];
+                    mac_idx += 1;
+                    let mut y = self.mac_layer(
+                        &act, i, prec, backend, &mut stats,
+                        format!("layer{i}:dense"))?;
+                    if relu {
+                        layers::relu(&mut y);
+                    }
+                    act = y;
+                }
+            }
+        }
+        Ok((act, stats))
+    }
+
+    /// The layer's weight as a 2-D GEMM matrix shape (conv HWIO
+    /// [k,k,c,out] flattens row-major to [k*k*c, out]).
+    fn weight_shape2(&self, layer_idx: usize) -> Result<(usize, usize)> {
+        let w = self
+            .model
+            .params
+            .get(&format!("layer{layer_idx}/w"))
+            .with_context(|| format!("missing layer{layer_idx}/w"))?;
+        Ok(match w.shape.len() {
+            2 => (w.shape[0], w.shape[1]),
+            4 => (w.shape[0] * w.shape[1] * w.shape[2], w.shape[3]),
+            _ => anyhow::bail!("layer{layer_idx}/w has rank {}",
+                               w.shape.len()),
+        })
+    }
+
+    /// Cached weight plan for (layer, mode): quantize+decode once.
+    fn weight_plan(&mut self, layer_idx: usize, mode: Mode)
+                   -> Result<Arc<DecodedPlan>> {
+        if let Some(p) = self.weight_plans.get(&(layer_idx, mode)) {
+            self.cache_hits += 1;
+            return Ok(p.clone());
+        }
+        self.cache_misses += 1;
+        let (rows, cols) = self.weight_shape2(layer_idx)?;
+        let w = &self.model.params[&format!("layer{layer_idx}/w")];
+        let plan = Arc::new(DecodedPlan::from_f32(&w.data, rows, cols,
+                                                  mode.format()));
+        self.weight_plans.insert((layer_idx, mode), plan.clone());
+        Ok(plan)
+    }
+
+    /// Cached quantized bias words for (layer, mode).
+    fn bias_plan(&mut self, layer_idx: usize, mode: Mode)
+                 -> Result<Arc<Vec<u64>>> {
+        if let Some(b) = self.bias_words.get(&(layer_idx, mode)) {
+            return Ok(b.clone());
+        }
+        let b = self
+            .model
+            .params
+            .get(&format!("layer{layer_idx}/b"))
+            .with_context(|| format!("missing layer{layer_idx}/b"))?;
+        let fmt = mode.format();
+        let words: Vec<u64> =
+            b.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+        let arc = Arc::new(words);
+        self.bias_words.insert((layer_idx, mode), arc.clone());
+        Ok(arc)
+    }
+
+    /// One MAC layer through the selected backend. Bias enters the
+    /// accumulator before the final rounding (quire semantics).
+    fn mac_layer(&mut self, a: &Tensor, layer_idx: usize,
+                 prec: Precision, backend: Backend,
+                 stats: &mut NetStats, name: String) -> Result<Tensor> {
+        let (m, k) = (a.shape[0], a.shape[1]);
+
+        let mode = match (prec, backend) {
+            (Precision::F32, _) | (_, Backend::F32) => {
+                let (rows, cols) = self.weight_shape2(layer_idx)?;
+                let w =
+                    &self.model.params[&format!("layer{layer_idx}/w")];
+                let b =
+                    &self.model.params[&format!("layer{layer_idx}/b")];
+                // Dense weights are already 2-D: borrow them directly;
+                // only conv HWIO weights need a reshaped copy.
+                if w.shape.len() == 2 {
+                    return Ok(layers::gemm_bias_f32(a, w, &b.data));
+                }
+                let wmat = Tensor::from_vec(&[rows, cols],
+                                            w.data.clone());
+                return Ok(layers::gemm_bias_f32(a, &wmat, &b.data));
+            }
+            (Precision::Posit(mode), _) => mode,
+        };
+
+        match backend {
+            Backend::F32 => unreachable!(),
+            Backend::Posit => {
+                let fmt = mode.format();
+                let wplan = self.weight_plan(layer_idx, mode)?;
+                let bwords = self.bias_plan(layer_idx, mode)?;
+                ensure!(wplan.rows == k,
+                        "layer{layer_idx}: weight rows {} != k {k}",
+                        wplan.rows);
+                let nn = wplan.cols;
+                let pa = DecodedPlan::from_f32(&a.data, m, k, fmt);
+                let words =
+                    kernel::gemm(&pa, &wplan, Some(bwords.as_slice()));
+                let out: Vec<f32> = words
+                    .iter()
+                    .map(|&wd| to_f64(wd, fmt) as f32)
+                    .collect();
+                let cfg = ArrayConfig { rows: DEFAULT_ROWS,
+                                        cols: DEFAULT_COLS, mode };
+                let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
+                stats.absorb(name, mode.tag(), &gs);
+                Ok(Tensor::from_vec(&[m, nn], out))
+            }
+            Backend::PositExact => {
+                let fmt = mode.format();
+                let (rows, cols) = self.weight_shape2(layer_idx)?;
+                ensure!(rows == k,
+                        "layer{layer_idx}: weight rows {rows} != k {k}");
+                let nn = cols;
+                let w =
+                    &self.model.params[&format!("layer{layer_idx}/w")];
+                let b =
+                    &self.model.params[&format!("layer{layer_idx}/b")];
+                let aw: Vec<u64> = a
+                    .data
+                    .iter()
+                    .map(|&v| from_f64(v as f64, fmt))
+                    .collect();
+                let ww: Vec<u64> = w
+                    .data
+                    .iter()
+                    .map(|&v| from_f64(v as f64, fmt))
+                    .collect();
+                let bw: Vec<u64> = b
+                    .data
+                    .iter()
+                    .map(|&v| from_f64(v as f64, fmt))
+                    .collect();
+                let mut out = vec![0.0f32; m * nn];
+                let mut q = Quire::new(fmt);
+                for i in 0..m {
+                    for j in 0..nn {
+                        q.clear();
+                        for kk in 0..k {
+                            q.mac(aw[i * k + kk], ww[kk * nn + j]);
+                        }
+                        q.add_posit(bw[j]);
+                        out[i * nn + j] =
+                            to_f64(q.to_posit(), fmt) as f32;
+                    }
+                }
+                // stats follow the same dataflow formulas
+                let cfg = ArrayConfig { rows: DEFAULT_ROWS,
+                                        cols: DEFAULT_COLS, mode };
+                let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
+                stats.absorb(name, mode.tag(), &gs);
+                Ok(Tensor::from_vec(&[m, nn], out))
+            }
+        }
+    }
+}
+
+/// Run `model` on an NHWC input batch under a uniform precision
+/// (stateless: a fresh [`Session`] per call).
 pub fn forward(model: &Model, x: &Tensor, prec: Precision,
                backend: Backend) -> Result<(Tensor, NetStats)> {
-    let policy = vec![prec; model.spec.mac_layers()];
-    forward_policy(model, x, &policy, backend)
+    Session::new(model).forward(x, prec, backend)
 }
 
-/// Run with a per-MAC-layer precision policy.
+/// Run with a per-MAC-layer precision policy (stateless).
 pub fn forward_policy(model: &Model, x: &Tensor, policy: &[Precision],
                       backend: Backend) -> Result<(Tensor, NetStats)> {
-    ensure!(policy.len() == model.spec.mac_layers(),
-            "policy length {} != MAC layers {}", policy.len(),
-            model.spec.mac_layers());
-    ensure!(x.shape.len() == 4, "input must be NHWC");
-    let n = x.shape[0];
-
-    let mut act = x.clone();
-    let mut stats = NetStats::default();
-    let mut mac_idx = 0usize;
-
-    for (i, layer) in model.spec.layers.iter().enumerate() {
-        match *layer {
-            LayerSpec::Conv { k, out, pad, relu } => {
-                let w = &model.params[&format!("layer{i}/w")];
-                let b = &model.params[&format!("layer{i}/b")];
-                let (patches, ho, wo) = layers::im2col(&act, k, pad);
-                let wmat = Tensor::from_vec(
-                    &[w.shape[0] * w.shape[1] * w.shape[2], w.shape[3]],
-                    w.data.clone(),
-                );
-                let prec = policy[mac_idx];
-                mac_idx += 1;
-                let mut y = mac_layer(&patches, &wmat, &b.data, prec,
-                                      backend, &mut stats,
-                                      format!("layer{i}:conv{k}x{k}"))?;
-                if relu {
-                    layers::relu(&mut y);
-                }
-                act = y.reshape(&[n, ho, wo, out]);
-            }
-            LayerSpec::MaxPool { k } => {
-                act = layers::maxpool(&act, k);
-            }
-            LayerSpec::Flatten => {
-                let feat = act.len() / n;
-                act = act.reshape(&[n, feat]);
-            }
-            LayerSpec::Dense { relu, .. } => {
-                let w = &model.params[&format!("layer{i}/w")];
-                let b = &model.params[&format!("layer{i}/b")];
-                let prec = policy[mac_idx];
-                mac_idx += 1;
-                let mut y = mac_layer(&act, w, &b.data, prec, backend,
-                                      &mut stats,
-                                      format!("layer{i}:dense"))?;
-                if relu {
-                    layers::relu(&mut y);
-                }
-                act = y;
-            }
-        }
-    }
-    Ok((act, stats))
-}
-
-/// One MAC layer through the selected backend. Bias enters the quire
-/// before the final rounding (matching `posit_dense` in the kernels).
-fn mac_layer(a: &Tensor, w: &Tensor, bias: &[f32], prec: Precision,
-             backend: Backend, stats: &mut NetStats, name: String)
-             -> Result<Tensor> {
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let nn = w.shape[1];
-
-    let mode = match (prec, backend) {
-        (Precision::F32, _) | (_, Backend::F32) => {
-            return Ok(layers::gemm_bias_f32(a, w, bias));
-        }
-        (Precision::Posit(mode), _) => mode,
-    };
-
-    match backend {
-        Backend::F32 => unreachable!(),
-        Backend::Posit => {
-            let cfg = ArrayConfig { rows: DEFAULT_ROWS, cols: DEFAULT_COLS,
-                                    mode };
-            let g = SystolicGemm::new(cfg);
-            let af: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
-            let wf: Vec<f64> = w.data.iter().map(|&v| v as f64).collect();
-            let bf: Vec<f64> = bias.iter().map(|&v| v as f64).collect();
-            // bias joins the accumulator before the single final rounding
-            let (out, gs) = g.run_bias(&af, &wf, Some(&bf), m, k, nn);
-            stats.absorb(name, mode_name(mode), &gs);
-            Ok(Tensor::from_vec(&[m, nn],
-                                out.iter().map(|&v| v as f32).collect()))
-        }
-        Backend::PositExact => {
-            let fmt = mode.format();
-            let aw: Vec<u64> =
-                a.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
-            let ww: Vec<u64> =
-                w.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
-            let bw: Vec<u64> =
-                bias.iter().map(|&v| from_f64(v as f64, fmt)).collect();
-            let mut out = vec![0.0f32; m * nn];
-            let mut q = Quire::new(fmt);
-            for i in 0..m {
-                for j in 0..nn {
-                    q.clear();
-                    for kk in 0..k {
-                        q.mac(aw[i * k + kk], ww[kk * nn + j]);
-                    }
-                    q.add_posit(bw[j]);
-                    out[i * nn + j] = to_f64(q.to_posit(), fmt) as f32;
-                }
-            }
-            // stats follow the same dataflow formulas
-            let cfg = ArrayConfig { rows: DEFAULT_ROWS, cols: DEFAULT_COLS,
-                                    mode };
-            let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
-            stats.absorb(name, mode_name(mode), &gs);
-            Ok(Tensor::from_vec(&[m, nn], out))
-        }
-    }
-}
-
-fn mode_name(mode: Mode) -> &'static str {
-    match mode {
-        Mode::P8x4 => "p8",
-        Mode::P16x2 => "p16",
-        Mode::P32x1 => "p32",
-    }
+    Session::new(model).forward_policy(x, policy, backend)
 }
 
 /// Top-1 accuracy of logits against labels.
@@ -262,6 +413,19 @@ mod tests {
     }
 
     #[test]
+    fn posit_fast_matches_exact_p32() {
+        // The planar kernel is quire-exact, so P32 now agrees with the
+        // bit-level oracle too (the old f64-proxy path could not).
+        let m = tiny_model();
+        let x = rand_input(3, 12);
+        let prec = Precision::Posit(Mode::P32x1);
+        let (fast, _) = forward(&m, &x, prec, Backend::Posit).unwrap();
+        let (exact, _) =
+            forward(&m, &x, prec, Backend::PositExact).unwrap();
+        assert_eq!(fast.data, exact.data);
+    }
+
+    #[test]
     fn p32_tracks_f32_closely() {
         let m = tiny_model();
         let x = rand_input(4, 7);
@@ -294,6 +458,48 @@ mod tests {
         let x = rand_input(1, 9);
         let bad = [Precision::F32];
         assert!(forward_policy(&m, &x, &bad, Backend::F32).is_err());
+    }
+
+    #[test]
+    fn session_caches_weight_plans_and_invalidates_on_policy_change() {
+        let m = tiny_model();
+        let x = rand_input(2, 11);
+        let mut sess = Session::new(&m);
+
+        let p8 = vec![Precision::Posit(Mode::P8x4); 2];
+        sess.forward_policy(&x, &p8, Backend::Posit).unwrap();
+        assert_eq!(sess.cache_misses, 2); // one decode per MAC layer
+        assert_eq!(sess.cache_hits, 0);
+        assert_eq!(sess.cached_plans(), 2);
+
+        // Same policy again: pure cache hits, no re-quantization.
+        sess.forward_policy(&x, &p8, Backend::Posit).unwrap();
+        assert_eq!(sess.cache_misses, 2);
+        assert_eq!(sess.cache_hits, 2);
+
+        // Policy change: the (layer, mode) keys differ, so the stale
+        // P8 plans are not reused — the cache invalidates by keying.
+        let p16 = vec![Precision::Posit(Mode::P16x2); 2];
+        sess.forward_policy(&x, &p16, Backend::Posit).unwrap();
+        assert_eq!(sess.cache_misses, 4);
+        assert_eq!(sess.cached_plans(), 4);
+
+        // Cached execution must be bit-identical to the stateless path.
+        let (y_cached, _) =
+            sess.forward_policy(&x, &p8, Backend::Posit).unwrap();
+        let (y_fresh, _) =
+            forward_policy(&m, &x, &p8, Backend::Posit).unwrap();
+        assert_eq!(y_cached.data, y_fresh.data);
+    }
+
+    #[test]
+    fn owned_session_serves_without_borrow() {
+        let mut sess = Session::owned(tiny_model());
+        let x = rand_input(1, 13);
+        let (y, _) = sess
+            .forward(&x, Precision::Posit(Mode::P8x4), Backend::Posit)
+            .unwrap();
+        assert_eq!(y.shape, vec![1, 3]);
     }
 
     #[test]

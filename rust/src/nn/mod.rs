@@ -23,7 +23,7 @@ pub mod quant;
 pub mod tensor;
 pub mod weights;
 
-pub use exec::{Backend, NetStats};
+pub use exec::{Backend, NetStats, Session};
 pub use policy::{search as policy_search, PolicyResult};
 pub use model::{LayerSpec, Model, ModelSpec, Precision};
 pub use tensor::Tensor;

@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::engine::Mode;
 
-use super::exec::{accuracy, forward, forward_policy, Backend};
+use super::exec::{accuracy, Backend, Session};
 use super::model::{Model, Precision};
 use super::tensor::Tensor;
 
@@ -68,12 +68,16 @@ pub fn search(model: &Model, x: &Tensor, labels: &[u8], tolerance: f64)
     let layers = model.spec.mac_layers();
     let macs = model.spec.layer_macs();
 
-    let (f32_logits, _) = forward(model, x, Precision::F32, Backend::F32)?;
+    // One session for the whole search: each (layer, mode) weight
+    // tensor is quantized+decoded at most once across all trials.
+    let mut sess = Session::new(model);
+
+    let (f32_logits, _) = sess.forward(x, Precision::F32, Backend::F32)?;
     let baseline_acc = accuracy(&f32_logits, labels);
 
     let mut policy = vec![Precision::Posit(Mode::P32x1); layers];
-    let (_, p32_stats) = forward_policy(model, x, &policy,
-                                        Backend::Posit)?;
+    let (_, p32_stats) = sess.forward_policy(x, &policy,
+                                             Backend::Posit)?;
     let p32_cycles = p32_stats.cycles;
 
     // visit layers by descending MAC weight, two demotion rounds
@@ -95,8 +99,8 @@ pub fn search(model: &Model, x: &Tensor, labels: &[u8], tolerance: f64)
             let mut trial = policy.clone();
             trial[li] = cand;
             tried += 1;
-            let (logits, _) = forward_policy(model, x, &trial,
-                                             Backend::Posit)?;
+            let (logits, _) =
+                sess.forward_policy(x, &trial, Backend::Posit)?;
             let acc = accuracy(&logits, labels);
             if acc >= baseline_acc - tolerance {
                 policy = trial;
@@ -107,8 +111,8 @@ pub fn search(model: &Model, x: &Tensor, labels: &[u8], tolerance: f64)
         }
     }
 
-    let (logits, stats) = forward_policy(model, x, &policy,
-                                         Backend::Posit)?;
+    let (logits, stats) =
+        sess.forward_policy(x, &policy, Backend::Posit)?;
     Ok(PolicyResult {
         policy,
         baseline_acc,

@@ -16,6 +16,7 @@
 //! [`super::memory::MemStats`] coefficients.
 
 use crate::cost::{AsicReport, DesignKind, TechNode};
+use crate::kernel::{self, DecodedPlan};
 use crate::posit::{from_f64, to_f64};
 
 use super::array::ArrayConfig;
@@ -93,7 +94,10 @@ impl SystolicGemm {
 
     /// Fast functional path: identical numerics (posit-quantized
     /// operands, exact accumulation, one final rounding), analytic
-    /// cycle/energy statistics.
+    /// cycle/energy statistics. Executes on the decode-once planar
+    /// kernel ([`crate::kernel`]): operands are quantized+decoded once,
+    /// the fused-MAC inner loop accumulates exactly (quire contract),
+    /// and large matrices fan out across row-block threads.
     ///
     /// `a`: m x k row-major, `b`: k x n row-major -> m x n.
     pub fn run(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize)
@@ -111,6 +115,30 @@ impl SystolicGemm {
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
 
+        let pa = DecodedPlan::from_f64(a, m, k, fmt);
+        let pb = DecodedPlan::from_f64(b, k, n, fmt);
+        let bias_words: Option<Vec<u64>> = bias.map(|bs| {
+            assert_eq!(bs.len(), n);
+            bs.iter().map(|&v| from_f64(v, fmt)).collect()
+        });
+        let words = kernel::gemm(&pa, &pb, bias_words.as_deref());
+        let out = words.iter().map(|&wd| to_f64(wd, fmt)).collect();
+
+        let stats = self.analytic_stats(m, k, n);
+        (out, stats)
+    }
+
+    /// Pre-planar scalar reference path (quantize per call, f64
+    /// accumulation as the quire proxy). Kept for planar-vs-scalar
+    /// benchmarking and as a cross-check; exact for P8/P16 workloads,
+    /// near-exact for P32.
+    pub fn run_scalar(&self, a: &[f64], b: &[f64], bias: Option<&[f64]>,
+                      m: usize, k: usize, n: usize)
+                      -> (Vec<f64>, GemmStats) {
+        let fmt = self.cfg.mode.format();
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+
         // Quantize once (operand fetch does this in hardware).
         let aq: Vec<f64> =
             a.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect();
@@ -118,8 +146,8 @@ impl SystolicGemm {
             b.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect();
 
         // f64 accumulation is the quire proxy (DESIGN.md §6): exact for
-        // P8/P16 workloads, near-exact for P32; the bit-exact path is
-        // `run_cycle_accurate`.
+        // P8/P16 workloads, near-exact for P32; the bit-exact paths are
+        // `run` (planar kernel) and `run_cycle_accurate`.
         let biasq: Option<Vec<f64>> = bias.map(|bs| {
             bs.iter().map(|&v| to_f64(from_f64(v, fmt), fmt)).collect()
         });
@@ -298,6 +326,45 @@ mod tests {
         let c8 = mk(Mode::P8x4) as f64;
         let c32 = mk(Mode::P32x1) as f64;
         assert!(c32 / c8 > 3.0, "P8 speedup only {}", c32 / c8);
+    }
+
+    #[test]
+    fn planar_matches_scalar_reference_p8_p16() {
+        // The scalar f64-proxy path is exact for P8/P16 at these value
+        // ranges, so the planar kernel must agree bit for bit.
+        let mut rng = SplitMix64::new(99);
+        for mode in [Mode::P8x4, Mode::P16x2] {
+            let cfg = ArrayConfig { rows: 4, cols: 4, mode };
+            let g = SystolicGemm::new(cfg);
+            let (m, k, n) = (9, 17, 13);
+            let a: Vec<f64> =
+                (0..m * k).map(|_| rng.wide(-4, 4)).collect();
+            let b: Vec<f64> =
+                (0..k * n).map(|_| rng.wide(-4, 4)).collect();
+            let bias: Vec<f64> = (0..n).map(|_| rng.wide(-2, 2)).collect();
+            let (planar, _) = g.run_bias(&a, &b, Some(&bias), m, k, n);
+            let (scalar, _) =
+                g.run_scalar(&a, &b, Some(&bias), m, k, n);
+            assert_eq!(planar, scalar, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn planar_p32_tracks_scalar_closely() {
+        // For P32 the scalar path's f64 accumulator can round where the
+        // planar kernel stays exact — require closeness, not equality.
+        let mut rng = SplitMix64::new(103);
+        let cfg = ArrayConfig { rows: 4, cols: 4, mode: Mode::P32x1 };
+        let g = SystolicGemm::new(cfg);
+        let (m, k, n) = (5, 23, 6);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.wide(-6, 6)).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.wide(-6, 6)).collect();
+        let (planar, _) = g.run(&a, &b, m, k, n);
+        let (scalar, _) = g.run_scalar(&a, &b, None, m, k, n);
+        for (p, s) in planar.iter().zip(&scalar) {
+            assert!((p - s).abs() <= 1e-6 * (1.0 + s.abs()),
+                    "{p} vs {s}");
+        }
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Property tests for the decode-once planar kernel: bit-identity with
+//! the scalar decode-per-MAC reference (per-element `p_mul`-equivalent
+//! products accumulated exactly, i.e. one quire per output) and with
+//! `Backend::PositExact` on whole networks, for all three formats; plus
+//! the exhaustive 256x256 sweep proving the P8 multiply LUT matches
+//! `p_mul` pair-for-pair.
+
+use std::collections::BTreeMap;
+
+use spade::engine::Mode;
+use spade::kernel::{self, DecodedPlan};
+use spade::nn::{exec, Backend, Model, ModelSpec, Precision, Session,
+                Tensor};
+use spade::posit::{from_f64, p_mul, PositFormat, Quire, P16_FMT,
+                   P32_FMT, P8_FMT};
+use spade::util::{Prop, SplitMix64};
+
+/// Scalar reference: decode-per-MAC through one quire per output —
+/// the exact semantics the planar kernel must reproduce bit-for-bit.
+fn scalar_ref(aw: &[u64], bw: &[u64], bias: Option<&[u64]>, m: usize,
+              k: usize, n: usize, fmt: PositFormat) -> Vec<u64> {
+    let mut out = vec![0u64; m * n];
+    let mut q = Quire::new(fmt);
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for kk in 0..k {
+                q.mac(aw[i * k + kk], bw[kk * n + j]);
+            }
+            if let Some(bs) = bias {
+                q.add_posit(bs[j]);
+            }
+            out[i * n + j] = q.to_posit();
+        }
+    }
+    out
+}
+
+fn rand_words(rng: &mut SplitMix64, len: usize, fmt: PositFormat)
+              -> Vec<u64> {
+    (0..len)
+        .map(|_| match rng.below(4) {
+            // raw bit patterns: exercises NaR, maxpos/minpos, tapered
+            // extremes
+            0 => rng.next_u64() & fmt.mask(),
+            1 => from_f64(rng.wide(-12, 12), fmt),
+            2 => from_f64(rng.normal(), fmt),
+            _ => 0,
+        })
+        .collect()
+}
+
+#[test]
+fn p8_mul_lut_matches_p_mul_exhaustive() {
+    // Satellite requirement: the full 256x256 sweep.
+    let lut = kernel::p8_mul_lut();
+    for a in 0..256u64 {
+        for b in 0..256u64 {
+            assert_eq!(lut[((a << 8) | b) as usize] as u64,
+                       p_mul(a, b, P8_FMT),
+                       "LUT mismatch at {a:#04x} * {b:#04x}");
+            assert_eq!(kernel::p8_mul(a as u8, b as u8) as u64,
+                       p_mul(a, b, P8_FMT));
+        }
+    }
+}
+
+#[test]
+fn planar_gemm_bit_identical_to_scalar_reference() {
+    // Random shapes and operand words (including NaR and extremes) for
+    // all three formats; planar output words must equal the scalar
+    // decode-per-MAC reference exactly.
+    Prop::new("planar == scalar reference", 48).run(|rng| {
+        let m = rng.below(6) as usize + 1;
+        let k = rng.below(24) as usize;
+        let n = rng.below(6) as usize + 1;
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let aw = rand_words(rng, m * k, fmt);
+            let bw = rand_words(rng, k * n, fmt);
+            let bias = if rng.below(2) == 0 {
+                Some(rand_words(rng, n, fmt))
+            } else {
+                None
+            };
+            let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+            let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+            let got = kernel::gemm(&pa, &pb, bias.as_deref());
+            let want =
+                scalar_ref(&aw, &bw, bias.as_deref(), m, k, n, fmt);
+            if got != want {
+                return Err(format!(
+                    "{fmt:?} ({m},{k},{n}): {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planar_gemm_thread_invariant() {
+    // Same inputs, every thread count: identical output words.
+    Prop::new("thread invariance", 12).run(|rng| {
+        let (m, k, n) = (rng.below(10) as usize + 3,
+                         rng.below(20) as usize + 1,
+                         rng.below(8) as usize + 1);
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let aw = rand_words(rng, m * k, fmt);
+            let bw = rand_words(rng, k * n, fmt);
+            let pa = DecodedPlan::from_words(aw, m, k, fmt);
+            let pb = DecodedPlan::from_words(bw, k, n, fmt);
+            let seq = kernel::gemm_with_threads(&pa, &pb, None, 1);
+            for t in [2, 3, 7] {
+                if kernel::gemm_with_threads(&pa, &pb, None, t) != seq {
+                    return Err(format!(
+                        "{fmt:?} ({m},{k},{n}) threads={t} diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tiny hand-built model shared by the backend-identity tests.
+fn tiny_model() -> Model {
+    let spec = ModelSpec::parse(
+        r#"{"name": "tiny", "dataset": "d", "input": [6, 6, 1],
+            "classes": 4,
+            "layers": [
+              {"kind": "conv", "k": 3, "out": 3, "pad": "same",
+               "relu": true},
+              {"kind": "maxpool", "k": 2},
+              {"kind": "flatten"},
+              {"kind": "dense", "out": 5, "relu": true},
+              {"kind": "dense", "out": 4, "relu": false}]}"#,
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(400);
+    let mut params = BTreeMap::new();
+    params.insert(
+        "layer0/w".to_string(),
+        Tensor::from_vec(&[3, 3, 1, 3],
+                         (0..27).map(|_| rng.normal() as f32).collect()),
+    );
+    params.insert("layer0/b".to_string(),
+                  Tensor::from_vec(&[3], vec![0.05, -0.05, 0.0]));
+    params.insert(
+        "layer3/w".to_string(),
+        Tensor::from_vec(&[27, 5],
+                         (0..135).map(|_| rng.normal() as f32).collect()),
+    );
+    params.insert("layer3/b".to_string(),
+                  Tensor::from_vec(&[5], vec![0.1; 5]));
+    params.insert(
+        "layer4/w".to_string(),
+        Tensor::from_vec(&[5, 4],
+                         (0..20).map(|_| rng.normal() as f32).collect()),
+    );
+    params.insert("layer4/b".to_string(),
+                  Tensor::from_vec(&[4], vec![-0.1; 4]));
+    let m = Model { spec, params };
+    m.validate().unwrap();
+    m
+}
+
+#[test]
+fn planar_backend_matches_quire_exact_backend_all_modes() {
+    // Whole-network identity: Backend::Posit (planar kernel) must be
+    // bit-identical to Backend::PositExact (per-output quires) for all
+    // three modes — no accuracy drift on Fig. 4-style evals.
+    let model = tiny_model();
+    let mut rng = SplitMix64::new(21);
+    let x = Tensor::from_vec(&[3, 6, 6, 1],
+                             (0..3 * 36).map(|_| rng.f32()).collect());
+    for mode in [Mode::P8x4, Mode::P16x2, Mode::P32x1] {
+        let prec = Precision::Posit(mode);
+        let (fast, _) =
+            exec::forward(&model, &x, prec, Backend::Posit).unwrap();
+        let (exact, _) =
+            exec::forward(&model, &x, prec, Backend::PositExact)
+                .unwrap();
+        assert_eq!(fast.data, exact.data, "{mode:?}");
+    }
+}
+
+#[test]
+fn cached_session_is_bit_identical_and_reuses_plans() {
+    let model = tiny_model();
+    let mut rng = SplitMix64::new(31);
+    let x = Tensor::from_vec(&[2, 6, 6, 1],
+                             (0..2 * 36).map(|_| rng.f32()).collect());
+    let mut sess = Session::new(&model);
+    let prec = Precision::Posit(Mode::P16x2);
+    let (y1, _) = sess.forward(&x, prec, Backend::Posit).unwrap();
+    let misses_after_first = sess.cache_misses;
+    assert_eq!(misses_after_first, 3); // three MAC layers decoded once
+    let (y2, _) = sess.forward(&x, prec, Backend::Posit).unwrap();
+    assert_eq!(sess.cache_misses, misses_after_first,
+               "second forward must not re-quantize weights");
+    assert!(sess.cache_hits >= 3);
+    assert_eq!(y1.data, y2.data);
+    // and identical to the stateless path
+    let (y3, _) = exec::forward(&model, &x, prec, Backend::Posit)
+        .unwrap();
+    assert_eq!(y1.data, y3.data);
+}
+
+#[test]
+fn nar_poisoning_matches_quire_semantics() {
+    // A NaR anywhere in a reduction poisons exactly the outputs whose
+    // dot products include it — same as Quire::mac's absorbing NaR.
+    let fmt = P16_FMT;
+    let (m, k, n) = (3, 4, 3);
+    let mut rng = SplitMix64::new(77);
+    let mut aw: Vec<u64> =
+        (0..m * k).map(|_| from_f64(rng.normal(), fmt)).collect();
+    let bw: Vec<u64> =
+        (0..k * n).map(|_| from_f64(rng.normal(), fmt)).collect();
+    aw[k + 2] = fmt.nar(); // poison row 1 of A
+    let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+    let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+    let got = kernel::gemm(&pa, &pb, None);
+    let want = scalar_ref(&aw, &bw, None, m, k, n, fmt);
+    assert_eq!(got, want);
+    for j in 0..n {
+        assert_eq!(got[n + j], fmt.nar(), "row 1 col {j} must be NaR");
+    }
+    assert!(got[..n].iter().all(|&w| w != fmt.nar()));
+}

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verify + perf gate for the SPADE reproduction.
+#
+#   build (release) -> tests -> hotpath bench (writes BENCH_hotpath.json)
+#   -> fmt / clippy (advisory only: the seed tree predates both gates).
+#
+# Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --bench hotpath =="
+cargo bench --bench hotpath
+
+echo "== cargo fmt --check (advisory) =="
+cargo fmt --check || echo "(fmt drift — advisory only)"
+
+echo "== cargo clippy -D warnings (advisory) =="
+cargo clippy --all-targets -- -D warnings \
+  || echo "(clippy findings — advisory only)"
+
+echo "verify: OK"

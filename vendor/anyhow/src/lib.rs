@@ -1,0 +1,185 @@
+//! Offline API-compatible shim of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the (small) subset of the real `anyhow` API the workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Error values carry a flattened message chain (context is prepended,
+//! `{outer}: {inner}`), which is what every call site here formats.
+
+use std::fmt;
+
+/// A flattened error: message plus prepended context, like
+/// `anyhow::Error`'s `Display` of its chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (`{context}: {self}`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent
+// with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or
+/// format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = fails_io().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("{} is unlucky", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "3 is unlucky");
+        assert_eq!(f(99).unwrap_err().to_string(), "x too big: 99");
+        let e: Error = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn double_question_mark() {
+        fn inner() -> Result<u32> {
+            Ok(7)
+        }
+        fn outer() -> Result<u32> {
+            let nested: Result<Result<u32>, std::fmt::Error> =
+                Ok(inner());
+            let v = nested.context("recv")??;
+            Ok(v)
+        }
+        assert_eq!(outer().unwrap(), 7);
+    }
+}

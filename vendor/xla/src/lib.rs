@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` crate (PJRT CPU bindings).
+//!
+//! The real crate links the XLA/PJRT C++ runtime, which is unavailable
+//! in this offline build. This stub provides the exact API surface
+//! `spade::runtime` compiles against; every entry point that would touch
+//! the runtime returns an error, so any code path that actually needs
+//! PJRT fails fast with a clear message. All artifact-dependent tests,
+//! benches and serving paths already skip when `artifacts/manifest.json`
+//! is absent, so the stub is never exercised in CI; the functional posit
+//! backends (`systolic`, `kernel`, `nn`) carry the workload instead.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` converts into
+/// `anyhow::Error` at the call sites).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable (offline build without the PJRT \
+         runtime; functional backends remain fully operational)"
+    )))
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Wrap a 1-D f32 buffer (stub: drops the data).
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape (stub: always errors).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Unwrap a 1-tuple result (stub: always errors).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Copy out as a typed vector (stub: always errors).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer to host (stub: always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute (stub: always errors).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client constructor: errors immediately, which makes
+    /// `Runtime::new()` fail with a clear message instead of limping.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name (stub).
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    /// Compile a computation (stub: always errors).
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// HLO module proto (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (stub: always errors).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a proto (stub).
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("offline"));
+    }
+}
