@@ -1,14 +1,20 @@
 //! Serving demo: the precision-adaptive coordinator under synthetic
 //! Poisson traffic with mixed precision pins, reporting latency
-//! percentiles per mode and end-to-end throughput.
+//! percentiles per mode, per-shard load, and end-to-end throughput.
+//!
+//! The engine is selected automatically (`Coordinator::start_auto`):
+//! PJRT artifacts when `artifacts/manifest.json` exists, otherwise the
+//! sharded planar posit kernel on trained or synthetic weights — so
+//! the demo runs on a bare checkout.
 //!
 //! Run: `cargo run --release --example serve_demo
-//!       [-- --requests 512 --rate-us 150 --policy balanced]`
+//!       [-- --requests 512 --rate-us 150 --policy balanced
+//!           --shards 2 --batch 16]`
 
 use anyhow::Result;
 
-use spade::coordinator::{Coordinator, CoordinatorConfig,
-                         InferenceRequest, RoutePolicy};
+use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
+                         InferenceRequest, RoutePolicy, ServeBackend};
 use spade::data::TrafficGen;
 use spade::util::Args;
 
@@ -16,18 +22,36 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let requests: usize = args.num_or("requests", 512);
     let rate_us: u64 = args.num_or("rate-us", 150);
+    let shards: usize = args.num_or("shards", 0); // 0 = auto
+    let batch: usize = args.num_or("batch", 32);
     let policy = match args.get_or("policy", "energy").as_str() {
         "accuracy" => RoutePolicy::AccuracyFirst,
         "balanced" => RoutePolicy::Balanced,
         _ => RoutePolicy::EnergyFirst,
     };
 
-    println!("starting coordinator (model=mlp, policy={policy:?}) ...");
-    let coord = Coordinator::start(CoordinatorConfig {
-        model: "mlp".into(),
+    let model = args.get_or("model", "mlp");
+    println!("starting coordinator (model={model}, policy={policy:?}, \
+              shards={}) ...",
+             if shards == 0 { "auto".to_string() }
+             else { shards.to_string() });
+    let (coord, backend) = Coordinator::start_auto(CoordinatorConfig {
+        model,
         policy,
-        ..Default::default()
+        shards,
+        batcher: BatcherConfig { target: batch.max(1),
+                                 ..BatcherConfig::default() },
     })?;
+    match backend {
+        ServeBackend::Pjrt => println!("engine: PJRT artifacts"),
+        ServeBackend::PlanarTrained => {
+            println!("engine: sharded planar kernel (trained weights)")
+        }
+        ServeBackend::PlanarSynthetic => {
+            println!("engine: sharded planar kernel (synthetic model — \
+                      run `make artifacts` for trained weights)")
+        }
+    }
 
     let mut traffic = TrafficGen::new(99, rate_us, coord.input_len());
     println!("submitting {requests} requests (mean inter-arrival \
@@ -58,6 +82,9 @@ fn main() -> Result<()> {
              requests as f64 / wall.as_secs_f64());
     println!("\n(the energy-first policy routes unpinned traffic to \
               P8x4 — 4 lanes/cycle — while explicit P16/P32 pins are \
-              honored per batch; compare --policy accuracy)");
+              honored per batch; each shard owns a persistent planar \
+              session whose weight plans decode once, and all shards \
+              share the kernel worker pool. compare --policy accuracy, \
+              --shards 1 vs 4)");
     Ok(())
 }

@@ -1,10 +1,13 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop: posit
 //! encode/decode, P8 LUT multiply, quire MAC, engine MAC step, planar
 //! plan build, planar-vs-scalar functional GEMM, kernel thread scaling,
-//! PJRT dispatch. Each prints ops/s so before/after deltas are one diff
-//! away, and every metric is also written to `BENCH_hotpath.json`
-//! (op name -> M/s) for cross-PR tracking. (criterion is unavailable
-//! offline; median-of-N timing.)
+//! worker-pool-vs-scope spawn amortization, sharded serving
+//! throughput, PJRT dispatch. Each prints ops/s so before/after deltas
+//! are one diff away, and every metric is also written to
+//! `BENCH_hotpath.json` (op name -> M/s, `*_us` entries are
+//! microseconds, `*_req_s` are requests/s — see README.md, section
+//! "Reading BENCH_hotpath.json"). (criterion is unavailable offline;
+//! median-of-N timing.)
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -12,8 +15,12 @@ mod common;
 
 use std::collections::BTreeMap;
 
+use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
+                         InferenceRequest, RoutePolicy};
+use spade::data::TrafficGen;
 use spade::engine::{MacEngine, Mode};
 use spade::kernel::{self, DecodedPlan};
+use spade::nn::Model;
 use spade::posit::{from_f64, p_mul, to_f64, Quire, P16_FMT, P32_FMT,
                    P8_FMT};
 use spade::systolic::{ArrayConfig, SystolicGemm};
@@ -182,6 +189,108 @@ fn main() {
                      t1 / t);
             log.record(&format!("kernel_{name}_t{threads}"), mps);
         }
+    }
+
+    common::banner("spawn amortization: persistent pool vs thread::scope");
+    let pool = spade::kernel::pool::global();
+    println!("pool workers: {}", pool.workers());
+    let iters = 500u32;
+    for fanout in [4usize, 8] {
+        let t_scope = common::time_median(3, || {
+            for _ in 0..iters {
+                std::thread::scope(|s| {
+                    for _ in 0..fanout {
+                        s.spawn(|| {
+                            std::hint::black_box(0u64);
+                        });
+                    }
+                });
+            }
+        });
+        let t_pool = common::time_median(3, || {
+            for _ in 0..iters {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send>> =
+                    Vec::with_capacity(fanout);
+                for _ in 0..fanout {
+                    jobs.push(Box::new(|| {
+                        std::hint::black_box(0u64);
+                    }));
+                }
+                pool.run_scoped(jobs);
+            }
+        });
+        let us_scope = t_scope / iters as f64 * 1e6;
+        let us_pool = t_pool / iters as f64 * 1e6;
+        println!("fanout {fanout}: scope {us_scope:>7.1} us/dispatch  \
+                  pool {us_pool:>7.1} us/dispatch  ({:.1}x)",
+                 us_scope / us_pool);
+        log.record(&format!("dispatch_scope_x{fanout}_us"), us_scope);
+        log.record(&format!("dispatch_pool_x{fanout}_us"), us_pool);
+        log.record(&format!("dispatch_pool_speedup_x{fanout}"),
+                   t_scope / t_pool);
+    }
+    // The same gap on real work: mid-size GEMMs are where per-call
+    // spawns stop amortizing (serving-shaped traffic).
+    for dim in [48usize, 96] {
+        let av: Vec<f64> = (0..dim * dim).map(|_| rng.normal()).collect();
+        let bv: Vec<f64> = (0..dim * dim).map(|_| rng.normal()).collect();
+        let pa = DecodedPlan::from_f64(&av, dim, dim, P16_FMT);
+        let pb = DecodedPlan::from_f64(&bv, dim, dim, P16_FMT);
+        let t_scope = common::time_median(5, || {
+            let _ = kernel::gemm_with_scope(&pa, &pb, None, 4);
+        });
+        let t_pool = common::time_median(5, || {
+            let _ = kernel::gemm_with_threads(&pa, &pb, None, 4);
+        });
+        let gmacs = (dim * dim * dim) as f64;
+        println!("p16 {dim}^3 x4: scope {:>8.1} M MAC/s  pool \
+                  {:>8.1} M MAC/s  ({:.2}x)",
+                 gmacs / t_scope / 1e6, gmacs / t_pool / 1e6,
+                 t_scope / t_pool);
+        log.record(&format!("gemm{dim}_p16_scope_t4"),
+                   gmacs / t_scope / 1e6);
+        log.record(&format!("gemm{dim}_p16_pool_t4"),
+                   gmacs / t_pool / 1e6);
+        log.record(&format!("gemm{dim}_p16_pool_speedup"),
+                   t_scope / t_pool);
+    }
+
+    common::banner("sharded planar serving: throughput vs shard count");
+    let model = Model::synthetic("bench");
+    for shards in [1usize, 2, 4] {
+        let coord = Coordinator::start_with_model(
+            model.clone(),
+            CoordinatorConfig {
+                model: "bench".into(),
+                policy: RoutePolicy::EnergyFirst,
+                shards,
+                batcher: BatcherConfig { target: 16,
+                                         ..BatcherConfig::default() },
+            },
+        )
+        .unwrap();
+        let mut gen = TrafficGen::new(5, 1, coord.input_len());
+        let reqs = 512usize;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = gen
+            .burst(reqs)
+            .into_iter()
+            .map(|r| {
+                coord.submit(InferenceRequest { id: r.id,
+                                                input: r.input,
+                                                mode: None })
+            })
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = coord.shutdown();
+        let rps = reqs as f64 / dt;
+        println!("shards {shards}: {rps:>8.0} req/s  (mean batch \
+                  {:.1})",
+                 m.mean_batch());
+        log.record(&format!("serve_shard{shards}_req_s"), rps);
     }
 
     common::banner("PJRT artifact dispatch (mlp_p16_b32)");

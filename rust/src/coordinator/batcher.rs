@@ -1,6 +1,13 @@
 //! Dynamic batcher: group requests up to a target size or a deadline,
 //! whichever comes first (the vLLM-style continuous-batching front end,
 //! scaled to this engine).
+//!
+//! Both serving engines run the same batcher in their front loop: the
+//! PJRT worker executes each flushed [`Batch`] inline, the sharded
+//! planar engine hands it to a shard (see [`crate::coordinator`]
+//! module docs). Batch composition never changes planar results —
+//! the kernel rounds each output exactly once — so the target/deadline
+//! knobs trade latency against throughput only.
 
 use std::time::Duration;
 

@@ -1,6 +1,8 @@
-//! Serving metrics: latency percentiles per mode, batch-size histogram,
-//! request counts. Feeds the serve_demo example and the throughput
-//! bench.
+//! Serving metrics: latency percentiles per mode, batch-size
+//! histogram, request counts, and — on the sharded planar engine —
+//! per-shard request/batch counters (who actually served what). Feeds
+//! the serve_demo example, the `serve` CLI summary and the hotpath
+//! bench's shard-scaling section.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +17,11 @@ pub struct Metrics {
     pub latencies_us: BTreeMap<&'static str, Vec<u64>>,
     /// Batch sizes seen.
     pub batch_sizes: Vec<usize>,
+    /// Requests served per shard (index = shard id; empty on the
+    /// single-worker PJRT engine).
+    pub shard_requests: Vec<u64>,
+    /// Batches executed per shard (parallel to `shard_requests`).
+    pub shard_batches: Vec<u64>,
 }
 
 impl Metrics {
@@ -25,6 +32,18 @@ impl Metrics {
         self.latencies_us.entry(mode.tag()).or_default()
             .push(latency_us);
         self.batch_sizes.push(batch_size);
+    }
+
+    /// Record one batch of `batch_size` requests landing on `shard`
+    /// (sharded planar engine only; vectors grow on demand so the
+    /// caller never pre-declares the fleet size).
+    pub fn record_shard(&mut self, shard: usize, batch_size: usize) {
+        if self.shard_requests.len() <= shard {
+            self.shard_requests.resize(shard + 1, 0);
+            self.shard_batches.resize(shard + 1, 0);
+        }
+        self.shard_requests[shard] += batch_size as u64;
+        self.shard_batches[shard] += 1;
     }
 
     /// Latency percentile (0..100) for a mode key, if sampled.
@@ -59,6 +78,18 @@ impl Metrics {
             s += &format!("  {mode:<4} n={:<6} p50={p50}us p99={p99}us\n",
                           xs.len());
         }
+        if !self.shard_requests.is_empty() {
+            s += "  shards:";
+            for (i, (reqs, batches)) in self
+                .shard_requests
+                .iter()
+                .zip(&self.shard_batches)
+                .enumerate()
+            {
+                s += &format!(" #{i}={reqs}req/{batches}b");
+            }
+            s.push('\n');
+        }
         s
     }
 }
@@ -88,5 +119,20 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("p16"));
         assert!(s.contains("requests: 1"));
+        // no shard line unless the sharded engine recorded one
+        assert!(!s.contains("shards:"));
+    }
+
+    #[test]
+    fn shard_counters_grow_on_demand() {
+        let mut m = Metrics::default();
+        m.record_shard(2, 5);
+        m.record_shard(0, 3);
+        m.record_shard(2, 1);
+        assert_eq!(m.shard_requests, vec![3, 0, 6]);
+        assert_eq!(m.shard_batches, vec![1, 0, 2]);
+        let s = m.summary();
+        assert!(s.contains("shards:"));
+        assert!(s.contains("#2=6req/2b"));
     }
 }

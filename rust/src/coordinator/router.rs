@@ -1,8 +1,12 @@
-//! Precision router: decide which SPADE MODE a batch runs in.
+//! Batch routing: which SPADE MODE a batch runs in ([`Router`]) and
+//! which planar shard executes it ([`ShardRouter`]).
 //!
-//! Client-pinned modes win (majority vote if mixed); unpinned traffic
-//! follows the policy — the accuracy/energy trade-off knob the paper's
-//! multi-precision hardware exists to serve.
+//! Client-pinned modes win (the widest pin, never degrading an
+//! explicit request); unpinned traffic follows the policy — the
+//! accuracy/energy trade-off knob the paper's multi-precision hardware
+//! exists to serve. Shard placement is load-aware: least in-flight
+//! requests first, round-robin to break ties, so an idle fleet degrades
+//! gracefully to strict rotation and a skewed one self-balances.
 
 use crate::engine::Mode;
 
@@ -59,6 +63,39 @@ fn wider(a: Mode, b: Mode) -> Mode {
     if a.lane_bits() >= b.lane_bits() { a } else { b }
 }
 
+/// Shard selector for the sharded planar serving path: pick the shard
+/// with the fewest in-flight requests, breaking ties round-robin (the
+/// scan starts one past the previous winner, so equal loads rotate
+/// deterministically — an idle fleet is served strictly in turn).
+#[derive(Debug)]
+pub struct ShardRouter {
+    shards: usize,
+    next: usize,
+}
+
+impl ShardRouter {
+    /// Selector over `shards` shards (must be non-zero).
+    pub fn new(shards: usize) -> ShardRouter {
+        assert!(shards > 0, "shard count must be non-zero");
+        ShardRouter { shards, next: 0 }
+    }
+
+    /// Pick a shard given current per-shard loads (in-flight request
+    /// counts, one entry per shard).
+    pub fn pick(&mut self, loads: &[usize]) -> usize {
+        debug_assert_eq!(loads.len(), self.shards);
+        let mut best = self.next % self.shards;
+        for off in 1..self.shards {
+            let i = (self.next + off) % self.shards;
+            if loads[i] < loads[best] {
+                best = i;
+            }
+        }
+        self.next = (best + 1) % self.shards;
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,6 +116,26 @@ mod tests {
                    Mode::P16x2);
         assert_eq!(r.route(&[Some(Mode::P8x4), Some(Mode::P32x1)]),
                    Mode::P32x1);
+    }
+
+    #[test]
+    fn shard_router_round_robins_under_equal_load() {
+        let mut sr = ShardRouter::new(3);
+        let picks: Vec<usize> =
+            (0..6).map(|_| sr.pick(&[0, 0, 0])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn shard_router_prefers_least_loaded() {
+        let mut sr = ShardRouter::new(3);
+        assert_eq!(sr.pick(&[5, 2, 9]), 1);
+        // tie between 0 and 2 -> rotation continues past the winner
+        assert_eq!(sr.pick(&[4, 7, 4]), 2);
+        // single shard always wins
+        let mut one = ShardRouter::new(1);
+        assert_eq!(one.pick(&[42]), 0);
+        assert_eq!(one.pick(&[0]), 0);
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //! * **P32 / long-k** — planar fields streamed into [`Quire::mac_raw`]
 //!   (no per-MAC decode; the 512-bit register handles any depth).
 //!
-//! Row-block tiling fans the output rows across `std::thread::scope`
-//! threads when [`auto_threads`] judges the matrix big enough; operand
-//! plans are shared read-only, each thread owns a disjoint output
-//! slice, so results are identical at any thread count.
+//! Row-block tiling fans the output rows across the persistent
+//! [`super::pool`] workers when [`auto_threads`] judges the matrix big
+//! enough; operand plans are shared read-only, each job owns a
+//! disjoint output slice, so results are identical at any thread
+//! count. [`gemm_with_scope`] retains the original per-call
+//! `std::thread::scope` spawning as the bench baseline for spawn
+//! amortization.
 
 use crate::posit::{encode_from_parts, Parts, PositFormat, Quire,
                    P16_FMT, P8_FMT};
@@ -24,6 +27,7 @@ use crate::posit::{encode_from_parts, Parts, PositFormat, Quire,
 use super::lut::{self, P16_ACC_FRAC_OFFSET, P16_CHUNK,
                  P8_ACC_FRAC_OFFSET};
 use super::plan::DecodedPlan;
+use super::pool;
 
 /// Below this many MACs a single thread always wins (spawn cost).
 const PAR_THRESHOLD: usize = 1 << 16;
@@ -60,13 +64,38 @@ pub fn gemm(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>)
 }
 
 /// [`gemm`] with an explicit worker count (1 = fully sequential).
-/// The result is bit-identical at every thread count.
+/// The result is bit-identical at every thread count. Row blocks run
+/// on the persistent [`pool`] (one job stays on the caller), so no
+/// threads are spawned per call.
 pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
                          bias: Option<&[u64]>, threads: usize)
                          -> Vec<u64> {
+    gemm_impl(a, b, bias, threads, Dispatch::Pool)
+}
+
+/// [`gemm_with_threads`] dispatching through a per-call
+/// `std::thread::scope` instead of the pool — the pre-pool behavior,
+/// kept so `benches/hotpath.rs` can measure spawn amortization
+/// (pool-vs-scope) on the same tiling.
+pub fn gemm_with_scope(a: &DecodedPlan, b: &DecodedPlan,
+                       bias: Option<&[u64]>, threads: usize)
+                       -> Vec<u64> {
+    gemm_impl(a, b, bias, threads, Dispatch::Scope)
+}
+
+/// How the row-block jobs reach their threads.
+enum Dispatch {
+    /// Persistent worker pool (the hot path).
+    Pool,
+    /// Fresh scoped threads per call (bench baseline).
+    Scope,
+}
+
+fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
+             threads: usize, dispatch: Dispatch) -> Vec<u64> {
     assert_eq!(a.fmt, b.fmt, "operand formats differ");
     assert_eq!(a.cols, b.rows, "inner dimensions differ");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let (m, n) = (a.rows, b.cols);
     if let Some(bs) = bias {
         assert_eq!(bs.len(), n, "bias length");
     }
@@ -82,14 +111,32 @@ pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
         gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out);
     } else {
         let rows_per = m.div_ceil(t);
-        std::thread::scope(|s| {
-            for (ti, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                let bd = bias_dec.as_ref();
-                s.spawn(move || {
-                    gemm_rows(a, b, bd, ti * rows_per, chunk);
+        let bd = bias_dec.as_ref();
+        match dispatch {
+            Dispatch::Pool => {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(t);
+                for (ti, chunk) in
+                    out.chunks_mut(rows_per * n).enumerate()
+                {
+                    jobs.push(Box::new(move || {
+                        gemm_rows(a, b, bd, ti * rows_per, chunk);
+                    }));
+                }
+                pool::global().run_scoped(jobs);
+            }
+            Dispatch::Scope => {
+                std::thread::scope(|s| {
+                    for (ti, chunk) in
+                        out.chunks_mut(rows_per * n).enumerate()
+                    {
+                        s.spawn(move || {
+                            gemm_rows(a, b, bd, ti * rows_per, chunk);
+                        });
+                    }
                 });
             }
-        });
+        }
     }
 
     // NaR poisoning pass: any NaR operand in the reduction (or bias)
@@ -402,6 +449,48 @@ mod tests {
             assert_eq!(gemm_with_threads(&pa, &pb, None, t), seq,
                        "threads={t}");
         }
+    }
+
+    #[test]
+    fn pool_and_scope_dispatch_agree() {
+        // Same tiling, two dispatchers: the persistent pool must be a
+        // drop-in for the scoped-spawn baseline at every fan-out.
+        let mut rng = SplitMix64::new(41);
+        let fmt = P8_FMT;
+        let (m, k, n) = (9, 17, 7);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        for t in [1usize, 2, 4, 9] {
+            assert_eq!(gemm_with_threads(&pa, &pb, None, t),
+                       gemm_with_scope(&pa, &pb, None, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn gemms_reuse_the_persistent_pool() {
+        let mut rng = SplitMix64::new(43);
+        let fmt = P16_FMT;
+        let (m, k, n) = (16, 8, 8);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let pool = pool::global();
+        let jobs_before = pool.jobs_executed();
+        for _ in 0..8 {
+            let _ = gemm_with_threads(&pa, &pb, None, 4);
+        }
+        // 4 row blocks per call: one runs inline on the caller, three
+        // are queued to the shared pool — the counter proves the work
+        // went through the persistent workers rather than any per-call
+        // spawn path (>=: other tests may run concurrently; the
+        // workers-stay-the-same-threads property is asserted by
+        // pool::tests::workers_are_long_lived_across_scopes).
+        assert!(pool.jobs_executed() >= jobs_before + 8 * 3,
+                "pool jobs {} < {}", pool.jobs_executed(),
+                jobs_before + 8 * 3);
     }
 
     #[test]

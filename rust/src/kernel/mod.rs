@@ -29,26 +29,35 @@
 //!   property tests.
 //! * **Stages 4–5 (normalize + round) → one `encode_from_parts` per
 //!   output**, exactly like the hardware's single Stage-5 rounding.
-//! * **Row-block tiling** fans output rows across scoped threads
-//!   ([`gemm::auto_threads`] decides when it pays); results are
-//!   bit-identical at any thread count because each output element's
-//!   reduction is sequential and exact.
+//! * **Row-block tiling** fans output rows across the persistent
+//!   [`pool`] workers ([`gemm::auto_threads`] decides when it pays);
+//!   results are bit-identical at any thread count because each output
+//!   element's reduction is sequential and exact. The pool's
+//!   long-lived, channel-fed threads amortize spawn cost across every
+//!   GEMM in the process — the serving hot path issues thousands of
+//!   mid-size layer GEMMs per second, where per-call
+//!   `std::thread::scope` spawns dominated (the retained
+//!   [`gemm::gemm_with_scope`] baseline benches exactly that gap).
 //!
 //! ## Who uses it
 //!
 //! [`crate::systolic::gemm::SystolicGemm::run`] (the functional GEMM),
 //! [`crate::nn::exec`]'s `Backend::Posit` (with weight plans cached per
 //! (layer, mode) in [`crate::nn::exec::Session`]), and the
-//! [`crate::coordinator`] planar serving backend all route through
-//! [`gemm()`]. `benches/hotpath.rs` tracks planar-vs-scalar throughput
-//! and thread scaling.
+//! [`crate::coordinator`] sharded planar serving backend all route
+//! through [`gemm()`] — coordinator shards submit concurrently and
+//! share the one process-wide pool. `benches/hotpath.rs` tracks
+//! planar-vs-scalar throughput, thread scaling, and pool-vs-scope
+//! dispatch.
 
 pub mod gemm;
 pub mod lut;
 pub mod plan;
+pub mod pool;
 
 pub use gemm::{auto_threads, encode_acc_i128, encode_acc_i64, gemm,
-               gemm_with_threads};
+               gemm_with_scope, gemm_with_threads};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
               p16_decode_lut, DecEntry};
 pub use plan::DecodedPlan;
+pub use pool::WorkerPool;

@@ -1,0 +1,353 @@
+//! Persistent worker pool for the planar kernel's row-block tiling.
+//!
+//! ## Why a pool
+//!
+//! PR 1's kernel fanned output rows across `std::thread::scope`
+//! threads, which spawns (and joins) an OS thread per block **per
+//! GEMM**. A 256-cubed GEMM amortizes that fine; the serving hot path
+//! does not — a coordinator shard issuing thousands of mid-size layer
+//! GEMMs per second pays the spawn cost on every one of them, exactly
+//! the dataflow-saturation failure mode PDPU (Li et al., 2023) warns
+//! about: the posit datapath only wins when operands keep arriving.
+//! This module replaces per-call spawns with **long-lived workers fed
+//! by a channel work queue**: threads are created once (first use,
+//! [`global`]), then every GEMM — from any thread, including
+//! concurrent coordinator shards — enqueues row-block jobs and blocks
+//! until its own jobs drain.
+//!
+//! ## Threading model
+//!
+//! * One process-wide pool ([`global`]), sized to the machine's
+//!   available parallelism (`SPADE_KERNEL_THREADS`, when set at first
+//!   use, overrides absolutely — the same knob, same semantics, as the
+//!   per-GEMM fan-out). Workers block on an `mpsc` queue behind a mutex —
+//!   contention is negligible because jobs are whole row blocks, not
+//!   individual MACs.
+//! * [`WorkerPool::run_scoped`] executes a set of **borrowing** jobs:
+//!   the final job runs on the calling thread (the caller contributes
+//!   instead of idling), the rest go to the queue. The call returns
+//!   only after every job has finished — enforced by a countdown latch
+//!   whose decrement sits in a `Drop` guard, so even a panicking job
+//!   counts down and the scope never returns while a worker can still
+//!   touch the caller's borrows. That completion guarantee is what
+//!   makes the internal lifetime erasure sound (same contract as
+//!   `std::thread::scope`, amortized).
+//! * Worker panics are caught per job and re-raised on the calling
+//!   thread after the scope completes; the workers themselves survive,
+//!   so one poisoned GEMM cannot shrink the pool.
+//! * Dispatch is **not re-entrant**: pool jobs must not call
+//!   [`WorkerPool::run_scoped`] themselves (deadlock hazard; debug
+//!   builds assert). The kernel's jobs are leaf row-block computations,
+//!   so the constraint is free today.
+//!
+//! [`super::gemm::gemm_with_threads`] is the main client; benches
+//! compare it against the retained scope-spawning baseline
+//! ([`super::gemm::gemm_with_scope`]) to track spawn amortization.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// A lifetime-erased unit of work (see [`WorkerPool::run_scoped`] for
+/// why erasure is sound here).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads — lets [`WorkerPool::run_scoped`]
+    /// catch re-entrant dispatch (a deadlock hazard) in debug builds.
+    static IS_POOL_WORKER: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
+}
+
+/// Countdown latch: `wait` blocks until `count_down` has been called
+/// once per outstanding job.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), all_done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.all_done.wait(r).unwrap();
+        }
+    }
+}
+
+/// Persistent pool of kernel worker threads. See module docs; most
+/// callers want [`global`] rather than a private pool.
+pub struct WorkerPool {
+    /// Job queue entry point. `mpsc::Sender` predates `Sync` on older
+    /// toolchains, so it lives behind a mutex and is cloned per scope.
+    tx: Mutex<mpsc::Sender<Job>>,
+    workers: usize,
+    jobs_executed: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` long-lived threads (min 1). The
+    /// threads are detached: they park on the empty queue and die with
+    /// the process (or when the pool is dropped and the channel
+    /// closes).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let jobs_executed = Arc::new(AtomicU64::new(0));
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("spade-pool-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn kernel pool worker");
+        }
+        WorkerPool { tx: Mutex::new(tx), workers, jobs_executed }
+    }
+
+    /// Number of worker threads (fixed at construction — the pool
+    /// never respawns, which the kernel tests assert).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total jobs executed **on pool workers** since construction
+    /// (the per-scope job run inline on the caller is not counted).
+    /// Monotonic; used by tests to prove GEMMs reuse the pool.
+    pub fn jobs_executed(&self) -> u64 {
+        self.jobs_executed.load(Ordering::Acquire)
+    }
+
+    /// Run a set of jobs that may borrow from the caller's stack,
+    /// blocking until all of them complete.
+    ///
+    /// The last job runs inline on the calling thread; the rest are
+    /// queued to the workers. If any job panics, the panic is
+    /// re-raised here — but only after **every** job has finished, so
+    /// borrowed data is never touched after the call returns (the
+    /// `std::thread::scope` guarantee, without the per-call spawns).
+    ///
+    /// # Deadlock
+    ///
+    /// Not re-entrant: a pool **job** must not call `run_scoped` —
+    /// the worker would block waiting for sub-jobs that can only run
+    /// on (possibly all-blocked) workers. Debug builds assert; submit
+    /// nested work from the owning thread instead. (Zero- and
+    /// one-job scopes never touch the queue and are always safe.)
+    pub fn run_scoped<'scope>(
+        &self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) {
+        let Some(local) = jobs.pop() else {
+            return;
+        };
+        if jobs.is_empty() {
+            local();
+            return;
+        }
+        debug_assert!(
+            !IS_POOL_WORKER.with(|f| f.get()),
+            "WorkerPool::run_scoped called from a pool worker — \
+             re-entrant dispatch can deadlock the pool"
+        );
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        {
+            let tx = self.tx.lock().unwrap().clone();
+            for job in jobs {
+                // SAFETY: the job may borrow data that only lives for
+                // 'scope. Erasing that lifetime is sound because this
+                // function does not return until `latch.wait()` has
+                // observed every queued job's completion, and the
+                // latch decrement lives in a Drop guard inside the
+                // wrapper — it fires even if the job panics. No
+                // worker can hold the borrow past this call.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let latch = latch.clone();
+                let panicked = panicked.clone();
+                let counter = self.jobs_executed.clone();
+                tx.send(Box::new(move || {
+                    struct Done(Arc<Latch>);
+                    impl Drop for Done {
+                        fn drop(&mut self) {
+                            self.0.count_down();
+                        }
+                    }
+                    let _done = Done(latch);
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        panicked.store(true, Ordering::Release);
+                    }
+                    counter.fetch_add(1, Ordering::Release);
+                }))
+                .expect("kernel pool channel closed");
+            }
+        }
+        // The caller works instead of idling; its panic (if any) is
+        // deferred until the queued jobs are out of the borrow.
+        let local_result = catch_unwind(AssertUnwindSafe(local));
+        latch.wait();
+        if let Err(payload) = local_result {
+            resume_unwind(payload);
+        }
+        if panicked.load(Ordering::Acquire) {
+            panic!("kernel pool job panicked (see worker backtrace)");
+        }
+    }
+}
+
+/// Worker body: pull jobs until the channel closes. Jobs arrive
+/// pre-wrapped with panic capture, so workers never unwind.
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        // Hold the queue lock only while dequeuing, never while
+        // executing.
+        let job = { rx.lock().unwrap().recv() };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return,
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide kernel pool, created on first use. Sized to
+/// `available_parallelism`; when `SPADE_KERNEL_THREADS` is set at
+/// initialization time it is an absolute override (it may deliberately
+/// oversubscribe, exactly as the same variable lets
+/// [`super::gemm::auto_threads`] exceed the core count for a
+/// per-GEMM fan-out).
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let hw = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let size = match std::env::var("SPADE_KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(v) if v >= 1 => v,
+            _ => hw,
+        };
+        WorkerPool::new(size)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_jobs_write_disjoint_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, chunk) in data.chunks_mut(8).enumerate() {
+            jobs.push(Box::new(move || {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 8 + j) as u64;
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+        // 8 jobs, 1 ran inline on this thread.
+        assert_eq!(pool.jobs_executed(), 7);
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn empty_and_single_job_scopes() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(Vec::new()); // no-op
+        let mut hit = false;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        jobs.push(Box::new(|| hit = true));
+        pool.run_scoped(jobs);
+        assert!(hit);
+        // single jobs run inline: no pool traffic at all
+        assert_eq!(pool.jobs_executed(), 0);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+            jobs.push(Box::new(|| panic!("boom")));
+            jobs.push(Box::new(|| {}));
+            pool.run_scoped(jobs);
+        }));
+        assert!(caught.is_err());
+        // The worker that caught the panic is still serving.
+        let mut ok = [false; 4];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for slot in ok.iter_mut() {
+            jobs.push(Box::new(move || *slot = true));
+        }
+        pool.run_scoped(jobs);
+        assert!(ok.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn workers_are_long_lived_across_scopes() {
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let pool = WorkerPool::new(2);
+        let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        let caller = std::thread::current().id();
+        for _ in 0..8 {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::new();
+            for _ in 0..4 {
+                jobs.push(Box::new(|| {
+                    ids.lock()
+                        .unwrap()
+                        .insert(std::thread::current().id());
+                }));
+            }
+            pool.run_scoped(jobs);
+        }
+        // 24 queued jobs across 8 scopes all landed on the same two
+        // long-lived workers (plus the caller running each scope's
+        // local job). Per-call spawning would mint fresh ThreadIds on
+        // every scope and blow past the worker count.
+        let ids = ids.into_inner().unwrap();
+        let workers: HashSet<ThreadId> = ids
+            .iter()
+            .copied()
+            .filter(|id| *id != caller)
+            .collect();
+        assert!(!workers.is_empty());
+        assert!(workers.len() <= 2,
+                "{} distinct worker threads for a 2-worker pool",
+                workers.len());
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().workers() >= 1);
+    }
+}

@@ -6,8 +6,8 @@
 //!
 //! The original artifact is Verilog RTL synthesized to a Virtex-7 FPGA and
 //! TSMC 28/65/180 nm ASIC nodes; this crate rebuilds the full system as a
-//! hardware/software co-design stack (see `DESIGN.md` for the substitution
-//! map):
+//! hardware/software co-design stack (see `README.md` for the layer map
+//! and quickstart):
 //!
 //! * [`posit`] — from-scratch posit arithmetic: generic (n, es)
 //!   decode/encode with hardware-faithful round-to-nearest-even on the
@@ -29,16 +29,20 @@
 //! * [`kernel`] — the decode-once planar compute kernel: operand tensors
 //!   decoded once into structure-of-arrays fields, P8 table-lookup
 //!   multiply, exact fused-MAC accumulation with a single final
-//!   rounding, and multithreaded row-block tiling. This is the
-//!   functional hot path behind the systolic fast GEMM, `nn` inference
-//!   and coordinator serving.
+//!   rounding, and row-block tiling on a persistent worker pool
+//!   ([`kernel::pool`] — long-lived channel-fed threads, no per-GEMM
+//!   spawns). This is the functional hot path behind the systolic fast
+//!   GEMM, `nn` inference and coordinator serving.
 //! * [`nn`] / [`data`] — posit-quantized DNN inference stack (tensors,
 //!   layers, model zoo, SPDW weight loading) and the synthetic datasets
 //!   used for the Fig. 4 accuracy reproduction.
 //! * [`runtime`] — PJRT CPU runtime loading the AOT HLO artifacts
 //!   produced by the build-time JAX/Pallas layers (`python/compile/`).
 //! * [`coordinator`] — precision-adaptive serving: request queue, dynamic
-//!   batcher, precision router and energy/latency metrics.
+//!   batcher, precision router, sharded planar execution (N plan-cached
+//!   sessions behind a least-loaded shard router, with an automatic
+//!   fallback chain PJRT → trained weights → synthetic model) and
+//!   energy/latency metrics with per-shard counters.
 //!
 //! ## Quickstart
 //!

@@ -5,13 +5,18 @@
 //!   eval              Fig. 4 accuracy sweep (--model, --limit, --modes)
 //!   serve             run the precision-adaptive coordinator on
 //!                     synthetic traffic (--requests, --rate-us,
-//!                     --policy)
+//!                     --policy, --shards, --batch). Engine selection
+//!                     is automatic: PJRT artifacts when present,
+//!                     otherwise the sharded planar posit kernel on
+//!                     trained or synthetic weights — serve always
+//!                     comes up.
 //!   trace             cycle-accurate systolic trace of a small GEMM
 //!   info              artifact + model inventory
 
 use anyhow::Result;
 
-use spade::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
+                         RoutePolicy, ServeBackend};
 use spade::cost::{baselines, AsicReport, DesignKind, FpgaReport,
                   PipelineStage, TechNode};
 use spade::data::{Dataset, TrafficGen};
@@ -105,21 +110,36 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.num_or("requests", 256);
     let rate_us: u64 = args.num_or("rate-us", 200);
+    let shards: usize = args.num_or("shards", 0); // 0 = auto
+    let batch: usize = args.num_or("batch", 32);
     let policy = match args.get_or("policy", "energy").as_str() {
         "accuracy" => RoutePolicy::AccuracyFirst,
         "balanced" => RoutePolicy::Balanced,
         _ => RoutePolicy::EnergyFirst,
     };
 
-    let coord = Coordinator::start(CoordinatorConfig {
+    let (coord, backend) = Coordinator::start_auto(CoordinatorConfig {
         model: args.get_or("model", "mlp"),
         policy,
-        ..Default::default()
+        shards,
+        batcher: BatcherConfig { target: batch.max(1),
+                                 ..BatcherConfig::default() },
     })?;
+    match backend {
+        ServeBackend::Pjrt => println!("engine: PJRT artifacts"),
+        ServeBackend::PlanarTrained => {
+            println!("engine: sharded planar kernel (trained weights; \
+                      no PJRT manifest)")
+        }
+        ServeBackend::PlanarSynthetic => {
+            println!("engine: sharded planar kernel (synthetic model; \
+                      no artifacts on disk)")
+        }
+    }
     let mut gen = TrafficGen::new(7, rate_us, coord.input_len());
 
     println!("serving {requests} requests (mean gap {rate_us} us, \
-              policy {policy:?}) ...");
+              policy {policy:?}, batch {batch}) ...");
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for r in gen.burst(requests) {

@@ -14,13 +14,32 @@
 //! precision heterogeneity; `forward_policy` switches the array MODE
 //! between layers exactly as the SIMD engine would.
 //!
+//! ## Plan lifecycle and caching
+//!
 //! [`Session`] is the stateful entry point: it caches each weight
 //! tensor's quantization+decode ([`DecodedPlan`]) per (layer, mode), so
 //! repeated forwards — batch serving, accuracy sweeps, policy search —
-//! pay weight decode once instead of per call. The cache key includes
-//! the mode, so changing the precision policy transparently invalidates
-//! stale plans. The free [`forward`] / [`forward_policy`] functions keep
-//! the original stateless API (fresh session per call).
+//! pay weight decode once instead of per call. A plan's life is:
+//!
+//! 1. **miss** — first forward touching (layer i, mode m) quantizes the
+//!    f32 weights to m's posit format and decodes them planar
+//!    (`cache_misses` increments, the plan lands in the map as an
+//!    `Arc`);
+//! 2. **hit** — every later forward at the same key clones the `Arc`
+//!    (`cache_hits`); activations are still planned per call, since
+//!    they change every batch;
+//! 3. **invalidation by keying** — there is no explicit flush: a
+//!    precision-policy change simply addresses different (layer, mode)
+//!    keys, so stale plans are never consulted (they stay resident;
+//!    the model zoo is small enough that eviction has not been worth
+//!    it).
+//!
+//! Sessions are deliberately **not** shared across threads: each
+//! coordinator shard owns one (see [`crate::coordinator`]), keeping
+//! the cache lock-free, while the GEMMs inside a forward fan out on
+//! the process-wide kernel worker pool ([`crate::kernel::pool`]). The
+//! free [`forward`] / [`forward_policy`] functions keep the original
+//! stateless API (fresh session per call).
 
 use std::borrow::Cow;
 use std::collections::HashMap;

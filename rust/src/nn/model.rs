@@ -222,6 +222,55 @@ impl Model {
         Ok(m)
     }
 
+    /// Deterministic in-memory model for artifact-free serving and
+    /// demos: a small conv net (8x8x1 -> conv3x3/4 -> maxpool2 ->
+    /// dense 32 -> dense 10) with seeded SplitMix64 weights, so a bare
+    /// checkout can still exercise the full sharded planar serving
+    /// path. The graph is fixed; `name` is recorded in the spec (as
+    /// `{name}-synthetic`) so logs show where the fallback engaged.
+    pub fn synthetic(name: &str) -> Model {
+        let spec = ModelSpec {
+            name: format!("{name}-synthetic"),
+            input: [8, 8, 1],
+            classes: 10,
+            dataset: "synthetic".into(),
+            layers: vec![
+                LayerSpec::Conv { k: 3, out: 4, pad: Pad::Same,
+                                  relu: true },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 32, relu: true },
+                LayerSpec::Dense { out: 10, relu: false },
+            ],
+        };
+        let mut rng = crate::util::SplitMix64::new(0x59ADE);
+        let mut params = BTreeMap::new();
+        // Fan-in-ish scaling keeps activations well inside the posit
+        // dynamic range at every serving precision (P8's regime gets
+        // coarse fast beyond ~16).
+        let mut randn = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        params.insert("layer0/w".to_string(),
+                      Tensor::from_vec(&[3, 3, 1, 4],
+                                       randn(3 * 3 * 4, 0.35)));
+        params.insert("layer0/b".to_string(),
+                      Tensor::from_vec(&[4],
+                                       vec![0.05, -0.05, 0.0, 0.02]));
+        // after maxpool2: 4 x 4 x 4 = 64 flattened features
+        params.insert("layer3/w".to_string(),
+                      Tensor::from_vec(&[64, 32], randn(64 * 32, 0.18)));
+        params.insert("layer3/b".to_string(),
+                      Tensor::from_vec(&[32], vec![0.0; 32]));
+        params.insert("layer4/w".to_string(),
+                      Tensor::from_vec(&[32, 10], randn(32 * 10, 0.25)));
+        params.insert("layer4/b".to_string(),
+                      Tensor::from_vec(&[10], vec![0.0; 10]));
+        let m = Model { spec, params };
+        debug_assert!(m.validate().is_ok());
+        m
+    }
+
     /// Check weights match the spec shapes.
     pub fn validate(&self) -> Result<()> {
         let (mut h, mut w, mut c) = (self.spec.input[0],
@@ -303,6 +352,17 @@ mod tests {
             assert_eq!(Precision::parse(p.name()).unwrap(), p);
         }
         assert!(Precision::parse("fp64").is_err());
+    }
+
+    #[test]
+    fn synthetic_model_is_valid_and_deterministic() {
+        let a = Model::synthetic("mlp");
+        a.validate().unwrap();
+        assert_eq!(a.spec.name, "mlp-synthetic");
+        assert_eq!(a.spec.mac_layers(), 3);
+        assert_eq!(a.spec.input.iter().product::<usize>(), 64);
+        let b = Model::synthetic("mlp");
+        assert_eq!(a.params["layer3/w"].data, b.params["layer3/w"].data);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Full-pipeline end-to-end test: trained weights -> posit inference
 //! (all three backends + PJRT) -> Fig. 4-style accuracy parity, plus
-//! the coordinator serving real model traffic.
+//! the coordinator serving real model traffic (and, artifact-free, the
+//! sharded planar fallback behind `serve`).
 
 use spade::coordinator::{Coordinator, CoordinatorConfig,
-                         InferenceRequest, RoutePolicy};
+                         InferenceRequest, RoutePolicy, ServeBackend};
 use spade::data::Dataset;
 use spade::engine::Mode;
 use spade::nn::{self, Backend, Model, Precision, Tensor};
@@ -145,4 +146,50 @@ fn coordinator_serves_dataset_traffic_correctly() {
     assert!(acc > 0.85, "served accuracy {acc}");
     let m = coord.shutdown();
     assert_eq!(m.total_requests, n as u64);
+}
+
+#[test]
+fn serve_auto_fallback_is_sharded_and_consistent() {
+    // The exact user journey of `spade serve` on a bare checkout: no
+    // manifest -> start_auto picks the planar fallback, shards serve
+    // bit-identical logits regardless of fleet size.
+    if spade::artifacts_dir().join("manifest.json").is_file() {
+        eprintln!("skipping: artifacts present, fallback not reachable");
+        return;
+    }
+    let run = |shards: usize| -> (ServeBackend, Vec<Vec<f32>>) {
+        let (coord, backend) = Coordinator::start_auto(CoordinatorConfig {
+            model: "mlp".into(),
+            policy: RoutePolicy::Balanced,
+            shards,
+            ..Default::default()
+        })
+        .unwrap();
+        let len = coord.input_len();
+        let rxs: Vec<_> = (0..20u64)
+            .map(|id| {
+                let input: Vec<f32> = (0..len)
+                    .map(|j| ((id as usize * len + j) % 17) as f32 / 17.0)
+                    .collect();
+                coord.submit(InferenceRequest { id, input, mode: None })
+            })
+            .collect();
+        let logits = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().logits)
+            .collect();
+        let m = coord.shutdown();
+        assert_eq!(m.total_requests, 20);
+        if shards > 1 {
+            // every shard-aware metric is present and adds up
+            assert_eq!(m.shard_requests.iter().sum::<u64>(), 20);
+        }
+        (backend, logits)
+    };
+    let (b1, l1) = run(1);
+    let (b3, l3) = run(3);
+    assert_ne!(b1, ServeBackend::Pjrt);
+    assert_eq!(b1, b3);
+    assert_eq!(l1, l3, "shard count changed served logits");
+    assert!(l1.iter().all(|l| l.iter().all(|v| v.is_finite())));
 }

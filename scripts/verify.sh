@@ -1,12 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 verify + perf gate for the SPADE reproduction.
+# Tier-1 verify + perf + docs gate for the SPADE reproduction.
 #
 #   build (release) -> tests -> hotpath bench (writes BENCH_hotpath.json)
+#   -> docs gate (rustdoc warnings are errors)
 #   -> fmt / clippy (advisory only: the seed tree predates both gates).
 #
 # Usage: scripts/verify.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "verify: cargo not found on PATH — nothing was built or tested." >&2
+  echo "verify: BENCH_hotpath.json stays a placeholder until" >&2
+  echo "        'cargo bench --bench hotpath' runs on a machine with the" >&2
+  echo "        Rust toolchain (schema: README.md, section 'Reading" >&2
+  echo "        BENCH_hotpath.json')." >&2
+  exit 1
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -16,6 +26,9 @@ cargo test -q
 
 echo "== cargo bench --bench hotpath =="
 cargo bench --bench hotpath
+
+echo "== cargo doc --no-deps (docs gate: warnings are errors) =="
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps
 
 echo "== cargo fmt --check (advisory) =="
 cargo fmt --check || echo "(fmt drift — advisory only)"
