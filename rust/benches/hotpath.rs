@@ -1,15 +1,25 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop: posit
 //! encode/decode, P8 LUT multiply, quire MAC, engine MAC step, planar
-//! plan build, planar-vs-scalar functional GEMM, kernel thread scaling,
+//! plan build, planar-vs-scalar functional GEMM, lane-fused-vs-scalar
+//! P8 inner loops, blocked-vs-unblocked P16/P32 inner loops, kernel
+//! thread scaling, work-stealing-vs-fixed-split dispatch,
 //! worker-pool-vs-scope spawn amortization, sharded serving
 //! throughput, PJRT dispatch. Each prints ops/s so before/after deltas
 //! are one diff away, and every metric is also written to
 //! `BENCH_hotpath.json` (op name -> M/s, `*_us` entries are
-//! microseconds, `*_req_s` are requests/s — see README.md, section
-//! "Reading BENCH_hotpath.json"). (criterion is unavailable offline;
-//! median-of-N timing.)
+//! microseconds, `*_req_s` are requests/s, `*_vs_*` are dimensionless
+//! speedups — see README.md, section "Reading BENCH_hotpath.json").
+//! (criterion is unavailable offline; median-of-N timing.)
+//!
+//! Baselines: `gemm_with_scope` / `InnerPath::Unblocked` are the
+//! retained PR-1/PR-2 code paths (fixed row splits + per-call spawns;
+//! element-at-a-time inner loops). Speedup ratios are **relative to
+//! those references**, so they measure exactly what each PR replaced.
 //!
 //! Run: `cargo bench --bench hotpath`
+//! Quick smoke (the `scripts/verify.sh` gate): set
+//! `SPADE_BENCH_QUICK=1` — smaller shapes and fewer repetitions, same
+//! JSON sections.
 
 mod common;
 
@@ -19,7 +29,7 @@ use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
                          InferenceRequest, RoutePolicy};
 use spade::data::TrafficGen;
 use spade::engine::{MacEngine, Mode};
-use spade::kernel::{self, DecodedPlan};
+use spade::kernel::{self, DecodedPlan, InnerPath};
 use spade::nn::Model;
 use spade::posit::{from_f64, p_mul, to_f64, Quire, P16_FMT, P32_FMT,
                    P8_FMT};
@@ -27,16 +37,27 @@ use spade::systolic::{ArrayConfig, SystolicGemm};
 use spade::util::SplitMix64;
 
 fn main() {
+    let quick = std::env::var("SPADE_BENCH_QUICK")
+        .map_or(false, |v| !v.is_empty() && v != "0");
+    if quick {
+        println!("(quick mode: smaller shapes, fewer reps — same \
+                  JSON sections)");
+    }
+    // Reps for cheap (r5) and expensive (r3) timed bodies.
+    let r5 = if quick { 2 } else { 5 };
+    let r3 = if quick { 2 } else { 3 };
+
     let mut log = common::BenchLog::new();
 
     common::banner("posit core hot paths (single thread)");
     let mut rng = SplitMix64::new(9001);
-    let xs: Vec<f64> = (0..65536).map(|_| rng.wide(-12, 12)).collect();
+    let nvals = if quick { 16384 } else { 65536 };
+    let xs: Vec<f64> = (0..nvals).map(|_| rng.wide(-12, 12)).collect();
 
     for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
                         ("p32", P32_FMT)] {
         let mut sink = 0u64;
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             for &x in &xs {
                 sink = sink.wrapping_add(from_f64(x, fmt));
             }
@@ -47,7 +68,7 @@ fn main() {
         let words: Vec<u64> =
             xs.iter().map(|&x| from_f64(x, fmt)).collect();
         let mut fsink = 0.0f64;
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             for &w in &words {
                 fsink += to_f64(w, fmt);
             }
@@ -61,7 +82,7 @@ fn main() {
     let words8: Vec<u8> =
         xs.iter().map(|&x| from_f64(x, P8_FMT) as u8).collect();
     let mut sink = 0u64;
-    let t = common::time_median(5, || {
+    let t = common::time_median(r5, || {
         for w in words8.chunks_exact(2) {
             sink = sink.wrapping_add(
                 p_mul(w[0] as u64, w[1] as u64, P8_FMT));
@@ -71,7 +92,7 @@ fn main() {
     println!("p_mul (decode per op): {scalar_mps:>7.1} M/s");
     log.record("p8_mul_scalar", scalar_mps);
     let mut sink8 = 0u8;
-    let t = common::time_median(5, || {
+    let t = common::time_median(r5, || {
         for w in words8.chunks_exact(2) {
             sink8 = sink8.wrapping_add(kernel::p8_mul(w[0], w[1]));
         }
@@ -88,7 +109,7 @@ fn main() {
         let words: Vec<u64> =
             xs.iter().map(|&x| from_f64(x, fmt)).collect();
         let mut q = Quire::new(fmt);
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             q.clear();
             for w in words.chunks_exact(2) {
                 q.mac(w[0], w[1]);
@@ -102,8 +123,8 @@ fn main() {
     common::banner("bit-accurate engine MAC issue");
     for mode in Mode::ALL {
         let mut eng = MacEngine::new(mode);
-        let iters = 100_000u64;
-        let t = common::time_median(5, || {
+        let iters = if quick { 20_000u64 } else { 100_000u64 };
+        let t = common::time_median(r5, || {
             for i in 0..iters {
                 eng.mac(0x3F1A_4C2B ^ (i as u32), 0x4D2E_7F11
                         ^ ((i as u32) << 7), true);
@@ -117,38 +138,38 @@ fn main() {
     }
 
     common::banner("planar plan build (quantize + decode once)");
-    let n = 256usize;
+    let n = if quick { 96usize } else { 256usize };
     let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
     for (name, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
                         ("p32", P32_FMT)] {
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             let _ = DecodedPlan::from_f64(&a, n, n, fmt);
         });
         let mps = (n * n) as f64 / t / 1e6;
-        println!("plan {name} 256x256: {mps:>7.1} M elems/s");
+        println!("plan {name} {n}x{n}: {mps:>7.1} M elems/s");
         log.record(&format!("plan_build_{name}"), mps);
     }
 
-    common::banner(
-        "functional posit GEMM 256x256x256: planar kernel vs scalar ref");
+    common::banner(&format!(
+        "functional posit GEMM {n}^3: planar kernel vs scalar ref"));
     let macs = (n * n * n) as f64;
     for mode in Mode::ALL {
         let cfg = ArrayConfig { rows: 8, cols: 8, mode };
         let g = SystolicGemm::new(cfg);
         let fmt = mode.format();
         let tag = mode.tag();
-        let ts = common::time_median(3, || {
+        let ts = common::time_median(r3, || {
             let _ = g.run_scalar(&a, &b, None, n, n, n);
         });
         // Single-thread planar, end to end (plan build included), so
         // the algorithmic gain is separable from thread scaling.
-        let tp1 = common::time_median(3, || {
+        let tp1 = common::time_median(r3, || {
             let pa = DecodedPlan::from_f64(&a, n, n, fmt);
             let pb = DecodedPlan::from_f64(&b, n, n, fmt);
             let _ = kernel::gemm_with_threads(&pa, &pb, None, 1);
         });
-        let tp = common::time_median(3, || {
+        let tp = common::time_median(r3, || {
             let _ = g.run(&a, &b, n, n, n);
         });
         let s_mps = macs / ts / 1e6;
@@ -166,7 +187,74 @@ fn main() {
         log.record(&format!("gemm256_{tag}_speedup"), ts / tp);
     }
 
-    common::banner("planar kernel thread scaling (256x256x256)");
+    common::banner(&format!(
+        "P8 inner loop: lane-fused SIMD vs scalar gather ({n}^3, \
+         1 thread)"));
+    let pa8 = DecodedPlan::from_f64(&a, n, n, P8_FMT);
+    let pb8 = DecodedPlan::from_f64(&b, n, n, P8_FMT);
+    let t_sc = common::time_median(r3, || {
+        let _ = kernel::gemm_single_path(&pa8, &pb8, None,
+                                         InnerPath::Unblocked)
+            .unwrap();
+    });
+    let t_ln = common::time_median(r3, || {
+        let _ = kernel::gemm_single_path(&pa8, &pb8, None,
+                                         InnerPath::Portable)
+            .unwrap();
+    });
+    let sc_mps = macs / t_sc / 1e6;
+    let ln_mps = macs / t_ln / 1e6;
+    println!("scalar gather (PR-1 baseline): {sc_mps:>8.1} M MAC/s");
+    println!("lane-fused portable:           {ln_mps:>8.1} M MAC/s  \
+              ({:.2}x)",
+             t_sc / t_ln);
+    log.record("p8_scalar_gather", sc_mps);
+    log.record("p8_lane_fused", ln_mps);
+    log.record("simd_vs_scalar_gather", t_sc / t_ln);
+    if kernel::gather_available() {
+        let t_g = common::time_median(r3, || {
+            let _ = kernel::gemm_single_path(&pa8, &pb8, None,
+                                             InnerPath::Gather)
+                .unwrap();
+        });
+        let g_mps = macs / t_g / 1e6;
+        println!("avx2 vpgatherqq:               {g_mps:>8.1} \
+                  M MAC/s  ({:.2}x)",
+                 t_sc / t_g);
+        log.record("p8_avx2_gather", g_mps);
+        log.record("simd_vs_scalar_gather_avx2", t_sc / t_g);
+    } else {
+        println!("(avx2 gather unavailable on this host — portable \
+                  lane path is the auto choice)");
+    }
+
+    common::banner(&format!(
+        "P16/P32 inner loops: cache-blocked tiles vs unblocked \
+         ({n}^3, 1 thread)"));
+    for (tag, fmt) in [("p16", P16_FMT), ("p32", P32_FMT)] {
+        let pa = DecodedPlan::from_f64(&a, n, n, fmt);
+        let pb = DecodedPlan::from_f64(&b, n, n, fmt);
+        let t_unb = common::time_median(r3, || {
+            let _ = kernel::gemm_single_path(&pa, &pb, None,
+                                             InnerPath::Unblocked)
+                .unwrap();
+        });
+        let t_blk = common::time_median(r3, || {
+            let _ = kernel::gemm_single_path(&pa, &pb, None,
+                                             InnerPath::Portable)
+                .unwrap();
+        });
+        println!("{tag}: unblocked {:>8.1} M MAC/s  blocked \
+                  {:>8.1} M MAC/s  ({:.2}x)",
+                 macs / t_unb / 1e6, macs / t_blk / 1e6,
+                 t_unb / t_blk);
+        log.record(&format!("{tag}_unblocked"), macs / t_unb / 1e6);
+        log.record(&format!("{tag}_blocked"), macs / t_blk / 1e6);
+        log.record(&format!("blocked_vs_unblocked_{tag}"),
+                   t_unb / t_blk);
+    }
+
+    common::banner("planar kernel thread scaling");
     let hw = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
@@ -176,7 +264,7 @@ fn main() {
         let pb = DecodedPlan::from_f64(&b, n, n, fmt);
         let mut t1 = 0.0;
         for threads in [1usize, 2, 4, 8] {
-            let t = common::time_median(3, || {
+            let t = common::time_median(r3, || {
                 let _ = kernel::gemm_with_threads(&pa, &pb, None,
                                                   threads);
             });
@@ -191,12 +279,54 @@ fn main() {
         }
     }
 
-    common::banner("spawn amortization: persistent pool vs thread::scope");
+    common::banner(
+        "row dispatch: work stealing vs fixed split (baseline: \
+         gemm_with_scope = fixed split + per-call spawn)");
+    {
+        // Tall-thin serving-shaped GEMM: many small row chunks, so a
+        // straggling fixed block is visible.
+        let (ms, ks, ns) = if quick {
+            (192usize, 48usize, 32usize)
+        } else {
+            (512usize, 64usize, 48usize)
+        };
+        let av: Vec<f64> =
+            (0..ms * ks).map(|_| rng.normal()).collect();
+        let bv: Vec<f64> =
+            (0..ks * ns).map(|_| rng.normal()).collect();
+        let pa = DecodedPlan::from_f64(&av, ms, ks, P16_FMT);
+        let pb = DecodedPlan::from_f64(&bv, ks, ns, P16_FMT);
+        let threads = 4usize;
+        let t_fixed = common::time_median(r5, || {
+            let _ = kernel::gemm_with_scope(&pa, &pb, None, threads);
+        });
+        let t_steal = common::time_median(r5, || {
+            let _ = kernel::gemm_with_threads(&pa, &pb, None, threads);
+        });
+        let gmacs = (ms * ks * ns) as f64;
+        let (_, stats) =
+            kernel::gemm_with_stats(&pa, &pb, None, threads);
+        println!("p16 {ms}x{ks}x{ns} x{threads}: fixed split \
+                  {:>8.1} M MAC/s  stealing {:>8.1} M MAC/s  \
+                  ({:.2}x)",
+                 gmacs / t_fixed / 1e6, gmacs / t_steal / 1e6,
+                 t_fixed / t_steal);
+        println!("  {} chunks of {} rows, claims per job: {:?}",
+                 stats.chunks, stats.chunk_rows,
+                 stats.per_job_claims);
+        log.record("fixed_split_t4", gmacs / t_fixed / 1e6);
+        log.record("steal_dispatch_t4", gmacs / t_steal / 1e6);
+        log.record("steal_vs_fixed_split", t_fixed / t_steal);
+    }
+
+    common::banner(
+        "spawn amortization: persistent pool vs thread::scope \
+         (baseline)");
     let pool = spade::kernel::pool::global();
     println!("pool workers: {}", pool.workers());
-    let iters = 500u32;
+    let iters = if quick { 100u32 } else { 500u32 };
     for fanout in [4usize, 8] {
-        let t_scope = common::time_median(3, || {
+        let t_scope = common::time_median(r3, || {
             for _ in 0..iters {
                 std::thread::scope(|s| {
                     for _ in 0..fanout {
@@ -207,7 +337,7 @@ fn main() {
                 });
             }
         });
-        let t_pool = common::time_median(3, || {
+        let t_pool = common::time_median(r3, || {
             for _ in 0..iters {
                 let mut jobs: Vec<Box<dyn FnOnce() + Send>> =
                     Vec::with_capacity(fanout);
@@ -236,10 +366,10 @@ fn main() {
         let bv: Vec<f64> = (0..dim * dim).map(|_| rng.normal()).collect();
         let pa = DecodedPlan::from_f64(&av, dim, dim, P16_FMT);
         let pb = DecodedPlan::from_f64(&bv, dim, dim, P16_FMT);
-        let t_scope = common::time_median(5, || {
+        let t_scope = common::time_median(r5, || {
             let _ = kernel::gemm_with_scope(&pa, &pb, None, 4);
         });
-        let t_pool = common::time_median(5, || {
+        let t_pool = common::time_median(r5, || {
             let _ = kernel::gemm_with_threads(&pa, &pb, None, 4);
         });
         let gmacs = (dim * dim * dim) as f64;
@@ -270,7 +400,7 @@ fn main() {
         )
         .unwrap();
         let mut gen = TrafficGen::new(5, 1, coord.input_len());
-        let reqs = 512usize;
+        let reqs = if quick { 96usize } else { 512usize };
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = gen
             .burst(reqs)
@@ -301,7 +431,7 @@ fn main() {
         let exe = rt.load("mlp_p16_b32", &weights).unwrap();
         let input: Vec<f32> =
             (0..32 * 784).map(|_| rng.f32()).collect();
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             let _ = exe.run(&input).unwrap();
         });
         println!("batch-32 forward: {:.2} ms -> {:.0} img/s", t * 1e3,
@@ -309,7 +439,7 @@ fn main() {
         log.record("pjrt_b32_img_per_s", 32.0 / t);
         let exe1 = rt.load("mlp_p16_b1", &weights).unwrap();
         let one: Vec<f32> = input[..784].to_vec();
-        let t = common::time_median(5, || {
+        let t = common::time_median(r5, || {
             let _ = exe1.run(&one).unwrap();
         });
         println!("batch-1 forward:  {:.3} ms", t * 1e3);

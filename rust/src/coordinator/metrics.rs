@@ -1,12 +1,29 @@
-//! Serving metrics: latency percentiles per mode, batch-size
-//! histogram, request counts, and — on the sharded planar engine —
-//! per-shard request/batch counters (who actually served what). Feeds
-//! the serve_demo example, the `serve` CLI summary and the hotpath
-//! bench's shard-scaling section.
+//! Serving metrics: latency percentiles per mode **and per shard**,
+//! batch-size histogram, request counts, and — on the sharded planar
+//! engine — per-shard request/batch counters (who actually served
+//! what, and how fast). Feeds the serve_demo example, the `serve` CLI
+//! summary and the hotpath bench's shard-scaling section.
 
 use std::collections::BTreeMap;
 
 use crate::engine::Mode;
+
+/// Nearest-rank percentile over a **sorted** sample set.
+fn percentile_sorted(sorted: &[u64], pct: f64) -> u64 {
+    let idx =
+        ((pct / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Nearest-rank percentile over an unsorted sample set.
+fn percentile_of(xs: &[u64], pct: f64) -> Option<u64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_unstable();
+    Some(percentile_sorted(&sorted, pct))
+}
 
 /// Aggregated serving metrics.
 #[derive(Debug, Clone, Default)]
@@ -22,6 +39,14 @@ pub struct Metrics {
     pub shard_requests: Vec<u64>,
     /// Batches executed per shard (parallel to `shard_requests`).
     pub shard_batches: Vec<u64>,
+    /// Latency samples (us) per shard (parallel to `shard_requests`)
+    /// — one entry per request that shard served, so slow shards are
+    /// visible as shard-level p50/p95/p99, not just diluted into the
+    /// global per-mode percentiles. Raw samples are retained (same
+    /// policy as `latencies_us`) so arbitrary percentiles stay
+    /// queryable; a bounded reservoir for very long runs is a ROADMAP
+    /// item.
+    pub shard_latencies_us: Vec<Vec<u64>>,
 }
 
 impl Metrics {
@@ -46,17 +71,25 @@ impl Metrics {
         self.shard_batches[shard] += 1;
     }
 
+    /// Record the end-to-end latency of one request served by
+    /// `shard` (call once per request in the batch).
+    pub fn record_shard_latency(&mut self, shard: usize,
+                                latency_us: u64) {
+        if self.shard_latencies_us.len() <= shard {
+            self.shard_latencies_us.resize_with(shard + 1, Vec::new);
+        }
+        self.shard_latencies_us[shard].push(latency_us);
+    }
+
     /// Latency percentile (0..100) for a mode key, if sampled.
     pub fn percentile(&self, mode: &str, pct: f64) -> Option<u64> {
-        let xs = self.latencies_us.get(mode)?;
-        if xs.is_empty() {
-            return None;
-        }
-        let mut sorted = xs.clone();
-        sorted.sort_unstable();
-        let idx = ((pct / 100.0) * (sorted.len() - 1) as f64).round()
-            as usize;
-        Some(sorted[idx.min(sorted.len() - 1)])
+        percentile_of(self.latencies_us.get(mode)?, pct)
+    }
+
+    /// Latency percentile (0..100) for one shard, if sampled.
+    pub fn shard_percentile(&self, shard: usize, pct: f64)
+                            -> Option<u64> {
+        percentile_of(self.shard_latencies_us.get(shard)?, pct)
     }
 
     /// Mean batch size.
@@ -68,7 +101,8 @@ impl Metrics {
             / self.batch_sizes.len() as f64
     }
 
-    /// Human-readable summary.
+    /// Human-readable summary: global per-mode percentiles, then one
+    /// line per shard with its request/batch counters and p50/p95/p99.
     pub fn summary(&self) -> String {
         let mut s = format!("requests: {}, mean batch {:.1}\n",
                             self.total_requests, self.mean_batch());
@@ -79,16 +113,30 @@ impl Metrics {
                           xs.len());
         }
         if !self.shard_requests.is_empty() {
-            s += "  shards:";
+            s += "  shards:\n";
             for (i, (reqs, batches)) in self
                 .shard_requests
                 .iter()
                 .zip(&self.shard_batches)
                 .enumerate()
             {
-                s += &format!(" #{i}={reqs}req/{batches}b");
+                s += &format!("    #{i}={reqs}req/{batches}b");
+                // One sort per shard serves all three percentiles.
+                if let Some(xs) =
+                    self.shard_latencies_us.get(i).filter(|x| !x.is_empty())
+                {
+                    let mut sorted = xs.clone();
+                    sorted.sort_unstable();
+                    let (p50, p95, p99) = (
+                        percentile_sorted(&sorted, 50.0),
+                        percentile_sorted(&sorted, 95.0),
+                        percentile_sorted(&sorted, 99.0),
+                    );
+                    s += &format!(
+                        " p50={p50}us p95={p95}us p99={p99}us");
+                }
+                s.push('\n');
             }
-            s.push('\n');
         }
         s
     }
@@ -134,5 +182,32 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("shards:"));
         assert!(s.contains("#2=6req/2b"));
+    }
+
+    #[test]
+    fn per_shard_percentiles() {
+        let mut m = Metrics::default();
+        // shard 0: 1..=100 (x10us), shard 2: constant 7us
+        m.record_shard(0, 100);
+        for i in 1..=100u64 {
+            m.record_shard_latency(0, i * 10);
+        }
+        m.record_shard(2, 3);
+        for _ in 0..3 {
+            m.record_shard_latency(2, 7);
+        }
+        assert_eq!(m.shard_percentile(0, 50.0), Some(510));
+        assert_eq!(m.shard_percentile(0, 95.0), Some(950));
+        assert_eq!(m.shard_percentile(0, 99.0), Some(990));
+        assert_eq!(m.shard_percentile(2, 99.0), Some(7));
+        // shard 1 never served: counters exist (grown by shard 2) but
+        // no samples -> no percentile, and the summary skips its tail
+        assert_eq!(m.shard_percentile(1, 50.0), None);
+        assert_eq!(m.shard_percentile(9, 50.0), None); // out of range
+        let s = m.summary();
+        assert!(s.contains("#0=100req/1b p50=510us p95=950us p99=990us"),
+                "summary was: {s}");
+        assert!(s.contains("#2=3req/1b p50=7us p95=7us p99=7us"));
+        assert!(s.contains("#1=0req/0b\n"));
     }
 }

@@ -31,7 +31,9 @@
 //! therefore always comes up, artifacts or not.
 //!
 //! [`metrics`] records latency percentiles per mode, batch sizes, and
-//! per-shard request/batch counters.
+//! per-shard request/batch counters plus per-shard latency
+//! percentiles (p50/p95/p99 — a slow shard shows up by name in the
+//! summary, not diluted into the global per-mode numbers).
 //!
 //! Threading: callers submit over an mpsc channel and wait on a
 //! oneshot-style channel. No tokio — the workload is compute-bound
@@ -475,6 +477,7 @@ fn shard_loop(rx: mpsc::Receiver<ShardJob>, mut sess: Session<'static>,
             m.record_shard(shard, n);
             for (_, resp) in &replies {
                 m.record(mode, resp.latency_us, n);
+                m.record_shard_latency(shard, resp.latency_us);
             }
         }
         for (tx, resp) in replies {
@@ -747,6 +750,17 @@ mod tests {
         assert_eq!(m.shard_requests, vec![4, 4, 4]);
         assert_eq!(m.shard_batches, vec![4, 4, 4]);
         assert!(m.summary().contains("shard"));
+        // every serving shard has its own latency distribution
+        for shard in 0..3 {
+            assert_eq!(m.shard_latencies_us[shard].len(), 4);
+            for pct in [50.0, 95.0, 99.0] {
+                assert!(m.shard_percentile(shard, pct).is_some(),
+                        "shard {shard} missing p{pct}");
+            }
+        }
+        assert!(m.summary().contains("p95="),
+                "summary lacks per-shard percentiles: {}",
+                m.summary());
     }
 
     #[test]

@@ -1,33 +1,41 @@
-//! Decode-free fused-MAC GEMM over [`DecodedPlan`] operands.
+//! Fused-MAC GEMM front end over [`DecodedPlan`] operands.
 //!
 //! Per output element the kernel accumulates **exact** products in wide
 //! integer fixed point and rounds **once** at the end — the same
 //! contract as the quire (`Backend::PositExact` is the oracle; the
-//! property tests require bit-identical words). Three inner loops:
+//! property tests require bit-identical words). The inner loops live in
+//! [`super::simd`], organized as a tile → panel → lane hierarchy shared
+//! by all three precisions:
 //!
-//! * **P8** — one `i64` add per MAC through the 256×256 exact-product
-//!   LUT (offset 2^-12; headroom for k up to 2^39);
-//! * **P16** — `i64` significand product + `i128` fixed-point add
-//!   (offset 2^-56; exact for k ≤ [`lut::P16_CHUNK`], the quire path
-//!   takes over beyond that);
-//! * **P32 / long-k** — planar fields streamed into [`Quire::mac_raw`]
-//!   (no per-MAC decode; the 512-bit register handles any depth).
+//! * **P8** — [`super::simd::P8_LANES`] exact-product LUT gathers per
+//!   step into independent `i64` register lanes (offset 2^-12; headroom
+//!   for k up to 2^39), with an optional AVX2 `vpgatherqq` body;
+//! * **P16** — a register micro-tile of `i128` accumulators over
+//!   cache-sized B panels (offset 2^-56; exact for k ≤
+//!   [`super::lut::P16_CHUNK`], the quire path takes over beyond
+//!   that);
+//! * **P32 / long-k** — planar fields streamed into a reused panel of
+//!   [`crate::posit::Quire`]s via `mac_raw` (no per-MAC decode; the
+//!   512-bit register handles any depth).
 //!
-//! Row-block tiling fans the output rows across the persistent
+//! This module owns dispatch: output rows are split into chunks on a
+//! [`pool::RowQueue`] and **work-stolen** by the persistent
 //! [`super::pool`] workers when [`auto_threads`] judges the matrix big
-//! enough; operand plans are shared read-only, each job owns a
-//! disjoint output slice, so results are identical at any thread
-//! count. [`gemm_with_scope`] retains the original per-call
-//! `std::thread::scope` spawning as the bench baseline for spawn
-//! amortization.
+//! enough — a straggler chunk (e.g. denser rows) delays only itself,
+//! not a whole fixed split. Operand plans are shared read-only and
+//! each claimed chunk owns a disjoint output slice, so results are
+//! identical at any thread count. [`gemm_with_scope`] retains the
+//! pre-pool behavior — **fixed row splits on per-call
+//! `std::thread::scope` spawns** — purely as the bench baseline
+//! (`steal_vs_fixed_split` in `BENCH_hotpath.json`).
 
-use crate::posit::{encode_from_parts, Parts, PositFormat, Quire,
-                   P16_FMT, P8_FMT};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::lut::{self, P16_ACC_FRAC_OFFSET, P16_CHUNK,
-                 P8_ACC_FRAC_OFFSET};
+use crate::posit::{encode_from_parts, Parts, PositFormat};
+
 use super::plan::DecodedPlan;
-use super::pool;
+use super::pool::{self, RowQueue};
+use super::simd::{self, BiasDec, InnerPath};
 
 /// Below this many MACs a single thread always wins (spawn cost).
 const PAR_THRESHOLD: usize = 1 << 16;
@@ -64,248 +72,226 @@ pub fn gemm(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>)
 }
 
 /// [`gemm`] with an explicit worker count (1 = fully sequential).
-/// The result is bit-identical at every thread count. Row blocks run
-/// on the persistent [`pool`] (one job stays on the caller), so no
-/// threads are spawned per call.
+/// The result is bit-identical at every thread count. Row chunks are
+/// work-stolen off a shared [`pool::RowQueue`] by jobs on the
+/// persistent [`pool`] (one job stays on the caller), so no threads
+/// are spawned per call and uneven rows cannot straggle a fixed split.
 pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
                          bias: Option<&[u64]>, threads: usize)
                          -> Vec<u64> {
+    gemm_impl(a, b, bias, threads, Dispatch::Pool).0
+}
+
+/// [`gemm_with_threads`] plus the dispatch telemetry: how the
+/// work-stealing queue carved the rows and how many chunks each job
+/// claimed (the last entry is the job run inline on the caller).
+/// Tests use it to assert steal-counter sanity.
+pub fn gemm_with_stats(a: &DecodedPlan, b: &DecodedPlan,
+                       bias: Option<&[u64]>, threads: usize)
+                       -> (Vec<u64>, DispatchStats) {
     gemm_impl(a, b, bias, threads, Dispatch::Pool)
 }
 
-/// [`gemm_with_threads`] dispatching through a per-call
-/// `std::thread::scope` instead of the pool — the pre-pool behavior,
-/// kept so `benches/hotpath.rs` can measure spawn amortization
-/// (pool-vs-scope) on the same tiling.
+/// **Bench baseline — not the hot path.** [`gemm_with_threads`]
+/// dispatching fixed contiguous row blocks (one per thread) through a
+/// per-call `std::thread::scope`: the pre-pool, pre-work-stealing
+/// behavior, kept so `benches/hotpath.rs` can measure both spawn
+/// amortization (pool-vs-scope) and straggler behavior
+/// (`steal_vs_fixed_split`) against the same inner loops. Speedup
+/// ratios in `BENCH_hotpath.json` are relative to *this* reference.
 pub fn gemm_with_scope(a: &DecodedPlan, b: &DecodedPlan,
                        bias: Option<&[u64]>, threads: usize)
                        -> Vec<u64> {
-    gemm_impl(a, b, bias, threads, Dispatch::Scope)
+    gemm_impl(a, b, bias, threads, Dispatch::Scope).0
 }
 
-/// How the row-block jobs reach their threads.
+/// Single-threaded GEMM with an explicitly pinned inner-loop body —
+/// the bench/test entry behind `simd_vs_scalar_gather` and
+/// `blocked_vs_unblocked_p16`. Returns `None` only when
+/// [`InnerPath::Gather`] is requested on a machine without AVX2.
+/// Every `Some` result is bit-identical to [`gemm`].
+pub fn gemm_single_path(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&[u64]>, path: InnerPath)
+                        -> Option<Vec<u64>> {
+    if path == InnerPath::Gather && !simd::gather_available() {
+        return None;
+    }
+    check_shapes(a, b, bias);
+    let (m, n) = (a.rows, b.cols);
+    if m == 0 || n == 0 {
+        return Some(Vec::new());
+    }
+    let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let mut out = vec![0u64; m * n];
+    simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path);
+    apply_nar(a, b, bias_dec.as_ref(), &mut out);
+    Some(out)
+}
+
+/// How the work-stealing dispatch carved one GEMM. All fields refer to
+/// output rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// Rows per stealable chunk ([`simd::TileConfig::steal_rows`], or
+    /// the auto heuristic).
+    pub chunk_rows: usize,
+    /// Total chunks the queue handed out (`ceil(m / chunk_rows)`).
+    pub chunks: usize,
+    /// Chunks claimed by each job; the entries sum to `chunks`. A job
+    /// claiming more than `chunks / jobs` stole work from slower
+    /// peers. Sequential runs report a single job with one claim.
+    pub per_job_claims: Vec<usize>,
+}
+
+/// How the row-chunk jobs reach their threads.
 enum Dispatch {
-    /// Persistent worker pool (the hot path).
+    /// Persistent worker pool + work-stealing row queue (the hot
+    /// path).
     Pool,
-    /// Fresh scoped threads per call (bench baseline).
+    /// Fixed row splits on fresh scoped threads per call (bench
+    /// baseline).
     Scope,
 }
 
-fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
-             threads: usize, dispatch: Dispatch) -> Vec<u64> {
+/// Shared output pointer for the work-stealing jobs.
+///
+/// SAFETY rationale: jobs derive disjoint `&mut [u64]` windows from
+/// it, one per claimed chunk, and [`RowQueue`] hands out each chunk at
+/// most once — so no two jobs ever alias a window, which is what makes
+/// the `Sync` claim sound.
+struct SharedOut(*mut u64);
+unsafe impl Sync for SharedOut {}
+
+fn check_shapes(a: &DecodedPlan, b: &DecodedPlan,
+                bias: Option<&[u64]>) {
     assert_eq!(a.fmt, b.fmt, "operand formats differ");
     assert_eq!(a.cols, b.rows, "inner dimensions differ");
-    let (m, n) = (a.rows, b.cols);
     if let Some(bs) = bias {
-        assert_eq!(bs.len(), n, "bias length");
+        assert_eq!(bs.len(), b.cols, "bias length");
     }
+}
+
+/// Rows per stealable chunk: the `SPADE_KERNEL_TILE` override when
+/// set, else ~4 chunks per worker — fine enough that one straggler
+/// chunk cannot hold a whole fixed share hostage, coarse enough that
+/// the atomic claim is noise next to a chunk's MACs.
+fn steal_chunk_rows(m: usize, threads: usize) -> usize {
+    let cfg = simd::tile_config();
+    if cfg.steal_rows > 0 {
+        return cfg.steal_rows.min(m).max(1);
+    }
+    (m / (threads * 4)).max(1)
+}
+
+fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
+             threads: usize, dispatch: Dispatch)
+             -> (Vec<u64>, DispatchStats) {
+    check_shapes(a, b, bias);
+    let (m, n) = (a.rows, b.cols);
     if m == 0 || n == 0 {
-        return Vec::new();
+        let stats = DispatchStats { chunk_rows: 1, chunks: 0,
+                                    per_job_claims: Vec::new() };
+        return (Vec::new(), stats);
     }
 
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
 
     let t = threads.clamp(1, m);
+    let mut stats = DispatchStats { chunk_rows: m, chunks: 1,
+                                    per_job_claims: vec![1] };
     if t <= 1 {
-        gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out);
+        simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out,
+                        InnerPath::Auto);
     } else {
-        let rows_per = m.div_ceil(t);
         let bd = bias_dec.as_ref();
         match dispatch {
             Dispatch::Pool => {
-                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    Vec::with_capacity(t);
-                for (ti, chunk) in
-                    out.chunks_mut(rows_per * n).enumerate()
+                let chunk_rows = steal_chunk_rows(m, t);
+                let queue = RowQueue::new(m, chunk_rows);
+                let claims: Vec<AtomicUsize> =
+                    (0..t).map(|_| AtomicUsize::new(0)).collect();
+                let shared = SharedOut(out.as_mut_ptr());
                 {
-                    jobs.push(Box::new(move || {
-                        gemm_rows(a, b, bd, ti * rows_per, chunk);
-                    }));
+                    let (queue, claims, shared) =
+                        (&queue, &claims, &shared);
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(t);
+                    for ti in 0..t {
+                        jobs.push(Box::new(move || {
+                            while let Some((r0, r1)) = queue.claim() {
+                                claims[ti]
+                                    .fetch_add(1, Ordering::Relaxed);
+                                // SAFETY: the queue hands out each row
+                                // range at most once (see SharedOut),
+                                // so this window is exclusive; the
+                                // pool scope outlives every job.
+                                let chunk = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        shared.0.add(r0 * n),
+                                        (r1 - r0) * n)
+                                };
+                                simd::gemm_rows(a, b, bd, r0, chunk,
+                                                InnerPath::Auto);
+                            }
+                        }));
+                    }
+                    pool::global().run_scoped(jobs);
                 }
-                pool::global().run_scoped(jobs);
+                stats = DispatchStats {
+                    chunk_rows,
+                    chunks: queue.chunks(),
+                    per_job_claims: claims
+                        .iter()
+                        .map(|c| c.load(Ordering::Relaxed))
+                        .collect(),
+                };
             }
             Dispatch::Scope => {
+                let rows_per = m.div_ceil(t);
+                let nblocks = m.div_ceil(rows_per);
                 std::thread::scope(|s| {
                     for (ti, chunk) in
                         out.chunks_mut(rows_per * n).enumerate()
                     {
                         s.spawn(move || {
-                            gemm_rows(a, b, bd, ti * rows_per, chunk);
+                            simd::gemm_rows(a, b, bd, ti * rows_per,
+                                            chunk, InnerPath::Auto);
                         });
                     }
                 });
+                stats = DispatchStats {
+                    chunk_rows: rows_per,
+                    chunks: nblocks,
+                    per_job_claims: vec![1; nblocks],
+                };
             }
         }
     }
 
-    // NaR poisoning pass: any NaR operand in the reduction (or bias)
-    // poisons that output, exactly like the quire's absorbing NaR.
-    let bias_nar = bias_dec.as_ref().is_some_and(|bd| bd.has_nar);
-    if a.has_nar || b.has_nar || bias_nar {
-        let nar = a.fmt.nar();
-        for i in 0..m {
-            let row_nar = a.has_nar && a.nar_rows[i];
-            for j in 0..n {
-                if row_nar
-                    || (b.has_nar && b.nar_cols[j])
-                    || (bias_nar
-                        && bias_dec.as_ref().unwrap().nar[j])
-                {
-                    out[i * n + j] = nar;
-                }
-            }
-        }
+    apply_nar(a, b, bias_dec.as_ref(), &mut out);
+    (out, stats)
+}
+
+/// NaR poisoning pass: any NaR operand in the reduction (or bias)
+/// poisons that output, exactly like the quire's absorbing NaR.
+fn apply_nar(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+             out: &mut [u64]) {
+    let (m, n) = (a.rows, b.cols);
+    let bias_nar = bias.is_some_and(|bd| bd.has_nar);
+    if !(a.has_nar || b.has_nar || bias_nar) {
+        return;
     }
-    out
-}
-
-/// Bias row decoded once into planar fields.
-struct BiasDec {
-    sig: Vec<i64>,
-    w: Vec<i32>,
-    nar: Vec<bool>,
-    has_nar: bool,
-}
-
-impl BiasDec {
-    fn new(words: &[u64], fmt: PositFormat) -> BiasDec {
-        let p = DecodedPlan::from_words(words.to_vec(), 1, words.len(),
-                                        fmt);
-        let has_nar = p.has_nar;
-        // `nar` is only read when `has_nar` (it is empty otherwise).
-        BiasDec { sig: p.sig, w: p.w, nar: p.nar_cols, has_nar }
-    }
-}
-
-/// Compute output rows `i0 ..` into `out` (a whole-rows slice).
-fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
-             i0: usize, out: &mut [u64]) {
-    let n = b.cols;
-    let nrows = out.len() / n;
-    // The LUT / fixed-offset fast paths are specific to the exact
-    // standard formats; anything else goes through the generic quire
-    // path (correct for any posit(n, es) the crate supports).
-    if a.fmt == P8_FMT {
-        rows_p8(a, b, bias, i0, nrows, out);
-    } else if a.fmt == P16_FMT && a.cols <= P16_CHUNK {
-        rows_p16(a, b, bias, i0, nrows, out);
-    } else {
-        rows_quire(a, b, bias, i0, nrows, out);
-    }
-}
-
-/// P8: one LUT add per MAC into an `i64` accumulator row.
-fn rows_p8(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
-           i0: usize, nrows: usize, out: &mut [u64]) {
-    let (k, n) = (a.cols, b.cols);
-    let fmt = a.fmt;
-    let lut = lut::p8_prod_lut();
-    let mut acc = vec![0i64; n];
-    for r in 0..nrows {
-        let i = i0 + r;
-        match bias {
-            Some(bd) => {
-                for j in 0..n {
-                    acc[j] =
-                        bd.sig[j] << (bd.w[j] + P8_ACC_FRAC_OFFSET as i32);
-                }
+    let nar = a.fmt.nar();
+    for i in 0..m {
+        let row_nar = a.has_nar && a.nar_rows[i];
+        for j in 0..n {
+            if row_nar
+                || (b.has_nar && b.nar_cols[j])
+                || (bias_nar && bias.unwrap().nar[j])
+            {
+                out[i * n + j] = nar;
             }
-            None => acc.fill(0),
-        }
-        let arow = &a.words[i * k..(i + 1) * k];
-        for (kk, &aw) in arow.iter().enumerate() {
-            if aw == 0 {
-                continue;
-            }
-            let base = (aw as usize) << 8;
-            let brow = &b.words[kk * n..(kk + 1) * n];
-            for (accj, &bw) in acc.iter_mut().zip(brow) {
-                *accj += lut[base | bw as usize];
-            }
-        }
-        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
-            *o = encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
-        }
-    }
-}
-
-/// P16 (k ≤ [`P16_CHUNK`]): significand product + `i128` add per MAC.
-fn rows_p16(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
-            i0: usize, nrows: usize, out: &mut [u64]) {
-    let (k, n) = (a.cols, b.cols);
-    let fmt = a.fmt;
-    let off = P16_ACC_FRAC_OFFSET as i32;
-    let mut acc = vec![0i128; n];
-    for r in 0..nrows {
-        let i = i0 + r;
-        match bias {
-            Some(bd) => {
-                for j in 0..n {
-                    acc[j] = (bd.sig[j] as i128) << (bd.w[j] + off);
-                }
-            }
-            None => acc.fill(0),
-        }
-        for kk in 0..k {
-            let sa = a.sig[i * k + kk];
-            if sa == 0 {
-                continue;
-            }
-            let wa = a.w[i * k + kk];
-            let bsig = &b.sig[kk * n..(kk + 1) * n];
-            let bw = &b.w[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                let p = sa * bsig[j];
-                if p != 0 {
-                    acc[j] += (p as i128) << (wa + bw[j] + off);
-                }
-            }
-        }
-        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
-            *o = encode_acc_i128(v, P16_ACC_FRAC_OFFSET, fmt);
-        }
-    }
-}
-
-/// P32 (any k) and P16 beyond the `i128` headroom: stream planar
-/// significand products into reusable quires — still decode-free.
-fn rows_quire(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
-              i0: usize, nrows: usize, out: &mut [u64]) {
-    let (k, n) = (a.cols, b.cols);
-    let fmt = a.fmt;
-    let mut quires: Vec<Quire> = (0..n).map(|_| Quire::new(fmt)).collect();
-    for r in 0..nrows {
-        let i = i0 + r;
-        for q in quires.iter_mut() {
-            q.clear();
-        }
-        if let Some(bd) = bias {
-            for (j, q) in quires.iter_mut().enumerate() {
-                let s = bd.sig[j];
-                if s != 0 {
-                    q.mac_raw(s.unsigned_abs() as u128, bd.w[j], s < 0);
-                }
-            }
-        }
-        for kk in 0..k {
-            let sa = a.sig[i * k + kk];
-            if sa == 0 {
-                continue;
-            }
-            let wa = a.w[i * k + kk];
-            let bsig = &b.sig[kk * n..(kk + 1) * n];
-            let bw = &b.w[kk * n..(kk + 1) * n];
-            for (j, q) in quires.iter_mut().enumerate() {
-                let p = sa * bsig[j];
-                if p != 0 {
-                    q.mac_raw(p.unsigned_abs() as u128, wa + bw[j],
-                              p < 0);
-                }
-            }
-        }
-        for (o, q) in out[r * n..(r + 1) * n].iter_mut().zip(&quires) {
-            *o = q.to_posit();
         }
     }
 }
@@ -371,8 +357,9 @@ pub fn encode_acc_i128(acc: i128, frac_offset: u32, fmt: PositFormat)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::{from_f64, p_mul, to_f64, P16_FMT, P32_FMT,
-                       P8_FMT};
+    use crate::kernel::lut::P16_CHUNK;
+    use crate::posit::{from_f64, p_mul, to_f64, Quire, P16_FMT,
+                       P32_FMT, P8_FMT};
     use crate::util::SplitMix64;
 
     /// Scalar decode-per-MAC reference: one quire per output.
@@ -412,7 +399,7 @@ mod tests {
     fn matches_quire_reference_all_formats() {
         let mut rng = SplitMix64::new(2024);
         let shapes = [(1, 1, 1), (2, 3, 2), (3, 7, 5), (5, 11, 4),
-                      (4, 0, 3), (1, 33, 2), (6, 2, 6)];
+                      (4, 0, 3), (1, 33, 2), (6, 2, 6), (3, 5, 17)];
         for fmt in [P8_FMT, P16_FMT, P32_FMT] {
             for (t, &(m, k, n)) in
                 shapes.iter().cycle().take(24).enumerate()
@@ -436,6 +423,46 @@ mod tests {
     }
 
     #[test]
+    fn inner_paths_are_bit_identical() {
+        // Auto, Portable, Unblocked (and Gather where the CPU has it)
+        // must agree word-for-word: lane/panel reordering of exact
+        // integer sums cannot change the single rounding. Shapes
+        // straddle the lane width so tails are exercised.
+        let mut rng = SplitMix64::new(313);
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for &(m, k, n) in
+                &[(1, 1, 1), (3, 9, 11), (5, 17, 8), (2, 40, 19)]
+            {
+                let aw = rand_words(&mut rng, m * k, fmt);
+                let bw = rand_words(&mut rng, k * n, fmt);
+                let bias = Some(rand_words(&mut rng, n, fmt));
+                let pa = DecodedPlan::from_words(aw, m, k, fmt);
+                let pb = DecodedPlan::from_words(bw, k, n, fmt);
+                let auto = gemm_single_path(&pa, &pb, bias.as_deref(),
+                                            InnerPath::Auto)
+                    .unwrap();
+                for path in [InnerPath::Portable, InnerPath::Unblocked]
+                {
+                    assert_eq!(
+                        gemm_single_path(&pa, &pb, bias.as_deref(),
+                                         path)
+                            .unwrap(),
+                        auto,
+                        "{fmt:?} ({m},{k},{n}) {path:?}");
+                }
+                if let Some(g) = gemm_single_path(
+                    &pa, &pb, bias.as_deref(), InnerPath::Gather)
+                {
+                    assert_eq!(g, auto,
+                               "{fmt:?} ({m},{k},{n}) Gather");
+                }
+                // and the threaded entry agrees with the pinned paths
+                assert_eq!(gemm(&pa, &pb, bias.as_deref()), auto);
+            }
+        }
+    }
+
+    #[test]
     fn thread_count_does_not_change_results() {
         let mut rng = SplitMix64::new(7);
         let fmt = P16_FMT;
@@ -453,8 +480,9 @@ mod tests {
 
     #[test]
     fn pool_and_scope_dispatch_agree() {
-        // Same tiling, two dispatchers: the persistent pool must be a
-        // drop-in for the scoped-spawn baseline at every fan-out.
+        // Same inner loops, two dispatchers: the work-stealing pool
+        // must be a drop-in for the fixed-split scoped-spawn baseline
+        // at every fan-out.
         let mut rng = SplitMix64::new(41);
         let fmt = P8_FMT;
         let (m, k, n) = (9, 17, 7);
@@ -466,6 +494,25 @@ mod tests {
             assert_eq!(gemm_with_threads(&pa, &pb, None, t),
                        gemm_with_scope(&pa, &pb, None, t), "t={t}");
         }
+    }
+
+    #[test]
+    fn steal_stats_account_for_every_chunk() {
+        let mut rng = SplitMix64::new(97);
+        let fmt = P16_FMT;
+        let (m, k, n) = (37, 19, 11); // non-divisible everything
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let (out, stats) = gemm_with_stats(&pa, &pb, None, 4);
+        assert_eq!(out, gemm_with_threads(&pa, &pb, None, 1));
+        assert!(stats.chunk_rows >= 1);
+        assert_eq!(stats.chunks, m.div_ceil(stats.chunk_rows));
+        assert_eq!(stats.per_job_claims.len(), 4);
+        assert_eq!(stats.per_job_claims.iter().sum::<usize>(),
+                   stats.chunks,
+                   "claims must cover every chunk exactly once");
     }
 
     #[test]
@@ -482,11 +529,11 @@ mod tests {
         for _ in 0..8 {
             let _ = gemm_with_threads(&pa, &pb, None, 4);
         }
-        // 4 row blocks per call: one runs inline on the caller, three
-        // are queued to the shared pool — the counter proves the work
-        // went through the persistent workers rather than any per-call
-        // spawn path (>=: other tests may run concurrently; the
-        // workers-stay-the-same-threads property is asserted by
+        // 4 stealing jobs per call: one runs inline on the caller,
+        // three are queued to the shared pool — the counter proves the
+        // work went through the persistent workers rather than any
+        // per-call spawn path (>=: other tests may run concurrently;
+        // the workers-stay-the-same-threads property is asserted by
         // pool::tests::workers_are_long_lived_across_scopes).
         assert!(pool.jobs_executed() >= jobs_before + 8 * 3,
                 "pool jobs {} < {}", pool.jobs_executed(),

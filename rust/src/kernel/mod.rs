@@ -5,18 +5,17 @@
 //! SPADE's architectural claim (§II) is that a SIMD posit datapath pays
 //! the expensive unpack machinery — leading-one detector, complementor,
 //! barrel shifter — **once per word**, shared across lanes, rather than
-//! once per scalar operation. The original functional path here had the
-//! software equivalent of the opposite: every MAC re-ran the full
-//! regime/exponent/fraction decode of both operands. This module is the
-//! software mirror of the paper's lane-fused datapath, with the decode
-//! amortization pushed one level further (PDPU, Li et al. 2023 does the
-//! same in RTL for fused dot products):
+//! once per scalar operation. This module is the software mirror of the
+//! paper's lane-fused datapath, with the decode amortization pushed one
+//! level further (PDPU, Li et al. 2023 does the same in RTL for fused
+//! dot products):
 //!
 //! * **Stage 1 (unpack) → [`DecodedPlan`]**: each operand tensor is
 //!   decoded *once* into planar (structure-of-arrays) field vectors —
-//!   sign-folded significand and LSB exponent. A k-deep GEMM reuses
-//!   each decoded element n (or m) times, so per-MAC decode cost goes
-//!   to ~zero. For 8/16-bit words decode itself is a table lookup
+//!   sign-folded significand and LSB exponent (plus a packed byte copy
+//!   of the P8 words for the gather loop). A k-deep GEMM reuses each
+//!   decoded element n (or m) times, so per-MAC decode cost goes to
+//!   ~zero. For 8/16-bit words decode itself is a table lookup
 //!   ([`lut`]); ExPAN(N)D (Nambi et al. 2020) shows P8's 2^16 pair
 //!   space makes even full multiply tables practically free, which the
 //!   [`lut::p8_prod_lut`] exploits: the whole P8 MAC becomes one
@@ -29,15 +28,53 @@
 //!   property tests.
 //! * **Stages 4–5 (normalize + round) → one `encode_from_parts` per
 //!   output**, exactly like the hardware's single Stage-5 rounding.
-//! * **Row-block tiling** fans output rows across the persistent
-//!   [`pool`] workers ([`gemm::auto_threads`] decides when it pays);
-//!   results are bit-identical at any thread count because each output
-//!   element's reduction is sequential and exact. The pool's
-//!   long-lived, channel-fed threads amortize spawn cost across every
-//!   GEMM in the process — the serving hot path issues thousands of
-//!   mid-size layer GEMMs per second, where per-call
-//!   `std::thread::scope` spawns dominated (the retained
-//!   [`gemm::gemm_with_scope`] baseline benches exactly that gap).
+//!
+//! ## The tile → panel → lane hierarchy
+//!
+//! All three precisions route through one loop structure ([`simd`]) —
+//! the software analogue of the paper's shared LOD/shifter/multiplier
+//! submodules reused across MODEs:
+//!
+//! ```text
+//! tile   a chunk of output rows, claimed off the work-stealing
+//!        RowQueue by a persistent pool worker        (pool.rs)
+//!  └─ panel   a B-column strip sized for cache residency
+//!             (TileConfig::{p16,p32}_panel)          (simd.rs)
+//!      └─ lane   independent register accumulators:
+//!                P8  — P8_LANES i64 LUT-gather lanes (+ optional
+//!                      AVX2 vpgatherqq body, runtime-detected)
+//!                P16 — P16_MR × P16_NR i128 micro-tile
+//!                P32 — a panel of reused quires      (simd.rs)
+//! ```
+//!
+//! Bit-exactness survives every level because each accumulator is an
+//! exact integer (or the exact quire) and integer addition is
+//! associative: reordering tiles, panels, or lanes cannot change the
+//! final sum, hence not the single rounding either. The identity tests
+//! (`tests/kernel_planar.rs`) pin all paths — including the AVX2
+//! gather and the retained unblocked baselines — to the
+//! `Backend::PositExact` oracle.
+//!
+//! **Dispatch** carves rows into chunks on a [`pool::RowQueue`];
+//! pool workers (and the caller) *steal* chunks until the queue is
+//! dry, so NaR-heavy or otherwise uneven rows cannot straggle a fixed
+//! split. The pool's long-lived, channel-fed threads amortize spawn
+//! cost across every GEMM in the process. [`gemm::gemm_with_scope`]
+//! retains the fixed-split per-call-spawn behavior **only** as the
+//! bench baseline.
+//!
+//! ## Tuning knobs (environment)
+//!
+//! | variable | effect |
+//! |---|---|
+//! | `SPADE_KERNEL_THREADS` | absolute worker-count override (pool size at first use, per-GEMM fan-out) |
+//! | `SPADE_KERNEL_TILE` | tile parameters, e.g. `p16_panel=48,p32_panel=16,steal_rows=2` — see [`simd::TileConfig`] |
+//! | `SPADE_KERNEL_GATHER` | `0`/`off` forces the portable P8 loop even when AVX2 is present |
+//!
+//! `SPADE_KERNEL_TILE` and `SPADE_KERNEL_GATHER` are read once, at
+//! first kernel use. `SPADE_KERNEL_THREADS` is live: the pool size is
+//! fixed at first use, but [`auto_threads`] re-reads it per GEMM, so
+//! the per-call fan-out can be retuned at runtime.
 //!
 //! ## Who uses it
 //!
@@ -47,17 +84,22 @@
 //! [`crate::coordinator`] sharded planar serving backend all route
 //! through [`gemm()`] — coordinator shards submit concurrently and
 //! share the one process-wide pool. `benches/hotpath.rs` tracks
-//! planar-vs-scalar throughput, thread scaling, and pool-vs-scope
-//! dispatch.
+//! planar-vs-scalar throughput, lane-vs-scalar-gather and
+//! blocked-vs-unblocked inner loops, thread scaling, and
+//! steal-vs-fixed-split dispatch.
 
 pub mod gemm;
 pub mod lut;
 pub mod plan;
 pub mod pool;
+pub mod simd;
 
 pub use gemm::{auto_threads, encode_acc_i128, encode_acc_i64, gemm,
-               gemm_with_scope, gemm_with_threads};
+               gemm_single_path, gemm_with_scope, gemm_with_stats,
+               gemm_with_threads, DispatchStats};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
               p16_decode_lut, DecEntry};
 pub use plan::DecodedPlan;
-pub use pool::WorkerPool;
+pub use pool::{RowQueue, WorkerPool};
+pub use simd::{gather_available, tile_config, InnerPath, TileConfig,
+               P16_MR, P16_NR, P8_LANES};

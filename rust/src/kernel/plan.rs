@@ -30,6 +30,12 @@ pub struct DecodedPlan {
     /// The quantized posit words (row-major) — kept for the P8
     /// product-LUT path and for re-encoding-free round trips.
     pub words: Vec<u64>,
+    /// Packed byte copy of `words` for 8-bit formats (empty for wider
+    /// formats). The lane-fused P8 kernel indexes its product LUT
+    /// through these: one byte per element keeps a k-deep B panel 8×
+    /// smaller in cache than the `u64` words, and gives the AVX2
+    /// gather path contiguous `u8` lanes to zero-extend.
+    pub words8: Vec<u8>,
     /// Sign-folded significands (0 for zero and NaR).
     pub sig: Vec<i64>,
     /// LSB exponents (`scale - fbits`): value = `sig * 2^w`.
@@ -53,6 +59,11 @@ impl DecodedPlan {
         // Canonicalize to the low nbits (the LUT paths index by word).
         let words: Vec<u64> =
             words.into_iter().map(|w| w & fmt.mask()).collect();
+        let words8: Vec<u8> = if fmt.nbits <= 8 {
+            words.iter().map(|&w| w as u8).collect()
+        } else {
+            Vec::new()
+        };
         let len = words.len();
         let mut sig = Vec::with_capacity(len);
         let mut w = Vec::with_capacity(len);
@@ -112,8 +123,8 @@ impl DecodedPlan {
             }
         }
 
-        DecodedPlan { fmt, rows, cols, words, sig, w, has_nar, nar_rows,
-                      nar_cols }
+        DecodedPlan { fmt, rows, cols, words, words8, sig, w, has_nar,
+                      nar_rows, nar_cols }
     }
 
     /// Quantize an f64 matrix to `fmt` and decode it (one pass).
@@ -200,6 +211,21 @@ mod tests {
         assert!(p.has_nar);
         assert_eq!(p.nar_rows, vec![true, false]);
         assert_eq!(p.nar_cols, vec![false, true, false]);
+    }
+
+    #[test]
+    fn packed_bytes_mirror_words_for_p8() {
+        let words: Vec<u64> = (0..256).collect();
+        let p = DecodedPlan::from_words(words, 16, 16, P8_FMT);
+        assert_eq!(p.words8.len(), 256);
+        assert!(p
+            .words8
+            .iter()
+            .zip(&p.words)
+            .all(|(&b, &w)| b as u64 == w));
+        // wider formats skip the packed copy
+        let p16 = DecodedPlan::from_words(vec![0u64; 4], 2, 2, P16_FMT);
+        assert!(p16.words8.is_empty());
     }
 
     #[test]

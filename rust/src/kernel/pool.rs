@@ -40,13 +40,85 @@
 //!   builds assert). The kernel's jobs are leaf row-block computations,
 //!   so the constraint is free today.
 //!
+//! ## Work stealing
+//!
+//! The pool supplies *threads*; [`RowQueue`] supplies *scheduling*.
+//! GEMM jobs no longer receive fixed row blocks — each job loops
+//! [`RowQueue::claim`] over a shared chunked cursor, so uneven chunks
+//! (NaR-poisoned dense rows, a descheduled core) are absorbed by
+//! whichever workers are still hungry instead of stalling a fixed
+//! split.
+//!
 //! [`super::gemm::gemm_with_threads`] is the main client; benches
-//! compare it against the retained scope-spawning baseline
-//! ([`super::gemm::gemm_with_scope`]) to track spawn amortization.
+//! compare it against the retained fixed-split scope-spawning baseline
+//! ([`super::gemm::gemm_with_scope`]) to track both spawn amortization
+//! and straggler absorption (`steal_vs_fixed_split`).
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// Chunked atomic work queue over output rows — the work-stealing
+/// half of the kernel's dispatch (the pool supplies the long-lived
+/// threads, the queue decides who computes what).
+///
+/// [`super::gemm::gemm_with_threads`] used to hand each worker one
+/// fixed contiguous row block; a straggler block (denser rows, a
+/// descheduled worker) then gated the whole GEMM. Instead the rows are
+/// carved into chunks of `chunk_rows` and every job loops
+/// [`RowQueue::claim`] until the queue runs dry, so a fast worker
+/// *steals* the chunks a slow one never got to — no idle lanes while
+/// work remains (the retained fixed-split path,
+/// [`super::gemm::gemm_with_scope`], is the bench baseline for exactly
+/// this gap: `steal_vs_fixed_split`).
+///
+/// Each chunk is handed out **at most once** (a single
+/// `fetch_add`-based cursor), which is what lets claimants safely
+/// derive disjoint `&mut` output windows. `Relaxed` ordering suffices:
+/// the counter only distributes indices, and completed writes are
+/// published by the pool's scope-end latch, not by the queue.
+pub struct RowQueue {
+    rows: usize,
+    chunk_rows: usize,
+    next: AtomicUsize,
+}
+
+impl RowQueue {
+    /// Queue over `rows` output rows in chunks of `chunk_rows` (≥ 1).
+    pub fn new(rows: usize, chunk_rows: usize) -> RowQueue {
+        assert!(chunk_rows >= 1, "chunk_rows must be at least 1");
+        RowQueue { rows, chunk_rows, next: AtomicUsize::new(0) }
+    }
+
+    /// Total chunks this queue will hand out.
+    pub fn chunks(&self) -> usize {
+        self.rows.div_ceil(self.chunk_rows)
+    }
+
+    /// Rows per chunk (the last chunk may be shorter).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Claim the next chunk: a half-open row range `[r0, r1)`, or
+    /// `None` when the queue is dry. Every row is covered by exactly
+    /// one claim across all callers.
+    pub fn claim(&self) -> Option<(usize, usize)> {
+        let c = self.next.fetch_add(1, Ordering::Relaxed);
+        match c.checked_mul(self.chunk_rows) {
+            Some(r0) if r0 < self.rows => {
+                Some((r0, (r0 + self.chunk_rows).min(self.rows)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Chunks successfully claimed so far (== [`RowQueue::chunks`]
+    /// once the queue has drained).
+    pub fn claimed(&self) -> usize {
+        self.next.load(Ordering::Relaxed).min(self.chunks())
+    }
+}
 
 /// A lifetime-erased unit of work (see [`WorkerPool::run_scoped`] for
 /// why erasure is sound here).
@@ -341,6 +413,74 @@ mod tests {
         assert!(workers.len() <= 2,
                 "{} distinct worker threads for a 2-worker pool",
                 workers.len());
+    }
+
+    #[test]
+    fn row_queue_covers_rows_exactly_once() {
+        let q = RowQueue::new(23, 4);
+        assert_eq!(q.chunks(), 6);
+        assert_eq!(q.chunk_rows(), 4);
+        let mut seen = vec![false; 23];
+        while let Some((r0, r1)) = q.claim() {
+            assert!(r1 > r0 && r1 <= 23);
+            for r in r0..r1 {
+                assert!(!seen[r], "row {r} claimed twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "rows left unclaimed");
+        assert_eq!(q.claimed(), 6);
+        assert!(q.claim().is_none(), "dry queue must stay dry");
+        assert_eq!(q.claimed(), 6);
+    }
+
+    #[test]
+    fn row_queue_empty_and_oversized_chunks() {
+        let q = RowQueue::new(0, 3);
+        assert_eq!(q.chunks(), 0);
+        assert!(q.claim().is_none());
+        let q = RowQueue::new(2, 100); // chunk bigger than the matrix
+        assert_eq!(q.chunks(), 1);
+        assert_eq!(q.claim(), Some((0, 2)));
+        assert!(q.claim().is_none());
+    }
+
+    #[test]
+    fn row_queue_concurrent_claims_are_disjoint() {
+        // Drive the queue through the pool itself: stealing jobs must
+        // cover every row exactly once, with claim counts summing to
+        // the chunk total no matter how the race lands.
+        let pool = WorkerPool::new(3);
+        let q = RowQueue::new(101, 3);
+        let hits: Vec<AtomicUsize> =
+            (0..101).map(|_| AtomicUsize::new(0)).collect();
+        let claims: Vec<AtomicUsize> =
+            (0..4).map(|_| AtomicUsize::new(0)).collect();
+        {
+            let (q, hits, claims) = (&q, &hits, &claims);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::new();
+            for ti in 0..4 {
+                jobs.push(Box::new(move || {
+                    while let Some((r0, r1)) = q.claim() {
+                        claims[ti].fetch_add(1, Ordering::Relaxed);
+                        for r in r0..r1 {
+                            hits[r].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }));
+            }
+            pool.run_scoped(jobs);
+        }
+        assert!(hits
+            .iter()
+            .all(|h| h.load(Ordering::Relaxed) == 1));
+        let total: usize = claims
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(total, q.chunks());
+        assert_eq!(q.claimed(), q.chunks());
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! Lane-fused SIMD micro-kernels: the tile → panel → lane hierarchy.
+//!
+//! This module is the software mirror of SPADE's lane-fused SIMD
+//! datapath (§II): one set of submodules — here, one hierarchical loop
+//! structure — shared by all three precisions instead of three
+//! unrelated inner loops. The hierarchy, top to bottom:
+//!
+//! * **Tile** — a row block handed to one worker by the work-stealing
+//!   queue ([`super::pool::RowQueue`]); every precision enters through
+//!   the same tile contract (disjoint output rows, shared read-only
+//!   operand plans).
+//! * **Panel** — a B-column strip sized for cache residency
+//!   ([`TileConfig::p16_panel`] / [`TileConfig::p32_panel`]): the
+//!   k-deep slice of B touched by the inner loops stays hot while the
+//!   tile's rows stream over it, instead of re-streaming all of B per
+//!   output row.
+//! * **Lane** — a small fixed set of independent accumulators kept in
+//!   registers: [`P8_LANES`] `i64` LUT-gather lanes for P8, a
+//!   [`P16_MR`]×[`P16_NR`] `i128` register micro-tile for P16, and a
+//!   panel of reused quires for P32/long-k. Lanes break the
+//!   load-add-store round trip to a heap accumulator per MAC — the
+//!   serial dependency chain that kept the old element-at-a-time loops
+//!   scalar — so the compiler can keep the adds in vector registers.
+//!
+//! Bit-exactness is structural, not incidental: every accumulator is
+//! an exact integer (or the exact quire), and integer addition is
+//! associative, so *any* tile/panel/lane reordering produces the same
+//! final sum and therefore the same single rounding. The identity
+//! tests in `tests/kernel_planar.rs` hold all paths to the
+//! `Backend::PositExact` oracle.
+//!
+//! ## Inner-loop selection
+//!
+//! [`InnerPath`] names the selectable loop bodies. `Auto` (what
+//! [`super::gemm::gemm`] uses) picks the lane-fused portable loops,
+//! upgrading P8 to the `std::arch` AVX2 LUT-gather when the CPU has it
+//! (runtime-detected; `SPADE_KERNEL_GATHER=0` forces portable).
+//! `Unblocked` keeps the PR-1 element-at-a-time loops as the measured
+//! baseline for `benches/hotpath.rs` — see
+//! [`super::gemm::gemm_single_path`].
+//!
+//! ## Tuning
+//!
+//! Panel widths and the work-stealing chunk size are runtime-tunable
+//! via `SPADE_KERNEL_TILE` (e.g.
+//! `SPADE_KERNEL_TILE=p16_panel=48,p32_panel=16,steal_rows=2`), read
+//! once at first kernel use — see [`TileConfig`]. Lane counts are
+//! compile-time constants: they size on-stack accumulator arrays.
+
+use std::sync::OnceLock;
+
+use crate::posit::{PositFormat, Quire};
+
+use super::gemm::{encode_acc_i128, encode_acc_i64};
+use super::lut::{self, P16_ACC_FRAC_OFFSET, P8_ACC_FRAC_OFFSET};
+use super::plan::DecodedPlan;
+
+/// P8 lane width: output columns accumulated per register-resident
+/// lane block. Eight `i64` lanes fill two 256-bit vector registers.
+pub const P8_LANES: usize = 8;
+
+/// P16 micro-tile rows: output rows sharing one load of each B
+/// element (B traffic drops by this factor versus row-at-a-time).
+pub const P16_MR: usize = 4;
+
+/// P16 micro-tile columns: `i128` accumulator lanes per row of the
+/// register micro-tile.
+pub const P16_NR: usize = 4;
+
+/// Which inner-loop body a GEMM runs. [`super::gemm::gemm`] always
+/// uses `Auto`; the others exist so benches and identity tests can pin
+/// a specific body ([`super::gemm::gemm_single_path`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InnerPath {
+    /// Lane-fused loops, AVX2 LUT-gather for P8 when the CPU has it.
+    Auto,
+    /// Lane-fused loops, portable Rust only (no `std::arch`).
+    Portable,
+    /// Force the AVX2 LUT-gather P8 loop (other formats fall back to
+    /// the lane-fused loops). Unavailable off x86_64/AVX2.
+    Gather,
+    /// The PR-1 element-at-a-time loops — scalar LUT gather for P8,
+    /// unblocked P16, full-width quire row for P32. Kept as the bench
+    /// baseline (`simd_vs_scalar_gather`, `blocked_vs_unblocked_p16`).
+    Unblocked,
+}
+
+/// Runtime-tunable tile parameters. Defaults suit ~32 KiB L1d; the
+/// `SPADE_KERNEL_TILE` environment variable overrides individual
+/// fields with a comma-separated `key=value` list (unknown keys and
+/// unparsable values are ignored):
+///
+/// ```text
+/// SPADE_KERNEL_TILE=p16_panel=48,p32_panel=16,steal_rows=2
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    /// B-column panel width for the blocked P16 path (clamped to at
+    /// least [`P16_NR`]). Default 64: a 256-deep panel of planar
+    /// sig+w columns stays L2-resident across the tile's rows.
+    pub p16_panel: usize,
+    /// B-column panel width (= live quire count) for the P32/long-k
+    /// quire path. Default 32.
+    pub p32_panel: usize,
+    /// Rows per work-stealing chunk; 0 (default) sizes chunks
+    /// automatically to ~4 per worker.
+    pub steal_rows: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> TileConfig {
+        TileConfig { p16_panel: 64, p32_panel: 32, steal_rows: 0 }
+    }
+}
+
+impl TileConfig {
+    /// Parse an override spec (the `SPADE_KERNEL_TILE` format). `None`
+    /// and unrecognized fragments yield the defaults, so a typo can
+    /// never disable the kernel.
+    pub fn from_spec(spec: Option<&str>) -> TileConfig {
+        let mut cfg = TileConfig::default();
+        let Some(s) = spec else {
+            return cfg;
+        };
+        for part in s.split(',') {
+            let Some((key, val)) = part.split_once('=') else {
+                continue;
+            };
+            let Ok(v) = val.trim().parse::<usize>() else {
+                continue;
+            };
+            match key.trim() {
+                "p16_panel" => cfg.p16_panel = v.max(P16_NR),
+                "p32_panel" => cfg.p32_panel = v.max(1),
+                "steal_rows" => cfg.steal_rows = v,
+                _ => {}
+            }
+        }
+        cfg
+    }
+}
+
+/// The process-wide tile configuration: defaults overridden by
+/// `SPADE_KERNEL_TILE` (read once, at first kernel use).
+pub fn tile_config() -> TileConfig {
+    static CFG: OnceLock<TileConfig> = OnceLock::new();
+    *CFG.get_or_init(|| {
+        TileConfig::from_spec(
+            std::env::var("SPADE_KERNEL_TILE").ok().as_deref())
+    })
+}
+
+/// True when the `std::arch` AVX2 LUT-gather P8 loop can run on this
+/// machine (always false off x86_64).
+#[cfg(target_arch = "x86_64")]
+pub fn gather_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// True when the `std::arch` AVX2 LUT-gather P8 loop can run on this
+/// machine (always false off x86_64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn gather_available() -> bool {
+    false
+}
+
+/// Whether `Auto` routing uses the AVX2 gather loop: available on this
+/// CPU and not disabled via `SPADE_KERNEL_GATHER=0` (read once).
+pub(super) fn gather_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        if matches!(std::env::var("SPADE_KERNEL_GATHER").as_deref(),
+                    Ok("0") | Ok("off")) {
+            return false;
+        }
+        gather_available()
+    })
+}
+
+/// Bias row decoded once into planar fields (shared by every inner
+/// loop; built by the GEMM front end in [`super::gemm`]).
+pub(super) struct BiasDec {
+    pub(super) sig: Vec<i64>,
+    pub(super) w: Vec<i32>,
+    pub(super) nar: Vec<bool>,
+    pub(super) has_nar: bool,
+}
+
+impl BiasDec {
+    pub(super) fn new(words: &[u64], fmt: PositFormat) -> BiasDec {
+        let p = DecodedPlan::from_words(words.to_vec(), 1, words.len(),
+                                        fmt);
+        let has_nar = p.has_nar;
+        // `nar` is only read when `has_nar` (it is empty otherwise).
+        BiasDec { sig: p.sig, w: p.w, nar: p.nar_cols, has_nar }
+    }
+}
+
+/// Compute output rows `i0 ..` into `out` (a whole-rows slice) with
+/// the requested inner-loop body — the tile entry point every
+/// precision shares. The LUT / fixed-offset fast paths are specific to
+/// the exact standard formats; anything else goes through the generic
+/// quire path (correct for any posit(n, es) the crate supports).
+pub(super) fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&BiasDec>, i0: usize,
+                        out: &mut [u64], path: InnerPath) {
+    let n = b.cols;
+    let nrows = out.len() / n;
+    if a.fmt == crate::posit::P8_FMT {
+        rows_p8(a, b, bias, i0, nrows, out, path);
+    } else if a.fmt == crate::posit::P16_FMT
+        && a.cols <= lut::P16_CHUNK
+    {
+        if path == InnerPath::Unblocked {
+            rows_p16_unblocked(a, b, bias, i0, nrows, out);
+        } else {
+            rows_p16_blocked(a, b, bias, i0, nrows, out);
+        }
+    } else if path == InnerPath::Unblocked {
+        rows_quire_unblocked(a, b, bias, i0, nrows, out);
+    } else {
+        rows_quire_panel(a, b, bias, i0, nrows, out);
+    }
+}
+
+/// Bias contribution at column `j` in the P8 accumulator's fixed
+/// point (0 without a bias).
+#[inline]
+fn p8_bias_term(bias: Option<&BiasDec>, j: usize) -> i64 {
+    match bias {
+        Some(bd) => bd.sig[j] << (bd.w[j] + P8_ACC_FRAC_OFFSET as i32),
+        None => 0,
+    }
+}
+
+/// P8 dispatch: unblocked baseline, forced/auto AVX2 gather, or the
+/// portable lane loop.
+fn rows_p8(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
+           i0: usize, nrows: usize, out: &mut [u64], path: InnerPath) {
+    if path == InnerPath::Unblocked {
+        return rows_p8_unblocked(a, b, bias, i0, nrows, out);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        let want_gather = path == InnerPath::Gather
+            || (path == InnerPath::Auto && gather_enabled());
+        if want_gather && gather_available() {
+            // SAFETY: AVX2 presence was just runtime-checked.
+            unsafe { rows_p8_avx2(a, b, bias, i0, nrows, out) };
+            return;
+        }
+    }
+    rows_p8_lanes(a, b, bias, i0, nrows, out)
+}
+
+/// Lane accumulators seeded with the bias terms for columns
+/// `j0 .. j0 + P8_LANES` (shared by the portable and AVX2 bodies).
+#[inline]
+fn p8_lane_bias(bias: Option<&BiasDec>, j0: usize) -> [i64; P8_LANES] {
+    let mut lanes = [0i64; P8_LANES];
+    for (l, slot) in lanes.iter_mut().enumerate() {
+        *slot = p8_bias_term(bias, j0 + l);
+    }
+    lanes
+}
+
+/// Scalar tail for the columns past the last full lane block — one
+/// shared copy so the portable and AVX2 bodies cannot diverge.
+#[inline]
+fn p8_tail(arow: &[u8], b8: &[u8], bias: Option<&BiasDec>, j0: usize,
+           n: usize, fmt: PositFormat, orow: &mut [u64]) {
+    let lut = lut::p8_prod_lut();
+    for j in j0..n {
+        let mut acc = p8_bias_term(bias, j);
+        for (kk, &aw) in arow.iter().enumerate() {
+            if aw != 0 {
+                acc +=
+                    lut[((aw as usize) << 8) | b8[kk * n + j] as usize];
+            }
+        }
+        orow[j] = encode_acc_i64(acc, P8_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
+/// P8 lane-fused portable loop: [`P8_LANES`] independent `i64`
+/// accumulators walk the k dimension together, one exact-product LUT
+/// gather per lane per step. The lanes live in a fixed array the
+/// compiler keeps in vector registers, so the per-MAC cost is one
+/// gather + one add — no accumulator load/store round trip.
+fn rows_p8_lanes(a: &DecodedPlan, b: &DecodedPlan,
+                 bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                 out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let (a8, b8) = (&a.words8, &b.words8);
+    for r in 0..nrows {
+        let i = i0 + r;
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let mut j0 = 0usize;
+        while j0 + P8_LANES <= n {
+            let mut lanes = p8_lane_bias(bias, j0);
+            for (kk, &aw) in arow.iter().enumerate() {
+                if aw == 0 {
+                    continue;
+                }
+                let base = (aw as usize) << 8;
+                let brow = &b8[kk * n + j0..kk * n + j0 + P8_LANES];
+                for (slot, &bw) in lanes.iter_mut().zip(brow) {
+                    *slot += lut[base | bw as usize];
+                }
+            }
+            for (jj, &v) in lanes.iter().enumerate() {
+                orow[j0 + jj] =
+                    encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+            }
+            j0 += P8_LANES;
+        }
+        p8_tail(arow, b8, bias, j0, n, fmt, orow);
+    }
+}
+
+/// P8 AVX2 loop: same lane structure as [`rows_p8_lanes`], with the
+/// eight LUT gathers per step issued as two `vpgatherqq` instructions
+/// and the lane adds as two `vpaddq` — the literal hardware gather the
+/// portable loop autovectorizes toward. Bit-identical by construction
+/// (same integer sums); `tests/kernel_planar.rs` asserts it.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn rows_p8_avx2(a: &DecodedPlan, b: &DecodedPlan,
+                       bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                       out: &mut [u64]) {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi64, _mm256_cvtepu8_epi64,
+        _mm256_i64gather_epi64, _mm256_loadu_si256, _mm256_or_si256,
+        _mm256_set1_epi64x, _mm256_storeu_si256, _mm_cvtsi32_si128,
+    };
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let lp = lut.as_ptr();
+    let (a8, b8) = (&a.words8, &b.words8);
+    for r in 0..nrows {
+        let i = i0 + r;
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let mut j0 = 0usize;
+        while j0 + P8_LANES <= n {
+            let mut lanes = p8_lane_bias(bias, j0);
+            let mut vlo =
+                _mm256_loadu_si256(lanes.as_ptr() as *const __m256i);
+            let mut vhi = _mm256_loadu_si256(
+                lanes.as_ptr().add(4) as *const __m256i);
+            for (kk, &aw) in arow.iter().enumerate() {
+                if aw == 0 {
+                    continue;
+                }
+                let base = _mm256_set1_epi64x((aw as i64) << 8);
+                let bytes: [u8; 8] = b8
+                    [kk * n + j0..kk * n + j0 + P8_LANES]
+                    .try_into()
+                    .unwrap();
+                let bv = u64::from_le_bytes(bytes);
+                // Zero-extend 4 B words at a time into i64 index
+                // lanes, OR in the A word's LUT row base, gather.
+                let lo: __m128i = _mm_cvtsi32_si128(bv as u32 as i32);
+                let hi: __m128i =
+                    _mm_cvtsi32_si128((bv >> 32) as u32 as i32);
+                let ilo = _mm256_or_si256(_mm256_cvtepu8_epi64(lo),
+                                          base);
+                let ihi = _mm256_or_si256(_mm256_cvtepu8_epi64(hi),
+                                          base);
+                vlo = _mm256_add_epi64(
+                    vlo, _mm256_i64gather_epi64::<8>(lp, ilo));
+                vhi = _mm256_add_epi64(
+                    vhi, _mm256_i64gather_epi64::<8>(lp, ihi));
+            }
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i,
+                                vlo);
+            _mm256_storeu_si256(
+                lanes.as_mut_ptr().add(4) as *mut __m256i, vhi);
+            for (jj, &v) in lanes.iter().enumerate() {
+                orow[j0 + jj] =
+                    encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+            }
+            j0 += P8_LANES;
+        }
+        p8_tail(arow, b8, bias, j0, n, fmt, orow);
+    }
+}
+
+/// P8 element-at-a-time baseline (PR 1): one scalar LUT gather per MAC
+/// into a heap accumulator row. Kept callable so
+/// `benches/hotpath.rs`'s `simd_vs_scalar_gather` section measures the
+/// lane fusion against the exact loop it replaced.
+fn rows_p8_unblocked(a: &DecodedPlan, b: &DecodedPlan,
+                     bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                     out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let mut acc = vec![0i64; n];
+    for r in 0..nrows {
+        let i = i0 + r;
+        match bias {
+            Some(_) => {
+                for (j, slot) in acc.iter_mut().enumerate() {
+                    *slot = p8_bias_term(bias, j);
+                }
+            }
+            None => acc.fill(0),
+        }
+        let arow = &a.words[i * k..(i + 1) * k];
+        for (kk, &aw) in arow.iter().enumerate() {
+            if aw == 0 {
+                continue;
+            }
+            let base = (aw as usize) << 8;
+            let brow = &b.words[kk * n..(kk + 1) * n];
+            for (accj, &bw) in acc.iter_mut().zip(brow) {
+                *accj += lut[base | bw as usize];
+            }
+        }
+        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+        }
+    }
+}
+
+/// P16 blocked path (k ≤ [`lut::P16_CHUNK`]): B-column panels sized by
+/// [`TileConfig::p16_panel`] for cache residency, and inside each
+/// panel a [`P16_MR`]×[`P16_NR`] register micro-tile of `i128`
+/// accumulators — each loaded B element feeds [`P16_MR`] output rows,
+/// cutting B traffic by that factor versus the row-at-a-time loop.
+fn rows_p16_blocked(a: &DecodedPlan, b: &DecodedPlan,
+                    bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                    out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    let panel = tile_config().p16_panel.max(P16_NR);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jend = (j0 + panel).min(n);
+        let mut r = 0usize;
+        while r < nrows {
+            let iw = (nrows - r).min(P16_MR);
+            let mut j = j0;
+            while j < jend {
+                let jw = (jend - j).min(P16_NR);
+                let mut acc = [[0i128; P16_NR]; P16_MR];
+                if let Some(bd) = bias {
+                    for row in acc.iter_mut().take(iw) {
+                        for (ni, slot) in
+                            row.iter_mut().enumerate().take(jw)
+                        {
+                            *slot = (bd.sig[j + ni] as i128)
+                                << (bd.w[j + ni] + off);
+                        }
+                    }
+                }
+                for kk in 0..k {
+                    let bs = &b.sig[kk * n + j..kk * n + j + jw];
+                    let bw = &b.w[kk * n + j..kk * n + j + jw];
+                    for (mi, arow_acc) in
+                        acc.iter_mut().enumerate().take(iw)
+                    {
+                        let idx = (i0 + r + mi) * k + kk;
+                        let sa = a.sig[idx];
+                        if sa == 0 {
+                            continue;
+                        }
+                        let wa = a.w[idx];
+                        for ni in 0..jw {
+                            let p = sa * bs[ni];
+                            if p != 0 {
+                                arow_acc[ni] +=
+                                    (p as i128) << (wa + bw[ni] + off);
+                            }
+                        }
+                    }
+                }
+                for (mi, arow_acc) in acc.iter().enumerate().take(iw) {
+                    for (ni, &v) in
+                        arow_acc.iter().enumerate().take(jw)
+                    {
+                        out[(r + mi) * n + j + ni] = encode_acc_i128(
+                            v, P16_ACC_FRAC_OFFSET, fmt);
+                    }
+                }
+                j += jw;
+            }
+            r += iw;
+        }
+        j0 = jend;
+    }
+}
+
+/// P16 element-at-a-time baseline (PR 1): significand product +
+/// `i128` add per MAC into a heap accumulator row, full B width per
+/// output row. Kept callable for `blocked_vs_unblocked_p16`.
+fn rows_p16_unblocked(a: &DecodedPlan, b: &DecodedPlan,
+                      bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                      out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    let mut acc = vec![0i128; n];
+    for r in 0..nrows {
+        let i = i0 + r;
+        match bias {
+            Some(bd) => {
+                for (j, slot) in acc.iter_mut().enumerate() {
+                    *slot = (bd.sig[j] as i128) << (bd.w[j] + off);
+                }
+            }
+            None => acc.fill(0),
+        }
+        for kk in 0..k {
+            let sa = a.sig[i * k + kk];
+            if sa == 0 {
+                continue;
+            }
+            let wa = a.w[i * k + kk];
+            let bsig = &b.sig[kk * n..(kk + 1) * n];
+            let bw = &b.w[kk * n..(kk + 1) * n];
+            for (j, slot) in acc.iter_mut().enumerate() {
+                let p = sa * bsig[j];
+                if p != 0 {
+                    *slot += (p as i128) << (wa + bw[j] + off);
+                }
+            }
+        }
+        for (o, &v) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = encode_acc_i128(v, P16_ACC_FRAC_OFFSET, fmt);
+        }
+    }
+}
+
+/// P32 (any k) and P16 beyond the `i128` headroom: planar significand
+/// products streamed into a panel of reused quires
+/// ([`TileConfig::p32_panel`] columns at a time), so the B slice the
+/// inner loop walks stays cache-resident across the tile's rows.
+fn rows_quire_panel(a: &DecodedPlan, b: &DecodedPlan,
+                    bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                    out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let panel = tile_config().p32_panel.max(1).min(n.max(1));
+    let mut quires: Vec<Quire> =
+        (0..panel).map(|_| Quire::new(fmt)).collect();
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(panel);
+        for r in 0..nrows {
+            let i = i0 + r;
+            for q in quires[..jw].iter_mut() {
+                q.clear();
+            }
+            if let Some(bd) = bias {
+                for (ni, q) in quires[..jw].iter_mut().enumerate() {
+                    let s = bd.sig[j0 + ni];
+                    if s != 0 {
+                        q.mac_raw(s.unsigned_abs() as u128,
+                                  bd.w[j0 + ni], s < 0);
+                    }
+                }
+            }
+            for kk in 0..k {
+                let sa = a.sig[i * k + kk];
+                if sa == 0 {
+                    continue;
+                }
+                let wa = a.w[i * k + kk];
+                let bs = &b.sig[kk * n + j0..kk * n + j0 + jw];
+                let bw = &b.w[kk * n + j0..kk * n + j0 + jw];
+                for (ni, q) in quires[..jw].iter_mut().enumerate() {
+                    let p = sa * bs[ni];
+                    if p != 0 {
+                        q.mac_raw(p.unsigned_abs() as u128,
+                                  wa + bw[ni], p < 0);
+                    }
+                }
+            }
+            for (ni, q) in quires[..jw].iter().enumerate() {
+                out[r * n + j0 + ni] = q.to_posit();
+            }
+        }
+        j0 += jw;
+    }
+}
+
+/// Quire baseline (PR 1): one full-width row of quires, all of B
+/// streamed per output row. Kept callable for the bench comparisons.
+fn rows_quire_unblocked(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&BiasDec>, i0: usize,
+                        nrows: usize, out: &mut [u64]) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let mut quires: Vec<Quire> =
+        (0..n).map(|_| Quire::new(fmt)).collect();
+    for r in 0..nrows {
+        let i = i0 + r;
+        for q in quires.iter_mut() {
+            q.clear();
+        }
+        if let Some(bd) = bias {
+            for (j, q) in quires.iter_mut().enumerate() {
+                let s = bd.sig[j];
+                if s != 0 {
+                    q.mac_raw(s.unsigned_abs() as u128, bd.w[j],
+                              s < 0);
+                }
+            }
+        }
+        for kk in 0..k {
+            let sa = a.sig[i * k + kk];
+            if sa == 0 {
+                continue;
+            }
+            let wa = a.w[i * k + kk];
+            let bsig = &b.sig[kk * n..(kk + 1) * n];
+            let bw = &b.w[kk * n..(kk + 1) * n];
+            for (j, q) in quires.iter_mut().enumerate() {
+                let p = sa * bsig[j];
+                if p != 0 {
+                    q.mac_raw(p.unsigned_abs() as u128, wa + bw[j],
+                              p < 0);
+                }
+            }
+        }
+        for (o, q) in out[r * n..(r + 1) * n].iter_mut().zip(&quires) {
+            *o = q.to_posit();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_config_spec_parsing() {
+        assert_eq!(TileConfig::from_spec(None), TileConfig::default());
+        let cfg = TileConfig::from_spec(Some(
+            "p16_panel=48, p32_panel=16,steal_rows=2"));
+        assert_eq!(cfg,
+                   TileConfig { p16_panel: 48, p32_panel: 16,
+                                steal_rows: 2 });
+        // Unknown keys / garbage fall back to defaults field-wise.
+        let cfg = TileConfig::from_spec(Some(
+            "bogus=9,p16_panel=oops,p32_panel=8"));
+        assert_eq!(cfg.p16_panel, TileConfig::default().p16_panel);
+        assert_eq!(cfg.p32_panel, 8);
+        // Panels are clamped to their minimum lane widths.
+        let cfg = TileConfig::from_spec(Some("p16_panel=1,p32_panel=0"));
+        assert_eq!(cfg.p16_panel, P16_NR);
+        assert_eq!(cfg.p32_panel, 1);
+    }
+
+    #[test]
+    fn gather_availability_is_consistent() {
+        // On non-x86 this is always false; on x86_64 it must agree
+        // with the feature detection macro (smoke test: just callable).
+        let _ = gather_available();
+    }
+}

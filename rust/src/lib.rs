@@ -29,10 +29,14 @@
 //! * [`kernel`] — the decode-once planar compute kernel: operand tensors
 //!   decoded once into structure-of-arrays fields, P8 table-lookup
 //!   multiply, exact fused-MAC accumulation with a single final
-//!   rounding, and row-block tiling on a persistent worker pool
+//!   rounding, lane-fused SIMD inner loops in a tile → panel → lane
+//!   hierarchy ([`kernel::simd`] — P8 LUT-gather lanes with an optional
+//!   AVX2 body, blocked P16 micro-tiles, quire panels), and
+//!   work-stealing row dispatch on a persistent worker pool
 //!   ([`kernel::pool`] — long-lived channel-fed threads, no per-GEMM
-//!   spawns). This is the functional hot path behind the systolic fast
-//!   GEMM, `nn` inference and coordinator serving.
+//!   spawns, no straggling fixed splits). This is the functional hot
+//!   path behind the systolic fast GEMM, `nn` inference and
+//!   coordinator serving.
 //! * [`nn`] / [`data`] — posit-quantized DNN inference stack (tensors,
 //!   layers, model zoo, SPDW weight loading) and the synthetic datasets
 //!   used for the Fig. 4 accuracy reproduction.

@@ -96,8 +96,9 @@ impl SystolicGemm {
     /// operands, exact accumulation, one final rounding), analytic
     /// cycle/energy statistics. Executes on the decode-once planar
     /// kernel ([`crate::kernel`]): operands are quantized+decoded once,
-    /// the fused-MAC inner loop accumulates exactly (quire contract),
-    /// and large matrices fan out across row-block threads.
+    /// the lane-fused inner loops accumulate exactly (quire contract),
+    /// and large matrices fan out as work-stolen row chunks on the
+    /// persistent kernel pool.
     ///
     /// `a`: m x k row-major, `b`: k x n row-major -> m x n.
     pub fn run(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize)

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 
 use spade::engine::Mode;
-use spade::kernel::{self, DecodedPlan};
+use spade::kernel::{self, DecodedPlan, InnerPath};
 use spade::nn::{exec, Backend, Model, ModelSpec, Precision, Session,
                 Tensor};
 use spade::posit::{from_f64, p_mul, PositFormat, Quire, P16_FMT,
@@ -94,6 +94,132 @@ fn planar_gemm_bit_identical_to_scalar_reference() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn p8_gemm_row_sweep_exhaustive() {
+    // ISSUE satellite: a GEMM whose A rows enumerate every P8 bit
+    // pattern against one fixed B, asserted bit-identical to the
+    // scalar quire reference. Part 1 sweeps the 255 non-NaR words
+    // (every row a rotation, so each pattern meets each B row), part
+    // 2 adds the NaR word so the poisoning path is swept too.
+    let fmt = P8_FMT;
+    let pats: Vec<u64> =
+        (0..256u64).filter(|&w| w != fmt.nar()).collect();
+    let k = pats.len(); // 255
+    let n = 6usize;
+    // Fixed B: extremes in the first rows, deterministic values after.
+    let mut rng = SplitMix64::new(808);
+    let mut bw: Vec<u64> = vec![
+        fmt.maxpos_word(), 1, from_f64(1.0, fmt), from_f64(-1.5, fmt),
+        from_f64(0.125, fmt), fmt.negate(fmt.maxpos_word()),
+    ];
+    while bw.len() < k * n {
+        bw.push(from_f64(rng.wide(-6, 6), fmt));
+    }
+    let m = 256usize; // every rotation of the pattern row
+    let aw: Vec<u64> = (0..m)
+        .flat_map(|i| (0..k).map(move |j| pats[(i + j) % k]))
+        .collect();
+    let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+    let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+    let got = kernel::gemm(&pa, &pb, None);
+    let want = scalar_ref(&aw, &bw, None, m, k, n, fmt);
+    assert_eq!(got, want, "non-NaR sweep diverged from quire ref");
+    // thread-count invariance on the same sweep
+    assert_eq!(kernel::gemm_with_threads(&pa, &pb, None, 5), got);
+
+    // Part 2: one row holding all 256 patterns (NaR included) — every
+    // output must poison, exactly like the reference.
+    let aw_all: Vec<u64> = (0..256u64).collect();
+    let pa = DecodedPlan::from_words(aw_all.clone(), 1, 256, fmt);
+    let mut bw2 = bw;
+    bw2.extend_from_slice(&[from_f64(2.0, fmt); 6]); // 256 * 6 words
+    let pb = DecodedPlan::from_words(bw2.clone(), 256, n, fmt);
+    let got = kernel::gemm(&pa, &pb, None);
+    assert_eq!(got, scalar_ref(&aw_all, &bw2, None, 1, 256, n, fmt));
+    assert!(got.iter().all(|&w| w == fmt.nar()),
+            "NaR in the swept row must poison every output");
+}
+
+#[test]
+fn inner_paths_match_scalar_reference() {
+    // Acceptance: all three precisions through every selectable inner
+    // loop (lane-fused portable, AVX2 gather where present, unblocked
+    // baseline) stay bit-identical to the scalar quire reference.
+    let mut rng = SplitMix64::new(515);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for &(m, k, n) in &[(3, 21, 13), (7, 8, 9), (1, 64, 17)] {
+            let aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            let bias = Some(rand_words(&mut rng, n, fmt));
+            let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+            let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+            let want = scalar_ref(&aw, &bw, bias.as_deref(), m, k, n,
+                                  fmt);
+            for path in [InnerPath::Auto, InnerPath::Portable,
+                         InnerPath::Unblocked] {
+                assert_eq!(
+                    kernel::gemm_single_path(&pa, &pb,
+                                             bias.as_deref(), path)
+                        .unwrap(),
+                    want,
+                    "{fmt:?} ({m},{k},{n}) {path:?}");
+            }
+            match kernel::gemm_single_path(&pa, &pb, bias.as_deref(),
+                                           InnerPath::Gather) {
+                Some(got) => assert_eq!(got, want,
+                                        "{fmt:?} ({m},{k},{n}) Gather"),
+                None => assert!(!kernel::gather_available()),
+            }
+        }
+    }
+}
+
+#[test]
+fn work_stealing_handles_skewed_nar_rows() {
+    // ISSUE satellite: a genuinely skewed workload. Most rows are
+    // all-zero — the inner loops skip zero significands entirely, so
+    // those rows cost almost nothing — while every 5th row is dense
+    // (full-cost MACs), and some dense rows carry a NaR. Chunk costs
+    // therefore vary wildly; outputs must stay bit-identical across
+    // dispatchers and thread counts, and the steal counters must
+    // account for every chunk.
+    let fmt = P16_FMT;
+    let (m, k, n) = (41, 23, 9);
+    let mut rng = SplitMix64::new(929);
+    let mut aw = vec![0u64; m * k];
+    for i in (0..m).step_by(5) {
+        for kk in 0..k {
+            aw[i * k + kk] = from_f64(rng.normal(), fmt);
+        }
+    }
+    for i in (0..m).step_by(10) {
+        aw[i * k + (i % k)] = fmt.nar(); // poison half the dense rows
+    }
+    let bw: Vec<u64> =
+        (0..k * n).map(|_| from_f64(rng.wide(-8, 8), fmt)).collect();
+    let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+    let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+    let seq = kernel::gemm_with_threads(&pa, &pb, None, 1);
+    assert_eq!(seq, scalar_ref(&aw, &bw, None, m, k, n, fmt));
+    for t in [2usize, 3, 4, 8] {
+        let (out, stats) = kernel::gemm_with_stats(&pa, &pb, None, t);
+        assert_eq!(out, seq, "steal dispatch diverged at t={t}");
+        assert_eq!(stats.chunks, m.div_ceil(stats.chunk_rows));
+        assert_eq!(stats.per_job_claims.len(), t.min(m));
+        assert_eq!(stats.per_job_claims.iter().sum::<usize>(),
+                   stats.chunks,
+                   "t={t}: every chunk must be claimed exactly once");
+        // fixed-split scope baseline agrees too
+        assert_eq!(kernel::gemm_with_scope(&pa, &pb, None, t), seq);
+    }
+    for i in (0..m).step_by(10) {
+        for j in 0..n {
+            assert_eq!(seq[i * n + j], fmt.nar(),
+                       "poisoned row {i} must be NaR");
+        }
+    }
 }
 
 #[test]

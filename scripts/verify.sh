@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verify + perf + docs gate for the SPADE reproduction.
 #
-#   build (release) -> tests -> hotpath bench (writes BENCH_hotpath.json)
+#   build (release) -> tests -> hotpath bench smoke gate (quick mode,
+#   writes BENCH_hotpath.json and checks the required sections)
 #   -> docs gate (rustdoc warnings are errors)
 #   -> fmt / clippy (advisory only: the seed tree predates both gates).
 #
 # Usage: scripts/verify.sh
+#   SPADE_BENCH_QUICK=0 scripts/verify.sh   # full-size bench instead
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,8 +26,21 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== cargo bench --bench hotpath =="
-cargo bench --bench hotpath
+echo "== cargo bench --bench hotpath (smoke gate) =="
+# Quick mode by default: same JSON sections, smaller shapes. Export
+# SPADE_BENCH_QUICK=0 for the full-size run.
+SPADE_BENCH_QUICK="${SPADE_BENCH_QUICK:-1}" cargo bench --bench hotpath
+
+# The bench must have emitted the inner-loop and dispatch comparison
+# sections — a silent regression to the old loops would otherwise pass.
+for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
+           steal_vs_fixed_split; do
+  if ! grep -q "\"$key\"" BENCH_hotpath.json; then
+    echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
+    echo "        (did benches/hotpath.rs lose a comparison?)" >&2
+    exit 1
+  fi
+done
 
 echo "== cargo doc --no-deps (docs gate: warnings are errors) =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps
