@@ -1,20 +1,28 @@
-//! Serving demo: the precision-adaptive coordinator under synthetic
+//! Serving demo: the precision-adaptive engine under synthetic
 //! Poisson traffic with mixed precision pins, reporting latency
 //! percentiles per mode, per-shard load, and end-to-end throughput.
 //!
-//! The engine is selected automatically (`Coordinator::start_auto`):
-//! PJRT artifacts when `artifacts/manifest.json` exists, otherwise the
+//! Construction goes through the unified facade
+//! (`spade::api::EngineBuilder`): `SPADE_*` environment knobs are
+//! parsed once (`from_env`), CLI flags layer on top, and one
+//! validated `EngineConfig` drives batching, sharding, kernel tuning
+//! and metrics. The serving backend is selected automatically: PJRT
+//! artifacts when `artifacts/manifest.json` exists, otherwise the
 //! sharded planar posit kernel on trained or synthetic weights — so
 //! the demo runs on a bare checkout.
 //!
 //! Run: `cargo run --release --example serve_demo
 //!       [-- --requests 512 --rate-us 150 --policy balanced
-//!           --shards 2 --batch 16]`
+//!           --shards 2 --batch 16 --affinity pinned-mode
+//!           --stats-json serve_stats.json]`
+
+use std::time::Duration;
 
 use anyhow::Result;
 
-use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
-                         InferenceRequest, RoutePolicy, ServeBackend};
+use spade::api::{EngineBuilder, RoutePolicy, ServeBackend,
+                 ShardAffinity};
+use spade::coordinator::InferenceRequest;
 use spade::data::TrafficGen;
 use spade::util::Args;
 
@@ -29,38 +37,52 @@ fn main() -> Result<()> {
         "balanced" => RoutePolicy::Balanced,
         _ => RoutePolicy::EnergyFirst,
     };
+    let affinity = match args.get_or("affinity", "least-loaded")
+        .as_str()
+    {
+        "pinned-mode" => ShardAffinity::PinnedMode,
+        _ => ShardAffinity::LeastLoaded,
+    };
 
     let model = args.get_or("model", "mlp");
-    println!("starting coordinator (model={model}, policy={policy:?}, \
+    println!("building engine (model={model}, policy={policy:?}, \
               shards={}) ...",
              if shards == 0 { "auto".to_string() }
              else { shards.to_string() });
-    let (coord, backend) = Coordinator::start_auto(CoordinatorConfig {
-        model,
-        policy,
-        shards,
-        batcher: BatcherConfig { target: batch.max(1),
-                                 ..BatcherConfig::default() },
-    })?;
-    match backend {
-        ServeBackend::Pjrt => println!("engine: PJRT artifacts"),
-        ServeBackend::PlanarTrained => {
-            println!("engine: sharded planar kernel (trained weights)")
+    let mut builder = EngineBuilder::from_env()?
+        .model(model)
+        .policy(policy)
+        .shards(shards)
+        .affinity(affinity)
+        .batch(batch.max(1));
+    if let Some(path) = args.options.get("stats-json") {
+        builder = builder
+            .stats_json(path)
+            .stats_interval(Duration::from_millis(500));
+    }
+    let engine = builder.build()?;
+    let handle = engine.serve()?;
+    match handle.backend() {
+        Some(ServeBackend::Pjrt) => {
+            println!("backend: PJRT artifacts")
         }
-        ServeBackend::PlanarSynthetic => {
-            println!("engine: sharded planar kernel (synthetic model — \
-                      run `make artifacts` for trained weights)")
+        Some(ServeBackend::PlanarTrained) => {
+            println!("backend: sharded planar kernel (trained weights)")
+        }
+        Some(ServeBackend::PlanarSynthetic) | None => {
+            println!("backend: sharded planar kernel (synthetic model \
+                      — run `make artifacts` for trained weights)")
         }
     }
 
-    let mut traffic = TrafficGen::new(99, rate_us, coord.input_len());
+    let mut traffic = TrafficGen::new(99, rate_us, handle.input_len());
     println!("submitting {requests} requests (mean inter-arrival \
               {rate_us} us; ~25% pin an explicit precision) ...\n");
 
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(requests);
     for r in traffic.burst(requests) {
-        pending.push(coord.submit(InferenceRequest {
+        pending.push(handle.submit(InferenceRequest {
             id: r.id,
             input: r.input,
             mode: r.mode,
@@ -74,17 +96,20 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed();
 
-    let metrics = coord.shutdown();
+    let metrics = handle.shutdown();
     println!("{}", metrics.summary());
     println!("batch-mode distribution: {mode_counts:?}");
     println!("end-to-end: {requests} requests in {:.2}s -> {:.0} req/s",
              wall.as_secs_f64(),
              requests as f64 / wall.as_secs_f64());
+    if let Some(path) = args.options.get("stats-json") {
+        println!("stats dump (periodic + final): {path}");
+    }
     println!("\n(the energy-first policy routes unpinned traffic to \
               P8x4 — 4 lanes/cycle — while explicit P16/P32 pins are \
               honored per batch; each shard owns a persistent planar \
               session whose weight plans decode once, and all shards \
               share the kernel worker pool. compare --policy accuracy, \
-              --shards 1 vs 4)");
+              --shards 1 vs 4, --affinity pinned-mode)");
     Ok(())
 }

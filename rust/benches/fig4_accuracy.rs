@@ -15,10 +15,14 @@ const MODELS: &[&str] = &["lenet5", "cnn5", "alexnet_mini", "vgg16_mini",
                           "alpha_cnn"];
 
 fn main() {
-    let limit: usize = std::env::var("SPADE_FIG4_LIMIT")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(300);
+    // Env knobs route through the one sanctioned reader (api::env);
+    // installing the parsed kernel config keeps SPADE_KERNEL_* tuning
+    // effective for the forwards below.
+    spade::kernel::settings::install(
+        spade::api::EngineConfig::from_env()
+            .expect("invalid SPADE_* environment")
+            .kernel_config());
+    let limit: usize = spade::api::env::fig4_limit().unwrap_or(300);
 
     common::banner(&format!(
         "Fig. 4 — application accuracy, posit vs float (n<={limit} per \

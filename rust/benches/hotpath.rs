@@ -25,8 +25,7 @@ mod common;
 
 use std::collections::BTreeMap;
 
-use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
-                         InferenceRequest, RoutePolicy};
+use spade::coordinator::{InferenceRequest, RoutePolicy};
 use spade::data::TrafficGen;
 use spade::engine::{MacEngine, Mode};
 use spade::kernel::{self, DecodedPlan, InnerPath};
@@ -37,8 +36,16 @@ use spade::systolic::{ArrayConfig, SystolicGemm};
 use spade::util::SplitMix64;
 
 fn main() {
-    let quick = std::env::var("SPADE_BENCH_QUICK")
-        .map_or(false, |v| !v.is_empty() && v != "0");
+    // Env knobs route through the one sanctioned reader (api::env):
+    // SPADE_* is parsed once here at the bench edge and installed as
+    // the kernel default, so the direct kernel::gemm* calls below
+    // still honor SPADE_KERNEL_THREADS / _TILE / _GATHER exactly as
+    // they did when the kernel read the environment itself.
+    spade::kernel::settings::install(
+        spade::api::EngineConfig::from_env()
+            .expect("invalid SPADE_* environment")
+            .kernel_config());
+    let quick = spade::api::env::bench_quick();
     if quick {
         println!("(quick mode: smaller shapes, fewer reps — same \
                   JSON sections)");
@@ -388,17 +395,16 @@ fn main() {
     common::banner("sharded planar serving: throughput vs shard count");
     let model = Model::synthetic("bench");
     for shards in [1usize, 2, 4] {
-        let coord = Coordinator::start_with_model(
-            model.clone(),
-            CoordinatorConfig {
-                model: "bench".into(),
-                policy: RoutePolicy::EnergyFirst,
-                shards,
-                batcher: BatcherConfig { target: 16,
-                                         ..BatcherConfig::default() },
-            },
-        )
-        .unwrap();
+        // Serving is built through the facade: one EngineConfig per
+        // shard count, the same construction path `spade serve` uses.
+        let engine = spade::api::EngineBuilder::new()
+            .model("bench")
+            .policy(RoutePolicy::EnergyFirst)
+            .shards(shards)
+            .batch(16)
+            .build()
+            .unwrap();
+        let coord = engine.serve_model(model.clone()).unwrap();
         let mut gen = TrafficGen::new(5, 1, coord.input_len());
         let reqs = if quick { 96usize } else { 512usize };
         let t0 = std::time::Instant::now();

@@ -1,0 +1,267 @@
+//! [`EngineConfig`] — the one typed description of a SPADE engine.
+//!
+//! Every knob that used to be a scattered `SPADE_*` environment read
+//! or a per-layer constructor argument (kernel threads, tile
+//! geometry, gather path, shard count/affinity, batch size, metrics
+//! options) lives here as a plain field. [`EngineConfig::from_env`]
+//! parses the environment **once** at the process edge;
+//! [`EngineConfig::validate`] rejects bad values loudly instead of
+//! clamping; `EngineBuilder::build` installs the kernel slice of the
+//! config as the process default and hands back an
+//! [`super::Engine`].
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{BatcherConfig, CoordinatorConfig,
+                         MetricsConfig, RoutePolicy, ShardAffinity};
+use crate::engine::Mode;
+use crate::kernel::{gather_available, InnerPath, KernelConfig,
+                    TileConfig};
+
+use super::env;
+
+/// Largest accepted shard count — far beyond any sane deployment;
+/// catches a flag typo (`--shards 10000`) before it spawns a fleet.
+pub const MAX_SHARDS: usize = 1024;
+
+/// Typed engine configuration. Construct via
+/// [`EngineConfig::default`], [`EngineConfig::from_env`], or the
+/// fluent [`super::EngineBuilder`]; validate with
+/// [`EngineConfig::validate`] (the builder does both for you).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Model name (artifact stem) the serving facade loads.
+    pub model: String,
+    /// Pinned precision for traffic that does not pin its own: `None`
+    /// routes by [`EngineConfig::policy`]; `Some(mode)` makes that
+    /// mode the engine-wide default (kernel plans, serving default).
+    pub precision: Option<Mode>,
+    /// Routing policy for unpinned requests when no engine-wide
+    /// precision is pinned.
+    pub policy: RoutePolicy,
+    /// Per-GEMM worker override; `None` = size heuristic.
+    pub threads: Option<usize>,
+    /// Kernel pool size; `None` = available parallelism. Latched at
+    /// first pool use.
+    pub pool_workers: Option<usize>,
+    /// Tile/panel/steal-chunk geometry (strictly validated).
+    pub tile: TileConfig,
+    /// Inner-loop body: `Auto` (default), `Portable` (the old
+    /// `SPADE_KERNEL_GATHER=0`), or a pinned body for benching.
+    pub path: InnerPath,
+    /// Planar serving shards (0 = auto).
+    pub shards: usize,
+    /// Batch → shard placement policy.
+    pub affinity: ShardAffinity,
+    /// Dynamic batcher target size.
+    pub batch: usize,
+    /// Max time the first request of a batch may wait.
+    pub max_wait: Duration,
+    /// Metrics options: latency reservoir capacity, optional
+    /// `--stats-json` dump path and period.
+    pub metrics: MetricsConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        let b = BatcherConfig::default();
+        EngineConfig {
+            model: "mlp".into(),
+            precision: None,
+            policy: RoutePolicy::EnergyFirst,
+            threads: None,
+            pool_workers: None,
+            tile: TileConfig::default(),
+            path: InnerPath::Auto,
+            shards: 0,
+            affinity: ShardAffinity::LeastLoaded,
+            batch: b.target,
+            max_wait: b.max_wait,
+            metrics: MetricsConfig::default(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Defaults overridden by the `SPADE_*` environment, parsed once
+    /// (via [`super::env`]) and validated. This is the **only**
+    /// sanctioned path from environment variables to engine behavior;
+    /// call it at the edge (`main`, examples, benches) and thread the
+    /// config explicitly from there.
+    ///
+    /// `SPADE_KERNEL_THREADS` sets both [`EngineConfig::threads`] and
+    /// [`EngineConfig::pool_workers`] — the historical semantics of
+    /// that variable (one absolute override for pool size and
+    /// per-GEMM fan-out).
+    pub fn from_env() -> Result<EngineConfig> {
+        let mut cfg = EngineConfig::default();
+        let threads = env::kernel_threads()?;
+        cfg.threads = threads;
+        cfg.pool_workers = threads;
+        cfg.tile = env::kernel_tile()?;
+        if env::kernel_gather_disabled() {
+            cfg.path = InnerPath::Portable;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject invalid configurations with a clear message — zero
+    /// counts, sub-minimum panels, a forced gather path on a CPU
+    /// without one — instead of silently clamping at the point of
+    /// use.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.model.is_empty(), "model name must be non-empty");
+        ensure!(self.threads != Some(0),
+                "threads=0: at least one worker is required (omit \
+                 the override for automatic sizing)");
+        ensure!(self.pool_workers != Some(0),
+                "pool_workers=0: the kernel pool needs at least one \
+                 worker (omit the override for automatic sizing)");
+        self.tile
+            .validate()
+            .map_err(anyhow::Error::msg)?;
+        if self.path == InnerPath::Gather {
+            ensure!(gather_available(),
+                    "inner path Gather requires AVX2, which this CPU \
+                     does not have (use Auto, which falls back \
+                     portably)");
+        }
+        ensure!(self.shards <= MAX_SHARDS,
+                "shards={} exceeds the {MAX_SHARDS} sanity cap",
+                self.shards);
+        ensure!(self.batch >= 1, "batch size must be at least 1");
+        ensure!(self.metrics.reservoir_capacity >= 1,
+                "metrics reservoir capacity must be at least 1");
+        if self.metrics.stats_json.is_some() {
+            ensure!(!self.metrics.stats_interval.is_zero(),
+                    "stats_interval must be non-zero when a \
+                     stats-json path is set");
+        }
+        Ok(())
+    }
+
+    /// The kernel slice of this config (what `EngineBuilder::build`
+    /// installs as the process default).
+    pub fn kernel_config(&self) -> KernelConfig {
+        KernelConfig {
+            threads: self.threads,
+            pool_workers: self.pool_workers,
+            tile: self.tile,
+            path: self.path,
+        }
+    }
+
+    /// The precision the engine quantizes to when nothing else pins
+    /// one: [`EngineConfig::precision`], else the policy default.
+    pub fn default_mode(&self) -> Mode {
+        self.precision.unwrap_or_else(|| self.policy.default_mode())
+    }
+
+    /// Effective routing policy: an engine-wide pinned precision
+    /// overrides [`EngineConfig::policy`] by mapping to the policy
+    /// whose default is that mode (per-request pins still win — the
+    /// router never degrades an explicit request).
+    pub fn effective_policy(&self) -> RoutePolicy {
+        match self.precision {
+            None => self.policy,
+            Some(Mode::P8x4) => RoutePolicy::EnergyFirst,
+            Some(Mode::P16x2) => RoutePolicy::Balanced,
+            Some(Mode::P32x1) => RoutePolicy::AccuracyFirst,
+        }
+    }
+
+    /// Batcher parameters derived from this config.
+    pub fn batcher_config(&self) -> BatcherConfig {
+        BatcherConfig { target: self.batch, max_wait: self.max_wait }
+    }
+
+    /// The full coordinator configuration this engine serves with.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            model: self.model.clone(),
+            batcher: self.batcher_config(),
+            policy: self.effective_policy(),
+            shards: self.shards,
+            affinity: self.affinity,
+            kernel: Some(self.kernel_config()),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_zero_counts() {
+        let mut c = EngineConfig::default();
+        c.threads = Some(0);
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.pool_workers = Some(0);
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.metrics.reservoir_capacity = 0;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.shards = MAX_SHARDS + 1;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.model.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_surfaces_tile_errors() {
+        let mut c = EngineConfig::default();
+        c.tile.p16_panel = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("p16_panel"), "{err}");
+        let mut c = EngineConfig::default();
+        c.tile.p32_panel = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn precision_pin_maps_to_policy_and_mode() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.default_mode(), Mode::P8x4); // EnergyFirst
+        assert_eq!(c.effective_policy(), RoutePolicy::EnergyFirst);
+        c.precision = Some(Mode::P32x1);
+        assert_eq!(c.default_mode(), Mode::P32x1);
+        assert_eq!(c.effective_policy(), RoutePolicy::AccuracyFirst);
+        c.precision = None;
+        c.policy = RoutePolicy::Balanced;
+        assert_eq!(c.default_mode(), Mode::P16x2);
+    }
+
+    #[test]
+    fn kernel_and_coordinator_slices_carry_the_fields() {
+        let mut c = EngineConfig::default();
+        c.threads = Some(3);
+        c.tile.steal_rows = 2;
+        c.shards = 2;
+        c.batch = 7;
+        c.affinity = ShardAffinity::PinnedMode;
+        let kc = c.kernel_config();
+        assert_eq!(kc.threads, Some(3));
+        assert_eq!(kc.tile.steal_rows, 2);
+        let cc = c.coordinator_config();
+        assert_eq!(cc.shards, 2);
+        assert_eq!(cc.batcher.target, 7);
+        assert_eq!(cc.affinity, ShardAffinity::PinnedMode);
+        assert_eq!(cc.kernel, Some(kc));
+    }
+}

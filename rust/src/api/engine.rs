@@ -1,0 +1,537 @@
+//! [`EngineBuilder`] → [`Engine`] → [`ServeHandle`]: the fluent
+//! front door.
+//!
+//! The builder accumulates an [`EngineConfig`], validates it once,
+//! installs the kernel slice as the process default and returns an
+//! [`Engine`]. The engine then *constructs* the lower layers from
+//! that one config — kernel plans and GEMMs
+//! ([`Engine::plan_f32`] / [`Engine::gemm`]), plan-cached
+//! [`Session`]s ([`Engine::session`]), and serving
+//! [`crate::coordinator::Coordinator`]s ([`Engine::serve`]) — so no
+//! call site ever assembles `CoordinatorConfig` / `KernelConfig` /
+//! thread counts by hand again. Every path is bit-identical to the
+//! documented internal layer it wraps (`tests/api_facade.rs` asserts
+//! it).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig,
+                         InferenceRequest, InferenceResponse, Metrics,
+                         MetricsConfig, RoutePolicy, ServeBackend,
+                         ShardAffinity};
+use crate::engine::Mode;
+use crate::kernel::{self, DecodedPlan, DispatchStats, InnerPath,
+                    KernelConfig, TileConfig};
+use crate::nn::{Model, Session};
+
+use super::config::EngineConfig;
+
+/// Fluent constructor for [`Engine`]. Start from
+/// [`EngineBuilder::new`] (pure defaults) or
+/// [`EngineBuilder::from_env`] (defaults + `SPADE_*` overrides,
+/// parsed once), chain setters, finish with
+/// [`EngineBuilder::build`].
+#[derive(Debug, Clone, Default)]
+pub struct EngineBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineBuilder {
+    /// Builder over the built-in defaults (no environment reads).
+    pub fn new() -> EngineBuilder {
+        EngineBuilder { cfg: EngineConfig::default() }
+    }
+
+    /// Builder seeded from the environment
+    /// ([`EngineConfig::from_env`]) — the edge entry point `main`,
+    /// examples and benches use so `SPADE_*` variables keep working.
+    pub fn from_env() -> Result<EngineBuilder> {
+        Ok(EngineBuilder { cfg: EngineConfig::from_env()? })
+    }
+
+    /// Builder over an existing config (e.g. one deserialized or
+    /// assembled elsewhere).
+    pub fn from_config(cfg: EngineConfig) -> EngineBuilder {
+        EngineBuilder { cfg }
+    }
+
+    /// Model name the serving facade loads.
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.cfg.model = name.into();
+        self
+    }
+
+    /// Pin an engine-wide precision (see
+    /// [`EngineConfig::precision`]).
+    pub fn precision(mut self, mode: Mode) -> Self {
+        self.cfg.precision = Some(mode);
+        self
+    }
+
+    /// Routing policy for unpinned traffic.
+    pub fn policy(mut self, policy: RoutePolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Absolute per-GEMM worker count (use sparingly; the heuristic
+    /// is the default).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = Some(n);
+        self
+    }
+
+    /// Kernel pool size (latched at first pool use).
+    pub fn pool_workers(mut self, n: usize) -> Self {
+        self.cfg.pool_workers = Some(n);
+        self
+    }
+
+    /// Tile geometry as a typed value.
+    pub fn tile(mut self, tile: TileConfig) -> Self {
+        self.cfg.tile = tile;
+        self
+    }
+
+    /// Tile geometry as a spec string
+    /// (`"p16_panel=48,steal_rows=2"`), strictly parsed — errors
+    /// surface here rather than at build time so the offending spec
+    /// is still in hand.
+    pub fn tile_spec(mut self, spec: &str) -> Result<Self> {
+        self.cfg.tile =
+            TileConfig::parse(spec).map_err(anyhow::Error::msg)?;
+        Ok(self)
+    }
+
+    /// Inner-loop body ([`InnerPath::Portable`] replaces the old
+    /// `SPADE_KERNEL_GATHER=0`).
+    pub fn inner_path(mut self, path: InnerPath) -> Self {
+        self.cfg.path = path;
+        self
+    }
+
+    /// Planar serving shard count (0 = auto).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Batch → shard placement policy.
+    pub fn affinity(mut self, affinity: ShardAffinity) -> Self {
+        self.cfg.affinity = affinity;
+        self
+    }
+
+    /// Dynamic batcher target size.
+    pub fn batch(mut self, n: usize) -> Self {
+        self.cfg.batch = n;
+        self
+    }
+
+    /// Max wait before a partial batch flushes.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    /// Replace the whole metrics options block.
+    pub fn metrics(mut self, m: MetricsConfig) -> Self {
+        self.cfg.metrics = m;
+        self
+    }
+
+    /// Latency reservoir capacity (per mode and per shard).
+    pub fn reservoir_capacity(mut self, cap: usize) -> Self {
+        self.cfg.metrics.reservoir_capacity = cap;
+        self
+    }
+
+    /// Enable the periodic serve stats dump to `path`.
+    pub fn stats_json(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.metrics.stats_json = Some(path.into());
+        self
+    }
+
+    /// Period of the stats dump.
+    pub fn stats_interval(mut self, d: Duration) -> Self {
+        self.cfg.metrics.stats_interval = d;
+        self
+    }
+
+    /// Validate the accumulated config, install its kernel slice as
+    /// the process default ([`kernel::settings::install`]) and return
+    /// the engine. Build **before** the first GEMM if you override
+    /// `pool_workers` — the pool size is latched at first use.
+    pub fn build(self) -> Result<Engine> {
+        self.cfg.validate()?;
+        let kcfg = self.cfg.kernel_config();
+        kernel::settings::install(kcfg);
+        Ok(Engine { cfg: self.cfg, kcfg })
+    }
+}
+
+/// A built, validated engine: the single front door to the kernel,
+/// session and serving layers. Cheap to clone conceptually (it holds
+/// only config), but deliberately not `Clone` — one engine per
+/// process edge keeps "who configured this" answerable.
+#[derive(Debug)]
+pub struct Engine {
+    cfg: EngineConfig,
+    kcfg: KernelConfig,
+}
+
+impl Engine {
+    /// Start a builder ([`EngineBuilder::new`]).
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// One-call edge construction: environment-seeded builder,
+    /// built. Equivalent to `EngineBuilder::from_env()?.build()`.
+    pub fn from_env() -> Result<Engine> {
+        EngineBuilder::from_env()?.build()
+    }
+
+    /// The validated configuration this engine runs.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// The kernel slice of the configuration.
+    pub fn kernel_config(&self) -> KernelConfig {
+        self.kcfg
+    }
+
+    /// The precision this engine quantizes to by default.
+    pub fn default_mode(&self) -> Mode {
+        self.cfg.default_mode()
+    }
+
+    /// Decode an f32 matrix into a planar operand plan in the
+    /// engine's default precision (decode-once: reuse the plan across
+    /// GEMMs).
+    pub fn plan_f32(&self, data: &[f32], rows: usize, cols: usize)
+                    -> DecodedPlan {
+        DecodedPlan::from_f32(data, rows, cols,
+                              self.default_mode().format())
+    }
+
+    /// Decode raw posit words (already in the engine's default
+    /// format) into a planar operand plan.
+    pub fn plan_words(&self, words: Vec<u64>, rows: usize, cols: usize)
+                      -> DecodedPlan {
+        DecodedPlan::from_words(words, rows, cols,
+                                self.default_mode().format())
+    }
+
+    /// Planar GEMM under this engine's kernel config — bit-identical
+    /// to [`kernel::gemm`] under the same config (the internal layer
+    /// stays public and documented; the engine is the construction
+    /// path, not a different numeric path).
+    pub fn gemm(&self, a: &DecodedPlan, b: &DecodedPlan,
+                bias: Option<&[u64]>) -> Vec<u64> {
+        kernel::gemm_with_config(a, b, bias, &self.kcfg)
+    }
+
+    /// [`Engine::gemm`] plus work-stealing dispatch telemetry — the
+    /// engine's full kernel config (threads, tile, inner path)
+    /// governs the run, exactly as in [`Engine::gemm`].
+    pub fn gemm_stats(&self, a: &DecodedPlan, b: &DecodedPlan,
+                      bias: Option<&[u64]>)
+                      -> (Vec<u64>, DispatchStats) {
+        kernel::gemm_with_config_stats(a, b, bias, &self.kcfg)
+    }
+
+    /// A plan-cached execution session borrowing `model`, pinned to
+    /// this engine's kernel config.
+    pub fn session<'m>(&self, model: &'m Model) -> Session<'m> {
+        Session::new(model).with_kernel_config(self.kcfg)
+    }
+
+    /// A session owning its model (for worker threads), pinned to
+    /// this engine's kernel config.
+    pub fn session_owned(&self, model: Model) -> Session<'static> {
+        Session::owned(model).with_kernel_config(self.kcfg)
+    }
+
+    /// The coordinator configuration this engine serves with
+    /// (exposed for embedding; [`Engine::serve`] is the usual path).
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        self.cfg.coordinator_config()
+    }
+
+    /// Serve the configured model on the best available backend
+    /// (PJRT → trained weights → synthetic;
+    /// [`Coordinator::start_auto`]), with the stats dumper attached
+    /// when [`MetricsConfig::stats_json`] is set.
+    pub fn serve(&self) -> Result<ServeHandle> {
+        let (coord, backend) =
+            Coordinator::start_auto(self.coordinator_config())?;
+        Ok(self.wrap(coord, Some(backend)))
+    }
+
+    /// Serve an explicit in-memory model on the sharded planar
+    /// engine ([`Coordinator::start_with_model`]).
+    pub fn serve_model(&self, model: Model) -> Result<ServeHandle> {
+        let coord = Coordinator::start_with_model(
+            model, self.coordinator_config())?;
+        Ok(self.wrap(coord, None))
+    }
+
+    fn wrap(&self, coord: Coordinator, backend: Option<ServeBackend>)
+            -> ServeHandle {
+        let stats = self.cfg.metrics.stats_json.as_ref().map(|path| {
+            StatsDumper::spawn(coord.metrics.clone(), path.clone(),
+                               self.cfg.metrics.stats_interval)
+        });
+        ServeHandle { coord, backend, stats }
+    }
+}
+
+/// A running serving stack built by [`Engine::serve`] /
+/// [`Engine::serve_model`]: the coordinator plus (optionally) the
+/// periodic stats dumper. Shut down with [`ServeHandle::shutdown`] to
+/// get the final [`Metrics`] and the final stats dump.
+pub struct ServeHandle {
+    coord: Coordinator,
+    backend: Option<ServeBackend>,
+    stats: Option<StatsDumper>,
+}
+
+impl ServeHandle {
+    /// Which backend [`Coordinator::start_auto`] picked (`None` when
+    /// the engine was given an explicit in-memory model).
+    pub fn backend(&self) -> Option<ServeBackend> {
+        self.backend
+    }
+
+    /// Expected flattened input length per example.
+    pub fn input_len(&self) -> usize {
+        self.coord.input_len()
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, req: InferenceRequest)
+                  -> std::sync::mpsc::Receiver<InferenceResponse> {
+        self.coord.submit(req)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, req: InferenceRequest)
+                 -> Result<InferenceResponse> {
+        self.coord.infer(req)
+    }
+
+    /// Shared live metrics (the dumper reads the same handle).
+    pub fn metrics(&self) -> Arc<Mutex<Metrics>> {
+        self.coord.metrics.clone()
+    }
+
+    /// Drain and stop the coordinator, then stop the dumper — its
+    /// final write therefore sees the fully-drained metrics, so the
+    /// on-disk stats always end consistent with the returned
+    /// [`Metrics`].
+    pub fn shutdown(self) -> Metrics {
+        let ServeHandle { coord, stats, .. } = self;
+        let metrics = coord.shutdown();
+        if let Some(d) = stats {
+            d.finish();
+        }
+        metrics
+    }
+}
+
+/// Background thread that periodically renders the shared [`Metrics`]
+/// (plus kernel dispatch counters) to a JSON file, atomically
+/// (tmp-write + rename), and once more on shutdown.
+struct StatsDumper {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsDumper {
+    fn spawn(metrics: Arc<Mutex<Metrics>>, path: PathBuf,
+             interval: Duration) -> StatsDumper {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_w = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("spade-stats-dump".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                loop {
+                    let stopped = sleep_until_stop(&stop_w, interval);
+                    write_stats(&metrics, &path, t0.elapsed());
+                    if stopped {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn stats dumper");
+        StatsDumper { stop, handle: Some(handle) }
+    }
+
+    /// Signal the dumper; it writes one final dump and exits.
+    fn finish(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatsDumper {
+    // A ServeHandle dropped without shutdown() must not leak the
+    // dumper thread. Fields drop in declaration order, so the
+    // coordinator (declared before `stats`) drains first and the
+    // final dump still sees the drained metrics.
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Sleep `total` in small slices, returning early (true) when `stop`
+/// is raised — keeps shutdown latency ~25 ms regardless of the dump
+/// interval.
+fn sleep_until_stop(stop: &AtomicBool, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return true;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        std::thread::sleep(
+            (deadline - now).min(Duration::from_millis(25)));
+    }
+}
+
+/// Render + atomically replace the stats file. IO errors are
+/// swallowed (a stats dump must never take down serving); the dump
+/// simply retries next period.
+fn write_stats(metrics: &Arc<Mutex<Metrics>>, path: &PathBuf,
+               elapsed: Duration) {
+    let body = {
+        let m = metrics.lock().unwrap();
+        render_stats(&m, elapsed)
+    };
+    let tmp = path.with_extension("json.tmp");
+    if std::fs::write(&tmp, body).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
+}
+
+/// JSON fragment: `"p50_us": v` triple for one latency distribution
+/// (null when unsampled).
+fn pct_fields(p50: Option<u64>, p95: Option<u64>, p99: Option<u64>)
+              -> String {
+    let f = |p: Option<u64>| {
+        p.map_or("null".to_string(), |v| v.to_string())
+    };
+    format!("\"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}",
+            f(p50), f(p95), f(p99))
+}
+
+/// The machine-readable serve stats document (schema
+/// `spade-serve-stats-v1`): global counters, per-mode and per-shard
+/// latency percentiles, and kernel dispatch/steal counters — the
+/// ROADMAP fleet-dashboard dump.
+fn render_stats(m: &Metrics, elapsed: Duration) -> String {
+    let mut s = String::with_capacity(1024);
+    s.push_str("{\n  \"schema\": \"spade-serve-stats-v1\",\n");
+    s.push_str(&format!("  \"elapsed_s\": {:.3},\n",
+                        elapsed.as_secs_f64()));
+    s.push_str(&format!("  \"requests\": {},\n", m.total_requests));
+    s.push_str(&format!("  \"mean_batch\": {:.3},\n", m.mean_batch()));
+
+    const PCTS: [f64; 3] = [50.0, 95.0, 99.0];
+    s.push_str("  \"modes\": {");
+    for (i, (mode, r)) in m.latencies_us.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        let p = r.percentiles(&PCTS); // one sort serves all three
+        s.push_str(&format!(
+            "\"{mode}\": {{\"seen\": {}, \"sampled\": {}, {}}}",
+            r.seen(), r.len(), pct_fields(p[0], p[1], p[2])));
+    }
+    s.push_str("},\n");
+
+    s.push_str("  \"shards\": [");
+    for (i, (reqs, batches)) in m
+        .shard_requests
+        .iter()
+        .zip(&m.shard_batches)
+        .enumerate()
+    {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        let p = match m.shard_latencies_us.get(i) {
+            Some(r) => r.percentiles(&PCTS),
+            None => vec![None; 3],
+        };
+        s.push_str(&format!(
+            "{{\"requests\": {reqs}, \"batches\": {batches}, {}}}",
+            pct_fields(p[0], p[1], p[2])));
+    }
+    s.push_str("],\n");
+
+    // try_global: reporting must never *create* the pool (a PJRT
+    // serve may legitimately never touch the planar kernel). 0/0
+    // means "pool not created yet".
+    let k = kernel::counters();
+    let (pool_workers, pool_jobs) = match kernel::pool::try_global() {
+        Some(p) => (p.workers(), p.jobs_executed()),
+        None => (0, 0),
+    };
+    s.push_str(&format!(
+        "  \"kernel\": {{\"gemms\": {}, \"chunks\": {}, \
+         \"stolen_chunks\": {}, \"pool_workers\": {}, \
+         \"pool_jobs\": {}}}\n",
+        k.gemms, k.chunks, k.stolen_chunks, pool_workers, pool_jobs));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    #[test]
+    fn rendered_stats_are_valid_json() {
+        let mut m = Metrics::default();
+        m.record(Mode::P8x4, 120, 4);
+        m.record(Mode::P16x2, 340, 4);
+        m.record_shard(0, 4);
+        m.record_shard_latency(0, 120);
+        m.record_shard(1, 4);
+        let body = render_stats(&m, Duration::from_millis(1500));
+        let j = Json::parse(&body).unwrap_or_else(|e| {
+            panic!("stats dump is not valid JSON ({e}):\n{body}")
+        });
+        assert_eq!(j.get("schema").unwrap().as_str(),
+                   Some("spade-serve-stats-v1"));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
+        let modes = j.get("modes").unwrap();
+        assert!(modes.get("p8").unwrap().get("p50_us").is_some());
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("requests").unwrap().as_usize(),
+                   Some(4));
+        // shard 1 has no latency samples -> nulls, still valid JSON
+        assert_eq!(shards[1].get("p50_us"), Some(&Json::Null));
+        assert!(j.get("kernel").unwrap().get("gemms").is_some());
+    }
+}

@@ -1,0 +1,83 @@
+//! The **only** module in the tree that reads `SPADE_*` environment
+//! variables.
+//!
+//! Everything here is a thin, typed accessor over `std::env::var`;
+//! [`super::EngineConfig::from_env`] folds the kernel/serving knobs
+//! into one validated config at the process edge, and everything
+//! downstream receives plain values. `scripts/verify.sh` greps the
+//! tree and fails if `env::var("SPADE_` appears anywhere else — add
+//! new knobs *here*, not at their point of use.
+//!
+//! | variable | accessor | meaning |
+//! |---|---|---|
+//! | `SPADE_KERNEL_THREADS` | [`kernel_threads`] | absolute worker count (pool + per-GEMM fan-out) |
+//! | `SPADE_KERNEL_TILE` | [`kernel_tile`] | tile spec, strictly parsed ([`TileConfig::parse`]) |
+//! | `SPADE_KERNEL_GATHER` | [`kernel_gather_disabled`] | `0`/`off` pins the portable P8 loop |
+//! | `SPADE_ARTIFACTS` | [`artifacts_override`] | artifact directory override |
+//! | `SPADE_BENCH_QUICK` | [`bench_quick`] | hotpath bench smoke mode |
+//! | `SPADE_FIG4_LIMIT` | [`fig4_limit`] | Fig. 4 bench image cap |
+
+use anyhow::Result;
+
+use crate::kernel::TileConfig;
+
+/// Raw read; empty values count as unset (an `X=` line in a shell
+/// wrapper should behave like no override).
+fn raw(name: &str) -> Option<String> {
+    std::env::var(name).ok().filter(|s| !s.is_empty())
+}
+
+/// `SPADE_KERNEL_THREADS`: absolute kernel worker-count override.
+/// Unparsable values are a hard error — the pre-PR-4 readers silently
+/// ignored typos, which is exactly how a mis-tuned fleet ships.
+pub fn kernel_threads() -> Result<Option<usize>> {
+    match raw("SPADE_KERNEL_THREADS") {
+        None => Ok(None),
+        Some(s) => s
+            .trim()
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!(
+                "SPADE_KERNEL_THREADS={s:?}: not a valid count")),
+    }
+}
+
+/// `SPADE_KERNEL_TILE`: tile parameters, strictly parsed (zero or
+/// overflowing panels, `steal_rows=0`, unknown keys and malformed
+/// fragments are all errors — see [`TileConfig::parse`]).
+pub fn kernel_tile() -> Result<TileConfig> {
+    match raw("SPADE_KERNEL_TILE") {
+        None => Ok(TileConfig::default()),
+        Some(s) => TileConfig::parse(&s).map_err(|e| {
+            anyhow::anyhow!("SPADE_KERNEL_TILE: {e}")
+        }),
+    }
+}
+
+/// `SPADE_KERNEL_GATHER`: `0` or `off` forces the portable P8 lane
+/// loop even when the CPU has AVX2.
+pub fn kernel_gather_disabled() -> bool {
+    matches!(raw("SPADE_KERNEL_GATHER").as_deref(),
+             Some("0") | Some("off"))
+}
+
+/// `SPADE_ARTIFACTS`: artifact-directory override consumed by
+/// [`crate::artifacts_dir`].
+pub fn artifacts_override() -> Option<String> {
+    raw("SPADE_ARTIFACTS")
+}
+
+/// `SPADE_BENCH_QUICK`: any non-empty value other than `0` puts
+/// `benches/hotpath.rs` in smoke mode (smaller shapes, fewer reps,
+/// same JSON sections).
+pub fn bench_quick() -> bool {
+    raw("SPADE_BENCH_QUICK").is_some_and(|v| v != "0")
+}
+
+/// `SPADE_FIG4_LIMIT`: per-model image cap for the Fig. 4 accuracy
+/// bench (lenient: unparsable values fall back to the bench default,
+/// matching its historical behavior — it is a bench knob, not engine
+/// config).
+pub fn fig4_limit() -> Option<usize> {
+    raw("SPADE_FIG4_LIMIT").and_then(|v| v.trim().parse().ok())
+}

@@ -1,0 +1,65 @@
+//! `spade::api` — the unified engine facade (one front door for
+//! kernel / exec / serving).
+//!
+//! SPADE's pitch is a *unified* multi-precision engine: one datapath
+//! spanning Posit(8,0)/(16,1)/(32,2). This module is the software
+//! mirror of that unification at the configuration layer. Before it,
+//! precision, threading, tiling, gather paths and sharding were
+//! chosen through five scattered `SPADE_*` environment variables plus
+//! per-layer constructors; now a single typed [`EngineConfig`] (built
+//! fluently via [`EngineBuilder`]) describes the whole engine, and an
+//! [`Engine`] constructs every lower layer from it:
+//!
+//! ```no_run
+//! use spade::api::Engine;
+//!
+//! let engine = Engine::builder()
+//!     .model("mlp")
+//!     .shards(2)
+//!     .batch(16)
+//!     .threads(4)
+//!     .tile_spec("p16_panel=48,steal_rows=2").unwrap()
+//!     .build().unwrap();
+//!
+//! // One validated config drives all three layers:
+//! let a = engine.plan_f32(&[1.0, 2.0, 3.0, 4.0], 2, 2); // kernel
+//! let b = engine.plan_f32(&[0.5, 0.0, 0.0, 0.5], 2, 2);
+//! let words = engine.gemm(&a, &b, None);
+//! # let _ = words;
+//! let handle = engine.serve().unwrap();                  // serving
+//! let metrics = handle.shutdown();
+//! # let _ = metrics;
+//! ```
+//!
+//! ## Layering contract
+//!
+//! The facade **constructs**, it does not reimplement: `engine.gemm`
+//! is [`crate::kernel::gemm_with_config`], `engine.session` is a
+//! [`crate::nn::Session`] pinned to the engine's
+//! [`crate::kernel::KernelConfig`], `engine.serve` is a
+//! [`crate::coordinator::Coordinator`] built from
+//! [`EngineConfig::coordinator_config`]. The lower layers stay public
+//! and documented as the internal API; `tests/api_facade.rs` asserts
+//! builder-constructed paths are **bit-identical** to direct calls.
+//!
+//! ## Environment policy
+//!
+//! `SPADE_*` variables are parsed exactly once, by
+//! [`EngineConfig::from_env`] on top of the [`env`] accessors — the
+//! only module allowed to call `std::env::var` on them (enforced by a
+//! grep gate in `scripts/verify.sh`). Everything downstream of the
+//! edge receives explicit values; nothing in `kernel/`, `nn/` or
+//! `coordinator/` reads the environment.
+
+pub mod config;
+pub mod engine;
+pub mod env;
+
+pub use config::EngineConfig;
+pub use engine::{Engine, EngineBuilder, ServeHandle};
+
+// The types an engine-facade caller composes with, re-exported so a
+// typical edge only imports `spade::api::*` plus the model layer.
+pub use crate::coordinator::{MetricsConfig, RoutePolicy, ServeBackend,
+                             ShardAffinity};
+pub use crate::kernel::{InnerPath, KernelConfig, TileConfig};

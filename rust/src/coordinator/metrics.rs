@@ -1,12 +1,143 @@
 //! Serving metrics: latency percentiles per mode **and per shard**,
-//! batch-size histogram, request counts, and — on the sharded planar
+//! batch-size accounting, request counts, and — on the sharded planar
 //! engine — per-shard request/batch counters (who actually served
 //! what, and how fast). Feeds the serve_demo example, the `serve` CLI
-//! summary and the hotpath bench's shard-scaling section.
+//! summary, the `--stats-json` dump and the hotpath bench's
+//! shard-scaling section.
+//!
+//! ## Bounded reservoirs
+//!
+//! Latency samples are held in fixed-capacity **sampling reservoirs**
+//! (Vitter's Algorithm R): below capacity every sample is retained
+//! and percentiles are exact; past capacity each new sample replaces
+//! a uniformly random held one, so the reservoir stays a uniform
+//! sample of the whole stream and memory is O(capacity) no matter how
+//! long the serve runs — the week-long-serve failure mode of the old
+//! retain-everything vectors is gone. Capacity comes from
+//! [`MetricsConfig::reservoir_capacity`]
+//! (`EngineConfig::metrics` on the builder path).
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::engine::Mode;
+use crate::util::SplitMix64;
+
+/// Default per-distribution reservoir capacity: big enough that p99
+/// of any realistic serve window is sampled well, small enough that a
+/// fleet of shards costs a few hundred KiB total.
+pub const DEFAULT_RESERVOIR_CAPACITY: usize = 4096;
+
+/// Metrics/observability options, carried by `EngineConfig::metrics`
+/// and [`super::CoordinatorConfig::metrics`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricsConfig {
+    /// Max latency samples retained per mode and per shard (≥ 1);
+    /// percentiles are exact until a distribution exceeds this.
+    pub reservoir_capacity: usize,
+    /// When set, `spade serve` (via `api::Engine::serve*`) writes a
+    /// machine-readable stats dump to this path every
+    /// [`MetricsConfig::stats_interval`], plus a final dump at
+    /// shutdown.
+    pub stats_json: Option<PathBuf>,
+    /// Dump period for [`MetricsConfig::stats_json`].
+    pub stats_interval: Duration,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> MetricsConfig {
+        MetricsConfig {
+            reservoir_capacity: DEFAULT_RESERVOIR_CAPACITY,
+            stats_json: None,
+            stats_interval: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Fixed-capacity uniform sampling reservoir over `u64` samples
+/// (Algorithm R). Deterministic given its seed, so tests are
+/// reproducible.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<u64>,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    /// Reservoir holding at most `cap` samples (≥ 1 enforced).
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// Record one sample. Below capacity it is always retained;
+    /// past capacity it replaces a uniformly random held sample with
+    /// probability `cap / seen` (Algorithm R), keeping the held set a
+    /// uniform sample of everything ever recorded.
+    pub fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total samples ever recorded (may exceed [`Reservoir::len`]).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The held samples, unsorted.
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
+    /// Nearest-rank percentile (0..100) over the held samples —
+    /// exact while `seen <= capacity`, an estimate after.
+    pub fn percentile(&self, pct: f64) -> Option<u64> {
+        percentile_of(&self.samples, pct)
+    }
+
+    /// Several percentiles with **one** sort (a dump asking for
+    /// p50/p95/p99 per shard every second should not sort the
+    /// reservoir three times). `None` entries when unsampled.
+    pub fn percentiles(&self, pcts: &[f64]) -> Vec<Option<u64>> {
+        if self.samples.is_empty() {
+            return vec![None; pcts.len()];
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        pcts.iter()
+            .map(|&p| Some(percentile_sorted(&sorted, p)))
+            .collect()
+    }
+}
 
 /// Nearest-rank percentile over a **sorted** sample set.
 fn percentile_sorted(sorted: &[u64], pct: f64) -> u64 {
@@ -25,38 +156,77 @@ fn percentile_of(xs: &[u64], pct: f64) -> Option<u64> {
     Some(percentile_sorted(&sorted, pct))
 }
 
+/// Reservoir seed: fixed salt mixed with a small distribution id, so
+/// every distribution is deterministic but decorrelated.
+fn seed_for(id: u64) -> u64 {
+    0x5EED_5EED_5EED_5EED ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// Aggregated serving metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Metrics {
     /// Total requests served.
     pub total_requests: u64,
-    /// Latency samples (us) per mode.
-    pub latencies_us: BTreeMap<&'static str, Vec<u64>>,
-    /// Batch sizes seen.
-    pub batch_sizes: Vec<usize>,
+    /// Latency reservoir (us) per mode.
+    pub latencies_us: BTreeMap<&'static str, Reservoir>,
+    /// Sum of batch sizes over per-request records (for the mean).
+    batch_size_sum: u64,
+    /// Number of per-request batch-size records.
+    batch_size_count: u64,
     /// Requests served per shard (index = shard id; empty on the
     /// single-worker PJRT engine).
     pub shard_requests: Vec<u64>,
     /// Batches executed per shard (parallel to `shard_requests`).
     pub shard_batches: Vec<u64>,
-    /// Latency samples (us) per shard (parallel to `shard_requests`)
-    /// — one entry per request that shard served, so slow shards are
-    /// visible as shard-level p50/p95/p99, not just diluted into the
-    /// global per-mode percentiles. Raw samples are retained (same
-    /// policy as `latencies_us`) so arbitrary percentiles stay
-    /// queryable; a bounded reservoir for very long runs is a ROADMAP
-    /// item.
-    pub shard_latencies_us: Vec<Vec<u64>>,
+    /// Latency reservoir (us) per shard (parallel to
+    /// `shard_requests`) — one record per request that shard served,
+    /// so slow shards are visible as shard-level p50/p95/p99, not
+    /// just diluted into the global per-mode percentiles.
+    pub shard_latencies_us: Vec<Reservoir>,
+    /// Per-distribution reservoir capacity (from [`MetricsConfig`]).
+    reservoir_capacity: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::with_capacity(DEFAULT_RESERVOIR_CAPACITY)
+    }
 }
 
 impl Metrics {
+    /// Metrics whose latency reservoirs hold at most `cap` samples
+    /// each.
+    pub fn with_capacity(cap: usize) -> Metrics {
+        Metrics {
+            total_requests: 0,
+            latencies_us: BTreeMap::new(),
+            batch_size_sum: 0,
+            batch_size_count: 0,
+            shard_requests: Vec::new(),
+            shard_batches: Vec::new(),
+            shard_latencies_us: Vec::new(),
+            reservoir_capacity: cap.max(1),
+        }
+    }
+
+    /// Metrics configured from [`MetricsConfig`].
+    pub fn from_config(cfg: &MetricsConfig) -> Metrics {
+        Metrics::with_capacity(cfg.reservoir_capacity)
+    }
+
     /// Record one served request.
     pub fn record(&mut self, mode: Mode, latency_us: u64,
                   batch_size: usize) {
         self.total_requests += 1;
-        self.latencies_us.entry(mode.tag()).or_default()
-            .push(latency_us);
-        self.batch_sizes.push(batch_size);
+        let cap = self.reservoir_capacity;
+        self.latencies_us
+            .entry(mode.tag())
+            .or_insert_with(|| {
+                Reservoir::new(cap, seed_for(mode.lane_bits() as u64))
+            })
+            .record(latency_us);
+        self.batch_size_sum += batch_size as u64;
+        self.batch_size_count += 1;
     }
 
     /// Record one batch of `batch_size` requests landing on `shard`
@@ -76,29 +246,34 @@ impl Metrics {
     pub fn record_shard_latency(&mut self, shard: usize,
                                 latency_us: u64) {
         if self.shard_latencies_us.len() <= shard {
-            self.shard_latencies_us.resize_with(shard + 1, Vec::new);
+            let cap = self.reservoir_capacity;
+            let have = self.shard_latencies_us.len();
+            self.shard_latencies_us.extend(
+                (have..=shard).map(|s| {
+                    Reservoir::new(cap, seed_for(0x100 + s as u64))
+                }),
+            );
         }
-        self.shard_latencies_us[shard].push(latency_us);
+        self.shard_latencies_us[shard].record(latency_us);
     }
 
     /// Latency percentile (0..100) for a mode key, if sampled.
     pub fn percentile(&self, mode: &str, pct: f64) -> Option<u64> {
-        percentile_of(self.latencies_us.get(mode)?, pct)
+        self.latencies_us.get(mode)?.percentile(pct)
     }
 
     /// Latency percentile (0..100) for one shard, if sampled.
     pub fn shard_percentile(&self, shard: usize, pct: f64)
                             -> Option<u64> {
-        percentile_of(self.shard_latencies_us.get(shard)?, pct)
+        self.shard_latencies_us.get(shard)?.percentile(pct)
     }
 
     /// Mean batch size.
     pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batch_size_count == 0 {
             return 0.0;
         }
-        self.batch_sizes.iter().sum::<usize>() as f64
-            / self.batch_sizes.len() as f64
+        self.batch_size_sum as f64 / self.batch_size_count as f64
     }
 
     /// Human-readable summary: global per-mode percentiles, then one
@@ -106,11 +281,11 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let mut s = format!("requests: {}, mean batch {:.1}\n",
                             self.total_requests, self.mean_batch());
-        for (mode, xs) in &self.latencies_us {
-            let p50 = self.percentile(mode, 50.0).unwrap_or(0);
-            let p99 = self.percentile(mode, 99.0).unwrap_or(0);
+        for (mode, r) in &self.latencies_us {
+            let p50 = r.percentile(50.0).unwrap_or(0);
+            let p99 = r.percentile(99.0).unwrap_or(0);
             s += &format!("  {mode:<4} n={:<6} p50={p50}us p99={p99}us\n",
-                          xs.len());
+                          r.seen());
         }
         if !self.shard_requests.is_empty() {
             s += "  shards:\n";
@@ -122,10 +297,12 @@ impl Metrics {
             {
                 s += &format!("    #{i}={reqs}req/{batches}b");
                 // One sort per shard serves all three percentiles.
-                if let Some(xs) =
-                    self.shard_latencies_us.get(i).filter(|x| !x.is_empty())
+                if let Some(r) = self
+                    .shard_latencies_us
+                    .get(i)
+                    .filter(|r| !r.is_empty())
                 {
-                    let mut sorted = xs.clone();
+                    let mut sorted = r.samples().to_vec();
                     sorted.sort_unstable();
                     let (p50, p95, p99) = (
                         percentile_sorted(&sorted, 50.0),
@@ -209,5 +386,72 @@ mod tests {
                 "summary was: {s}");
         assert!(s.contains("#2=3req/1b p50=7us p95=7us p99=7us"));
         assert!(s.contains("#1=0req/0b\n"));
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(1000, 1);
+        for i in 1..=100u64 {
+            r.record(i);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.seen(), 100);
+        // Exact nearest-rank values: nothing has been evicted.
+        assert_eq!(r.percentile(0.0), Some(1));
+        assert_eq!(r.percentile(50.0), Some(51));
+        assert_eq!(r.percentile(100.0), Some(100));
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_uniform_enough() {
+        // 100k samples into a 512-slot reservoir: memory stays at the
+        // cap and the sampled percentiles track the true distribution
+        // (uniform 0..100_000 -> p50 ~ 50_000) within a loose bound.
+        let cap = 512usize;
+        let n = 100_000u64;
+        let mut r = Reservoir::new(cap, 42);
+        for i in 0..n {
+            r.record(i);
+        }
+        assert_eq!(r.len(), cap);
+        assert_eq!(r.seen(), n);
+        let p50 = r.percentile(50.0).unwrap() as f64;
+        let p95 = r.percentile(95.0).unwrap() as f64;
+        // ~±7% absolute tolerance: 512 uniform samples put the
+        // empirical p50 within ~±4.4% at 95% confidence (binomial
+        // sd = sqrt(.25/512) ≈ 2.2%); deterministic seed, no flake.
+        assert!((p50 / n as f64 - 0.50).abs() < 0.07, "p50={p50}");
+        assert!((p95 / n as f64 - 0.95).abs() < 0.07, "p95={p95}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let mut a = Reservoir::new(16, 7);
+        let mut b = Reservoir::new(16, 7);
+        for i in 0..10_000u64 {
+            a.record(i * 3);
+            b.record(i * 3);
+        }
+        assert_eq!(a.samples(), b.samples());
+        assert_eq!(a.percentile(99.0), b.percentile(99.0));
+    }
+
+    #[test]
+    fn metrics_memory_is_bounded_by_config() {
+        let cfg = MetricsConfig {
+            reservoir_capacity: 8,
+            ..MetricsConfig::default()
+        };
+        let mut m = Metrics::from_config(&cfg);
+        for i in 0..1000u64 {
+            m.record(Mode::P8x4, i, 4);
+            m.record_shard_latency(0, i);
+        }
+        assert_eq!(m.latencies_us["p8"].len(), 8);
+        assert_eq!(m.latencies_us["p8"].seen(), 1000);
+        assert_eq!(m.shard_latencies_us[0].len(), 8);
+        assert!(m.percentile("p8", 50.0).is_some());
+        // The summary reports the true count, not the held count.
+        assert!(m.summary().contains("n=1000"));
     }
 }

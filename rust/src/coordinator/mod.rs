@@ -45,8 +45,8 @@ pub mod metrics;
 pub mod router;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::Metrics;
-pub use router::{RoutePolicy, Router, ShardRouter};
+pub use metrics::{Metrics, MetricsConfig};
+pub use router::{RoutePolicy, Router, ShardAffinity, ShardRouter};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -89,7 +89,10 @@ enum Job {
     Shutdown,
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration. Usually constructed by
+/// [`crate::api::Engine::coordinator_config`] from a validated
+/// `EngineConfig`; direct construction stays supported for tests and
+/// embedding.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Model name (artifact stem, e.g. "mlp").
@@ -103,6 +106,15 @@ pub struct CoordinatorConfig {
     /// pool, so a few shards saturate a machine). Ignored by the PJRT
     /// engine, which keeps its single executable-owning worker.
     pub shards: usize,
+    /// Batch → shard placement policy (planar engine only).
+    pub affinity: ShardAffinity,
+    /// Explicit kernel config for the shard sessions' GEMMs; `None`
+    /// uses the installed process default
+    /// ([`crate::kernel::settings::current`]).
+    pub kernel: Option<crate::kernel::KernelConfig>,
+    /// Metrics options (latency reservoir capacity; the stats-dump
+    /// fields are consumed by `api::Engine::serve*`, not here).
+    pub metrics: MetricsConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -112,6 +124,9 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             policy: RoutePolicy::EnergyFirst,
             shards: 0,
+            affinity: ShardAffinity::LeastLoaded,
+            kernel: None,
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -144,7 +159,8 @@ impl Coordinator {
     /// runtime lives on the worker thread), then serves until
     /// [`Coordinator::shutdown`].
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics =
+            Arc::new(Mutex::new(Metrics::from_config(&cfg.metrics)));
         let metrics_w = metrics.clone();
         let (tx, rx) = mpsc::channel::<Job>();
         let (setup_tx, setup_rx) = mpsc::channel::<Result<usize>>();
@@ -207,10 +223,13 @@ impl Coordinator {
                             -> Result<Coordinator> {
         model.validate()?;
         let input_len: usize = model.spec.input.iter().product();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics =
+            Arc::new(Mutex::new(Metrics::from_config(&cfg.metrics)));
         let (tx, rx) = mpsc::channel::<Job>();
         let bcfg = cfg.batcher.clone();
         let policy = cfg.policy;
+        let affinity = cfg.affinity;
+        let kernel_cfg = cfg.kernel;
 
         let nshards = effective_shards(cfg.shards);
         let shards: Vec<ShardHandle> = (0..nshards)
@@ -223,8 +242,12 @@ impl Coordinator {
                 let handle = std::thread::Builder::new()
                     .name(format!("spade-shard-{sid}"))
                     .spawn(move || {
-                        shard_loop(srx, Session::owned(m), sid,
-                                   inflight_w, metrics);
+                        let mut sess = Session::owned(m);
+                        if let Some(kc) = kernel_cfg {
+                            sess.set_kernel_config(kc);
+                        }
+                        shard_loop(srx, sess, sid, inflight_w,
+                                   metrics);
                     })
                     .expect("spawn coordinator shard");
                 ShardHandle { tx: stx, inflight, handle }
@@ -232,7 +255,7 @@ impl Coordinator {
             .collect();
 
         let worker = std::thread::spawn(move || {
-            planar_front_loop(rx, shards, bcfg, policy);
+            planar_front_loop(rx, shards, bcfg, policy, affinity);
         });
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
     }
@@ -406,11 +429,13 @@ fn pjrt_worker_loop(rx: mpsc::Receiver<Job>,
 /// threads (every accepted request gets its response before the
 /// coordinator exits).
 fn planar_front_loop(rx: mpsc::Receiver<Job>, shards: Vec<ShardHandle>,
-                     bcfg: BatcherConfig, policy: RoutePolicy) {
+                     bcfg: BatcherConfig, policy: RoutePolicy,
+                     affinity: ShardAffinity) {
     let router = Router::new(policy);
     let mut srouter = ShardRouter::new(shards.len());
     batching_loop(rx, bcfg, |batch| {
-        dispatch_batch(batch, &shards, &mut srouter, &router);
+        dispatch_batch(batch, &shards, &mut srouter, &router,
+                       affinity);
     });
 
     // Closing each shard's channel ends its loop after the queued
@@ -424,9 +449,11 @@ fn planar_front_loop(rx: mpsc::Receiver<Job>, shards: Vec<ShardHandle>,
 
 /// Route one batch (mode + shard) and enqueue it. Never blocks: shard
 /// queues are unbounded, and the in-flight counters keep dispatch
-/// steering toward idle shards.
+/// steering toward idle shards (under [`ShardAffinity::PinnedMode`]
+/// the MODE decides instead, so each shard's plan cache specializes).
 fn dispatch_batch(batch: Batch<Pending>, shards: &[ShardHandle],
-                  srouter: &mut ShardRouter, router: &Router) {
+                  srouter: &mut ShardRouter, router: &Router,
+                  affinity: ShardAffinity) {
     let items = batch.items;
     if items.is_empty() {
         return;
@@ -434,11 +461,18 @@ fn dispatch_batch(batch: Batch<Pending>, shards: &[ShardHandle],
     let pinned: Vec<Option<Mode>> =
         items.iter().map(|(r, _, _)| r.mode).collect();
     let mode = router.route(&pinned);
-    let loads: Vec<usize> = shards
-        .iter()
-        .map(|s| s.inflight.load(Ordering::Acquire))
-        .collect();
-    let sid = srouter.pick(&loads);
+    let sid = match affinity {
+        ShardAffinity::PinnedMode => {
+            router::mode_shard(mode, shards.len())
+        }
+        ShardAffinity::LeastLoaded => {
+            let loads: Vec<usize> = shards
+                .iter()
+                .map(|s| s.inflight.load(Ordering::Acquire))
+                .collect();
+            srouter.pick(&loads)
+        }
+    };
     shards[sid].inflight.fetch_add(items.len(), Ordering::AcqRel);
     shards[sid]
         .tx
@@ -761,6 +795,43 @@ mod tests {
         assert!(m.summary().contains("p95="),
                 "summary lacks per-shard percentiles: {}",
                 m.summary());
+    }
+
+    #[test]
+    fn pinned_mode_affinity_specializes_shards() {
+        // Under PinnedMode affinity every batch of one MODE lands on
+        // the same shard, so its plan cache specializes; logits stay
+        // bit-identical (shard composition never changes results).
+        let cfg = CoordinatorConfig {
+            shards: 3,
+            affinity: ShardAffinity::PinnedMode,
+            batcher: BatcherConfig {
+                target: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        };
+        let coord =
+            Coordinator::start_with_model(tiny_model(), cfg).unwrap();
+        for id in 0..6 {
+            let resp = coord
+                .infer(InferenceRequest {
+                    id,
+                    input: vec![0.25; 16],
+                    mode: Some(Mode::P16x2),
+                })
+                .unwrap();
+            assert_eq!(resp.mode, Mode::P16x2);
+        }
+        let m = coord.shutdown();
+        let home = router::mode_shard(Mode::P16x2, 3);
+        assert_eq!(m.shard_requests[home], 6,
+                   "all P16 traffic on its home shard");
+        for (i, &reqs) in m.shard_requests.iter().enumerate() {
+            if i != home {
+                assert_eq!(reqs, 0, "shard {i} should be idle");
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,31 @@ fn wider(a: Mode, b: Mode) -> Mode {
     if a.lane_bits() >= b.lane_bits() { a } else { b }
 }
 
+/// How batches map onto planar shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAffinity {
+    /// Load-aware placement ([`ShardRouter`]): fewest in-flight
+    /// requests wins, ties rotate. The default.
+    LeastLoaded,
+    /// Mode-pinned placement: every batch of a given MODE lands on
+    /// the same shard ([`mode_shard`]), so each shard's weight-plan
+    /// cache specializes to one or two precisions instead of holding
+    /// all of them — the ROADMAP affinity item for pinned-mode
+    /// traffic. Trades load balance for cache locality.
+    PinnedMode,
+}
+
+/// Deterministic shard for a MODE under [`ShardAffinity::PinnedMode`]:
+/// modes spread over the fleet in lane-width order (`shards` ≥ 1).
+pub fn mode_shard(mode: Mode, shards: usize) -> usize {
+    let idx = match mode {
+        Mode::P8x4 => 0,
+        Mode::P16x2 => 1,
+        Mode::P32x1 => 2,
+    };
+    idx % shards.max(1)
+}
+
 /// Shard selector for the sharded planar serving path: pick the shard
 /// with the fewest in-flight requests, breaking ties round-robin (the
 /// scan starts one past the previous winner, so equal loads rotate
@@ -136,6 +161,21 @@ mod tests {
         let mut one = ShardRouter::new(1);
         assert_eq!(one.pick(&[42]), 0);
         assert_eq!(one.pick(&[0]), 0);
+    }
+
+    #[test]
+    fn mode_shard_is_stable_and_in_range() {
+        for shards in 1..=5usize {
+            for mode in Mode::ALL {
+                let s = mode_shard(mode, shards);
+                assert!(s < shards);
+                assert_eq!(s, mode_shard(mode, shards), "stable");
+            }
+        }
+        // With ≥ 3 shards every mode owns a distinct shard.
+        let picks: Vec<usize> =
+            Mode::ALL.iter().map(|&m| mode_shard(m, 3)).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
     }
 
     #[test]

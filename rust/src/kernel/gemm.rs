@@ -29,13 +29,14 @@
 //! `std::thread::scope` spawns** — purely as the bench baseline
 //! (`steal_vs_fixed_split` in `BENCH_hotpath.json`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::posit::{encode_from_parts, Parts, PositFormat};
 
 use super::plan::DecodedPlan;
 use super::pool::{self, RowQueue};
-use super::simd::{self, BiasDec, InnerPath};
+use super::settings::{self, KernelConfig};
+use super::simd::{self, BiasDec, InnerPath, TileConfig};
 
 /// Below this many MACs a single thread always wins (spawn cost).
 const PAR_THRESHOLD: usize = 1 << 16;
@@ -46,13 +47,20 @@ const PAR_GRAIN: usize = 1 << 15;
 
 /// Pick a worker count for an `m`×`k`×`n` GEMM: 1 for small problems,
 /// then one thread per [`PAR_GRAIN`] MACs up to the hardware
-/// parallelism (and never more than `m`, the tiling unit). The
-/// `SPADE_KERNEL_THREADS` environment variable overrides.
+/// parallelism (and never more than `m`, the tiling unit). An explicit
+/// [`KernelConfig::threads`] in the installed process default
+/// overrides (the old `SPADE_KERNEL_THREADS` semantics, now routed
+/// through [`crate::api::EngineConfig::from_env`]).
 pub fn auto_threads(m: usize, k: usize, n: usize) -> usize {
-    if let Ok(s) = std::env::var("SPADE_KERNEL_THREADS") {
-        if let Ok(v) = s.parse::<usize>() {
-            return v.clamp(1, m.max(1));
-        }
+    threads_for(m, k, n, &settings::current())
+}
+
+/// Worker count for one GEMM under an explicit config: the override
+/// when set, else the size heuristic.
+fn threads_for(m: usize, k: usize, n: usize, cfg: &KernelConfig)
+               -> usize {
+    if let Some(t) = cfg.threads {
+        return t.clamp(1, m.max(1));
     }
     let work = m.saturating_mul(k).saturating_mul(n);
     if work < PAR_THRESHOLD {
@@ -66,9 +74,32 @@ pub fn auto_threads(m: usize, k: usize, n: usize) -> usize {
 
 /// Planar GEMM with automatic threading: `a` (m×k) · `b` (k×n)
 /// [+ bias], one rounding per output. Returns the m×n output words.
+/// Runs under the installed process-default [`KernelConfig`]
+/// ([`settings::current`]).
 pub fn gemm(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>)
             -> Vec<u64> {
-    gemm_with_threads(a, b, bias, auto_threads(a.rows, a.cols, b.cols))
+    gemm_with_config(a, b, bias, &settings::current())
+}
+
+/// [`gemm`] under an explicit [`KernelConfig`] — the facade entry
+/// point ([`crate::api::Engine`] and per-session configs route here).
+/// Bit-identical to [`gemm`] for every config: threads, tiles, and
+/// inner path reorder exact integer sums only.
+pub fn gemm_with_config(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&[u64]>, cfg: &KernelConfig)
+                        -> Vec<u64> {
+    gemm_with_config_stats(a, b, bias, cfg).0
+}
+
+/// [`gemm_with_config`] plus the dispatch telemetry — the whole
+/// config (threads, tile, inner path) governs the run, not just the
+/// thread count.
+pub fn gemm_with_config_stats(a: &DecodedPlan, b: &DecodedPlan,
+                              bias: Option<&[u64]>,
+                              cfg: &KernelConfig)
+                              -> (Vec<u64>, DispatchStats) {
+    let t = threads_for(a.rows, a.cols, b.cols, cfg);
+    gemm_impl(a, b, bias, t, Dispatch::Pool, cfg)
 }
 
 /// [`gemm`] with an explicit worker count (1 = fully sequential).
@@ -79,7 +110,9 @@ pub fn gemm(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>)
 pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
                          bias: Option<&[u64]>, threads: usize)
                          -> Vec<u64> {
-    gemm_impl(a, b, bias, threads, Dispatch::Pool).0
+    gemm_impl(a, b, bias, threads, Dispatch::Pool,
+              &settings::current())
+        .0
 }
 
 /// [`gemm_with_threads`] plus the dispatch telemetry: how the
@@ -89,7 +122,8 @@ pub fn gemm_with_threads(a: &DecodedPlan, b: &DecodedPlan,
 pub fn gemm_with_stats(a: &DecodedPlan, b: &DecodedPlan,
                        bias: Option<&[u64]>, threads: usize)
                        -> (Vec<u64>, DispatchStats) {
-    gemm_impl(a, b, bias, threads, Dispatch::Pool)
+    gemm_impl(a, b, bias, threads, Dispatch::Pool,
+              &settings::current())
 }
 
 /// **Bench baseline — not the hot path.** [`gemm_with_threads`]
@@ -102,7 +136,9 @@ pub fn gemm_with_stats(a: &DecodedPlan, b: &DecodedPlan,
 pub fn gemm_with_scope(a: &DecodedPlan, b: &DecodedPlan,
                        bias: Option<&[u64]>, threads: usize)
                        -> Vec<u64> {
-    gemm_impl(a, b, bias, threads, Dispatch::Scope).0
+    gemm_impl(a, b, bias, threads, Dispatch::Scope,
+              &settings::current())
+        .0
 }
 
 /// Single-threaded GEMM with an explicitly pinned inner-loop body —
@@ -123,7 +159,8 @@ pub fn gemm_single_path(a: &DecodedPlan, b: &DecodedPlan,
     }
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
-    simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path);
+    simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path,
+                    settings::current().tile);
     apply_nar(a, b, bias_dec.as_ref(), &mut out);
     Some(out)
 }
@@ -171,20 +208,70 @@ fn check_shapes(a: &DecodedPlan, b: &DecodedPlan,
     }
 }
 
-/// Rows per stealable chunk: the `SPADE_KERNEL_TILE` override when
-/// set, else ~4 chunks per worker — fine enough that one straggler
-/// chunk cannot hold a whole fixed share hostage, coarse enough that
-/// the atomic claim is noise next to a chunk's MACs.
-fn steal_chunk_rows(m: usize, threads: usize) -> usize {
-    let cfg = simd::tile_config();
-    if cfg.steal_rows > 0 {
-        return cfg.steal_rows.min(m).max(1);
+/// Rows per stealable chunk: the [`TileConfig::steal_rows`] override
+/// when set, else ~4 chunks per worker — fine enough that one
+/// straggler chunk cannot hold a whole fixed share hostage, coarse
+/// enough that the atomic claim is noise next to a chunk's MACs.
+fn steal_chunk_rows(m: usize, threads: usize, tile: TileConfig)
+                    -> usize {
+    if tile.steal_rows > 0 {
+        return tile.steal_rows.min(m).max(1);
     }
     (m / (threads * 4)).max(1)
 }
 
+/// Process-wide dispatch telemetry, accumulated across every GEMM
+/// since process start. Cheap (three relaxed atomic adds per GEMM,
+/// none per MAC); the `spade serve --stats-json` dump surfaces it so
+/// fleet dashboards can watch steal pressure without instrumenting
+/// the kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCounters {
+    /// GEMMs dispatched through the threaded front ends (`gemm`,
+    /// `gemm_with_config`, `gemm_with_threads`, `gemm_with_scope`),
+    /// at any thread count. The pinned-body bench entry
+    /// ([`gemm_single_path`]) is not counted.
+    pub gemms: u64,
+    /// Work-stealing row chunks handed out by pool dispatch.
+    pub chunks: u64,
+    /// Chunks claimed by a job **beyond** its fixed-split share
+    /// (`ceil(chunks / jobs)`) — the work that stealing moved off a
+    /// straggler. 0 means every job kept exactly its even share.
+    pub stolen_chunks: u64,
+}
+
+static CTR_GEMMS: AtomicU64 = AtomicU64::new(0);
+static CTR_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static CTR_STOLEN: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide [`KernelCounters`]. Monotonic.
+pub fn counters() -> KernelCounters {
+    KernelCounters {
+        gemms: CTR_GEMMS.load(Ordering::Relaxed),
+        chunks: CTR_CHUNKS.load(Ordering::Relaxed),
+        stolen_chunks: CTR_STOLEN.load(Ordering::Relaxed),
+    }
+}
+
+/// Fold one pool dispatch into the process counters.
+fn record_dispatch(stats: &DispatchStats) {
+    CTR_CHUNKS.fetch_add(stats.chunks as u64, Ordering::Relaxed);
+    let jobs = stats.per_job_claims.len();
+    if jobs > 1 {
+        let fair = stats.chunks.div_ceil(jobs);
+        let stolen: usize = stats
+            .per_job_claims
+            .iter()
+            .map(|&c| c.saturating_sub(fair))
+            .sum();
+        if stolen > 0 {
+            CTR_STOLEN.fetch_add(stolen as u64, Ordering::Relaxed);
+        }
+    }
+}
+
 fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
-             threads: usize, dispatch: Dispatch)
+             threads: usize, dispatch: Dispatch, cfg: &KernelConfig)
              -> (Vec<u64>, DispatchStats) {
     check_shapes(a, b, bias);
     let (m, n) = (a.rows, b.cols);
@@ -194,20 +281,22 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
         return (Vec::new(), stats);
     }
 
+    CTR_GEMMS.fetch_add(1, Ordering::Relaxed);
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
 
+    let (path, tile) = (cfg.path, cfg.tile);
     let t = threads.clamp(1, m);
     let mut stats = DispatchStats { chunk_rows: m, chunks: 1,
                                     per_job_claims: vec![1] };
     if t <= 1 {
-        simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out,
-                        InnerPath::Auto);
+        simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path,
+                        tile);
     } else {
         let bd = bias_dec.as_ref();
         match dispatch {
             Dispatch::Pool => {
-                let chunk_rows = steal_chunk_rows(m, t);
+                let chunk_rows = steal_chunk_rows(m, t, tile);
                 let queue = RowQueue::new(m, chunk_rows);
                 let claims: Vec<AtomicUsize> =
                     (0..t).map(|_| AtomicUsize::new(0)).collect();
@@ -232,7 +321,7 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
                                         (r1 - r0) * n)
                                 };
                                 simd::gemm_rows(a, b, bd, r0, chunk,
-                                                InnerPath::Auto);
+                                                path, tile);
                             }
                         }));
                     }
@@ -246,6 +335,7 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
                         .map(|c| c.load(Ordering::Relaxed))
                         .collect(),
                 };
+                record_dispatch(&stats);
             }
             Dispatch::Scope => {
                 let rows_per = m.div_ceil(t);
@@ -256,7 +346,7 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
                     {
                         s.spawn(move || {
                             simd::gemm_rows(a, b, bd, ti * rows_per,
-                                            chunk, InnerPath::Auto);
+                                            chunk, path, tile);
                         });
                     }
                 });
@@ -513,6 +603,38 @@ mod tests {
         assert_eq!(stats.per_job_claims.iter().sum::<usize>(),
                    stats.chunks,
                    "claims must cover every chunk exactly once");
+    }
+
+    #[test]
+    fn explicit_config_is_bit_identical_and_counted() {
+        // An extreme-but-valid explicit KernelConfig (minimum panels,
+        // one-row steal chunks, portable path, odd thread count) must
+        // produce the same words as the default entry point, and the
+        // process counters must see both dispatches.
+        let mut rng = SplitMix64::new(2718);
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            let (m, k, n) = (11, 13, 9);
+            let aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            let pa = DecodedPlan::from_words(aw, m, k, fmt);
+            let pb = DecodedPlan::from_words(bw, k, n, fmt);
+            let before = counters();
+            let base = gemm(&pa, &pb, None);
+            let cfg = KernelConfig {
+                threads: Some(3),
+                pool_workers: None,
+                tile: TileConfig { p16_panel: 4, p32_panel: 1,
+                                   steal_rows: 1 },
+                path: InnerPath::Portable,
+            };
+            assert_eq!(gemm_with_config(&pa, &pb, None, &cfg), base,
+                       "{fmt:?}");
+            let after = counters();
+            // >= : other tests run concurrently and also count.
+            assert!(after.gemms >= before.gemms + 2);
+            assert!(after.chunks >= before.chunks);
+            assert!(after.stolen_chunks >= before.stolen_chunks);
+        }
     }
 
     #[test]

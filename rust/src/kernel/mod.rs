@@ -63,18 +63,24 @@
 //! retains the fixed-split per-call-spawn behavior **only** as the
 //! bench baseline.
 //!
-//! ## Tuning knobs (environment)
+//! ## Tuning knobs (typed config — no environment reads here)
 //!
-//! | variable | effect |
+//! Every knob lives in [`settings::KernelConfig`]:
+//!
+//! | field | effect |
 //! |---|---|
-//! | `SPADE_KERNEL_THREADS` | absolute worker-count override (pool size at first use, per-GEMM fan-out) |
-//! | `SPADE_KERNEL_TILE` | tile parameters, e.g. `p16_panel=48,p32_panel=16,steal_rows=2` — see [`simd::TileConfig`] |
-//! | `SPADE_KERNEL_GATHER` | `0`/`off` forces the portable P8 loop even when AVX2 is present |
+//! | [`settings::KernelConfig::threads`] | absolute per-GEMM worker-count override (`None` = size heuristic) |
+//! | [`settings::KernelConfig::pool_workers`] | pool size, latched at first pool use (`None` = available parallelism) |
+//! | [`settings::KernelConfig::tile`] | tile parameters — see [`simd::TileConfig`] (strictly validated) |
+//! | [`settings::KernelConfig::path`] | inner-loop body; `Portable` disables the AVX2 gather |
 //!
-//! `SPADE_KERNEL_TILE` and `SPADE_KERNEL_GATHER` are read once, at
-//! first kernel use. `SPADE_KERNEL_THREADS` is live: the pool size is
-//! fixed at first use, but [`auto_threads`] re-reads it per GEMM, so
-//! the per-call fan-out can be retuned at runtime.
+//! Callers either thread a config explicitly
+//! ([`gemm::gemm_with_config`], `Session::set_kernel_config`,
+//! `CoordinatorConfig::kernel`) or rely on the installed process
+//! default ([`settings::current`]). The old `SPADE_KERNEL_*`
+//! environment variables are parsed **once**, at the process edge, by
+//! [`crate::api::EngineConfig::from_env`] — the kernel never touches
+//! `std::env` (`scripts/verify.sh` enforces this with a grep gate).
 //!
 //! ## Who uses it
 //!
@@ -92,14 +98,18 @@ pub mod gemm;
 pub mod lut;
 pub mod plan;
 pub mod pool;
+pub mod settings;
 pub mod simd;
 
-pub use gemm::{auto_threads, encode_acc_i128, encode_acc_i64, gemm,
-               gemm_single_path, gemm_with_scope, gemm_with_stats,
-               gemm_with_threads, DispatchStats};
+pub use gemm::{auto_threads, counters, encode_acc_i128,
+               encode_acc_i64, gemm, gemm_single_path,
+               gemm_with_config, gemm_with_config_stats,
+               gemm_with_scope, gemm_with_stats, gemm_with_threads,
+               DispatchStats, KernelCounters};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
               p16_decode_lut, DecEntry};
 pub use plan::DecodedPlan;
 pub use pool::{RowQueue, WorkerPool};
-pub use simd::{gather_available, tile_config, InnerPath, TileConfig,
-               P16_MR, P16_NR, P8_LANES};
+pub use settings::KernelConfig;
+pub use simd::{gather_available, InnerPath, TileConfig, P16_MR,
+               P16_NR, P8_LANES};

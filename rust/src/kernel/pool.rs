@@ -301,25 +301,32 @@ fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
 static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
 
 /// The process-wide kernel pool, created on first use. Sized to
-/// `available_parallelism`; when `SPADE_KERNEL_THREADS` is set at
-/// initialization time it is an absolute override (it may deliberately
-/// oversubscribe, exactly as the same variable lets
-/// [`super::gemm::auto_threads`] exceed the core count for a
-/// per-GEMM fan-out).
+/// `available_parallelism` unless the installed
+/// [`super::settings::KernelConfig::pool_workers`] overrides
+/// absolutely (it may deliberately oversubscribe, exactly as the
+/// explicit thread knob lets [`super::gemm::auto_threads`] exceed the
+/// core count for a per-GEMM fan-out). The size is latched here, at
+/// first use: installing a new config later cannot resize a live
+/// pool — build the engine before the first GEMM.
 pub fn global() -> &'static WorkerPool {
     GLOBAL.get_or_init(|| {
         let hw = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1);
-        let size = match std::env::var("SPADE_KERNEL_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-        {
+        let size = match super::settings::current().pool_workers {
             Some(v) if v >= 1 => v,
             _ => hw,
         };
         WorkerPool::new(size)
     })
+}
+
+/// The global pool **if it has already been created** — never
+/// constructs it. Observers (the `--stats-json` dump) use this so
+/// reporting pool counters cannot itself spawn a fleet of idle
+/// workers on a serve that never touched the planar kernel.
+pub fn try_global() -> Option<&'static WorkerPool> {
+    GLOBAL.get()
 }
 
 #[cfg(test)]

@@ -1,0 +1,102 @@
+//! Process-wide kernel configuration — explicit, typed, **no
+//! environment reads**.
+//!
+//! Since PR 4 the kernel never consults `std::env` itself: every knob
+//! that used to be an ad-hoc `SPADE_KERNEL_*` read (worker counts,
+//! tile parameters, the gather path) lives in a [`KernelConfig`] that
+//! callers thread through explicitly ([`super::gemm::gemm_with_config`],
+//! [`crate::nn::exec::Session::set_kernel_config`],
+//! [`crate::coordinator::CoordinatorConfig::kernel`]). Environment
+//! variables are parsed **once**, at the process edge, by
+//! [`crate::api::EngineConfig::from_env`] (the only module allowed to
+//! read `SPADE_*` — `scripts/verify.sh` greps for violations), and
+//! [`crate::api::EngineBuilder::build`] installs the result here as
+//! the process default.
+//!
+//! The default is what the convenience entry points
+//! ([`super::gemm::gemm`], [`super::gemm::gemm_with_threads`],
+//! [`crate::systolic::gemm::SystolicGemm::run`]) use when no explicit
+//! config is handed to them. Changing it never changes *results* —
+//! every tile/thread/path combination is bit-identical by construction
+//! (exact integer accumulation, one rounding) — only how fast they
+//! arrive.
+
+use std::sync::RwLock;
+
+use super::simd::{InnerPath, TileConfig};
+
+/// Explicit kernel configuration: everything the GEMM dispatch and
+/// inner loops need to know, in one copyable value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Per-GEMM worker count override. `None` = the automatic
+    /// heuristic ([`super::gemm::auto_threads`]); `Some(n)` is
+    /// absolute (clamped only to the row count, so it may deliberately
+    /// oversubscribe).
+    pub threads: Option<usize>,
+    /// Persistent worker-pool size ([`super::pool::global`]). `None` =
+    /// the machine's available parallelism. Read **once**, at first
+    /// pool use — installing a new default later cannot resize a pool
+    /// that already exists.
+    pub pool_workers: Option<usize>,
+    /// Tile/panel/steal-chunk geometry (see [`TileConfig`]).
+    pub tile: TileConfig,
+    /// Inner-loop body `gemm` routes through. [`InnerPath::Auto`]
+    /// (the default) upgrades P8 to the AVX2 gather when the CPU has
+    /// it; [`InnerPath::Portable`] pins the portable lane loops (the
+    /// old `SPADE_KERNEL_GATHER=0` behavior).
+    pub path: InnerPath,
+}
+
+impl KernelConfig {
+    /// The built-in default: auto threads, auto pool, default tiles,
+    /// auto inner path.
+    pub const DEFAULT: KernelConfig = KernelConfig {
+        threads: None,
+        pool_workers: None,
+        tile: TileConfig::DEFAULT,
+        path: InnerPath::Auto,
+    };
+}
+
+impl Default for KernelConfig {
+    fn default() -> KernelConfig {
+        KernelConfig::DEFAULT
+    }
+}
+
+static CURRENT: RwLock<KernelConfig> = RwLock::new(KernelConfig::DEFAULT);
+
+/// The process-wide default [`KernelConfig`] — what the implicit
+/// kernel entry points use. Cheap (one uncontended read lock per
+/// GEMM-level call, never per MAC).
+pub fn current() -> KernelConfig {
+    *CURRENT.read().unwrap()
+}
+
+/// Install `cfg` as the process-wide default. Called by
+/// [`crate::api::EngineBuilder::build`]; tests may call it directly.
+/// Results are bit-identical under any config, so a concurrent
+/// install can never corrupt an in-flight GEMM — it only retunes
+/// later ones. Note the pool-size caveat on
+/// [`KernelConfig::pool_workers`].
+pub fn install(cfg: KernelConfig) {
+    *CURRENT.write().unwrap() = cfg;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        assert_eq!(KernelConfig::default(), KernelConfig::DEFAULT);
+        assert_eq!(KernelConfig::DEFAULT.tile, TileConfig::default());
+        assert_eq!(KernelConfig::DEFAULT.path, InnerPath::Auto);
+        // current() starts at the default (other tests may have
+        // installed something by now; just exercise the accessors).
+        let c = current();
+        install(c);
+        assert_eq!(current(), c);
+    }
+}

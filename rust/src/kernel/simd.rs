@@ -42,12 +42,13 @@
 //! ## Tuning
 //!
 //! Panel widths and the work-stealing chunk size are runtime-tunable
-//! via `SPADE_KERNEL_TILE` (e.g.
-//! `SPADE_KERNEL_TILE=p16_panel=48,p32_panel=16,steal_rows=2`), read
-//! once at first kernel use — see [`TileConfig`]. Lane counts are
-//! compile-time constants: they size on-stack accumulator arrays.
-
-use std::sync::OnceLock;
+//! through [`TileConfig`], carried in a
+//! [`super::settings::KernelConfig`] and threaded into every inner
+//! loop explicitly (the `SPADE_KERNEL_TILE` environment spec is parsed
+//! once, at the process edge, by
+//! [`crate::api::EngineConfig::from_env`] — the kernel itself never
+//! reads the environment). Lane counts are compile-time constants:
+//! they size on-stack accumulator arrays.
 
 use crate::posit::{PositFormat, Quire};
 
@@ -85,69 +86,104 @@ pub enum InnerPath {
     Unblocked,
 }
 
-/// Runtime-tunable tile parameters. Defaults suit ~32 KiB L1d; the
-/// `SPADE_KERNEL_TILE` environment variable overrides individual
-/// fields with a comma-separated `key=value` list (unknown keys and
-/// unparsable values are ignored):
+/// Runtime-tunable tile parameters. Defaults suit ~32 KiB L1d;
+/// overrides arrive either as typed fields (builder API) or as a
+/// comma-separated `key=value` spec (the `SPADE_KERNEL_TILE` format,
+/// parsed **strictly** by [`TileConfig::parse`]):
 ///
 /// ```text
-/// SPADE_KERNEL_TILE=p16_panel=48,p32_panel=16,steal_rows=2
+/// p16_panel=48,p32_panel=16,steal_rows=2
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileConfig {
-    /// B-column panel width for the blocked P16 path (clamped to at
+    /// B-column panel width for the blocked P16 path (must be at
     /// least [`P16_NR`]). Default 64: a 256-deep panel of planar
     /// sig+w columns stays L2-resident across the tile's rows.
     pub p16_panel: usize,
     /// B-column panel width (= live quire count) for the P32/long-k
-    /// quire path. Default 32.
+    /// quire path (must be ≥ 1). Default 32.
     pub p32_panel: usize,
     /// Rows per work-stealing chunk; 0 (default) sizes chunks
-    /// automatically to ~4 per worker.
+    /// automatically to ~4 per worker. In a *spec string* the key is
+    /// only accepted with a value ≥ 1 — omit it for automatic sizing.
     pub steal_rows: usize,
+}
+
+impl TileConfig {
+    /// The built-in defaults (const so statics can embed them).
+    pub const DEFAULT: TileConfig =
+        TileConfig { p16_panel: 64, p32_panel: 32, steal_rows: 0 };
+
+    /// Parse an override spec (the `SPADE_KERNEL_TILE` format),
+    /// **rejecting** anything suspicious instead of silently fixing
+    /// it: unknown keys, fragments without `=`, unparsable or
+    /// overflowing numbers, zero panels, panels below the lane
+    /// minimums, and an explicit `steal_rows=0` are all hard errors —
+    /// a typo'd tuning spec should fail engine construction loudly,
+    /// not quietly run with defaults (the pre-PR-4 parser clamped and
+    /// ignored; `EngineConfig` validation surfaces these messages).
+    ///
+    /// An empty spec yields the defaults.
+    pub fn parse(spec: &str) -> Result<TileConfig, String> {
+        let mut cfg = TileConfig::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // tolerate trailing / doubled commas only
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(format!(
+                    "tile spec fragment {part:?} is not key=value"));
+            };
+            let (key, val) = (key.trim(), val.trim());
+            let v: usize = val.parse().map_err(|_| {
+                format!("tile spec {key}={val:?}: not a valid count \
+                         (unparsable or overflows usize)")
+            })?;
+            match key {
+                "p16_panel" => cfg.p16_panel = v,
+                "p32_panel" => cfg.p32_panel = v,
+                "steal_rows" => {
+                    if v == 0 {
+                        return Err("tile spec steal_rows=0: chunks \
+                                    must be at least one row (omit \
+                                    the key for automatic sizing)"
+                            .into());
+                    }
+                    cfg.steal_rows = v;
+                }
+                _ => {
+                    return Err(format!(
+                        "tile spec has unknown key {key:?} (expected \
+                         p16_panel, p32_panel or steal_rows)"));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check field ranges (also enforced by [`TileConfig::parse`] and
+    /// by `EngineConfig::validate` for builder-set values): panels
+    /// must cover at least one lane block.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p16_panel < P16_NR {
+            return Err(format!(
+                "p16_panel={} is below the {P16_NR}-lane micro-tile \
+                 minimum", self.p16_panel));
+        }
+        if self.p32_panel == 0 {
+            return Err("p32_panel=0: the quire panel needs at least \
+                        one column".into());
+        }
+        Ok(())
+    }
 }
 
 impl Default for TileConfig {
     fn default() -> TileConfig {
-        TileConfig { p16_panel: 64, p32_panel: 32, steal_rows: 0 }
+        TileConfig::DEFAULT
     }
-}
-
-impl TileConfig {
-    /// Parse an override spec (the `SPADE_KERNEL_TILE` format). `None`
-    /// and unrecognized fragments yield the defaults, so a typo can
-    /// never disable the kernel.
-    pub fn from_spec(spec: Option<&str>) -> TileConfig {
-        let mut cfg = TileConfig::default();
-        let Some(s) = spec else {
-            return cfg;
-        };
-        for part in s.split(',') {
-            let Some((key, val)) = part.split_once('=') else {
-                continue;
-            };
-            let Ok(v) = val.trim().parse::<usize>() else {
-                continue;
-            };
-            match key.trim() {
-                "p16_panel" => cfg.p16_panel = v.max(P16_NR),
-                "p32_panel" => cfg.p32_panel = v.max(1),
-                "steal_rows" => cfg.steal_rows = v,
-                _ => {}
-            }
-        }
-        cfg
-    }
-}
-
-/// The process-wide tile configuration: defaults overridden by
-/// `SPADE_KERNEL_TILE` (read once, at first kernel use).
-pub fn tile_config() -> TileConfig {
-    static CFG: OnceLock<TileConfig> = OnceLock::new();
-    *CFG.get_or_init(|| {
-        TileConfig::from_spec(
-            std::env::var("SPADE_KERNEL_TILE").ok().as_deref())
-    })
 }
 
 /// True when the `std::arch` AVX2 LUT-gather P8 loop can run on this
@@ -162,19 +198,6 @@ pub fn gather_available() -> bool {
 #[cfg(not(target_arch = "x86_64"))]
 pub fn gather_available() -> bool {
     false
-}
-
-/// Whether `Auto` routing uses the AVX2 gather loop: available on this
-/// CPU and not disabled via `SPADE_KERNEL_GATHER=0` (read once).
-pub(super) fn gather_enabled() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| {
-        if matches!(std::env::var("SPADE_KERNEL_GATHER").as_deref(),
-                    Ok("0") | Ok("off")) {
-            return false;
-        }
-        gather_available()
-    })
 }
 
 /// Bias row decoded once into planar fields (shared by every inner
@@ -197,13 +220,15 @@ impl BiasDec {
 }
 
 /// Compute output rows `i0 ..` into `out` (a whole-rows slice) with
-/// the requested inner-loop body — the tile entry point every
-/// precision shares. The LUT / fixed-offset fast paths are specific to
-/// the exact standard formats; anything else goes through the generic
-/// quire path (correct for any posit(n, es) the crate supports).
+/// the requested inner-loop body and tile geometry — the tile entry
+/// point every precision shares. The LUT / fixed-offset fast paths are
+/// specific to the exact standard formats; anything else goes through
+/// the generic quire path (correct for any posit(n, es) the crate
+/// supports).
 pub(super) fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan,
                         bias: Option<&BiasDec>, i0: usize,
-                        out: &mut [u64], path: InnerPath) {
+                        out: &mut [u64], path: InnerPath,
+                        tile: TileConfig) {
     let n = b.cols;
     let nrows = out.len() / n;
     if a.fmt == crate::posit::P8_FMT {
@@ -214,12 +239,12 @@ pub(super) fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan,
         if path == InnerPath::Unblocked {
             rows_p16_unblocked(a, b, bias, i0, nrows, out);
         } else {
-            rows_p16_blocked(a, b, bias, i0, nrows, out);
+            rows_p16_blocked(a, b, bias, i0, nrows, out, tile);
         }
     } else if path == InnerPath::Unblocked {
         rows_quire_unblocked(a, b, bias, i0, nrows, out);
     } else {
-        rows_quire_panel(a, b, bias, i0, nrows, out);
+        rows_quire_panel(a, b, bias, i0, nrows, out, tile);
     }
 }
 
@@ -242,8 +267,11 @@ fn rows_p8(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
     }
     #[cfg(target_arch = "x86_64")]
     {
-        let want_gather = path == InnerPath::Gather
-            || (path == InnerPath::Auto && gather_enabled());
+        // `Auto` takes the gather body whenever the CPU has it; the
+        // old `SPADE_KERNEL_GATHER=0` kill switch is now expressed as
+        // `path = Portable` in the kernel config.
+        let want_gather =
+            path == InnerPath::Gather || path == InnerPath::Auto;
         if want_gather && gather_available() {
             // SAFETY: AVX2 presence was just runtime-checked.
             unsafe { rows_p8_avx2(a, b, bias, i0, nrows, out) };
@@ -435,11 +463,11 @@ fn rows_p8_unblocked(a: &DecodedPlan, b: &DecodedPlan,
 /// cutting B traffic by that factor versus the row-at-a-time loop.
 fn rows_p16_blocked(a: &DecodedPlan, b: &DecodedPlan,
                     bias: Option<&BiasDec>, i0: usize, nrows: usize,
-                    out: &mut [u64]) {
+                    out: &mut [u64], tile: TileConfig) {
     let (k, n) = (a.cols, b.cols);
     let fmt = a.fmt;
     let off = P16_ACC_FRAC_OFFSET as i32;
-    let panel = tile_config().p16_panel.max(P16_NR);
+    let panel = tile.p16_panel.max(P16_NR);
     let mut j0 = 0usize;
     while j0 < n {
         let jend = (j0 + panel).min(n);
@@ -544,10 +572,10 @@ fn rows_p16_unblocked(a: &DecodedPlan, b: &DecodedPlan,
 /// inner loop walks stays cache-resident across the tile's rows.
 fn rows_quire_panel(a: &DecodedPlan, b: &DecodedPlan,
                     bias: Option<&BiasDec>, i0: usize, nrows: usize,
-                    out: &mut [u64]) {
+                    out: &mut [u64], tile: TileConfig) {
     let (k, n) = (a.cols, b.cols);
     let fmt = a.fmt;
-    let panel = tile_config().p32_panel.max(1).min(n.max(1));
+    let panel = tile.p32_panel.max(1).min(n.max(1));
     let mut quires: Vec<Quire> =
         (0..panel).map(|_| Quire::new(fmt)).collect();
     let mut j0 = 0usize;
@@ -642,21 +670,48 @@ mod tests {
 
     #[test]
     fn tile_config_spec_parsing() {
-        assert_eq!(TileConfig::from_spec(None), TileConfig::default());
-        let cfg = TileConfig::from_spec(Some(
-            "p16_panel=48, p32_panel=16,steal_rows=2"));
+        assert_eq!(TileConfig::parse("").unwrap(),
+                   TileConfig::default());
+        let cfg = TileConfig::parse(
+            "p16_panel=48, p32_panel=16,steal_rows=2").unwrap();
         assert_eq!(cfg,
                    TileConfig { p16_panel: 48, p32_panel: 16,
                                 steal_rows: 2 });
-        // Unknown keys / garbage fall back to defaults field-wise.
-        let cfg = TileConfig::from_spec(Some(
-            "bogus=9,p16_panel=oops,p32_panel=8"));
-        assert_eq!(cfg.p16_panel, TileConfig::default().p16_panel);
+        // Trailing comma is tolerated; whitespace is trimmed.
+        let cfg = TileConfig::parse(" p32_panel = 8 ,").unwrap();
         assert_eq!(cfg.p32_panel, 8);
-        // Panels are clamped to their minimum lane widths.
-        let cfg = TileConfig::from_spec(Some("p16_panel=1,p32_panel=0"));
+        assert_eq!(cfg.p16_panel, TileConfig::default().p16_panel);
+    }
+
+    #[test]
+    fn tile_config_rejects_bad_specs() {
+        // Unknown keys, unparsable values, missing '=': hard errors.
+        assert!(TileConfig::parse("bogus=9").is_err());
+        assert!(TileConfig::parse("p16_panel=oops").is_err());
+        assert!(TileConfig::parse("p16_panel").is_err());
+        // Overflowing counts are rejected, not wrapped or ignored.
+        assert!(TileConfig::parse(
+            "p32_panel=99999999999999999999999999").is_err());
+        // Zero / below-minimum panels are errors, not silent clamps.
+        assert!(TileConfig::parse("p16_panel=0").is_err());
+        assert!(TileConfig::parse("p16_panel=3").is_err());
+        assert!(TileConfig::parse("p32_panel=0").is_err());
+        // steal_rows=0 must be expressed by omission, not explicitly.
+        assert!(TileConfig::parse("steal_rows=0").is_err());
+        // Lane-minimum panels are the smallest accepted extremes.
+        let cfg = TileConfig::parse(
+            &format!("p16_panel={P16_NR},p32_panel=1,steal_rows=1"))
+            .unwrap();
         assert_eq!(cfg.p16_panel, P16_NR);
         assert_eq!(cfg.p32_panel, 1);
+        assert_eq!(cfg.steal_rows, 1);
+        // validate() catches builder-set (non-spec) bad values too.
+        assert!(TileConfig { p16_panel: 2, ..TileConfig::default() }
+            .validate()
+            .is_err());
+        assert!(TileConfig { p32_panel: 0, ..TileConfig::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -44,9 +44,17 @@
 //!   produced by the build-time JAX/Pallas layers (`python/compile/`).
 //! * [`coordinator`] — precision-adaptive serving: request queue, dynamic
 //!   batcher, precision router, sharded planar execution (N plan-cached
-//!   sessions behind a least-loaded shard router, with an automatic
-//!   fallback chain PJRT → trained weights → synthetic model) and
-//!   energy/latency metrics with per-shard counters.
+//!   sessions behind a least-loaded or mode-pinned shard router, with an
+//!   automatic fallback chain PJRT → trained weights → synthetic model)
+//!   and energy/latency metrics with per-shard counters and bounded
+//!   sampling reservoirs.
+//! * [`api`] — the unified engine facade: one typed
+//!   [`api::EngineConfig`] (precision, threads, tiles, gather path,
+//!   shards/affinity, batching, metrics) behind a fluent
+//!   [`api::EngineBuilder`]; the [`api::Engine`] constructs kernel
+//!   plans, [`nn::exec::Session`]s and [`coordinator::Coordinator`]s
+//!   from that one validated config. `SPADE_*` environment variables
+//!   are parsed exactly once, in [`api::env`].
 //!
 //! ## Quickstart
 //!
@@ -66,6 +74,7 @@
 //! # let _ = dot;
 //! ```
 
+pub mod api;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
@@ -82,10 +91,11 @@ pub type Result<T> = anyhow::Result<T>;
 
 /// Locate the artifacts directory (AOT outputs of `make artifacts`).
 ///
-/// Checks `$SPADE_ARTIFACTS`, then `./artifacts`, then walks up from the
+/// Checks `$SPADE_ARTIFACTS` (via [`api::env`], the single module
+/// that reads `SPADE_*`), then `./artifacts`, then walks up from the
 /// executable — tests and examples all run from different CWDs.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("SPADE_ARTIFACTS") {
+    if let Some(p) = api::env::artifacts_override() {
         return p.into();
     }
     let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());

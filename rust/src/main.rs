@@ -3,29 +3,44 @@
 //! Subcommands:
 //!   tables            print Tables I, II, III (model vs paper)
 //!   eval              Fig. 4 accuracy sweep (--model, --limit, --modes)
-//!   serve             run the precision-adaptive coordinator on
+//!   serve             run the precision-adaptive serving engine on
 //!                     synthetic traffic (--requests, --rate-us,
-//!                     --policy, --shards, --batch). Engine selection
-//!                     is automatic: PJRT artifacts when present,
+//!                     --policy, --shards, --batch, --affinity
+//!                     least-loaded|pinned-mode, --stats-json PATH,
+//!                     --stats-interval-ms N). Backend selection is
+//!                     automatic: PJRT artifacts when present,
 //!                     otherwise the sharded planar posit kernel on
 //!                     trained or synthetic weights — serve always
 //!                     comes up.
 //!   trace             cycle-accurate systolic trace of a small GEMM
 //!   info              artifact + model inventory
+//!
+//! All engine construction goes through `spade::api::EngineBuilder`:
+//! `SPADE_*` environment variables are parsed once
+//! (`EngineConfig::from_env`) and merged with the CLI flags here, at
+//! the edge.
+
+use std::time::Duration;
 
 use anyhow::Result;
 
-use spade::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig,
-                         RoutePolicy, ServeBackend};
+use spade::api::{EngineBuilder, RoutePolicy, ServeBackend,
+                 ShardAffinity};
 use spade::cost::{baselines, AsicReport, DesignKind, FpgaReport,
                   PipelineStage, TechNode};
 use spade::data::{Dataset, TrafficGen};
 use spade::engine::Mode;
-use spade::nn::{self, Backend, Model, Precision, Tensor};
+use spade::nn::{Backend, Model, Precision, Tensor};
 use spade::systolic::{ArrayConfig, SystolicGemm};
 use spade::util::Args;
 
 fn main() -> Result<()> {
+    // The one environment parse of the process: SPADE_* knobs become
+    // the kernel's installed defaults for every subcommand, so direct
+    // kernel users (trace, tables) honor them too. serve/eval layer
+    // richer builder configs on top of the same parse.
+    spade::kernel::settings::install(
+        spade::api::EngineConfig::from_env()?.kernel_config());
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("tables") => cmd_tables(),
@@ -84,21 +99,27 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let limit: usize = args.num_or("limit", 256);
     let modes = args.get_or("modes", "f32,p32,p16,p8");
 
+    // Env-seeded engine: SPADE_KERNEL_* tuning applies to the sweep.
+    let engine = EngineBuilder::from_env()?
+        .model(model_name.clone())
+        .build()?;
     let model = Model::load(&model_name)?;
     let ds = Dataset::load_artifact(&model.spec.dataset, "test")?;
     let n = limit.min(ds.n);
     let (pix, labels) = ds.batch(0, n);
     let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
 
+    // One plan-cached session for the whole sweep: weight decode is
+    // paid once per (layer, mode), not once per precision pass.
+    let mut sess = engine.session(&model);
     println!("{model_name} on {} ({n} images)", model.spec.dataset);
     for mode in modes.split(',') {
         let prec = Precision::parse(mode)?;
         let backend = if prec == Precision::F32 { Backend::F32 }
                       else { Backend::Posit };
         let t0 = std::time::Instant::now();
-        let (logits, stats) = nn::exec::forward(&model, &x, prec,
-                                                backend)?;
-        let acc = nn::exec::accuracy(&logits, labels);
+        let (logits, stats) = sess.forward(&x, prec, backend)?;
+        let acc = spade::nn::exec::accuracy(&logits, labels);
         println!("  {:<4} acc {:.4}  ({} MACs, {} cycles, {:.1} uJ) \
                   [{:.1}s wall]",
                  prec.name(), acc, stats.macs, stats.cycles,
@@ -117,33 +138,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "balanced" => RoutePolicy::Balanced,
         _ => RoutePolicy::EnergyFirst,
     };
+    let affinity = match args.get_or("affinity", "least-loaded")
+        .as_str()
+    {
+        "pinned-mode" => ShardAffinity::PinnedMode,
+        _ => ShardAffinity::LeastLoaded,
+    };
 
-    let (coord, backend) = Coordinator::start_auto(CoordinatorConfig {
-        model: args.get_or("model", "mlp"),
-        policy,
-        shards,
-        batcher: BatcherConfig { target: batch.max(1),
-                                 ..BatcherConfig::default() },
-    })?;
-    match backend {
-        ServeBackend::Pjrt => println!("engine: PJRT artifacts"),
-        ServeBackend::PlanarTrained => {
+    // Env (SPADE_*) first, CLI flags on top — one validated config.
+    let mut builder = EngineBuilder::from_env()?
+        .model(args.get_or("model", "mlp"))
+        .policy(policy)
+        .shards(shards)
+        .affinity(affinity)
+        .batch(batch.max(1));
+    let stats_json = args.options.get("stats-json").cloned();
+    if let Some(path) = &stats_json {
+        builder = builder.stats_json(path).stats_interval(
+            Duration::from_millis(
+                args.num_or("stats-interval-ms", 1000u64).max(1)));
+    }
+    let engine = builder.build()?;
+
+    let handle = engine.serve()?;
+    match handle.backend() {
+        Some(ServeBackend::Pjrt) => {
+            println!("engine: PJRT artifacts")
+        }
+        Some(ServeBackend::PlanarTrained) => {
             println!("engine: sharded planar kernel (trained weights; \
                       no PJRT manifest)")
         }
-        ServeBackend::PlanarSynthetic => {
+        Some(ServeBackend::PlanarSynthetic) | None => {
             println!("engine: sharded planar kernel (synthetic model; \
                       no artifacts on disk)")
         }
     }
-    let mut gen = TrafficGen::new(7, rate_us, coord.input_len());
+    let mut gen = TrafficGen::new(7, rate_us, handle.input_len());
 
     println!("serving {requests} requests (mean gap {rate_us} us, \
               policy {policy:?}, batch {batch}) ...");
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for r in gen.burst(requests) {
-        rxs.push(coord.submit(spade::coordinator::InferenceRequest {
+        rxs.push(handle.submit(spade::coordinator::InferenceRequest {
             id: r.id,
             input: r.input,
             mode: r.mode,
@@ -153,10 +191,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let _ = rx.recv();
     }
     let wall = t0.elapsed();
-    let m = coord.shutdown();
+    let m = handle.shutdown();
     println!("{}", m.summary());
     println!("throughput: {:.0} req/s",
              requests as f64 / wall.as_secs_f64());
+    if let Some(path) = stats_json {
+        println!("stats dump: {path}");
+    }
     Ok(())
 }
 

@@ -48,7 +48,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::engine::Mode;
-use crate::kernel::{self, DecodedPlan};
+use crate::kernel::{self, DecodedPlan, KernelConfig};
 use crate::posit::{from_f64, to_f64, Quire};
 use crate::systolic::{ArrayConfig, GemmStats, SystolicGemm};
 
@@ -100,6 +100,12 @@ pub struct Session<'m> {
     model: Cow<'m, Model>,
     weight_plans: HashMap<(usize, Mode), Arc<DecodedPlan>>,
     bias_words: HashMap<(usize, Mode), Arc<Vec<u64>>>,
+    /// Kernel config this session's GEMMs run under (captured from
+    /// the process default at construction; override with
+    /// [`Session::set_kernel_config`] — the `api::Engine` facade does
+    /// so when it hands out sessions). Never changes results, only
+    /// threading/tiling.
+    kernel_cfg: KernelConfig,
     /// Weight-plan cache hits (telemetry; bias rides along uncounted).
     pub cache_hits: u64,
     /// Weight-plan cache misses (each one quantizes+decodes a tensor).
@@ -113,6 +119,7 @@ impl<'m> Session<'m> {
             model: Cow::Borrowed(model),
             weight_plans: HashMap::new(),
             bias_words: HashMap::new(),
+            kernel_cfg: kernel::settings::current(),
             cache_hits: 0,
             cache_misses: 0,
         }
@@ -124,9 +131,29 @@ impl<'m> Session<'m> {
             model: Cow::Owned(model),
             weight_plans: HashMap::new(),
             bias_words: HashMap::new(),
+            kernel_cfg: kernel::settings::current(),
             cache_hits: 0,
             cache_misses: 0,
         }
+    }
+
+    /// Pin the kernel config this session's GEMMs run under
+    /// (threads/tiles/inner path; bit-identical results by
+    /// construction). Builder-style variant: [`Session::with_kernel_config`].
+    pub fn set_kernel_config(&mut self, cfg: KernelConfig) {
+        self.kernel_cfg = cfg;
+    }
+
+    /// [`Session::set_kernel_config`], fluent.
+    pub fn with_kernel_config(mut self, cfg: KernelConfig)
+                              -> Session<'m> {
+        self.kernel_cfg = cfg;
+        self
+    }
+
+    /// The kernel config this session's GEMMs run under.
+    pub fn kernel_config(&self) -> KernelConfig {
+        self.kernel_cfg
     }
 
     /// The model this session executes.
@@ -289,8 +316,9 @@ impl<'m> Session<'m> {
                         wplan.rows);
                 let nn = wplan.cols;
                 let pa = DecodedPlan::from_f32(&a.data, m, k, fmt);
-                let words =
-                    kernel::gemm(&pa, &wplan, Some(bwords.as_slice()));
+                let words = kernel::gemm_with_config(
+                    &pa, &wplan, Some(bwords.as_slice()),
+                    &self.kernel_cfg);
                 let out: Vec<f32> = words
                     .iter()
                     .map(|&wd| to_f64(wd, fmt) as f32)

@@ -1,0 +1,386 @@
+//! Facade identity + validation tests for `spade::api` (PR 4).
+//!
+//! The contract under test: the builder-constructed engine is a
+//! *construction* path, not a numeric path — every result it produces
+//! (kernel GEMM words, session logits, served logits) is
+//! **bit-identical** to the documented internal layer called
+//! directly, under any valid configuration (threads, tiles, inner
+//! path, shards). Plus: `EngineConfig` validation rejects the bad
+//! configs the old env readers used to clamp silently, and the
+//! `--stats-json` dump is written, atomic, and parseable.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use spade::api::{Engine, EngineBuilder, EngineConfig, InnerPath,
+                 RoutePolicy, ShardAffinity, TileConfig};
+use spade::coordinator::{Coordinator, CoordinatorConfig,
+                         InferenceRequest};
+use spade::engine::Mode;
+use spade::kernel::{self, DecodedPlan, P16_NR};
+use spade::nn::{self, Backend, Model, ModelSpec, Precision, Tensor};
+use spade::posit::{from_f64, PositFormat, Quire, P16_FMT, P32_FMT,
+                   P8_FMT};
+use spade::util::{Json, Prop, SplitMix64};
+
+fn rand_words(rng: &mut SplitMix64, len: usize, fmt: PositFormat)
+              -> Vec<u64> {
+    (0..len)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                rng.next_u64() & fmt.mask()
+            } else {
+                from_f64(rng.wide(-6, 6), fmt)
+            }
+        })
+        .collect()
+}
+
+/// Scalar decode-per-MAC quire reference (the oracle every kernel
+/// path is held to).
+fn quire_ref(aw: &[u64], bw: &[u64], m: usize, k: usize, n: usize,
+             fmt: PositFormat) -> Vec<u64> {
+    let mut out = vec![0u64; m * n];
+    let mut q = Quire::new(fmt);
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for kk in 0..k {
+                q.mac(aw[i * k + kk], bw[kk * n + j]);
+            }
+            out[i * n + j] = q.to_posit();
+        }
+    }
+    out
+}
+
+/// Tiny hand-built model (mirrors the nn::exec / coordinator test
+/// fixture) so serving is testable without artifacts on disk.
+fn tiny_model() -> Model {
+    let spec = ModelSpec::parse(
+        r#"{"name": "tiny", "dataset": "d", "input": [4, 4, 1],
+            "classes": 3,
+            "layers": [
+              {"kind": "conv", "k": 3, "out": 2, "pad": "same",
+               "relu": true},
+              {"kind": "maxpool", "k": 2},
+              {"kind": "flatten"},
+              {"kind": "dense", "out": 3, "relu": false}]}"#,
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(55);
+    let mut params = BTreeMap::new();
+    params.insert(
+        "layer0/w".to_string(),
+        Tensor::from_vec(&[3, 3, 1, 2],
+                         (0..18).map(|_| rng.normal() as f32)
+                             .collect()),
+    );
+    params.insert("layer0/b".to_string(),
+                  Tensor::from_vec(&[2], vec![0.1, -0.1]));
+    params.insert(
+        "layer3/w".to_string(),
+        Tensor::from_vec(&[8, 3],
+                         (0..24).map(|_| rng.normal() as f32)
+                             .collect()),
+    );
+    params.insert("layer3/b".to_string(),
+                  Tensor::from_vec(&[3], vec![0.0, 0.05, -0.05]));
+    Model { spec, params }
+}
+
+#[test]
+fn engine_gemm_matches_direct_kernel_calls() {
+    // Default-config engine vs the old-style entry points: words must
+    // be identical for every format, with and without bias.
+    let engine = Engine::builder().build().unwrap();
+    let mut rng = SplitMix64::new(404);
+    for (fmt, mode) in [(P8_FMT, Mode::P8x4), (P16_FMT, Mode::P16x2),
+                        (P32_FMT, Mode::P32x1)] {
+        let (m, k, n) = (7, 13, 9);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let bias = rand_words(&mut rng, n, fmt);
+        let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+        let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+        // Engine in the matching precision so plan_words agrees.
+        let e = Engine::builder().precision(mode).build().unwrap();
+        let ea = e.plan_words(aw.clone(), m, k);
+        let eb = e.plan_words(bw.clone(), k, n);
+        let old = kernel::gemm(&pa, &pb, Some(bias.as_slice()));
+        assert_eq!(e.gemm(&ea, &eb, Some(bias.as_slice())), old,
+                   "{fmt:?} biased");
+        assert_eq!(engine.gemm(&pa, &pb, None),
+                   kernel::gemm(&pa, &pb, None), "{fmt:?} unbiased");
+        // and both agree with the quire oracle
+        assert_eq!(kernel::gemm(&pa, &pb, None),
+                   quire_ref(&aw, &bw, m, k, n, fmt), "{fmt:?} oracle");
+    }
+}
+
+#[test]
+fn tuned_engine_is_bit_identical_to_default() {
+    // A heavily tuned (but valid) config — minimum panels, one-row
+    // steal chunks, pinned portable path, explicit threads — must not
+    // change a single output word.
+    let tuned = Engine::builder()
+        .threads(5)
+        .tile(TileConfig { p16_panel: P16_NR, p32_panel: 1,
+                           steal_rows: 1 })
+        .inner_path(InnerPath::Portable)
+        .build()
+        .unwrap();
+    let base = Engine::builder().build().unwrap();
+    let mut rng = SplitMix64::new(808);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        let (m, k, n) = (17, 11, 23);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        assert_eq!(tuned.gemm(&pa, &pb, None),
+                   base.gemm(&pa, &pb, None), "{fmt:?}");
+    }
+}
+
+#[test]
+fn tile_extremes_property_under_concurrency() {
+    // ROADMAP validation item: property-test tile extremes (panels at
+    // lane minimums, steal_rows=1) under concurrency, expressed
+    // through the builder API. Each case races four threads through
+    // the extreme-config engine and holds every result to the
+    // sequential default-config answer.
+    let extreme = Engine::builder()
+        .tile(TileConfig { p16_panel: P16_NR, p32_panel: 1,
+                           steal_rows: 1 })
+        .threads(7)
+        .build()
+        .unwrap();
+    let base = Engine::builder().build().unwrap();
+    Prop::new("tile extremes concurrent", 12).run(|rng| {
+        let fmt = [P8_FMT, P16_FMT, P32_FMT]
+            [rng.below(3) as usize];
+        let m = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let aw = rand_words(rng, m * k, fmt);
+        let bw = rand_words(rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let want = base.gemm(&pa, &pb, None);
+        let ok = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| extreme.gemm(&pa, &pb, None) == want)
+                })
+                .collect();
+            handles.into_iter().all(|h| h.join().unwrap())
+        });
+        if !ok {
+            return Err(format!(
+                "extreme-tile result diverged: {fmt:?} \
+                 ({m},{k},{n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_session_matches_free_forward() {
+    let model = tiny_model();
+    let engine = Engine::builder().build().unwrap();
+    let mut rng = SplitMix64::new(91);
+    let x = Tensor::from_vec(&[3, 4, 4, 1],
+                             (0..48).map(|_| rng.f32()).collect());
+    for prec in [Precision::Posit(Mode::P8x4),
+                 Precision::Posit(Mode::P16x2),
+                 Precision::Posit(Mode::P32x1)] {
+        let mut sess = engine.session(&model);
+        let (got, _) =
+            sess.forward(&x, prec, Backend::Posit).unwrap();
+        let (want, _) =
+            nn::exec::forward(&model, &x, prec, Backend::Posit)
+                .unwrap();
+        assert_eq!(got.data, want.data, "{prec:?}");
+    }
+}
+
+#[test]
+fn engine_serving_matches_direct_coordinator() {
+    // Same model, same inputs: the facade-served logits must be
+    // bit-identical to a hand-assembled Coordinator (and therefore to
+    // the PR-2/PR-3 call paths).
+    let mut rng = SplitMix64::new(2024);
+    let inputs: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..16).map(|_| rng.f32()).collect())
+        .collect();
+
+    let requests = |inputs: &[Vec<f32>]| -> Vec<InferenceRequest> {
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, inp)| InferenceRequest {
+                id: i as u64,
+                input: inp.clone(),
+                mode: None,
+            })
+            .collect()
+    };
+
+    // Facade path.
+    let engine = Engine::builder()
+        .shards(2)
+        .batch(4)
+        .max_wait(Duration::from_millis(1))
+        .build()
+        .unwrap();
+    let handle = engine.serve_model(tiny_model()).unwrap();
+    assert_eq!(handle.input_len(), 16);
+    assert!(handle.backend().is_none(), "explicit model");
+    let rxs: Vec<_> = requests(&inputs)
+        .into_iter()
+        .map(|r| handle.submit(r))
+        .collect();
+    let facade: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().logits)
+        .collect();
+    handle.shutdown();
+
+    // Direct pre-facade path.
+    let cfg = CoordinatorConfig {
+        shards: 2,
+        batcher: spade::coordinator::BatcherConfig {
+            target: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(tiny_model(), cfg).unwrap();
+    let rxs: Vec<_> = requests(&inputs)
+        .into_iter()
+        .map(|r| coord.submit(r))
+        .collect();
+    let direct: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().logits)
+        .collect();
+    coord.shutdown();
+
+    assert_eq!(facade, direct);
+}
+
+#[test]
+fn builder_validation_rejects_bad_configs() {
+    assert!(Engine::builder().batch(0).build().is_err());
+    assert!(Engine::builder().threads(0).build().is_err());
+    assert!(Engine::builder().pool_workers(0).build().is_err());
+    assert!(Engine::builder().reservoir_capacity(0).build().is_err());
+    assert!(Engine::builder().model("").build().is_err());
+    // Strict tile specs fail at the builder, with the message intact.
+    assert!(EngineBuilder::new().tile_spec("p16_panel=0").is_err());
+    assert!(EngineBuilder::new().tile_spec("steal_rows=0").is_err());
+    assert!(EngineBuilder::new().tile_spec("bogus=1").is_err());
+    assert!(EngineBuilder::new()
+        .tile_spec("p32_panel=99999999999999999999999")
+        .is_err());
+    // A typed-out bad tile is caught at build() too.
+    assert!(Engine::builder()
+        .tile(TileConfig { p16_panel: 1, p32_panel: 0,
+                           steal_rows: 0 })
+        .build()
+        .is_err());
+    // And a good spec round-trips into the config.
+    let e = EngineBuilder::new()
+        .tile_spec("p16_panel=8,steal_rows=3")
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(e.config().tile.p16_panel, 8);
+    assert_eq!(e.config().tile.steal_rows, 3);
+    assert_eq!(e.kernel_config().tile.steal_rows, 3);
+}
+
+#[test]
+fn from_env_parses_once_and_validates() {
+    // This is the only test (and, post-PR-4, the only code path
+    // outside api::env) that touches SPADE_* variables. Serial within
+    // this test; no other test in this binary reads the environment.
+    std::env::set_var("SPADE_KERNEL_TILE", "p16_panel=oops");
+    assert!(EngineConfig::from_env().is_err(),
+            "bad tile spec must fail from_env");
+    std::env::set_var("SPADE_KERNEL_TILE",
+                      "p16_panel=48,steal_rows=2");
+    std::env::set_var("SPADE_KERNEL_THREADS", "3");
+    let cfg = EngineConfig::from_env().unwrap();
+    assert_eq!(cfg.tile.p16_panel, 48);
+    assert_eq!(cfg.tile.steal_rows, 2);
+    assert_eq!(cfg.threads, Some(3));
+    assert_eq!(cfg.pool_workers, Some(3));
+    std::env::set_var("SPADE_KERNEL_THREADS", "many");
+    assert!(EngineConfig::from_env().is_err(),
+            "unparsable thread count must fail loudly");
+    std::env::remove_var("SPADE_KERNEL_THREADS");
+    std::env::remove_var("SPADE_KERNEL_TILE");
+    let cfg = EngineConfig::from_env().unwrap();
+    assert_eq!(cfg.threads, None);
+    assert_eq!(cfg.tile, TileConfig::default());
+}
+
+#[test]
+fn stats_json_dump_is_written_and_parseable() {
+    // Deliberately NOT std::env::temp_dir(): that reads TMPDIR, and
+    // this binary's from_env test mutates the environment — keeping
+    // all env access on one test avoids any set_var/getenv overlap.
+    let dir = std::path::Path::new("target").join("test-tmp");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("spade_stats_test_{}.json",
+                                std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let engine = Engine::builder()
+        .shards(2)
+        .batch(2)
+        .max_wait(Duration::from_millis(1))
+        .affinity(ShardAffinity::LeastLoaded)
+        .policy(RoutePolicy::EnergyFirst)
+        .stats_json(&path)
+        .stats_interval(Duration::from_millis(50))
+        .build()
+        .unwrap();
+    let handle = engine.serve_model(tiny_model()).unwrap();
+    for id in 0..8u64 {
+        handle
+            .infer(InferenceRequest {
+                id,
+                input: vec![0.5; 16],
+                mode: None,
+            })
+            .unwrap();
+    }
+    let metrics = handle.shutdown(); // final dump is flushed here
+    assert_eq!(metrics.total_requests, 8);
+
+    let body = std::fs::read_to_string(&path)
+        .expect("stats dump file must exist after shutdown");
+    let j = Json::parse(&body).expect("dump must be valid JSON");
+    assert_eq!(j.get("schema").unwrap().as_str(),
+               Some("spade-serve-stats-v1"));
+    // The final dump sees the fully-drained coordinator.
+    assert_eq!(j.get("requests").unwrap().as_usize(), Some(8));
+    let shards = j.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2);
+    let total: usize = shards
+        .iter()
+        .map(|s| s.get("requests").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(total, 8);
+    // Kernel dispatch counters ride along for fleet dashboards.
+    let k = j.get("kernel").unwrap();
+    assert!(k.get("gemms").unwrap().as_usize().unwrap() > 0);
+    // pool_workers is 0 until some GEMM actually fans out — the dump
+    // must report, never create, the pool.
+    assert!(k.get("pool_workers").unwrap().as_usize().is_some());
+    assert!(k.get("pool_jobs").unwrap().as_usize().is_some());
+    let _ = std::fs::remove_file(&path);
+}

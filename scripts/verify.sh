@@ -11,6 +11,23 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== env hygiene gate (all SPADE_* reads centralized) =="
+# PR 4 contract: SPADE_* environment variables are read in exactly one
+# module — rust/src/api/env.rs — and parsed once at the process edge
+# (EngineConfig::from_env). Any other `env::var("SPADE_...` in the
+# Rust tree fails the build. Runs before the cargo gates so it works
+# even on machines without a toolchain.
+env_hits=$(grep -RInE 'env::var[[:space:]]*\([[:space:]]*"SPADE_' \
+               --include='*.rs' rust examples \
+           | grep -v '^rust/src/api/env\.rs:' || true)
+if [ -n "$env_hits" ]; then
+  echo "verify: SPADE_* environment reads outside rust/src/api/env.rs:" >&2
+  echo "$env_hits" >&2
+  echo "        route new knobs through api::env / EngineConfig::from_env." >&2
+  exit 1
+fi
+echo "ok: SPADE_* env reads confined to rust/src/api/env.rs"
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "verify: cargo not found on PATH — nothing was built or tested." >&2
   echo "verify: BENCH_hotpath.json stays a placeholder until" >&2
