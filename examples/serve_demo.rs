@@ -82,11 +82,13 @@ fn main() -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(requests);
     for r in traffic.burst(requests) {
+        // The demo serves unbounded queues (no --max-queue knob
+        // here), so a reject is impossible; ? keeps it honest.
         pending.push(handle.submit(InferenceRequest {
             id: r.id,
             input: r.input,
             mode: r.mode,
-        }));
+        })?);
     }
     let mut mode_counts = std::collections::BTreeMap::new();
     for rx in pending {

@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop: posit
 //! encode/decode, P8 LUT multiply, quire MAC, engine MAC step, planar
 //! plan build, planar-vs-scalar functional GEMM, lane-fused-vs-scalar
-//! P8 inner loops, blocked-vs-unblocked P16/P32 inner loops, kernel
-//! thread scaling, work-stealing-vs-fixed-split dispatch,
+//! P8 inner loops, blocked-vs-unblocked P16/P32 inner loops,
+//! autotuned-vs-default tile config, k-chunked-vs-full-depth
+//! streaming, the P16 hybrid product LUT vs the exact multiply,
+//! kernel thread scaling, work-stealing-vs-fixed-split dispatch,
 //! worker-pool-vs-scope spawn amortization, sharded serving
 //! throughput, PJRT dispatch. Each prints ops/s so before/after deltas
 //! are one diff away, and every metric is also written to
@@ -261,6 +263,147 @@ fn main() {
                    t_unb / t_blk);
     }
 
+    common::banner(
+        "self-tuning: autotuned TileConfig vs built-in defaults");
+    {
+        // Probe cost is paid once up front (FirstUse on the first
+        // dispatch of each (precision, class)); the timed loops then
+        // compare default-config dispatch against the tuned winner.
+        use spade::kernel::{AutotuneMode, KernelConfig};
+        let tuned_cfg = KernelConfig {
+            autotune: AutotuneMode::FirstUse,
+            ..KernelConfig::DEFAULT
+        };
+        for (tag, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                           ("p32", P32_FMT)] {
+            let pa = DecodedPlan::from_f64(&a, n, n, fmt);
+            let pb = DecodedPlan::from_f64(&b, n, n, fmt);
+            // Tune outside the timed region.
+            let _ = kernel::gemm_with_config(&pa, &pb, None,
+                                             &tuned_cfg);
+            let t_def = common::time_median(r3, || {
+                let _ = kernel::gemm_with_config(
+                    &pa, &pb, None, &KernelConfig::DEFAULT);
+            });
+            let t_tuned = common::time_median(r3, || {
+                let _ = kernel::gemm_with_config(&pa, &pb, None,
+                                                 &tuned_cfg);
+            });
+            println!("{tag} {n}^3: default {:>8.1} M MAC/s  \
+                      autotuned {:>8.1} M MAC/s  ({:.2}x)",
+                     macs / t_def / 1e6, macs / t_tuned / 1e6,
+                     t_def / t_tuned);
+            log.record(&format!("gemm_{tag}_default_cfg"),
+                       macs / t_def / 1e6);
+            log.record(&format!("gemm_{tag}_autotuned"),
+                       macs / t_tuned / 1e6);
+            if tag == "p16" {
+                log.record("autotuned_vs_default", t_def / t_tuned);
+            }
+            log.record(&format!("autotuned_vs_default_{tag}"),
+                       t_def / t_tuned);
+        }
+        let probes = kernel::counters().autotune_probes;
+        println!("(autotune probes so far: {probes})");
+    }
+
+    common::banner(
+        "k-chunked A/B streaming vs full-depth reduction");
+    {
+        use spade::kernel::KernelConfig;
+        use spade::kernel::TileConfig;
+        let (dm, dk, dn) = if quick {
+            (8usize, 1536usize, 24usize)
+        } else {
+            (16usize, 4096usize, 48usize)
+        };
+        let dmacs = (dm * dk * dn) as f64;
+        let av: Vec<f64> =
+            (0..dm * dk).map(|_| rng.normal()).collect();
+        let bv: Vec<f64> =
+            (0..dk * dn).map(|_| rng.normal()).collect();
+        for (tag, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                           ("p32", P32_FMT)] {
+            let pa = DecodedPlan::from_f64(&av, dm, dk, fmt);
+            let pb = DecodedPlan::from_f64(&bv, dk, dn, fmt);
+            // P8 chunking replaces only the portable lane loop (Auto
+            // keeps the AVX2 gather where present), so the P8 rows
+            // pin Portable on both sides for a like-for-like ratio —
+            // exactly the comparison the autotuner's deep-k grid
+            // makes.
+            let path = if fmt == P8_FMT {
+                InnerPath::Portable
+            } else {
+                InnerPath::Auto
+            };
+            // k_chunk = dk never engages (chunking needs k > chunk):
+            // the pre-PR-5 full-depth loop, as the baseline.
+            let full = KernelConfig {
+                tile: Some(TileConfig { k_chunk: dk,
+                                        ..TileConfig::DEFAULT }),
+                threads: Some(1),
+                path,
+                ..KernelConfig::DEFAULT
+            };
+            let chunked = KernelConfig {
+                tile: Some(TileConfig { k_chunk: 256,
+                                        ..TileConfig::DEFAULT }),
+                threads: Some(1),
+                path,
+                ..KernelConfig::DEFAULT
+            };
+            let t_full = common::time_median(r3, || {
+                let _ = kernel::gemm_with_config(&pa, &pb, None,
+                                                 &full);
+            });
+            let t_chunk = common::time_median(r3, || {
+                let _ = kernel::gemm_with_config(&pa, &pb, None,
+                                                 &chunked);
+            });
+            println!("{tag} {dm}x{dk}x{dn}: full-k {:>8.1} M MAC/s  \
+                      k-chunked {:>8.1} M MAC/s  ({:.2}x)",
+                     dmacs / t_full / 1e6, dmacs / t_chunk / 1e6,
+                     t_full / t_chunk);
+            log.record(&format!("deepk_{tag}_full"),
+                       dmacs / t_full / 1e6);
+            log.record(&format!("deepk_{tag}_chunked"),
+                       dmacs / t_chunk / 1e6);
+            if tag == "p16" {
+                log.record("kchunk_vs_full_k", t_full / t_chunk);
+            }
+            log.record(&format!("kchunk_vs_full_k_{tag}"),
+                       t_full / t_chunk);
+        }
+    }
+
+    common::banner(
+        "P16 hybrid product LUT vs exact multiply (default-off; \
+         engages only if >= 1.1x)");
+    {
+        let pa = DecodedPlan::from_f64(&a, n, n, P16_FMT);
+        let pb = DecodedPlan::from_f64(&b, n, n, P16_FMT);
+        let _ = spade::kernel::p16_hyb_lut(); // build outside timing
+        let t_exact = common::time_median(r3, || {
+            let _ = kernel::gemm_single_path(&pa, &pb, None,
+                                             InnerPath::Portable)
+                .unwrap();
+        });
+        let t_hyb = common::time_median(r3, || {
+            let _ = kernel::gemm_single_path(&pa, &pb, None,
+                                             InnerPath::Hybrid)
+                .unwrap();
+        });
+        let ratio = t_exact / t_hyb;
+        println!("p16 {n}^3: exact multiply {:>8.1} M MAC/s  hybrid \
+                  LUT {:>8.1} M MAC/s  ({ratio:.2}x)",
+                 macs / t_exact / 1e6, macs / t_hyb / 1e6);
+        println!("  (the autotuner only selects the hybrid path when \
+                  this ratio is >= 1.10)");
+        log.record("p16_exact_mul", macs / t_exact / 1e6);
+        log.record("p16_hybrid_lut", macs / t_hyb / 1e6);
+        log.record("p16_hybrid_lut_vs_exact", ratio);
+    }
+
     common::banner("planar kernel thread scaling");
     let hw = std::thread::available_parallelism()
         .map(|p| p.get())
@@ -412,9 +555,11 @@ fn main() {
             .burst(reqs)
             .into_iter()
             .map(|r| {
-                coord.submit(InferenceRequest { id: r.id,
-                                                input: r.input,
-                                                mode: None })
+                coord
+                    .submit(InferenceRequest { id: r.id,
+                                               input: r.input,
+                                               mode: None })
+                    .expect("bench serve is unbounded")
             })
             .collect();
         for rx in rxs {

@@ -2,23 +2,33 @@
 //!
 //! Every knob that used to be a scattered `SPADE_*` environment read
 //! or a per-layer constructor argument (kernel threads, tile
-//! geometry, gather path, shard count/affinity, batch size, metrics
-//! options) lives here as a plain field. [`EngineConfig::from_env`]
-//! parses the environment **once** at the process edge;
-//! [`EngineConfig::validate`] rejects bad values loudly instead of
-//! clamping; `EngineBuilder::build` installs the kernel slice of the
-//! config as the process default and hands back an
+//! geometry, gather path, autotuning, shard count/affinity, queue
+//! bounds, batch size, metrics options) lives here as a plain field.
+//! [`EngineConfig::from_env`] parses the environment **once** at the
+//! process edge; [`EngineConfig::validate`] rejects bad values loudly
+//! instead of clamping; `EngineBuilder::build` installs the kernel
+//! slice of the config as the process default and hands back an
 //! [`super::Engine`].
+//!
+//! ## Fleet config files
+//!
+//! [`EngineConfig::to_json`] / [`EngineConfig::from_json`] round-trip
+//! the whole config through [`crate::util::Json`], so a deployment
+//! can be driven by a checked-in file instead of environment
+//! variables. `spade serve --config PATH` merges **file < env < CLI**
+//! (the file is the base, [`EngineConfig::from_env_over`] lays the
+//! `SPADE_*` overrides on top, explicit CLI flags win last).
 
 use std::time::Duration;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::{BatcherConfig, CoordinatorConfig,
                          MetricsConfig, RoutePolicy, ShardAffinity};
 use crate::engine::Mode;
-use crate::kernel::{gather_available, InnerPath, KernelConfig,
-                    TileConfig};
+use crate::kernel::{gather_available, AutotuneMode, InnerPath,
+                    KernelConfig, TileConfig};
+use crate::util::Json;
 
 use super::env;
 
@@ -46,15 +56,30 @@ pub struct EngineConfig {
     /// Kernel pool size; `None` = available parallelism. Latched at
     /// first pool use.
     pub pool_workers: Option<usize>,
-    /// Tile/panel/steal-chunk geometry (strictly validated).
-    pub tile: TileConfig,
+    /// Explicit tile/panel/steal-chunk/k-chunk pin (strictly
+    /// validated). `None` (default) = untuned: built-in defaults, or
+    /// the autotuned winner when [`EngineConfig::autotune`] enables
+    /// probing. An explicit tile **always wins** over the autotuner.
+    pub tile: Option<TileConfig>,
     /// Inner-loop body: `Auto` (default), `Portable` (the old
     /// `SPADE_KERNEL_GATHER=0`), or a pinned body for benching.
     pub path: InnerPath,
+    /// First-use kernel autotuning ([`AutotuneMode`]; default `Off`).
+    /// `FirstUse` probes inline at the first GEMM of an untuned
+    /// (precision, shape class); `Warmup` probes only inside
+    /// [`super::Engine::warm_up`].
+    pub autotune: AutotuneMode,
     /// Planar serving shards (0 = auto).
     pub shards: usize,
     /// Batch → shard placement policy.
     pub affinity: ShardAffinity,
+    /// Per-shard accepted-but-uncompleted request bound; 0 (default)
+    /// = unbounded, the pre-backpressure behavior. When every shard
+    /// is full (fleet-wide pending ≥ shards × `max_queue`),
+    /// `submit` returns a typed
+    /// [`crate::coordinator::Overloaded`] error instead of queueing
+    /// without bound.
+    pub max_queue: usize,
     /// Dynamic batcher target size.
     pub batch: usize,
     /// Max time the first request of a batch may wait.
@@ -73,10 +98,12 @@ impl Default for EngineConfig {
             policy: RoutePolicy::EnergyFirst,
             threads: None,
             pool_workers: None,
-            tile: TileConfig::default(),
+            tile: None,
             path: InnerPath::Auto,
+            autotune: AutotuneMode::Off,
             shards: 0,
             affinity: ShardAffinity::LeastLoaded,
+            max_queue: 0,
             batch: b.target,
             max_wait: b.max_wait,
             metrics: MetricsConfig::default(),
@@ -96,13 +123,28 @@ impl EngineConfig {
     /// that variable (one absolute override for pool size and
     /// per-GEMM fan-out).
     pub fn from_env() -> Result<EngineConfig> {
-        let mut cfg = EngineConfig::default();
-        let threads = env::kernel_threads()?;
-        cfg.threads = threads;
-        cfg.pool_workers = threads;
-        cfg.tile = env::kernel_tile()?;
+        Self::from_env_over(EngineConfig::default())
+    }
+
+    /// Lay the `SPADE_*` environment overrides over an existing base
+    /// config (e.g. one loaded from a `--config` JSON file) and
+    /// validate the result — the middle layer of the
+    /// **file < env < CLI** merge order. Variables that are unset
+    /// leave the base untouched.
+    pub fn from_env_over(mut cfg: EngineConfig)
+                         -> Result<EngineConfig> {
+        if let Some(threads) = env::kernel_threads()? {
+            cfg.threads = Some(threads);
+            cfg.pool_workers = Some(threads);
+        }
+        if let Some(tile) = env::kernel_tile()? {
+            cfg.tile = Some(tile);
+        }
         if env::kernel_gather_disabled() {
             cfg.path = InnerPath::Portable;
+        }
+        if let Some(mode) = env::kernel_autotune()? {
+            cfg.autotune = mode;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -120,9 +162,9 @@ impl EngineConfig {
         ensure!(self.pool_workers != Some(0),
                 "pool_workers=0: the kernel pool needs at least one \
                  worker (omit the override for automatic sizing)");
-        self.tile
-            .validate()
-            .map_err(anyhow::Error::msg)?;
+        if let Some(tile) = &self.tile {
+            tile.validate().map_err(anyhow::Error::msg)?;
+        }
         if self.path == InnerPath::Gather {
             ensure!(gather_available(),
                     "inner path Gather requires AVX2, which this CPU \
@@ -151,6 +193,7 @@ impl EngineConfig {
             pool_workers: self.pool_workers,
             tile: self.tile,
             path: self.path,
+            autotune: self.autotune,
         }
     }
 
@@ -186,9 +229,308 @@ impl EngineConfig {
             policy: self.effective_policy(),
             shards: self.shards,
             affinity: self.affinity,
+            max_queue: self.max_queue,
             kernel: Some(self.kernel_config()),
             metrics: self.metrics.clone(),
         }
+    }
+
+    /// Parse an autotune-mode string (`off`, `first-use`, `warmup`)
+    /// — one grammar shared by config files, `SPADE_KERNEL_AUTOTUNE`
+    /// and the `--autotune` CLI flag.
+    pub fn parse_autotune(s: &str) -> Result<AutotuneMode> {
+        autotune_from_str(s.trim())
+    }
+
+    /// Serialize to the `spade-engine-config-v1` JSON document — the
+    /// fleet config-file format `spade serve --config PATH` consumes.
+    /// Durations are carried in integer microseconds, optional fields
+    /// as `null`; [`EngineConfig::from_json`] round-trips every field
+    /// (tested).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        let s = |v: &str| Json::Str(v.to_string());
+        let num = |v: usize| Json::Num(v as f64);
+        let opt_num = |v: Option<usize>| match v {
+            Some(v) => Json::Num(v as f64),
+            None => Json::Null,
+        };
+        m.insert("schema".into(), s("spade-engine-config-v1"));
+        m.insert("model".into(), s(&self.model));
+        m.insert("precision".into(), match self.precision {
+            Some(mode) => s(mode.tag()),
+            None => Json::Null,
+        });
+        m.insert("policy".into(), s(policy_str(self.policy)));
+        m.insert("threads".into(), opt_num(self.threads));
+        m.insert("pool_workers".into(), opt_num(self.pool_workers));
+        m.insert("tile".into(), match &self.tile {
+            None => Json::Null,
+            Some(t) => {
+                let mut tm = BTreeMap::new();
+                tm.insert("p16_panel".into(), num(t.p16_panel));
+                tm.insert("p32_panel".into(), num(t.p32_panel));
+                tm.insert("steal_rows".into(), num(t.steal_rows));
+                tm.insert("k_chunk".into(), num(t.k_chunk));
+                Json::Obj(tm)
+            }
+        });
+        m.insert("path".into(), s(path_str(self.path)));
+        m.insert("autotune".into(), s(autotune_str(self.autotune)));
+        m.insert("shards".into(), num(self.shards));
+        m.insert("affinity".into(), s(affinity_str(self.affinity)));
+        m.insert("max_queue".into(), num(self.max_queue));
+        m.insert("batch".into(), num(self.batch));
+        m.insert("max_wait_us".into(),
+                 num(self.max_wait.as_micros() as usize));
+        let mut mm = BTreeMap::new();
+        mm.insert("reservoir_capacity".into(),
+                  num(self.metrics.reservoir_capacity));
+        mm.insert("stats_json".into(),
+                  match &self.metrics.stats_json {
+                      Some(p) => s(&p.display().to_string()),
+                      None => Json::Null,
+                  });
+        mm.insert("stats_interval_ms".into(),
+                  num(self.metrics.stats_interval.as_millis()
+                      as usize));
+        m.insert("metrics".into(), Json::Obj(mm));
+        Json::Obj(m).to_string()
+    }
+
+    /// Parse a `spade-engine-config-v1` document. **Strict**: unknown
+    /// keys, wrong types and unknown enum strings are hard errors (a
+    /// typo'd fleet config must fail deployment loudly, exactly like
+    /// a typo'd tile spec), and the result is validated. Missing keys
+    /// keep their defaults, so a minimal file can set only what it
+    /// cares about.
+    pub fn from_json(src: &str) -> Result<EngineConfig> {
+        let j = Json::parse(src)
+            .map_err(|e| anyhow!("engine config JSON: {e}"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("engine config must be a JSON \
+                                    object"))?;
+        let mut cfg = EngineConfig::default();
+        let as_count = |key: &str, v: &Json| -> Result<usize> {
+            v.as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as usize)
+                .ok_or_else(|| anyhow!(
+                    "engine config {key:?}: expected a non-negative \
+                     integer, got {v}"))
+        };
+        for (key, v) in obj {
+            match key.as_str() {
+                "schema" => {
+                    let got = v.as_str().unwrap_or_default();
+                    ensure!(got == "spade-engine-config-v1",
+                            "engine config schema {got:?} is not \
+                             spade-engine-config-v1");
+                }
+                "model" => {
+                    cfg.model = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("model must be a \
+                                                string"))?
+                        .to_string();
+                }
+                "precision" => {
+                    cfg.precision = match v {
+                        Json::Null => None,
+                        _ => Some(mode_from_str(
+                            v.as_str().unwrap_or_default())?),
+                    };
+                }
+                "policy" => {
+                    cfg.policy = policy_from_str(
+                        v.as_str().unwrap_or_default())?;
+                }
+                "threads" => {
+                    cfg.threads = match v {
+                        Json::Null => None,
+                        _ => Some(as_count(key, v)?),
+                    };
+                }
+                "pool_workers" => {
+                    cfg.pool_workers = match v {
+                        Json::Null => None,
+                        _ => Some(as_count(key, v)?),
+                    };
+                }
+                "tile" => {
+                    cfg.tile = match v {
+                        Json::Null => None,
+                        Json::Obj(tm) => {
+                            let mut t = TileConfig::default();
+                            for (tk, tv) in tm {
+                                match tk.as_str() {
+                                    "p16_panel" => t.p16_panel =
+                                        as_count(tk, tv)?,
+                                    "p32_panel" => t.p32_panel =
+                                        as_count(tk, tv)?,
+                                    "steal_rows" => t.steal_rows =
+                                        as_count(tk, tv)?,
+                                    "k_chunk" => t.k_chunk =
+                                        as_count(tk, tv)?,
+                                    _ => anyhow::bail!(
+                                        "engine config tile has \
+                                         unknown key {tk:?}"),
+                                }
+                            }
+                            Some(t)
+                        }
+                        _ => anyhow::bail!(
+                            "engine config tile must be an object or \
+                             null"),
+                    };
+                }
+                "path" => {
+                    cfg.path = path_from_str(
+                        v.as_str().unwrap_or_default())?;
+                }
+                "autotune" => {
+                    cfg.autotune = autotune_from_str(
+                        v.as_str().unwrap_or_default())?;
+                }
+                "shards" => cfg.shards = as_count(key, v)?,
+                "affinity" => {
+                    cfg.affinity = affinity_from_str(
+                        v.as_str().unwrap_or_default())?;
+                }
+                "max_queue" => cfg.max_queue = as_count(key, v)?,
+                "batch" => cfg.batch = as_count(key, v)?,
+                "max_wait_us" => {
+                    cfg.max_wait = Duration::from_micros(
+                        as_count(key, v)? as u64);
+                }
+                "metrics" => {
+                    let mm = v.as_obj().ok_or_else(|| anyhow!(
+                        "engine config metrics must be an object"))?;
+                    for (mk, mv) in mm {
+                        match mk.as_str() {
+                            "reservoir_capacity" => {
+                                cfg.metrics.reservoir_capacity =
+                                    as_count(mk, mv)?;
+                            }
+                            "stats_json" => {
+                                cfg.metrics.stats_json = match mv {
+                                    Json::Null => None,
+                                    _ => Some(
+                                        mv.as_str()
+                                            .ok_or_else(|| anyhow!(
+                                                "stats_json must be \
+                                                 a string or null"))?
+                                            .into()),
+                                };
+                            }
+                            "stats_interval_ms" => {
+                                cfg.metrics.stats_interval =
+                                    Duration::from_millis(
+                                        as_count(mk, mv)? as u64);
+                            }
+                            _ => anyhow::bail!(
+                                "engine config metrics has unknown \
+                                 key {mk:?}"),
+                        }
+                    }
+                }
+                _ => anyhow::bail!(
+                    "engine config has unknown key {key:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Canonical string for a routing policy (config files, CLI).
+fn policy_str(p: RoutePolicy) -> &'static str {
+    match p {
+        RoutePolicy::EnergyFirst => "energy",
+        RoutePolicy::Balanced => "balanced",
+        RoutePolicy::AccuracyFirst => "accuracy",
+    }
+}
+
+fn policy_from_str(s: &str) -> Result<RoutePolicy> {
+    match s {
+        "energy" => Ok(RoutePolicy::EnergyFirst),
+        "balanced" => Ok(RoutePolicy::Balanced),
+        "accuracy" => Ok(RoutePolicy::AccuracyFirst),
+        _ => Err(anyhow!("unknown policy {s:?} (expected energy, \
+                          balanced or accuracy)")),
+    }
+}
+
+fn mode_from_str(s: &str) -> Result<Mode> {
+    match s {
+        "p8" => Ok(Mode::P8x4),
+        "p16" => Ok(Mode::P16x2),
+        "p32" => Ok(Mode::P32x1),
+        _ => Err(anyhow!("unknown precision {s:?} (expected p8, p16 \
+                          or p32)")),
+    }
+}
+
+fn path_str(p: InnerPath) -> &'static str {
+    match p {
+        InnerPath::Auto => "auto",
+        InnerPath::Portable => "portable",
+        InnerPath::Gather => "gather",
+        InnerPath::Hybrid => "hybrid",
+        InnerPath::Unblocked => "unblocked",
+    }
+}
+
+fn path_from_str(s: &str) -> Result<InnerPath> {
+    match s {
+        "auto" => Ok(InnerPath::Auto),
+        "portable" => Ok(InnerPath::Portable),
+        "gather" => Ok(InnerPath::Gather),
+        "hybrid" => Ok(InnerPath::Hybrid),
+        "unblocked" => Ok(InnerPath::Unblocked),
+        _ => Err(anyhow!("unknown inner path {s:?} (expected auto, \
+                          portable, gather, hybrid or unblocked)")),
+    }
+}
+
+/// Canonical string for an autotune mode (config files,
+/// `SPADE_KERNEL_AUTOTUNE`, `--autotune`).
+pub(super) fn autotune_str(m: AutotuneMode) -> &'static str {
+    match m {
+        AutotuneMode::Off => "off",
+        AutotuneMode::FirstUse => "first-use",
+        AutotuneMode::Warmup => "warmup",
+    }
+}
+
+/// Parse an autotune mode string (shared by the config file, the
+/// environment accessor and the CLI flag).
+pub(super) fn autotune_from_str(s: &str) -> Result<AutotuneMode> {
+    match s {
+        "off" => Ok(AutotuneMode::Off),
+        "first-use" => Ok(AutotuneMode::FirstUse),
+        "warmup" => Ok(AutotuneMode::Warmup),
+        _ => Err(anyhow!("unknown autotune mode {s:?} (expected off, \
+                          first-use or warmup)")),
+    }
+}
+
+fn affinity_str(a: ShardAffinity) -> &'static str {
+    match a {
+        ShardAffinity::LeastLoaded => "least-loaded",
+        ShardAffinity::PinnedMode => "pinned-mode",
+    }
+}
+
+fn affinity_from_str(s: &str) -> Result<ShardAffinity> {
+    match s {
+        "least-loaded" => Ok(ShardAffinity::LeastLoaded),
+        "pinned-mode" => Ok(ShardAffinity::PinnedMode),
+        _ => Err(anyhow!("unknown affinity {s:?} (expected \
+                          least-loaded or pinned-mode)")),
     }
 }
 
@@ -226,12 +568,18 @@ mod tests {
     #[test]
     fn validation_surfaces_tile_errors() {
         let mut c = EngineConfig::default();
-        c.tile.p16_panel = 0;
+        c.tile = Some(TileConfig { p16_panel: 0,
+                                   ..TileConfig::default() });
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("p16_panel"), "{err}");
         let mut c = EngineConfig::default();
-        c.tile.p32_panel = 0;
+        c.tile = Some(TileConfig { p32_panel: 0,
+                                   ..TileConfig::default() });
         assert!(c.validate().is_err());
+        // No pin -> nothing to validate: the default passes.
+        let mut c = EngineConfig::default();
+        c.tile = None;
+        c.validate().unwrap();
     }
 
     #[test]
@@ -251,17 +599,95 @@ mod tests {
     fn kernel_and_coordinator_slices_carry_the_fields() {
         let mut c = EngineConfig::default();
         c.threads = Some(3);
-        c.tile.steal_rows = 2;
+        c.tile = Some(TileConfig { steal_rows: 2,
+                                   ..TileConfig::default() });
+        c.autotune = AutotuneMode::Warmup;
         c.shards = 2;
+        c.max_queue = 64;
         c.batch = 7;
         c.affinity = ShardAffinity::PinnedMode;
         let kc = c.kernel_config();
         assert_eq!(kc.threads, Some(3));
-        assert_eq!(kc.tile.steal_rows, 2);
+        assert_eq!(kc.tile.unwrap().steal_rows, 2);
+        assert_eq!(kc.autotune, AutotuneMode::Warmup);
         let cc = c.coordinator_config();
         assert_eq!(cc.shards, 2);
+        assert_eq!(cc.max_queue, 64);
         assert_eq!(cc.batcher.target, 7);
         assert_eq!(cc.affinity, ShardAffinity::PinnedMode);
         assert_eq!(cc.kernel, Some(kc));
+    }
+
+    #[test]
+    fn json_round_trips_every_field() {
+        let mut c = EngineConfig::default();
+        c.model = "lenet5".into();
+        c.precision = Some(Mode::P16x2);
+        c.policy = RoutePolicy::Balanced;
+        c.threads = Some(6);
+        c.pool_workers = Some(4);
+        c.tile = Some(TileConfig { p16_panel: 48, p32_panel: 16,
+                                   steal_rows: 2, k_chunk: 256 });
+        c.path = InnerPath::Portable;
+        c.autotune = AutotuneMode::Warmup;
+        c.shards = 3;
+        c.affinity = ShardAffinity::PinnedMode;
+        c.max_queue = 128;
+        c.batch = 12;
+        c.max_wait = Duration::from_micros(2500);
+        c.metrics.reservoir_capacity = 99;
+        c.metrics.stats_json = Some("stats/out.json".into());
+        c.metrics.stats_interval = Duration::from_millis(250);
+
+        let doc = c.to_json();
+        let back = EngineConfig::from_json(&doc).unwrap();
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.precision, c.precision);
+        assert_eq!(back.policy, c.policy);
+        assert_eq!(back.threads, c.threads);
+        assert_eq!(back.pool_workers, c.pool_workers);
+        assert_eq!(back.tile, c.tile);
+        assert_eq!(back.path, c.path);
+        assert_eq!(back.autotune, c.autotune);
+        assert_eq!(back.shards, c.shards);
+        assert_eq!(back.affinity, c.affinity);
+        assert_eq!(back.max_queue, c.max_queue);
+        assert_eq!(back.batch, c.batch);
+        assert_eq!(back.max_wait, c.max_wait);
+        assert_eq!(back.metrics, c.metrics);
+        // Defaults (None tile, no stats path) round-trip too.
+        let d = EngineConfig::default();
+        let back = EngineConfig::from_json(&d.to_json()).unwrap();
+        assert_eq!(back.tile, None);
+        assert_eq!(back.precision, None);
+        assert_eq!(back.metrics.stats_json, None);
+        assert_eq!(back.autotune, AutotuneMode::Off);
+    }
+
+    #[test]
+    fn json_is_strict_and_partial_files_keep_defaults() {
+        // Unknown keys / enum strings / types fail loudly.
+        assert!(EngineConfig::from_json("{\"bogus\": 1}").is_err());
+        assert!(EngineConfig::from_json("{\"policy\": \"fast\"}")
+            .is_err());
+        assert!(EngineConfig::from_json("{\"batch\": \"many\"}")
+            .is_err());
+        assert!(EngineConfig::from_json(
+            "{\"tile\": {\"nope\": 1}}").is_err());
+        assert!(EngineConfig::from_json("[1, 2]").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"schema\": \"other-v9\"}").is_err());
+        // Invalid *values* are caught by validate (batch 0).
+        assert!(EngineConfig::from_json("{\"batch\": 0}").is_err());
+        // A minimal file overrides only what it names.
+        let c = EngineConfig::from_json(
+            "{\"shards\": 2, \"autotune\": \"first-use\", \
+              \"max_queue\": 16}")
+            .unwrap();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.autotune, AutotuneMode::FirstUse);
+        assert_eq!(c.max_queue, 16);
+        assert_eq!(c.model, EngineConfig::default().model);
+        assert_eq!(c.batch, EngineConfig::default().batch);
     }
 }

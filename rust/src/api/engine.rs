@@ -22,11 +22,12 @@ use anyhow::Result;
 
 use crate::coordinator::{Coordinator, CoordinatorConfig,
                          InferenceRequest, InferenceResponse, Metrics,
-                         MetricsConfig, RoutePolicy, ServeBackend,
-                         ShardAffinity};
+                         MetricsConfig, Overloaded, RoutePolicy,
+                         ServeBackend, ShardAffinity};
 use crate::engine::Mode;
-use crate::kernel::{self, DecodedPlan, DispatchStats, InnerPath,
-                    KernelConfig, TileConfig};
+use crate::kernel::{self, autotune, AutotuneMode, DecodedPlan,
+                    DispatchStats, InnerPath, KernelConfig,
+                    TileConfig};
 use crate::nn::{Model, Session};
 
 use super::config::EngineConfig;
@@ -92,9 +93,10 @@ impl EngineBuilder {
         self
     }
 
-    /// Tile geometry as a typed value.
+    /// Pin the tile geometry to a typed value — an explicit tile
+    /// always wins over the autotuner.
     pub fn tile(mut self, tile: TileConfig) -> Self {
-        self.cfg.tile = tile;
+        self.cfg.tile = Some(tile);
         self
     }
 
@@ -103,8 +105,8 @@ impl EngineBuilder {
     /// surface here rather than at build time so the offending spec
     /// is still in hand.
     pub fn tile_spec(mut self, spec: &str) -> Result<Self> {
-        self.cfg.tile =
-            TileConfig::parse(spec).map_err(anyhow::Error::msg)?;
+        self.cfg.tile = Some(
+            TileConfig::parse(spec).map_err(anyhow::Error::msg)?);
         Ok(self)
     }
 
@@ -112,6 +114,22 @@ impl EngineBuilder {
     /// `SPADE_KERNEL_GATHER=0`).
     pub fn inner_path(mut self, path: InnerPath) -> Self {
         self.cfg.path = path;
+        self
+    }
+
+    /// First-use kernel autotuning mode (default
+    /// [`AutotuneMode::Off`]). Pair [`AutotuneMode::Warmup`] with
+    /// [`Engine::warm_up`] so serving never pays an inline probe.
+    pub fn autotune(mut self, mode: AutotuneMode) -> Self {
+        self.cfg.autotune = mode;
+        self
+    }
+
+    /// Per-shard pending-request bound (0 = unbounded). When the
+    /// whole fleet is full, `submit` returns a typed [`Overloaded`]
+    /// error instead of queueing without bound.
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.cfg.max_queue = n;
         self
     }
 
@@ -210,6 +228,47 @@ impl Engine {
     /// The precision this engine quantizes to by default.
     pub fn default_mode(&self) -> Mode {
         self.cfg.default_mode()
+    }
+
+    /// Pre-tune and pre-decode for the given GEMM shapes so the first
+    /// real request pays **no probe and no lazy table build**:
+    ///
+    /// * forces the lazily-built kernel LUTs (decode, P8 product, and
+    ///   the P16 hybrid table when the path can reach it);
+    /// * runs the autotune micro-probe for every untuned
+    ///   (precision, shape class) the shapes cover — the engine's
+    ///   pinned precision, or all three when unpinned.
+    ///
+    /// Returns the number of probes actually run (0 when everything
+    /// was already tuned, when a tile is explicitly pinned, or when
+    /// [`AutotuneMode::Off`] — off leaves the defaults untouched).
+    /// After a warm-up covering the serve's shapes, the kernel's
+    /// `autotune_probes` counter stays flat under traffic
+    /// (`tests/api_facade.rs` asserts it).
+    pub fn warm_up(&self, shapes: &[(usize, usize, usize)]) -> usize {
+        // Lazy tables: build them now, not under the first request.
+        let _ = kernel::p8_prod_lut();
+        let _ = kernel::p8_decode_lut();
+        let _ = kernel::p16_decode_lut();
+        if self.kcfg.path == InnerPath::Hybrid
+            || self.kcfg.autotune != AutotuneMode::Off
+        {
+            let _ = kernel::p16_hyb_lut();
+        }
+        let modes: Vec<Mode> = match self.cfg.precision {
+            Some(mode) => vec![mode],
+            None => Mode::ALL.to_vec(),
+        };
+        let mut probes = 0usize;
+        for &(m, k, n) in shapes {
+            for mode in &modes {
+                if autotune::ensure_tuned(&self.kcfg, mode.format(),
+                                          m, k, n) {
+                    probes += 1;
+                }
+            }
+        }
+        probes
     }
 
     /// Decode an f32 matrix into a planar operand plan in the
@@ -315,9 +374,13 @@ impl ServeHandle {
         self.coord.input_len()
     }
 
-    /// Submit a request; returns the response receiver.
+    /// Submit a request; returns the response receiver, or a typed
+    /// [`Overloaded`] error when the configured
+    /// `max_queue` bound is hit (every shard full). With the default
+    /// unbounded queues this never fails.
     pub fn submit(&self, req: InferenceRequest)
-                  -> std::sync::mpsc::Receiver<InferenceResponse> {
+                  -> Result<std::sync::mpsc::Receiver<InferenceResponse>,
+                            Overloaded> {
         self.coord.submit(req)
     }
 
@@ -452,6 +515,7 @@ fn render_stats(m: &Metrics, elapsed: Duration) -> String {
     s.push_str(&format!("  \"elapsed_s\": {:.3},\n",
                         elapsed.as_secs_f64()));
     s.push_str(&format!("  \"requests\": {},\n", m.total_requests));
+    s.push_str(&format!("  \"rejected\": {},\n", m.rejected));
     s.push_str(&format!("  \"mean_batch\": {:.3},\n", m.mean_batch()));
 
     const PCTS: [f64; 3] = [50.0, 95.0, 99.0];
@@ -497,9 +561,10 @@ fn render_stats(m: &Metrics, elapsed: Duration) -> String {
     };
     s.push_str(&format!(
         "  \"kernel\": {{\"gemms\": {}, \"chunks\": {}, \
-         \"stolen_chunks\": {}, \"pool_workers\": {}, \
-         \"pool_jobs\": {}}}\n",
-        k.gemms, k.chunks, k.stolen_chunks, pool_workers, pool_jobs));
+         \"stolen_chunks\": {}, \"autotune_probes\": {}, \
+         \"pool_workers\": {}, \"pool_jobs\": {}}}\n",
+        k.gemms, k.chunks, k.stolen_chunks, k.autotune_probes,
+        pool_workers, pool_jobs));
     s.push_str("}\n");
     s
 }
@@ -517,6 +582,7 @@ mod tests {
         m.record_shard(0, 4);
         m.record_shard_latency(0, 120);
         m.record_shard(1, 4);
+        m.record_rejected();
         let body = render_stats(&m, Duration::from_millis(1500));
         let j = Json::parse(&body).unwrap_or_else(|e| {
             panic!("stats dump is not valid JSON ({e}):\n{body}")
@@ -532,6 +598,10 @@ mod tests {
                    Some(4));
         // shard 1 has no latency samples -> nulls, still valid JSON
         assert_eq!(shards[1].get("p50_us"), Some(&Json::Null));
-        assert!(j.get("kernel").unwrap().get("gemms").is_some());
+        let kernel = j.get("kernel").unwrap();
+        assert!(kernel.get("gemms").is_some());
+        assert!(kernel.get("autotune_probes").is_some());
+        // Backpressure rejects ride along for dashboards.
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(1));
     }
 }

@@ -11,15 +11,16 @@
 //! | variable | accessor | meaning |
 //! |---|---|---|
 //! | `SPADE_KERNEL_THREADS` | [`kernel_threads`] | absolute worker count (pool + per-GEMM fan-out) |
-//! | `SPADE_KERNEL_TILE` | [`kernel_tile`] | tile spec, strictly parsed ([`TileConfig::parse`]) |
+//! | `SPADE_KERNEL_TILE` | [`kernel_tile`] | explicit tile pin, strictly parsed ([`TileConfig::parse`]; disables autotuning of the tile) |
 //! | `SPADE_KERNEL_GATHER` | [`kernel_gather_disabled`] | `0`/`off` pins the portable P8 loop |
+//! | `SPADE_KERNEL_AUTOTUNE` | [`kernel_autotune`] | `off` / `first-use` / `warmup` first-use autotuner mode |
 //! | `SPADE_ARTIFACTS` | [`artifacts_override`] | artifact directory override |
 //! | `SPADE_BENCH_QUICK` | [`bench_quick`] | hotpath bench smoke mode |
 //! | `SPADE_FIG4_LIMIT` | [`fig4_limit`] | Fig. 4 bench image cap |
 
 use anyhow::Result;
 
-use crate::kernel::TileConfig;
+use crate::kernel::{AutotuneMode, TileConfig};
 
 /// Raw read; empty values count as unset (an `X=` line in a shell
 /// wrapper should behave like no override).
@@ -42,15 +43,30 @@ pub fn kernel_threads() -> Result<Option<usize>> {
     }
 }
 
-/// `SPADE_KERNEL_TILE`: tile parameters, strictly parsed (zero or
-/// overflowing panels, `steal_rows=0`, unknown keys and malformed
-/// fragments are all errors — see [`TileConfig::parse`]).
-pub fn kernel_tile() -> Result<TileConfig> {
+/// `SPADE_KERNEL_TILE`: an explicit tile pin, strictly parsed (zero
+/// or overflowing panels, `steal_rows=0`/`k_chunk=0`, unknown keys
+/// and malformed fragments are all errors — see
+/// [`TileConfig::parse`]). `None` when unset — the tile stays
+/// untuned (defaults, or the autotuner when enabled); a set spec is
+/// a pin the autotuner never overrides.
+pub fn kernel_tile() -> Result<Option<TileConfig>> {
     match raw("SPADE_KERNEL_TILE") {
-        None => Ok(TileConfig::default()),
-        Some(s) => TileConfig::parse(&s).map_err(|e| {
+        None => Ok(None),
+        Some(s) => TileConfig::parse(&s).map(Some).map_err(|e| {
             anyhow::anyhow!("SPADE_KERNEL_TILE: {e}")
         }),
+    }
+}
+
+/// `SPADE_KERNEL_AUTOTUNE`: first-use autotuner mode (`off`,
+/// `first-use`, `warmup`). Unknown values are a hard error, like
+/// every other engine knob.
+pub fn kernel_autotune() -> Result<Option<AutotuneMode>> {
+    match raw("SPADE_KERNEL_AUTOTUNE") {
+        None => Ok(None),
+        Some(s) => super::config::autotune_from_str(s.trim())
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("SPADE_KERNEL_AUTOTUNE: {e}")),
     }
 }
 

@@ -60,6 +60,7 @@ pub use engine::{Engine, EngineBuilder, ServeHandle};
 
 // The types an engine-facade caller composes with, re-exported so a
 // typical edge only imports `spade::api::*` plus the model layer.
-pub use crate::coordinator::{MetricsConfig, RoutePolicy, ServeBackend,
-                             ShardAffinity};
-pub use crate::kernel::{InnerPath, KernelConfig, TileConfig};
+pub use crate::coordinator::{MetricsConfig, Overloaded, RoutePolicy,
+                             ServeBackend, ShardAffinity};
+pub use crate::kernel::{AutotuneMode, InnerPath, KernelConfig,
+                        TileConfig};

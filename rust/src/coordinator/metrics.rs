@@ -167,6 +167,11 @@ fn seed_for(id: u64) -> u64 {
 pub struct Metrics {
     /// Total requests served.
     pub total_requests: u64,
+    /// Requests rejected at submit by the backpressure bound
+    /// ([`super::CoordinatorConfig::max_queue`]) — every shard was
+    /// full. Surfaced in the summary and the `--stats-json` dump so
+    /// overload is observable, not silent.
+    pub rejected: u64,
     /// Latency reservoir (us) per mode.
     pub latencies_us: BTreeMap<&'static str, Reservoir>,
     /// Sum of batch sizes over per-request records (for the mean).
@@ -199,6 +204,7 @@ impl Metrics {
     pub fn with_capacity(cap: usize) -> Metrics {
         Metrics {
             total_requests: 0,
+            rejected: 0,
             latencies_us: BTreeMap::new(),
             batch_size_sum: 0,
             batch_size_count: 0,
@@ -227,6 +233,11 @@ impl Metrics {
             .record(latency_us);
         self.batch_size_sum += batch_size as u64;
         self.batch_size_count += 1;
+    }
+
+    /// Record one request rejected by the backpressure bound.
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
     }
 
     /// Record one batch of `batch_size` requests landing on `shard`
@@ -281,6 +292,10 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let mut s = format!("requests: {}, mean batch {:.1}\n",
                             self.total_requests, self.mean_batch());
+        if self.rejected > 0 {
+            s += &format!("  rejected (overload): {}\n",
+                          self.rejected);
+        }
         for (mode, r) in &self.latencies_us {
             let p50 = r.percentile(50.0).unwrap_or(0);
             let p99 = r.percentile(99.0).unwrap_or(0);
@@ -346,6 +361,17 @@ mod tests {
         assert!(s.contains("requests: 1"));
         // no shard line unless the sharded engine recorded one
         assert!(!s.contains("shards:"));
+    }
+
+    #[test]
+    fn rejected_counter_and_summary_line() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("rejected"),
+                "no reject line until something is rejected");
+        m.record_rejected();
+        m.record_rejected();
+        assert_eq!(m.rejected, 2);
+        assert!(m.summary().contains("rejected (overload): 2"));
     }
 
     #[test]

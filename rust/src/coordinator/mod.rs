@@ -108,6 +108,16 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// Batch → shard placement policy (planar engine only).
     pub affinity: ShardAffinity,
+    /// Per-shard bound on accepted-but-uncompleted requests; 0
+    /// (default) = unbounded, the pre-backpressure behavior. When the
+    /// whole fleet is full — pending requests ≥ shards × `max_queue`
+    /// (the PJRT engine counts as one shard) —
+    /// [`Coordinator::submit`] rejects with a typed [`Overloaded`]
+    /// instead of queueing without bound, and the reject is counted
+    /// in [`Metrics::rejected`]. The bound is *soft* by one in-flight
+    /// submit per racing caller thread: admission checks then
+    /// increments without a lock on the submit path.
+    pub max_queue: usize,
     /// Explicit kernel config for the shard sessions' GEMMs; `None`
     /// uses the installed process default
     /// ([`crate::kernel::settings::current`]).
@@ -125,11 +135,37 @@ impl Default for CoordinatorConfig {
             policy: RoutePolicy::EnergyFirst,
             shards: 0,
             affinity: ShardAffinity::LeastLoaded,
+            max_queue: 0,
             kernel: None,
             metrics: MetricsConfig::default(),
         }
     }
 }
+
+/// Typed backpressure error: every shard's queue is full, so the
+/// request was rejected instead of enqueued
+/// ([`CoordinatorConfig::max_queue`]). Carries the observed load so
+/// callers can log or shed intelligently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Accepted-but-uncompleted requests at rejection time.
+    pub pending: usize,
+    /// The fleet-wide bound (shards × max_queue).
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        write!(f,
+               "coordinator overloaded: {} pending requests at the \
+                fleet capacity of {} (every shard full) — retry \
+                later or raise max_queue",
+               self.pending, self.capacity)
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 /// Which engine [`Coordinator::start_auto`] selected.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,6 +187,12 @@ pub struct Coordinator {
     /// Shared metrics.
     pub metrics: Arc<Mutex<Metrics>>,
     input_len: usize,
+    /// Accepted-but-uncompleted requests (incremented at submit,
+    /// decremented by the executing engine after replies are
+    /// stamped) — the backpressure signal.
+    pending: Arc<AtomicUsize>,
+    /// Fleet-wide pending bound (shards × max_queue; 0 = unbounded).
+    capacity: usize,
 }
 
 impl Coordinator {
@@ -167,6 +209,11 @@ impl Coordinator {
         let batcher_cfg = cfg.batcher.clone();
         let policy = cfg.policy;
         let model = cfg.model.clone();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let pending_w = pending.clone();
+        // The PJRT engine is one executable-owning worker: its fleet
+        // capacity is one shard's queue bound.
+        let capacity = cfg.max_queue;
 
         let worker = std::thread::spawn(move || {
             // Build the PJRT runtime on this thread.
@@ -198,7 +245,7 @@ impl Coordinator {
                 Ok((exes, input_len)) => {
                     let _ = setup_tx.send(Ok(input_len));
                     pjrt_worker_loop(rx, exes, batcher_cfg, policy,
-                                     metrics_w);
+                                     metrics_w, pending_w);
                 }
                 Err(e) => {
                     let _ = setup_tx.send(Err(e));
@@ -209,7 +256,8 @@ impl Coordinator {
         let input_len = setup_rx
             .recv()
             .context("coordinator worker died during setup")??;
-        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
+        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
+                         pending, capacity })
     }
 
     /// Start the sharded planar engine on an in-memory [`Model`] — no
@@ -230,8 +278,10 @@ impl Coordinator {
         let policy = cfg.policy;
         let affinity = cfg.affinity;
         let kernel_cfg = cfg.kernel;
+        let pending = Arc::new(AtomicUsize::new(0));
 
         let nshards = effective_shards(cfg.shards);
+        let capacity = cfg.max_queue.saturating_mul(nshards);
         let shards: Vec<ShardHandle> = (0..nshards)
             .map(|sid| {
                 let m = model.clone();
@@ -239,6 +289,7 @@ impl Coordinator {
                 let (stx, srx) = mpsc::channel::<ShardJob>();
                 let inflight = Arc::new(AtomicUsize::new(0));
                 let inflight_w = inflight.clone();
+                let pending_w = pending.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("spade-shard-{sid}"))
                     .spawn(move || {
@@ -247,7 +298,7 @@ impl Coordinator {
                             sess.set_kernel_config(kc);
                         }
                         shard_loop(srx, sess, sid, inflight_w,
-                                   metrics);
+                                   pending_w, metrics);
                     })
                     .expect("spawn coordinator shard");
                 ShardHandle { tx: stx, inflight, handle }
@@ -257,7 +308,8 @@ impl Coordinator {
         let worker = std::thread::spawn(move || {
             planar_front_loop(rx, shards, bcfg, policy, affinity);
         });
-        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len })
+        Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
+                         pending, capacity })
     }
 
     /// Start serving `cfg.model` on the best engine available on this
@@ -299,27 +351,45 @@ impl Coordinator {
         self.input_len
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the response, or a
+    /// typed [`Overloaded`] error when the configured queue bound
+    /// ([`CoordinatorConfig::max_queue`]) is hit — every shard full.
+    /// With the default unbounded queues this never fails. Rejects
+    /// are counted in [`Metrics::rejected`].
     ///
     /// Panics (in the calling thread) if the input length does not
     /// match [`Coordinator::input_len`] — a malformed request must
     /// neither kill the shared worker nor silently produce logits.
     pub fn submit(&self, req: InferenceRequest)
-                  -> mpsc::Receiver<InferenceResponse> {
+                  -> Result<mpsc::Receiver<InferenceResponse>,
+                            Overloaded> {
         assert_eq!(req.input.len(), self.input_len,
                    "request {}: input length {} != model input {}",
                    req.id, req.input.len(), self.input_len);
+        if self.capacity > 0 {
+            let now = self.pending.load(Ordering::Acquire);
+            if now >= self.capacity {
+                self.metrics.lock().unwrap().record_rejected();
+                return Err(Overloaded { pending: now,
+                                        capacity: self.capacity });
+            }
+        }
+        self.pending.fetch_add(1, Ordering::AcqRel);
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Job::Infer(req, Instant::now(), tx))
             .expect("coordinator worker gone");
-        rx
+        Ok(rx)
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit and wait. An [`Overloaded`]
+    /// reject surfaces as an error (callers that want to retry should
+    /// use [`Coordinator::submit`] and match on the typed error).
     pub fn infer(&self, req: InferenceRequest)
                  -> Result<InferenceResponse> {
-        self.submit(req).recv().context("worker dropped request")
+        self.submit(req)?
+            .recv()
+            .context("worker dropped request")
     }
 
     /// Stop the worker and join it.
@@ -416,10 +486,11 @@ fn batching_loop(rx: mpsc::Receiver<Job>, bcfg: BatcherConfig,
 fn pjrt_worker_loop(rx: mpsc::Receiver<Job>,
                     exes: BTreeMap<(Mode, usize), Executable>,
                     bcfg: BatcherConfig, policy: RoutePolicy,
-                    metrics: Arc<Mutex<Metrics>>) {
+                    metrics: Arc<Mutex<Metrics>>,
+                    pending: Arc<AtomicUsize>) {
     let router = Router::new(policy);
     batching_loop(rx, bcfg, |batch| {
-        run_pjrt_batch_job(batch, &exes, &router, &metrics);
+        run_pjrt_batch_job(batch, &exes, &router, &metrics, &pending);
     });
 }
 
@@ -485,13 +556,16 @@ fn dispatch_batch(batch: Batch<Pending>, shards: &[ShardHandle],
 /// [`Session`] — weight plans decoded on first use, reused forever.
 fn shard_loop(rx: mpsc::Receiver<ShardJob>, mut sess: Session<'static>,
               shard: usize, inflight: Arc<AtomicUsize>,
+              pending: Arc<AtomicUsize>,
               metrics: Arc<Mutex<Metrics>>) {
     while let Ok((items, mode)) = rx.recv() {
         let n = items.len();
         let outputs = run_planar_batch(&items, mode, &mut sess);
         // Publish idleness before replying: a caller reacting to its
-        // response must observe this shard as free again.
+        // response must observe this shard as free again (both the
+        // shard-load signal and the fleet backpressure counter).
         inflight.fetch_sub(n, Ordering::AcqRel);
+        pending.fetch_sub(n, Ordering::AcqRel);
         // Stamp latencies before taking the metrics lock, and send
         // replies after releasing it: shards must not serialize their
         // reply path (or inflate each other's latency samples) on the
@@ -524,7 +598,8 @@ fn shard_loop(rx: mpsc::Receiver<ShardJob>, mut sess: Session<'static>,
 fn run_pjrt_batch_job(batch: Batch<Pending>,
                       exes: &BTreeMap<(Mode, usize), Executable>,
                       router: &Router,
-                      metrics: &Arc<Mutex<Metrics>>) {
+                      metrics: &Arc<Mutex<Metrics>>,
+                      pending: &Arc<AtomicUsize>) {
     let items = batch.items;
     if items.is_empty() {
         return;
@@ -535,6 +610,7 @@ fn run_pjrt_batch_job(batch: Batch<Pending>,
     let n = items.len();
 
     let outputs = run_pjrt_batch(&items, mode, exes);
+    pending.fetch_sub(n, Ordering::AcqRel);
 
     let mut m = metrics.lock().unwrap();
     for ((r, t0, tx), logits) in items.into_iter().zip(outputs) {
@@ -734,11 +810,13 @@ mod tests {
                 .iter()
                 .enumerate()
                 .map(|(i, inp)| {
-                    coord.submit(InferenceRequest {
-                        id: i as u64,
-                        input: inp.clone(),
-                        mode: None,
-                    })
+                    coord
+                        .submit(InferenceRequest {
+                            id: i as u64,
+                            input: inp.clone(),
+                            mode: None,
+                        })
+                        .unwrap()
                 })
                 .collect();
             let out = rxs
@@ -832,6 +910,70 @@ mod tests {
                 assert_eq!(reqs, 0, "shard {i} should be idle");
             }
         }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_every_shard_is_full() {
+        // One shard, max_queue 2, and a batcher that holds requests
+        // (large target, long deadline): the first two submits are
+        // accepted and *stay pending* inside the batch window, so the
+        // third hits the fleet bound and gets the typed reject. The
+        // accepted requests still complete at shutdown (the batcher
+        // flushes on drain), and the reject is counted.
+        let cfg = CoordinatorConfig {
+            shards: 1,
+            max_queue: 2,
+            batcher: BatcherConfig {
+                target: 64,
+                max_wait: Duration::from_secs(30),
+            },
+            ..Default::default()
+        };
+        let coord =
+            Coordinator::start_with_model(tiny_model(), cfg).unwrap();
+        let req = |id: u64| InferenceRequest {
+            id,
+            input: vec![0.25; 16],
+            mode: None,
+        };
+        let rx0 = coord.submit(req(0)).unwrap();
+        let rx1 = coord.submit(req(1)).unwrap();
+        let err = coord.submit(req(2)).unwrap_err();
+        assert_eq!(err, Overloaded { pending: 2, capacity: 2 });
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        // infer() surfaces the same reject as an error.
+        assert!(coord.infer(req(3)).is_err());
+        let m = coord.shutdown(); // flushes the held batch
+        assert_eq!(rx0.recv().unwrap().id, 0);
+        assert_eq!(rx1.recv().unwrap().id, 1);
+        assert_eq!(m.total_requests, 2);
+        assert_eq!(m.rejected, 2);
+        assert!(m.summary().contains("rejected (overload): 2"));
+    }
+
+    #[test]
+    fn unbounded_default_never_rejects() {
+        // max_queue 0 keeps the exact pre-backpressure behavior even
+        // under a burst far bigger than any batch window.
+        let coord = Coordinator::start_with_model(
+            tiny_model(), CoordinatorConfig::default()).unwrap();
+        let rxs: Vec<_> = (0..64u64)
+            .map(|id| {
+                coord
+                    .submit(InferenceRequest {
+                        id,
+                        input: vec![0.1; 16],
+                        mode: None,
+                    })
+                    .expect("unbounded submit must always accept")
+            })
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.total_requests, 64);
+        assert_eq!(m.rejected, 0);
     }
 
     #[test]

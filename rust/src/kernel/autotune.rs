@@ -1,0 +1,499 @@
+//! First-use `TileConfig` autotuner: micro-probe, candidate grid,
+//! deterministic winner selection.
+//!
+//! PR 3 gave the kernel a runtime-tunable tile → panel → lane
+//! hierarchy but ran it on fixed, hand-picked defaults. This module
+//! closes the loop: a **micro-probe** times a small candidate grid of
+//! [`TileConfig`] (P16/P32 panel widths, steal chunk, k-chunk depth)
+//! × [`InnerPath`] (AVX2 gather on/off where the CPU has it, the P16
+//! hybrid product LUT behind a margin) per **(precision,
+//! shape class)**, and caches the winner in a process-wide table
+//! ([`super::settings`]). Shapes are classified coarsely
+//! ([`ShapeClass`]: skinny / square / deep-k) because panel and chunk
+//! choices depend on the *regime* a GEMM is in, not its exact
+//! dimensions — and a coarse key means a handful of probes tunes the
+//! whole process.
+//!
+//! ## When the tuner runs ([`AutotuneMode`])
+//!
+//! * [`AutotuneMode::Off`] (default) — never; untouched defaults, the
+//!   pre-autotuner behavior.
+//! * [`AutotuneMode::FirstUse`] — lazily, the first time a
+//!   (precision, class) pair is dispatched; the probe (a few small
+//!   timed GEMMs) runs inline once and every later GEMM of that pair
+//!   reuses the cached winner.
+//! * [`AutotuneMode::Warmup`] — only inside
+//!   [`crate::api::Engine::warm_up`]: serving edges probe before
+//!   traffic arrives and the request path never pays a probe
+//!   (asserted via the [`probes`] counter in `tests/api_facade.rs`).
+//!
+//! An **explicit tile always wins**: a `Some` in
+//! [`KernelConfig::tile`] (builder `tile()`/`tile_spec()`,
+//! `SPADE_KERNEL_TILE`) bypasses the tuner entirely, and an explicit
+//! non-`Auto` [`KernelConfig::path`] pin overrides the tuned path
+//! while still taking the tuned tile.
+//!
+//! ## Determinism
+//!
+//! Timing is inherently noisy, so the *selection* is isolated from
+//! the *measurement*: [`pick_winner`] is a pure function from
+//! candidate costs to a winner (strict-less-than over
+//! margin-adjusted costs, ties resolved to the earliest candidate —
+//! the untouched default is always candidate 0). The same measured
+//! costs therefore always produce the same winner, which is what the
+//! determinism tests pin down; and every candidate is bit-identical
+//! by construction (exact integer accumulation, one rounding), so a
+//! noisy probe can cost a little speed, never a different answer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::posit::{from_f64, PositFormat, P16_FMT, P8_FMT};
+use crate::util::SplitMix64;
+
+use super::gemm;
+use super::plan::DecodedPlan;
+use super::settings::{self, KernelConfig};
+use super::simd::{gather_available, InnerPath, TileConfig};
+
+/// When the autotuner is allowed to probe. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AutotuneMode {
+    /// Never probe; run the built-in defaults (or the explicit tile).
+    Off,
+    /// Probe inline on the first GEMM of an untuned
+    /// (precision, shape class); cache the winner process-wide.
+    FirstUse,
+    /// Probe only during [`crate::api::Engine::warm_up`]; a GEMM of an
+    /// untuned pair runs the defaults rather than paying an inline
+    /// probe (predictable serve latency).
+    Warmup,
+}
+
+/// Coarse GEMM shape regimes — the tuning key alongside the
+/// precision. Exact dimensions don't matter to panel/chunk choices;
+/// the regime does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShapeClass {
+    /// Few output rows or columns (GEMV-ish serving traffic): panel
+    /// residency is cheap, dispatch granularity matters.
+    Skinny,
+    /// Balanced dimensions: the classic blocked-GEMM regime.
+    Square,
+    /// Reduction much deeper than the output is wide: A/B streaming
+    /// and k-chunking dominate.
+    DeepK,
+}
+
+/// Output-dimension bound for [`ShapeClass::Skinny`].
+const SKINNY_MAX: usize = 8;
+
+/// Minimum k for [`ShapeClass::DeepK`] (and k must also dominate the
+/// output dimensions).
+const DEEP_K_MIN: usize = 512;
+
+/// Classify an m×k×n GEMM into its tuning regime.
+pub fn classify(m: usize, k: usize, n: usize) -> ShapeClass {
+    let mn = m.max(n).max(1);
+    if k >= DEEP_K_MIN && k >= 2 * mn {
+        ShapeClass::DeepK
+    } else if m.min(n) <= SKINNY_MAX {
+        ShapeClass::Skinny
+    } else {
+        ShapeClass::Square
+    }
+}
+
+/// A tuned winner: the tile geometry and inner path to dispatch with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuned {
+    /// Winning tile geometry.
+    pub tile: TileConfig,
+    /// Winning inner path (`Auto` unless a specific body won).
+    pub path: InnerPath,
+}
+
+/// One probe candidate: a configuration plus the relative advantage
+/// (in percent) it must demonstrate over the incumbent to win.
+/// Candidate 0 of every grid is the untouched default with margin 0,
+/// so "no measurable difference" always resolves to the default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Tile geometry under test.
+    pub tile: TileConfig,
+    /// Inner path under test.
+    pub path: InnerPath,
+    /// Required advantage in percent: the candidate's cost is
+    /// inflated by this much before comparison, so e.g. 10 means it
+    /// only wins with a ≥ 1.1x measured speedup (the P16 hybrid LUT
+    /// contract).
+    pub margin_pct: u32,
+}
+
+/// Noise floor for every non-default candidate: a challenger must
+/// beat the incumbent default by this margin, so ordinary timing
+/// jitter between genuinely indistinguishable configurations cannot
+/// install a non-default winner (selection ties already resolve to
+/// the default; this extends the same bias to near-ties).
+const NOISE_MARGIN_PCT: u32 = 3;
+
+impl Candidate {
+    fn new(tile: TileConfig, path: InnerPath) -> Candidate {
+        Candidate { tile, path, margin_pct: NOISE_MARGIN_PCT }
+    }
+}
+
+/// Process-wide probe counter (one per [`probe`] run, i.e. per grid
+/// timed — not per candidate). `Engine::warm_up` tests assert on it:
+/// after warm-up, serving must not move it.
+static PROBES: AtomicU64 = AtomicU64::new(0);
+
+/// Total autotune probes run since process start. Monotonic; surfaced
+/// through [`super::gemm::counters`] and the `--stats-json` dump.
+pub fn probes() -> u64 {
+    PROBES.load(Ordering::Relaxed)
+}
+
+/// The candidate grid for one (precision, shape class). Kept small —
+/// a probe must cost milliseconds, not seconds — and **every
+/// candidate must be distinguishable at that class's probe shape**:
+/// panel sweeps only run for the Square class (the skinny/deep-k
+/// probe shapes have too few output columns, so wider panels would
+/// clamp to byte-identical work and the "winner" would be pure
+/// noise); the k-chunk depth is only swept where deep reductions
+/// make it reachable; the AVX2 gather body is only a candidate where
+/// the CPU has it; and the P16 hybrid LUT carries its ≥ 1.1x margin.
+pub fn candidates(fmt: PositFormat, class: ShapeClass)
+                  -> Vec<Candidate> {
+    let d = TileConfig::DEFAULT;
+    // Candidate 0: the untouched default (Auto path), margin 0 — the
+    // incumbent every challenger must beat by NOISE_MARGIN_PCT.
+    let mut v = vec![Candidate { tile: d, path: InnerPath::Auto,
+                                 margin_pct: 0 }];
+    if fmt == P8_FMT {
+        // Tile geometry barely touches the P8 LUT-gather lanes; the
+        // probe decides the gather-vs-portable body question.
+        v.push(Candidate::new(d, InnerPath::Portable));
+        if gather_available() {
+            v.push(Candidate::new(d, InnerPath::Gather));
+        }
+    } else if class == ShapeClass::Square {
+        // Panel sweeps bracket the default from both sides; the
+        // Square probe's column count exceeds every candidate panel,
+        // so each one does genuinely different blocking.
+        if fmt == P16_FMT {
+            for p in [16usize, 96] {
+                v.push(Candidate::new(
+                    TileConfig { p16_panel: p, ..d },
+                    InnerPath::Auto));
+            }
+        } else {
+            for p in [8usize, 64] {
+                v.push(Candidate::new(
+                    TileConfig { p32_panel: p, ..d },
+                    InnerPath::Auto));
+            }
+        }
+    }
+    if fmt == P16_FMT && class != ShapeClass::DeepK {
+        // The bucketed product LUT must *prove* itself: 10% margin =
+        // the documented ≥ 1.1x speedup gate.
+        v.push(Candidate {
+            tile: d,
+            path: InnerPath::Hybrid,
+            margin_pct: 10,
+        });
+    }
+    match class {
+        ShapeClass::DeepK => {
+            // Sweep the streaming chunk depth: shallower than the
+            // auto default, and effectively off (a chunk no real k
+            // exceeds). For P8 the chunked loop only replaces the
+            // *portable* body (an AVX2 `Auto` keeps the gather), so
+            // the chunk candidates pin Portable to actually measure
+            // chunking against the gather default.
+            let path = if fmt == P8_FMT {
+                InnerPath::Portable
+            } else {
+                InnerPath::Auto
+            };
+            for kc in [256usize, usize::MAX] {
+                v.push(Candidate::new(
+                    TileConfig { k_chunk: kc, ..d }, path));
+            }
+        }
+        ShapeClass::Skinny => {
+            // One-row steal chunks: finest-grained dispatch for the
+            // few-row GEMMs serving traffic produces.
+            v.push(Candidate::new(
+                TileConfig { steal_rows: 1, ..d }, InnerPath::Auto));
+        }
+        ShapeClass::Square => {}
+    }
+    v
+}
+
+/// Pick the winning candidate index from measured costs
+/// (lower = faster; any monotone unit). **Pure and deterministic**:
+/// each cost is inflated by its candidate's margin, and the winner is
+/// the strictly smallest adjusted cost, earliest index on ties — so
+/// identical probe inputs always yield identical winners, and the
+/// default (index 0) wins whenever nothing beats it outright.
+pub fn pick_winner(cands: &[Candidate], costs: &[u64]) -> usize {
+    assert_eq!(cands.len(), costs.len());
+    assert!(!cands.is_empty());
+    let adjusted = |i: usize| -> u128 {
+        costs[i] as u128 * (100 + cands[i].margin_pct as u128)
+    };
+    let mut best = 0usize;
+    for i in 1..cands.len() {
+        if adjusted(i) < adjusted(best) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Probe dimensions per shape class — small enough that a probe is
+/// milliseconds even for the quire formats, shaped so the class's
+/// defining axis is actually exercised: deep-k probes exceed
+/// [`super::simd::K_CHUNK_AUTO`] so the chunk candidates differ, and
+/// the Square probe's column count (128) exceeds every panel
+/// candidate so panel sweeps do genuinely different blocking (see
+/// [`candidates`]).
+fn probe_shape(class: ShapeClass) -> (usize, usize, usize) {
+    match class {
+        ShapeClass::Skinny => (4, 64, 16),
+        // Under the single-thread dispatch bound (m*k*n < 2^16), so
+        // probes stay deterministic and pool-free.
+        ShapeClass::Square => (12, 32, 128),
+        ShapeClass::DeepK => (4, 1536, 8),
+    }
+}
+
+/// Timed repetitions per candidate; the minimum is kept (the usual
+/// microbenchmark noise floor estimator).
+const PROBE_REPS: usize = 3;
+
+/// Run the micro-probe for one (precision, shape class) under `cfg`'s
+/// thread/pool settings and return the winner. Deterministic operand
+/// words (fixed-seed RNG) feed every candidate; each candidate runs
+/// pinned (`tile: Some`, `autotune: Off`) through the real dispatch
+/// front end, so what is timed is exactly what later GEMMs run.
+pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
+             -> Tuned {
+    PROBES.fetch_add(1, Ordering::Relaxed);
+    let (m, k, n) = probe_shape(class);
+    let mut rng =
+        SplitMix64::new(0x5bade ^ ((fmt.nbits as u64) << 32));
+    let mk_words = |rng: &mut SplitMix64, len: usize| -> Vec<u64> {
+        (0..len).map(|_| from_f64(rng.wide(-4, 4), fmt)).collect()
+    };
+    let pa =
+        DecodedPlan::from_words(mk_words(&mut rng, m * k), m, k, fmt);
+    let pb =
+        DecodedPlan::from_words(mk_words(&mut rng, k * n), k, n, fmt);
+
+    let cands = candidates(fmt, class);
+    let costs: Vec<u64> = cands
+        .iter()
+        .map(|c| {
+            let pinned = KernelConfig {
+                threads: cfg.threads,
+                pool_workers: cfg.pool_workers,
+                tile: Some(c.tile),
+                path: c.path,
+                autotune: AutotuneMode::Off,
+            };
+            let mut best = u64::MAX;
+            for _ in 0..PROBE_REPS {
+                let t0 = Instant::now();
+                std::hint::black_box(gemm::gemm_with_config(
+                    &pa, &pb, None, &pinned));
+                best = best.min(t0.elapsed().as_nanos() as u64);
+            }
+            best
+        })
+        .collect();
+    let w = pick_winner(&cands, &costs);
+    Tuned { tile: cands[w].tile, path: cands[w].path }
+}
+
+/// Resolve the effective (tile, path) for one GEMM dispatch under
+/// `cfg`. Precedence: explicit tile > cached tuned winner (probing
+/// inline only in [`AutotuneMode::FirstUse`]) > built-in defaults.
+/// An explicit non-`Auto` path pin always overrides the tuned path.
+pub(super) fn resolve(cfg: &KernelConfig, fmt: PositFormat, m: usize,
+                      k: usize, n: usize) -> (TileConfig, InnerPath) {
+    if let Some(tile) = cfg.tile {
+        return (tile, cfg.path);
+    }
+    if cfg.autotune == AutotuneMode::Off {
+        return (TileConfig::DEFAULT, cfg.path);
+    }
+    let class = classify(m, k, n);
+    let key = (fmt.nbits, class);
+    let tuned = match settings::tuned_lookup(key) {
+        Some(t) => t,
+        None if cfg.autotune == AutotuneMode::FirstUse => {
+            let t = probe(cfg, fmt, class);
+            settings::tuned_install(key, t);
+            t
+        }
+        None => return (TileConfig::DEFAULT, cfg.path),
+    };
+    let path = if cfg.path == InnerPath::Auto {
+        tuned.path
+    } else {
+        cfg.path
+    };
+    (tuned.tile, path)
+}
+
+/// Make sure a (precision, shape class) is tuned, probing if needed —
+/// the [`crate::api::Engine::warm_up`] entry point. Returns `true`
+/// when a probe actually ran. No-op (`false`) when the config pins an
+/// explicit tile or autotuning is [`AutotuneMode::Off`] (off leaves
+/// the defaults untouched, by contract).
+pub fn ensure_tuned(cfg: &KernelConfig, fmt: PositFormat, m: usize,
+                    k: usize, n: usize) -> bool {
+    if cfg.tile.is_some() || cfg.autotune == AutotuneMode::Off {
+        return false;
+    }
+    let class = classify(m, k, n);
+    let key = (fmt.nbits, class);
+    if settings::tuned_lookup(key).is_some() {
+        return false;
+    }
+    let t = probe(cfg, fmt, class);
+    settings::tuned_install(key, t);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::P32_FMT;
+
+    #[test]
+    fn classification_regimes() {
+        assert_eq!(classify(256, 256, 256), ShapeClass::Square);
+        assert_eq!(classify(1, 64, 64), ShapeClass::Skinny);
+        assert_eq!(classify(64, 64, 2), ShapeClass::Skinny);
+        assert_eq!(classify(4, 4096, 8), ShapeClass::DeepK);
+        // Deep k needs to dominate the output dims, not just be big.
+        assert_eq!(classify(4096, 4096, 4096), ShapeClass::Square);
+        // ... and skinny-with-deep-k is deep-k first.
+        assert_eq!(classify(1, 2048, 8), ShapeClass::DeepK);
+    }
+
+    #[test]
+    fn winner_selection_is_deterministic() {
+        // Same probe inputs (candidate grid + measured costs) must
+        // always produce the same winner — selection is pure.
+        let cands = candidates(P16_FMT, ShapeClass::Square);
+        assert!(cands.len() >= 3);
+        assert_eq!(cands[0].tile, TileConfig::DEFAULT);
+        assert_eq!(cands[0].margin_pct, 0);
+        let costs: Vec<u64> =
+            (0..cands.len() as u64).map(|i| 1000 - i * 7).collect();
+        let w1 = pick_winner(&cands, &costs);
+        let w2 = pick_winner(&cands, &costs);
+        assert_eq!(w1, w2);
+        // Ties resolve to the earliest candidate (the default).
+        let flat = vec![500u64; cands.len()];
+        assert_eq!(pick_winner(&cands, &flat), 0);
+    }
+
+    #[test]
+    fn hybrid_needs_its_margin() {
+        let cands = candidates(P16_FMT, ShapeClass::Square);
+        let hyb = cands
+            .iter()
+            .position(|c| c.path == InnerPath::Hybrid)
+            .expect("square P16 grid carries the hybrid candidate");
+        assert_eq!(cands[hyb].margin_pct, 10);
+        // 5% faster is NOT enough: the margin-adjusted cost loses.
+        let mut costs = vec![1000u64; cands.len()];
+        costs[hyb] = 950;
+        assert_ne!(pick_winner(&cands, &costs), hyb);
+        // 20% faster clears the 10% bar.
+        costs[hyb] = 800;
+        assert_eq!(pick_winner(&cands, &costs), hyb);
+    }
+
+    #[test]
+    fn deep_k_grid_sweeps_chunk_and_p8_grid_sweeps_paths() {
+        let deep = candidates(P32_FMT, ShapeClass::DeepK);
+        assert!(deep.iter().any(|c| c.tile.k_chunk == 256));
+        assert!(deep.iter().any(|c| c.tile.k_chunk == usize::MAX),
+                "an effectively-unchunked candidate must compete");
+        // Panels are swept only where the probe shape can tell them
+        // apart — the deep-k probe is 8 columns wide, so no panel
+        // candidates there (they would be decided by noise).
+        assert!(deep
+            .iter()
+            .all(|c| c.tile.p32_panel
+                 == TileConfig::DEFAULT.p32_panel));
+        let sq = candidates(P32_FMT, ShapeClass::Square);
+        assert!(sq.iter().any(|c| c.tile.p32_panel
+                              != TileConfig::DEFAULT.p32_panel));
+        // P8 deep-k chunk candidates pin Portable: chunking only
+        // replaces the portable body, so measuring it under Auto on
+        // an AVX2 host would time the gather twice.
+        let p8_deep =
+            candidates(crate::posit::P8_FMT, ShapeClass::DeepK);
+        assert!(p8_deep
+            .iter()
+            .filter(|c| c.tile.k_chunk > 0)
+            .all(|c| c.path == InnerPath::Portable));
+        let p8 = candidates(crate::posit::P8_FMT, ShapeClass::Square);
+        assert!(p8.iter().any(|c| c.path == InnerPath::Portable));
+        // No hybrid candidate outside P16.
+        assert!(p8.iter().all(|c| c.path != InnerPath::Hybrid));
+        let skinny = candidates(P16_FMT, ShapeClass::Skinny);
+        assert!(skinny.iter().any(|c| c.tile.steal_rows == 1),
+                "skinny grid sweeps the steal chunk");
+        // Every non-default candidate carries at least the noise
+        // margin; the incumbent default carries none.
+        for (fmt, class) in [(P16_FMT, ShapeClass::Square),
+                             (P32_FMT, ShapeClass::DeepK)] {
+            let v = candidates(fmt, class);
+            assert_eq!(v[0].margin_pct, 0);
+            assert!(v[1..].iter().all(|c| c.margin_pct >= 3));
+        }
+    }
+
+    #[test]
+    fn off_mode_leaves_defaults_untouched() {
+        let cfg = KernelConfig::DEFAULT; // autotune: Off
+        let before = settings::tuned_count();
+        let probes_before = probes();
+        let (tile, path) =
+            resolve(&cfg, P16_FMT, 128, 128, 128);
+        assert_eq!(tile, TileConfig::DEFAULT);
+        assert_eq!(path, InnerPath::Auto);
+        assert!(!ensure_tuned(&cfg, P16_FMT, 128, 128, 128));
+        assert_eq!(settings::tuned_count(), before,
+                   "Off must not grow the tuned table");
+        assert_eq!(probes(), probes_before,
+                   "Off must not probe");
+    }
+
+    #[test]
+    fn explicit_tile_bypasses_the_tuner() {
+        let tile = TileConfig { p16_panel: 16, k_chunk: 64,
+                                ..TileConfig::DEFAULT };
+        let cfg = KernelConfig {
+            tile: Some(tile),
+            autotune: AutotuneMode::FirstUse,
+            ..KernelConfig::DEFAULT
+        };
+        let probes_before = probes();
+        let (got, path) = resolve(&cfg, P16_FMT, 64, 64, 64);
+        assert_eq!(got, tile, "explicit tile always wins");
+        assert_eq!(path, InnerPath::Auto);
+        assert!(!ensure_tuned(&cfg, P16_FMT, 64, 64, 64));
+        assert_eq!(probes(), probes_before);
+    }
+}

@@ -33,6 +33,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::posit::{encode_from_parts, Parts, PositFormat};
 
+use super::autotune;
 use super::plan::DecodedPlan;
 use super::pool::{self, RowQueue};
 use super::settings::{self, KernelConfig};
@@ -160,7 +161,7 @@ pub fn gemm_single_path(a: &DecodedPlan, b: &DecodedPlan,
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
     simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path,
-                    settings::current().tile);
+                    settings::current().tile_or_default());
     apply_nar(a, b, bias_dec.as_ref(), &mut out);
     Some(out)
 }
@@ -238,6 +239,11 @@ pub struct KernelCounters {
     /// (`ceil(chunks / jobs)`) — the work that stealing moved off a
     /// straggler. 0 means every job kept exactly its even share.
     pub stolen_chunks: u64,
+    /// Autotune micro-probes run ([`super::autotune::probes`]): one
+    /// per (precision, shape class) grid timed, not per candidate.
+    /// `Engine::warm_up` tests assert this stays flat once traffic
+    /// starts.
+    pub autotune_probes: u64,
 }
 
 static CTR_GEMMS: AtomicU64 = AtomicU64::new(0);
@@ -250,6 +256,7 @@ pub fn counters() -> KernelCounters {
         gemms: CTR_GEMMS.load(Ordering::Relaxed),
         chunks: CTR_CHUNKS.load(Ordering::Relaxed),
         stolen_chunks: CTR_STOLEN.load(Ordering::Relaxed),
+        autotune_probes: autotune::probes(),
     }
 }
 
@@ -285,7 +292,10 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
 
-    let (path, tile) = (cfg.path, cfg.tile);
+    // Effective geometry: explicit pin > autotuned winner > defaults
+    // (probing inline only under AutotuneMode::FirstUse). Any outcome
+    // is bit-identical — resolution only retunes speed.
+    let (tile, path) = autotune::resolve(cfg, a.fmt, m, a.cols, n);
     let t = threads.clamp(1, m);
     let mut stats = DispatchStats { chunk_rows: m, chunks: 1,
                                     per_job_claims: vec![1] };
@@ -531,7 +541,8 @@ mod tests {
                 let auto = gemm_single_path(&pa, &pb, bias.as_deref(),
                                             InnerPath::Auto)
                     .unwrap();
-                for path in [InnerPath::Portable, InnerPath::Unblocked]
+                for path in [InnerPath::Portable, InnerPath::Hybrid,
+                             InnerPath::Unblocked]
                 {
                     assert_eq!(
                         gemm_single_path(&pa, &pb, bias.as_deref(),
@@ -623,9 +634,10 @@ mod tests {
             let cfg = KernelConfig {
                 threads: Some(3),
                 pool_workers: None,
-                tile: TileConfig { p16_panel: 4, p32_panel: 1,
-                                   steal_rows: 1 },
+                tile: Some(TileConfig { p16_panel: 4, p32_panel: 1,
+                                        steal_rows: 1, k_chunk: 4 }),
                 path: InnerPath::Portable,
+                autotune: crate::kernel::AutotuneMode::Off,
             };
             assert_eq!(gemm_with_config(&pa, &pb, None, &cfg), base,
                        "{fmt:?}");

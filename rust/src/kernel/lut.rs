@@ -11,9 +11,15 @@
 //!   then a single table add per MAC — no decode, no multiply, no shift;
 //! * the **P8 rounded-multiply LUT**: all word pairs → `p_mul` words,
 //!   for scalar/elementwise multiply traffic (verified exhaustively
-//!   against `p_mul` by `tests/kernel_planar.rs`).
+//!   against `p_mul` by `tests/kernel_planar.rs`);
+//! * the **P16 hybrid product LUT** ([`p16_hyb_lut`]): exact products
+//!   of the short-fraction significand bucket (magnitudes < 2^8),
+//!   with the exact multiply as the off-bucket fallback — the
+//!   scale-bucketed slice of the infeasible 2^32 P16 pair space.
+//!   Default-off: only [`super::simd::InnerPath::Hybrid`] (pinned or
+//!   autotuned with a ≥ 1.1x probe margin) uses it.
 //!
-//! All tables build on first use behind `OnceLock` (~0.6 MB total) and
+//! All tables build on first use behind `OnceLock` (~0.9 MB total) and
 //! are shared by every thread of the tiled GEMM.
 
 use std::sync::OnceLock;
@@ -132,6 +138,50 @@ pub fn p8_mul(a: u8, b: u8) -> u8 {
     p8_mul_lut()[((a as usize) << 8) | b as usize]
 }
 
+/// Magnitude bound of the P16 hybrid product LUT's bucket: pairs
+/// whose sign-folded significand magnitudes are both below this
+/// gather their product from [`p16_hyb_lut`]. Whether a word lands in
+/// the bucket is decided by its regime/exponent split — a significand
+/// magnitude below 2^8 means at most 7 surviving fraction bits, i.e.
+/// the regime claimed most of the word.
+pub const P16_HYB_MAG: i64 = 256;
+
+/// P16 hybrid product table: entry `(|sa| << 8) | |sb|` holds the
+/// exact product `|sa| * |sb|` of two in-bucket significand
+/// magnitudes (`< 2^8` each, so a `u32` entry is exact; 256 KiB).
+/// A full P16 pair table would need 2^32 entries — infeasible — so
+/// this is the scale-bucketed slice ExPAN(N)D-style lookup structures
+/// suggest, with the exact multiply as the off-bucket fallback
+/// ([`p16_hyb_mul`]).
+pub fn p16_hyb_lut() -> &'static [u32] {
+    static LUT: OnceLock<Vec<u32>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0u32; 1 << 16];
+        for a in 0..256u32 {
+            for b in 0..256u32 {
+                t[((a << 8) | b) as usize] = a * b;
+            }
+        }
+        t
+    })
+}
+
+/// Hybrid P16 significand product: table gather when both magnitudes
+/// are in the [`P16_HYB_MAG`] bucket, exact `i64` multiply otherwise.
+/// Always returns the exact product, so callers are bit-identical to
+/// the plain multiply by construction.
+#[inline]
+pub fn p16_hyb_mul(sa: i64, sb: i64) -> i64 {
+    let (ma, mb) = (sa.unsigned_abs(), sb.unsigned_abs());
+    if ma < P16_HYB_MAG as u64 && mb < P16_HYB_MAG as u64 {
+        let m = p16_hyb_lut()
+            [((ma as usize) << 8) | mb as usize] as i64;
+        if (sa < 0) != (sb < 0) { -m } else { m }
+    } else {
+        sa * sb
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +229,26 @@ mod tests {
                 };
                 let got = lut[((a << 8) | b) as usize] as f64;
                 assert_eq!(got, want, "{a:#x} * {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_mul_is_exact_everywhere() {
+        // In-bucket pairs hit the table, off-bucket pairs the exact
+        // multiply; both must equal the plain product for every
+        // combination of signs and bucket membership.
+        let cases: [i64; 10] = [0, 1, -1, 7, -128, 255, -255, 256,
+                                -8191, 8191];
+        for &a in &cases {
+            for &b in &cases {
+                assert_eq!(p16_hyb_mul(a, b), a * b, "{a} * {b}");
+            }
+        }
+        // Exhaustive over the whole bucket (both signs).
+        for a in -255i64..=255 {
+            for b in [-255i64, -3, 2, 255] {
+                assert_eq!(p16_hyb_mul(a, b), a * b);
             }
         }
     }

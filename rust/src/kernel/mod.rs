@@ -40,11 +40,18 @@
 //!        RowQueue by a persistent pool worker        (pool.rs)
 //!  └─ panel   a B-column strip sized for cache residency
 //!             (TileConfig::{p16,p32}_panel)          (simd.rs)
-//!      └─ lane   independent register accumulators:
-//!                P8  — P8_LANES i64 LUT-gather lanes (+ optional
-//!                      AVX2 vpgatherqq body, runtime-detected)
-//!                P16 — P16_MR × P16_NR i128 micro-tile
-//!                P32 — a panel of reused quires      (simd.rs)
+//!      └─ k-chunk   reductions deeper than the k-chunk threshold
+//!                   (TileConfig::k_chunk_for) stream A and the
+//!                   matching B slice in L2-sized chunks, with
+//!                   exact partial accumulation per chunk; deep
+//!                   P16 folds each exact i128 chunk sum into a
+//!                   quire with one mac_raw               (simd.rs)
+//!          └─ lane   independent register accumulators:
+//!                    P8  — P8_LANES i64 LUT-gather lanes (+ optional
+//!                          AVX2 vpgatherqq body, runtime-detected)
+//!                    P16 — P16_MR × P16_NR i128 micro-tile (+ the
+//!                          default-off hybrid product LUT)
+//!                    P32 — a panel of reused quires      (simd.rs)
 //! ```
 //!
 //! Bit-exactness survives every level because each accumulator is an
@@ -71,8 +78,15 @@
 //! |---|---|
 //! | [`settings::KernelConfig::threads`] | absolute per-GEMM worker-count override (`None` = size heuristic) |
 //! | [`settings::KernelConfig::pool_workers`] | pool size, latched at first pool use (`None` = available parallelism) |
-//! | [`settings::KernelConfig::tile`] | tile parameters — see [`simd::TileConfig`] (strictly validated) |
+//! | [`settings::KernelConfig::tile`] | explicit tile pin — see [`simd::TileConfig`] (strictly validated); `None` = defaults or autotuned |
 //! | [`settings::KernelConfig::path`] | inner-loop body; `Portable` disables the AVX2 gather |
+//! | [`settings::KernelConfig::autotune`] | first-use micro-probe autotuning ([`autotune::AutotuneMode`]; default `Off`) |
+//!
+//! When no tile is pinned and autotuning is enabled, dispatch
+//! resolves the geometry through [`autotune`]: a one-time micro-probe
+//! per (precision, shape class) picks panel widths, steal/k-chunk
+//! depths and the inner path, cached process-wide in [`settings`].
+//! `Engine::warm_up` runs the probes ahead of traffic.
 //!
 //! Callers either thread a config explicitly
 //! ([`gemm::gemm_with_config`], `Session::set_kernel_config`,
@@ -94,6 +108,7 @@
 //! blocked-vs-unblocked inner loops, thread scaling, and
 //! steal-vs-fixed-split dispatch.
 
+pub mod autotune;
 pub mod gemm;
 pub mod lut;
 pub mod plan;
@@ -101,15 +116,16 @@ pub mod pool;
 pub mod settings;
 pub mod simd;
 
+pub use autotune::{AutotuneMode, ShapeClass};
 pub use gemm::{auto_threads, counters, encode_acc_i128,
                encode_acc_i64, gemm, gemm_single_path,
                gemm_with_config, gemm_with_config_stats,
                gemm_with_scope, gemm_with_stats, gemm_with_threads,
                DispatchStats, KernelCounters};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
-              p16_decode_lut, DecEntry};
+              p16_decode_lut, p16_hyb_lut, DecEntry};
 pub use plan::DecodedPlan;
 pub use pool::{RowQueue, WorkerPool};
 pub use settings::KernelConfig;
-pub use simd::{gather_available, InnerPath, TileConfig, P16_MR,
-               P16_NR, P8_LANES};
+pub use simd::{gather_available, InnerPath, TileConfig, K_CHUNK_AUTO,
+               K_CHUNK_DEFAULT, P16_MR, P16_NR, P8_LANES};

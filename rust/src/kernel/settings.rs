@@ -1,5 +1,5 @@
 //! Process-wide kernel configuration — explicit, typed, **no
-//! environment reads**.
+//! environment reads** — plus the autotuner's tuned-winner table.
 //!
 //! Since PR 4 the kernel never consults `std::env` itself: every knob
 //! that used to be an ad-hoc `SPADE_KERNEL_*` read (worker counts,
@@ -20,9 +20,20 @@
 //! every tile/thread/path combination is bit-identical by construction
 //! (exact integer accumulation, one rounding) — only how fast they
 //! arrive.
+//!
+//! ## The tuned-winner table
+//!
+//! [`super::autotune`] caches one winning (tile, path) per
+//! (precision-nbits, [`ShapeClass`]) here, process-wide: shards,
+//! sessions and direct kernel callers all share the probes one of
+//! them paid. The table only ever *re-tunes* dispatch — winners are
+//! bit-identical by construction — so concurrent install/lookup needs
+//! no coordination beyond the `RwLock`.
 
+use std::collections::BTreeMap;
 use std::sync::RwLock;
 
+use super::autotune::{AutotuneMode, ShapeClass, Tuned};
 use super::simd::{InnerPath, TileConfig};
 
 /// Explicit kernel configuration: everything the GEMM dispatch and
@@ -39,24 +50,43 @@ pub struct KernelConfig {
     /// pool use — installing a new default later cannot resize a pool
     /// that already exists.
     pub pool_workers: Option<usize>,
-    /// Tile/panel/steal-chunk geometry (see [`TileConfig`]).
-    pub tile: TileConfig,
+    /// Tile/panel/steal-chunk/k-chunk geometry. `None` = untuned: the
+    /// built-in [`TileConfig::DEFAULT`], or the autotuned winner for
+    /// the GEMM's (precision, shape class) when
+    /// [`KernelConfig::autotune`] enables it. `Some` is an **explicit
+    /// pin and always wins** — the autotuner never overrides a tile
+    /// the caller chose.
+    pub tile: Option<TileConfig>,
     /// Inner-loop body `gemm` routes through. [`InnerPath::Auto`]
     /// (the default) upgrades P8 to the AVX2 gather when the CPU has
-    /// it; [`InnerPath::Portable`] pins the portable lane loops (the
-    /// old `SPADE_KERNEL_GATHER=0` behavior).
+    /// it and accepts autotuned path winners;
+    /// [`InnerPath::Portable`] pins the portable lane loops (the
+    /// old `SPADE_KERNEL_GATHER=0` behavior) and, like every
+    /// non-`Auto` value, overrides a tuned path.
     pub path: InnerPath,
+    /// When the first-use autotuner may probe
+    /// ([`super::autotune::AutotuneMode`]; default `Off`).
+    pub autotune: AutotuneMode,
 }
 
 impl KernelConfig {
-    /// The built-in default: auto threads, auto pool, default tiles,
-    /// auto inner path.
+    /// The built-in default: auto threads, auto pool, untuned default
+    /// tiles, auto inner path, autotuner off.
     pub const DEFAULT: KernelConfig = KernelConfig {
         threads: None,
         pool_workers: None,
-        tile: TileConfig::DEFAULT,
+        tile: None,
         path: InnerPath::Auto,
+        autotune: AutotuneMode::Off,
     };
+
+    /// The tile geometry this config pins, or the built-in defaults —
+    /// **without** consulting the autotuner (dispatch resolution goes
+    /// through `autotune::resolve`, which also folds in tuned
+    /// winners).
+    pub fn tile_or_default(&self) -> TileConfig {
+        self.tile.unwrap_or(TileConfig::DEFAULT)
+    }
 }
 
 impl Default for KernelConfig {
@@ -84,6 +114,35 @@ pub fn install(cfg: KernelConfig) {
     *CURRENT.write().unwrap() = cfg;
 }
 
+/// Autotuned winners per (precision nbits, shape class) — the
+/// process-wide cache [`super::autotune`] fills and
+/// `autotune::resolve` reads on every untuned dispatch.
+static TUNED: RwLock<BTreeMap<(u32, ShapeClass), Tuned>> =
+    RwLock::new(BTreeMap::new());
+
+/// Look up the cached autotune winner for a tuning key.
+pub fn tuned_lookup(key: (u32, ShapeClass)) -> Option<Tuned> {
+    TUNED.read().unwrap().get(&key).copied()
+}
+
+/// Install an autotune winner (last write wins — winners are
+/// bit-identical by construction, so a race costs nothing but a
+/// redundant probe).
+pub fn tuned_install(key: (u32, ShapeClass), t: Tuned) {
+    TUNED.write().unwrap().insert(key, t);
+}
+
+/// Number of (precision, shape class) pairs tuned so far.
+pub fn tuned_count() -> usize {
+    TUNED.read().unwrap().len()
+}
+
+/// Drop every cached winner (tests; a process serving real traffic
+/// has no reason to forget its probes).
+pub fn tuned_clear() {
+    TUNED.write().unwrap().clear();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,12 +150,28 @@ mod tests {
     #[test]
     fn default_roundtrip() {
         assert_eq!(KernelConfig::default(), KernelConfig::DEFAULT);
-        assert_eq!(KernelConfig::DEFAULT.tile, TileConfig::default());
+        assert_eq!(KernelConfig::DEFAULT.tile, None);
+        assert_eq!(KernelConfig::DEFAULT.tile_or_default(),
+                   TileConfig::default());
         assert_eq!(KernelConfig::DEFAULT.path, InnerPath::Auto);
+        assert_eq!(KernelConfig::DEFAULT.autotune, AutotuneMode::Off);
         // current() starts at the default (other tests may have
         // installed something by now; just exercise the accessors).
         let c = current();
         install(c);
         assert_eq!(current(), c);
+    }
+
+    #[test]
+    fn tuned_table_roundtrip() {
+        let key = (63u32, ShapeClass::Square); // no real format is 63b
+        assert_eq!(tuned_lookup(key), None);
+        let t = Tuned {
+            tile: TileConfig { p16_panel: 16, ..TileConfig::DEFAULT },
+            path: InnerPath::Portable,
+        };
+        tuned_install(key, t);
+        assert_eq!(tuned_lookup(key), Some(t));
+        assert!(tuned_count() >= 1);
     }
 }

@@ -14,6 +14,12 @@
 //!   k-deep slice of B touched by the inner loops stays hot while the
 //!   tile's rows stream over it, instead of re-streaming all of B per
 //!   output row.
+//! * **k-chunk** — reductions deeper than [`TileConfig::k_chunk_for`]
+//!   stream A (and the matching B slice) in L2-sized chunks with
+//!   exact partial `i64`/`i128`/quire accumulation per chunk; deep
+//!   P16 additionally folds each exact `i128` chunk sum into a quire
+//!   with a single `mac_raw`, paying the 512-bit walk once per chunk
+//!   instead of once per MAC.
 //! * **Lane** — a small fixed set of independent accumulators kept in
 //!   registers: [`P8_LANES`] `i64` LUT-gather lanes for P8, a
 //!   [`P16_MR`]×[`P16_NR`] `i128` register micro-tile for P16, and a
@@ -70,8 +76,10 @@ pub const P16_NR: usize = 4;
 
 /// Which inner-loop body a GEMM runs. [`super::gemm::gemm`] always
 /// uses `Auto`; the others exist so benches and identity tests can pin
-/// a specific body ([`super::gemm::gemm_single_path`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// a specific body ([`super::gemm::gemm_single_path`]) — except
+/// `Hybrid`, which the autotuner may also select for P16 when its
+/// probe shows the bucketed product LUT actually pays (≥ 1.1x).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum InnerPath {
     /// Lane-fused loops, AVX2 LUT-gather for P8 when the CPU has it.
     Auto,
@@ -80,6 +88,13 @@ pub enum InnerPath {
     /// Force the AVX2 LUT-gather P8 loop (other formats fall back to
     /// the lane-fused loops). Unavailable off x86_64/AVX2.
     Gather,
+    /// P16 runs the scale-bucketed hybrid product LUT
+    /// ([`lut::p16_hyb_mul`]) inside the blocked micro-tile; exact
+    /// multiply off-bucket, so results are bit-identical to `Auto`.
+    /// **Default-off**: only the autotuner (with its ≥ 1.1x margin) or
+    /// an explicit pin selects it. Other formats fall back to the
+    /// lane-fused loops.
+    Hybrid,
     /// The PR-1 element-at-a-time loops — scalar LUT gather for P8,
     /// unblocked P16, full-width quire row for P32. Kept as the bench
     /// baseline (`simd_vs_scalar_gather`, `blocked_vs_unblocked_p16`).
@@ -94,7 +109,7 @@ pub enum InnerPath {
 /// ```text
 /// p16_panel=48,p32_panel=16,steal_rows=2
 /// ```
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct TileConfig {
     /// B-column panel width for the blocked P16 path (must be at
     /// least [`P16_NR`]). Default 64: a 256-deep panel of planar
@@ -107,12 +122,26 @@ pub struct TileConfig {
     /// automatically to ~4 per worker. In a *spec string* the key is
     /// only accepted with a value ≥ 1 — omit it for automatic sizing.
     pub steal_rows: usize,
+    /// Reduction-depth chunk for the streaming k-chunked loops: a
+    /// GEMM whose k exceeds this streams A (and the matching B slice)
+    /// in k-chunks of this many elements, with exact partial
+    /// `i64`/`i128`/quire accumulation per chunk (integer accumulators
+    /// are associative, so every chunking is bit-identical to the
+    /// unchunked loop). 0 (default) = automatic: chunk by
+    /// [`K_CHUNK_DEFAULT`] once k exceeds [`K_CHUNK_AUTO`]. In a
+    /// *spec string* the key is only accepted with a value ≥ 1 — omit
+    /// it for automatic sizing.
+    pub k_chunk: usize,
 }
 
 impl TileConfig {
     /// The built-in defaults (const so statics can embed them).
-    pub const DEFAULT: TileConfig =
-        TileConfig { p16_panel: 64, p32_panel: 32, steal_rows: 0 };
+    pub const DEFAULT: TileConfig = TileConfig {
+        p16_panel: 64,
+        p32_panel: 32,
+        steal_rows: 0,
+        k_chunk: 0,
+    };
 
     /// Parse an override spec (the `SPADE_KERNEL_TILE` format),
     /// **rejecting** anything suspicious instead of silently fixing
@@ -152,10 +181,21 @@ impl TileConfig {
                     }
                     cfg.steal_rows = v;
                 }
+                "k_chunk" => {
+                    if v == 0 {
+                        return Err("tile spec k_chunk=0: a reduction \
+                                    chunk must cover at least one \
+                                    element (omit the key for \
+                                    automatic sizing)"
+                            .into());
+                    }
+                    cfg.k_chunk = v;
+                }
                 _ => {
                     return Err(format!(
                         "tile spec has unknown key {key:?} (expected \
-                         p16_panel, p32_panel or steal_rows)"));
+                         p16_panel, p32_panel, steal_rows or \
+                         k_chunk)"));
                 }
             }
         }
@@ -178,7 +218,30 @@ impl TileConfig {
         }
         Ok(())
     }
+
+    /// The k-chunk to stream a depth-`k` reduction with, or `None`
+    /// when the whole reduction runs unchunked. An explicit
+    /// [`TileConfig::k_chunk`] engages exactly when `k` exceeds it;
+    /// the automatic default engages past [`K_CHUNK_AUTO`] with
+    /// [`K_CHUNK_DEFAULT`]-deep chunks.
+    pub fn k_chunk_for(&self, k: usize) -> Option<usize> {
+        if self.k_chunk > 0 {
+            (k > self.k_chunk).then_some(self.k_chunk)
+        } else {
+            (k > K_CHUNK_AUTO).then_some(K_CHUNK_DEFAULT)
+        }
+    }
 }
+
+/// Reduction depth past which the automatic heuristic starts
+/// streaming A in k-chunks: below this the whole B slice a tile walks
+/// comfortably outlives one pass through the rows.
+pub const K_CHUNK_AUTO: usize = 1024;
+
+/// Automatic k-chunk depth: 512 elements keeps a default-width B
+/// k-slice (512 × 64 planar sig+w columns ≈ 384 KiB at P16) within
+/// reach of L2 while the tile's rows re-walk it.
+pub const K_CHUNK_DEFAULT: usize = 512;
 
 impl Default for TileConfig {
     fn default() -> TileConfig {
@@ -224,25 +287,68 @@ impl BiasDec {
 /// point every precision shares. The LUT / fixed-offset fast paths are
 /// specific to the exact standard formats; anything else goes through
 /// the generic quire path (correct for any posit(n, es) the crate
-/// supports).
+/// supports). Reductions deeper than the tile's k-chunk threshold
+/// ([`TileConfig::k_chunk_for`]) stream A (and the matching B slice)
+/// chunk by chunk with exact partial accumulation — bit-identical by
+/// associativity, asserted in `tests/kernel_kchunk.rs`.
 pub(super) fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan,
                         bias: Option<&BiasDec>, i0: usize,
                         out: &mut [u64], path: InnerPath,
                         tile: TileConfig) {
     let n = b.cols;
+    let k = a.cols;
     let nrows = out.len() / n;
+    let kc = tile.k_chunk_for(k);
     if a.fmt == crate::posit::P8_FMT {
+        // Deep-k chunking only replaces the *portable* lane loop: on
+        // an AVX2 host, `Auto` keeps the measured vpgatherqq body
+        // (swapping it for a scalar chunked loop by default would be
+        // an unmeasured regime change). The autotuner's P8 deep-k
+        // grid pits (k_chunk, Portable) against the gather default by
+        // measurement, and an explicit Portable pin chunks as soon as
+        // the threshold engages.
+        let chunkable = match path {
+            InnerPath::Unblocked | InnerPath::Gather => false,
+            InnerPath::Auto => !gather_available(),
+            InnerPath::Portable | InnerPath::Hybrid => true,
+        };
+        if chunkable {
+            if let Some(kc) = kc {
+                return rows_p8_kchunk(a, b, bias, i0, nrows, out, kc);
+            }
+        }
         rows_p8(a, b, bias, i0, nrows, out, path);
-    } else if a.fmt == crate::posit::P16_FMT
-        && a.cols <= lut::P16_CHUNK
-    {
+    } else if a.fmt == crate::posit::P16_FMT {
         if path == InnerPath::Unblocked {
-            rows_p16_unblocked(a, b, bias, i0, nrows, out);
+            if k <= lut::P16_CHUNK {
+                rows_p16_unblocked(a, b, bias, i0, nrows, out);
+            } else {
+                rows_quire_unblocked(a, b, bias, i0, nrows, out);
+            }
+        } else if k > lut::P16_CHUNK {
+            // Deep P16: i128 partial chunks folded into quires — the
+            // PDPU-style fused accumulation replacing the per-MAC
+            // quire walk the pre-chunking kernel used here.
+            rows_p16_deepk(a, b, bias, i0, nrows, out, tile, kc);
+        } else if let Some(kc) = kc {
+            // The hybrid multiply composes with chunking: both paths
+            // share the chunked micro-tile body via `mul`.
+            if path == InnerPath::Hybrid {
+                rows_p16_kchunk(a, b, bias, i0, nrows, out, tile, kc,
+                                lut::p16_hyb_mul);
+            } else {
+                rows_p16_kchunk(a, b, bias, i0, nrows, out, tile, kc,
+                                |sa, sb| sa * sb);
+            }
+        } else if path == InnerPath::Hybrid {
+            rows_p16_hybrid(a, b, bias, i0, nrows, out, tile);
         } else {
             rows_p16_blocked(a, b, bias, i0, nrows, out, tile);
         }
     } else if path == InnerPath::Unblocked {
         rows_quire_unblocked(a, b, bias, i0, nrows, out);
+    } else if let Some(kc) = kc {
+        rows_quire_kchunk(a, b, bias, i0, nrows, out, tile, kc);
     } else {
         rows_quire_panel(a, b, bias, i0, nrows, out, tile);
     }
@@ -456,6 +562,78 @@ fn rows_p8_unblocked(a: &DecodedPlan, b: &DecodedPlan,
     }
 }
 
+/// P8 streaming k-chunked loop (k above the tile's chunk threshold):
+/// the reduction is carved into chunks of `kc` elements and the tile's
+/// rows re-walk one chunk's B slice (`kc`×n bytes — L2-sized) before
+/// the next chunk streams in, instead of dragging the whole k-deep B
+/// panel through cache once per row. Lane accumulators persist across
+/// chunks in a heap buffer (loaded into the register lane block for
+/// the chunk's k-walk, stored after) — partial `i64` sums are exact
+/// and associative, so the chunking is bit-identical to
+/// [`rows_p8_lanes`].
+fn rows_p8_kchunk(a: &DecodedPlan, b: &DecodedPlan,
+                  bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                  out: &mut [u64], kc: usize) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let (a8, b8) = (&a.words8, &b.words8);
+    // Persistent accumulators (value = acc * 2^-12), bias-seeded once.
+    let mut acc = vec![0i64; nrows * n];
+    if bias.is_some() {
+        for row in acc.chunks_mut(n) {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = p8_bias_term(bias, j);
+            }
+        }
+    }
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + kc).min(k);
+        for r in 0..nrows {
+            let i = i0 + r;
+            let arow = &a8[i * k + k0..i * k + k1];
+            let arow_acc = &mut acc[r * n..(r + 1) * n];
+            let mut j0 = 0usize;
+            while j0 + P8_LANES <= n {
+                let mut lanes: [i64; P8_LANES] = arow_acc
+                    [j0..j0 + P8_LANES]
+                    .try_into()
+                    .unwrap();
+                for (kk, &aw) in arow.iter().enumerate() {
+                    if aw == 0 {
+                        continue;
+                    }
+                    let base = (aw as usize) << 8;
+                    let brow = &b8[(k0 + kk) * n + j0
+                        ..(k0 + kk) * n + j0 + P8_LANES];
+                    for (slot, &bw) in lanes.iter_mut().zip(brow) {
+                        *slot += lut[base | bw as usize];
+                    }
+                }
+                arow_acc[j0..j0 + P8_LANES].copy_from_slice(&lanes);
+                j0 += P8_LANES;
+            }
+            for (j, slot) in
+                arow_acc.iter_mut().enumerate().skip(j0)
+            {
+                let mut s = *slot;
+                for (kk, &aw) in arow.iter().enumerate() {
+                    if aw != 0 {
+                        s += lut[((aw as usize) << 8)
+                            | b8[(k0 + kk) * n + j] as usize];
+                    }
+                }
+                *slot = s;
+            }
+        }
+        k0 = k1;
+    }
+    for (o, &v) in out.iter_mut().zip(&acc) {
+        *o = encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
 /// P16 blocked path (k ≤ [`lut::P16_CHUNK`]): B-column panels sized by
 /// [`TileConfig::p16_panel`] for cache residency, and inside each
 /// panel a [`P16_MR`]×[`P16_NR`] register micro-tile of `i128`
@@ -464,6 +642,37 @@ fn rows_p8_unblocked(a: &DecodedPlan, b: &DecodedPlan,
 fn rows_p16_blocked(a: &DecodedPlan, b: &DecodedPlan,
                     bias: Option<&BiasDec>, i0: usize, nrows: usize,
                     out: &mut [u64], tile: TileConfig) {
+    rows_p16_blocked_with(a, b, bias, i0, nrows, out, tile,
+                          |sa, sb| sa * sb);
+}
+
+/// P16 blocked path with the scale-bucketed hybrid product LUT
+/// ([`lut::p16_hyb_mul`]) substituted for the significand multiply:
+/// short-fraction operand pairs (both significand magnitudes below
+/// [`lut::P16_HYB_MAG`], a property the regime/exponent split of the
+/// word determines) gather their exact product from a 256×256 table;
+/// off-bucket pairs fall back to the exact `i64` multiply — so the
+/// path is bit-identical to [`rows_p16_blocked`] by construction.
+/// Selected only by an explicit [`InnerPath::Hybrid`] pin or by the
+/// autotuner when its probe shows ≥ 1.1x (`p16_hybrid_lut_vs_exact`
+/// in `BENCH_hotpath.json` reports the measured ratio).
+fn rows_p16_hybrid(a: &DecodedPlan, b: &DecodedPlan,
+                   bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                   out: &mut [u64], tile: TileConfig) {
+    rows_p16_blocked_with(a, b, bias, i0, nrows, out, tile,
+                          lut::p16_hyb_mul);
+}
+
+/// Shared body of the P16 blocked paths; `mul` is the significand
+/// product (exact multiply, or the hybrid LUT with exact fallback —
+/// both return the exact product, so the caller choice cannot change
+/// results).
+#[allow(clippy::too_many_arguments)]
+fn rows_p16_blocked_with(a: &DecodedPlan, b: &DecodedPlan,
+                         bias: Option<&BiasDec>, i0: usize,
+                         nrows: usize, out: &mut [u64],
+                         tile: TileConfig,
+                         mul: impl Fn(i64, i64) -> i64) {
     let (k, n) = (a.cols, b.cols);
     let fmt = a.fmt;
     let off = P16_ACC_FRAC_OFFSET as i32;
@@ -501,7 +710,7 @@ fn rows_p16_blocked(a: &DecodedPlan, b: &DecodedPlan,
                         }
                         let wa = a.w[idx];
                         for ni in 0..jw {
-                            let p = sa * bs[ni];
+                            let p = mul(sa, bs[ni]);
                             if p != 0 {
                                 arow_acc[ni] +=
                                     (p as i128) << (wa + bw[ni] + off);
@@ -522,6 +731,175 @@ fn rows_p16_blocked(a: &DecodedPlan, b: &DecodedPlan,
             r += iw;
         }
         j0 = jend;
+    }
+}
+
+/// P16 streaming k-chunked loop (k above the chunk threshold but
+/// within the `i128` headroom): the register micro-tile of
+/// [`rows_p16_blocked`] runs chunk by chunk over the reduction, with
+/// the accumulators persisted in a heap buffer between chunks (loaded
+/// into the register tile for the chunk's k-walk, stored after).
+/// Each chunk's B slice (`kc`×panel planar columns) stays L2-resident
+/// while every micro-tile of the row block walks it. Partial `i128`
+/// sums are exact and associative → bit-identical to the unchunked
+/// loop. `mul` is the significand product (exact, or the hybrid LUT
+/// with exact fallback — see [`rows_p16_blocked_with`]), so
+/// [`InnerPath::Hybrid`] composes with chunking.
+#[allow(clippy::too_many_arguments)]
+fn rows_p16_kchunk(a: &DecodedPlan, b: &DecodedPlan,
+                   bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                   out: &mut [u64], tile: TileConfig, kc: usize,
+                   mul: impl Fn(i64, i64) -> i64) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    let panel = tile.p16_panel.max(P16_NR);
+    // Persistent accumulators (value = acc * 2^-56), bias-seeded once.
+    let mut accbuf = vec![0i128; nrows * n];
+    if let Some(bd) = bias {
+        for row in accbuf.chunks_mut(n) {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = (bd.sig[j] as i128) << (bd.w[j] + off);
+            }
+        }
+    }
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + kc).min(k);
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jend = (j0 + panel).min(n);
+            let mut r = 0usize;
+            while r < nrows {
+                let iw = (nrows - r).min(P16_MR);
+                let mut j = j0;
+                while j < jend {
+                    let jw = (jend - j).min(P16_NR);
+                    let mut acc = [[0i128; P16_NR]; P16_MR];
+                    for (mi, row) in
+                        acc.iter_mut().enumerate().take(iw)
+                    {
+                        row[..jw].copy_from_slice(
+                            &accbuf[(r + mi) * n + j
+                                ..(r + mi) * n + j + jw]);
+                    }
+                    for kk in k0..k1 {
+                        let bs = &b.sig[kk * n + j..kk * n + j + jw];
+                        let bw = &b.w[kk * n + j..kk * n + j + jw];
+                        for (mi, arow_acc) in
+                            acc.iter_mut().enumerate().take(iw)
+                        {
+                            let idx = (i0 + r + mi) * k + kk;
+                            let sa = a.sig[idx];
+                            if sa == 0 {
+                                continue;
+                            }
+                            let wa = a.w[idx];
+                            for ni in 0..jw {
+                                let p = mul(sa, bs[ni]);
+                                if p != 0 {
+                                    arow_acc[ni] += (p as i128)
+                                        << (wa + bw[ni] + off);
+                                }
+                            }
+                        }
+                    }
+                    for (mi, row) in
+                        acc.iter().enumerate().take(iw)
+                    {
+                        accbuf[(r + mi) * n + j
+                            ..(r + mi) * n + j + jw]
+                            .copy_from_slice(&row[..jw]);
+                    }
+                    j += jw;
+                }
+                r += iw;
+            }
+            j0 = jend;
+        }
+        k0 = k1;
+    }
+    for (o, &v) in out.iter_mut().zip(&accbuf) {
+        *o = encode_acc_i128(v, P16_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
+/// P16 deep-reduction loop (k beyond [`lut::P16_CHUNK`]): the
+/// reduction is carved into chunks that fit the `i128` headroom, each
+/// chunk accumulates at full micro-loop speed in `i128` fixed point,
+/// and the exact partial sum is folded into a per-output
+/// [`Quire`] via one `mac_raw` per chunk — PDPU-style fused
+/// accumulation. Versus the pre-chunking quire panel (one 512-bit
+/// quire walk per MAC) this pays the quire cost once per `kc` MACs.
+/// Both the `i128` partials and the quire folds are exact, so the
+/// result is bit-identical to the scalar quire reference.
+fn rows_p16_deepk(a: &DecodedPlan, b: &DecodedPlan,
+                  bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                  out: &mut [u64], tile: TileConfig,
+                  kc: Option<usize>) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    // Chunks must stay within the i128 headroom bound.
+    let cs = kc.unwrap_or(lut::P16_CHUNK).min(lut::P16_CHUNK);
+    let panel = tile.p16_panel.max(1).min(n.max(1));
+    let mut quires: Vec<Quire> =
+        (0..panel).map(|_| Quire::new(fmt)).collect();
+    let mut acc = vec![0i128; panel];
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(panel);
+        for r in 0..nrows {
+            let i = i0 + r;
+            for q in quires[..jw].iter_mut() {
+                q.clear();
+            }
+            if let Some(bd) = bias {
+                for (ni, q) in quires[..jw].iter_mut().enumerate() {
+                    let s = bd.sig[j0 + ni];
+                    if s != 0 {
+                        q.mac_raw(s.unsigned_abs() as u128,
+                                  bd.w[j0 + ni], s < 0);
+                    }
+                }
+            }
+            let mut k0 = 0usize;
+            while k0 < k {
+                let k1 = (k0 + cs).min(k);
+                acc[..jw].fill(0);
+                for kk in k0..k1 {
+                    let sa = a.sig[i * k + kk];
+                    if sa == 0 {
+                        continue;
+                    }
+                    let wa = a.w[i * k + kk];
+                    let bs = &b.sig[kk * n + j0..kk * n + j0 + jw];
+                    let bw = &b.w[kk * n + j0..kk * n + j0 + jw];
+                    for (ni, slot) in
+                        acc[..jw].iter_mut().enumerate()
+                    {
+                        let p = sa * bs[ni];
+                        if p != 0 {
+                            *slot +=
+                                (p as i128) << (wa + bw[ni] + off);
+                        }
+                    }
+                }
+                for (ni, q) in quires[..jw].iter_mut().enumerate() {
+                    let v = acc[ni];
+                    if v != 0 {
+                        // The partial sum is v * 2^-56 exactly; one
+                        // exact quire fold per chunk.
+                        q.mac_raw(v.unsigned_abs(), -off, v < 0);
+                    }
+                }
+                k0 = k1;
+            }
+            for (ni, q) in quires[..jw].iter().enumerate() {
+                out[r * n + j0 + ni] = q.to_posit();
+            }
+        }
+        j0 += jw;
     }
 }
 
@@ -619,6 +997,88 @@ fn rows_quire_panel(a: &DecodedPlan, b: &DecodedPlan,
     }
 }
 
+/// Row-block height of the k-chunked quire loop: a block of rows
+/// shares each streamed B k-slice, and the persistent quire grid
+/// stays small (8 × panel × 64 B ≈ 16 KiB at the default panel).
+const QUIRE_KCHUNK_ROWS: usize = 8;
+
+/// P32 / generic-format streaming k-chunked loop: a
+/// [`QUIRE_KCHUNK_ROWS`]-row block holds a persistent grid of quires
+/// while the reduction streams past in `kc`-deep chunks — each
+/// chunk's B slice (`kc` × panel planar columns) stays cache-resident
+/// across the whole row block, instead of the full k-deep panel
+/// being dragged through cache once per row. Quire adds are exact
+/// two's-complement adds, so the reordering is bit-identical to
+/// [`rows_quire_panel`].
+#[allow(clippy::too_many_arguments)]
+fn rows_quire_kchunk(a: &DecodedPlan, b: &DecodedPlan,
+                     bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                     out: &mut [u64], tile: TileConfig, kc: usize) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let panel = tile.p32_panel.max(1).min(n.max(1));
+    let rb_max = QUIRE_KCHUNK_ROWS.min(nrows.max(1));
+    let mut quires: Vec<Quire> =
+        (0..panel * rb_max).map(|_| Quire::new(fmt)).collect();
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(panel);
+        let mut r0 = 0usize;
+        while r0 < nrows {
+            let rb = (nrows - r0).min(rb_max);
+            for q in quires[..rb * jw].iter_mut() {
+                q.clear();
+            }
+            if let Some(bd) = bias {
+                for ri in 0..rb {
+                    for ni in 0..jw {
+                        let s = bd.sig[j0 + ni];
+                        if s != 0 {
+                            quires[ri * jw + ni].mac_raw(
+                                s.unsigned_abs() as u128,
+                                bd.w[j0 + ni], s < 0);
+                        }
+                    }
+                }
+            }
+            let mut k0 = 0usize;
+            while k0 < k {
+                let k1 = (k0 + kc).min(k);
+                for ri in 0..rb {
+                    let i = i0 + r0 + ri;
+                    let qrow = &mut quires[ri * jw..(ri + 1) * jw];
+                    for kk in k0..k1 {
+                        let sa = a.sig[i * k + kk];
+                        if sa == 0 {
+                            continue;
+                        }
+                        let wa = a.w[i * k + kk];
+                        let bs =
+                            &b.sig[kk * n + j0..kk * n + j0 + jw];
+                        let bw = &b.w[kk * n + j0..kk * n + j0 + jw];
+                        for (ni, q) in qrow.iter_mut().enumerate() {
+                            let p = sa * bs[ni];
+                            if p != 0 {
+                                q.mac_raw(p.unsigned_abs() as u128,
+                                          wa + bw[ni], p < 0);
+                            }
+                        }
+                    }
+                }
+                k0 = k1;
+            }
+            for ri in 0..rb {
+                for ni in 0..jw {
+                    out[(r0 + ri) * n + j0 + ni] =
+                        quires[ri * jw + ni].to_posit();
+                }
+            }
+            r0 += rb;
+        }
+        j0 += jw;
+    }
+}
+
 /// Quire baseline (PR 1): one full-width row of quires, all of B
 /// streamed per output row. Kept callable for the bench comparisons.
 fn rows_quire_unblocked(a: &DecodedPlan, b: &DecodedPlan,
@@ -673,14 +1133,34 @@ mod tests {
         assert_eq!(TileConfig::parse("").unwrap(),
                    TileConfig::default());
         let cfg = TileConfig::parse(
-            "p16_panel=48, p32_panel=16,steal_rows=2").unwrap();
+            "p16_panel=48, p32_panel=16,steal_rows=2,k_chunk=256")
+            .unwrap();
         assert_eq!(cfg,
                    TileConfig { p16_panel: 48, p32_panel: 16,
-                                steal_rows: 2 });
+                                steal_rows: 2, k_chunk: 256 });
         // Trailing comma is tolerated; whitespace is trimmed.
         let cfg = TileConfig::parse(" p32_panel = 8 ,").unwrap();
         assert_eq!(cfg.p32_panel, 8);
         assert_eq!(cfg.p16_panel, TileConfig::default().p16_panel);
+        assert_eq!(cfg.k_chunk, 0);
+    }
+
+    #[test]
+    fn k_chunk_threshold_semantics() {
+        // Explicit chunk: engages strictly past the chunk depth.
+        let t = TileConfig { k_chunk: 64, ..TileConfig::default() };
+        assert_eq!(t.k_chunk_for(64), None);
+        assert_eq!(t.k_chunk_for(65), Some(64));
+        assert_eq!(t.k_chunk_for(1), None);
+        // Automatic: engages past K_CHUNK_AUTO with the default depth.
+        let d = TileConfig::default();
+        assert_eq!(d.k_chunk_for(K_CHUNK_AUTO), None);
+        assert_eq!(d.k_chunk_for(K_CHUNK_AUTO + 1),
+                   Some(K_CHUNK_DEFAULT));
+        // A huge explicit chunk disables chunking for any real k.
+        let off = TileConfig { k_chunk: usize::MAX,
+                               ..TileConfig::default() };
+        assert_eq!(off.k_chunk_for(1 << 20), None);
     }
 
     #[test]
@@ -696,15 +1176,18 @@ mod tests {
         assert!(TileConfig::parse("p16_panel=0").is_err());
         assert!(TileConfig::parse("p16_panel=3").is_err());
         assert!(TileConfig::parse("p32_panel=0").is_err());
-        // steal_rows=0 must be expressed by omission, not explicitly.
+        // steal_rows=0 / k_chunk=0 must be expressed by omission, not
+        // explicitly.
         assert!(TileConfig::parse("steal_rows=0").is_err());
+        assert!(TileConfig::parse("k_chunk=0").is_err());
         // Lane-minimum panels are the smallest accepted extremes.
-        let cfg = TileConfig::parse(
-            &format!("p16_panel={P16_NR},p32_panel=1,steal_rows=1"))
+        let cfg = TileConfig::parse(&format!(
+            "p16_panel={P16_NR},p32_panel=1,steal_rows=1,k_chunk=1"))
             .unwrap();
         assert_eq!(cfg.p16_panel, P16_NR);
         assert_eq!(cfg.p32_panel, 1);
         assert_eq!(cfg.steal_rows, 1);
+        assert_eq!(cfg.k_chunk, 1);
         // validate() catches builder-set (non-spec) bad values too.
         assert!(TileConfig { p16_panel: 2, ..TileConfig::default() }
             .validate()

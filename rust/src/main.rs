@@ -6,7 +6,11 @@
 //!   serve             run the precision-adaptive serving engine on
 //!                     synthetic traffic (--requests, --rate-us,
 //!                     --policy, --shards, --batch, --affinity
-//!                     least-loaded|pinned-mode, --stats-json PATH,
+//!                     least-loaded|pinned-mode, --max-queue N
+//!                     backpressure bound (0 = unbounded),
+//!                     --autotune off|first-use|warmup,
+//!                     --config PATH fleet config JSON (merge order
+//!                     file < env < CLI), --stats-json PATH,
 //!                     --stats-interval-ms N). Backend selection is
 //!                     automatic: PJRT artifacts when present,
 //!                     otherwise the sharded planar posit kernel on
@@ -131,27 +135,52 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.num_or("requests", 256);
     let rate_us: u64 = args.num_or("rate-us", 200);
-    let shards: usize = args.num_or("shards", 0); // 0 = auto
-    let batch: usize = args.num_or("batch", 32);
-    let policy = match args.get_or("policy", "energy").as_str() {
-        "accuracy" => RoutePolicy::AccuracyFirst,
-        "balanced" => RoutePolicy::Balanced,
-        _ => RoutePolicy::EnergyFirst,
-    };
-    let affinity = match args.get_or("affinity", "least-loaded")
-        .as_str()
-    {
-        "pinned-mode" => ShardAffinity::PinnedMode,
-        _ => ShardAffinity::LeastLoaded,
-    };
 
-    // Env (SPADE_*) first, CLI flags on top — one validated config.
-    let mut builder = EngineBuilder::from_env()?
-        .model(args.get_or("model", "mlp"))
-        .policy(policy)
-        .shards(shards)
-        .affinity(affinity)
-        .batch(batch.max(1));
+    // Merge order: config file < SPADE_* environment < CLI flags —
+    // each CLI flag only overrides when explicitly given, so a fleet
+    // config file actually drives the deployment.
+    let base = match args.options.get("config") {
+        Some(path) => {
+            let body = std::fs::read_to_string(path).map_err(|e| {
+                anyhow::anyhow!("--config {path}: {e}")
+            })?;
+            spade::api::EngineConfig::from_json(&body)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?
+        }
+        None => spade::api::EngineConfig::default(),
+    };
+    let mut builder = EngineBuilder::from_config(
+        spade::api::EngineConfig::from_env_over(base)?);
+    if let Some(m) = args.options.get("model") {
+        builder = builder.model(m.clone());
+    }
+    if let Some(p) = args.options.get("policy") {
+        builder = builder.policy(match p.as_str() {
+            "accuracy" => RoutePolicy::AccuracyFirst,
+            "balanced" => RoutePolicy::Balanced,
+            _ => RoutePolicy::EnergyFirst,
+        });
+    }
+    if args.options.contains_key("shards") {
+        builder = builder.shards(args.num_or("shards", 0));
+    }
+    if let Some(a) = args.options.get("affinity") {
+        builder = builder.affinity(match a.as_str() {
+            "pinned-mode" => ShardAffinity::PinnedMode,
+            _ => ShardAffinity::LeastLoaded,
+        });
+    }
+    if args.options.contains_key("batch") {
+        builder =
+            builder.batch(args.num_or("batch", 32usize).max(1));
+    }
+    if args.options.contains_key("max-queue") {
+        builder = builder.max_queue(args.num_or("max-queue", 0));
+    }
+    if let Some(mode) = args.options.get("autotune") {
+        builder = builder.autotune(
+            spade::api::EngineConfig::parse_autotune(mode)?);
+    }
     let stats_json = args.options.get("stats-json").cloned();
     if let Some(path) = &stats_json {
         builder = builder.stats_json(path).stats_interval(
@@ -159,6 +188,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 args.num_or("stats-interval-ms", 1000u64).max(1)));
     }
     let engine = builder.build()?;
+
+    // Warm up before traffic: pre-tune every GEMM regime serving can
+    // dispatch and pre-build the kernel tables, so no request ever
+    // pays a probe. Full batches land in the square/deep-k regimes;
+    // under-filled batches (slow traffic flushing early) are skinny —
+    // cover all three classes explicitly.
+    if engine.config().autotune != spade::api::AutotuneMode::Off {
+        let b = engine.config().batch.max(16);
+        let probes = engine.warm_up(&[
+            (b, 256, 64),  // square: filled batches
+            (b, 2048, 64), // deep-k: deep reductions
+            (4, 256, 64),  // skinny: under-filled batches
+        ]);
+        println!("warm-up: {probes} autotune probe(s)");
+    }
 
     let handle = engine.serve()?;
     match handle.backend() {
@@ -177,15 +221,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut gen = TrafficGen::new(7, rate_us, handle.input_len());
 
     println!("serving {requests} requests (mean gap {rate_us} us, \
-              policy {policy:?}, batch {batch}) ...");
+              policy {:?}, batch {}) ...",
+             engine.config().effective_policy(),
+             engine.config().batch);
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
+    let mut rejected = 0usize;
     for r in gen.burst(requests) {
-        rxs.push(handle.submit(spade::coordinator::InferenceRequest {
+        match handle.submit(spade::coordinator::InferenceRequest {
             id: r.id,
             input: r.input,
             mode: r.mode,
-        }));
+        }) {
+            Ok(rx) => rxs.push(rx),
+            // Backpressure (--max-queue): shed the request and keep
+            // going — exactly what a fleet edge would do.
+            Err(_) => rejected += 1,
+        }
     }
     for rx in rxs {
         let _ = rx.recv();
@@ -193,6 +245,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed();
     let m = handle.shutdown();
     println!("{}", m.summary());
+    if rejected > 0 {
+        println!("rejected at submit (overload): {rejected}");
+    }
     println!("throughput: {:.0} req/s",
              requests as f64 / wall.as_secs_f64());
     if let Some(path) = stats_json {

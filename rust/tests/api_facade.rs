@@ -126,7 +126,7 @@ fn tuned_engine_is_bit_identical_to_default() {
     let tuned = Engine::builder()
         .threads(5)
         .tile(TileConfig { p16_panel: P16_NR, p32_panel: 1,
-                           steal_rows: 1 })
+                           steal_rows: 1, k_chunk: 8 })
         .inner_path(InnerPath::Portable)
         .build()
         .unwrap();
@@ -152,7 +152,7 @@ fn tile_extremes_property_under_concurrency() {
     // sequential default-config answer.
     let extreme = Engine::builder()
         .tile(TileConfig { p16_panel: P16_NR, p32_panel: 1,
-                           steal_rows: 1 })
+                           steal_rows: 1, k_chunk: 1 })
         .threads(7)
         .build()
         .unwrap();
@@ -239,7 +239,7 @@ fn engine_serving_matches_direct_coordinator() {
     assert!(handle.backend().is_none(), "explicit model");
     let rxs: Vec<_> = requests(&inputs)
         .into_iter()
-        .map(|r| handle.submit(r))
+        .map(|r| handle.submit(r).unwrap())
         .collect();
     let facade: Vec<Vec<f32>> = rxs
         .into_iter()
@@ -260,7 +260,7 @@ fn engine_serving_matches_direct_coordinator() {
         Coordinator::start_with_model(tiny_model(), cfg).unwrap();
     let rxs: Vec<_> = requests(&inputs)
         .into_iter()
-        .map(|r| coord.submit(r))
+        .map(|r| coord.submit(r).unwrap())
         .collect();
     let direct: Vec<Vec<f32>> = rxs
         .into_iter()
@@ -288,18 +288,25 @@ fn builder_validation_rejects_bad_configs() {
     // A typed-out bad tile is caught at build() too.
     assert!(Engine::builder()
         .tile(TileConfig { p16_panel: 1, p32_panel: 0,
-                           steal_rows: 0 })
+                           steal_rows: 0, k_chunk: 0 })
         .build()
         .is_err());
-    // And a good spec round-trips into the config.
+    // k_chunk=0 in a spec is an error (omit for automatic sizing).
+    assert!(EngineBuilder::new().tile_spec("k_chunk=0").is_err());
+    // And a good spec round-trips into the config as an explicit pin.
     let e = EngineBuilder::new()
-        .tile_spec("p16_panel=8,steal_rows=3")
+        .tile_spec("p16_panel=8,steal_rows=3,k_chunk=128")
         .unwrap()
         .build()
         .unwrap();
-    assert_eq!(e.config().tile.p16_panel, 8);
-    assert_eq!(e.config().tile.steal_rows, 3);
-    assert_eq!(e.kernel_config().tile.steal_rows, 3);
+    let tile = e.config().tile.expect("spec pins the tile");
+    assert_eq!(tile.p16_panel, 8);
+    assert_eq!(tile.steal_rows, 3);
+    assert_eq!(tile.k_chunk, 128);
+    assert_eq!(e.kernel_config().tile.unwrap().steal_rows, 3);
+    // No spec -> no pin: the autotuner stays in charge of the tile.
+    assert_eq!(Engine::builder().build().unwrap().config().tile,
+               None);
 }
 
 #[test]
@@ -311,21 +318,40 @@ fn from_env_parses_once_and_validates() {
     assert!(EngineConfig::from_env().is_err(),
             "bad tile spec must fail from_env");
     std::env::set_var("SPADE_KERNEL_TILE",
-                      "p16_panel=48,steal_rows=2");
+                      "p16_panel=48,steal_rows=2,k_chunk=256");
     std::env::set_var("SPADE_KERNEL_THREADS", "3");
+    std::env::set_var("SPADE_KERNEL_AUTOTUNE", "warmup");
     let cfg = EngineConfig::from_env().unwrap();
-    assert_eq!(cfg.tile.p16_panel, 48);
-    assert_eq!(cfg.tile.steal_rows, 2);
+    let tile = cfg.tile.expect("SPADE_KERNEL_TILE pins the tile");
+    assert_eq!(tile.p16_panel, 48);
+    assert_eq!(tile.steal_rows, 2);
+    assert_eq!(tile.k_chunk, 256);
     assert_eq!(cfg.threads, Some(3));
     assert_eq!(cfg.pool_workers, Some(3));
+    assert_eq!(cfg.autotune, spade::api::AutotuneMode::Warmup);
+    std::env::set_var("SPADE_KERNEL_AUTOTUNE", "sometimes");
+    assert!(EngineConfig::from_env().is_err(),
+            "unknown autotune mode must fail loudly");
+    std::env::set_var("SPADE_KERNEL_AUTOTUNE", "first-use");
     std::env::set_var("SPADE_KERNEL_THREADS", "many");
     assert!(EngineConfig::from_env().is_err(),
             "unparsable thread count must fail loudly");
     std::env::remove_var("SPADE_KERNEL_THREADS");
     std::env::remove_var("SPADE_KERNEL_TILE");
+    std::env::remove_var("SPADE_KERNEL_AUTOTUNE");
     let cfg = EngineConfig::from_env().unwrap();
     assert_eq!(cfg.threads, None);
-    assert_eq!(cfg.tile, TileConfig::default());
+    assert_eq!(cfg.tile, None);
+    assert_eq!(cfg.autotune, spade::api::AutotuneMode::Off);
+    // Env overrides layer over a file-loaded base (file < env):
+    // with no SPADE_* set, the base passes through untouched.
+    let mut base = EngineConfig::default();
+    base.shards = 3;
+    base.tile = Some(TileConfig { p32_panel: 8,
+                                  ..TileConfig::default() });
+    let merged = EngineConfig::from_env_over(base.clone()).unwrap();
+    assert_eq!(merged.shards, 3);
+    assert_eq!(merged.tile, base.tile);
 }
 
 #[test]
@@ -378,9 +404,84 @@ fn stats_json_dump_is_written_and_parseable() {
     // Kernel dispatch counters ride along for fleet dashboards.
     let k = j.get("kernel").unwrap();
     assert!(k.get("gemms").unwrap().as_usize().unwrap() > 0);
+    assert!(k.get("autotune_probes").unwrap().as_usize().is_some());
     // pool_workers is 0 until some GEMM actually fans out — the dump
     // must report, never create, the pool.
     assert!(k.get("pool_workers").unwrap().as_usize().is_some());
     assert!(k.get("pool_jobs").unwrap().as_usize().is_some());
+    // No backpressure configured -> no rejects, but the field is
+    // always present for dashboards.
+    assert_eq!(j.get("rejected").unwrap().as_usize(), Some(0));
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn warm_up_pretunes_so_requests_never_probe() {
+    // Warmup mode: probes happen inside warm_up (one per untuned
+    // (precision, shape class) covered), and the kernel probe
+    // counter stays flat across every later GEMM of those classes.
+    // This is the only test in this binary that probes — the counter
+    // is process-wide (kernel_kchunk owns the FirstUse tests in its
+    // own binary for the same reason).
+    let engine = Engine::builder()
+        .autotune(spade::api::AutotuneMode::Warmup)
+        .build()
+        .unwrap();
+    let shapes = [(16usize, 32usize, 16usize), (2, 2048, 4)];
+    let before = kernel::counters().autotune_probes;
+    let probes = engine.warm_up(&shapes);
+    let after = kernel::counters().autotune_probes;
+    assert_eq!(after - before, probes as u64,
+               "warm_up reports exactly the probes it ran");
+    // Classes covered: (square + deep-k) × 3 precisions on first
+    // call; a second warm-up finds everything cached.
+    assert_eq!(engine.warm_up(&shapes), 0,
+               "everything already tuned");
+    // Post-warm-up traffic of the covered classes never probes, and
+    // tuned results stay bit-identical to the default config.
+    let mut rng = SplitMix64::new(0xcafe);
+    let base = Engine::builder().build().unwrap(); // autotune off
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        let (m, k, n) = (16usize, 32usize, 16usize);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        // Engine::gemm threads each engine's own config explicitly,
+        // so the two engines stay independent of whichever kernel
+        // slice was installed as the process default last.
+        let tuned = engine.gemm(&pa, &pb, None);
+        assert_eq!(tuned, base.gemm(&pa, &pb, None), "{fmt:?}");
+    }
+    assert_eq!(kernel::counters().autotune_probes, after,
+               "no probe on the request path after warm-up");
+}
+
+#[test]
+fn facade_backpressure_is_observable() {
+    // max_queue through the builder: rejects surface as the typed
+    // error on ServeHandle::submit and in Metrics::rejected.
+    let engine = Engine::builder()
+        .shards(1)
+        .max_queue(2)
+        .batch(64)
+        .max_wait(Duration::from_secs(30))
+        .build()
+        .unwrap();
+    let handle = engine.serve_model(tiny_model()).unwrap();
+    let req = |id: u64| InferenceRequest {
+        id,
+        input: vec![0.5; 16],
+        mode: None,
+    };
+    let rx0 = handle.submit(req(0)).unwrap();
+    let rx1 = handle.submit(req(1)).unwrap();
+    let err = handle.submit(req(2)).unwrap_err();
+    assert_eq!(err.capacity, 2);
+    assert_eq!(err.pending, 2);
+    let m = handle.shutdown();
+    assert_eq!(rx0.recv().unwrap().id, 0);
+    assert_eq!(rx1.recv().unwrap().id, 1);
+    assert_eq!(m.total_requests, 2);
+    assert_eq!(m.rejected, 1);
 }

@@ -122,11 +122,13 @@ fn coordinator_serves_dataset_traffic_correctly() {
     let mut hits = 0;
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            coord.submit(InferenceRequest {
-                id: i as u64,
-                input: pix[i * per..(i + 1) * per].to_vec(),
-                mode: None,
-            })
+            coord
+                .submit(InferenceRequest {
+                    id: i as u64,
+                    input: pix[i * per..(i + 1) * per].to_vec(),
+                    mode: None,
+                })
+                .unwrap()
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -171,7 +173,9 @@ fn serve_auto_fallback_is_sharded_and_consistent() {
                 let input: Vec<f32> = (0..len)
                     .map(|j| ((id as usize * len + j) % 17) as f32 / 17.0)
                     .collect();
-                coord.submit(InferenceRequest { id, input, mode: None })
+                coord
+                    .submit(InferenceRequest { id, input, mode: None })
+                    .unwrap()
             })
             .collect();
         let logits = rxs

@@ -1,0 +1,256 @@
+//! Exactness and autotuner tests for the self-tuning kernel (PR 5).
+//!
+//! Contracts under test:
+//!
+//! * **k-chunked streaming is bit-exact**: for every precision, every
+//!   chunk-boundary relationship (k = 1, threshold−1, threshold,
+//!   threshold+1, prime k, auto-threshold crossings) and
+//!   NaR-poisoned operands, the chunked loops produce words
+//!   bit-identical to the scalar decode-per-MAC quire oracle and to
+//!   the unchunked default config — integer/quire accumulation is
+//!   associative, so chunking may never change a single rounding.
+//! * **The P16 hybrid product LUT path is exact** (bucketed gather,
+//!   exact off-bucket fallback) and bit-identical to every other
+//!   path.
+//! * **First-use autotuning probes once, then never again** for a
+//!   (precision, shape class), leaves results bit-identical, and
+//!   `Off` leaves the defaults (and the tuned table) untouched.
+//!
+//! This binary deliberately owns all autotune-probing integration
+//! tests: the tuned-winner table and probe counter are process-wide,
+//! so keeping the probing tests in one binary (and the `api_facade`
+//! warm-up test in another) avoids cross-test counter races.
+
+use spade::kernel::{self, counters, gemm_single_path,
+                    gemm_with_config, AutotuneMode, DecodedPlan,
+                    InnerPath, KernelConfig, TileConfig,
+                    K_CHUNK_AUTO};
+use spade::posit::{from_f64, PositFormat, Quire, P16_FMT, P32_FMT,
+                   P8_FMT};
+use spade::util::SplitMix64;
+
+/// Scalar decode-per-MAC quire reference — the oracle.
+fn quire_ref(aw: &[u64], bw: &[u64], bias: Option<&[u64]>, m: usize,
+             k: usize, n: usize, fmt: PositFormat) -> Vec<u64> {
+    let mut out = vec![0u64; m * n];
+    let mut q = Quire::new(fmt);
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for kk in 0..k {
+                q.mac(aw[i * k + kk], bw[kk * n + j]);
+            }
+            if let Some(bs) = bias {
+                q.add_posit(bs[j]);
+            }
+            out[i * n + j] = q.to_posit();
+        }
+    }
+    out
+}
+
+fn rand_words(rng: &mut SplitMix64, len: usize, fmt: PositFormat)
+              -> Vec<u64> {
+    (0..len)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                rng.next_u64() & fmt.mask() // raw patterns, NaR incl.
+            } else {
+                from_f64(rng.wide(-6, 6), fmt)
+            }
+        })
+        .collect()
+}
+
+/// A config that pins an explicit k-chunk depth (chunking engages for
+/// any k > depth) and otherwise defaults. The path is pinned to
+/// `Portable` so the P8 chunked loop is exercised on every host —
+/// under `Auto` an AVX2 machine keeps the gather body instead of
+/// chunking (that regime choice belongs to the autotuner).
+fn chunked_cfg(k_chunk: usize) -> KernelConfig {
+    KernelConfig {
+        tile: Some(TileConfig { k_chunk, ..TileConfig::DEFAULT }),
+        path: InnerPath::Portable,
+        ..KernelConfig::DEFAULT
+    }
+}
+
+#[test]
+fn chunk_boundaries_are_bit_exact_for_all_precisions() {
+    // Threshold t = 16: k sweeps below / at / just past / far past
+    // the boundary, plus primes that leave ragged tails, for every
+    // precision, with NaR-poisoned rows and random raw patterns.
+    let t = 16usize;
+    let (m, n) = (3usize, 5usize);
+    let mut rng = SplitMix64::new(0xc4a2);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for k in [1usize, t - 1, t, t + 1, 23, 97] {
+            let mut aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            // Poison one full A row with NaR so the masking pass is
+            // exercised across chunk boundaries too.
+            for kk in 0..k {
+                aw[k + kk] = fmt.nar();
+            }
+            let bias = if k % 2 == 0 {
+                Some(rand_words(&mut rng, n, fmt))
+            } else {
+                None
+            };
+            let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+            let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+            let want =
+                quire_ref(&aw, &bw, bias.as_deref(), m, k, n, fmt);
+            let default =
+                kernel::gemm(&pa, &pb, bias.as_deref());
+            assert_eq!(default, want, "{fmt:?} k={k} default");
+            // Chunked at depth t: engages whenever k > t.
+            let got = gemm_with_config(&pa, &pb, bias.as_deref(),
+                                       &chunked_cfg(t));
+            assert_eq!(got, want, "{fmt:?} k={k} chunk={t}");
+            // One-element chunks: the most boundary-heavy carving.
+            let got = gemm_with_config(&pa, &pb, bias.as_deref(),
+                                       &chunked_cfg(1));
+            assert_eq!(got, want, "{fmt:?} k={k} chunk=1");
+        }
+    }
+}
+
+#[test]
+fn auto_threshold_crossing_is_bit_exact() {
+    // k straddling K_CHUNK_AUTO flips the default config between the
+    // unchunked and auto-chunked loops; both sides must match the
+    // oracle. Skinny shapes keep the quire reference affordable.
+    let (m, n) = (2usize, 3usize);
+    let mut rng = SplitMix64::new(0xfeed);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for k in [K_CHUNK_AUTO, K_CHUNK_AUTO + 1] {
+            let aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+            let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+            let want = quire_ref(&aw, &bw, None, m, k, n, fmt);
+            assert_eq!(kernel::gemm(&pa, &pb, None), want,
+                       "{fmt:?} k={k}");
+        }
+    }
+}
+
+#[test]
+fn p16_deep_reduction_folds_chunks_exactly() {
+    // k beyond the i128 headroom bound (P16_CHUNK = 16384): the
+    // deep-k path accumulates i128 chunks and folds each into a
+    // quire. Worst case for accumulator growth — all maxpos products
+    // — plus a random instance, both against the oracle.
+    let fmt = P16_FMT;
+    let k = 16384 + 3;
+    let mp = fmt.maxpos_word();
+    let aw = vec![mp; k];
+    let bw = vec![mp; k];
+    let pa = DecodedPlan::from_words(aw.clone(), 1, k, fmt);
+    let pb = DecodedPlan::from_words(bw.clone(), k, 1, fmt);
+    assert_eq!(kernel::gemm(&pa, &pb, None),
+               quire_ref(&aw, &bw, None, 1, k, 1, fmt),
+               "all-maxpos deep reduction");
+    let mut rng = SplitMix64::new(7);
+    let aw = rand_words(&mut rng, k, fmt);
+    let bw = rand_words(&mut rng, k, fmt);
+    let pa = DecodedPlan::from_words(aw.clone(), 1, k, fmt);
+    let pb = DecodedPlan::from_words(bw.clone(), k, 1, fmt);
+    let want = quire_ref(&aw, &bw, None, 1, k, 1, fmt);
+    assert_eq!(kernel::gemm(&pa, &pb, None), want,
+               "random deep reduction");
+    // An explicit shallower chunk folds more often — same words.
+    assert_eq!(gemm_with_config(&pa, &pb, None, &chunked_cfg(256)),
+               want, "random deep reduction, 256-chunks");
+}
+
+#[test]
+fn chunking_is_thread_invariant() {
+    // Chunked loops under the work-stealing pool at several thread
+    // counts: every fan-out must reproduce the sequential words.
+    let fmt = P16_FMT;
+    let (m, k, n) = (13, 130, 7);
+    let mut rng = SplitMix64::new(31);
+    let aw = rand_words(&mut rng, m * k, fmt);
+    let bw = rand_words(&mut rng, k * n, fmt);
+    let pa = DecodedPlan::from_words(aw, m, k, fmt);
+    let pb = DecodedPlan::from_words(bw, k, n, fmt);
+    let mut cfg = chunked_cfg(32);
+    cfg.threads = Some(1);
+    let seq = gemm_with_config(&pa, &pb, None, &cfg);
+    for t in [2usize, 3, 8] {
+        cfg.threads = Some(t);
+        assert_eq!(gemm_with_config(&pa, &pb, None, &cfg), seq,
+                   "threads={t}");
+    }
+}
+
+#[test]
+fn hybrid_lut_path_is_bit_identical() {
+    // The pinned Hybrid path must agree with Auto for every format
+    // (P16 takes the bucketed LUT; others fall back to lane-fused).
+    let mut rng = SplitMix64::new(0x1b);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 9, 11),
+                            (3, 40, 6)] {
+            let aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            let bias = Some(rand_words(&mut rng, n, fmt));
+            let pa = DecodedPlan::from_words(aw, m, k, fmt);
+            let pb = DecodedPlan::from_words(bw, k, n, fmt);
+            let auto = gemm_single_path(&pa, &pb, bias.as_deref(),
+                                        InnerPath::Auto)
+                .unwrap();
+            let hyb = gemm_single_path(&pa, &pb, bias.as_deref(),
+                                       InnerPath::Hybrid)
+                .unwrap();
+            assert_eq!(hyb, auto, "{fmt:?} ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn first_use_autotune_probes_once_and_stays_exact() {
+    // FirstUse: the first GEMM of an untuned (precision, class)
+    // probes exactly once; the second dispatch of the same class
+    // reuses the cached winner; results are bit-identical to Off.
+    // (This binary owns all probing tests — see module docs.)
+    let fmt = P32_FMT; // quire paths: the least LUT-assisted case
+    let (m, k, n) = (24usize, 24usize, 24usize); // Square class
+    let mut rng = SplitMix64::new(0xa11);
+    let aw = rand_words(&mut rng, m * k, fmt);
+    let bw = rand_words(&mut rng, k * n, fmt);
+    let pa = DecodedPlan::from_words(aw, m, k, fmt);
+    let pb = DecodedPlan::from_words(bw, k, n, fmt);
+
+    let off = gemm_with_config(&pa, &pb, None, &KernelConfig::DEFAULT);
+    let tuned_cfg = KernelConfig {
+        autotune: AutotuneMode::FirstUse,
+        ..KernelConfig::DEFAULT
+    };
+    let before = counters().autotune_probes;
+    let first = gemm_with_config(&pa, &pb, None, &tuned_cfg);
+    let after_first = counters().autotune_probes;
+    assert_eq!(first, off, "autotuned words must match defaults");
+    assert_eq!(after_first, before + 1,
+               "first untuned dispatch runs exactly one probe");
+    let second = gemm_with_config(&pa, &pb, None, &tuned_cfg);
+    assert_eq!(second, off);
+    assert_eq!(counters().autotune_probes, after_first,
+               "the cached winner must be reused, not re-probed");
+
+    // Warmup mode never probes inline — even for an untuned class.
+    let warm_cfg = KernelConfig {
+        autotune: AutotuneMode::Warmup,
+        ..KernelConfig::DEFAULT
+    };
+    let skinny = DecodedPlan::from_words(
+        vec![from_f64(1.5, fmt); 2 * 40], 2, 40, fmt);
+    let skinny_b = DecodedPlan::from_words(
+        vec![from_f64(0.5, fmt); 40 * 3], 40, 3, fmt);
+    let probes = counters().autotune_probes;
+    let _ = gemm_with_config(&skinny, &skinny_b, None, &warm_cfg);
+    assert_eq!(counters().autotune_probes, probes,
+               "Warmup must not probe on the request path");
+}

@@ -15,8 +15,10 @@ echo "== env hygiene gate (all SPADE_* reads centralized) =="
 # PR 4 contract: SPADE_* environment variables are read in exactly one
 # module — rust/src/api/env.rs — and parsed once at the process edge
 # (EngineConfig::from_env). Any other `env::var("SPADE_...` in the
-# Rust tree fails the build. Runs before the cargo gates so it works
-# even on machines without a toolchain.
+# Rust tree fails the build; new knobs (e.g. PR 5's
+# SPADE_KERNEL_AUTOTUNE) are covered automatically by the prefix
+# match. Runs before the cargo gates so it works even on machines
+# without a toolchain.
 env_hits=$(grep -RInE 'env::var[[:space:]]*\([[:space:]]*"SPADE_' \
                --include='*.rs' rust examples \
            | grep -v '^rust/src/api/env\.rs:' || true)
@@ -48,10 +50,13 @@ echo "== cargo bench --bench hotpath (smoke gate) =="
 # SPADE_BENCH_QUICK=0 for the full-size run.
 SPADE_BENCH_QUICK="${SPADE_BENCH_QUICK:-1}" cargo bench --bench hotpath
 
-# The bench must have emitted the inner-loop and dispatch comparison
-# sections — a silent regression to the old loops would otherwise pass.
+# The bench must have emitted the inner-loop, dispatch, and
+# self-tuning comparison sections — a silent regression to the old
+# loops (or a lost autotune/k-chunk/hybrid-LUT measurement) would
+# otherwise pass.
 for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
-           steal_vs_fixed_split; do
+           steal_vs_fixed_split autotuned_vs_default \
+           kchunk_vs_full_k p16_hybrid_lut_vs_exact; do
   if ! grep -q "\"$key\"" BENCH_hotpath.json; then
     echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
     echo "        (did benches/hotpath.rs lose a comparison?)" >&2
