@@ -3,8 +3,13 @@
 //! datasets (DESIGN.md §1 — the claim under test is iso-accuracy of the
 //! posit pipeline vs float, a property of the numeric path).
 //!
-//! Run: `cargo bench --bench fig4_accuracy`
+//! Run: `cargo bench --bench fig4_accuracy [-- --no-fused]`
 //! Env: SPADE_FIG4_LIMIT (default 300) caps test images per model.
+//!
+//! The sweep reuses one fused engine session per model, so the
+//! interlayer plan buffers recycle across every precision pass.
+//! `--no-fused` sweeps the layer-wise escape hatch instead and
+//! cross-checks each pass bit-for-bit against the fused pipeline.
 
 mod common;
 
@@ -18,15 +23,18 @@ fn main() {
     // Env knobs route through the one sanctioned reader (api::env);
     // installing the parsed kernel config keeps SPADE_KERNEL_* tuning
     // effective for the forwards below.
-    spade::kernel::settings::install(
-        spade::api::EngineConfig::from_env()
-            .expect("invalid SPADE_* environment")
-            .kernel_config());
+    let cfg = spade::api::EngineConfig::from_env()
+        .expect("invalid SPADE_* environment");
+    spade::kernel::settings::install(cfg.kernel_config());
     let limit: usize = spade::api::env::fig4_limit().unwrap_or(300);
+    let no_fused = std::env::args().any(|a| a == "--no-fused");
+    let fused = cfg.fused && !no_fused;
 
     common::banner(&format!(
         "Fig. 4 — application accuracy, posit vs float (n<={limit} per \
-         model)"));
+         model{})",
+        if fused { ", fused session" }
+        else { ", layer-wise + fused cross-check" }));
     println!("{:<14} {:<14} {:>7} {:>7} {:>7} {:>7}   {}", "model",
              "dataset", "f32", "p32", "p16", "p8", "drop(p8-f32)");
     println!("{:-<78}", "");
@@ -46,12 +54,31 @@ fn main() {
         let (pix, labels) = ds.batch(0, n);
         let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
 
+        // One session per model for the whole mode sweep: weight plans
+        // are decoded once per (layer, mode) and the fused path's
+        // interlayer buffers recycle across the four passes.
+        let mut sess = nn::Session::new(&model).with_fused(fused);
+        let mut cross =
+            (!fused).then(|| nn::Session::new(&model).with_fused(true));
         let mut accs = Vec::new();
         for prec in Precision::ALL {
             let backend = if prec == Precision::F32 { Backend::F32 }
                           else { Backend::Posit };
             let (logits, _) =
-                nn::exec::forward(&model, &x, prec, backend).unwrap();
+                sess.forward(&x, prec, backend).unwrap();
+            if let Some(fsess) = cross.as_mut() {
+                let (flogits, _) =
+                    fsess.forward(&x, prec, backend).unwrap();
+                let same = logits
+                    .data
+                    .iter()
+                    .zip(&flogits.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()
+                             || (a.is_nan() && b.is_nan()));
+                assert!(same,
+                        "{name}/{}: fused and layer-wise logits diverge",
+                        prec.name());
+            }
             accs.push(nn::exec::accuracy(&logits, labels));
         }
         let drop = accs[0] - accs[3];

@@ -6,7 +6,9 @@
 //! streaming, the P16 hybrid product LUT vs the exact multiply,
 //! kernel thread scaling, work-stealing-vs-fixed-split dispatch,
 //! worker-pool-vs-scope spawn amortization, sharded serving
-//! throughput, PJRT dispatch. Each prints ops/s so before/after deltas
+//! throughput, the fused planar pipeline vs the layer-wise session
+//! (per-precision speedup + plan decode/encode ops avoided), PJRT
+//! dispatch. Each prints ops/s so before/after deltas
 //! are one diff away, and every metric is also written to
 //! `BENCH_hotpath.json` (op name -> M/s, `*_us` entries are
 //! microseconds, `*_req_s` are requests/s, `*_vs_*` are dimensionless
@@ -572,6 +574,62 @@ fn main() {
                   {:.1})",
                  m.mean_batch());
         log.record(&format!("serve_shard{shards}_req_s"), rps);
+    }
+
+    common::banner(
+        "fused planar pipeline vs layer-wise session (synthetic \
+         conv+dense model)");
+    {
+        use spade::nn::{Backend, Precision, Session, Tensor};
+        // Same 3-MAC-layer shape the fused-pipeline tests pin down:
+        // conv3x3 Same -> maxpool -> dense32 -> dense10 on 8x8x1.
+        let fm = Model::synthetic("bench-fused");
+        let nimg = if quick { 4usize } else { 16usize };
+        let pix: Vec<f32> = (0..nimg * 64).map(|_| rng.f32()).collect();
+        let x = Tensor::from_vec(&[nimg, 8, 8, 1], pix);
+        let mut total_avoided = 0u64;
+        for (tag, mode) in [("p8", Mode::P8x4), ("p16", Mode::P16x2),
+                            ("p32", Mode::P32x1)] {
+            let prec = Precision::Posit(mode);
+            let mut fused = Session::new(&fm);
+            let mut lw = Session::new(&fm).with_fused(false);
+            // Warm-up resolves autotune shape classes and fills the
+            // weight-plan caches on both paths before timing.
+            let _ = fused.forward(&x, prec, Backend::Posit).unwrap();
+            let _ = lw.forward(&x, prec, Backend::Posit).unwrap();
+            let t_lw = common::time_median(r3, || {
+                let _ = lw.forward(&x, prec, Backend::Posit).unwrap();
+            });
+            let t_fused = common::time_median(r3, || {
+                let _ =
+                    fused.forward(&x, prec, Backend::Posit).unwrap();
+            });
+            // Plan-op traffic per forward, from the kernel counters:
+            // the fusion's whole point is the interior decode/encode
+            // ops it removes.
+            let before = kernel::counters();
+            let _ = lw.forward(&x, prec, Backend::Posit).unwrap();
+            let mid = kernel::counters();
+            let _ = fused.forward(&x, prec, Backend::Posit).unwrap();
+            let after = kernel::counters();
+            let lw_ops = (mid.plan_decodes - before.plan_decodes)
+                + (mid.plan_encodes - before.plan_encodes);
+            let f_ops = (after.plan_decodes - mid.plan_decodes)
+                + (after.plan_encodes - mid.plan_encodes);
+            let avoided = lw_ops.saturating_sub(f_ops);
+            total_avoided += avoided;
+            println!("{tag} batch-{nimg}: layer-wise {:>7.2} ms  \
+                      fused {:>7.2} ms  ({:.2}x, {avoided} plan \
+                      decode/encode ops avoided per forward)",
+                     t_lw * 1e3, t_fused * 1e3, t_lw / t_fused);
+            log.record(&format!("fused_vs_layerwise_{tag}"),
+                       t_lw / t_fused);
+            log.record(
+                &format!("fused_vs_layerwise_{tag}_ops_avoided"),
+                avoided as f64);
+        }
+        log.record("fused_vs_layerwise_decodes_avoided",
+                   total_avoided as f64);
     }
 
     common::banner("PJRT artifact dispatch (mlp_p16_b32)");

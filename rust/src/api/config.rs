@@ -69,6 +69,13 @@ pub struct EngineConfig {
     /// (precision, shape class); `Warmup` probes only inside
     /// [`super::Engine::warm_up`].
     pub autotune: AutotuneMode,
+    /// Fused planar layer pipeline (default **on**): sessions keep
+    /// interlayer activations planar with bias/activation/rounding
+    /// fused in the GEMM epilogue
+    /// ([`crate::kernel::gemm_fused_into`]). `false` is the
+    /// layer-wise escape hatch (`SPADE_FUSED=0`) — bit-identical
+    /// results, per-layer re-decode, for cross-checking the fusion.
+    pub fused: bool,
     /// Planar serving shards (0 = auto).
     pub shards: usize,
     /// Batch → shard placement policy.
@@ -101,6 +108,7 @@ impl Default for EngineConfig {
             tile: None,
             path: InnerPath::Auto,
             autotune: AutotuneMode::Off,
+            fused: true,
             shards: 0,
             affinity: ShardAffinity::LeastLoaded,
             max_queue: 0,
@@ -145,6 +153,9 @@ impl EngineConfig {
         }
         if let Some(mode) = env::kernel_autotune()? {
             cfg.autotune = mode;
+        }
+        if let Some(fused) = env::fused()? {
+            cfg.fused = fused;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -231,6 +242,7 @@ impl EngineConfig {
             affinity: self.affinity,
             max_queue: self.max_queue,
             kernel: Some(self.kernel_config()),
+            fused: self.fused,
             metrics: self.metrics.clone(),
         }
     }
@@ -278,6 +290,7 @@ impl EngineConfig {
         });
         m.insert("path".into(), s(path_str(self.path)));
         m.insert("autotune".into(), s(autotune_str(self.autotune)));
+        m.insert("fused".into(), Json::Bool(self.fused));
         m.insert("shards".into(), num(self.shards));
         m.insert("affinity".into(), s(affinity_str(self.affinity)));
         m.insert("max_queue".into(), num(self.max_queue));
@@ -393,6 +406,10 @@ impl EngineConfig {
                 "autotune" => {
                     cfg.autotune = autotune_from_str(
                         v.as_str().unwrap_or_default())?;
+                }
+                "fused" => {
+                    cfg.fused = v.as_bool().ok_or_else(|| anyhow!(
+                        "engine config fused must be a boolean"))?;
                 }
                 "shards" => cfg.shards = as_count(key, v)?,
                 "affinity" => {
@@ -630,6 +647,7 @@ mod tests {
                                    steal_rows: 2, k_chunk: 256 });
         c.path = InnerPath::Portable;
         c.autotune = AutotuneMode::Warmup;
+        c.fused = false;
         c.shards = 3;
         c.affinity = ShardAffinity::PinnedMode;
         c.max_queue = 128;
@@ -649,6 +667,7 @@ mod tests {
         assert_eq!(back.tile, c.tile);
         assert_eq!(back.path, c.path);
         assert_eq!(back.autotune, c.autotune);
+        assert_eq!(back.fused, c.fused);
         assert_eq!(back.shards, c.shards);
         assert_eq!(back.affinity, c.affinity);
         assert_eq!(back.max_queue, c.max_queue);
@@ -662,6 +681,7 @@ mod tests {
         assert_eq!(back.precision, None);
         assert_eq!(back.metrics.stats_json, None);
         assert_eq!(back.autotune, AutotuneMode::Off);
+        assert!(back.fused, "fused defaults to on");
     }
 
     #[test]
@@ -674,6 +694,8 @@ mod tests {
             .is_err());
         assert!(EngineConfig::from_json(
             "{\"tile\": {\"nope\": 1}}").is_err());
+        assert!(EngineConfig::from_json("{\"fused\": \"yes\"}")
+            .is_err());
         assert!(EngineConfig::from_json("[1, 2]").is_err());
         assert!(EngineConfig::from_json(
             "{\"schema\": \"other-v9\"}").is_err());

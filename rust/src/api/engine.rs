@@ -125,6 +125,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Fused planar pipeline switch (default **on**; see
+    /// [`EngineConfig::fused`]). `false` selects the bit-identical
+    /// layer-wise escape hatch on every session and shard this engine
+    /// hands out — the programmatic form of `SPADE_FUSED=0`.
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.cfg.fused = fused;
+        self
+    }
+
     /// Per-shard pending-request bound (0 = unbounded). When the
     /// whole fleet is full, `submit` returns a typed [`Overloaded`]
     /// error instead of queueing without bound.
@@ -307,15 +316,19 @@ impl Engine {
     }
 
     /// A plan-cached execution session borrowing `model`, pinned to
-    /// this engine's kernel config.
+    /// this engine's kernel config and fused-pipeline setting.
     pub fn session<'m>(&self, model: &'m Model) -> Session<'m> {
-        Session::new(model).with_kernel_config(self.kcfg)
+        Session::new(model)
+            .with_kernel_config(self.kcfg)
+            .with_fused(self.cfg.fused)
     }
 
     /// A session owning its model (for worker threads), pinned to
-    /// this engine's kernel config.
+    /// this engine's kernel config and fused-pipeline setting.
     pub fn session_owned(&self, model: Model) -> Session<'static> {
-        Session::owned(model).with_kernel_config(self.kcfg)
+        Session::owned(model)
+            .with_kernel_config(self.kcfg)
+            .with_fused(self.cfg.fused)
     }
 
     /// The coordinator configuration this engine serves with
@@ -426,9 +439,11 @@ impl StatsDumper {
             .name("spade-stats-dump".into())
             .spawn(move || {
                 let t0 = Instant::now();
+                let mut prev = StatsPrev::default();
                 loop {
                     let stopped = sleep_until_stop(&stop_w, interval);
-                    write_stats(&metrics, &path, t0.elapsed());
+                    prev = write_stats(&metrics, &path, t0.elapsed(),
+                                       prev);
                     if stopped {
                         return;
                     }
@@ -479,19 +494,33 @@ fn sleep_until_stop(stop: &AtomicBool, total: Duration) -> bool {
     }
 }
 
-/// Render + atomically replace the stats file. IO errors are
-/// swallowed (a stats dump must never take down serving); the dump
-/// simply retries next period.
+/// Counter values at the previous dump, for the per-dump rate fields
+/// (`requests_per_s` / `rejects_per_s` are computed over the window
+/// since the last write; the first dump's window is since start).
+#[derive(Debug, Clone, Copy, Default)]
+struct StatsPrev {
+    requests: u64,
+    rejected: u64,
+    elapsed: Duration,
+}
+
+/// Render + atomically replace the stats file, returning the counter
+/// snapshot the *next* dump's rates are computed against. IO errors
+/// are swallowed (a stats dump must never take down serving); the
+/// dump simply retries next period.
 fn write_stats(metrics: &Arc<Mutex<Metrics>>, path: &PathBuf,
-               elapsed: Duration) {
-    let body = {
+               elapsed: Duration, prev: StatsPrev) -> StatsPrev {
+    let (body, next) = {
         let m = metrics.lock().unwrap();
-        render_stats(&m, elapsed)
+        (render_stats(&m, elapsed, prev),
+         StatsPrev { requests: m.total_requests,
+                     rejected: m.rejected, elapsed })
     };
     let tmp = path.with_extension("json.tmp");
     if std::fs::write(&tmp, body).is_ok() {
         let _ = std::fs::rename(&tmp, path);
     }
+    next
 }
 
 /// JSON fragment: `"p50_us": v` triple for one latency distribution
@@ -506,16 +535,37 @@ fn pct_fields(p50: Option<u64>, p95: Option<u64>, p99: Option<u64>)
 }
 
 /// The machine-readable serve stats document (schema
-/// `spade-serve-stats-v1`): global counters, per-mode and per-shard
-/// latency percentiles, and kernel dispatch/steal counters — the
-/// ROADMAP fleet-dashboard dump.
-fn render_stats(m: &Metrics, elapsed: Duration) -> String {
+/// `spade-serve-stats-v2`): global counters, per-dump throughput
+/// rates, per-mode and per-shard latency percentiles with reservoir
+/// snapshot counts (`seen` = everything recorded, `sampled` = held in
+/// the bounded reservoir right now), the last backpressure
+/// retry-after hint, and kernel dispatch/steal/fused-epilogue
+/// counters — the ROADMAP fleet-dashboard dump. Every v1 field is
+/// intact; v2 only adds.
+fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
+                -> String {
     let mut s = String::with_capacity(1024);
-    s.push_str("{\n  \"schema\": \"spade-serve-stats-v1\",\n");
+    s.push_str("{\n  \"schema\": \"spade-serve-stats-v2\",\n");
     s.push_str(&format!("  \"elapsed_s\": {:.3},\n",
                         elapsed.as_secs_f64()));
     s.push_str(&format!("  \"requests\": {},\n", m.total_requests));
     s.push_str(&format!("  \"rejected\": {},\n", m.rejected));
+    // Rates over the window since the previous dump (first window =
+    // since start). A zero-length window reports 0 rather than inf.
+    let dt = elapsed.saturating_sub(prev.elapsed).as_secs_f64();
+    let rate = |cur: u64, old: u64| {
+        if dt > 0.0 {
+            cur.saturating_sub(old) as f64 / dt
+        } else {
+            0.0
+        }
+    };
+    s.push_str(&format!("  \"requests_per_s\": {:.3},\n",
+                        rate(m.total_requests, prev.requests)));
+    s.push_str(&format!("  \"rejects_per_s\": {:.3},\n",
+                        rate(m.rejected, prev.rejected)));
+    s.push_str(&format!("  \"last_retry_after_ms\": {},\n",
+                        m.last_retry_after_ms));
     s.push_str(&format!("  \"mean_batch\": {:.3},\n", m.mean_batch()));
 
     const PCTS: [f64; 3] = [50.0, 95.0, 99.0];
@@ -541,12 +591,13 @@ fn render_stats(m: &Metrics, elapsed: Duration) -> String {
         if i > 0 {
             s.push_str(", ");
         }
-        let p = match m.shard_latencies_us.get(i) {
-            Some(r) => r.percentiles(&PCTS),
-            None => vec![None; 3],
+        let (p, seen, sampled) = match m.shard_latencies_us.get(i) {
+            Some(r) => (r.percentiles(&PCTS), r.seen(), r.len()),
+            None => (vec![None; 3], 0, 0),
         };
         s.push_str(&format!(
-            "{{\"requests\": {reqs}, \"batches\": {batches}, {}}}",
+            "{{\"requests\": {reqs}, \"batches\": {batches}, \
+             \"seen\": {seen}, \"sampled\": {sampled}, {}}}",
             pct_fields(p[0], p[1], p[2])));
     }
     s.push_str("],\n");
@@ -562,8 +613,11 @@ fn render_stats(m: &Metrics, elapsed: Duration) -> String {
     s.push_str(&format!(
         "  \"kernel\": {{\"gemms\": {}, \"chunks\": {}, \
          \"stolen_chunks\": {}, \"autotune_probes\": {}, \
+         \"fused_gemms\": {}, \"fused_elems\": {}, \
+         \"plan_decodes\": {}, \"plan_encodes\": {}, \
          \"pool_workers\": {}, \"pool_jobs\": {}}}\n",
         k.gemms, k.chunks, k.stolen_chunks, k.autotune_probes,
+        k.fused_gemms, k.fused_elems, k.plan_decodes, k.plan_encodes,
         pool_workers, pool_jobs));
     s.push_str("}\n");
     s
@@ -583,25 +637,72 @@ mod tests {
         m.record_shard_latency(0, 120);
         m.record_shard(1, 4);
         m.record_rejected();
-        let body = render_stats(&m, Duration::from_millis(1500));
+        m.last_retry_after_ms = 7;
+        let body = render_stats(&m, Duration::from_millis(1500),
+                                StatsPrev::default());
         let j = Json::parse(&body).unwrap_or_else(|e| {
             panic!("stats dump is not valid JSON ({e}):\n{body}")
         });
         assert_eq!(j.get("schema").unwrap().as_str(),
-                   Some("spade-serve-stats-v1"));
+                   Some("spade-serve-stats-v2"));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
         let modes = j.get("modes").unwrap();
         assert!(modes.get("p8").unwrap().get("p50_us").is_some());
+        // Reservoir snapshot counts per mode (v1 fields, still here).
+        assert_eq!(modes.get("p8").unwrap().get("seen").unwrap()
+                       .as_usize(), Some(1));
+        assert_eq!(modes.get("p8").unwrap().get("sampled").unwrap()
+                       .as_usize(), Some(1));
         let shards = j.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].get("requests").unwrap().as_usize(),
                    Some(4));
+        // v2: shards carry reservoir snapshot counts too.
+        assert_eq!(shards[0].get("seen").unwrap().as_usize(), Some(1));
+        assert_eq!(shards[1].get("sampled").unwrap().as_usize(),
+                   Some(0));
         // shard 1 has no latency samples -> nulls, still valid JSON
         assert_eq!(shards[1].get("p50_us"), Some(&Json::Null));
         let kernel = j.get("kernel").unwrap();
         assert!(kernel.get("gemms").is_some());
         assert!(kernel.get("autotune_probes").is_some());
+        // v2: fused-epilogue and plan encode/decode counters.
+        assert!(kernel.get("fused_gemms").is_some());
+        assert!(kernel.get("fused_elems").is_some());
+        assert!(kernel.get("plan_decodes").is_some());
+        assert!(kernel.get("plan_encodes").is_some());
         // Backpressure rejects ride along for dashboards.
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("last_retry_after_ms").unwrap().as_usize(),
+                   Some(7));
+        // First dump: rates are over the whole 1.5 s window.
+        let rps = j.get("requests_per_s").unwrap().as_f64().unwrap();
+        assert!((rps - 2.0 / 1.5).abs() < 1e-6, "{rps}");
+    }
+
+    #[test]
+    fn stats_rates_are_per_dump_windows() {
+        let mut m = Metrics::default();
+        for _ in 0..10 {
+            m.record(Mode::P8x4, 100, 1);
+        }
+        m.record_rejected();
+        // Previous dump saw 4 requests and 1 reject at t=1s; this one
+        // runs at t=3s -> 6 new requests over a 2 s window.
+        let prev = StatsPrev { requests: 4, rejected: 1,
+                               elapsed: Duration::from_secs(1) };
+        let body = render_stats(&m, Duration::from_secs(3), prev);
+        let j = Json::parse(&body).unwrap();
+        let rps = j.get("requests_per_s").unwrap().as_f64().unwrap();
+        assert!((rps - 3.0).abs() < 1e-6, "{rps}");
+        let xps = j.get("rejects_per_s").unwrap().as_f64().unwrap();
+        assert!(xps.abs() < 1e-6, "{xps}");
+        // Degenerate zero-length window: rates report 0, not inf/NaN.
+        let same = StatsPrev { requests: 0, rejected: 0,
+                               elapsed: Duration::from_secs(3) };
+        let body = render_stats(&m, Duration::from_secs(3), same);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("requests_per_s").unwrap().as_f64(),
+                   Some(0.0));
     }
 }

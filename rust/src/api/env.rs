@@ -14,6 +14,7 @@
 //! | `SPADE_KERNEL_TILE` | [`kernel_tile`] | explicit tile pin, strictly parsed ([`TileConfig::parse`]; disables autotuning of the tile) |
 //! | `SPADE_KERNEL_GATHER` | [`kernel_gather_disabled`] | `0`/`off` pins the portable P8 loop |
 //! | `SPADE_KERNEL_AUTOTUNE` | [`kernel_autotune`] | `off` / `first-use` / `warmup` first-use autotuner mode |
+//! | `SPADE_FUSED` | [`fused`] | `0`/`off` selects the layer-wise escape hatch (fused planar pipeline is the default) |
 //! | `SPADE_ARTIFACTS` | [`artifacts_override`] | artifact directory override |
 //! | `SPADE_BENCH_QUICK` | [`bench_quick`] | hotpath bench smoke mode |
 //! | `SPADE_FIG4_LIMIT` | [`fig4_limit`] | Fig. 4 bench image cap |
@@ -67,6 +68,21 @@ pub fn kernel_autotune() -> Result<Option<AutotuneMode>> {
         Some(s) => super::config::autotune_from_str(s.trim())
             .map(Some)
             .map_err(|e| anyhow::anyhow!("SPADE_KERNEL_AUTOTUNE: {e}")),
+    }
+}
+
+/// `SPADE_FUSED`: the fused planar pipeline switch. `0`/`off`/`false`
+/// disables it (the layer-wise escape hatch — bit-identical, slower);
+/// `1`/`on`/`true` pins it on; anything else is a hard error like the
+/// other engine knobs. `None` when unset (the config default, which
+/// is on, stands).
+pub fn fused() -> Result<Option<bool>> {
+    match raw("SPADE_FUSED").as_deref().map(str::trim) {
+        None => Ok(None),
+        Some("0") | Some("off") | Some("false") => Ok(Some(false)),
+        Some("1") | Some("on") | Some("true") => Ok(Some(true)),
+        Some(s) => Err(anyhow::anyhow!(
+            "SPADE_FUSED={s:?}: expected 0/off/false or 1/on/true")),
     }
 }
 

@@ -29,6 +29,11 @@ use crate::util::SplitMix64;
 /// fleet of shards costs a few hundred KiB total.
 pub const DEFAULT_RESERVOIR_CAPACITY: usize = 4096;
 
+/// The `retry_after_ms` hint on an [`super::Overloaded`] reject
+/// before any request has completed (no latency sampled yet to base
+/// a better estimate on).
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 10;
+
 /// Metrics/observability options, carried by `EngineConfig::metrics`
 /// and [`super::CoordinatorConfig::metrics`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -190,6 +195,11 @@ pub struct Metrics {
     pub shard_latencies_us: Vec<Reservoir>,
     /// Per-distribution reservoir capacity (from [`MetricsConfig`]).
     reservoir_capacity: usize,
+    /// The `retry_after_ms` hint attached to the most recent
+    /// [`super::Overloaded`] reject (0 = never rejected). Surfaced in
+    /// the `--stats-json` dump so shed-and-retry behavior is
+    /// observable fleet-wide.
+    pub last_retry_after_ms: u64,
 }
 
 impl Default for Metrics {
@@ -212,6 +222,7 @@ impl Metrics {
             shard_batches: Vec::new(),
             shard_latencies_us: Vec::new(),
             reservoir_capacity: cap.max(1),
+            last_retry_after_ms: 0,
         }
     }
 
@@ -238,6 +249,38 @@ impl Metrics {
     /// Record one request rejected by the backpressure bound.
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// How long a rejected caller should plausibly wait before
+    /// retrying, in milliseconds: the backlog of `pending` requests
+    /// drains across `shards` workers at roughly one observed p95
+    /// latency per request, so the hint is
+    /// `p95 × pending / shards` (floored at 1 ms). The p95 is the
+    /// worst sampled shard's — a straggler shard is exactly what a
+    /// retrying caller waits on — falling back to the worst per-mode
+    /// p95 (PJRT engine, which has no shard reservoirs), and to
+    /// [`DEFAULT_RETRY_AFTER_MS`] before any request has completed.
+    pub fn retry_after_hint(&self, pending: usize, shards: usize)
+                            -> u64 {
+        let p95_us = self
+            .shard_latencies_us
+            .iter()
+            .filter_map(|r| r.percentile(95.0))
+            .max()
+            .or_else(|| {
+                self.latencies_us
+                    .values()
+                    .filter_map(|r| r.percentile(95.0))
+                    .max()
+            });
+        match p95_us {
+            None => DEFAULT_RETRY_AFTER_MS,
+            Some(us) => {
+                let drain_us = us as u128 * pending.max(1) as u128
+                    / shards.max(1) as u128;
+                ((drain_us / 1000).max(1)) as u64
+            }
+        }
     }
 
     /// Record one batch of `batch_size` requests landing on `shard`
@@ -448,6 +491,25 @@ mod tests {
         // sd = sqrt(.25/512) ≈ 2.2%); deterministic seed, no flake.
         assert!((p50 / n as f64 - 0.50).abs() < 0.07, "p50={p50}");
         assert!((p95 / n as f64 - 0.95).abs() < 0.07, "p95={p95}");
+    }
+
+    #[test]
+    fn retry_after_hint_scales_with_backlog_and_shards() {
+        let mut m = Metrics::default();
+        // Unsampled: the default stands.
+        assert_eq!(m.retry_after_hint(4, 2), DEFAULT_RETRY_AFTER_MS);
+        // Steady 2 ms p95: 10 pending across 2 shards ≈ 10 ms.
+        for _ in 0..20 {
+            m.record_shard_latency(0, 2_000);
+        }
+        assert_eq!(m.retry_after_hint(10, 2), 10);
+        // Deeper backlog or fewer shards -> longer hint.
+        assert!(m.retry_after_hint(100, 2) > m.retry_after_hint(10, 2));
+        assert!(m.retry_after_hint(10, 1) > m.retry_after_hint(10, 4));
+        // Floored at 1 ms even when the drain estimate is sub-ms.
+        let mut fast = Metrics::default();
+        fast.record_shard_latency(0, 50);
+        assert_eq!(fast.retry_after_hint(1, 8), 1);
     }
 
     #[test]

@@ -122,6 +122,11 @@ pub struct CoordinatorConfig {
     /// uses the installed process default
     /// ([`crate::kernel::settings::current`]).
     pub kernel: Option<crate::kernel::KernelConfig>,
+    /// Fused planar pipeline for the shard sessions (default on;
+    /// `false` is the bit-identical layer-wise escape hatch — see
+    /// [`crate::nn::exec::Session::set_fused`]). Ignored by the PJRT
+    /// engine.
+    pub fused: bool,
     /// Metrics options (latency reservoir capacity; the stats-dump
     /// fields are consumed by `api::Engine::serve*`, not here).
     pub metrics: MetricsConfig,
@@ -137,6 +142,7 @@ impl Default for CoordinatorConfig {
             affinity: ShardAffinity::LeastLoaded,
             max_queue: 0,
             kernel: None,
+            fused: true,
             metrics: MetricsConfig::default(),
         }
     }
@@ -152,6 +158,13 @@ pub struct Overloaded {
     pub pending: usize,
     /// The fleet-wide bound (shards × max_queue).
     pub capacity: usize,
+    /// How long the caller should plausibly wait before retrying:
+    /// the pending backlog divided across the shards at the worst
+    /// observed shard p95 latency
+    /// ([`Metrics::retry_after_hint`] — a default before any sample
+    /// exists). A *hint*, not a reservation: the bound may still be
+    /// hit on the retry.
+    pub retry_after_ms: u64,
 }
 
 impl std::fmt::Display for Overloaded {
@@ -159,9 +172,9 @@ impl std::fmt::Display for Overloaded {
            -> std::fmt::Result {
         write!(f,
                "coordinator overloaded: {} pending requests at the \
-                fleet capacity of {} (every shard full) — retry \
-                later or raise max_queue",
-               self.pending, self.capacity)
+                fleet capacity of {} (every shard full) — retry in \
+                ~{} ms or raise max_queue",
+               self.pending, self.capacity, self.retry_after_ms)
     }
 }
 
@@ -193,6 +206,9 @@ pub struct Coordinator {
     pending: Arc<AtomicUsize>,
     /// Fleet-wide pending bound (shards × max_queue; 0 = unbounded).
     capacity: usize,
+    /// Worker count the retry-after hint divides the backlog across
+    /// (1 on the single-worker PJRT engine).
+    shards: usize,
 }
 
 impl Coordinator {
@@ -257,7 +273,7 @@ impl Coordinator {
             .recv()
             .context("coordinator worker died during setup")??;
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
-                         pending, capacity })
+                         pending, capacity, shards: 1 })
     }
 
     /// Start the sharded planar engine on an in-memory [`Model`] — no
@@ -278,6 +294,7 @@ impl Coordinator {
         let policy = cfg.policy;
         let affinity = cfg.affinity;
         let kernel_cfg = cfg.kernel;
+        let fused = cfg.fused;
         let pending = Arc::new(AtomicUsize::new(0));
 
         let nshards = effective_shards(cfg.shards);
@@ -297,6 +314,7 @@ impl Coordinator {
                         if let Some(kc) = kernel_cfg {
                             sess.set_kernel_config(kc);
                         }
+                        sess.set_fused(fused);
                         shard_loop(srx, sess, sid, inflight_w,
                                    pending_w, metrics);
                     })
@@ -309,7 +327,7 @@ impl Coordinator {
             planar_front_loop(rx, shards, bcfg, policy, affinity);
         });
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
-                         pending, capacity })
+                         pending, capacity, shards: nshards })
     }
 
     /// Start serving `cfg.model` on the best engine available on this
@@ -369,9 +387,15 @@ impl Coordinator {
         if self.capacity > 0 {
             let now = self.pending.load(Ordering::Acquire);
             if now >= self.capacity {
-                self.metrics.lock().unwrap().record_rejected();
+                let mut m = self.metrics.lock().unwrap();
+                m.record_rejected();
+                let retry_after_ms =
+                    m.retry_after_hint(now, self.shards);
+                m.last_retry_after_ms = retry_after_ms;
+                drop(m);
                 return Err(Overloaded { pending: now,
-                                        capacity: self.capacity });
+                                        capacity: self.capacity,
+                                        retry_after_ms });
             }
         }
         self.pending.fetch_add(1, Ordering::AcqRel);
@@ -939,8 +963,16 @@ mod tests {
         let rx0 = coord.submit(req(0)).unwrap();
         let rx1 = coord.submit(req(1)).unwrap();
         let err = coord.submit(req(2)).unwrap_err();
-        assert_eq!(err, Overloaded { pending: 2, capacity: 2 });
+        assert_eq!(err.pending, 2);
+        assert_eq!(err.capacity, 2);
+        // Nothing has completed yet, so the retry hint is the
+        // unsampled default — and it is recorded for stats dumps.
+        assert_eq!(err.retry_after_ms,
+                   crate::coordinator::metrics::DEFAULT_RETRY_AFTER_MS);
+        assert_eq!(coord.metrics.lock().unwrap().last_retry_after_ms,
+                   err.retry_after_ms);
         assert!(err.to_string().contains("overloaded"), "{err}");
+        assert!(err.to_string().contains("retry in"), "{err}");
         // infer() surfaces the same reject as an error.
         assert!(coord.infer(req(3)).is_err());
         let m = coord.shutdown(); // flushes the held batch

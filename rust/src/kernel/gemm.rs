@@ -34,7 +34,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::posit::{encode_from_parts, Parts, PositFormat};
 
 use super::autotune;
-use super::plan::DecodedPlan;
+use super::plan::{self, DecodedPlan};
 use super::pool::{self, RowQueue};
 use super::settings::{self, KernelConfig};
 use super::simd::{self, BiasDec, InnerPath, TileConfig};
@@ -244,11 +244,28 @@ pub struct KernelCounters {
     /// `Engine::warm_up` tests assert this stays flat once traffic
     /// starts.
     pub autotune_probes: u64,
+    /// GEMMs that ran with the fused epilogue ([`gemm_fused`] /
+    /// [`gemm_fused_into`]) — also counted in `gemms`.
+    pub fused_gemms: u64,
+    /// Output elements the fused epilogue emitted directly in planar
+    /// form (each one is a `from_words` decode the next layer never
+    /// pays).
+    pub fused_elems: u64,
+    /// Elements decoded word → planar by `DecodedPlan::from_words`
+    /// since process start. Flat across a fused forward pass except
+    /// for cache misses and the NaR slow path.
+    pub plan_decodes: u64,
+    /// Elements quantized float → posit by `DecodedPlan::from_f64` /
+    /// `from_f32`. On the fused path only the network input edge
+    /// moves this.
+    pub plan_encodes: u64,
 }
 
 static CTR_GEMMS: AtomicU64 = AtomicU64::new(0);
 static CTR_CHUNKS: AtomicU64 = AtomicU64::new(0);
 static CTR_STOLEN: AtomicU64 = AtomicU64::new(0);
+static CTR_FUSED_GEMMS: AtomicU64 = AtomicU64::new(0);
+static CTR_FUSED_ELEMS: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the process-wide [`KernelCounters`]. Monotonic.
 pub fn counters() -> KernelCounters {
@@ -257,6 +274,10 @@ pub fn counters() -> KernelCounters {
         chunks: CTR_CHUNKS.load(Ordering::Relaxed),
         stolen_chunks: CTR_STOLEN.load(Ordering::Relaxed),
         autotune_probes: autotune::probes(),
+        fused_gemms: CTR_FUSED_GEMMS.load(Ordering::Relaxed),
+        fused_elems: CTR_FUSED_ELEMS.load(Ordering::Relaxed),
+        plan_decodes: plan::plan_decodes(),
+        plan_encodes: plan::plan_encodes(),
     }
 }
 
@@ -273,6 +294,120 @@ fn record_dispatch(stats: &DispatchStats) {
             .sum();
         if stolen > 0 {
             CTR_STOLEN.fetch_add(stolen as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Per-chunk fused-epilogue hook: called with (first row of the
+/// window, the window's freshly rounded output words) immediately
+/// after [`simd::gemm_rows`] fills the window — i.e. while it is
+/// still cache-hot. `Sync` because pool jobs invoke it concurrently
+/// on disjoint windows.
+type ChunkHook<'h> = &'h (dyn Fn(usize, &mut [u64]) + Sync);
+
+/// Row dispatch shared by the word GEMM and the fused GEMM: carve
+/// `out` into row chunks, fill each through [`simd::gemm_rows`], and
+/// (when a hook is given) run the fused epilogue on each chunk right
+/// after it is written. Chunking never changes results — exact
+/// integer accumulation is associative and the epilogue is
+/// element-wise.
+fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+            out: &mut [u64], threads: usize, dispatch: Dispatch,
+            tile: TileConfig, path: InnerPath,
+            hook: Option<ChunkHook>) -> DispatchStats {
+    let (m, n) = (a.rows, b.cols);
+    let t = threads.clamp(1, m);
+    if t <= 1 {
+        if let Some(h) = hook {
+            // Sequential fused run: still process in steal-sized row
+            // blocks so the epilogue touches each window while hot
+            // instead of re-streaming the whole output at the end.
+            let chunk_rows = steal_chunk_rows(m, 1, tile);
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + chunk_rows).min(m);
+                let win = &mut out[r0 * n..r1 * n];
+                simd::gemm_rows(a, b, bd, r0, win, path, tile);
+                h(r0, win);
+                r0 = r1;
+            }
+            return DispatchStats {
+                chunk_rows,
+                chunks: m.div_ceil(chunk_rows),
+                per_job_claims: vec![m.div_ceil(chunk_rows)],
+            };
+        }
+        simd::gemm_rows(a, b, bd, 0, out, path, tile);
+        return DispatchStats { chunk_rows: m, chunks: 1,
+                               per_job_claims: vec![1] };
+    }
+    match dispatch {
+        Dispatch::Pool => {
+            let chunk_rows = steal_chunk_rows(m, t, tile);
+            let queue = RowQueue::new(m, chunk_rows);
+            let claims: Vec<AtomicUsize> =
+                (0..t).map(|_| AtomicUsize::new(0)).collect();
+            let shared = SharedOut(out.as_mut_ptr());
+            {
+                let (queue, claims, shared) =
+                    (&queue, &claims, &shared);
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(t);
+                for ti in 0..t {
+                    jobs.push(Box::new(move || {
+                        while let Some((r0, r1)) = queue.claim() {
+                            claims[ti]
+                                .fetch_add(1, Ordering::Relaxed);
+                            // SAFETY: the queue hands out each row
+                            // range at most once (see SharedOut),
+                            // so this window is exclusive; the
+                            // pool scope outlives every job.
+                            let chunk = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    shared.0.add(r0 * n),
+                                    (r1 - r0) * n)
+                            };
+                            simd::gemm_rows(a, b, bd, r0, chunk,
+                                            path, tile);
+                            if let Some(h) = hook {
+                                h(r0, chunk);
+                            }
+                        }
+                    }));
+                }
+                pool::global().run_scoped(jobs);
+            }
+            let stats = DispatchStats {
+                chunk_rows,
+                chunks: queue.chunks(),
+                per_job_claims: claims
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed))
+                    .collect(),
+            };
+            record_dispatch(&stats);
+            stats
+        }
+        Dispatch::Scope => {
+            debug_assert!(hook.is_none(),
+                          "fused epilogue runs on pool dispatch only");
+            let rows_per = m.div_ceil(t);
+            let nblocks = m.div_ceil(rows_per);
+            std::thread::scope(|s| {
+                for (ti, chunk) in
+                    out.chunks_mut(rows_per * n).enumerate()
+                {
+                    s.spawn(move || {
+                        simd::gemm_rows(a, b, bd, ti * rows_per,
+                                        chunk, path, tile);
+                    });
+                }
+            });
+            DispatchStats {
+                chunk_rows: rows_per,
+                chunks: nblocks,
+                per_job_claims: vec![1; nblocks],
+            }
         }
     }
 }
@@ -296,81 +431,185 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
     // (probing inline only under AutotuneMode::FirstUse). Any outcome
     // is bit-identical — resolution only retunes speed.
     let (tile, path) = autotune::resolve(cfg, a.fmt, m, a.cols, n);
-    let t = threads.clamp(1, m);
-    let mut stats = DispatchStats { chunk_rows: m, chunks: 1,
-                                    per_job_claims: vec![1] };
-    if t <= 1 {
-        simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path,
-                        tile);
-    } else {
-        let bd = bias_dec.as_ref();
-        match dispatch {
-            Dispatch::Pool => {
-                let chunk_rows = steal_chunk_rows(m, t, tile);
-                let queue = RowQueue::new(m, chunk_rows);
-                let claims: Vec<AtomicUsize> =
-                    (0..t).map(|_| AtomicUsize::new(0)).collect();
-                let shared = SharedOut(out.as_mut_ptr());
-                {
-                    let (queue, claims, shared) =
-                        (&queue, &claims, &shared);
-                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                        Vec::with_capacity(t);
-                    for ti in 0..t {
-                        jobs.push(Box::new(move || {
-                            while let Some((r0, r1)) = queue.claim() {
-                                claims[ti]
-                                    .fetch_add(1, Ordering::Relaxed);
-                                // SAFETY: the queue hands out each row
-                                // range at most once (see SharedOut),
-                                // so this window is exclusive; the
-                                // pool scope outlives every job.
-                                let chunk = unsafe {
-                                    std::slice::from_raw_parts_mut(
-                                        shared.0.add(r0 * n),
-                                        (r1 - r0) * n)
-                                };
-                                simd::gemm_rows(a, b, bd, r0, chunk,
-                                                path, tile);
-                            }
-                        }));
-                    }
-                    pool::global().run_scoped(jobs);
-                }
-                stats = DispatchStats {
-                    chunk_rows,
-                    chunks: queue.chunks(),
-                    per_job_claims: claims
-                        .iter()
-                        .map(|c| c.load(Ordering::Relaxed))
-                        .collect(),
-                };
-                record_dispatch(&stats);
-            }
-            Dispatch::Scope => {
-                let rows_per = m.div_ceil(t);
-                let nblocks = m.div_ceil(rows_per);
-                std::thread::scope(|s| {
-                    for (ti, chunk) in
-                        out.chunks_mut(rows_per * n).enumerate()
-                    {
-                        s.spawn(move || {
-                            simd::gemm_rows(a, b, bd, ti * rows_per,
-                                            chunk, path, tile);
-                        });
-                    }
-                });
-                stats = DispatchStats {
-                    chunk_rows: rows_per,
-                    chunks: nblocks,
-                    per_job_claims: vec![1; nblocks],
-                };
-            }
-        }
-    }
+    let stats = run_rows(a, b, bias_dec.as_ref(), &mut out, threads,
+                         dispatch, tile, path, None);
 
     apply_nar(a, b, bias_dec.as_ref(), &mut out);
     (out, stats)
+}
+
+/// What the fused GEMM applies to each output element **after** the
+/// kernel's single exact-accumulator rounding, while the output tile
+/// is still cache-hot.
+///
+/// # Exactness contract
+///
+/// The epilogue never adds a rounding step. Per output element the
+/// fused pipeline is: exact integer/quire accumulation of all `k`
+/// products **plus the bias** (the bias joins the accumulator before
+/// rounding, exactly as in [`gemm`]), then exactly **one** posit
+/// rounding, then the word-level activation, then planar emission.
+///
+/// * **ReLU commutes with the rounding.** Posit rounding is monotone
+///   and sign-preserving, and `round(0) = 0`, so zeroing negative
+///   *words* after the rounding equals clamping a negative *exact
+///   accumulator* before it — a negative exact sum rounds to a
+///   negative-or-zero word either way, and both chains end at word 0.
+///   NaR passes through, matching NaN through an f32 ReLU.
+/// * **Planar emission is a pure change of representation** — the
+///   same fields [`DecodedPlan::from_words`] would derive, emitted
+///   directly so the next layer starts from planar form with zero
+///   interior encode/decode round-trip.
+///
+/// Consequently [`gemm_fused`] output words are bit-identical to
+/// [`gemm`] followed by [`relu_words`], for every precision, tile
+/// geometry, thread count and inner path — asserted in the tests
+/// below and oracled end-to-end in `tests/fused_pipeline.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Epilogue {
+    /// Apply ReLU: zero negative output words (NaR passes through).
+    pub relu: bool,
+}
+
+impl Epilogue {
+    /// No activation — bias + rounding + planar emission only.
+    pub const NONE: Epilogue = Epilogue { relu: false };
+    /// ReLU fused after the single rounding.
+    pub const RELU: Epilogue = Epilogue { relu: true };
+}
+
+/// Word-level ReLU: zero every negative word, pass NaR through.
+/// Bit-identical to clamping the exact accumulator before the
+/// rounding (see [`Epilogue`]) and to an f32 ReLU between decode and
+/// re-encode for formats whose values round-trip f32 exactly — this
+/// is the layer-wise oracle the fused epilogue is tested against.
+pub fn relu_words(words: &mut [u64], fmt: PositFormat) {
+    let nar = fmt.nar();
+    let sign_bit = 1u64 << (fmt.nbits - 1);
+    for wd in words.iter_mut() {
+        if *wd & sign_bit != 0 && *wd != nar {
+            *wd = 0;
+        }
+    }
+}
+
+/// Raw planar-field sink for the fused epilogue: pool jobs write
+/// disjoint `sig`/`w`/byte windows of the output plan through it.
+///
+/// SAFETY rationale: identical to [`SharedOut`] — each window is
+/// derived from a row chunk the [`RowQueue`] hands out at most once,
+/// so no two jobs ever alias.
+struct PlanarSink {
+    sig: *mut i64,
+    w: *mut i32,
+    w8: *mut u8,
+}
+unsafe impl Sync for PlanarSink {}
+
+impl PlanarSink {
+    /// The planar windows for `len` elements starting at flat offset
+    /// `off`.
+    ///
+    /// # Safety
+    /// The `(off, len)` element range must be exclusive to the caller
+    /// (see the type-level rationale) and in bounds of the plan the
+    /// pointers were taken from.
+    unsafe fn window(&self, off: usize, len: usize)
+                     -> (&mut [i64], &mut [i32], Option<&mut [u8]>) {
+        let sig = std::slice::from_raw_parts_mut(self.sig.add(off),
+                                                 len);
+        let w = std::slice::from_raw_parts_mut(self.w.add(off), len);
+        let w8 = if self.w8.is_null() {
+            None
+        } else {
+            Some(std::slice::from_raw_parts_mut(self.w8.add(off),
+                                                len))
+        };
+        (sig, w, w8)
+    }
+}
+
+/// [`gemm_with_config`] with the fused epilogue: bias (exact
+/// accumulator domain) + activation + the single rounding, emitting a
+/// planar [`DecodedPlan`] directly — see [`Epilogue`] for the
+/// exactness contract. Allocates a fresh plan; steady-state callers
+/// use [`gemm_fused_into`] with a recycled buffer.
+pub fn gemm_fused(a: &DecodedPlan, b: &DecodedPlan,
+                  bias: Option<&[u64]>, epi: Epilogue,
+                  cfg: &KernelConfig) -> DecodedPlan {
+    let mut out = DecodedPlan::empty(a.fmt);
+    gemm_fused_into(a, b, bias, epi, cfg, &mut out);
+    out
+}
+
+/// [`gemm_fused`] writing into a caller-owned plan buffer whose
+/// capacity is retained across calls ([`DecodedPlan::reset`]) — the
+/// ping-pong half of the fused layer pipeline: layer N's output plan
+/// is handed straight back as layer N+1's A-operand, and after the
+/// first pass a steady-state forward allocates nothing per layer.
+///
+/// Dispatch (threading, autotuned tile geometry, inner path) is
+/// identical to [`gemm_with_config`] — the epilogue is orthogonal to
+/// tile geometry, it just rides each row chunk while it is cache-hot.
+/// With any NaR operand the fused fast path is skipped: words are
+/// poisoned first ([`gemm`] semantics), then activation + planar
+/// emission run as a masked second pass.
+pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
+                       bias: Option<&[u64]>, epi: Epilogue,
+                       cfg: &KernelConfig, out: &mut DecodedPlan) {
+    check_shapes(a, b, bias);
+    let (m, n) = (a.rows, b.cols);
+    out.reset(a.fmt, m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    CTR_GEMMS.fetch_add(1, Ordering::Relaxed);
+    CTR_FUSED_GEMMS.fetch_add(1, Ordering::Relaxed);
+    CTR_FUSED_ELEMS.fetch_add((m * n) as u64, Ordering::Relaxed);
+    let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let (tile, path) = autotune::resolve(cfg, a.fmt, m, a.cols, n);
+    let t = threads_for(m, a.cols, n, cfg);
+
+    let nar_possible = a.has_nar
+        || b.has_nar
+        || bias_dec.as_ref().is_some_and(|bd| bd.has_nar);
+    if nar_possible {
+        // Slow path (rare): words first, NaR poisoning, then the
+        // activation + planar pass with mask building.
+        run_rows(a, b, bias_dec.as_ref(), &mut out.words, t,
+                 Dispatch::Pool, tile, path, None);
+        apply_nar(a, b, bias_dec.as_ref(), &mut out.words);
+        if epi.relu {
+            relu_words(&mut out.words, a.fmt);
+        }
+        out.refill_planar_from_words();
+        return;
+    }
+
+    // Hot path: no NaR can reach the output (rounding saturates, it
+    // never overflows to NaR), so the epilogue runs per cache-hot
+    // window with no masks at all.
+    let fmt = a.fmt;
+    let relu = epi.relu;
+    let DecodedPlan { words, words8, sig, w, .. } = out;
+    let sink = PlanarSink {
+        sig: sig.as_mut_ptr(),
+        w: w.as_mut_ptr(),
+        w8: if words8.is_empty() {
+            std::ptr::null_mut()
+        } else {
+            words8.as_mut_ptr()
+        },
+    };
+    let hook = move |r0: usize, win: &mut [u64]| {
+        // SAFETY: `win` is a row chunk the dispatcher owns
+        // exclusively; its planar windows share that exclusivity.
+        let (sig_w, w_w, w8_w) =
+            unsafe { sink.window(r0 * n, win.len()) };
+        simd::epilogue_window(fmt, relu, win, sig_w, w_w, w8_w);
+    };
+    run_rows(a, b, bias_dec.as_ref(), words, t, Dispatch::Pool, tile,
+             path, Some(&hook));
 }
 
 /// NaR poisoning pass: any NaR operand in the reduction (or bias)
@@ -723,6 +962,150 @@ mod tests {
         assert_eq!(got, want);
         // and differs from the post-rounded chain on this instance
         assert_eq!(to_f64(got, fmt), 64.0); // 64.25 rounds to 64 once
+    }
+
+    #[test]
+    fn fused_matches_word_gemm_plus_relu_all_formats() {
+        // The fused epilogue must be bit-identical to the layer-wise
+        // chain: word GEMM -> relu_words -> from_words. Random
+        // operands include raw NaR patterns, so both the mask-free
+        // hot path and the poisoned slow path are exercised.
+        let mut rng = SplitMix64::new(4096);
+        let cfg = settings::current();
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for &(m, k, n) in
+                &[(1, 1, 1), (3, 9, 11), (5, 17, 8), (13, 7, 5)]
+            {
+                let aw = rand_words(&mut rng, m * k, fmt);
+                let bw = rand_words(&mut rng, k * n, fmt);
+                let bias = Some(rand_words(&mut rng, n, fmt));
+                let pa = DecodedPlan::from_words(aw, m, k, fmt);
+                let pb = DecodedPlan::from_words(bw, k, n, fmt);
+                for relu in [false, true] {
+                    let mut want_words =
+                        gemm(&pa, &pb, bias.as_deref());
+                    if relu {
+                        relu_words(&mut want_words, fmt);
+                    }
+                    let want = DecodedPlan::from_words(want_words, m,
+                                                       n, fmt);
+                    let got = gemm_fused(&pa, &pb, bias.as_deref(),
+                                         Epilogue { relu }, &cfg);
+                    assert_eq!(got.words, want.words,
+                               "{fmt:?} ({m},{k},{n}) relu={relu}");
+                    assert_eq!(got.sig, want.sig, "{fmt:?} sig");
+                    assert_eq!(got.w, want.w, "{fmt:?} w");
+                    assert_eq!(got.words8, want.words8,
+                               "{fmt:?} words8");
+                    assert_eq!(got.has_nar, want.has_nar);
+                    assert_eq!(got.nar_rows, want.nar_rows);
+                    assert_eq!(got.nar_cols, want.nar_cols);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_into_reuses_the_buffer_across_calls() {
+        let mut rng = SplitMix64::new(515);
+        let cfg = settings::current();
+        let fmt = P16_FMT;
+        let (m, k, n) = (9, 6, 7);
+        let mut buf = DecodedPlan::empty(fmt);
+        let mut ptr_after_first = std::ptr::null();
+        for trial in 0..3 {
+            let aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            let pa = DecodedPlan::from_words(aw, m, k, fmt);
+            let pb = DecodedPlan::from_words(bw, k, n, fmt);
+            gemm_fused_into(&pa, &pb, None, Epilogue::RELU, &cfg,
+                            &mut buf);
+            let fresh =
+                gemm_fused(&pa, &pb, None, Epilogue::RELU, &cfg);
+            assert_eq!(buf.words, fresh.words, "trial {trial}");
+            assert_eq!(buf.sig, fresh.sig, "trial {trial}");
+            if trial == 0 {
+                ptr_after_first = buf.words.as_ptr();
+            } else {
+                // Same shape: the recycled buffer must not realloc.
+                assert_eq!(buf.words.as_ptr(), ptr_after_first,
+                           "ping-pong buffer reallocated");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_thread_counts_and_paths_agree() {
+        // The epilogue is orthogonal to dispatch: explicit thread /
+        // tile pins must not change the fused output.
+        let mut rng = SplitMix64::new(616);
+        let fmt = P8_FMT;
+        let (m, k, n) = (23, 12, 9);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let base = gemm_fused(&pa, &pb, None, Epilogue::RELU,
+                              &settings::current());
+        for threads in [1usize, 2, 5] {
+            let cfg = KernelConfig {
+                threads: Some(threads),
+                pool_workers: None,
+                tile: Some(TileConfig { p16_panel: 4, p32_panel: 1,
+                                        steal_rows: 2, k_chunk: 4 }),
+                path: InnerPath::Portable,
+                autotune: crate::kernel::AutotuneMode::Off,
+            };
+            let got = gemm_fused(&pa, &pb, None, Epilogue::RELU, &cfg);
+            assert_eq!(got.words, base.words, "threads={threads}");
+            assert_eq!(got.sig, base.sig);
+            assert_eq!(got.words8, base.words8);
+        }
+    }
+
+    #[test]
+    fn fused_counts_fused_gemms_and_elems() {
+        let fmt = P8_FMT;
+        let pa = DecodedPlan::from_words(vec![0x40; 6], 2, 3, fmt);
+        let pb = DecodedPlan::from_words(vec![0x40; 6], 3, 2, fmt);
+        let before = counters();
+        let _ = gemm_fused(&pa, &pb, None, Epilogue::NONE,
+                           &settings::current());
+        let after = counters();
+        // >= : other tests run concurrently and also count.
+        assert!(after.fused_gemms >= before.fused_gemms + 1);
+        assert!(after.fused_elems >= before.fused_elems + 4);
+        assert!(after.gemms >= before.gemms + 1);
+    }
+
+    #[test]
+    fn fused_empty_shapes_reset_the_buffer() {
+        let fmt = P32_FMT;
+        let pa = DecodedPlan::from_words(vec![], 0, 5, fmt);
+        let pb = DecodedPlan::from_words(vec![0u64; 15], 5, 3, fmt);
+        let mut buf = DecodedPlan::empty(fmt);
+        gemm_fused_into(&pa, &pb, None, Epilogue::RELU,
+                        &settings::current(), &mut buf);
+        assert!(buf.is_empty());
+        assert_eq!((buf.rows, buf.cols), (0, 3));
+    }
+
+    #[test]
+    fn relu_words_matches_value_relu() {
+        for fmt in [P8_FMT, P16_FMT] {
+            for word in 0..(1u64 << fmt.nbits) {
+                let mut w = [word];
+                relu_words(&mut w, fmt);
+                let v = to_f64(word, fmt);
+                if v.is_nan() {
+                    assert_eq!(w[0], fmt.nar(), "NaR passes through");
+                } else if v < 0.0 {
+                    assert_eq!(w[0], 0, "{fmt:?} {word:#x}");
+                } else {
+                    assert_eq!(w[0], word, "{fmt:?} {word:#x}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -96,17 +96,35 @@
 //! [`crate::api::EngineConfig::from_env`] — the kernel never touches
 //! `std::env` (`scripts/verify.sh` enforces this with a grep gate).
 //!
+//! ## The fused epilogue (decode-once across the network)
+//!
+//! [`gemm_fused`] / [`gemm_fused_into`] extend the single-rounding
+//! contract across layer boundaries: while each output row chunk is
+//! still cache-hot, an [`Epilogue`] applies the activation at word
+//! level and emits the **planar decoded fields directly**
+//! (`simd::epilogue_window`), so layer N's output plan *is* layer
+//! N+1's A-operand with zero interior encode/decode round-trip —
+//! exactly one rounding per layer output, bit-identical to the
+//! layer-wise chain ([`gemm`] → [`relu_words`] →
+//! [`DecodedPlan::from_words`]). `gemm_fused_into` recycles a
+//! caller-owned plan buffer ([`plan::DecodedPlan::reset`]), so a
+//! steady-state fused forward allocates nothing per layer.
+//! [`crate::nn::exec::Session`] rides this by default
+//! (`SPADE_FUSED=0` / `EngineConfig::fused` is the escape hatch).
+//!
 //! ## Who uses it
 //!
 //! [`crate::systolic::gemm::SystolicGemm::run`] (the functional GEMM),
-//! [`crate::nn::exec`]'s `Backend::Posit` (with weight plans cached per
-//! (layer, mode) in [`crate::nn::exec::Session`]), and the
-//! [`crate::coordinator`] sharded planar serving backend all route
-//! through [`gemm()`] — coordinator shards submit concurrently and
+//! [`crate::nn::exec`]'s `Backend::Posit` (fused by default, with
+//! weight plans cached per (layer, mode) in
+//! [`crate::nn::exec::Session`]), and the [`crate::coordinator`]
+//! sharded planar serving backend all route through [`gemm()`] /
+//! [`gemm_fused_into`] — coordinator shards submit concurrently and
 //! share the one process-wide pool. `benches/hotpath.rs` tracks
 //! planar-vs-scalar throughput, lane-vs-scalar-gather and
-//! blocked-vs-unblocked inner loops, thread scaling, and
-//! steal-vs-fixed-split dispatch.
+//! blocked-vs-unblocked inner loops, thread scaling,
+//! steal-vs-fixed-split dispatch, and fused-vs-layer-wise forwards
+//! (`fused_vs_layerwise`).
 
 pub mod autotune;
 pub mod gemm;
@@ -118,10 +136,11 @@ pub mod simd;
 
 pub use autotune::{AutotuneMode, ShapeClass};
 pub use gemm::{auto_threads, counters, encode_acc_i128,
-               encode_acc_i64, gemm, gemm_single_path,
-               gemm_with_config, gemm_with_config_stats,
-               gemm_with_scope, gemm_with_stats, gemm_with_threads,
-               DispatchStats, KernelCounters};
+               encode_acc_i64, gemm, gemm_fused, gemm_fused_into,
+               gemm_single_path, gemm_with_config,
+               gemm_with_config_stats, gemm_with_scope,
+               gemm_with_stats, gemm_with_threads, relu_words,
+               DispatchStats, Epilogue, KernelCounters};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
               p16_decode_lut, p16_hyb_lut, DecEntry};
 pub use plan::DecodedPlan;

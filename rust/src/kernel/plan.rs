@@ -12,10 +12,33 @@
 //! row/column masks, which the GEMM applies as a final poisoning pass —
 //! exactly the quire's absorbing-NaR semantics.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::posit::{decode, from_f64, to_f64, PositClass, PositFormat,
                    P16_FMT, P8_FMT};
 
 use super::lut;
+
+/// Elements decoded word → planar by [`DecodedPlan::from_words`] (and
+/// the fused GEMM's NaR slow path) since process start. The fused
+/// pipeline's whole point is that this stays flat between the input
+/// edge and the logits — `tests/fused_pipeline.rs` asserts it.
+static CTR_PLAN_DECODES: AtomicU64 = AtomicU64::new(0);
+
+/// Elements quantized (encoded) float → posit by
+/// [`DecodedPlan::from_f64`] / [`DecodedPlan::from_f32`] since process
+/// start. On the fused path only the network input edge pays this.
+static CTR_PLAN_ENCODES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide decode-element counter (see [`CTR_PLAN_DECODES`]).
+pub(super) fn plan_decodes() -> u64 {
+    CTR_PLAN_DECODES.load(Ordering::Relaxed)
+}
+
+/// Process-wide encode-element counter (see [`CTR_PLAN_ENCODES`]).
+pub(super) fn plan_encodes() -> u64 {
+    CTR_PLAN_ENCODES.load(Ordering::Relaxed)
+}
 
 /// A posit matrix decoded once into planar field arrays. See module
 /// docs.
@@ -65,6 +88,7 @@ impl DecodedPlan {
             Vec::new()
         };
         let len = words.len();
+        CTR_PLAN_DECODES.fetch_add(len as u64, Ordering::Relaxed);
         let mut sig = Vec::with_capacity(len);
         let mut w = Vec::with_capacity(len);
         let mut has_nar = false;
@@ -130,6 +154,8 @@ impl DecodedPlan {
     /// Quantize an f64 matrix to `fmt` and decode it (one pass).
     pub fn from_f64(data: &[f64], rows: usize, cols: usize,
                     fmt: PositFormat) -> DecodedPlan {
+        CTR_PLAN_ENCODES.fetch_add(data.len() as u64,
+                                   Ordering::Relaxed);
         let words = data.iter().map(|&v| from_f64(v, fmt)).collect();
         Self::from_words(words, rows, cols, fmt)
     }
@@ -137,9 +163,185 @@ impl DecodedPlan {
     /// Quantize an f32 matrix to `fmt` and decode it.
     pub fn from_f32(data: &[f32], rows: usize, cols: usize,
                     fmt: PositFormat) -> DecodedPlan {
+        CTR_PLAN_ENCODES.fetch_add(data.len() as u64,
+                                   Ordering::Relaxed);
         let words =
             data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
         Self::from_words(words, rows, cols, fmt)
+    }
+
+    /// Adopt planar fields produced elsewhere (e.g. by the fused GEMM
+    /// epilogue) **without decoding anything**: `sig`/`w` are trusted
+    /// to match `words`, and only the cheap derived fields (packed P8
+    /// bytes, NaR masks — a word scan, not a field unpack) are
+    /// rebuilt. This is the constructor that lets layer N's fused
+    /// output become layer N+1's A-operand with zero encode/decode
+    /// round-trip; neither the decode nor the encode counter moves.
+    pub fn from_planar(words: Vec<u64>, sig: Vec<i64>, w: Vec<i32>,
+                       rows: usize, cols: usize, fmt: PositFormat)
+                       -> DecodedPlan {
+        assert_eq!(words.len(), rows * cols,
+                   "planar shape {rows}x{cols} vs {} words",
+                   words.len());
+        assert_eq!(sig.len(), words.len(), "sig length");
+        assert_eq!(w.len(), words.len(), "w length");
+        let mut p = DecodedPlan { fmt, rows, cols, words,
+                                  words8: Vec::new(), sig, w,
+                                  has_nar: false,
+                                  nar_rows: Vec::new(),
+                                  nar_cols: Vec::new() };
+        p.finish_fill();
+        p
+    }
+
+    /// An empty plan to be filled later via [`DecodedPlan::reset`] —
+    /// the seed of a reusable inter-layer ping-pong buffer.
+    pub fn empty(fmt: PositFormat) -> DecodedPlan {
+        DecodedPlan { fmt, rows: 0, cols: 0, words: Vec::new(),
+                      words8: Vec::new(), sig: Vec::new(),
+                      w: Vec::new(), has_nar: false,
+                      nar_rows: Vec::new(), nar_cols: Vec::new() }
+    }
+
+    /// Re-shape this plan into a zeroed `rows`×`cols` matrix of `fmt`,
+    /// **retaining every buffer's capacity**: in steady state a fused
+    /// forward pass cycles a few of these buffers and allocates
+    /// nothing per layer. All elements become posit zero and the NaR
+    /// masks are cleared; producers fill `words`/`sig`/`w` (and call
+    /// [`DecodedPlan::finish_fill`] if NaR words may be present).
+    pub fn reset(&mut self, fmt: PositFormat, rows: usize,
+                 cols: usize) {
+        let len = rows * cols;
+        self.fmt = fmt;
+        self.rows = rows;
+        self.cols = cols;
+        self.words.clear();
+        self.words.resize(len, 0);
+        self.sig.clear();
+        self.sig.resize(len, 0);
+        self.w.clear();
+        self.w.resize(len, 0);
+        self.words8.clear();
+        if fmt.nbits <= 8 {
+            self.words8.resize(len, 0);
+        }
+        self.has_nar = false;
+        self.nar_rows.clear();
+        self.nar_cols.clear();
+    }
+
+    /// Rebuild the derived fields after `words`/`sig`/`w` were filled
+    /// externally: the packed P8 byte copy and the NaR row/column
+    /// masks (a literal word scan — no field decode).
+    pub fn finish_fill(&mut self) {
+        self.words8.clear();
+        if self.fmt.nbits <= 8 {
+            self.words8
+                .extend(self.words.iter().map(|&w| w as u8));
+        }
+        self.rescan_nar();
+    }
+
+    /// Rebuild `has_nar` and the row/column masks from the words.
+    fn rescan_nar(&mut self) {
+        let nar = self.fmt.nar();
+        self.has_nar = false;
+        self.nar_rows.clear();
+        self.nar_cols.clear();
+        for (idx, &wd) in self.words.iter().enumerate() {
+            if wd == nar {
+                if !self.has_nar {
+                    self.has_nar = true;
+                    self.nar_rows.resize(self.rows, false);
+                    self.nar_cols.resize(self.cols, false);
+                }
+                self.nar_rows[idx / self.cols] = true;
+                self.nar_cols[idx % self.cols] = true;
+            }
+        }
+    }
+
+    /// Reinterpret the same row-major elements under a new
+    /// `rows`×`cols` geometry (the planar flatten: element order is
+    /// unchanged, only the matrix view — and therefore the NaR masks —
+    /// change).
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        assert_eq!(rows * cols, self.words.len(),
+                   "reshape {rows}x{cols} vs {} elements",
+                   self.words.len());
+        if rows == self.rows && cols == self.cols {
+            return;
+        }
+        self.rows = rows;
+        self.cols = cols;
+        if self.has_nar {
+            self.rescan_nar();
+        }
+    }
+
+    /// Re-round every element into `fmt` — the one *genuine* extra
+    /// rounding a mixed-precision policy transition requires. Exact:
+    /// every ≤32-bit posit value is exactly representable in f64, so
+    /// the only rounding is the quantization into the new format
+    /// (NaR → NaN → NaR round-trips). Same-format requantization is
+    /// the identity (a plain clone).
+    pub fn requantize(&self, fmt: PositFormat) -> DecodedPlan {
+        if fmt == self.fmt {
+            return self.clone();
+        }
+        DecodedPlan::from_f64(&self.to_f64(), self.rows, self.cols,
+                              fmt)
+    }
+
+    /// Decode the planar loop of the fused GEMM's NaR slow path: the
+    /// front end wrote (possibly poisoned) words into `self.words`;
+    /// rebuild `sig`/`w` and the derived fields from them in place.
+    /// Counts as a planar decode (it is one).
+    pub(super) fn refill_planar_from_words(&mut self) {
+        CTR_PLAN_DECODES.fetch_add(self.words.len() as u64,
+                                   Ordering::Relaxed);
+        if self.fmt == P8_FMT || self.fmt == P16_FMT {
+            let t = if self.fmt == P8_FMT {
+                lut::p8_decode_lut()
+            } else {
+                lut::p16_decode_lut()
+            };
+            for (i, &wd) in self.words.iter().enumerate() {
+                let e = &t[wd as usize];
+                self.sig[i] = e.sig as i64;
+                self.w[i] = e.w as i32;
+            }
+        } else {
+            for (i, &wd) in self.words.iter().enumerate() {
+                let d = decode(wd, self.fmt);
+                match d.class {
+                    PositClass::Zero | PositClass::NaR => {
+                        self.sig[i] = 0;
+                        self.w[i] = 0;
+                    }
+                    PositClass::Normal => {
+                        let s = d.significand() as i64;
+                        self.sig[i] = if d.sign { -s } else { s };
+                        self.w[i] = d.scale - d.fbits as i32;
+                    }
+                }
+            }
+        }
+        self.finish_fill();
+    }
+
+    /// Exact f64 value of element `idx` straight from the planar
+    /// fields — `sig * 2^w`, no word decode (NaR → NaN). This is what
+    /// lets max-pool select winners on a plan without ever leaving
+    /// planar form.
+    #[inline]
+    pub fn value(&self, idx: usize) -> f64 {
+        if self.words[idx] == self.fmt.nar() {
+            return f64::NAN;
+        }
+        self.sig[idx] as f64
+            * f64::from_bits(((1023 + self.w[idx] as i64) as u64)
+                             << 52)
     }
 
     /// Element count.
@@ -226,6 +428,92 @@ mod tests {
         // wider formats skip the packed copy
         let p16 = DecodedPlan::from_words(vec![0u64; 4], 2, 2, P16_FMT);
         assert!(p16.words8.is_empty());
+    }
+
+    #[test]
+    fn from_planar_adopts_fields_without_decode() {
+        let fmt = P8_FMT;
+        let words: Vec<u64> = (0..=255u64).collect();
+        let base = DecodedPlan::from_words(words, 16, 16, fmt);
+        let before = plan_decodes();
+        let p = DecodedPlan::from_planar(base.words.clone(),
+                                         base.sig.clone(),
+                                         base.w.clone(), 16, 16, fmt);
+        assert_eq!(plan_decodes(), before,
+                   "from_planar must not decode");
+        assert_eq!(p.words, base.words);
+        assert_eq!(p.sig, base.sig);
+        assert_eq!(p.w, base.w);
+        assert_eq!(p.words8, base.words8);
+        assert_eq!(p.has_nar, base.has_nar);
+        assert_eq!(p.nar_rows, base.nar_rows);
+        assert_eq!(p.nar_cols, base.nar_cols);
+    }
+
+    #[test]
+    fn reset_reuses_buffer_capacity() {
+        let mut p = DecodedPlan::empty(P16_FMT);
+        p.reset(P16_FMT, 8, 8);
+        assert_eq!(p.len(), 64);
+        assert!(p.words.iter().all(|&w| w == 0));
+        let ptr = p.words.as_ptr();
+        let cap = p.words.capacity();
+        // Same-or-smaller shape: the buffers must not reallocate.
+        p.reset(P16_FMT, 4, 8);
+        assert_eq!(p.words.as_ptr(), ptr);
+        assert_eq!(p.words.capacity(), cap);
+        assert_eq!((p.rows, p.cols), (4, 8));
+        // Format switch re-derives the packed byte copy.
+        p.reset(P8_FMT, 2, 3);
+        assert_eq!(p.words8.len(), 6);
+        assert!(!p.has_nar && p.nar_rows.is_empty());
+    }
+
+    #[test]
+    fn requantize_re_rounds_exactly_once() {
+        let vals = [0.0, 1.5, -2.25, 100.0, 1e-4, -0.37];
+        let p16 = DecodedPlan::from_f64(&vals, 2, 3, P16_FMT);
+        let p8 = p16.requantize(P8_FMT);
+        // Must equal quantizing the exact P16 values directly to P8.
+        let want = DecodedPlan::from_f64(&p16.to_f64(), 2, 3, P8_FMT);
+        assert_eq!(p8.words, want.words);
+        // Same format: identity.
+        let same = p16.requantize(P16_FMT);
+        assert_eq!(same.words, p16.words);
+        // NaR survives the transition.
+        let nar = DecodedPlan::from_words(vec![P32_FMT.nar()], 1, 1,
+                                          P32_FMT);
+        let rq = nar.requantize(P8_FMT);
+        assert!(rq.has_nar && rq.words[0] == P8_FMT.nar());
+    }
+
+    #[test]
+    fn planar_value_matches_word_decode() {
+        for fmt in [P8_FMT, P16_FMT] {
+            let words: Vec<u64> = (0..(1u64 << fmt.nbits)).collect();
+            let len = words.len();
+            let p = DecodedPlan::from_words(words, 1, len, fmt);
+            for idx in 0..len {
+                let v = p.value(idx);
+                let want = to_f64(p.words[idx], fmt);
+                if want.is_nan() {
+                    assert!(v.is_nan());
+                } else {
+                    assert_eq!(v, want, "{fmt:?} idx {idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshape_rebuilds_nar_masks() {
+        let fmt = P8_FMT;
+        let words = vec![0x40, 0x80, 0x40,
+                         0x40, 0x40, 0x40]; // NaR at (0, 1)
+        let mut p = DecodedPlan::from_words(words, 2, 3, fmt);
+        p.reshape(3, 2); // NaR now at (0, 1) of a 3x2 view
+        assert_eq!(p.nar_rows, vec![true, false, false]);
+        assert_eq!(p.nar_cols, vec![false, true]);
     }
 
     #[test]

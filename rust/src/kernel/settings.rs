@@ -19,7 +19,11 @@
 //! config is handed to them. Changing it never changes *results* —
 //! every tile/thread/path combination is bit-identical by construction
 //! (exact integer accumulation, one rounding) — only how fast they
-//! arrive.
+//! arrive. The same holds for the fused epilogue
+//! ([`super::gemm::gemm_fused_into`]): it is orthogonal to tile
+//! geometry and threading, riding whatever row chunks dispatch (and
+//! the autotuner's shape classes) pick, so a config tuned on the word
+//! GEMM resolves identically for fused calls.
 //!
 //! ## The tuned-winner table
 //!

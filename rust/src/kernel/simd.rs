@@ -56,7 +56,7 @@
 //! reads the environment). Lane counts are compile-time constants:
 //! they size on-stack accumulator arrays.
 
-use crate::posit::{PositFormat, Quire};
+use crate::posit::{decode, PositClass, PositFormat, Quire};
 
 use super::gemm::{encode_acc_i128, encode_acc_i64};
 use super::lut::{self, P16_ACC_FRAC_OFFSET, P8_ACC_FRAC_OFFSET};
@@ -279,6 +279,74 @@ impl BiasDec {
         let has_nar = p.has_nar;
         // `nar` is only read when `has_nar` (it is empty otherwise).
         BiasDec { sig: p.sig, w: p.w, nar: p.nar_cols, has_nar }
+    }
+}
+
+/// Fused-epilogue finish of one **cache-hot** output window: the
+/// optional ReLU word-clamp on the freshly rounded words, then planar
+/// field emission (`sig`/`w`, plus the packed byte copy for ≤8-bit
+/// formats) — exactly the decode the next layer would otherwise pay
+/// through [`DecodedPlan::from_words`], done while the window is still
+/// in L1/L2 right after [`gemm_rows`] filled it.
+///
+/// The caller guarantees no NaR can appear in `words`: the kernel's
+/// rounding ([`super::gemm::encode_acc_i64`] and friends) saturates to
+/// maxpos and never overflows to NaR, so NaR outputs arise only from
+/// NaR operands — which [`super::gemm::gemm_fused_into`] routes to the
+/// masked slow path instead of here. That is what lets this loop skip
+/// mask building entirely.
+pub(super) fn epilogue_window(fmt: PositFormat, relu: bool,
+                              words: &mut [u64], sig: &mut [i64],
+                              w: &mut [i32],
+                              w8: Option<&mut [u8]>) {
+    debug_assert_eq!(words.len(), sig.len());
+    debug_assert_eq!(words.len(), w.len());
+    let nar = fmt.nar();
+    let sign_bit = 1u64 << (fmt.nbits - 1);
+    if relu {
+        // Negative word ⇔ negative value (words are value-monotone
+        // two's-complement integers); NaR (sign bit, zero payload)
+        // passes through like NaN does through an f32 ReLU.
+        for wd in words.iter_mut() {
+            if *wd & sign_bit != 0 && *wd != nar {
+                *wd = 0;
+            }
+        }
+    }
+    if fmt == crate::posit::P8_FMT || fmt == crate::posit::P16_FMT {
+        let t = if fmt == crate::posit::P8_FMT {
+            lut::p8_decode_lut()
+        } else {
+            lut::p16_decode_lut()
+        };
+        for (i, &wd) in words.iter().enumerate() {
+            let e = &t[wd as usize];
+            debug_assert!(!e.nar, "NaR output without NaR operand");
+            sig[i] = e.sig as i64;
+            w[i] = e.w as i32;
+        }
+    } else {
+        for (i, &wd) in words.iter().enumerate() {
+            debug_assert_ne!(wd, nar,
+                             "NaR output without NaR operand");
+            let d = decode(wd, fmt);
+            match d.class {
+                PositClass::Zero | PositClass::NaR => {
+                    sig[i] = 0;
+                    w[i] = 0;
+                }
+                PositClass::Normal => {
+                    let s = d.significand() as i64;
+                    sig[i] = if d.sign { -s } else { s };
+                    w[i] = d.scale - d.fbits as i32;
+                }
+            }
+        }
+    }
+    if let Some(w8) = w8 {
+        for (dst, &wd) in w8.iter_mut().zip(words.iter()) {
+            *dst = wd as u8;
+        }
     }
 }
 

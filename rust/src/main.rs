@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   tables            print Tables I, II, III (model vs paper)
-//!   eval              Fig. 4 accuracy sweep (--model, --limit, --modes)
+//!   eval              Fig. 4 accuracy sweep (--model, --limit, --modes,
+//!                     --no-fused layer-wise pipeline cross-checked
+//!                     bit-for-bit against the fused default)
 //!   serve             run the precision-adaptive serving engine on
 //!                     synthetic traffic (--requests, --rate-us,
 //!                     --policy, --shards, --batch, --affinity
@@ -102,10 +104,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model_name = args.get_or("model", "lenet5");
     let limit: usize = args.num_or("limit", 256);
     let modes = args.get_or("modes", "f32,p32,p16,p8");
+    let no_fused = args.flag("no-fused");
 
     // Env-seeded engine: SPADE_KERNEL_* tuning applies to the sweep.
+    // --no-fused selects the layer-wise escape hatch and cross-checks
+    // each pass against the fused pipeline (the paths must be
+    // bit-identical, so it is a verification mode, not a result mode).
     let engine = EngineBuilder::from_env()?
         .model(model_name.clone())
+        .fused(!no_fused)
         .build()?;
     let model = Model::load(&model_name)?;
     let ds = Dataset::load_artifact(&model.spec.dataset, "test")?;
@@ -114,9 +121,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let x = Tensor::from_vec(&[n, ds.h, ds.w, ds.c], pix);
 
     // One plan-cached session for the whole sweep: weight decode is
-    // paid once per (layer, mode), not once per precision pass.
+    // paid once per (layer, mode), not once per precision pass, and
+    // the fused path additionally recycles interlayer plan buffers
+    // across every forward below.
     let mut sess = engine.session(&model);
-    println!("{model_name} on {} ({n} images)", model.spec.dataset);
+    let mut cross = no_fused.then(|| engine.session(&model).with_fused(true));
+    println!("{model_name} on {} ({n} images){}", model.spec.dataset,
+             if no_fused { "  [layer-wise + fused cross-check]" }
+             else { "" });
     for mode in modes.split(',') {
         let prec = Precision::parse(mode)?;
         let backend = if prec == Precision::F32 { Backend::F32 }
@@ -124,8 +136,24 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let t0 = std::time::Instant::now();
         let (logits, stats) = sess.forward(&x, prec, backend)?;
         let acc = spade::nn::exec::accuracy(&logits, labels);
+        let mut check = String::new();
+        if let Some(fsess) = cross.as_mut() {
+            let (flogits, _) = fsess.forward(&x, prec, backend)?;
+            let same = logits
+                .data
+                .iter()
+                .zip(&flogits.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits()
+                         || (a.is_nan() && b.is_nan()));
+            anyhow::ensure!(
+                same,
+                "{}: fused and layer-wise logits diverge — the \
+                 epilogue exactness contract is broken",
+                prec.name());
+            check = "  fused==layer-wise OK".into();
+        }
         println!("  {:<4} acc {:.4}  ({} MACs, {} cycles, {:.1} uJ) \
-                  [{:.1}s wall]",
+                  [{:.1}s wall]{check}",
                  prec.name(), acc, stats.macs, stats.cycles,
                  stats.energy_pj / 1e6, t0.elapsed().as_secs_f32());
     }

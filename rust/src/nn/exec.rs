@@ -2,10 +2,12 @@
 //!
 //! * [`Backend::F32`] — plain f32 (the Fig. 4 floating-point baseline);
 //! * [`Backend::Posit`] — functional posit through the decode-once
-//!   planar kernel ([`crate::kernel`]): quantized operands decoded once,
-//!   exact accumulation, one rounding per output, **plus** cycle/energy
-//!   statistics from the systolic dataflow model — this is what
-//!   full-network evaluation and the throughput bench use;
+//!   planar kernel ([`crate::kernel`]), **fused end-to-end by
+//!   default**: the GEMM epilogue applies bias + activation + the
+//!   single rounding while each output tile is cache-hot and emits
+//!   planar decoded fields directly, so layer N's output plan *is*
+//!   layer N+1's A-operand — plus cycle/energy statistics from the
+//!   systolic dataflow model;
 //! * [`Backend::PositExact`] — quire-exact bit-level path through
 //!   [`crate::posit::Quire`] (slow; the oracle the planar kernel is
 //!   property-tested against).
@@ -13,6 +15,39 @@
 //! A per-MAC-layer [`Precision`] policy expresses the paper's layer-wise
 //! precision heterogeneity; `forward_policy` switches the array MODE
 //! between layers exactly as the SIMD engine would.
+//!
+//! ## The fused planar pipeline (word-exact interlayer contract)
+//!
+//! Between MAC layers, posit activations stay in planar decoded form
+//! ([`DecodedPlan`]) — never round-tripped through floats:
+//!
+//! * **GEMM + bias + ReLU + rounding** are fused in the kernel
+//!   epilogue ([`crate::kernel::gemm_fused_into`]): exactly **one**
+//!   rounding per layer output, with bias in the exact accumulator
+//!   domain (see [`crate::kernel::Epilogue`] for the proof sketch
+//!   that word-level ReLU commutes with the rounding);
+//! * **max-pool** selects window winners by exact planar value and
+//!   **gathers** their fields (`layers::maxpool_plan_into`) — a NaR
+//!   candidate never wins, an all-NaR window emits NaR, matching NaN
+//!   semantics of the f32 path;
+//! * **im2col / flatten** are pure gathers/reshapes of planar fields
+//!   (`layers::im2col_plan_into`, [`DecodedPlan::reshape`]) — they
+//!   commute with quantization;
+//! * **mixed-precision policy transitions** re-round once through
+//!   [`DecodedPlan::requantize`] — the only genuinely required extra
+//!   rounding, identical on every path.
+//!
+//! Floats exist only at the network edges: the input batch is
+//! quantized once ([`edge_quantize`] — the **only** quantization in
+//! this module; `scripts/verify.sh` greps that no direct posit-encode
+//! call appears here), and logits are materialized once at the end
+//! ([`materialize_f32`]). The layer-wise escape hatch
+//! ([`Session::set_fused`] false, `SPADE_FUSED=0`,
+//! `EngineConfig::fused`) runs the same word-exact chain but
+//! re-decodes each layer's words into a fresh plan — numerically
+//! **bit-identical** to the fused path for every precision and
+//! policy (asserted in `tests/fused_pipeline.rs`), just slower and
+//! allocation-heavy; it exists to cross-check the fusion.
 //!
 //! ## Plan lifecycle and caching
 //!
@@ -26,8 +61,11 @@
 //!    (`cache_misses` increments, the plan lands in the map as an
 //!    `Arc`);
 //! 2. **hit** — every later forward at the same key clones the `Arc`
-//!    (`cache_hits`); activations are still planned per call, since
-//!    they change every batch;
+//!    (`cache_hits`); the input batch is still quantized per call,
+//!    since it changes every batch — but interlayer activations are
+//!    never re-planned: the fused epilogue emits them planar, cycled
+//!    through a small pool of recycled plan buffers, so a
+//!    steady-state forward allocates nothing per layer;
 //! 3. **invalidation by keying** — there is no explicit flush: a
 //!    precision-policy change simply addresses different (layer, mode)
 //!    keys, so stale plans are never consulted (they stay resident;
@@ -48,8 +86,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::engine::Mode;
-use crate::kernel::{self, DecodedPlan, KernelConfig};
-use crate::posit::{from_f64, to_f64, Quire};
+use crate::kernel::{self, DecodedPlan, Epilogue, KernelConfig};
+use crate::posit::Quire;
 use crate::systolic::{ArrayConfig, GemmStats, SystolicGemm};
 
 use super::layers::{self};
@@ -61,7 +99,8 @@ use super::tensor::Tensor;
 pub enum Backend {
     /// f32 reference.
     F32,
-    /// Functional posit on the planar kernel (with stats).
+    /// Functional posit on the planar kernel (with stats; fused
+    /// epilogue by default, see [`Session::set_fused`]).
     Posit,
     /// Bit-exact quire path (slow; small batches only).
     PositExact,
@@ -94,6 +133,45 @@ pub const DEFAULT_ROWS: usize = 8;
 /// Default PE columns.
 pub const DEFAULT_COLS: usize = 8;
 
+/// Interlayer activation representation. The posit backends keep
+/// activations planar end-to-end (the decode-once contract); the f32
+/// backend — and any `Precision::F32` layer inside a posit policy —
+/// carries a plain tensor. `shape` is the logical NHWC (or
+/// `[n, features]`) view of the row-major plan elements.
+enum Act {
+    /// f32 tensor (F32 backend, and the network input before the
+    /// quantization edge).
+    F32(Tensor),
+    /// Planar posit activations + their logical shape.
+    Plan(DecodedPlan, Vec<usize>),
+}
+
+/// The **output edge**: decode a plan's words to f32 once, at the
+/// network boundary (logits) or at a posit→f32 precision transition.
+/// NaR becomes NaN. This and [`edge_quantize`] are the only places
+/// `nn::exec` crosses between floats and posit words.
+fn materialize_f32(p: &DecodedPlan, shape: &[usize]) -> Tensor {
+    let data: Vec<f32> =
+        p.to_f64().iter().map(|&v| v as f32).collect();
+    Tensor::from_vec(shape, data)
+}
+
+/// The **input edge**: quantize an f32 matrix into a planar operand —
+/// the single encode of a fused forward pass (NaN/±Inf map to NaR).
+fn edge_quantize(data: &[f32], rows: usize, cols: usize,
+                 fmt: crate::posit::PositFormat) -> DecodedPlan {
+    DecodedPlan::from_f32(data, rows, cols, fmt)
+}
+
+/// Re-view a MAC output as NHWC (plans keep their `[m, out]` matrix
+/// geometry; only the logical shape changes).
+fn reshape4(y: Act, n: usize, ho: usize, wo: usize, c: usize) -> Act {
+    match y {
+        Act::F32(t) => Act::F32(t.reshape(&[n, ho, wo, c])),
+        Act::Plan(p, _) => Act::Plan(p, vec![n, ho, wo, c]),
+    }
+}
+
 /// Stateful executor: a model plus cached per-(layer, mode) weight
 /// plans. See module docs.
 pub struct Session<'m> {
@@ -106,6 +184,14 @@ pub struct Session<'m> {
     /// so when it hands out sessions). Never changes results, only
     /// threading/tiling.
     kernel_cfg: KernelConfig,
+    /// Fused planar pipeline on/off (default on). Off = the
+    /// layer-wise escape hatch: same word-exact math, interior
+    /// re-decode per layer. Bit-identical either way.
+    fused: bool,
+    /// Recycled inter-layer plan buffers (the ping-pong pool): fused
+    /// stages write into these via `*_into` calls, so steady-state
+    /// inference allocates nothing per layer.
+    scratch: Vec<DecodedPlan>,
     /// Weight-plan cache hits (telemetry; bias rides along uncounted).
     pub cache_hits: u64,
     /// Weight-plan cache misses (each one quantizes+decodes a tensor).
@@ -120,6 +206,8 @@ impl<'m> Session<'m> {
             weight_plans: HashMap::new(),
             bias_words: HashMap::new(),
             kernel_cfg: kernel::settings::current(),
+            fused: true,
+            scratch: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
         }
@@ -132,6 +220,8 @@ impl<'m> Session<'m> {
             weight_plans: HashMap::new(),
             bias_words: HashMap::new(),
             kernel_cfg: kernel::settings::current(),
+            fused: true,
+            scratch: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
         }
@@ -151,6 +241,26 @@ impl<'m> Session<'m> {
         self
     }
 
+    /// Enable/disable the fused planar pipeline (default **on**).
+    /// `false` selects the layer-wise escape hatch — bit-identical
+    /// logits, but each layer's output words are re-decoded into a
+    /// fresh plan (the round-trip fusion eliminates). The `api`
+    /// facade routes `SPADE_FUSED` / `EngineConfig::fused` here.
+    pub fn set_fused(&mut self, fused: bool) {
+        self.fused = fused;
+    }
+
+    /// [`Session::set_fused`], fluent.
+    pub fn with_fused(mut self, fused: bool) -> Session<'m> {
+        self.fused = fused;
+        self
+    }
+
+    /// Whether the fused planar pipeline is enabled.
+    pub fn fused(&self) -> bool {
+        self.fused
+    }
+
     /// The kernel config this session's GEMMs run under.
     pub fn kernel_config(&self) -> KernelConfig {
         self.kernel_cfg
@@ -164,6 +274,29 @@ impl<'m> Session<'m> {
     /// Number of cached weight plans.
     pub fn cached_plans(&self) -> usize {
         self.weight_plans.len()
+    }
+
+    /// A plan buffer from the recycle pool (or a fresh empty one on
+    /// the very first layers of the very first forward).
+    fn grab_plan(&mut self) -> DecodedPlan {
+        self.scratch
+            .pop()
+            .unwrap_or_else(|| DecodedPlan::empty(crate::posit::P8_FMT))
+    }
+
+    /// Return a plan buffer to the ping-pong pool (bounded: a forward
+    /// pass needs at most a couple in flight).
+    fn recycle_plan(&mut self, p: DecodedPlan) {
+        if self.scratch.len() < 4 {
+            self.scratch.push(p);
+        }
+    }
+
+    /// Recycle whatever plan an activation held.
+    fn recycle_act(&mut self, a: Act) {
+        if let Act::Plan(p, _) = a {
+            self.recycle_plan(p);
+        }
     }
 
     /// Run the model on an NHWC input batch under a uniform precision.
@@ -184,7 +317,7 @@ impl<'m> Session<'m> {
         let n = x.shape[0];
 
         let nlayers = self.model.spec.layers.len();
-        let mut act = x.clone();
+        let mut act = Act::F32(x.clone());
         let mut stats = NetStats::default();
         let mut mac_idx = 0usize;
 
@@ -194,38 +327,92 @@ impl<'m> Session<'m> {
             let layer = self.model.spec.layers[i].clone();
             match layer {
                 LayerSpec::Conv { k, out, pad, relu } => {
-                    let (patches, ho, wo) = layers::im2col(&act, k, pad);
                     let prec = policy[mac_idx];
                     mac_idx += 1;
-                    let mut y = self.mac_layer(
-                        &patches, i, prec, backend, &mut stats,
+                    let (patches, ho, wo) =
+                        self.im2col_act(&act, k, pad)?;
+                    self.recycle_act(act);
+                    let y = self.mac_layer(
+                        patches, i, prec, backend, relu, &mut stats,
                         format!("layer{i}:conv{k}x{k}"))?;
-                    if relu {
-                        layers::relu(&mut y);
-                    }
-                    act = y.reshape(&[n, ho, wo, out]);
+                    act = reshape4(y, n, ho, wo, out);
                 }
                 LayerSpec::MaxPool { k } => {
-                    act = layers::maxpool(&act, k);
+                    act = self.maxpool_act(act, k)?;
                 }
                 LayerSpec::Flatten => {
-                    let feat = act.len() / n;
-                    act = act.reshape(&[n, feat]);
+                    act = match act {
+                        Act::F32(t) => {
+                            let feat = t.len() / n;
+                            Act::F32(t.reshape(&[n, feat]))
+                        }
+                        Act::Plan(mut p, _) => {
+                            let feat = p.len() / n;
+                            p.reshape(n, feat);
+                            Act::Plan(p, vec![n, feat])
+                        }
+                    };
                 }
                 LayerSpec::Dense { relu, .. } => {
                     let prec = policy[mac_idx];
                     mac_idx += 1;
-                    let mut y = self.mac_layer(
-                        &act, i, prec, backend, &mut stats,
+                    act = self.mac_layer(
+                        act, i, prec, backend, relu, &mut stats,
                         format!("layer{i}:dense"))?;
-                    if relu {
-                        layers::relu(&mut y);
-                    }
-                    act = y;
                 }
             }
         }
-        Ok((act, stats))
+        // The output edge: words become floats exactly once.
+        Ok(match act {
+            Act::F32(t) => (t, stats),
+            Act::Plan(p, shape) => {
+                let t = materialize_f32(&p, &shape);
+                self.recycle_plan(p);
+                (t, stats)
+            }
+        })
+    }
+
+    /// im2col in whatever representation the activation is in: the
+    /// f32 gather for tensors, the planar gather (into a recycled
+    /// buffer) for plans — the two commute with quantization, so the
+    /// paths stay bit-identical.
+    fn im2col_act(&mut self, act: &Act, k: usize, pad: layers::Pad)
+                  -> Result<(Act, usize, usize)> {
+        match act {
+            Act::F32(t) => {
+                let (p, ho, wo) = layers::im2col(t, k, pad);
+                Ok((Act::F32(p), ho, wo))
+            }
+            Act::Plan(p, shape) => {
+                ensure!(shape.len() == 4, "conv input must be NHWC");
+                let (n, h, w, c) =
+                    (shape[0], shape[1], shape[2], shape[3]);
+                let mut out = self.grab_plan();
+                let (ho, wo) = layers::im2col_plan_into(
+                    p, n, h, w, c, k, pad, &mut out);
+                let rows = n * ho * wo;
+                let cols = k * k * c;
+                Ok((Act::Plan(out, vec![rows, cols]), ho, wo))
+            }
+        }
+    }
+
+    /// Max-pool in the activation's representation (planar selection
+    /// never decodes or re-rounds an element).
+    fn maxpool_act(&mut self, act: Act, k: usize) -> Result<Act> {
+        match act {
+            Act::F32(t) => Ok(Act::F32(layers::maxpool(&t, k))),
+            Act::Plan(p, shape) => {
+                ensure!(shape.len() == 4, "pool input must be NHWC");
+                let (n, h, w, c) =
+                    (shape[0], shape[1], shape[2], shape[3]);
+                let mut out = self.grab_plan();
+                layers::maxpool_plan_into(&p, n, h, w, c, k, &mut out);
+                self.recycle_plan(p);
+                Ok(Act::Plan(out, vec![n, h / k, w / k, c]))
+            }
+        }
     }
 
     /// The layer's weight as a 2-D GEMM matrix shape (conv HWIO
@@ -272,22 +459,34 @@ impl<'m> Session<'m> {
             .get(&format!("layer{layer_idx}/b"))
             .with_context(|| format!("missing layer{layer_idx}/b"))?;
         let fmt = mode.format();
-        let words: Vec<u64> =
-            b.data.iter().map(|&v| from_f64(v as f64, fmt)).collect();
+        let words =
+            DecodedPlan::from_f32(&b.data, 1, b.data.len(), fmt).words;
         let arc = Arc::new(words);
         self.bias_words.insert((layer_idx, mode), arc.clone());
         Ok(arc)
     }
 
     /// One MAC layer through the selected backend. Bias enters the
-    /// accumulator before the final rounding (quire semantics).
-    fn mac_layer(&mut self, a: &Tensor, layer_idx: usize,
-                 prec: Precision, backend: Backend,
-                 stats: &mut NetStats, name: String) -> Result<Tensor> {
-        let (m, k) = (a.shape[0], a.shape[1]);
-
+    /// accumulator before the final rounding (quire semantics), and
+    /// ReLU — when the layer has one — is fused after it (the fused
+    /// path applies it in the kernel epilogue; the others at word
+    /// level, which is the same thing — see
+    /// [`crate::kernel::Epilogue`]).
+    fn mac_layer(&mut self, a: Act, layer_idx: usize,
+                 prec: Precision, backend: Backend, relu: bool,
+                 stats: &mut NetStats, name: String) -> Result<Act> {
         let mode = match (prec, backend) {
             (Precision::F32, _) | (_, Backend::F32) => {
+                // f32 route: materialize if the activation was planar
+                // (a posit→f32 precision transition inside a policy).
+                let at = match a {
+                    Act::F32(t) => t,
+                    Act::Plan(p, shape) => {
+                        let t = materialize_f32(&p, &shape);
+                        self.recycle_plan(p);
+                        t
+                    }
+                };
                 let (rows, cols) = self.weight_shape2(layer_idx)?;
                 let w =
                     &self.model.params[&format!("layer{layer_idx}/w")];
@@ -295,66 +494,85 @@ impl<'m> Session<'m> {
                     &self.model.params[&format!("layer{layer_idx}/b")];
                 // Dense weights are already 2-D: borrow them directly;
                 // only conv HWIO weights need a reshaped copy.
-                if w.shape.len() == 2 {
-                    return Ok(layers::gemm_bias_f32(a, w, &b.data));
+                let mut y = if w.shape.len() == 2 {
+                    layers::gemm_bias_f32(&at, w, &b.data)
+                } else {
+                    let wmat = Tensor::from_vec(&[rows, cols],
+                                                w.data.clone());
+                    layers::gemm_bias_f32(&at, &wmat, &b.data)
+                };
+                if relu {
+                    layers::relu(&mut y);
                 }
-                let wmat = Tensor::from_vec(&[rows, cols],
-                                            w.data.clone());
-                return Ok(layers::gemm_bias_f32(a, &wmat, &b.data));
+                return Ok(Act::F32(y));
             }
             (Precision::Posit(mode), _) => mode,
         };
 
-        match backend {
+        let fmt = mode.format();
+        let (m, k) = match &a {
+            Act::F32(t) => (t.shape[0], t.shape[1]),
+            Act::Plan(p, _) => (p.rows, p.cols),
+        };
+        let wplan = self.weight_plan(layer_idx, mode)?;
+        let bwords = self.bias_plan(layer_idx, mode)?;
+        ensure!(wplan.rows == k,
+                "layer{layer_idx}: weight rows {} != k {k}",
+                wplan.rows);
+        let nn = wplan.cols;
+
+        // The A operand, planar, at the layer's format: the input
+        // edge quantizes once; interlayer plans arrive already planar
+        // (decode-once), re-rounded only on a policy transition.
+        let pa: DecodedPlan = match a {
+            Act::F32(t) => edge_quantize(&t.data, m, k, fmt),
+            Act::Plan(p, _) => {
+                if p.fmt == fmt {
+                    p
+                } else {
+                    let rq = p.requantize(fmt);
+                    self.recycle_plan(p);
+                    rq
+                }
+            }
+        };
+
+        let out_act = match backend {
             Backend::F32 => unreachable!(),
             Backend::Posit => {
-                let fmt = mode.format();
-                let wplan = self.weight_plan(layer_idx, mode)?;
-                let bwords = self.bias_plan(layer_idx, mode)?;
-                ensure!(wplan.rows == k,
-                        "layer{layer_idx}: weight rows {} != k {k}",
-                        wplan.rows);
-                let nn = wplan.cols;
-                let pa = DecodedPlan::from_f32(&a.data, m, k, fmt);
-                let words = kernel::gemm_with_config(
-                    &pa, &wplan, Some(bwords.as_slice()),
-                    &self.kernel_cfg);
-                let out: Vec<f32> = words
-                    .iter()
-                    .map(|&wd| to_f64(wd, fmt) as f32)
-                    .collect();
-                let cfg = ArrayConfig { rows: DEFAULT_ROWS,
-                                        cols: DEFAULT_COLS, mode };
-                let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
-                stats.absorb(name, mode.tag(), &gs);
-                Ok(Tensor::from_vec(&[m, nn], out))
+                if self.fused {
+                    // Fused hot path: bias + ReLU + single rounding in
+                    // the cache-hot epilogue, planar fields out,
+                    // recycled buffer in — zero interior round-trips,
+                    // zero steady-state allocation.
+                    let mut outp = self.grab_plan();
+                    kernel::gemm_fused_into(
+                        &pa, &wplan, Some(bwords.as_slice()),
+                        Epilogue { relu }, &self.kernel_cfg,
+                        &mut outp);
+                    Act::Plan(outp, vec![m, nn])
+                } else {
+                    // Layer-wise escape hatch: same words, but the
+                    // output is re-decoded into a fresh plan — the
+                    // interior round-trip fusion eliminates.
+                    let mut words = kernel::gemm_with_config(
+                        &pa, &wplan, Some(bwords.as_slice()),
+                        &self.kernel_cfg);
+                    if relu {
+                        kernel::relu_words(&mut words, fmt);
+                    }
+                    Act::Plan(DecodedPlan::from_words(words, m, nn,
+                                                      fmt),
+                              vec![m, nn])
+                }
             }
             Backend::PositExact => {
-                let fmt = mode.format();
-                let (rows, cols) = self.weight_shape2(layer_idx)?;
-                ensure!(rows == k,
-                        "layer{layer_idx}: weight rows {rows} != k {k}");
-                let nn = cols;
-                let w =
-                    &self.model.params[&format!("layer{layer_idx}/w")];
-                let b =
-                    &self.model.params[&format!("layer{layer_idx}/b")];
-                let aw: Vec<u64> = a
-                    .data
-                    .iter()
-                    .map(|&v| from_f64(v as f64, fmt))
-                    .collect();
-                let ww: Vec<u64> = w
-                    .data
-                    .iter()
-                    .map(|&v| from_f64(v as f64, fmt))
-                    .collect();
-                let bw: Vec<u64> = b
-                    .data
-                    .iter()
-                    .map(|&v| from_f64(v as f64, fmt))
-                    .collect();
-                let mut out = vec![0.0f32; m * nn];
+                // Oracle: one quire per output over the same word
+                // operands, then the same word-level post-ops.
+                let aw = &pa.words;
+                let ww = &wplan.words;
+                let bw = bwords.as_slice();
+                let mut words = vec![0u64; m * nn];
                 let mut q = Quire::new(fmt);
                 for i in 0..m {
                     for j in 0..nn {
@@ -363,23 +581,29 @@ impl<'m> Session<'m> {
                             q.mac(aw[i * k + kk], ww[kk * nn + j]);
                         }
                         q.add_posit(bw[j]);
-                        out[i * nn + j] =
-                            to_f64(q.to_posit(), fmt) as f32;
+                        words[i * nn + j] = q.to_posit();
                     }
                 }
-                // stats follow the same dataflow formulas
-                let cfg = ArrayConfig { rows: DEFAULT_ROWS,
-                                        cols: DEFAULT_COLS, mode };
-                let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
-                stats.absorb(name, mode.tag(), &gs);
-                Ok(Tensor::from_vec(&[m, nn], out))
+                if relu {
+                    kernel::relu_words(&mut words, fmt);
+                }
+                Act::Plan(DecodedPlan::from_words(words, m, nn, fmt),
+                          vec![m, nn])
             }
-        }
+        };
+        self.recycle_plan(pa);
+
+        // stats follow the same dataflow formulas on every posit path
+        let cfg = ArrayConfig { rows: DEFAULT_ROWS,
+                                cols: DEFAULT_COLS, mode };
+        let gs = SystolicGemm::new(cfg).analytic_stats(m, k, nn);
+        stats.absorb(name, mode.tag(), &gs);
+        Ok(out_act)
     }
 }
 
 /// Run `model` on an NHWC input batch under a uniform precision
-/// (stateless: a fresh [`Session`] per call).
+/// (stateless: a fresh [`Session`] per call, fused pipeline on).
 pub fn forward(model: &Model, x: &Tensor, prec: Precision,
                backend: Backend) -> Result<(Tensor, NetStats)> {
     Session::new(model).forward(x, prec, backend)
@@ -461,8 +685,10 @@ mod tests {
 
     #[test]
     fn posit_fast_matches_exact_p32() {
-        // The planar kernel is quire-exact, so P32 now agrees with the
-        // bit-level oracle too (the old f64-proxy path could not).
+        // The planar kernel is quire-exact, so P32 agrees with the
+        // bit-level oracle too — including across layer boundaries,
+        // now that interlayer activations stay word-exact instead of
+        // narrowing through f32 (which silently double-rounded P32).
         let m = tiny_model();
         let x = rand_input(3, 12);
         let prec = Precision::Posit(Mode::P32x1);
@@ -482,6 +708,71 @@ mod tests {
         for (a, b) in f.data.iter().zip(&p.data) {
             assert!((a - b).abs() < 1e-4 + 1e-3 * a.abs(),
                     "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_and_layerwise_are_bit_identical() {
+        // The tentpole exactness contract: the fused epilogue path
+        // and the layer-wise escape hatch agree word-for-word at
+        // every precision and under a mixed policy.
+        let m = tiny_model();
+        let x = rand_input(3, 21);
+        for prec in [Precision::Posit(Mode::P8x4),
+                     Precision::Posit(Mode::P16x2),
+                     Precision::Posit(Mode::P32x1)] {
+            let mut fused = Session::new(&m);
+            let mut lw = Session::new(&m).with_fused(false);
+            assert!(fused.fused() && !lw.fused());
+            let (yf, _) = fused.forward(&x, prec, Backend::Posit).unwrap();
+            let (yl, _) = lw.forward(&x, prec, Backend::Posit).unwrap();
+            assert_eq!(yf.data, yl.data, "{prec:?}");
+        }
+        let policy = [Precision::Posit(Mode::P8x4),
+                      Precision::Posit(Mode::P32x1)];
+        let mut fused = Session::new(&m);
+        let mut lw = Session::new(&m).with_fused(false);
+        let (yf, _) =
+            fused.forward_policy(&x, &policy, Backend::Posit).unwrap();
+        let (yl, _) =
+            lw.forward_policy(&x, &policy, Backend::Posit).unwrap();
+        assert_eq!(yf.data, yl.data, "mixed policy");
+    }
+
+    #[test]
+    fn f32_layers_inside_posit_policies_still_run() {
+        // A posit→f32→posit policy forces plan materialization and
+        // re-quantization at the transitions; both pipeline flavors
+        // must agree.
+        let m = tiny_model();
+        let x = rand_input(2, 23);
+        let policy = [Precision::Posit(Mode::P16x2), Precision::F32];
+        let mut fused = Session::new(&m);
+        let mut lw = Session::new(&m).with_fused(false);
+        let (yf, _) =
+            fused.forward_policy(&x, &policy, Backend::Posit).unwrap();
+        let (yl, _) =
+            lw.forward_policy(&x, &policy, Backend::Posit).unwrap();
+        assert_eq!(yf.data, yl.data);
+    }
+
+    #[test]
+    fn repeated_fused_forwards_match_fresh_sessions() {
+        // Steady-state buffer recycling must not perturb results: the
+        // 3rd forward through one session equals a fresh session's.
+        let m = tiny_model();
+        let mut sess = Session::new(&m);
+        for trial in 0..3 {
+            let x = rand_input(2, 100 + trial);
+            let (y, _) = sess
+                .forward(&x, Precision::Posit(Mode::P16x2),
+                         Backend::Posit)
+                .unwrap();
+            let (fresh, _) = forward(&m, &x,
+                                     Precision::Posit(Mode::P16x2),
+                                     Backend::Posit)
+                .unwrap();
+            assert_eq!(y.data, fresh.data, "trial {trial}");
         }
     }
 

@@ -3,6 +3,19 @@
 //! same mapping `model.py::forward_posit` uses and the same GEMM the
 //! systolic array executes, so all three implementations are
 //! numerically comparable layer by layer.
+//!
+//! The `*_plan_into` variants are the fused pipeline's planar twins:
+//! they operate on a [`DecodedPlan`] of posit activations **without
+//! ever decoding or re-encoding an element** — im2col is a pure
+//! gather (which commutes with quantization: it only copies elements
+//! and introduces exact zeros), and max-pool selects winners by the
+//! exact planar value (`sig * 2^w`) with the same strict-`>`
+//! semantics as the f32 [`maxpool`] (NaR, like NaN, never wins; an
+//! all-NaR window emits NaR). Both write into a caller-recycled plan
+//! buffer so steady-state fused inference allocates nothing per
+//! layer.
+
+use crate::kernel::DecodedPlan;
 
 use super::tensor::Tensor;
 
@@ -85,6 +98,111 @@ pub fn maxpool(x: &Tensor, k: usize) -> Tensor {
     Tensor::from_vec(&[n, ho, wo, c], out)
 }
 
+/// Planar im2col: `[N,H,W,C] -> [N*Ho*Wo, k*k*C]` over a
+/// [`DecodedPlan`] of activations, gathering words **and** decoded
+/// fields together — no element is decoded or re-encoded. The
+/// zero-fill of padding is exact (posit zero is word 0 / `sig` 0).
+/// `out` is reset to the patch shape (capacity retained) and returns
+/// `(ho, wo)`.
+pub fn im2col_plan_into(src: &DecodedPlan, n: usize, h: usize,
+                        w: usize, c: usize, k: usize, pad: Pad,
+                        out: &mut DecodedPlan) -> (usize, usize) {
+    assert_eq!(src.words.len(), n * h * w * c,
+               "plan length vs NHWC dims");
+    let (p_lo, p_hi) = match pad {
+        Pad::Same => ((k - 1) / 2, k - 1 - (k - 1) / 2),
+        Pad::Valid => (0, 0),
+    };
+    let hp = h + p_lo + p_hi;
+    let wp = w + p_lo + p_hi;
+    let ho = hp - k + 1;
+    let wo = wp - k + 1;
+
+    let row_len = k * k * c;
+    out.reset(src.fmt, n * ho * wo, row_len);
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst_base = ((b * ho + oy) * wo + ox) * row_len;
+                for ky in 0..k {
+                    let iy = oy + ky;
+                    if iy < p_lo || iy >= p_lo + h {
+                        continue; // zero padding (already zeroed)
+                    }
+                    let sy = iy - p_lo;
+                    for kx in 0..k {
+                        let ix = ox + kx;
+                        if ix < p_lo || ix >= p_lo + w {
+                            continue;
+                        }
+                        let sx = ix - p_lo;
+                        let s = ((b * h + sy) * w + sx) * c;
+                        let d = dst_base + (ky * k + kx) * c;
+                        out.words[d..d + c]
+                            .copy_from_slice(&src.words[s..s + c]);
+                        out.sig[d..d + c]
+                            .copy_from_slice(&src.sig[s..s + c]);
+                        out.w[d..d + c]
+                            .copy_from_slice(&src.w[s..s + c]);
+                    }
+                }
+            }
+        }
+    }
+    out.finish_fill();
+    (ho, wo)
+}
+
+/// Planar kxk max pooling (stride k, VALID) over a [`DecodedPlan`] of
+/// NHWC activations: per window the winner is selected by exact
+/// planar value ([`DecodedPlan::value`]) and its fields are gathered —
+/// no decode, no re-rounding. NaR candidates never win (NaN
+/// comparison semantics, like the f32 [`maxpool`]); a window that is
+/// **all** NaR emits NaR.
+pub fn maxpool_plan_into(src: &DecodedPlan, n: usize, h: usize,
+                         w: usize, c: usize, k: usize,
+                         out: &mut DecodedPlan) {
+    assert_eq!(src.words.len(), n * h * w * c,
+               "plan length vs NHWC dims");
+    let (ho, wo) = (h / k, w / k);
+    out.reset(src.fmt, n * ho * wo, c);
+    let nar = src.fmt.nar();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut best: Option<(usize, f64)> = None;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let idx = ((b * h + oy * k + ky) * w
+                                       + ox * k + kx)
+                                * c
+                                + ch;
+                            if src.words[idx] == nar {
+                                continue;
+                            }
+                            let v = src.value(idx);
+                            if best.map_or(true, |(_, bv)| v > bv) {
+                                best = Some((idx, v));
+                            }
+                        }
+                    }
+                    let dst = ((b * ho + oy) * wo + ox) * c + ch;
+                    match best {
+                        Some((idx, _)) => {
+                            out.words[dst] = src.words[idx];
+                            out.sig[dst] = src.sig[idx];
+                            out.w[dst] = src.w[idx];
+                        }
+                        None => out.words[dst] = nar,
+                    }
+                }
+            }
+        }
+    }
+    out.finish_fill();
+}
+
 /// In-place ReLU.
 pub fn relu(x: &mut Tensor) {
     for v in &mut x.data {
@@ -165,5 +283,81 @@ mod tests {
         let mut t = Tensor::from_vec(&[1, 3], vec![-1.0, 0.0, 2.0]);
         relu(&mut t);
         assert_eq!(t.data, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn planar_im2col_commutes_with_quantization() {
+        use crate::posit::{P16_FMT, P8_FMT};
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(77);
+        let (n, h, w, c) = (2, 4, 4, 3);
+        let data: Vec<f32> =
+            (0..n * h * w * c).map(|_| rng.normal() as f32).collect();
+        let x = Tensor::from_vec(&[n, h, w, c], data.clone());
+        for fmt in [P8_FMT, P16_FMT] {
+            for pad in [Pad::Same, Pad::Valid] {
+                // quantize -> planar gather
+                let src = DecodedPlan::from_f32(&data, n * h * w, c,
+                                                fmt);
+                let mut got = DecodedPlan::empty(fmt);
+                let (ho, wo) =
+                    im2col_plan_into(&src, n, h, w, c, 3, pad,
+                                     &mut got);
+                // f32 gather -> quantize
+                let (pf, ho2, wo2) = im2col(&x, 3, pad);
+                assert_eq!((ho, wo), (ho2, wo2));
+                let want = DecodedPlan::from_f32(&pf.data,
+                                                 n * ho * wo,
+                                                 3 * 3 * c, fmt);
+                assert_eq!(got.words, want.words, "{fmt:?} {pad:?}");
+                assert_eq!(got.sig, want.sig);
+                assert_eq!(got.w, want.w);
+                assert_eq!(got.words8, want.words8);
+            }
+        }
+    }
+
+    #[test]
+    fn planar_maxpool_matches_f32_and_handles_nar() {
+        use crate::posit::{to_f64, P8_FMT};
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(78);
+        let (n, h, w, c) = (1, 4, 4, 2);
+        let data: Vec<f32> =
+            (0..n * h * w * c).map(|_| rng.normal() as f32).collect();
+        let fmt = P8_FMT;
+        let src = DecodedPlan::from_f32(&data, n * h * w, c, fmt);
+        let mut got = DecodedPlan::empty(fmt);
+        maxpool_plan_into(&src, n, h, w, c, 2, &mut got);
+        // Oracle: f32 maxpool of the *quantized* values, requantized
+        // (selection only, so requantization is the identity).
+        let q: Vec<f32> =
+            src.to_f64().iter().map(|&v| v as f32).collect();
+        let want =
+            maxpool(&Tensor::from_vec(&[n, h, w, c], q), 2);
+        let got_f: Vec<f32> =
+            got.to_f64().iter().map(|&v| v as f32).collect();
+        assert_eq!(got_f, want.data);
+
+        // NaR never wins; an all-NaR window emits NaR.
+        let nar = fmt.nar();
+        let mut words = src.words.clone();
+        words[0] = nar; // one NaR in the first window
+        for i in [2, 3, 6, 7] {
+            // entire second window (channel 0 and 1) poisoned:
+            // flat indices of pixels (0,2),(0,3),(1,2),(1,3)
+            words[i * 2] = nar;
+            words[i * 2 + 1] = nar;
+        }
+        let psrc = DecodedPlan::from_words(words, n * h * w, c, fmt);
+        let mut pout = DecodedPlan::empty(fmt);
+        maxpool_plan_into(&psrc, n, h, w, c, 2, &mut pout);
+        // First window: the NaR at pixel 0 channel 0 lost; output is
+        // the max of the remaining finite candidates.
+        assert!(!to_f64(pout.words[0], fmt).is_nan());
+        // Second window (output pixel (0,1)): all candidates NaR.
+        assert_eq!(pout.words[2], nar);
+        assert_eq!(pout.words[3], nar);
+        assert!(pout.has_nar);
     }
 }

@@ -391,7 +391,13 @@ fn stats_json_dump_is_written_and_parseable() {
         .expect("stats dump file must exist after shutdown");
     let j = Json::parse(&body).expect("dump must be valid JSON");
     assert_eq!(j.get("schema").unwrap().as_str(),
-               Some("spade-serve-stats-v1"));
+               Some("spade-serve-stats-v2"));
+    // v2 additions: per-dump rates, the retry-after hint, and the
+    // fused/plan kernel counters (always present for dashboards).
+    assert!(j.get("requests_per_s").unwrap().as_f64().is_some());
+    assert!(j.get("rejects_per_s").unwrap().as_f64().is_some());
+    assert_eq!(j.get("last_retry_after_ms").unwrap().as_usize(),
+               Some(0));
     // The final dump sees the fully-drained coordinator.
     assert_eq!(j.get("requests").unwrap().as_usize(), Some(8));
     let shards = j.get("shards").unwrap().as_arr().unwrap();
@@ -409,6 +415,9 @@ fn stats_json_dump_is_written_and_parseable() {
     // must report, never create, the pool.
     assert!(k.get("pool_workers").unwrap().as_usize().is_some());
     assert!(k.get("pool_jobs").unwrap().as_usize().is_some());
+    // Shards serve fused by default, so the fused-GEMM counter moved.
+    assert!(k.get("fused_gemms").unwrap().as_usize().unwrap() > 0);
+    assert!(k.get("plan_encodes").unwrap().as_usize().unwrap() > 0);
     // No backpressure configured -> no rejects, but the field is
     // always present for dashboards.
     assert_eq!(j.get("rejected").unwrap().as_usize(), Some(0));

@@ -1,0 +1,249 @@
+//! Fused planar pipeline: the exactness contract and the decode-once
+//! counters, end to end.
+//!
+//! The tentpole claim under test: the fused path (GEMM epilogue
+//! applies bias + ReLU + the single rounding and emits planar fields;
+//! interlayer activations never round-trip through words or floats)
+//! is **bit-identical** to the layer-wise escape hatch at every
+//! precision and policy, NaR poison propagates exactly like NaN, and
+//! a warmed-up fused forward performs zero interior plan
+//! encodes/decodes — only the input-edge quantization moves the
+//! kernel counters.
+
+use std::sync::Mutex;
+
+use spade::engine::Mode;
+use spade::kernel::{self, DecodedPlan, Epilogue, KernelConfig};
+use spade::nn::{exec, Backend, Model, Precision, Session, Tensor};
+use spade::posit::{from_f64, PositFormat, P16_FMT, P32_FMT, P8_FMT};
+use spade::util::SplitMix64;
+
+/// Kernel counters are process-wide and cargo runs this binary's
+/// tests concurrently, so every test here serializes on one lock —
+/// the counter-delta assertions must not see another test's GEMMs.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const MODES: [Mode; 3] = [Mode::P8x4, Mode::P16x2, Mode::P32x1];
+
+fn input(n: usize, seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    Tensor::from_vec(&[n, 8, 8, 1],
+                     (0..n * 64).map(|_| rng.f32()).collect())
+}
+
+/// Bitwise f32 equality that treats every NaN as one value (logits
+/// downstream of a NaR are NaN, and NaN != NaN).
+fn assert_same_logits(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.shape, b.shape, "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(x.to_bits() == y.to_bits()
+                    || (x.is_nan() && y.is_nan()),
+                "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn nar_poison_propagates_through_bias_and_activation() {
+    let _g = lock();
+    let m = Model::synthetic("fused-nar");
+    // NaN in example 0's corner pixel -> NaR after the input edge.
+    // The conv window spreads it, every maxpool window that is *all*
+    // NaR keeps it (a NaR candidate never wins a mixed window), and
+    // the dense layers mix it across the whole row: logits row 0 is
+    // all NaN, row 1 stays finite. Fused and layer-wise agree bit for
+    // bit on where the poison lands.
+    let mut x = input(2, 31);
+    x.data[0] = f32::NAN;
+    for mode in MODES {
+        let prec = Precision::Posit(mode);
+        let mut fused = Session::new(&m);
+        let mut lw = Session::new(&m).with_fused(false);
+        let (yf, _) = fused.forward(&x, prec, Backend::Posit).unwrap();
+        let (yl, _) = lw.forward(&x, prec, Backend::Posit).unwrap();
+        assert_same_logits(&yf, &yl, &format!("{mode:?}"));
+        for j in 0..10 {
+            assert!(yf.data[j].is_nan(),
+                    "{mode:?}: poisoned row logit {j} must be NaN");
+            assert!(yf.data[10 + j].is_finite(),
+                    "{mode:?}: clean row logit {j} must be finite");
+        }
+    }
+}
+
+#[test]
+fn relu_epilogue_at_maxpos_minpos_boundaries() {
+    let _g = lock();
+    // A = [maxpos, minpos, -minpos, -maxpos]^T, B = [1.0]: products
+    // are exactly representable, so the single rounding returns the
+    // operand and the fused ReLU must keep the positive extremes
+    // verbatim while zeroing the negative ones — no saturation drift,
+    // no NaR, at either end of the dynamic range.
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        let maxpos = fmt.nar() - 1;
+        let minpos = 1u64;
+        let neg = |w: u64| w.wrapping_neg() & fmt.mask();
+        let a = DecodedPlan::from_words(
+            vec![maxpos, minpos, neg(minpos), neg(maxpos)], 4, 1, fmt);
+        let one = from_f64(1.0, fmt);
+        let b = DecodedPlan::from_words(vec![one], 1, 1, fmt);
+        let cfg = KernelConfig::DEFAULT;
+        let fused = kernel::gemm_fused(&a, &b, None,
+                                       Epilogue { relu: true }, &cfg);
+        assert_eq!(fused.words, vec![maxpos, minpos, 0, 0],
+                   "{}b", fmt.nbits);
+        // The layer-wise chain lands on the same words.
+        let mut words = kernel::gemm_with_config(&a, &b, None, &cfg);
+        kernel::relu_words(&mut words, fmt);
+        assert_eq!(fused.words, words, "{}b", fmt.nbits);
+    }
+}
+
+/// Random word operands (round-tripped through the format so every
+/// word is valid) with one NaR planted in A.
+fn rand_plan(rows: usize, cols: usize, fmt: PositFormat, seed: u64,
+             with_nar: bool) -> DecodedPlan {
+    let mut rng = SplitMix64::new(seed);
+    let mut words: Vec<u64> = (0..rows * cols)
+        .map(|_| from_f64(rng.normal(), fmt))
+        .collect();
+    if with_nar {
+        words[rows * cols / 2] = fmt.nar();
+    }
+    DecodedPlan::from_words(words, rows, cols, fmt)
+}
+
+#[test]
+fn every_fusion_flavor_matches_the_layerwise_oracle() {
+    let _g = lock();
+    // bias-only, activation-only, full fusion, and no epilogue at
+    // all: each flavor must equal the layer-wise chain (word GEMM,
+    // then word ReLU, then a fresh decode) bit for bit — with and
+    // without NaR in the operands.
+    for (fi, fmt) in [P8_FMT, P16_FMT, P32_FMT].into_iter().enumerate()
+    {
+        for with_nar in [false, true] {
+            let a = rand_plan(5, 7, fmt, 100 + fi as u64, with_nar);
+            let b = rand_plan(7, 4, fmt, 200 + fi as u64, false);
+            let bias: Vec<u64> = (0..4)
+                .map(|j| from_f64(0.25 * j as f64 - 0.3, fmt))
+                .collect();
+            let cfg = KernelConfig::DEFAULT;
+            for (bias_on, relu) in
+                [(false, false), (true, false), (false, true),
+                 (true, true)]
+            {
+                let bw = bias_on.then_some(bias.as_slice());
+                let fused = kernel::gemm_fused(
+                    &a, &b, bw, Epilogue { relu }, &cfg);
+                let mut words =
+                    kernel::gemm_with_config(&a, &b, bw, &cfg);
+                if relu {
+                    kernel::relu_words(&mut words, fmt);
+                }
+                let oracle = DecodedPlan::from_words(words, 5, 4, fmt);
+                let ctx = format!(
+                    "{}b bias={bias_on} relu={relu} nar={with_nar}",
+                    fmt.nbits);
+                assert_eq!(fused.words, oracle.words, "{ctx}");
+                assert_eq!(fused.sig, oracle.sig, "{ctx}");
+                assert_eq!(fused.w, oracle.w, "{ctx}");
+                assert_eq!(fused.has_nar, oracle.has_nar, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_buffer_reuse_across_chained_layers_matches_fresh_plans() {
+    let _g = lock();
+    // Model::synthetic has three chained MAC layers; three forwards
+    // through one session recycle the interlayer plan buffers
+    // (ping-pong), and each result must equal a fresh session's.
+    let m = Model::synthetic("fused-reuse");
+    for mode in MODES {
+        let prec = Precision::Posit(mode);
+        let mut sess = Session::new(&m);
+        for trial in 0..3u64 {
+            let x = input(2, 300 + trial);
+            let (y, _) =
+                sess.forward(&x, prec, Backend::Posit).unwrap();
+            let (fresh, _) =
+                exec::forward(&m, &x, prec, Backend::Posit).unwrap();
+            assert_same_logits(&y, &fresh,
+                               &format!("{mode:?} trial {trial}"));
+        }
+    }
+}
+
+#[test]
+fn mixed_policies_are_bit_identical_across_pipelines() {
+    let _g = lock();
+    let m = Model::synthetic("fused-policy");
+    let x = input(2, 77);
+    let policies: [&[Precision]; 3] = [
+        &[Precision::Posit(Mode::P8x4), Precision::Posit(Mode::P16x2),
+          Precision::Posit(Mode::P32x1)],
+        &[Precision::Posit(Mode::P32x1), Precision::Posit(Mode::P8x4),
+          Precision::Posit(Mode::P16x2)],
+        // An f32 island inside a posit policy forces a materialize +
+        // re-quantize transition on both pipelines.
+        &[Precision::Posit(Mode::P16x2), Precision::F32,
+          Precision::Posit(Mode::P8x4)],
+    ];
+    for (pi, policy) in policies.into_iter().enumerate() {
+        let mut fused = Session::new(&m);
+        let mut lw = Session::new(&m).with_fused(false);
+        let (yf, _) =
+            fused.forward_policy(&x, policy, Backend::Posit).unwrap();
+        let (yl, _) =
+            lw.forward_policy(&x, policy, Backend::Posit).unwrap();
+        assert_same_logits(&yf, &yl, &format!("policy {pi}"));
+    }
+}
+
+#[test]
+fn fused_forward_has_zero_interior_encodes_and_decodes() {
+    let _g = lock();
+    // The decode-once acceptance gate: after warm-up, a fused forward
+    // through the 3-MAC-layer synthetic model quantizes exactly the
+    // input-edge patches and nothing else — zero plan decodes, zero
+    // interior encodes, one fused GEMM per MAC layer.
+    let m = Model::synthetic("fused-counters");
+    let n = 2usize;
+    let mut sess = Session::new(&m);
+    let prec = Precision::Posit(Mode::P16x2);
+    sess.forward(&input(n, 900), prec, Backend::Posit).unwrap();
+
+    let before = kernel::counters();
+    sess.forward(&input(n, 901), prec, Backend::Posit).unwrap();
+    let after = kernel::counters();
+
+    // Input edge: conv3x3 Same over [2, 8, 8, 1] -> 128 patch rows of
+    // 9 -> 1152 elements quantized once. Weights and bias are cached.
+    assert_eq!(after.plan_encodes - before.plan_encodes, 1152,
+               "only the input edge may encode");
+    assert_eq!(after.plan_decodes - before.plan_decodes, 0,
+               "a fused forward never re-decodes words");
+    assert_eq!(after.fused_gemms - before.fused_gemms, 3,
+               "one fused GEMM per MAC layer");
+    // conv 128x4 + dense 2x32 + dense 2x10 epilogue elements.
+    assert_eq!(after.fused_elems - before.fused_elems, 512 + 64 + 20);
+
+    // The layer-wise escape hatch re-decodes each MAC output (the
+    // round-trip the fusion removes) — same math, measurably more
+    // plan traffic.
+    let mut lw = Session::new(&m).with_fused(false);
+    lw.forward(&input(n, 900), prec, Backend::Posit).unwrap();
+    let before = kernel::counters();
+    lw.forward(&input(n, 902), prec, Backend::Posit).unwrap();
+    let after = kernel::counters();
+    assert_eq!(after.fused_gemms - before.fused_gemms, 0);
+    assert_eq!(after.plan_decodes - before.plan_decodes,
+               512 + 64 + 20,
+               "layer-wise decodes every MAC output once");
+    assert_eq!(after.plan_encodes - before.plan_encodes, 1152);
+}

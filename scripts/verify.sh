@@ -30,6 +30,23 @@ if [ -n "$env_hits" ]; then
 fi
 echo "ok: SPADE_* env reads confined to rust/src/api/env.rs"
 
+echo "== fused-pipeline gate (no interior encodes in nn::exec) =="
+# PR 6 contract: the fused planar pipeline quantizes exactly once at
+# the input edge (exec.rs::edge_quantize wraps DecodedPlan::from_f32)
+# and materializes floats once at the output edge — no layer body may
+# call the posit encoder directly. Zero `encode(` / `from_f64(`
+# occurrences anywhere in exec.rs enforces that statically; like the
+# env gate, this runs even without a toolchain.
+exec_hits=$(grep -nE '\b(encode|from_f64)\(' rust/src/nn/exec.rs || true)
+if [ -n "$exec_hits" ]; then
+  echo "verify: direct posit encodes in rust/src/nn/exec.rs:" >&2
+  echo "$exec_hits" >&2
+  echo "        layer bodies must stay in the planar domain; only" >&2
+  echo "        edge_quantize/materialize_f32 cross the boundary." >&2
+  exit 1
+fi
+echo "ok: nn::exec has no direct posit encodes (edge-only quantization)"
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "verify: cargo not found on PATH — nothing was built or tested." >&2
   echo "verify: BENCH_hotpath.json stays a placeholder until" >&2
@@ -50,13 +67,15 @@ echo "== cargo bench --bench hotpath (smoke gate) =="
 # SPADE_BENCH_QUICK=0 for the full-size run.
 SPADE_BENCH_QUICK="${SPADE_BENCH_QUICK:-1}" cargo bench --bench hotpath
 
-# The bench must have emitted the inner-loop, dispatch, and
-# self-tuning comparison sections — a silent regression to the old
-# loops (or a lost autotune/k-chunk/hybrid-LUT measurement) would
-# otherwise pass.
+# The bench must have emitted the inner-loop, dispatch, self-tuning,
+# and fused-pipeline comparison sections — a silent regression to the
+# old loops (or a lost autotune/k-chunk/hybrid-LUT/fusion
+# measurement) would otherwise pass.
 for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
            steal_vs_fixed_split autotuned_vs_default \
-           kchunk_vs_full_k p16_hybrid_lut_vs_exact; do
+           kchunk_vs_full_k p16_hybrid_lut_vs_exact \
+           fused_vs_layerwise_p8 fused_vs_layerwise_p16 \
+           fused_vs_layerwise_p32 fused_vs_layerwise_decodes_avoided; do
   if ! grep -q "\"$key\"" BENCH_hotpath.json; then
     echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
     echo "        (did benches/hotpath.rs lose a comparison?)" >&2
