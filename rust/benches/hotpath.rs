@@ -7,8 +7,9 @@
 //! kernel thread scaling, work-stealing-vs-fixed-split dispatch,
 //! worker-pool-vs-scope spawn amortization, sharded serving
 //! throughput, the fused planar pipeline vs the layer-wise session
-//! (per-precision speedup + plan decode/encode ops avoided), PJRT
-//! dispatch. Each prints ops/s so before/after deltas
+//! (per-precision speedup + plan decode/encode ops avoided), the
+//! sparse CSR SpGEMM vs the dense kernel at three densities (bit
+//! identity asserted on the bench operands), PJRT dispatch. Each prints ops/s so before/after deltas
 //! are one diff away, and every metric is also written to
 //! `BENCH_hotpath.json` (op name -> M/s, `*_us` entries are
 //! microseconds, `*_req_s` are requests/s, `*_vs_*` are dimensionless
@@ -630,6 +631,66 @@ fn main() {
         }
         log.record("fused_vs_layerwise_decodes_avoided",
                    total_avoided as f64);
+    }
+
+    common::banner(
+        "sparse CSR SpGEMM vs dense planar kernel (bit-identical \
+         by contract; speedup = dense time / sparse time)");
+    {
+        use spade::kernel::{KernelConfig, SparsePlan};
+        let (sm, sk, sn) = if quick {
+            (64usize, 96usize, 48usize)
+        } else {
+            (192usize, 256usize, 96usize)
+        };
+        let dense_macs = (sm * sk * sn) as f64;
+        let bv: Vec<f64> =
+            (0..sk * sn).map(|_| rng.normal()).collect();
+        for (tag, fmt) in [("p8", P8_FMT), ("p16", P16_FMT),
+                           ("p32", P32_FMT)] {
+            let pb = DecodedPlan::from_f64(&bv, sk, sn, fmt);
+            for pct in [1u64, 10, 50] {
+                let mut srng = SplitMix64::new(4200 + pct);
+                let words: Vec<u64> = (0..sm * sk)
+                    .map(|_| {
+                        if srng.below(100) < pct {
+                            from_f64(srng.wide(-4, 4), fmt)
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                let pa =
+                    DecodedPlan::from_words(words, sm, sk, fmt);
+                let sa = SparsePlan::from_dense(&pa);
+                let cfg = KernelConfig::DEFAULT;
+                // The gate this section feeds is meaningless if the
+                // two paths ever disagree — so check the contract on
+                // the bench operands too, before timing.
+                assert_eq!(
+                    kernel::spgemm_with_config(&sa, &pb, None, &cfg),
+                    kernel::gemm_with_config(&pa, &pb, None, &cfg),
+                    "sparse/dense bit-identity broke ({tag} d{pct})");
+                let t_dense = common::time_median(r3, || {
+                    let _ = kernel::gemm_with_config(&pa, &pb, None,
+                                                     &cfg);
+                });
+                let t_sparse = common::time_median(r3, || {
+                    let _ = kernel::spgemm_with_config(&sa, &pb,
+                                                       None, &cfg);
+                });
+                println!("{tag} {sm}x{sk}x{sn} d={pct:>2}% (nnz \
+                          {:>6}): dense {:>8.1} M MAC/s  sparse \
+                          {:>8.1} M useful MAC/s  ({:.2}x)",
+                         sa.nnz(), dense_macs / t_dense / 1e6,
+                         (sa.nnz() * sn) as f64 / t_sparse / 1e6,
+                         t_dense / t_sparse);
+                log.record(&format!("spgemm_{tag}_d{pct}"),
+                           (sa.nnz() * sn) as f64 / t_sparse / 1e6);
+                log.record(&format!("sparse_vs_dense_{tag}_d{pct}"),
+                           t_dense / t_sparse);
+            }
+        }
     }
 
     common::banner("PJRT artifact dispatch (mlp_p16_b32)");

@@ -76,6 +76,15 @@ pub struct EngineConfig {
     /// layer-wise escape hatch (`SPADE_FUSED=0`) — bit-identical
     /// results, per-layer re-decode, for cross-checking the fusion.
     pub fused: bool,
+    /// Weight-density cutoff in `[0, 1]` for the sparse CSR path:
+    /// a layer whose quantized weight words are less than this
+    /// fraction nonzero routes through
+    /// [`crate::kernel::spgemm_bt`] instead of the dense kernel.
+    /// Bit-identical results either way — the knob only moves the
+    /// performance crossover. `0.0` disables sparse routing, `1.0`
+    /// takes it whenever any zero exists. Default 0.25
+    /// (`SPADE_SPARSE_THRESHOLD` at the env edge).
+    pub sparse_threshold: f64,
     /// Planar serving shards (0 = auto).
     pub shards: usize,
     /// Batch → shard placement policy.
@@ -109,6 +118,7 @@ impl Default for EngineConfig {
             path: InnerPath::Auto,
             autotune: AutotuneMode::Off,
             fused: true,
+            sparse_threshold: 0.25,
             shards: 0,
             affinity: ShardAffinity::LeastLoaded,
             max_queue: 0,
@@ -157,6 +167,9 @@ impl EngineConfig {
         if let Some(fused) = env::fused()? {
             cfg.fused = fused;
         }
+        if let Some(t) = env::sparse_threshold()? {
+            cfg.sparse_threshold = t;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -182,6 +195,10 @@ impl EngineConfig {
                      does not have (use Auto, which falls back \
                      portably)");
         }
+        ensure!(self.sparse_threshold.is_finite()
+                && (0.0..=1.0).contains(&self.sparse_threshold),
+                "sparse_threshold={} must be in [0, 1]",
+                self.sparse_threshold);
         ensure!(self.shards <= MAX_SHARDS,
                 "shards={} exceeds the {MAX_SHARDS} sanity cap",
                 self.shards);
@@ -243,6 +260,7 @@ impl EngineConfig {
             max_queue: self.max_queue,
             kernel: Some(self.kernel_config()),
             fused: self.fused,
+            sparse_threshold: self.sparse_threshold,
             metrics: self.metrics.clone(),
         }
     }
@@ -291,6 +309,8 @@ impl EngineConfig {
         m.insert("path".into(), s(path_str(self.path)));
         m.insert("autotune".into(), s(autotune_str(self.autotune)));
         m.insert("fused".into(), Json::Bool(self.fused));
+        m.insert("sparse_threshold".into(),
+                 Json::Num(self.sparse_threshold));
         m.insert("shards".into(), num(self.shards));
         m.insert("affinity".into(), s(affinity_str(self.affinity)));
         m.insert("max_queue".into(), num(self.max_queue));
@@ -410,6 +430,12 @@ impl EngineConfig {
                 "fused" => {
                     cfg.fused = v.as_bool().ok_or_else(|| anyhow!(
                         "engine config fused must be a boolean"))?;
+                }
+                "sparse_threshold" => {
+                    cfg.sparse_threshold =
+                        v.as_f64().ok_or_else(|| anyhow!(
+                            "engine config sparse_threshold must be \
+                             a number"))?;
                 }
                 "shards" => cfg.shards = as_count(key, v)?,
                 "affinity" => {
@@ -580,6 +606,15 @@ mod tests {
         let mut c = EngineConfig::default();
         c.model.clear();
         assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.sparse_threshold = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.sparse_threshold = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.sparse_threshold = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -623,11 +658,13 @@ mod tests {
         c.max_queue = 64;
         c.batch = 7;
         c.affinity = ShardAffinity::PinnedMode;
+        c.sparse_threshold = 0.5;
         let kc = c.kernel_config();
         assert_eq!(kc.threads, Some(3));
         assert_eq!(kc.tile.unwrap().steal_rows, 2);
         assert_eq!(kc.autotune, AutotuneMode::Warmup);
         let cc = c.coordinator_config();
+        assert_eq!(cc.sparse_threshold, 0.5);
         assert_eq!(cc.shards, 2);
         assert_eq!(cc.max_queue, 64);
         assert_eq!(cc.batcher.target, 7);
@@ -648,6 +685,7 @@ mod tests {
         c.path = InnerPath::Portable;
         c.autotune = AutotuneMode::Warmup;
         c.fused = false;
+        c.sparse_threshold = 0.05;
         c.shards = 3;
         c.affinity = ShardAffinity::PinnedMode;
         c.max_queue = 128;
@@ -668,6 +706,7 @@ mod tests {
         assert_eq!(back.path, c.path);
         assert_eq!(back.autotune, c.autotune);
         assert_eq!(back.fused, c.fused);
+        assert_eq!(back.sparse_threshold, c.sparse_threshold);
         assert_eq!(back.shards, c.shards);
         assert_eq!(back.affinity, c.affinity);
         assert_eq!(back.max_queue, c.max_queue);
@@ -682,6 +721,7 @@ mod tests {
         assert_eq!(back.metrics.stats_json, None);
         assert_eq!(back.autotune, AutotuneMode::Off);
         assert!(back.fused, "fused defaults to on");
+        assert_eq!(back.sparse_threshold, 0.25);
     }
 
     #[test]
@@ -699,8 +739,13 @@ mod tests {
         assert!(EngineConfig::from_json("[1, 2]").is_err());
         assert!(EngineConfig::from_json(
             "{\"schema\": \"other-v9\"}").is_err());
-        // Invalid *values* are caught by validate (batch 0).
+        // Invalid *values* are caught by validate (batch 0,
+        // out-of-range sparse threshold).
         assert!(EngineConfig::from_json("{\"batch\": 0}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"sparse_threshold\": 2.0}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"sparse_threshold\": \"low\"}").is_err());
         // A minimal file overrides only what it names.
         let c = EngineConfig::from_json(
             "{\"shards\": 2, \"autotune\": \"first-use\", \

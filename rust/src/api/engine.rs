@@ -134,6 +134,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Weight-density cutoff for the sparse CSR routing (see
+    /// [`EngineConfig::sparse_threshold`]; default 0.25). Applied to
+    /// every session and shard this engine hands out — the
+    /// programmatic form of `SPADE_SPARSE_THRESHOLD`. Bit-identical
+    /// results at any value; validated to `[0, 1]` at build.
+    pub fn sparse_threshold(mut self, threshold: f64) -> Self {
+        self.cfg.sparse_threshold = threshold;
+        self
+    }
+
     /// Per-shard pending-request bound (0 = unbounded). When the
     /// whole fleet is full, `submit` returns a typed [`Overloaded`]
     /// error instead of queueing without bound.
@@ -321,6 +331,7 @@ impl Engine {
         Session::new(model)
             .with_kernel_config(self.kcfg)
             .with_fused(self.cfg.fused)
+            .with_sparse_threshold(self.cfg.sparse_threshold)
     }
 
     /// A session owning its model (for worker threads), pinned to
@@ -329,6 +340,7 @@ impl Engine {
         Session::owned(model)
             .with_kernel_config(self.kcfg)
             .with_fused(self.cfg.fused)
+            .with_sparse_threshold(self.cfg.sparse_threshold)
     }
 
     /// The coordinator configuration this engine serves with
@@ -614,10 +626,12 @@ fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
         "  \"kernel\": {{\"gemms\": {}, \"chunks\": {}, \
          \"stolen_chunks\": {}, \"autotune_probes\": {}, \
          \"fused_gemms\": {}, \"fused_elems\": {}, \
+         \"sparse_gemms\": {}, \
          \"plan_decodes\": {}, \"plan_encodes\": {}, \
          \"pool_workers\": {}, \"pool_jobs\": {}}}\n",
         k.gemms, k.chunks, k.stolen_chunks, k.autotune_probes,
-        k.fused_gemms, k.fused_elems, k.plan_decodes, k.plan_encodes,
+        k.fused_gemms, k.fused_elems, k.sparse_gemms,
+        k.plan_decodes, k.plan_encodes,
         pool_workers, pool_jobs));
     s.push_str("}\n");
     s
@@ -669,6 +683,7 @@ mod tests {
         // v2: fused-epilogue and plan encode/decode counters.
         assert!(kernel.get("fused_gemms").is_some());
         assert!(kernel.get("fused_elems").is_some());
+        assert!(kernel.get("sparse_gemms").is_some());
         assert!(kernel.get("plan_decodes").is_some());
         assert!(kernel.get("plan_encodes").is_some());
         // Backpressure rejects ride along for dashboards.

@@ -15,6 +15,7 @@
 //! | `SPADE_KERNEL_GATHER` | [`kernel_gather_disabled`] | `0`/`off` pins the portable P8 loop |
 //! | `SPADE_KERNEL_AUTOTUNE` | [`kernel_autotune`] | `off` / `first-use` / `warmup` first-use autotuner mode |
 //! | `SPADE_FUSED` | [`fused`] | `0`/`off` selects the layer-wise escape hatch (fused planar pipeline is the default) |
+//! | `SPADE_SPARSE_THRESHOLD` | [`sparse_threshold`] | weight-density cutoff in `[0, 1]` below which a layer routes through the CSR SpGEMM (bit-identical; perf crossover only) |
 //! | `SPADE_ARTIFACTS` | [`artifacts_override`] | artifact directory override |
 //! | `SPADE_BENCH_QUICK` | [`bench_quick`] | hotpath bench smoke mode |
 //! | `SPADE_FIG4_LIMIT` | [`fig4_limit`] | Fig. 4 bench image cap |
@@ -83,6 +84,28 @@ pub fn fused() -> Result<Option<bool>> {
         Some("1") | Some("on") | Some("true") => Ok(Some(true)),
         Some(s) => Err(anyhow::anyhow!(
             "SPADE_FUSED={s:?}: expected 0/off/false or 1/on/true")),
+    }
+}
+
+/// `SPADE_SPARSE_THRESHOLD`: the sparse-routing density cutoff — a
+/// layer whose quantized weight words are less than this fraction
+/// nonzero runs on the CSR SpGEMM instead of the dense kernel
+/// (bit-identical results; the knob only moves the performance
+/// crossover). Must parse as a finite number in `[0, 1]`; `0`
+/// disables the sparse path, `1` takes it whenever any zero exists.
+/// `None` when unset (the config default, 0.25, stands).
+pub fn sparse_threshold() -> Result<Option<f64>> {
+    match raw("SPADE_SPARSE_THRESHOLD") {
+        None => Ok(None),
+        Some(s) => s
+            .trim()
+            .parse::<f64>()
+            .ok()
+            .filter(|v| v.is_finite() && (0.0..=1.0).contains(v))
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!(
+                "SPADE_SPARSE_THRESHOLD={s:?}: expected a number \
+                 in [0, 1]")),
     }
 }
 

@@ -127,6 +127,10 @@ pub struct CoordinatorConfig {
     /// [`crate::nn::exec::Session::set_fused`]). Ignored by the PJRT
     /// engine.
     pub fused: bool,
+    /// Weight-density cutoff for the shard sessions' sparse CSR
+    /// routing (see [`crate::nn::exec::Session::set_sparse_threshold`];
+    /// bit-identical results, perf crossover only). Default 0.25.
+    pub sparse_threshold: f64,
     /// Metrics options (latency reservoir capacity; the stats-dump
     /// fields are consumed by `api::Engine::serve*`, not here).
     pub metrics: MetricsConfig,
@@ -143,6 +147,7 @@ impl Default for CoordinatorConfig {
             max_queue: 0,
             kernel: None,
             fused: true,
+            sparse_threshold: 0.25,
             metrics: MetricsConfig::default(),
         }
     }
@@ -295,6 +300,7 @@ impl Coordinator {
         let affinity = cfg.affinity;
         let kernel_cfg = cfg.kernel;
         let fused = cfg.fused;
+        let sparse_threshold = cfg.sparse_threshold;
         let pending = Arc::new(AtomicUsize::new(0));
 
         let nshards = effective_shards(cfg.shards);
@@ -315,6 +321,7 @@ impl Coordinator {
                             sess.set_kernel_config(kc);
                         }
                         sess.set_fused(fused);
+                        sess.set_sparse_threshold(sparse_threshold);
                         shard_loop(srx, sess, sid, inflight_w,
                                    pending_w, metrics);
                     })

@@ -1,11 +1,15 @@
 //! Dataset access: the SPDD binary container written at build time by
 //! `python/compile/datasets.py` (synthetic MNIST/CIFAR/alphabet
-//! stand-ins — DESIGN.md §1), plus a synthetic request-traffic generator
-//! for the serving coordinator.
+//! stand-ins — DESIGN.md §1), a synthetic request-traffic generator
+//! for the serving coordinator, and the Matrix Market (`.mtx`)
+//! coordinate reader/writer + synthetic-sparsity generator feeding
+//! the sparse SpGEMM path ([`mtx`]).
 
 pub mod idx;
+pub mod mtx;
 pub mod spdd;
 pub mod traffic;
 
+pub use mtx::{synthetic_sparse, MtxMatrix};
 pub use spdd::Dataset;
 pub use traffic::TrafficGen;

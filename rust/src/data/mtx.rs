@@ -1,0 +1,293 @@
+//! Matrix Market (`.mtx`) coordinate reader/writer + a synthetic
+//! sparsity generator — the ingest edge of the sparse SpGEMM path.
+//!
+//! Only the plain `matrix coordinate real general` flavor is
+//! supported (1-based COO triplets); anything else — `complex`,
+//! `pattern`, `symmetric`, `array` — is an explicit error rather
+//! than a silent misread. Parsed matrices convert losslessly to a
+//! dense row-major buffer ([`MtxMatrix::to_dense_f32`]) or straight
+//! to a CSR kernel operand ([`MtxMatrix::to_plan`] →
+//! [`crate::kernel::SparsePlan::from_csr`], which re-validates the
+//! structure: ascending, de-duplicated, in-range).
+//!
+//! Writing uses Rust's shortest-round-trip float formatting, so
+//! `parse(write(m)) == m` exactly (`mtx_round_trips` pins this).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::kernel::SparsePlan;
+use crate::posit::{from_f64, PositFormat};
+use crate::util::SplitMix64;
+
+/// The one header this reader accepts.
+const BANNER: &str = "%%MatrixMarket matrix coordinate real general";
+
+/// A coordinate-format sparse matrix: 0-based `(row, col, value)`
+/// triplets in file order plus the declared shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MtxMatrix {
+    /// Declared row count.
+    pub rows: usize,
+    /// Declared column count.
+    pub cols: usize,
+    /// 0-based entries, exactly as many as the size line declared.
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl MtxMatrix {
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Stored fraction: `nnz / (rows * cols)` (0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Densify to a row-major f32 buffer (the dense-oracle operand).
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for &(r, c, v) in &self.entries {
+            out[r * self.cols + c] = v as f32;
+        }
+        out
+    }
+
+    /// Quantize the stored values to `fmt` and build a validated CSR
+    /// [`SparsePlan`] (entries are sorted here; `from_csr` still
+    /// rejects duplicates and out-of-range indices).
+    pub fn to_plan(&self, fmt: PositFormat) -> Result<SparsePlan> {
+        let mut sorted = self.entries.clone();
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut col_idx = Vec::with_capacity(sorted.len());
+        let mut words = Vec::with_capacity(sorted.len());
+        for &(r, c, v) in &sorted {
+            ensure!(r < self.rows && c < self.cols,
+                    "entry ({r}, {c}) outside {}x{}", self.rows,
+                    self.cols);
+            row_ptr[r + 1] += 1;
+            col_idx.push(c);
+            words.push(from_f64(v, fmt));
+        }
+        for r in 0..self.rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        SparsePlan::from_csr(self.rows, self.cols, row_ptr, col_idx,
+                             words, fmt)
+            .map_err(|e| anyhow::anyhow!("mtx -> CSR: {e}"))
+    }
+
+    /// Parse Matrix Market coordinate text. Errors on a wrong or
+    /// unsupported banner, a malformed size line, non-numeric or
+    /// short triplet lines, 1-based indices outside the declared
+    /// shape, and truncated or over-long files (entry count must
+    /// match the size line exactly).
+    pub fn parse(src: &str) -> Result<MtxMatrix> {
+        let mut lines = src.lines();
+        let banner = lines.next().context("empty .mtx input")?;
+        let got: Vec<&str> =
+            banner.split_whitespace().collect();
+        let want: Vec<&str> = BANNER.split_whitespace().collect();
+        ensure!(!got.is_empty() && got[0] == want[0],
+                "bad .mtx banner {banner:?}");
+        ensure!(got == want,
+                "unsupported .mtx flavor {banner:?} \
+                 (only {BANNER:?})");
+        // Comment lines (%...) and blank lines may precede the size
+        // line; after it, exactly nnz triplet lines must follow.
+        let mut body = lines
+            .filter(|l| !l.trim().is_empty()
+                        && !l.trim_start().starts_with('%'));
+        let size = body.next().context("missing .mtx size line")?;
+        let dims: Vec<&str> = size.split_whitespace().collect();
+        ensure!(dims.len() == 3, "bad .mtx size line {size:?}");
+        let rows: usize = dims[0].parse()
+            .with_context(|| format!("bad row count {:?}", dims[0]))?;
+        let cols: usize = dims[1].parse()
+            .with_context(|| format!("bad col count {:?}", dims[1]))?;
+        let nnz: usize = dims[2].parse()
+            .with_context(|| format!("bad nnz count {:?}", dims[2]))?;
+        let mut entries = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let line = body.next().with_context(|| {
+                format!("truncated .mtx: {} of {nnz} entries",
+                        entries.len())
+            })?;
+            let f: Vec<&str> = line.split_whitespace().collect();
+            ensure!(f.len() == 3, "bad .mtx entry line {line:?}");
+            let r: usize = f[0].parse()
+                .with_context(|| format!("bad row index {:?}", f[0]))?;
+            let c: usize = f[1].parse()
+                .with_context(|| format!("bad col index {:?}", f[1]))?;
+            let v: f64 = f[2].parse()
+                .with_context(|| format!("bad value {:?}", f[2]))?;
+            ensure!(r >= 1 && r <= rows && c >= 1 && c <= cols,
+                    "entry ({r}, {c}) outside 1..={rows} x 1..={cols}");
+            entries.push((r - 1, c - 1, v));
+        }
+        if let Some(extra) = body.next() {
+            bail!("trailing .mtx data after {nnz} entries: {extra:?}");
+        }
+        Ok(MtxMatrix { rows, cols, entries })
+    }
+
+    /// Render back to Matrix Market text (1-based, shortest
+    /// round-trip floats) — the inverse of [`MtxMatrix::parse`].
+    pub fn write(&self) -> String {
+        let mut out = String::new();
+        out.push_str(BANNER);
+        out.push('\n');
+        out.push_str(&format!("{} {} {}\n", self.rows, self.cols,
+                              self.nnz()));
+        for &(r, c, v) in &self.entries {
+            out.push_str(&format!("{} {} {v}\n", r + 1, c + 1));
+        }
+        out
+    }
+
+    /// Read + parse a `.mtx` file.
+    pub fn load(path: &Path) -> Result<MtxMatrix> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        MtxMatrix::parse(&src)
+            .with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+/// Deterministic synthetic sparsity: each cell is stored with
+/// probability `density` (independent Bernoulli, SplitMix64-seeded),
+/// values drawn from the same wide exponent range the kernel property
+/// tests use. Stored values are never 0.0, so the realized density of
+/// the quantized matrix matches the structural one at every posit
+/// width.
+pub fn synthetic_sparse(rows: usize, cols: usize, density: f64,
+                        seed: u64) -> MtxMatrix {
+    let mut rng = SplitMix64::new(seed);
+    let per_mille = (density * 1000.0).clamp(0.0, 1000.0) as u64;
+    let mut entries = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.below(1000) < per_mille {
+                let mut v = rng.wide(-4, 4);
+                if v == 0.0 {
+                    v = 1.0;
+                }
+                entries.push((r, c, v));
+            }
+        }
+    }
+    MtxMatrix { rows, cols, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::P16_FMT;
+
+    #[test]
+    fn mtx_round_trips() {
+        let m = synthetic_sparse(13, 9, 0.2, 42);
+        let back = MtxMatrix::parse(&m.write()).unwrap();
+        assert_eq!(back, m);
+        assert!(m.nnz() > 0);
+        assert!((m.density() - 0.2).abs() < 0.15);
+    }
+
+    #[test]
+    fn empty_and_full_density() {
+        let none = synthetic_sparse(6, 6, 0.0, 1);
+        assert_eq!(none.nnz(), 0);
+        assert_eq!(none.density(), 0.0);
+        let all = synthetic_sparse(6, 6, 1.0, 1);
+        assert_eq!(all.nnz(), 36);
+        let back = MtxMatrix::parse(&none.write()).unwrap();
+        assert_eq!(back.entries, vec![]);
+    }
+
+    #[test]
+    fn dense_and_plan_agree() {
+        let m = synthetic_sparse(7, 5, 0.4, 7);
+        let p = m.to_plan(P16_FMT).unwrap();
+        assert_eq!(p.rows, 7);
+        assert_eq!(p.cols, 5);
+        assert_eq!(p.nnz(), m.nnz());
+        // Densifying the plan lands every quantized value at its
+        // coordinate; `to_plan` quantizes f64 -> posit directly, so
+        // the oracle here is `from_f64`, not an f32 staging buffer
+        // (f32 would double-round).
+        let mut want = vec![0u64; 7 * 5];
+        for &(r, c, v) in &m.entries {
+            want[r * 5 + c] = from_f64(v, P16_FMT);
+        }
+        assert_eq!(p.densify().words, want);
+        // The f32 staging buffer still carries the exact sparsity
+        // pattern (posit encoding never flushes a nonzero to zero).
+        let d = m.to_dense_f32();
+        for i in 0..want.len() {
+            assert_eq!(d[i] != 0.0, want[i] != 0, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        // Wrong banner entirely.
+        assert!(MtxMatrix::parse("hello\n1 1 0\n").is_err());
+        // Right magic, unsupported flavor.
+        let sym = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   2 2 1\n1 1 3.0\n";
+        let err = MtxMatrix::parse(sym).unwrap_err().to_string();
+        assert!(err.contains("unsupported"), "{err}");
+        // Missing size line.
+        assert!(MtxMatrix::parse(BANNER).is_err());
+        // Malformed size line.
+        let bad = format!("{BANNER}\n2 2\n");
+        assert!(MtxMatrix::parse(&bad).is_err());
+        // Truncated: promises 2 entries, delivers 1.
+        let trunc = format!("{BANNER}\n2 2 2\n1 1 3.0\n");
+        let err =
+            MtxMatrix::parse(&trunc).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // Trailing extra entry.
+        let extra =
+            format!("{BANNER}\n2 2 1\n1 1 3.0\n2 2 4.0\n");
+        assert!(MtxMatrix::parse(&extra).is_err());
+        // Out-of-range 1-based index (0 and too-large).
+        let zero = format!("{BANNER}\n2 2 1\n0 1 3.0\n");
+        assert!(MtxMatrix::parse(&zero).is_err());
+        let big = format!("{BANNER}\n2 2 1\n1 3 3.0\n");
+        assert!(MtxMatrix::parse(&big).is_err());
+        // Non-numeric value.
+        let nan = format!("{BANNER}\n2 2 1\n1 1 pizza\n");
+        assert!(MtxMatrix::parse(&nan).is_err());
+    }
+
+    #[test]
+    fn to_plan_rejects_duplicates() {
+        let m = MtxMatrix {
+            rows: 2,
+            cols: 2,
+            entries: vec![(0, 0, 1.0), (0, 0, 2.0)],
+        };
+        let err = m.to_plan(P16_FMT).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skip() {
+        let src = format!(
+            "{BANNER}\n% a comment\n\n3 3 2\n% another\n\
+             1 2 1.5\n3 3 -2.25\n");
+        let m = MtxMatrix::parse(&src).unwrap();
+        assert_eq!(m.entries,
+                   vec![(0, 1, 1.5), (2, 2, -2.25)]);
+    }
+}

@@ -54,6 +54,7 @@ use crate::util::SplitMix64;
 use super::gemm;
 use super::plan::DecodedPlan;
 use super::settings::{self, KernelConfig};
+use super::sparse;
 use super::simd::{gather_available, InnerPath, TileConfig};
 
 /// When the autotuner is allowed to probe. See the module docs.
@@ -83,6 +84,12 @@ pub enum ShapeClass {
     /// Reduction much deeper than the output is wide: A/B streaming
     /// and k-chunking dominate.
     DeepK,
+    /// Sparse (CSR) dispatch ([`super::sparse`]), keyed by a coarse
+    /// density bucket (the stored-nonzero percentage, rounded to the
+    /// bucket's nominal value by [`classify_sparse`]). Sparse runs
+    /// are row-scheduled with per-row adaptive bodies, so the grid
+    /// sweeps the steal granularity rather than panel widths.
+    Sparse(u8),
 }
 
 /// Output-dimension bound for [`ShapeClass::Skinny`].
@@ -101,6 +108,30 @@ pub fn classify(m: usize, k: usize, n: usize) -> ShapeClass {
         ShapeClass::Skinny
     } else {
         ShapeClass::Square
+    }
+}
+
+/// Classify a sparse dispatch by the **sparse operand's** shape and
+/// stored-nonzero count into a coarse density bucket (nominal stored
+/// percentage 1 / 10 / 50) — the [`ShapeClass::Sparse`] tuning key.
+/// Three buckets keep the tuned table small while separating the
+/// regimes where steal granularity behaves differently: near-empty
+/// rows (hyper-sparse), pruned-model densities, and barely-sparse
+/// matrices.
+pub fn classify_sparse(rows: usize, cols: usize, nnz: usize)
+                       -> ShapeClass {
+    let total = rows.saturating_mul(cols);
+    let pct = if total == 0 {
+        0
+    } else {
+        nnz.saturating_mul(100) / total
+    };
+    if pct < 2 {
+        ShapeClass::Sparse(1)
+    } else if pct < 25 {
+        ShapeClass::Sparse(10)
+    } else {
+        ShapeClass::Sparse(50)
     }
 }
 
@@ -166,6 +197,21 @@ pub fn probes() -> u64 {
 pub fn candidates(fmt: PositFormat, class: ShapeClass)
                   -> Vec<Candidate> {
     let d = TileConfig::DEFAULT;
+    if matches!(class, ShapeClass::Sparse(_)) {
+        // Sparse dispatch is nnz-sorted row scheduling with per-row
+        // adaptive bodies: panel widths and inner-path pins barely
+        // matter (each row picks its own body), so the grid sweeps
+        // only the steal granularity — fine chunks for straggler-
+        // heavy skewed rows, coarser ones when claims dominate.
+        return vec![
+            Candidate { tile: d, path: InnerPath::Auto,
+                        margin_pct: 0 },
+            Candidate::new(TileConfig { steal_rows: 1, ..d },
+                           InnerPath::Auto),
+            Candidate::new(TileConfig { steal_rows: 4, ..d },
+                           InnerPath::Auto),
+        ];
+    }
     // Candidate 0: the untouched default (Auto path), margin 0 — the
     // incumbent every challenger must beat by NOISE_MARGIN_PCT.
     let mut v = vec![Candidate { tile: d, path: InnerPath::Auto,
@@ -229,6 +275,8 @@ pub fn candidates(fmt: PositFormat, class: ShapeClass)
                 TileConfig { steal_rows: 1, ..d }, InnerPath::Auto));
         }
         ShapeClass::Square => {}
+        // Handled by the early return above.
+        ShapeClass::Sparse(_) => unreachable!(),
     }
     v
 }
@@ -268,6 +316,9 @@ fn probe_shape(class: ShapeClass) -> (usize, usize, usize) {
         // probes stay deterministic and pool-free.
         ShapeClass::Square => (12, 32, 128),
         ShapeClass::DeepK => (4, 1536, 8),
+        // Also under the single-thread bound; enough rows that the
+        // nnz-sorted schedule has a length distribution to sort.
+        ShapeClass::Sparse(_) => (16, 64, 32),
     }
 }
 
@@ -289,8 +340,29 @@ pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
     let mk_words = |rng: &mut SplitMix64, len: usize| -> Vec<u64> {
         (0..len).map(|_| from_f64(rng.wide(-4, 4), fmt)).collect()
     };
-    let pa =
-        DecodedPlan::from_words(mk_words(&mut rng, m * k), m, k, fmt);
+    // Sparse classes probe the sparse front end on a
+    // density-matched CSR operand; dense classes probe the dense one.
+    // Either way every candidate is pinned (`tile: Some`,
+    // `autotune: Off`), so dispatch resolution inside the timed call
+    // short-circuits — a probe can never recurse into a probe.
+    let (pa, sa) = if let ShapeClass::Sparse(d) = class {
+        let words: Vec<u64> = (0..m * k)
+            .map(|_| {
+                if rng.below(100) < d as u64 {
+                    from_f64(rng.wide(-4, 4), fmt)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let pa = DecodedPlan::from_words(words, m, k, fmt);
+        let sa = sparse::SparsePlan::from_dense(&pa);
+        (pa, Some(sa))
+    } else {
+        (DecodedPlan::from_words(mk_words(&mut rng, m * k), m, k,
+                                 fmt),
+         None)
+    };
     let pb =
         DecodedPlan::from_words(mk_words(&mut rng, k * n), k, n, fmt);
 
@@ -308,8 +380,17 @@ pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
             let mut best = u64::MAX;
             for _ in 0..PROBE_REPS {
                 let t0 = Instant::now();
-                std::hint::black_box(gemm::gemm_with_config(
-                    &pa, &pb, None, &pinned));
+                match &sa {
+                    Some(sa) => {
+                        std::hint::black_box(
+                            sparse::spgemm_with_config(sa, &pb, None,
+                                                       &pinned));
+                    }
+                    None => {
+                        std::hint::black_box(gemm::gemm_with_config(
+                            &pa, &pb, None, &pinned));
+                    }
+                }
                 best = best.min(t0.elapsed().as_nanos() as u64);
             }
             best
@@ -325,13 +406,29 @@ pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
 /// An explicit non-`Auto` path pin always overrides the tuned path.
 pub(super) fn resolve(cfg: &KernelConfig, fmt: PositFormat, m: usize,
                       k: usize, n: usize) -> (TileConfig, InnerPath) {
+    resolve_class(cfg, fmt, classify(m, k, n))
+}
+
+/// [`resolve`] for a sparse dispatch: same precedence chain, keyed by
+/// the sparse operand's density bucket
+/// ([`classify_sparse`]`(rows, cols, nnz)` of the CSR side) instead
+/// of the dense shape regime.
+pub(super) fn resolve_sparse(cfg: &KernelConfig, fmt: PositFormat,
+                             rows: usize, cols: usize, nnz: usize)
+                             -> (TileConfig, InnerPath) {
+    resolve_class(cfg, fmt, classify_sparse(rows, cols, nnz))
+}
+
+/// The precedence chain shared by [`resolve`] and [`resolve_sparse`]
+/// once the tuning class is known.
+fn resolve_class(cfg: &KernelConfig, fmt: PositFormat,
+                 class: ShapeClass) -> (TileConfig, InnerPath) {
     if let Some(tile) = cfg.tile {
         return (tile, cfg.path);
     }
     if cfg.autotune == AutotuneMode::Off {
         return (TileConfig::DEFAULT, cfg.path);
     }
-    let class = classify(m, k, n);
     let key = (fmt.nbits, class);
     let tuned = match settings::tuned_lookup(key) {
         Some(t) => t,
@@ -460,6 +557,38 @@ mod tests {
                              (P32_FMT, ShapeClass::DeepK)] {
             let v = candidates(fmt, class);
             assert_eq!(v[0].margin_pct, 0);
+            assert!(v[1..].iter().all(|c| c.margin_pct >= 3));
+        }
+    }
+
+    #[test]
+    fn sparse_classes_bucket_density() {
+        use ShapeClass::Sparse;
+        assert_eq!(classify_sparse(10, 10, 0), Sparse(1));
+        assert_eq!(classify_sparse(10, 10, 1), Sparse(1));
+        assert_eq!(classify_sparse(10, 10, 2), Sparse(10));
+        assert_eq!(classify_sparse(10, 10, 10), Sparse(10));
+        assert_eq!(classify_sparse(10, 10, 24), Sparse(10));
+        assert_eq!(classify_sparse(10, 10, 25), Sparse(50));
+        assert_eq!(classify_sparse(10, 10, 100), Sparse(50));
+        // Degenerate shapes don't divide by zero.
+        assert_eq!(classify_sparse(0, 7, 0), Sparse(1));
+        assert_eq!(classify_sparse(7, 0, 0), Sparse(1));
+    }
+
+    #[test]
+    fn sparse_grid_sweeps_steal_granularity_only() {
+        for fmt in [crate::posit::P8_FMT, P16_FMT, P32_FMT] {
+            let v = candidates(fmt, ShapeClass::Sparse(10));
+            assert_eq!(v[0].tile, TileConfig::DEFAULT);
+            assert_eq!(v[0].margin_pct, 0);
+            // Row bodies are adaptive per row: no path pins (in
+            // particular no Hybrid/Gather candidates) in the sparse
+            // grid, only steal-chunk sweeps.
+            assert!(v.iter().all(|c| c.path == InnerPath::Auto),
+                    "{fmt:?}");
+            assert!(v.iter().any(|c| c.tile.steal_rows == 1));
+            assert!(v.iter().any(|c| c.tile.steal_rows == 4));
             assert!(v[1..].iter().all(|c| c.margin_pct >= 3));
         }
     }

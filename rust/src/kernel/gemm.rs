@@ -31,7 +31,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::posit::{encode_from_parts, Parts, PositFormat};
+use crate::posit::{encode_from_parts, from_f64, Parts, PositFormat};
 
 use super::autotune;
 use super::plan::{self, DecodedPlan};
@@ -57,9 +57,11 @@ pub fn auto_threads(m: usize, k: usize, n: usize) -> usize {
 }
 
 /// Worker count for one GEMM under an explicit config: the override
-/// when set, else the size heuristic.
-fn threads_for(m: usize, k: usize, n: usize, cfg: &KernelConfig)
-               -> usize {
+/// when set, else the size heuristic. The sparse front ends
+/// ([`super::sparse`]) call it with the *effective* depth
+/// (`nnz / rows`) so pruned matrices don't over-thread.
+pub(super) fn threads_for(m: usize, k: usize, n: usize,
+                          cfg: &KernelConfig) -> usize {
     if let Some(t) = cfg.threads {
         return t.clamp(1, m.max(1));
     }
@@ -251,6 +253,11 @@ pub struct KernelCounters {
     /// form (each one is a `from_words` decode the next layer never
     /// pays).
     pub fused_elems: u64,
+    /// GEMMs dispatched through the sparse front ends
+    /// ([`super::sparse::spgemm`] family, including the `bt` and fused
+    /// variants) — also counted in `gemms`. A pruned-model forward
+    /// pass moving this is the proof the sparse path actually ran.
+    pub sparse_gemms: u64,
     /// Elements decoded word → planar by `DecodedPlan::from_words`
     /// since process start. Flat across a fused forward pass except
     /// for cache misses and the NaR slow path.
@@ -276,13 +283,27 @@ pub fn counters() -> KernelCounters {
         autotune_probes: autotune::probes(),
         fused_gemms: CTR_FUSED_GEMMS.load(Ordering::Relaxed),
         fused_elems: CTR_FUSED_ELEMS.load(Ordering::Relaxed),
+        sparse_gemms: super::sparse::sparse_gemms(),
         plan_decodes: plan::plan_decodes(),
         plan_encodes: plan::plan_encodes(),
     }
 }
 
+/// Count one GEMM dispatched through a front end — the sparse entry
+/// points ([`super::sparse`]) share the process counter with the
+/// dense ones.
+pub(super) fn record_gemm() {
+    CTR_GEMMS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one fused-epilogue GEMM and the planar elements it emitted.
+pub(super) fn record_fused(elems: u64) {
+    CTR_FUSED_GEMMS.fetch_add(1, Ordering::Relaxed);
+    CTR_FUSED_ELEMS.fetch_add(elems, Ordering::Relaxed);
+}
+
 /// Fold one pool dispatch into the process counters.
-fn record_dispatch(stats: &DispatchStats) {
+pub(super) fn record_dispatch(stats: &DispatchStats) {
     CTR_CHUNKS.fetch_add(stats.chunks as u64, Ordering::Relaxed);
     let jobs = stats.per_job_claims.len();
     if jobs > 1 {
@@ -462,20 +483,84 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
 ///   interior encode/decode round-trip.
 ///
 /// Consequently [`gemm_fused`] output words are bit-identical to
-/// [`gemm`] followed by [`relu_words`], for every precision, tile
-/// geometry, thread count and inner path — asserted in the tests
-/// below and oracled end-to-end in `tests/fused_pipeline.rs`.
+/// [`gemm`] followed by [`activate_words`], for every activation,
+/// precision, tile geometry, thread count and inner path — asserted
+/// in the tests below and oracled end-to-end in
+/// `tests/fused_pipeline.rs`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Epilogue {
-    /// Apply ReLU: zero negative output words (NaR passes through).
-    pub relu: bool,
+    /// Word-level activation applied after the single rounding.
+    pub act: Activation,
 }
 
 impl Epilogue {
     /// No activation — bias + rounding + planar emission only.
-    pub const NONE: Epilogue = Epilogue { relu: false };
+    pub const NONE: Epilogue = Epilogue { act: Activation::None };
     /// ReLU fused after the single rounding.
-    pub const RELU: Epilogue = Epilogue { relu: true };
+    pub const RELU: Epilogue = Epilogue { act: Activation::Relu };
+    /// ReLU6 fused after the single rounding.
+    pub const RELU6: Epilogue = Epilogue { act: Activation::Relu6 };
+
+    /// The pre-`Activation` call shape: `true` → [`Epilogue::RELU`],
+    /// `false` → [`Epilogue::NONE`].
+    pub fn from_relu(relu: bool) -> Epilogue {
+        if relu {
+            Epilogue::RELU
+        } else {
+            Epilogue::NONE
+        }
+    }
+}
+
+/// Word-level activation of the fused epilogue (and of
+/// [`activate_words`], its layer-wise oracle). Every variant commutes
+/// with the kernel's single rounding — see [`Epilogue`] for the
+/// argument — so fusing it after the rounding is bit-identical to
+/// applying it to the exact accumulator before.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Activation {
+    /// Identity: the rounded sum passes through untouched.
+    #[default]
+    None,
+    /// ReLU: zero negative words (NaR passes through).
+    Relu,
+    /// ReLU6: zero negative words, clamp positives to 6.0 (NaR passes
+    /// through). `6 = 1.5·2²` is exactly representable in every
+    /// supported posit format, so `round(min(x, 6)) =
+    /// min(round(x), 6)`: rounding is monotone and fixes 6, hence an
+    /// exact sum above 6 rounds to a word ≥ the 6-word and clamps to
+    /// it either way, and a sum ≤ 6 rounds below it and is untouched
+    /// either way.
+    Relu6,
+}
+
+/// Word-level activation dispatch: no-op for identity, [`relu_words`]
+/// for ReLU, the added positive clamp for ReLU6. This is the
+/// layer-wise oracle the fused epilogue is tested against at every
+/// activation. Positive posit words of one format order like their
+/// values as plain unsigned integers, so the ReLU6 clamp is a word
+/// compare against the encoding of 6.
+pub fn activate_words(words: &mut [u64], act: Activation,
+                      fmt: PositFormat) {
+    match act {
+        Activation::None => {}
+        Activation::Relu => relu_words(words, fmt),
+        Activation::Relu6 => {
+            let nar = fmt.nar();
+            let sign_bit = 1u64 << (fmt.nbits - 1);
+            let six = from_f64(6.0, fmt);
+            for wd in words.iter_mut() {
+                if *wd == nar {
+                    continue;
+                }
+                if *wd & sign_bit != 0 {
+                    *wd = 0;
+                } else if *wd > six {
+                    *wd = six;
+                }
+            }
+        }
+    }
 }
 
 /// Word-level ReLU: zero every negative word, pass NaR through.
@@ -499,10 +584,10 @@ pub fn relu_words(words: &mut [u64], fmt: PositFormat) {
 /// SAFETY rationale: identical to [`SharedOut`] — each window is
 /// derived from a row chunk the [`RowQueue`] hands out at most once,
 /// so no two jobs ever alias.
-struct PlanarSink {
-    sig: *mut i64,
-    w: *mut i32,
-    w8: *mut u8,
+pub(super) struct PlanarSink {
+    pub(super) sig: *mut i64,
+    pub(super) w: *mut i32,
+    pub(super) w8: *mut u8,
 }
 unsafe impl Sync for PlanarSink {}
 
@@ -514,7 +599,7 @@ impl PlanarSink {
     /// The `(off, len)` element range must be exclusive to the caller
     /// (see the type-level rationale) and in bounds of the plan the
     /// pointers were taken from.
-    unsafe fn window(&self, off: usize, len: usize)
+    pub(super) unsafe fn window(&self, off: usize, len: usize)
                      -> (&mut [i64], &mut [i32], Option<&mut [u8]>) {
         let sig = std::slice::from_raw_parts_mut(self.sig.add(off),
                                                  len);
@@ -579,9 +664,7 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
         run_rows(a, b, bias_dec.as_ref(), &mut out.words, t,
                  Dispatch::Pool, tile, path, None);
         apply_nar(a, b, bias_dec.as_ref(), &mut out.words);
-        if epi.relu {
-            relu_words(&mut out.words, a.fmt);
-        }
+        activate_words(&mut out.words, epi.act, a.fmt);
         out.refill_planar_from_words();
         return;
     }
@@ -590,7 +673,7 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
     // never overflows to NaR), so the epilogue runs per cache-hot
     // window with no masks at all.
     let fmt = a.fmt;
-    let relu = epi.relu;
+    let act = epi.act;
     let DecodedPlan { words, words8, sig, w, .. } = out;
     let sink = PlanarSink {
         sig: sig.as_mut_ptr(),
@@ -606,7 +689,7 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
         // exclusively; its planar windows share that exclusivity.
         let (sig_w, w_w, w8_w) =
             unsafe { sink.window(r0 * n, win.len()) };
-        simd::epilogue_window(fmt, relu, win, sig_w, w_w, w8_w);
+        simd::epilogue_window(fmt, act, win, sig_w, w_w, w8_w);
     };
     run_rows(a, b, bias_dec.as_ref(), words, t, Dispatch::Pool, tile,
              path, Some(&hook));
@@ -990,7 +1073,8 @@ mod tests {
                     let want = DecodedPlan::from_words(want_words, m,
                                                        n, fmt);
                     let got = gemm_fused(&pa, &pb, bias.as_deref(),
-                                         Epilogue { relu }, &cfg);
+                                         Epilogue::from_relu(relu),
+                                         &cfg);
                     assert_eq!(got.words, want.words,
                                "{fmt:?} ({m},{k},{n}) relu={relu}");
                     assert_eq!(got.sig, want.sig, "{fmt:?} sig");
@@ -1106,6 +1190,70 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn relu6_words_matches_value_clamp() {
+        // Exhaustive over every P8/P16 word: the word-compare clamp
+        // must equal clamp-in-value-space + re-encode (both clamp
+        // bounds, 0 and 6, are exactly representable so the re-encode
+        // rounds nothing).
+        for fmt in [P8_FMT, P16_FMT] {
+            for word in 0..(1u64 << fmt.nbits) {
+                let mut w = [word];
+                activate_words(&mut w, Activation::Relu6, fmt);
+                let v = to_f64(word, fmt);
+                if v.is_nan() {
+                    assert_eq!(w[0], fmt.nar(), "NaR passes through");
+                } else {
+                    assert_eq!(w[0], from_f64(v.clamp(0.0, 6.0), fmt),
+                               "{fmt:?} {word:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_word_gemm_plus_activation_all_kinds() {
+        // Commutation with the rounding, per activation: the fused
+        // epilogue must equal word GEMM -> activate_words ->
+        // from_words for identity, ReLU and ReLU6 alike. Random
+        // operands include raw NaR patterns, exercising both the
+        // mask-free hot path and the poisoned slow path.
+        let mut rng = SplitMix64::new(8192);
+        let cfg = settings::current();
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for &(m, k, n) in &[(1, 1, 1), (5, 9, 7), (11, 6, 13)] {
+                let aw = rand_words(&mut rng, m * k, fmt);
+                let bw = rand_words(&mut rng, k * n, fmt);
+                let bias = Some(rand_words(&mut rng, n, fmt));
+                let pa = DecodedPlan::from_words(aw, m, k, fmt);
+                let pb = DecodedPlan::from_words(bw, k, n, fmt);
+                for epi in
+                    [Epilogue::NONE, Epilogue::RELU, Epilogue::RELU6]
+                {
+                    let mut want_words =
+                        gemm(&pa, &pb, bias.as_deref());
+                    activate_words(&mut want_words, epi.act, fmt);
+                    let want = DecodedPlan::from_words(want_words, m,
+                                                       n, fmt);
+                    let got = gemm_fused(&pa, &pb, bias.as_deref(),
+                                         epi, &cfg);
+                    assert_eq!(got.words, want.words,
+                               "{fmt:?} ({m},{k},{n}) {:?}", epi.act);
+                    assert_eq!(got.sig, want.sig, "{fmt:?} sig");
+                    assert_eq!(got.w, want.w, "{fmt:?} w");
+                    assert_eq!(got.words8, want.words8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_from_relu_round_trips() {
+        assert_eq!(Epilogue::from_relu(true), Epilogue::RELU);
+        assert_eq!(Epilogue::from_relu(false), Epilogue::NONE);
+        assert_eq!(Epilogue::default(), Epilogue::NONE);
     }
 
     #[test]

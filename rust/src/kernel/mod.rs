@@ -112,6 +112,20 @@
 //! [`crate::nn::exec::Session`] rides this by default
 //! (`SPADE_FUSED=0` / `EngineConfig::fused` is the escape hatch).
 //!
+//! ## Sparse workloads (CSR SpGEMM)
+//!
+//! Pruned weights route through [`sparse`]: a [`sparse::SparsePlan`]
+//! stores only the nonzeros (CSR `row_ptr`/`col_idx` plus the same
+//! planar `sig`/`w` fields, decoded once), and
+//! [`sparse::spgemm`] / [`sparse::spgemm_bt`] (+ fused variants)
+//! dispatch rows in descending-nnz order over the same work-stealing
+//! pool, each row running the accumulator body its length class picks
+//! ([`sparse::RowClass`]). The autotuner keys sparse dispatch by a
+//! density bucket ([`ShapeClass::Sparse`]). Every sparse result is
+//! **bit-identical** to the dense kernel on densified operands —
+//! exact accumulators make zero terms true no-ops — gated by
+//! `tests/sparse_gemm.rs` and the `sparse_vs_dense` bench section.
+//!
 //! ## Who uses it
 //!
 //! [`crate::systolic::gemm::SystolicGemm::run`] (the functional GEMM),
@@ -133,14 +147,18 @@ pub mod plan;
 pub mod pool;
 pub mod settings;
 pub mod simd;
+pub mod sparse;
 
-pub use autotune::{AutotuneMode, ShapeClass};
-pub use gemm::{auto_threads, counters, encode_acc_i128,
-               encode_acc_i64, gemm, gemm_fused, gemm_fused_into,
-               gemm_single_path, gemm_with_config,
+pub use autotune::{classify_sparse, AutotuneMode, ShapeClass};
+pub use gemm::{activate_words, auto_threads, counters,
+               encode_acc_i128, encode_acc_i64, gemm, gemm_fused,
+               gemm_fused_into, gemm_single_path, gemm_with_config,
                gemm_with_config_stats, gemm_with_scope,
                gemm_with_stats, gemm_with_threads, relu_words,
-               DispatchStats, Epilogue, KernelCounters};
+               Activation, DispatchStats, Epilogue, KernelCounters};
+pub use sparse::{classify_row, spgemm, spgemm_bt, spgemm_bt_fused_into,
+                 spgemm_fused, spgemm_fused_into, spgemm_with_config,
+                 RowClass, SparsePlan};
 pub use lut::{p8_decode_lut, p8_mul, p8_mul_lut, p8_prod_lut,
               p16_decode_lut, p16_hyb_lut, DecEntry};
 pub use plan::DecodedPlan;

@@ -58,7 +58,7 @@
 
 use crate::posit::{decode, PositClass, PositFormat, Quire};
 
-use super::gemm::{encode_acc_i128, encode_acc_i64};
+use super::gemm::{encode_acc_i128, encode_acc_i64, Activation};
 use super::lut::{self, P16_ACC_FRAC_OFFSET, P8_ACC_FRAC_OFFSET};
 use super::plan::DecodedPlan;
 
@@ -283,11 +283,11 @@ impl BiasDec {
 }
 
 /// Fused-epilogue finish of one **cache-hot** output window: the
-/// optional ReLU word-clamp on the freshly rounded words, then planar
-/// field emission (`sig`/`w`, plus the packed byte copy for ≤8-bit
-/// formats) — exactly the decode the next layer would otherwise pay
-/// through [`DecodedPlan::from_words`], done while the window is still
-/// in L1/L2 right after [`gemm_rows`] filled it.
+/// word-level activation clamp on the freshly rounded words, then
+/// planar field emission (`sig`/`w`, plus the packed byte copy for
+/// ≤8-bit formats) — exactly the decode the next layer would otherwise
+/// pay through [`DecodedPlan::from_words`], done while the window is
+/// still in L1/L2 right after [`gemm_rows`] filled it.
 ///
 /// The caller guarantees no NaR can appear in `words`: the kernel's
 /// rounding ([`super::gemm::encode_acc_i64`] and friends) saturates to
@@ -295,7 +295,7 @@ impl BiasDec {
 /// NaR operands — which [`super::gemm::gemm_fused_into`] routes to the
 /// masked slow path instead of here. That is what lets this loop skip
 /// mask building entirely.
-pub(super) fn epilogue_window(fmt: PositFormat, relu: bool,
+pub(super) fn epilogue_window(fmt: PositFormat, act: Activation,
                               words: &mut [u64], sig: &mut [i64],
                               w: &mut [i32],
                               w8: Option<&mut [u8]>) {
@@ -303,13 +303,30 @@ pub(super) fn epilogue_window(fmt: PositFormat, relu: bool,
     debug_assert_eq!(words.len(), w.len());
     let nar = fmt.nar();
     let sign_bit = 1u64 << (fmt.nbits - 1);
-    if relu {
-        // Negative word ⇔ negative value (words are value-monotone
-        // two's-complement integers); NaR (sign bit, zero payload)
-        // passes through like NaN does through an f32 ReLU.
-        for wd in words.iter_mut() {
-            if *wd & sign_bit != 0 && *wd != nar {
-                *wd = 0;
+    match act {
+        Activation::None => {}
+        Activation::Relu => {
+            // Negative word ⇔ negative value (words are value-monotone
+            // two's-complement integers); NaR (sign bit, zero payload)
+            // passes through like NaN does through an f32 ReLU.
+            for wd in words.iter_mut() {
+                if *wd & sign_bit != 0 && *wd != nar {
+                    *wd = 0;
+                }
+            }
+        }
+        Activation::Relu6 => {
+            // Positive posit words of one format order like their
+            // values as plain unsigned integers, so the upper clamp
+            // is a word compare against the encoding of 6 (exactly
+            // representable: 1.5·2²).
+            let six = crate::posit::from_f64(6.0, fmt);
+            for wd in words.iter_mut() {
+                if *wd & sign_bit != 0 && *wd != nar {
+                    *wd = 0;
+                } else if *wd & sign_bit == 0 && *wd > six {
+                    *wd = six;
+                }
             }
         }
     }

@@ -1,0 +1,1346 @@
+//! Sparse (CSR) planar operands and the SpGEMM paths over them.
+//!
+//! Pruned DNN weights are mostly zeros; decoding and multiplying every
+//! stored zero wastes the planar pipeline's whole budget. Following the
+//! Spada SpGEMM design (ASPLOS'23: CSR storage, row-length
+//! preprocessing, an adaptive per-region dataflow), a [`SparsePlan`]
+//! stores **only the nonzeros** of a matrix in the same planar field
+//! layout [`DecodedPlan`] uses, compressed row by row:
+//!
+//! ```text
+//! dense 4×6                  SparsePlan (CSR)
+//! ┌ 0  a  0  0  b  0 ┐       row_ptr  [0,    2,    3, 3,       6]
+//! │ 0  0  c  0  0  0 │       col_idx  [1, 4, 2,    0, 3, 5]
+//! │ 0  0  0  0  0  0 │       words    [a, b, c,    d, e, f]
+//! └ d  0  0  e  0  f ┘       sig/w    planar fields, one per stored
+//!                                     nonzero (same decode as dense)
+//! ```
+//!
+//! Row `i`'s entries live at `row_ptr[i] .. row_ptr[i+1]`, with
+//! `col_idx` **strictly ascending** inside each row — the invariant
+//! every constructor validates and the bit-identity contract leans on.
+//!
+//! ## Bit-identity contract
+//!
+//! Every sparse result is **bit-identical to a dense run on the
+//! densified operands**. This is structural, not approximate: the
+//! dense inner loops already skip zero operands (a zero significand
+//! contributes nothing to an exact integer or quire accumulator), so a
+//! CSR walk over the stored nonzeros in ascending column order feeds
+//! the accumulator *the same exact terms*; integer/quire addition is
+//! exact and associative, so the sum — and therefore the **single**
+//! rounding per output ([`gemm::encode_acc_i64`] /
+//! [`gemm::encode_acc_i128`] / `Quire::to_posit`) — cannot differ.
+//! `tests/sparse_gemm.rs` pins this across a
+//! density × precision × epilogue sweep.
+//!
+//! ## Adaptive row scheduling (the Spada idea, on a real kernel)
+//!
+//! * **Row-length classes** ([`RowClass`], via [`classify_row`]) pick
+//!   the accumulator body per row: empty rows short-circuit, P8 rows
+//!   take the `i64` product-LUT lane body, P16 rows the `i128` body
+//!   (or the chunk-folded quire body beyond the `i128` headroom,
+//!   [`lut::P16_CHUNK`] stored terms), P32/generic rows the quire
+//!   panel body.
+//! * **Row-length-sorted work stealing**: rows are dispatched through
+//!   the persistent [`pool`] in descending-nnz order on a
+//!   [`RowQueue`], so the dense straggler rows start first and the
+//!   cheap tail backfills — the schedule changes only wall-clock,
+//!   never results (each output row is written by exactly one job).
+//! * **Autotuned steal granularity**: the density bucket joins the
+//!   autotuner's key as `ShapeClass::Sparse(density)` and its grid
+//!   sweeps the steal chunk ([`super::autotune::candidates`]).
+//!
+//! Two operand orientations are provided:
+//!
+//! * [`spgemm`] — sparse A (CSR) × dense B, the classic SpGEMM.
+//! * [`spgemm_bt`] — dense A × sparse **Bᵀ** (a [`SparsePlan`] holding
+//!   the CSR of B's transpose, i.e. one compressed row per *output
+//!   column*). This is the pruned-weight orientation
+//!   [`crate::nn::exec::Session`] uses: layer weights are `[out, in]`
+//!   matrices multiplied as `x · Wᵀ`, so the weight tensor's natural
+//!   rows *are* the transpose's rows and
+//!   [`SparsePlan::from_dense_transposed`] builds the plan without
+//!   materializing a transposed dense matrix.
+//!
+//! Both have fused variants ([`spgemm_fused_into`] /
+//! [`spgemm_bt_fused_into`]) riding the same [`Epilogue`] contract as
+//! the dense kernel: bias joins the exact accumulator, one rounding,
+//! word-level activation, direct planar emission.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::posit::{PositFormat, Quire, P16_FMT, P8_FMT};
+
+use super::autotune;
+use super::gemm::{self, DispatchStats, Epilogue};
+use super::lut::{self, P16_ACC_FRAC_OFFSET, P8_ACC_FRAC_OFFSET};
+use super::plan::DecodedPlan;
+use super::pool::{self, RowQueue};
+use super::settings::{self, KernelConfig};
+use super::simd::{self, BiasDec, TileConfig};
+
+/// Sparse GEMMs dispatched through the sparse front ends (also
+/// counted in [`gemm::KernelCounters::gemms`]).
+static CTR_SPARSE_GEMMS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide sparse-GEMM counter (see
+/// [`gemm::KernelCounters::sparse_gemms`]).
+pub(super) fn sparse_gemms() -> u64 {
+    CTR_SPARSE_GEMMS.load(Ordering::Relaxed)
+}
+
+/// A posit matrix in CSR form with planar decoded fields per stored
+/// nonzero — the sparse sibling of [`DecodedPlan`]. See the module
+/// docs for the layout diagram and the strict-ascending `col_idx`
+/// invariant.
+///
+/// Stored entries whose word is posit zero are permitted (they are
+/// numerically inert — a zero significand contributes nothing to any
+/// exact accumulator) but the [`SparsePlan::from_dense`] constructors
+/// never produce them.
+#[derive(Debug, Clone)]
+pub struct SparsePlan {
+    /// Posit format of every element.
+    pub fmt: PositFormat,
+    /// Logical row count of the (densified) matrix.
+    pub rows: usize,
+    /// Logical column count of the (densified) matrix.
+    pub cols: usize,
+    /// Row extents: row `i`'s entries are
+    /// `row_ptr[i] .. row_ptr[i+1]`; `len == rows + 1`,
+    /// `row_ptr[rows] == nnz`.
+    pub row_ptr: Vec<usize>,
+    /// Column index per stored entry, strictly ascending within each
+    /// row.
+    pub col_idx: Vec<usize>,
+    /// Posit word per stored entry (canonicalized to the low `nbits`).
+    pub words: Vec<u64>,
+    /// Packed byte copy of `words` for 8-bit formats (empty wider) —
+    /// the P8 product-LUT index, same as [`DecodedPlan::words8`].
+    pub words8: Vec<u8>,
+    /// Sign-folded significand per stored entry (0 for explicit zeros
+    /// and NaR).
+    pub sig: Vec<i64>,
+    /// LSB exponent per stored entry: value = `sig * 2^w`.
+    pub w: Vec<i32>,
+    /// True if any stored entry is NaR.
+    pub has_nar: bool,
+    /// Per-row NaR mask (empty unless `has_nar`). For a transposed
+    /// plan ([`SparsePlan::from_dense_transposed`]) row `j` is source
+    /// **column** `j`, so this doubles as the dense `nar_cols` mask.
+    pub nar_rows: Vec<bool>,
+}
+
+impl SparsePlan {
+    /// Compress a dense plan to CSR, keeping every element whose word
+    /// is not posit zero (NaR words are nonzero and are kept — their
+    /// `sig` is 0 so they stay numerically inert, and the per-row NaR
+    /// mask drives the poisoning pass). No re-decode happens: the
+    /// planar fields are copied from the dense plan.
+    pub fn from_dense(p: &DecodedPlan) -> SparsePlan {
+        let nar = p.fmt.nar();
+        let mut row_ptr = Vec::with_capacity(p.rows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut words = Vec::new();
+        let mut sig = Vec::new();
+        let mut w = Vec::new();
+        let mut has_nar = false;
+        let mut nar_rows: Vec<bool> = Vec::new();
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                let idx = r * p.cols + c;
+                let wd = p.words[idx];
+                if wd == 0 {
+                    continue;
+                }
+                if wd == nar {
+                    if !has_nar {
+                        has_nar = true;
+                        nar_rows = vec![false; p.rows];
+                    }
+                    nar_rows[r] = true;
+                }
+                col_idx.push(c);
+                words.push(wd);
+                sig.push(p.sig[idx]);
+                w.push(p.w[idx]);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let words8 = if p.fmt.nbits <= 8 {
+            words.iter().map(|&wd| wd as u8).collect()
+        } else {
+            Vec::new()
+        };
+        SparsePlan { fmt: p.fmt, rows: p.rows, cols: p.cols, row_ptr,
+                     col_idx, words, words8, sig, w, has_nar,
+                     nar_rows }
+    }
+
+    /// Compress the **transpose** of a dense plan to CSR without
+    /// materializing it: the result's row `j` holds the nonzeros of
+    /// `p`'s column `j` (so `rows == p.cols`, `cols == p.rows`), and
+    /// `nar_rows[j]` is true exactly when `p`'s column `j` contains a
+    /// NaR — matching the dense kernel's `nar_cols` poisoning. This is
+    /// the weight-plan constructor for [`spgemm_bt`].
+    pub fn from_dense_transposed(p: &DecodedPlan) -> SparsePlan {
+        let nar = p.fmt.nar();
+        let mut row_ptr = Vec::with_capacity(p.cols + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut words = Vec::new();
+        let mut sig = Vec::new();
+        let mut w = Vec::new();
+        let mut has_nar = false;
+        let mut nar_rows: Vec<bool> = Vec::new();
+        for c in 0..p.cols {
+            for r in 0..p.rows {
+                let idx = r * p.cols + c;
+                let wd = p.words[idx];
+                if wd == 0 {
+                    continue;
+                }
+                if wd == nar {
+                    if !has_nar {
+                        has_nar = true;
+                        nar_rows = vec![false; p.cols];
+                    }
+                    nar_rows[c] = true;
+                }
+                col_idx.push(r);
+                words.push(wd);
+                sig.push(p.sig[idx]);
+                w.push(p.w[idx]);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let words8 = if p.fmt.nbits <= 8 {
+            words.iter().map(|&wd| wd as u8).collect()
+        } else {
+            Vec::new()
+        };
+        SparsePlan { fmt: p.fmt, rows: p.cols, cols: p.rows, row_ptr,
+                     col_idx, words, words8, sig, w, has_nar,
+                     nar_rows }
+    }
+
+    /// Build a plan from raw CSR arrays, **validating the structure**
+    /// and decoding the stored words once (the same LUT/generic decode
+    /// dense plans use). Hard errors, never silent fixes: a malformed
+    /// `row_ptr` (wrong length, non-monotone, out of bounds), a
+    /// `col_idx`/`words` length mismatch, out-of-range column indices,
+    /// and duplicate or descending column indices within a row are all
+    /// rejected with a message naming the offense. Explicit posit-zero
+    /// words are accepted (numerically inert).
+    pub fn from_csr(rows: usize, cols: usize, row_ptr: Vec<usize>,
+                    col_idx: Vec<usize>, words: Vec<u64>,
+                    fmt: PositFormat) -> Result<SparsePlan, String> {
+        if row_ptr.len() != rows + 1 {
+            return Err(format!(
+                "row_ptr has {} entries for {rows} rows (want rows+1 \
+                 = {})", row_ptr.len(), rows + 1));
+        }
+        if row_ptr[0] != 0 {
+            return Err(format!("row_ptr[0] = {} (must be 0)",
+                               row_ptr[0]));
+        }
+        for i in 0..rows {
+            if row_ptr[i + 1] < row_ptr[i] {
+                return Err(format!(
+                    "row_ptr is not monotone at row {i}: {} > {}",
+                    row_ptr[i], row_ptr[i + 1]));
+            }
+        }
+        let nnz = row_ptr[rows];
+        if col_idx.len() != nnz {
+            return Err(format!(
+                "col_idx has {} entries but row_ptr ends at {nnz}",
+                col_idx.len()));
+        }
+        if words.len() != nnz {
+            return Err(format!(
+                "words has {} entries but row_ptr ends at {nnz}",
+                words.len()));
+        }
+        for i in 0..rows {
+            let mut prev: Option<usize> = None;
+            for e in row_ptr[i]..row_ptr[i + 1] {
+                let c = col_idx[e];
+                if c >= cols {
+                    return Err(format!(
+                        "row {i}: column index {c} out of range \
+                         (cols = {cols})"));
+                }
+                if let Some(p) = prev {
+                    if c == p {
+                        return Err(format!(
+                            "row {i}: duplicate column index {c}"));
+                    }
+                    if c < p {
+                        return Err(format!(
+                            "row {i}: column indices not in ascending \
+                             order ({p} then {c})"));
+                    }
+                }
+                prev = Some(c);
+            }
+        }
+        // Decode the stored words exactly as a dense plan would (one
+        // LUT/generic pass); the 1×nnz plan's nar_cols is a per-entry
+        // NaR flag we fold into the per-row mask.
+        let dec = DecodedPlan::from_words(words, 1, nnz, fmt);
+        let mut has_nar = false;
+        let mut nar_rows: Vec<bool> = Vec::new();
+        if dec.has_nar {
+            has_nar = true;
+            nar_rows = vec![false; rows];
+            for i in 0..rows {
+                for e in row_ptr[i]..row_ptr[i + 1] {
+                    if dec.nar_cols[e] {
+                        nar_rows[i] = true;
+                    }
+                }
+            }
+        }
+        Ok(SparsePlan { fmt, rows, cols, row_ptr, col_idx,
+                        words: dec.words, words8: dec.words8,
+                        sig: dec.sig, w: dec.w, has_nar, nar_rows })
+    }
+
+    /// Expand back to a dense [`DecodedPlan`] (zeros everywhere no
+    /// entry is stored) — the densified operand the bit-identity
+    /// tests run the dense oracle on.
+    pub fn densify(&self) -> DecodedPlan {
+        let mut words = vec![0u64; self.rows * self.cols];
+        for i in 0..self.rows {
+            for e in self.row_ptr[i]..self.row_ptr[i + 1] {
+                words[i * self.cols + self.col_idx[e]] = self.words[e];
+            }
+        }
+        DecodedPlan::from_words(words, self.rows, self.cols, self.fmt)
+    }
+
+    /// Stored entry count.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Stored-entry fraction: `nnz / (rows * cols)` (0.0 for an empty
+    /// shape).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Stored entries in row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Entry range of row `r` (indexes `col_idx`/`words`/`sig`/`w`).
+    pub fn row_entries(&self, r: usize) -> std::ops::Range<usize> {
+        self.row_ptr[r]..self.row_ptr[r + 1]
+    }
+}
+
+/// Per-row accumulator class — the adaptive-dataflow decision
+/// ([`classify_row`]): which exact accumulator body a compressed row
+/// of `nnz` stored terms runs. The choice never affects results (all
+/// bodies are exact); it only picks the cheapest machinery with
+/// headroom for the row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowClass {
+    /// No stored entries: the output row is the rounded bias (or
+    /// zeros).
+    Empty,
+    /// The format's direct wide-integer body: P8 `i64` product-LUT
+    /// lanes, P16 `i128` (exact up to [`lut::P16_CHUNK`] terms), or
+    /// the quire panel for P32/generic formats.
+    Direct,
+    /// P16 with more stored terms than the `i128` headroom admits:
+    /// exact `i128` partials over [`lut::P16_CHUNK`]-term chunks,
+    /// each folded into a per-column quire with one `mac_raw`.
+    DeepFold,
+}
+
+/// Classify one compressed row by stored-term count (see
+/// [`RowClass`]).
+pub fn classify_row(fmt: PositFormat, nnz: usize) -> RowClass {
+    if nnz == 0 {
+        RowClass::Empty
+    } else if fmt == P16_FMT && nnz > lut::P16_CHUNK {
+        RowClass::DeepFold
+    } else {
+        RowClass::Direct
+    }
+}
+
+/// Per-job scratch buffers, allocated once per stealing job and
+/// reused across every row it claims (the sparse analogue of the
+/// dense loops' per-call accumulator buffers).
+struct Scratch {
+    acc64: Vec<i64>,
+    acc128: Vec<i128>,
+    quires: Vec<Quire>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch { acc64: Vec::new(), acc128: Vec::new(),
+                  quires: Vec::new() }
+    }
+
+    /// At least `len` reusable quires of `fmt`.
+    fn quires(&mut self, fmt: PositFormat, len: usize) -> &mut [Quire] {
+        while self.quires.len() < len {
+            self.quires.push(Quire::new(fmt));
+        }
+        &mut self.quires[..len]
+    }
+}
+
+/// Shared output pointer for the work-stealing jobs — same rationale
+/// as the dense dispatcher's: each claimed position maps to one row
+/// of a permutation, so no two jobs ever alias a row window.
+struct SharedOut(*mut u64);
+unsafe impl Sync for SharedOut {}
+
+// ---------------------------------------------------------------
+// Sparse-A row bodies (one output row per call, full column width)
+// ---------------------------------------------------------------
+
+/// P8 sparse row: `i64` accumulators over the full output row, one
+/// exact-product LUT gather per (stored A entry × B column) — the
+/// same terms the dense lane loop adds (it skips `aw == 0`), in the
+/// same ascending-k order.
+fn sprow_p8(a: &SparsePlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+            i: usize, orow: &mut [u64], s: &mut Scratch) {
+    let n = b.cols;
+    let fmt = a.fmt;
+    let table = lut::p8_prod_lut();
+    s.acc64.clear();
+    s.acc64.resize(n, 0);
+    if let Some(bd) = bd {
+        for (j, slot) in s.acc64.iter_mut().enumerate() {
+            *slot = bd.sig[j] << (bd.w[j] + P8_ACC_FRAC_OFFSET as i32);
+        }
+    }
+    for e in a.row_entries(i) {
+        let aw = a.words8[e];
+        if aw == 0 {
+            continue; // explicit stored zero: inert
+        }
+        let base = (aw as usize) << 8;
+        let kk = a.col_idx[e];
+        let brow = &b.words8[kk * n..(kk + 1) * n];
+        for (slot, &bw) in s.acc64.iter_mut().zip(brow) {
+            *slot += table[base | bw as usize];
+        }
+    }
+    for (o, &v) in orow.iter_mut().zip(&s.acc64) {
+        *o = gemm::encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
+/// P16 sparse row within the `i128` headroom (`nnz ≤
+/// [`lut::P16_CHUNK`]`): significand product + shift-add per stored
+/// term, exactly the dense micro-tile's arithmetic.
+fn sprow_p16(a: &SparsePlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+             i: usize, orow: &mut [u64], s: &mut Scratch) {
+    let n = b.cols;
+    let fmt = a.fmt;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    s.acc128.clear();
+    s.acc128.resize(n, 0);
+    if let Some(bd) = bd {
+        for (j, slot) in s.acc128.iter_mut().enumerate() {
+            *slot = (bd.sig[j] as i128) << (bd.w[j] + off);
+        }
+    }
+    for e in a.row_entries(i) {
+        let sa = a.sig[e];
+        if sa == 0 {
+            continue; // explicit zero or NaR entry: inert
+        }
+        let wa = a.w[e];
+        let kk = a.col_idx[e];
+        let bs = &b.sig[kk * n..(kk + 1) * n];
+        let bw = &b.w[kk * n..(kk + 1) * n];
+        for (j, slot) in s.acc128.iter_mut().enumerate() {
+            let p = sa * bs[j];
+            if p != 0 {
+                *slot += (p as i128) << (wa + bw[j] + off);
+            }
+        }
+    }
+    for (o, &v) in orow.iter_mut().zip(&s.acc128) {
+        *o = gemm::encode_acc_i128(v, P16_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
+/// P16 deep row (`nnz > [`lut::P16_CHUNK`]`): exact `i128` partials
+/// over chunks of stored terms, folded into per-column quires with
+/// one `mac_raw` per chunk — the sparse mirror of the dense deep-k
+/// loop. Column panels bound the live quire count.
+fn sprow_p16_deep(a: &SparsePlan, b: &DecodedPlan,
+                  bd: Option<&BiasDec>, i: usize, orow: &mut [u64],
+                  tile: TileConfig, s: &mut Scratch) {
+    let n = b.cols;
+    let off = P16_ACC_FRAC_OFFSET as i32;
+    let cs = lut::P16_CHUNK;
+    let panel = tile.p16_panel.max(1).min(n.max(1));
+    let (e0, e1) = (a.row_ptr[i], a.row_ptr[i + 1]);
+    s.acc128.clear();
+    s.acc128.resize(panel, 0);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(panel);
+        let qs = {
+            while s.quires.len() < jw {
+                s.quires.push(Quire::new(a.fmt));
+            }
+            &mut s.quires[..jw]
+        };
+        for q in qs.iter_mut() {
+            q.clear();
+        }
+        if let Some(bd) = bd {
+            for (ni, q) in qs.iter_mut().enumerate() {
+                let sb = bd.sig[j0 + ni];
+                if sb != 0 {
+                    q.mac_raw(sb.unsigned_abs() as u128, bd.w[j0 + ni],
+                              sb < 0);
+                }
+            }
+        }
+        let mut c0 = e0;
+        while c0 < e1 {
+            let c1 = (c0 + cs).min(e1);
+            s.acc128[..jw].fill(0);
+            for e in c0..c1 {
+                let sa = a.sig[e];
+                if sa == 0 {
+                    continue;
+                }
+                let wa = a.w[e];
+                let kk = a.col_idx[e];
+                let bs = &b.sig[kk * n + j0..kk * n + j0 + jw];
+                let bw = &b.w[kk * n + j0..kk * n + j0 + jw];
+                for (ni, slot) in s.acc128[..jw].iter_mut().enumerate()
+                {
+                    let p = sa * bs[ni];
+                    if p != 0 {
+                        *slot += (p as i128) << (wa + bw[ni] + off);
+                    }
+                }
+            }
+            for (ni, q) in qs.iter_mut().enumerate() {
+                let v = s.acc128[ni];
+                if v != 0 {
+                    q.mac_raw(v.unsigned_abs(), -off, v < 0);
+                }
+            }
+            c0 = c1;
+        }
+        for (ni, q) in qs.iter().enumerate() {
+            orow[j0 + ni] = q.to_posit();
+        }
+        j0 += jw;
+    }
+}
+
+/// P32 / generic-format sparse row: per-column quires walked panel by
+/// panel ([`TileConfig::p32_panel`] bounds the live quire count),
+/// `mac_raw` per stored term — the quire is exact at any depth.
+fn sprow_quire(a: &SparsePlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+               i: usize, orow: &mut [u64], tile: TileConfig,
+               s: &mut Scratch) {
+    let n = b.cols;
+    let panel = tile.p32_panel.max(1).min(n.max(1));
+    let (e0, e1) = (a.row_ptr[i], a.row_ptr[i + 1]);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(panel);
+        let qs = s.quires(a.fmt, jw);
+        for q in qs.iter_mut() {
+            q.clear();
+        }
+        if let Some(bd) = bd {
+            for (ni, q) in qs.iter_mut().enumerate() {
+                let sb = bd.sig[j0 + ni];
+                if sb != 0 {
+                    q.mac_raw(sb.unsigned_abs() as u128, bd.w[j0 + ni],
+                              sb < 0);
+                }
+            }
+        }
+        for e in e0..e1 {
+            let sa = a.sig[e];
+            if sa == 0 {
+                continue;
+            }
+            let wa = a.w[e];
+            let kk = a.col_idx[e];
+            let bs = &b.sig[kk * n + j0..kk * n + j0 + jw];
+            let bw = &b.w[kk * n + j0..kk * n + j0 + jw];
+            for (ni, q) in qs.iter_mut().enumerate() {
+                let p = sa * bs[ni];
+                if p != 0 {
+                    q.mac_raw(p.unsigned_abs() as u128, wa + bw[ni],
+                              p < 0);
+                }
+            }
+        }
+        for (ni, q) in qs.iter().enumerate() {
+            orow[j0 + ni] = q.to_posit();
+        }
+        j0 += jw;
+    }
+}
+
+/// One sparse-A output row, dispatched to the [`RowClass`]-matched
+/// body for its format and stored-term count.
+fn sparse_row(a: &SparsePlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+              i: usize, orow: &mut [u64], tile: TileConfig,
+              s: &mut Scratch) {
+    if a.row_nnz(i) == 0 && bd.is_none() {
+        orow.fill(0); // RowClass::Empty, no bias: all-zero row
+        return;
+    }
+    if a.fmt == P8_FMT {
+        sprow_p8(a, b, bd, i, orow, s);
+    } else if a.fmt == P16_FMT {
+        match classify_row(a.fmt, a.row_nnz(i)) {
+            RowClass::DeepFold => {
+                sprow_p16_deep(a, b, bd, i, orow, tile, s)
+            }
+            _ => sprow_p16(a, b, bd, i, orow, s),
+        }
+    } else {
+        sprow_quire(a, b, bd, i, orow, tile, s);
+    }
+}
+
+// ---------------------------------------------------------------
+// Dense-A × sparse-Bᵀ row bodies (the pruned-weight orientation)
+// ---------------------------------------------------------------
+
+/// One dense-A output row against a CSR Bᵀ: output column `j` walks
+/// `bt`'s compressed row `j` (its `col_idx` are k-indices, ascending
+/// — the dense loop's k order), one private exact accumulator per
+/// output element.
+fn bt_row(a: &DecodedPlan, bt: &SparsePlan, bd: Option<&BiasDec>,
+          i: usize, orow: &mut [u64], s: &mut Scratch) {
+    let k = a.cols;
+    let n = bt.rows;
+    let fmt = a.fmt;
+    if fmt == P8_FMT {
+        let table = lut::p8_prod_lut();
+        for j in 0..n {
+            let mut acc = match bd {
+                Some(bd) => {
+                    bd.sig[j] << (bd.w[j] + P8_ACC_FRAC_OFFSET as i32)
+                }
+                None => 0,
+            };
+            for e in bt.row_entries(j) {
+                let aw = a.words8[i * k + bt.col_idx[e]];
+                if aw == 0 {
+                    continue;
+                }
+                acc += table[((aw as usize) << 8)
+                    | bt.words8[e] as usize];
+            }
+            orow[j] = gemm::encode_acc_i64(acc, P8_ACC_FRAC_OFFSET,
+                                           fmt);
+        }
+    } else if fmt == P16_FMT {
+        let off = P16_ACC_FRAC_OFFSET as i32;
+        for j in 0..n {
+            if bt.row_nnz(j) > lut::P16_CHUNK {
+                // Deep column: chunk-fold into a single quire.
+                let q = &mut s.quires(fmt, 1)[0];
+                q.clear();
+                if let Some(bd) = bd {
+                    let sb = bd.sig[j];
+                    if sb != 0 {
+                        q.mac_raw(sb.unsigned_abs() as u128, bd.w[j],
+                                  sb < 0);
+                    }
+                }
+                let (e0, e1) = (bt.row_ptr[j], bt.row_ptr[j + 1]);
+                let mut c0 = e0;
+                while c0 < e1 {
+                    let c1 = (c0 + lut::P16_CHUNK).min(e1);
+                    let mut acc: i128 = 0;
+                    for e in c0..c1 {
+                        let sb = bt.sig[e];
+                        if sb == 0 {
+                            continue;
+                        }
+                        let idx = i * k + bt.col_idx[e];
+                        let sa = a.sig[idx];
+                        let p = sa * sb;
+                        if p != 0 {
+                            acc += (p as i128)
+                                << (a.w[idx] + bt.w[e] + off);
+                        }
+                    }
+                    if acc != 0 {
+                        q.mac_raw(acc.unsigned_abs(), -off, acc < 0);
+                    }
+                    c0 = c1;
+                }
+                orow[j] = q.to_posit();
+            } else {
+                let mut acc = match bd {
+                    Some(bd) => (bd.sig[j] as i128) << (bd.w[j] + off),
+                    None => 0i128,
+                };
+                for e in bt.row_entries(j) {
+                    let sb = bt.sig[e];
+                    if sb == 0 {
+                        continue;
+                    }
+                    let idx = i * k + bt.col_idx[e];
+                    let sa = a.sig[idx];
+                    let p = sa * sb;
+                    if p != 0 {
+                        acc +=
+                            (p as i128) << (a.w[idx] + bt.w[e] + off);
+                    }
+                }
+                orow[j] = gemm::encode_acc_i128(
+                    acc, P16_ACC_FRAC_OFFSET, fmt);
+            }
+        }
+    } else {
+        for j in 0..n {
+            let q = &mut s.quires(fmt, 1)[0];
+            q.clear();
+            if let Some(bd) = bd {
+                let sb = bd.sig[j];
+                if sb != 0 {
+                    q.mac_raw(sb.unsigned_abs() as u128, bd.w[j],
+                              sb < 0);
+                }
+            }
+            for e in bt.row_entries(j) {
+                let sb = bt.sig[e];
+                if sb == 0 {
+                    continue;
+                }
+                let idx = i * k + bt.col_idx[e];
+                let sa = a.sig[idx];
+                let p = sa * sb;
+                if p != 0 {
+                    q.mac_raw(p.unsigned_abs() as u128,
+                              a.w[idx] + bt.w[e], p < 0);
+                }
+            }
+            orow[j] = q.to_posit();
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------
+
+/// Descending-nnz row permutation — the Spada-style row-length-sorted
+/// schedule: the expensive rows are claimed first, the cheap tail
+/// backfills the stragglers. Stable sort → deterministic order.
+fn nnz_order(a: &SparsePlan) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..a.rows).collect();
+    order.sort_by_key(|&r| std::cmp::Reverse(a.row_nnz(r)));
+    order
+}
+
+/// Row dispatch shared by every sparse front end: positions on a
+/// work-stealing [`RowQueue`] map through an optional permutation to
+/// output rows; each claimed row is computed by `row_fn` into its
+/// exclusive window and (for the fused paths) finished by `hook`
+/// while cache-hot. Scheduling changes wall-clock only — each row is
+/// written by exactly one job, and every accumulator is exact.
+#[allow(clippy::too_many_arguments)]
+fn run_sparse_rows(
+    m: usize, n: usize, out: &mut [u64], threads: usize,
+    tile: TileConfig, order: Option<&[usize]>,
+    row_fn: &(dyn Fn(usize, &mut [u64], &mut Scratch) + Sync),
+    hook: Option<&(dyn Fn(usize, &mut [u64]) + Sync)>,
+) -> DispatchStats {
+    let t = threads.clamp(1, m.max(1));
+    if t <= 1 {
+        let mut s = Scratch::new();
+        for p in 0..m {
+            let r = order.map_or(p, |o| o[p]);
+            let win = &mut out[r * n..(r + 1) * n];
+            row_fn(r, win, &mut s);
+            if let Some(h) = hook {
+                h(r, win);
+            }
+        }
+        return DispatchStats { chunk_rows: m.max(1), chunks: 1,
+                               per_job_claims: vec![1] };
+    }
+    let chunk_rows = if tile.steal_rows > 0 {
+        tile.steal_rows.min(m).max(1)
+    } else {
+        (m / (t * 4)).max(1)
+    };
+    let queue = RowQueue::new(m, chunk_rows);
+    let claims: Vec<AtomicUsize> =
+        (0..t).map(|_| AtomicUsize::new(0)).collect();
+    let shared = SharedOut(out.as_mut_ptr());
+    {
+        let (queue, claims, shared) = (&queue, &claims, &shared);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(t);
+        for ti in 0..t {
+            jobs.push(Box::new(move || {
+                let mut s = Scratch::new();
+                while let Some((p0, p1)) = queue.claim() {
+                    claims[ti].fetch_add(1, Ordering::Relaxed);
+                    for p in p0..p1 {
+                        let r = order.map_or(p, |o| o[p]);
+                        // SAFETY: the queue hands out each position
+                        // at most once and `order` is a permutation,
+                        // so row r's window is exclusive to this
+                        // claim; the pool scope outlives every job.
+                        let win = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                shared.0.add(r * n), n)
+                        };
+                        row_fn(r, win, &mut s);
+                        if let Some(h) = hook {
+                            h(r, win);
+                        }
+                    }
+                }
+            }));
+        }
+        pool::global().run_scoped(jobs);
+    }
+    let stats = DispatchStats {
+        chunk_rows,
+        chunks: queue.chunks(),
+        per_job_claims: claims
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect(),
+    };
+    gemm::record_dispatch(&stats);
+    stats
+}
+
+// ---------------------------------------------------------------
+// NaR poisoning
+// ---------------------------------------------------------------
+
+/// NaR poisoning for sparse-A × dense-B: a NaR anywhere in A's row
+/// `i`, B's column `j`, or the bias poisons output (i, j) — the
+/// quire's absorbing NaR, identical to the dense pass on the
+/// densified operands.
+fn apply_nar_a(a: &SparsePlan, b: &DecodedPlan, bd: Option<&BiasDec>,
+               out: &mut [u64]) {
+    let bias_nar = bd.is_some_and(|d| d.has_nar);
+    if !(a.has_nar || b.has_nar || bias_nar) {
+        return;
+    }
+    let (m, n) = (a.rows, b.cols);
+    let nar = a.fmt.nar();
+    for i in 0..m {
+        let row_nar = a.has_nar && a.nar_rows[i];
+        for j in 0..n {
+            if row_nar
+                || (b.has_nar && b.nar_cols[j])
+                || (bias_nar && bd.unwrap().nar[j])
+            {
+                out[i * n + j] = nar;
+            }
+        }
+    }
+}
+
+/// NaR poisoning for dense-A × sparse-Bᵀ: `bt.nar_rows[j]` is true
+/// exactly when B's column `j` holds a NaR (see
+/// [`SparsePlan::from_dense_transposed`]), so this is the dense
+/// `nar_cols` pass verbatim.
+fn apply_nar_bt(a: &DecodedPlan, bt: &SparsePlan,
+                bd: Option<&BiasDec>, out: &mut [u64]) {
+    let bias_nar = bd.is_some_and(|d| d.has_nar);
+    if !(a.has_nar || bt.has_nar || bias_nar) {
+        return;
+    }
+    let (m, n) = (a.rows, bt.rows);
+    let nar = a.fmt.nar();
+    for i in 0..m {
+        let row_nar = a.has_nar && a.nar_rows[i];
+        for j in 0..n {
+            if row_nar
+                || (bt.has_nar && bt.nar_rows[j])
+                || (bias_nar && bd.unwrap().nar[j])
+            {
+                out[i * n + j] = nar;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Front ends
+// ---------------------------------------------------------------
+
+fn check_shapes_a(a: &SparsePlan, b: &DecodedPlan,
+                  bias: Option<&[u64]>) {
+    assert_eq!(a.fmt, b.fmt, "operand formats differ");
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), b.cols, "bias length");
+    }
+}
+
+fn check_shapes_bt(a: &DecodedPlan, bt: &SparsePlan,
+                   bias: Option<&[u64]>) {
+    assert_eq!(a.fmt, bt.fmt, "operand formats differ");
+    assert_eq!(a.cols, bt.cols,
+               "inner dimensions differ (bt holds the CSR of B's \
+                transpose: bt.cols must equal k)");
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), bt.rows, "bias length");
+    }
+}
+
+/// Sparse-A (CSR) × dense-B GEMM [+ bias] under the installed
+/// process-default [`KernelConfig`]: one rounding per output,
+/// **bit-identical** to [`gemm::gemm`] on [`SparsePlan::densify`]'d
+/// A (the module-level contract). Returns the m×n output words.
+pub fn spgemm(a: &SparsePlan, b: &DecodedPlan, bias: Option<&[u64]>)
+              -> Vec<u64> {
+    spgemm_with_config(a, b, bias, &settings::current())
+}
+
+/// [`spgemm`] under an explicit [`KernelConfig`] — threads, tile
+/// geometry and density-bucketed autotuning
+/// ([`super::autotune::classify_sparse`]) resolve exactly like the
+/// dense front end; every outcome is bit-identical.
+pub fn spgemm_with_config(a: &SparsePlan, b: &DecodedPlan,
+                          bias: Option<&[u64]>, cfg: &KernelConfig)
+                          -> Vec<u64> {
+    check_shapes_a(a, b, bias);
+    let (m, n) = (a.rows, b.cols);
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    gemm::record_gemm();
+    CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
+    let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let (tile, _path) =
+        autotune::resolve_sparse(cfg, a.fmt, a.rows, a.cols, a.nnz());
+    let eff_k = (a.nnz() / m).max(1);
+    let t = gemm::threads_for(m, eff_k, n, cfg);
+    let mut out = vec![0u64; m * n];
+    let order = nnz_order(a);
+    let bd_ref = bd.as_ref();
+    run_sparse_rows(m, n, &mut out, t, tile, Some(&order),
+                    &|r, win, s| sparse_row(a, b, bd_ref, r, win,
+                                            tile, s),
+                    None);
+    apply_nar_a(a, b, bd_ref, &mut out);
+    out
+}
+
+/// [`spgemm`] with the fused epilogue, allocating a fresh plan —
+/// steady-state callers use [`spgemm_fused_into`].
+pub fn spgemm_fused(a: &SparsePlan, b: &DecodedPlan,
+                    bias: Option<&[u64]>, epi: Epilogue,
+                    cfg: &KernelConfig) -> DecodedPlan {
+    let mut out = DecodedPlan::empty(a.fmt);
+    spgemm_fused_into(a, b, bias, epi, cfg, &mut out);
+    out
+}
+
+/// Fused sparse-A GEMM into a recycled plan buffer: bias in the exact
+/// accumulator, one rounding, word-level activation, direct planar
+/// emission — the [`Epilogue`] contract of [`gemm::gemm_fused_into`],
+/// bit-identical to [`spgemm`] + [`gemm::activate_words`] +
+/// `DecodedPlan::from_words`. NaR operands take the masked slow path
+/// (poison, activate, planar refill), exactly like the dense kernel.
+pub fn spgemm_fused_into(a: &SparsePlan, b: &DecodedPlan,
+                         bias: Option<&[u64]>, epi: Epilogue,
+                         cfg: &KernelConfig, out: &mut DecodedPlan) {
+    check_shapes_a(a, b, bias);
+    let (m, n) = (a.rows, b.cols);
+    out.reset(a.fmt, m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    gemm::record_gemm();
+    CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
+    gemm::record_fused((m * n) as u64);
+    let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let bd_ref = bd.as_ref();
+    let (tile, _path) =
+        autotune::resolve_sparse(cfg, a.fmt, a.rows, a.cols, a.nnz());
+    let eff_k = (a.nnz() / m).max(1);
+    let t = gemm::threads_for(m, eff_k, n, cfg);
+    let order = nnz_order(a);
+
+    let nar_possible = a.has_nar
+        || b.has_nar
+        || bd_ref.is_some_and(|d| d.has_nar);
+    if nar_possible {
+        run_sparse_rows(m, n, &mut out.words, t, tile, Some(&order),
+                        &|r, win, s| sparse_row(a, b, bd_ref, r, win,
+                                                tile, s),
+                        None);
+        apply_nar_a(a, b, bd_ref, &mut out.words);
+        gemm::activate_words(&mut out.words, epi.act, a.fmt);
+        out.refill_planar_from_words();
+        return;
+    }
+
+    let fmt = a.fmt;
+    let act = epi.act;
+    let DecodedPlan { words, words8, sig, w, .. } = out;
+    let sink = gemm::PlanarSink {
+        sig: sig.as_mut_ptr(),
+        w: w.as_mut_ptr(),
+        w8: if words8.is_empty() {
+            std::ptr::null_mut()
+        } else {
+            words8.as_mut_ptr()
+        },
+    };
+    let hook = move |r0: usize, win: &mut [u64]| {
+        // SAFETY: `win` is a row window this job owns exclusively;
+        // its planar windows share that exclusivity.
+        let (sig_w, w_w, w8_w) =
+            unsafe { sink.window(r0 * n, win.len()) };
+        simd::epilogue_window(fmt, act, win, sig_w, w_w, w8_w);
+    };
+    run_sparse_rows(m, n, words, t, tile, Some(&order),
+                    &|r, win, s| sparse_row(a, b, bd_ref, r, win,
+                                            tile, s),
+                    Some(&hook));
+}
+
+/// Dense-A × sparse-Bᵀ GEMM [+ bias] — the pruned-weight
+/// orientation: `bt` holds the CSR of B's transpose (one compressed
+/// row per output column), so `out[i][j] = Σ A[i,kk]·B[kk,j]` walks
+/// `bt`'s row `j`. Bit-identical to [`gemm::gemm_with_config`] on
+/// the densified B.
+pub fn spgemm_bt(a: &DecodedPlan, bt: &SparsePlan,
+                 bias: Option<&[u64]>, cfg: &KernelConfig)
+                 -> Vec<u64> {
+    check_shapes_bt(a, bt, bias);
+    let (m, n) = (a.rows, bt.rows);
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    gemm::record_gemm();
+    CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
+    let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let bd_ref = bd.as_ref();
+    let (tile, _path) = autotune::resolve_sparse(
+        cfg, a.fmt, bt.rows, bt.cols, bt.nnz());
+    let eff_k = (bt.nnz() / n).max(1);
+    let t = gemm::threads_for(m, eff_k, n, cfg);
+    let mut out = vec![0u64; m * n];
+    run_sparse_rows(m, n, &mut out, t, tile, None,
+                    &|r, win, s| bt_row(a, bt, bd_ref, r, win, s),
+                    None);
+    apply_nar_bt(a, bt, bd_ref, &mut out);
+    out
+}
+
+/// Fused [`spgemm_bt`] into a recycled plan buffer — what the fused
+/// [`crate::nn::exec::Session`] pipeline calls for layers whose
+/// weight density falls below the sparse threshold. Same [`Epilogue`]
+/// contract as [`spgemm_fused_into`].
+pub fn spgemm_bt_fused_into(a: &DecodedPlan, bt: &SparsePlan,
+                            bias: Option<&[u64]>, epi: Epilogue,
+                            cfg: &KernelConfig,
+                            out: &mut DecodedPlan) {
+    check_shapes_bt(a, bt, bias);
+    let (m, n) = (a.rows, bt.rows);
+    out.reset(a.fmt, m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    gemm::record_gemm();
+    CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
+    gemm::record_fused((m * n) as u64);
+    let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
+    let bd_ref = bd.as_ref();
+    let (tile, _path) = autotune::resolve_sparse(
+        cfg, a.fmt, bt.rows, bt.cols, bt.nnz());
+    let eff_k = (bt.nnz() / n).max(1);
+    let t = gemm::threads_for(m, eff_k, n, cfg);
+
+    let nar_possible = a.has_nar
+        || bt.has_nar
+        || bd_ref.is_some_and(|d| d.has_nar);
+    if nar_possible {
+        run_sparse_rows(m, n, &mut out.words, t, tile, None,
+                        &|r, win, s| bt_row(a, bt, bd_ref, r, win, s),
+                        None);
+        apply_nar_bt(a, bt, bd_ref, &mut out.words);
+        gemm::activate_words(&mut out.words, epi.act, a.fmt);
+        out.refill_planar_from_words();
+        return;
+    }
+
+    let fmt = a.fmt;
+    let act = epi.act;
+    let DecodedPlan { words, words8, sig, w, .. } = out;
+    let sink = gemm::PlanarSink {
+        sig: sig.as_mut_ptr(),
+        w: w.as_mut_ptr(),
+        w8: if words8.is_empty() {
+            std::ptr::null_mut()
+        } else {
+            words8.as_mut_ptr()
+        },
+    };
+    let hook = move |r0: usize, win: &mut [u64]| {
+        // SAFETY: exclusive row window (see spgemm_fused_into).
+        let (sig_w, w_w, w8_w) =
+            unsafe { sink.window(r0 * n, win.len()) };
+        simd::epilogue_window(fmt, act, win, sig_w, w_w, w8_w);
+    };
+    run_sparse_rows(m, n, words, t, tile, None,
+                    &|r, win, s| bt_row(a, bt, bd_ref, r, win, s),
+                    Some(&hook));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{from_f64, P16_FMT, P32_FMT, P8_FMT};
+    use crate::util::SplitMix64;
+
+    fn sparse_words(rng: &mut SplitMix64, len: usize, density_pct: u64,
+                    fmt: PositFormat) -> Vec<u64> {
+        (0..len)
+            .map(|_| {
+                if rng.below(100) < density_pct {
+                    from_f64(rng.wide(-4, 4), fmt)
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn from_dense_round_trips_through_densify() {
+        let mut rng = SplitMix64::new(11);
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for &d in &[0u64, 10, 50, 100] {
+                let words = sparse_words(&mut rng, 7 * 9, d, fmt);
+                let p = DecodedPlan::from_words(words, 7, 9, fmt);
+                let sp = SparsePlan::from_dense(&p);
+                let back = sp.densify();
+                assert_eq!(back.words, p.words, "{fmt:?} d={d}");
+                assert_eq!(back.sig, p.sig);
+                assert_eq!(back.w, p.w);
+                assert_eq!(sp.nnz(),
+                           p.words.iter().filter(|&&w| w != 0).count());
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_transposed_is_the_transpose() {
+        let mut rng = SplitMix64::new(12);
+        let words = sparse_words(&mut rng, 5 * 8, 40, P16_FMT);
+        let p = DecodedPlan::from_words(words, 5, 8, P16_FMT);
+        let bt = SparsePlan::from_dense_transposed(&p);
+        assert_eq!((bt.rows, bt.cols), (8, 5));
+        let back = bt.densify();
+        for r in 0..5 {
+            for c in 0..8 {
+                assert_eq!(back.word(c, r), p.word(r, c),
+                           "transpose mismatch at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_csr_validates_structure() {
+        let fmt = P8_FMT;
+        // Wrong row_ptr length.
+        let e = SparsePlan::from_csr(2, 3, vec![0, 1], vec![0],
+                                     vec![0x40], fmt)
+            .unwrap_err();
+        assert!(e.contains("row_ptr"), "{e}");
+        // row_ptr must start at 0.
+        let e = SparsePlan::from_csr(1, 3, vec![1, 1], vec![],
+                                     vec![], fmt)
+            .unwrap_err();
+        assert!(e.contains("must be 0"), "{e}");
+        // Non-monotone row_ptr.
+        let e = SparsePlan::from_csr(2, 3, vec![0, 2, 1],
+                                     vec![0, 1, 2],
+                                     vec![0x40; 3], fmt);
+        assert!(e.is_err());
+        // Length mismatches.
+        let e = SparsePlan::from_csr(1, 3, vec![0, 2], vec![0],
+                                     vec![0x40, 0x40], fmt)
+            .unwrap_err();
+        assert!(e.contains("col_idx"), "{e}");
+        let e = SparsePlan::from_csr(1, 3, vec![0, 1], vec![0],
+                                     vec![], fmt)
+            .unwrap_err();
+        assert!(e.contains("words"), "{e}");
+        // Out-of-range column.
+        let e = SparsePlan::from_csr(1, 3, vec![0, 1], vec![3],
+                                     vec![0x40], fmt)
+            .unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        // Duplicate column index.
+        let e = SparsePlan::from_csr(1, 3, vec![0, 2], vec![1, 1],
+                                     vec![0x40, 0x40], fmt)
+            .unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        // Descending column indices.
+        let e = SparsePlan::from_csr(1, 3, vec![0, 2], vec![2, 0],
+                                     vec![0x40, 0x40], fmt)
+            .unwrap_err();
+        assert!(e.contains("ascending"), "{e}");
+        // A valid plan, including an explicit stored zero.
+        let sp = SparsePlan::from_csr(2, 3, vec![0, 2, 2],
+                                      vec![0, 2],
+                                      vec![0x40, 0x00], fmt)
+            .unwrap();
+        assert_eq!(sp.nnz(), 2);
+        assert_eq!(sp.row_nnz(0), 2);
+        assert_eq!(sp.row_nnz(1), 0);
+        assert_eq!(sp.sig[1], 0, "explicit zero decodes inert");
+    }
+
+    #[test]
+    fn from_csr_tracks_nar_per_row() {
+        let fmt = P8_FMT;
+        let sp = SparsePlan::from_csr(
+            2, 2, vec![0, 1, 2], vec![0, 1],
+            vec![fmt.nar(), 0x40], fmt)
+            .unwrap();
+        assert!(sp.has_nar);
+        assert_eq!(sp.nar_rows, vec![true, false]);
+        assert_eq!(sp.sig[0], 0, "NaR stores sig 0");
+    }
+
+    #[test]
+    fn row_classes() {
+        assert_eq!(classify_row(P16_FMT, 0), RowClass::Empty);
+        assert_eq!(classify_row(P16_FMT, 5), RowClass::Direct);
+        assert_eq!(classify_row(P16_FMT, lut::P16_CHUNK + 1),
+                   RowClass::DeepFold);
+        // Only P16 has the i128 headroom bound.
+        assert_eq!(classify_row(P8_FMT, lut::P16_CHUNK + 1),
+                   RowClass::Direct);
+        assert_eq!(classify_row(P32_FMT, lut::P16_CHUNK + 1),
+                   RowClass::Direct);
+    }
+
+    #[test]
+    fn density_and_degenerate_shapes() {
+        let p = DecodedPlan::from_words(vec![], 0, 4, P8_FMT);
+        let sp = SparsePlan::from_dense(&p);
+        assert_eq!(sp.nnz(), 0);
+        assert_eq!(sp.density(), 0.0);
+        let pb = DecodedPlan::from_words(vec![0x40u64; 12], 4, 3,
+                                         P8_FMT);
+        assert!(spgemm(&sp, &pb, None).is_empty());
+        // Single nonzero.
+        let one = SparsePlan::from_csr(3, 4, vec![0, 0, 1, 1],
+                                       vec![2], vec![0x40], P8_FMT)
+            .unwrap();
+        assert_eq!(one.nnz(), 1);
+        assert!((one.density() - 1.0 / 12.0).abs() < 1e-12);
+        let dense = one.densify();
+        let b = DecodedPlan::from_words(vec![0x40u64; 4 * 2], 4, 2,
+                                        P8_FMT);
+        assert_eq!(spgemm(&one, &b, None),
+                   gemm::gemm(&dense, &b, None));
+    }
+
+    #[test]
+    fn sparse_matches_dense_oracle_quick() {
+        // The in-module smoke version of the tests/sparse_gemm.rs
+        // sweep: random sparsity, all three formats, bias on/off.
+        let mut rng = SplitMix64::new(77);
+        for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+            for &d in &[0u64, 15, 60, 100] {
+                let (m, k, n) = (6, 11, 7);
+                let aw = sparse_words(&mut rng, m * k, d, fmt);
+                let pa = DecodedPlan::from_words(aw, m, k, fmt);
+                let sa = SparsePlan::from_dense(&pa);
+                let bw: Vec<u64> = (0..k * n)
+                    .map(|_| from_f64(rng.wide(-3, 3), fmt))
+                    .collect();
+                let pb = DecodedPlan::from_words(bw, k, n, fmt);
+                let bias: Vec<u64> = (0..n)
+                    .map(|_| from_f64(rng.wide(-2, 2), fmt))
+                    .collect();
+                for bs in [None, Some(bias.as_slice())] {
+                    assert_eq!(spgemm(&sa, &pb, bs),
+                               gemm::gemm(&pa, &pb, bs),
+                               "{fmt:?} d={d} bias={}", bs.is_some());
+                }
+                // Bᵀ orientation against the same oracle.
+                let bt = SparsePlan::from_dense_transposed(&pb);
+                assert_eq!(spgemm_bt(&pa, &bt, Some(&bias),
+                                     &settings::current()),
+                           gemm::gemm(&pa, &pb, Some(&bias)),
+                           "{fmt:?} d={d} bt");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_thread_counts_agree() {
+        let mut rng = SplitMix64::new(88);
+        let fmt = P16_FMT;
+        let (m, k, n) = (13, 9, 11);
+        let aw = sparse_words(&mut rng, m * k, 30, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let sa = SparsePlan::from_dense(&pa);
+        let bw: Vec<u64> = (0..k * n)
+            .map(|_| from_f64(rng.wide(-3, 3), fmt))
+            .collect();
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        let base = spgemm_with_config(&sa, &pb, None,
+                                      &KernelConfig::DEFAULT);
+        for threads in [1usize, 2, 3, 8] {
+            let cfg = KernelConfig {
+                threads: Some(threads),
+                ..KernelConfig::DEFAULT
+            };
+            assert_eq!(spgemm_with_config(&sa, &pb, None, &cfg), base,
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sparse_counters_move() {
+        let fmt = P8_FMT;
+        let pa = DecodedPlan::from_words(vec![0x40; 6], 2, 3, fmt);
+        let sa = SparsePlan::from_dense(&pa);
+        let pb = DecodedPlan::from_words(vec![0x40; 6], 3, 2, fmt);
+        let before = gemm::counters();
+        let _ = spgemm(&sa, &pb, None);
+        let after = gemm::counters();
+        // >= : other tests run concurrently and also count.
+        assert!(after.sparse_gemms >= before.sparse_gemms + 1);
+        assert!(after.gemms >= before.gemms + 1);
+    }
+}

@@ -49,6 +49,21 @@
 //! policy (asserted in `tests/fused_pipeline.rs`), just slower and
 //! allocation-heavy; it exists to cross-check the fusion.
 //!
+//! ## Pruned models (sparse weight routing)
+//!
+//! Magnitude-pruned layers keep most weight words at exactly zero.
+//! When a layer's quantized word density falls below
+//! [`Session::set_sparse_threshold`] (default 0.25), the session
+//! builds a CSR plan of the weight transpose once
+//! ([`crate::kernel::SparsePlan::from_dense_transposed`], cached
+//! beside the dense plan) and routes the layer through
+//! [`crate::kernel::spgemm_bt`] / `spgemm_bt_fused_into` — same
+//! epilogue, same single rounding, **bit-identical logits** to the
+//! dense kernel on the same words (zero terms are exact no-ops in
+//! the accumulator; `tests/fused_pipeline.rs` pins this per
+//! density). The threshold is purely a performance crossover knob
+//! (`SPADE_SPARSE_THRESHOLD` at the api edge).
+//!
 //! ## Plan lifecycle and caching
 //!
 //! [`Session`] is the stateful entry point: it caches each weight
@@ -86,7 +101,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::engine::Mode;
-use crate::kernel::{self, DecodedPlan, Epilogue, KernelConfig};
+use crate::kernel::{self, DecodedPlan, Epilogue, KernelConfig,
+                    SparsePlan};
 use crate::posit::Quire;
 use crate::systolic::{ArrayConfig, GemmStats, SystolicGemm};
 
@@ -177,6 +193,10 @@ fn reshape4(y: Act, n: usize, ho: usize, wo: usize, c: usize) -> Act {
 pub struct Session<'m> {
     model: Cow<'m, Model>,
     weight_plans: HashMap<(usize, Mode), Arc<DecodedPlan>>,
+    /// CSR plans for pruned weight tensors, keyed like
+    /// `weight_plans`. `None` records "checked, too dense — stay on
+    /// the dense kernel", so the density scan runs once per key.
+    sparse_plans: HashMap<(usize, Mode), Option<Arc<SparsePlan>>>,
     bias_words: HashMap<(usize, Mode), Arc<Vec<u64>>>,
     /// Kernel config this session's GEMMs run under (captured from
     /// the process default at construction; override with
@@ -188,6 +208,15 @@ pub struct Session<'m> {
     /// layer-wise escape hatch: same word-exact math, interior
     /// re-decode per layer. Bit-identical either way.
     fused: bool,
+    /// Density cutoff for the sparse weight path: a layer whose
+    /// quantized weight words are less than this fraction nonzero
+    /// routes through the CSR SpGEMM ([`crate::kernel::spgemm_bt`]).
+    /// `0.0` disables sparse entirely, `1.0` forces it for any
+    /// weight with at least one zero. Results are bit-identical
+    /// either way (the kernel contract); this knob is purely a
+    /// performance crossover. Default 0.25, matching
+    /// `EngineConfig::sparse_threshold`.
+    sparse_threshold: f64,
     /// Recycled inter-layer plan buffers (the ping-pong pool): fused
     /// stages write into these via `*_into` calls, so steady-state
     /// inference allocates nothing per layer.
@@ -204,9 +233,11 @@ impl<'m> Session<'m> {
         Session {
             model: Cow::Borrowed(model),
             weight_plans: HashMap::new(),
+            sparse_plans: HashMap::new(),
             bias_words: HashMap::new(),
             kernel_cfg: kernel::settings::current(),
             fused: true,
+            sparse_threshold: 0.25,
             scratch: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
@@ -218,9 +249,11 @@ impl<'m> Session<'m> {
         Session {
             model: Cow::Owned(model),
             weight_plans: HashMap::new(),
+            sparse_plans: HashMap::new(),
             bias_words: HashMap::new(),
             kernel_cfg: kernel::settings::current(),
             fused: true,
+            sparse_threshold: 0.25,
             scratch: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
@@ -259,6 +292,30 @@ impl<'m> Session<'m> {
     /// Whether the fused planar pipeline is enabled.
     pub fn fused(&self) -> bool {
         self.fused
+    }
+
+    /// Set the weight-density cutoff below which a layer routes
+    /// through the CSR SpGEMM (default 0.25; `0.0` disables the
+    /// sparse path, `1.0` takes it whenever a weight has any zero).
+    /// Bit-identical results either way — purely a perf crossover.
+    /// The `api` facade routes `SPADE_SPARSE_THRESHOLD` /
+    /// `EngineConfig::sparse_threshold` here. Clears the cached
+    /// routing decisions so the new cutoff applies to every layer.
+    pub fn set_sparse_threshold(&mut self, threshold: f64) {
+        self.sparse_threshold = threshold;
+        self.sparse_plans.clear();
+    }
+
+    /// [`Session::set_sparse_threshold`], fluent.
+    pub fn with_sparse_threshold(mut self, threshold: f64)
+                                 -> Session<'m> {
+        self.set_sparse_threshold(threshold);
+        self
+    }
+
+    /// The sparse-routing density cutoff.
+    pub fn sparse_threshold(&self) -> f64 {
+        self.sparse_threshold
     }
 
     /// The kernel config this session's GEMMs run under.
@@ -447,6 +504,33 @@ impl<'m> Session<'m> {
         Ok(plan)
     }
 
+    /// Cached sparse routing decision + CSR plan for (layer, mode).
+    /// Scans the already-decoded dense plan's word density once; a
+    /// layer below the threshold gets a CSR-of-Wᵀ plan (the
+    /// `spgemm_bt` orientation: x · Wᵀᵀ = x · W), anything else is
+    /// remembered as "dense". NaR words count as stored nonzeros —
+    /// they must survive into the sparse structure to poison rows.
+    fn sparse_weight_plan(&mut self, layer_idx: usize, mode: Mode,
+                          wplan: &DecodedPlan)
+                          -> Option<Arc<SparsePlan>> {
+        if let Some(s) = self.sparse_plans.get(&(layer_idx, mode)) {
+            return s.clone();
+        }
+        let stored =
+            wplan.words.iter().filter(|&&w| w != 0).count();
+        let total = wplan.words.len().max(1);
+        let plan = if (stored as f64) < self.sparse_threshold
+                      * total as f64
+        {
+            Some(Arc::new(SparsePlan::from_dense_transposed(wplan)))
+        } else {
+            None
+        };
+        self.sparse_plans
+            .insert((layer_idx, mode), plan.clone());
+        plan
+    }
+
     /// Cached quantized bias words for (layer, mode).
     fn bias_plan(&mut self, layer_idx: usize, mode: Mode)
                  -> Result<Arc<Vec<u64>>> {
@@ -520,6 +604,14 @@ impl<'m> Session<'m> {
                 "layer{layer_idx}: weight rows {} != k {k}",
                 wplan.rows);
         let nn = wplan.cols;
+        // Pruned layers below the density cutoff route through the
+        // CSR SpGEMM (bit-identical; see `sparse_weight_plan`).
+        let swplan = match backend {
+            Backend::Posit => {
+                self.sparse_weight_plan(layer_idx, mode, &wplan)
+            }
+            _ => None,
+        };
 
         // The A operand, planar, at the layer's format: the input
         // edge quantizes once; interlayer plans arrive already planar
@@ -541,23 +633,37 @@ impl<'m> Session<'m> {
             Backend::F32 => unreachable!(),
             Backend::Posit => {
                 if self.fused {
-                    // Fused hot path: bias + ReLU + single rounding in
-                    // the cache-hot epilogue, planar fields out,
-                    // recycled buffer in — zero interior round-trips,
-                    // zero steady-state allocation.
+                    // Fused hot path: bias + activation + single
+                    // rounding in the cache-hot epilogue, planar
+                    // fields out, recycled buffer in — zero interior
+                    // round-trips, zero steady-state allocation.
+                    // Pruned layers take the CSR flavor of the same
+                    // epilogue.
                     let mut outp = self.grab_plan();
-                    kernel::gemm_fused_into(
-                        &pa, &wplan, Some(bwords.as_slice()),
-                        Epilogue { relu }, &self.kernel_cfg,
-                        &mut outp);
+                    let epi = Epilogue::from_relu(relu);
+                    if let Some(sw) = &swplan {
+                        kernel::spgemm_bt_fused_into(
+                            &pa, sw, Some(bwords.as_slice()), epi,
+                            &self.kernel_cfg, &mut outp);
+                    } else {
+                        kernel::gemm_fused_into(
+                            &pa, &wplan, Some(bwords.as_slice()),
+                            epi, &self.kernel_cfg, &mut outp);
+                    }
                     Act::Plan(outp, vec![m, nn])
                 } else {
                     // Layer-wise escape hatch: same words, but the
                     // output is re-decoded into a fresh plan — the
                     // interior round-trip fusion eliminates.
-                    let mut words = kernel::gemm_with_config(
-                        &pa, &wplan, Some(bwords.as_slice()),
-                        &self.kernel_cfg);
+                    let mut words = if let Some(sw) = &swplan {
+                        kernel::spgemm_bt(
+                            &pa, sw, Some(bwords.as_slice()),
+                            &self.kernel_cfg)
+                    } else {
+                        kernel::gemm_with_config(
+                            &pa, &wplan, Some(bwords.as_slice()),
+                            &self.kernel_cfg)
+                    };
                     if relu {
                         kernel::relu_words(&mut words, fmt);
                     }
@@ -828,6 +934,47 @@ mod tests {
         let (y_fresh, _) =
             forward_policy(&m, &x, &p8, Backend::Posit).unwrap();
         assert_eq!(y_cached.data, y_fresh.data);
+    }
+
+    #[test]
+    fn sparse_routing_is_bit_identical_and_counted() {
+        // Zero out most of the tiny model's weights by hand, then run
+        // the same model once with the sparse path forced on
+        // (threshold 1.0 takes CSR whenever any zero exists) and once
+        // forced off (threshold 0.0). Logits must agree bitwise on
+        // every backend flavor, and the sparse GEMM counter must move
+        // only for the sparse-routed session.
+        let mut m = tiny_model();
+        for name in ["layer0/w", "layer3/w"] {
+            let t = m.params.get_mut(name).unwrap();
+            for (i, v) in t.data.iter_mut().enumerate() {
+                if i % 4 != 0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let x = rand_input(3, 31);
+        for prec in [Precision::Posit(Mode::P8x4),
+                     Precision::Posit(Mode::P16x2),
+                     Precision::Posit(Mode::P32x1)] {
+            for fused in [true, false] {
+                let mut dense = Session::new(&m)
+                    .with_fused(fused)
+                    .with_sparse_threshold(0.0);
+                let mut sparse = Session::new(&m)
+                    .with_fused(fused)
+                    .with_sparse_threshold(1.0);
+                let (yd, _) =
+                    dense.forward(&x, prec, Backend::Posit).unwrap();
+                let before = kernel::counters().sparse_gemms;
+                let (ys, _) =
+                    sparse.forward(&x, prec, Backend::Posit).unwrap();
+                let after = kernel::counters().sparse_gemms;
+                assert_eq!(ys.data, yd.data, "{prec:?} fused={fused}");
+                assert!(after >= before + 2,
+                        "sparse path did not run: {before} -> {after}");
+            }
+        }
     }
 
     #[test]

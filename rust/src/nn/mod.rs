@@ -13,7 +13,9 @@
 //!   precision policy (the paper's layer-wise heterogeneity);
 //! * [`exec`] — backends: f32 reference, functional posit (systolic
 //!   fast path with cycle/energy stats), quire-exact posit (validation);
-//! * [`weights`] — SPDW container loader.
+//! * [`weights`] — SPDW container loader + magnitude pruning (the
+//!   producer of the sparse weight tensors [`exec`] routes through
+//!   the CSR SpGEMM).
 
 pub mod exec;
 pub mod layers;
@@ -24,6 +26,7 @@ pub mod tensor;
 pub mod weights;
 
 pub use exec::{Backend, NetStats, Session};
+pub use weights::{magnitude_prune, prune_model};
 pub use policy::{search as policy_search, PolicyResult};
 pub use model::{LayerSpec, Model, ModelSpec, Precision};
 pub use tensor::Tensor;

@@ -1,7 +1,9 @@
 //! SPDW weight container loader — mirror of
 //! `python/compile/weights_io.py` (little-endian: magic 'SPDW',
 //! u32 version=1, u32 count, then per tensor: u16 name_len, name,
-//! u8 ndim, u32 dims[], f32 data).
+//! u8 ndim, u32 dims[], f32 data) — plus the magnitude-pruning
+//! helper that feeds the sparse inference path
+//! (see `nn::exec` "Pruned models").
 
 use std::collections::BTreeMap;
 use std::io::Read;
@@ -9,7 +11,48 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::model::Model;
 use super::tensor::Tensor;
+
+/// Magnitude-prune `data` in place: keep the `density` fraction of
+/// entries with the largest `|value|` (at least one when
+/// `density > 0` and the slice is nonempty), zero the rest.
+/// Deterministic: ties on magnitude break toward the lower index, so
+/// the same tensor always prunes the same way. `density <= 0` zeros
+/// everything; `density >= 1` is a no-op.
+pub fn magnitude_prune(data: &mut [f32], density: f64) {
+    if data.is_empty() || density >= 1.0 {
+        return;
+    }
+    if density <= 0.0 {
+        data.fill(0.0);
+        return;
+    }
+    let keep = ((density * data.len() as f64).ceil() as usize)
+        .clamp(1, data.len());
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    // total_cmp is a total order (NaN sorts above infinities, so NaN
+    // entries survive pruning and stay visible downstream as NaR).
+    order.sort_by(|&i, &j| {
+        data[j].abs()
+            .total_cmp(&data[i].abs())
+            .then(i.cmp(&j))
+    });
+    for &i in &order[keep..] {
+        data[i] = 0.0;
+    }
+}
+
+/// Magnitude-prune every MAC weight tensor (`layer*/w`) of a model
+/// to the given keep-density; biases stay dense (they are O(out),
+/// not worth sparsifying, and the sparse kernel takes them densely).
+pub fn prune_model(model: &mut Model, density: f64) {
+    for (name, t) in model.params.iter_mut() {
+        if name.ends_with("/w") {
+            magnitude_prune(&mut t.data, density);
+        }
+    }
+}
 
 /// Load an SPDW file into name -> tensor.
 pub fn load_spdw(path: &Path) -> Result<BTreeMap<String, Tensor>> {
@@ -66,6 +109,48 @@ pub fn load_model_weights(model: &str) -> Result<BTreeMap<String, Tensor>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn magnitude_prune_keeps_largest_and_is_deterministic() {
+        let mut v = vec![0.5, -3.0, 0.1, 2.0, -0.2, 1.0];
+        magnitude_prune(&mut v, 0.5); // keep ceil(3) = 3
+        assert_eq!(v, vec![0.0, -3.0, 0.0, 2.0, 0.0, 1.0]);
+
+        // Ties break toward the lower index.
+        let mut t = vec![1.0, -1.0, 1.0, 1.0];
+        magnitude_prune(&mut t, 0.5);
+        assert_eq!(t, vec![1.0, -1.0, 0.0, 0.0]);
+
+        // Degenerate densities.
+        let mut z = vec![1.0, 2.0];
+        magnitude_prune(&mut z, 0.0);
+        assert_eq!(z, vec![0.0, 0.0]);
+        let mut d = vec![1.0, 2.0];
+        magnitude_prune(&mut d, 1.0);
+        assert_eq!(d, vec![1.0, 2.0]);
+        // density > 0 keeps at least one entry.
+        let mut one = vec![0.3, 0.7, 0.1];
+        magnitude_prune(&mut one, 0.01);
+        assert_eq!(one, vec![0.0, 0.7, 0.0]);
+        let mut empty: Vec<f32> = Vec::new();
+        magnitude_prune(&mut empty, 0.5);
+    }
+
+    #[test]
+    fn prune_model_touches_weights_not_biases() {
+        let mut m = Model::synthetic("prune");
+        let b0: Vec<f32> = m.params["layer0/b"].data.clone();
+        prune_model(&mut m, 0.1);
+        assert_eq!(m.params["layer0/b"].data, b0);
+        for name in ["layer0/w", "layer3/w", "layer4/w"] {
+            let t = &m.params[name];
+            let nz = t.data.iter().filter(|v| **v != 0.0).count();
+            let keep =
+                (0.1f64 * t.data.len() as f64).ceil() as usize;
+            assert!(nz <= keep, "{name}: {nz} > {keep}");
+        }
+        m.validate().unwrap();
+    }
 
     #[test]
     fn loads_trained_mlp() {

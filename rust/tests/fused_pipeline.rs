@@ -14,7 +14,8 @@ use std::sync::Mutex;
 
 use spade::engine::Mode;
 use spade::kernel::{self, DecodedPlan, Epilogue, KernelConfig};
-use spade::nn::{exec, Backend, Model, Precision, Session, Tensor};
+use spade::nn::{exec, prune_model, Backend, Model, Precision,
+                Session, Tensor};
 use spade::posit::{from_f64, PositFormat, P16_FMT, P32_FMT, P8_FMT};
 use spade::util::SplitMix64;
 
@@ -92,7 +93,7 @@ fn relu_epilogue_at_maxpos_minpos_boundaries() {
         let b = DecodedPlan::from_words(vec![one], 1, 1, fmt);
         let cfg = KernelConfig::DEFAULT;
         let fused = kernel::gemm_fused(&a, &b, None,
-                                       Epilogue { relu: true }, &cfg);
+                                       Epilogue::RELU, &cfg);
         assert_eq!(fused.words, vec![maxpos, minpos, 0, 0],
                    "{}b", fmt.nbits);
         // The layer-wise chain lands on the same words.
@@ -138,7 +139,7 @@ fn every_fusion_flavor_matches_the_layerwise_oracle() {
             {
                 let bw = bias_on.then_some(bias.as_slice());
                 let fused = kernel::gemm_fused(
-                    &a, &b, bw, Epilogue { relu }, &cfg);
+                    &a, &b, bw, Epilogue::from_relu(relu), &cfg);
                 let mut words =
                     kernel::gemm_with_config(&a, &b, bw, &cfg);
                 if relu {
@@ -202,6 +203,52 @@ fn mixed_policies_are_bit_identical_across_pipelines() {
         let (yl, _) =
             lw.forward_policy(&x, policy, Backend::Posit).unwrap();
         assert_same_logits(&yf, &yl, &format!("policy {pi}"));
+    }
+}
+
+#[test]
+fn pruned_models_route_sparse_and_stay_bit_identical() {
+    let _g = lock();
+    // Magnitude-prune the synthetic model at several keep-densities,
+    // then run each pruned model twice per (precision, pipeline
+    // flavor): once with sparse routing forced off (threshold 0.0 —
+    // the dense kernel on the pruned weights, the oracle) and once
+    // forced on (threshold 1.0 — the CSR SpGEMM). Logits must agree
+    // bit for bit, and the sparse-GEMM counter must move exactly one
+    // per MAC layer on the sparse run and not at all on the dense
+    // run.
+    let x = input(2, 555);
+    for density in [0.05, 0.2, 0.5] {
+        let mut m = Model::synthetic("pruned");
+        prune_model(&mut m, density);
+        for mode in MODES {
+            let prec = Precision::Posit(mode);
+            for fused in [true, false] {
+                let mut dense = Session::new(&m)
+                    .with_fused(fused)
+                    .with_sparse_threshold(0.0);
+                let mut sparse = Session::new(&m)
+                    .with_fused(fused)
+                    .with_sparse_threshold(1.0);
+
+                let before = kernel::counters().sparse_gemms;
+                let (yd, _) =
+                    dense.forward(&x, prec, Backend::Posit).unwrap();
+                let mid = kernel::counters().sparse_gemms;
+                let (ys, _) =
+                    sparse.forward(&x, prec, Backend::Posit).unwrap();
+                let after = kernel::counters().sparse_gemms;
+
+                let ctx = format!(
+                    "density {density} {mode:?} fused={fused}");
+                assert_same_logits(&ys, &yd, &ctx);
+                assert_eq!(mid - before, 0,
+                           "{ctx}: dense run must not touch the \
+                            sparse kernel");
+                assert_eq!(after - mid, 3,
+                           "{ctx}: one sparse GEMM per MAC layer");
+            }
+        }
     }
 }
 

@@ -1,0 +1,420 @@
+//! Sparse CSR SpGEMM vs the dense oracle — the bit-identity gate.
+//!
+//! The tentpole contract under test: every sparse kernel result
+//! (both orientations, word-level and fused, at every tested
+//! density, precision and epilogue) is **bit-identical** to the
+//! dense planar kernel run on the densified operands. This holds
+//! structurally — the dense inner loops already skip zero operands,
+//! and the exact integer/quire accumulators are associative, so the
+//! CSR walk feeds the same exact terms into the same single
+//! rounding — and this suite pins it, NaR poison and degenerate
+//! structures included.
+
+use spade::data::mtx::{synthetic_sparse, MtxMatrix};
+use spade::kernel::{self, Activation, DecodedPlan, Epilogue,
+                    KernelConfig, RowClass, SparsePlan};
+use spade::posit::{from_f64, PositFormat, P16_FMT, P32_FMT, P8_FMT};
+use spade::util::SplitMix64;
+
+/// Density sweep points in basis points (fraction × 10000): the
+/// ISSUE-mandated {0, 0.01, 0.1, 0.5, 1.0} grid.
+const DENSITIES_BP: [u64; 5] = [0, 100, 1000, 5000, 10_000];
+
+const FORMATS: [PositFormat; 3] = [P8_FMT, P16_FMT, P32_FMT];
+
+const ACTIVATIONS: [Activation; 3] =
+    [Activation::None, Activation::Relu, Activation::Relu6];
+
+/// Words with roughly `density_bp/10000` of entries nonzero (each a
+/// valid posit of wide exponent range), the rest exactly zero.
+fn sparse_words(rows: usize, cols: usize, fmt: PositFormat,
+                density_bp: u64, seed: u64) -> Vec<u64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..rows * cols)
+        .map(|_| {
+            if rng.below(10_000) < density_bp {
+                from_f64(rng.wide(-4, 4), fmt)
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// Fully-dense random operand.
+fn dense_plan(rows: usize, cols: usize, fmt: PositFormat, seed: u64)
+              -> DecodedPlan {
+    DecodedPlan::from_words(
+        sparse_words(rows, cols, fmt, 10_000, seed), rows, cols, fmt)
+}
+
+/// The oracle: dense word GEMM on the densified operands, then the
+/// same word-level activation — one rounding per output either way.
+fn oracle_words(pa: &DecodedPlan, pb: &DecodedPlan,
+                bias: Option<&[u64]>, act: Activation,
+                cfg: &KernelConfig) -> Vec<u64> {
+    let mut words = kernel::gemm_with_config(pa, pb, bias, cfg);
+    kernel::activate_words(&mut words, act, pa.fmt);
+    words
+}
+
+/// Assert a fused plan equals the oracle words in every planar field.
+fn assert_plan_matches(got: &DecodedPlan, want_words: &[u64],
+                       rows: usize, cols: usize, fmt: PositFormat,
+                       ctx: &str) {
+    let want =
+        DecodedPlan::from_words(want_words.to_vec(), rows, cols, fmt);
+    assert_eq!(got.words, want.words, "{ctx}: words");
+    assert_eq!(got.sig, want.sig, "{ctx}: sig");
+    assert_eq!(got.w, want.w, "{ctx}: w");
+    assert_eq!(got.words8, want.words8, "{ctx}: words8");
+    assert_eq!(got.has_nar, want.has_nar, "{ctx}: has_nar");
+}
+
+#[test]
+fn density_sweep_matches_dense_oracle_bit_for_bit() {
+    // density × precision × bias × activation, both orientations,
+    // word-level and fused — everything against the dense oracle.
+    let cfg = KernelConfig::DEFAULT;
+    let (m, k, n) = (9, 17, 7);
+    for (fi, fmt) in FORMATS.into_iter().enumerate() {
+        for (di, bp) in DENSITIES_BP.into_iter().enumerate() {
+            let seed = 1000 + (fi * 10 + di) as u64;
+            let aw = sparse_words(m, k, fmt, bp, seed);
+            let pa = DecodedPlan::from_words(aw, m, k, fmt);
+            let sa = SparsePlan::from_dense(&pa);
+            if bp == 0 {
+                assert_eq!(sa.nnz(), 0);
+            }
+            if bp == 10_000 {
+                assert_eq!(sa.nnz(), m * k, "fully dense as CSR");
+            }
+            // Round-trip: the densified sparse plan IS the operand.
+            assert_eq!(sa.densify().words, pa.words);
+
+            let pb = dense_plan(k, n, fmt, seed + 77);
+            // B sparse too, for the transposed orientation.
+            let bw = sparse_words(k, n, fmt, bp, seed + 177);
+            let pbs = DecodedPlan::from_words(bw, k, n, fmt);
+            let bt = SparsePlan::from_dense_transposed(&pbs);
+            let bias: Vec<u64> = (0..n)
+                .map(|j| from_f64(0.25 * j as f64 - 0.4, fmt))
+                .collect();
+
+            for bias_on in [false, true] {
+                let bsl = bias_on.then_some(bias.as_slice());
+                // Word-level, no epilogue.
+                let want =
+                    oracle_words(&pa, &pb, bsl, Activation::None,
+                                 &cfg);
+                let got = kernel::spgemm_with_config(&sa, &pb, bsl,
+                                                     &cfg);
+                let ctx = format!(
+                    "{}b bp={bp} bias={bias_on}", fmt.nbits);
+                assert_eq!(got, want, "{ctx}: spgemm");
+
+                let want_bt = oracle_words(&pa, &pbs, bsl,
+                                           Activation::None, &cfg);
+                let got_bt = kernel::spgemm_bt(&pa, &bt, bsl, &cfg);
+                assert_eq!(got_bt, want_bt, "{ctx}: spgemm_bt");
+
+                // Fused, all three activations.
+                for act in ACTIVATIONS {
+                    let want =
+                        oracle_words(&pa, &pb, bsl, act, &cfg);
+                    let fused = kernel::spgemm_fused(
+                        &sa, &pb, bsl, Epilogue { act }, &cfg);
+                    assert_plan_matches(
+                        &fused, &want, m, n, fmt,
+                        &format!("{ctx} act={act:?}: fused"));
+
+                    let want_bt =
+                        oracle_words(&pa, &pbs, bsl, act, &cfg);
+                    let mut out = DecodedPlan::empty(fmt);
+                    kernel::spgemm_bt_fused_into(
+                        &pa, &bt, bsl, Epilogue { act }, &cfg,
+                        &mut out);
+                    assert_plan_matches(
+                        &out, &want_bt, m, n, fmt,
+                        &format!("{ctx} act={act:?}: bt fused"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nar_poisoned_nonzeros_propagate_like_the_dense_kernel() {
+    let cfg = KernelConfig::DEFAULT;
+    let (m, k, n) = (6, 11, 5);
+    for fmt in FORMATS {
+        // Poison one stored entry of A (row 2): from_dense keeps the
+        // NaR word as a stored nonzero, and the whole output row goes
+        // NaR — bit-identically to the dense kernel.
+        let mut aw = sparse_words(m, k, fmt, 3000, 9);
+        aw[2 * k + 4] = fmt.nar();
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let sa = SparsePlan::from_dense(&pa);
+        assert!(sa.has_nar);
+        let pb = dense_plan(k, n, fmt, 10);
+        let bias: Vec<u64> = (0..n)
+            .map(|j| from_f64(0.1 * j as f64, fmt))
+            .collect();
+
+        for act in ACTIVATIONS {
+            let want = oracle_words(&pa, &pb, Some(&bias), act, &cfg);
+            let got = kernel::spgemm_fused(
+                &sa, &pb, Some(&bias), Epilogue { act }, &cfg);
+            let ctx = format!("{}b act={act:?}", fmt.nbits);
+            assert_plan_matches(&got, &want, m, n, fmt, &ctx);
+            for j in 0..n {
+                assert_eq!(got.words[2 * n + j], fmt.nar(),
+                           "{ctx}: poisoned row col {j}");
+                assert_ne!(got.words[n + j], fmt.nar(),
+                           "{ctx}: clean row col {j}");
+            }
+        }
+
+        // NaR in the sparse *weight* (bt orientation): poisons the
+        // output column its compressed row feeds.
+        let mut bw = sparse_words(k, n, fmt, 3000, 11);
+        bw[3 * n + 1] = fmt.nar();
+        let pbs = DecodedPlan::from_words(bw, k, n, fmt);
+        let bt = SparsePlan::from_dense_transposed(&pbs);
+        assert!(bt.has_nar);
+        let want =
+            oracle_words(&pa, &pbs, None, Activation::Relu, &cfg);
+        let mut out = DecodedPlan::empty(fmt);
+        kernel::spgemm_bt_fused_into(&pa, &bt, None, Epilogue::RELU,
+                                     &cfg, &mut out);
+        assert_plan_matches(&out, &want, m, n, fmt,
+                            &format!("{}b bt nar", fmt.nbits));
+
+        // NaR in the bias poisons its column everywhere.
+        let mut nbias = bias.clone();
+        nbias[0] = fmt.nar();
+        let want =
+            oracle_words(&pa, &pb, Some(&nbias), Activation::None,
+                         &cfg);
+        let got =
+            kernel::spgemm_with_config(&sa, &pb, Some(&nbias), &cfg);
+        assert_eq!(got, want, "{}b bias nar", fmt.nbits);
+        for i in 0..m {
+            assert_eq!(got[i * n], fmt.nar());
+        }
+    }
+}
+
+#[test]
+fn deep_p16_rows_fold_through_quires_exactly() {
+    // One row deeper than the exact-i128 chunk bound (16384 terms)
+    // forces the P16 deep-fold body (chunk partials folded into
+    // quires) in the sparse-A orientation, and the chunked single
+    // quire in the bt orientation. Both must still match the dense
+    // kernel bit for bit.
+    let cfg = KernelConfig::DEFAULT;
+    let k = 17_000usize;
+    let fmt = P16_FMT;
+    assert_eq!(kernel::classify_row(fmt, k), RowClass::DeepFold);
+
+    let aw = sparse_words(2, k, fmt, 10_000, 21); // row 0..1 dense
+    let pa = DecodedPlan::from_words(aw, 2, k, fmt);
+    let sa = SparsePlan::from_dense(&pa);
+    let pb = dense_plan(k, 3, fmt, 22);
+    let bias: Vec<u64> =
+        (0..3).map(|j| from_f64(j as f64 - 1.0, fmt)).collect();
+
+    let want =
+        oracle_words(&pa, &pb, Some(&bias), Activation::Relu, &cfg);
+    let got = kernel::spgemm_fused(&sa, &pb, Some(&bias),
+                                   Epilogue::RELU, &cfg);
+    assert_plan_matches(&got, &want, 2, 3, fmt, "deep spgemm");
+
+    // bt orientation: the sparse operand is B's transpose with one
+    // 17000-deep compressed row per output column.
+    let bt = SparsePlan::from_dense_transposed(&pb);
+    assert!(bt.row_nnz(0) > 16_384);
+    let want_bt =
+        oracle_words(&pa, &pb, Some(&bias), Activation::None, &cfg);
+    let got_bt = kernel::spgemm_bt(&pa, &bt, Some(&bias), &cfg);
+    assert_eq!(got_bt, want_bt, "deep spgemm_bt");
+}
+
+#[test]
+fn degenerate_structures() {
+    let cfg = KernelConfig::DEFAULT;
+    for fmt in FORMATS {
+        // Empty rows: rows 0 and 2 have no stored entries; without
+        // bias they emit exact zeros, with bias the rounded bias row.
+        let k = 6;
+        let mut aw = vec![0u64; 3 * k];
+        aw[k + 2] = from_f64(1.5, fmt); // single nonzero, row 1
+        let pa = DecodedPlan::from_words(aw, 3, k, fmt);
+        let sa = SparsePlan::from_dense(&pa);
+        assert_eq!(sa.nnz(), 1);
+        assert_eq!(sa.row_nnz(0), 0);
+        assert_eq!(kernel::classify_row(fmt, 0), RowClass::Empty);
+        let pb = dense_plan(k, 4, fmt, 31);
+        let bias: Vec<u64> =
+            (0..4).map(|j| from_f64(0.5 * j as f64, fmt)).collect();
+        for bsl in [None, Some(bias.as_slice())] {
+            let want =
+                oracle_words(&pa, &pb, bsl, Activation::None, &cfg);
+            let got = kernel::spgemm_with_config(&sa, &pb, bsl, &cfg);
+            assert_eq!(got, want, "{}b empty rows", fmt.nbits);
+            if bsl.is_none() {
+                assert!(got[..4].iter().all(|&w| w == 0));
+            }
+        }
+
+        // Empty matrices: m == 0 and n == 0 return empty outputs on
+        // every front end; the fused flavor resets the plan to 0×n.
+        let empty_a = SparsePlan::from_dense(
+            &DecodedPlan::from_words(Vec::new(), 0, k, fmt));
+        assert_eq!(kernel::spgemm(&empty_a, &pb, None),
+                   Vec::<u64>::new());
+        let empty_b = DecodedPlan::from_words(Vec::new(), k, 0, fmt);
+        assert_eq!(kernel::spgemm_with_config(&sa, &empty_b, None,
+                                              &cfg),
+                   Vec::<u64>::new());
+        let mut out = DecodedPlan::empty(fmt);
+        kernel::spgemm_fused_into(&empty_a, &pb, None,
+                                  Epilogue::NONE, &cfg, &mut out);
+        assert_eq!((out.rows, out.cols), (0, 4));
+        assert!(out.words.is_empty());
+
+        // density() on degenerate shapes never divides by zero.
+        assert_eq!(empty_a.density(), 0.0);
+    }
+}
+
+#[test]
+fn from_csr_validates_structure() {
+    let fmt = P16_FMT;
+    let w = from_f64(2.0, fmt);
+    // A valid 2x3 with entries (0,0), (0,2), (1,1).
+    let ok = SparsePlan::from_csr(2, 3, vec![0, 2, 3],
+                                  vec![0, 2, 1], vec![w, w, w], fmt)
+        .unwrap();
+    assert_eq!(ok.nnz(), 3);
+    assert_eq!(ok.row_entries(0), 0..2);
+
+    // Duplicate column index within a row.
+    let err = SparsePlan::from_csr(1, 3, vec![0, 2], vec![1, 1],
+                                   vec![w, w], fmt)
+        .unwrap_err();
+    assert!(err.contains("duplicate"), "{err}");
+    // Non-ascending column order.
+    let err = SparsePlan::from_csr(1, 3, vec![0, 2], vec![2, 0],
+                                   vec![w, w], fmt)
+        .unwrap_err();
+    assert!(err.contains("ascending"), "{err}");
+    // Column out of range.
+    let err = SparsePlan::from_csr(1, 3, vec![0, 1], vec![3],
+                                   vec![w], fmt)
+        .unwrap_err();
+    assert!(err.contains("out of range"), "{err}");
+    // row_ptr must start at 0, be monotone, have rows+1 entries, and
+    // end at nnz.
+    assert!(SparsePlan::from_csr(2, 3, vec![1, 1, 1], Vec::new(),
+                                 Vec::new(), fmt)
+        .is_err());
+    assert!(SparsePlan::from_csr(2, 3, vec![0, 2, 1], vec![0, 1, 2],
+                                 vec![w, w, w], fmt)
+        .is_err());
+    assert!(SparsePlan::from_csr(2, 3, vec![0, 1], vec![0],
+                                 vec![w], fmt)
+        .is_err());
+    assert!(SparsePlan::from_csr(1, 3, vec![0, 2], vec![0, 1],
+                                 vec![w], fmt)
+        .is_err());
+}
+
+#[test]
+fn mtx_ingest_round_trips_and_rejects_malformed_files() {
+    // Round-trip: text -> matrix -> text -> matrix.
+    let m = synthetic_sparse(11, 8, 0.3, 99);
+    let back = MtxMatrix::parse(&m.write()).unwrap();
+    assert_eq!(back, m);
+
+    // The parsed matrix feeds the kernel: the CSR plan against the
+    // dense kernel on its own densification, bit for bit, for each
+    // precision. (f32 staging buffers stay out of this comparison —
+    // quantizing through f32 double-rounds relative to the direct
+    // f64 -> posit path `to_plan` takes.)
+    let cfg = KernelConfig::DEFAULT;
+    for fmt in FORMATS {
+        let sa = m.to_plan(fmt).unwrap();
+        let pa = sa.densify();
+        assert_eq!(sa.nnz(), m.nnz(), "{}b", fmt.nbits);
+        let dense = m.to_dense_f32();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                assert_eq!(dense[r * m.cols + c] != 0.0,
+                           pa.words[r * m.cols + c] != 0,
+                           "{}b sparsity pattern ({r},{c})",
+                           fmt.nbits);
+            }
+        }
+        let pb = dense_plan(m.cols, 5, fmt, 101);
+        assert_eq!(kernel::spgemm_with_config(&sa, &pb, None, &cfg),
+                   kernel::gemm_with_config(&pa, &pb, None, &cfg),
+                   "{}b mtx-fed spgemm", fmt.nbits);
+    }
+
+    // Malformed inputs fail loudly.
+    assert!(MtxMatrix::parse("not a matrix\n").is_err());
+    let banner = "%%MatrixMarket matrix coordinate real general";
+    assert!(MtxMatrix::parse(
+        "%%MatrixMarket matrix coordinate complex general\n1 1 1\n\
+         1 1 2.0 0.0\n")
+        .is_err());
+    // Truncated: header promises 3 entries, body has 2.
+    let trunc = format!("{banner}\n3 3 3\n1 1 1.0\n2 2 2.0\n");
+    let err = MtxMatrix::parse(&trunc).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+    // Out-of-range 1-based index.
+    assert!(MtxMatrix::parse(
+        &format!("{banner}\n2 2 1\n3 1 1.0\n")).is_err());
+    // Duplicate entries surface at CSR conversion.
+    let dup = MtxMatrix {
+        rows: 2,
+        cols: 2,
+        entries: vec![(1, 1, 2.0), (1, 1, 3.0)],
+    };
+    assert!(dup.to_plan(P16_FMT).is_err());
+}
+
+#[test]
+fn sparse_results_are_invariant_to_threads_and_autotuning() {
+    // The dispatch axes — worker count, steal granularity, the
+    // density-bucketed autotuner — must never change a single bit.
+    let (m, k, n) = (33, 29, 17);
+    let fmt = P8_FMT;
+    let aw = sparse_words(m, k, fmt, 800, 71);
+    let pa = DecodedPlan::from_words(aw, m, k, fmt);
+    let sa = SparsePlan::from_dense(&pa);
+    let pb = dense_plan(k, n, fmt, 72);
+
+    let base = kernel::spgemm_with_config(&sa, &pb, None,
+                                          &KernelConfig::DEFAULT);
+    for threads in [1, 2, 5] {
+        let cfg = KernelConfig {
+            threads: Some(threads),
+            ..KernelConfig::DEFAULT
+        };
+        assert_eq!(kernel::spgemm_with_config(&sa, &pb, None, &cfg),
+                   base, "threads={threads}");
+    }
+    let tuned = KernelConfig {
+        autotune: kernel::AutotuneMode::FirstUse,
+        ..KernelConfig::DEFAULT
+    };
+    assert_eq!(kernel::spgemm_with_config(&sa, &pb, None, &tuned),
+               base, "autotuned");
+
+    // And the counter moved: these were sparse GEMMs.
+    let before = kernel::counters().sparse_gemms;
+    let _ = kernel::spgemm(&sa, &pb, None);
+    assert!(kernel::counters().sparse_gemms > before);
+}

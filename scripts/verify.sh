@@ -68,14 +68,20 @@ echo "== cargo bench --bench hotpath (smoke gate) =="
 SPADE_BENCH_QUICK="${SPADE_BENCH_QUICK:-1}" cargo bench --bench hotpath
 
 # The bench must have emitted the inner-loop, dispatch, self-tuning,
-# and fused-pipeline comparison sections — a silent regression to the
-# old loops (or a lost autotune/k-chunk/hybrid-LUT/fusion
-# measurement) would otherwise pass.
+# fused-pipeline, and sparse-vs-dense comparison sections — a silent
+# regression to the old loops (or a lost autotune/k-chunk/hybrid-LUT/
+# fusion/sparse measurement) would otherwise pass. The sparse gate
+# wants a speedup key at three sparsity levels per precision.
 for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
            steal_vs_fixed_split autotuned_vs_default \
            kchunk_vs_full_k p16_hybrid_lut_vs_exact \
            fused_vs_layerwise_p8 fused_vs_layerwise_p16 \
-           fused_vs_layerwise_p32 fused_vs_layerwise_decodes_avoided; do
+           fused_vs_layerwise_p32 fused_vs_layerwise_decodes_avoided \
+           sparse_vs_dense_p8_d1 sparse_vs_dense_p8_d10 \
+           sparse_vs_dense_p8_d50 sparse_vs_dense_p16_d1 \
+           sparse_vs_dense_p16_d10 sparse_vs_dense_p16_d50 \
+           sparse_vs_dense_p32_d1 sparse_vs_dense_p32_d10 \
+           sparse_vs_dense_p32_d50; do
   if ! grep -q "\"$key\"" BENCH_hotpath.json; then
     echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
     echo "        (did benches/hotpath.rs lose a comparison?)" >&2
