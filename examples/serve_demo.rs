@@ -83,24 +83,40 @@ fn main() -> Result<()> {
     let mut pending = Vec::with_capacity(requests);
     for r in traffic.burst(requests) {
         // The demo serves unbounded queues (no --max-queue knob
-        // here), so a reject is impossible; ? keeps it honest.
-        pending.push(handle.submit(InferenceRequest {
-            id: r.id,
-            input: r.input,
-            mode: r.mode,
-        })?);
+        // here), so admission never rejects — but submit_with_retry
+        // is the pattern a bounded fleet edge uses: honor the
+        // server's retry_after_ms hint (with deterministic jitter)
+        // for a few attempts before giving up. ? keeps it honest.
+        pending.push(handle.submit_with_retry(
+            InferenceRequest {
+                id: r.id,
+                input: r.input,
+                mode: r.mode,
+                deadline_ms: None,
+            },
+            4,
+        )?);
     }
     let mut mode_counts = std::collections::BTreeMap::new();
+    let mut degraded = 0u32;
     for rx in pending {
-        let resp = rx.recv()?;
+        // Outer ? = coordinator hung up; inner ? = typed per-request
+        // failure (deadline, shard death) — none expected here.
+        let resp = rx.recv()??;
         *mode_counts.entry(format!("{:?}", resp.mode)).or_insert(0u32)
             += 1;
+        if resp.degraded {
+            degraded += 1;
+        }
     }
     let wall = t0.elapsed();
 
     let metrics = handle.shutdown();
     println!("{}", metrics.summary());
     println!("batch-mode distribution: {mode_counts:?}");
+    if degraded > 0 {
+        println!("degraded under load: {degraded}");
+    }
     println!("end-to-end: {requests} requests in {:.2}s -> {:.0} req/s",
              wall.as_secs_f64(),
              requests as f64 / wall.as_secs_f64());

@@ -561,7 +561,8 @@ fn main() {
                 coord
                     .submit(InferenceRequest { id: r.id,
                                                input: r.input,
-                                               mode: None })
+                                               mode: None,
+                                               deadline_ms: None })
                     .expect("bench serve is unbounded")
             })
             .collect();
@@ -690,6 +691,72 @@ fn main() {
                 log.record(&format!("sparse_vs_dense_{tag}_d{pct}"),
                            t_dense / t_sparse);
             }
+        }
+    }
+
+    common::banner(
+        "degrade-under-load vs hard reject (synthetic overload, 1 \
+         shard, max_queue 32)");
+    {
+        // Same overload burst against the same tiny fleet, with the
+        // degrade band on (P16 policy traffic admitted at P8 above
+        // 25% of capacity) vs off (reject-only, the pre-PR behavior).
+        // Goodput = completed requests per wall second; p99 from the
+        // per-reply latencies of completed requests.
+        let reqs = if quick { 128usize } else { 512usize };
+        for (tag, degrade_at) in [("on", 0.25f64), ("off", 1.0)] {
+            let engine = spade::api::EngineBuilder::new()
+                .model("bench")
+                .policy(RoutePolicy::Balanced)
+                .shards(1)
+                .batch(8)
+                .max_queue(32)
+                .degrade_at(degrade_at)
+                .build()
+                .unwrap();
+            let coord = engine.serve_model(model.clone()).unwrap();
+            let mut gen = TrafficGen::new(11, 1, coord.input_len());
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = gen
+                .burst(reqs)
+                .into_iter()
+                .filter_map(|r| {
+                    coord
+                        .submit(InferenceRequest {
+                            id: r.id,
+                            input: r.input,
+                            mode: None,
+                            deadline_ms: None,
+                        })
+                        .ok()
+                })
+                .collect();
+            let mut lats: Vec<u64> = Vec::new();
+            let mut degraded = 0usize;
+            for rx in rxs {
+                if let Ok(Ok(resp)) = rx.recv() {
+                    lats.push(resp.latency_us);
+                    if resp.degraded {
+                        degraded += 1;
+                    }
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let _ = coord.shutdown();
+            lats.sort_unstable();
+            let p99 = match lats.len() {
+                0 => 0,
+                n => lats[((n - 1) as f64 * 0.99) as usize],
+            };
+            let goodput = lats.len() as f64 / dt;
+            println!("degrade {tag:>3}: {goodput:>8.0} good req/s  \
+                      p99 {p99:>7} us  ({} completed of {reqs}, \
+                      {degraded} degraded)",
+                     lats.len());
+            log.record(&format!("degrade_vs_reject_goodput_{tag}"),
+                       goodput);
+            log.record(&format!("degrade_vs_reject_p99us_{tag}"),
+                       p99 as f64);
         }
     }
 

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::coordinator::{BatcherConfig, CoordinatorConfig,
+use crate::coordinator::{BatcherConfig, CoordinatorConfig, FaultPlan,
                          MetricsConfig, RoutePolicy, ShardAffinity};
 use crate::engine::Mode;
 use crate::kernel::{gather_available, AutotuneMode, InnerPath,
@@ -100,6 +100,33 @@ pub struct EngineConfig {
     pub batch: usize,
     /// Max time the first request of a batch may wait.
     pub max_wait: Duration,
+    /// Default per-request deadline in milliseconds; 0 (default) =
+    /// no deadline. Requests still queued (or not yet started by a
+    /// shard) when it expires answer a typed
+    /// [`crate::coordinator::RequestError::DeadlineExceeded`]. A
+    /// per-submit `deadline_ms` overrides this
+    /// (`SPADE_DEADLINE_MS` at the env edge).
+    pub default_deadline_ms: u64,
+    /// Degrade-under-load threshold as a fraction of the effective
+    /// fleet capacity (`shards × max_queue`). When pending crosses
+    /// it, *unpinned* new requests route one precision step cheaper
+    /// (P32→P16→P8) and their replies are tagged `degraded`, instead
+    /// of waiting for the reject cliff. 1.0 (default) disables the
+    /// band (`SPADE_DEGRADE_AT` at the env edge). Requires
+    /// `max_queue > 0` to have any effect.
+    pub degrade_at: f64,
+    /// Hard-reject threshold as a fraction of the effective fleet
+    /// capacity — the [`crate::coordinator::Overloaded`] backstop
+    /// above the degrade band. 1.0 (default) keeps the historical
+    /// "reject only when completely full" behavior. Must satisfy
+    /// `degrade_at <= reject_at`.
+    pub reject_at: f64,
+    /// Deterministic fault-injection plan (compiled in always,
+    /// default off). `Some(plan)` makes shards inject seeded panics
+    /// and latency spikes per [`FaultPlan`] — the chaos-testing knob
+    /// (`SPADE_FAULTS` at the env edge, e.g.
+    /// `shard_panic=0.01,delay_ms=5@0.02`).
+    pub faults: Option<FaultPlan>,
     /// Metrics options: latency reservoir capacity, optional
     /// `--stats-json` dump path and period.
     pub metrics: MetricsConfig,
@@ -124,6 +151,10 @@ impl Default for EngineConfig {
             max_queue: 0,
             batch: b.target,
             max_wait: b.max_wait,
+            default_deadline_ms: 0,
+            degrade_at: 1.0,
+            reject_at: 1.0,
+            faults: None,
             metrics: MetricsConfig::default(),
         }
     }
@@ -170,6 +201,15 @@ impl EngineConfig {
         if let Some(t) = env::sparse_threshold()? {
             cfg.sparse_threshold = t;
         }
+        if let Some(ms) = env::deadline_ms()? {
+            cfg.default_deadline_ms = ms;
+        }
+        if let Some(f) = env::degrade_at()? {
+            cfg.degrade_at = f;
+        }
+        if let Some(plan) = env::faults()? {
+            cfg.faults = Some(plan);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -203,6 +243,19 @@ impl EngineConfig {
                 "shards={} exceeds the {MAX_SHARDS} sanity cap",
                 self.shards);
         ensure!(self.batch >= 1, "batch size must be at least 1");
+        ensure!(self.degrade_at.is_finite()
+                && (0.0..=1.0).contains(&self.degrade_at),
+                "degrade_at={} must be in [0, 1]", self.degrade_at);
+        ensure!(self.reject_at.is_finite()
+                && self.reject_at > 0.0 && self.reject_at <= 1.0,
+                "reject_at={} must be in (0, 1]", self.reject_at);
+        ensure!(self.degrade_at <= self.reject_at,
+                "degrade_at={} must not exceed reject_at={} (degrade \
+                 is the softer response)",
+                self.degrade_at, self.reject_at);
+        if let Some(plan) = &self.faults {
+            plan.validate().map_err(anyhow::Error::msg)?;
+        }
         ensure!(self.metrics.reservoir_capacity >= 1,
                 "metrics reservoir capacity must be at least 1");
         if self.metrics.stats_json.is_some() {
@@ -261,6 +314,11 @@ impl EngineConfig {
             kernel: Some(self.kernel_config()),
             fused: self.fused,
             sparse_threshold: self.sparse_threshold,
+            default_deadline_ms: self.default_deadline_ms,
+            shard_retries: crate::coordinator::DEFAULT_SHARD_RETRIES,
+            degrade_at: self.degrade_at,
+            reject_at: self.reject_at,
+            faults: self.faults.clone(),
             metrics: self.metrics.clone(),
         }
     }
@@ -317,6 +375,14 @@ impl EngineConfig {
         m.insert("batch".into(), num(self.batch));
         m.insert("max_wait_us".into(),
                  num(self.max_wait.as_micros() as usize));
+        m.insert("default_deadline_ms".into(),
+                 num(self.default_deadline_ms as usize));
+        m.insert("degrade_at".into(), Json::Num(self.degrade_at));
+        m.insert("reject_at".into(), Json::Num(self.reject_at));
+        m.insert("faults".into(), match &self.faults {
+            Some(plan) => s(&plan.to_spec()),
+            None => Json::Null,
+        });
         let mut mm = BTreeMap::new();
         mm.insert("reservoir_capacity".into(),
                   num(self.metrics.reservoir_capacity));
@@ -447,6 +513,35 @@ impl EngineConfig {
                 "max_wait_us" => {
                     cfg.max_wait = Duration::from_micros(
                         as_count(key, v)? as u64);
+                }
+                "default_deadline_ms" => {
+                    cfg.default_deadline_ms =
+                        as_count(key, v)? as u64;
+                }
+                "degrade_at" => {
+                    cfg.degrade_at =
+                        v.as_f64().ok_or_else(|| anyhow!(
+                            "engine config degrade_at must be a \
+                             number"))?;
+                }
+                "reject_at" => {
+                    cfg.reject_at =
+                        v.as_f64().ok_or_else(|| anyhow!(
+                            "engine config reject_at must be a \
+                             number"))?;
+                }
+                "faults" => {
+                    cfg.faults = match v {
+                        Json::Null => None,
+                        _ => {
+                            let spec = v.as_str().ok_or_else(
+                                || anyhow!("engine config faults \
+                                            must be a spec string or \
+                                            null"))?;
+                            Some(FaultPlan::parse(spec)
+                                .map_err(anyhow::Error::msg)?)
+                        }
+                    };
                 }
                 "metrics" => {
                     let mm = v.as_obj().ok_or_else(|| anyhow!(
@@ -615,6 +710,33 @@ mod tests {
         let mut c = EngineConfig::default();
         c.sparse_threshold = f64::NAN;
         assert!(c.validate().is_err());
+        // Degrade/reject fractions: out-of-range and inverted bands.
+        let mut c = EngineConfig::default();
+        c.degrade_at = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.degrade_at = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.reject_at = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.degrade_at = 0.9;
+        c.reject_at = 0.5;
+        assert!(c.validate().is_err(), "degrade above reject");
+        let mut c = EngineConfig::default();
+        c.degrade_at = 0.5;
+        c.reject_at = 0.75;
+        c.validate().unwrap();
+        // A fault plan is validated through the config.
+        let mut c = EngineConfig::default();
+        c.faults = Some(FaultPlan { shard_panic: 2.0,
+                                    ..FaultPlan::default() });
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::default();
+        c.faults =
+            Some(FaultPlan::parse("shard_panic=0.1").unwrap());
+        c.validate().unwrap();
     }
 
     #[test]
@@ -691,6 +813,11 @@ mod tests {
         c.max_queue = 128;
         c.batch = 12;
         c.max_wait = Duration::from_micros(2500);
+        c.default_deadline_ms = 750;
+        c.degrade_at = 0.5;
+        c.reject_at = 0.875;
+        c.faults = Some(FaultPlan::parse(
+            "shard_panic=0.25,delay_ms=5@0.5,seed=7").unwrap());
         c.metrics.reservoir_capacity = 99;
         c.metrics.stats_json = Some("stats/out.json".into());
         c.metrics.stats_interval = Duration::from_millis(250);
@@ -712,6 +839,10 @@ mod tests {
         assert_eq!(back.max_queue, c.max_queue);
         assert_eq!(back.batch, c.batch);
         assert_eq!(back.max_wait, c.max_wait);
+        assert_eq!(back.default_deadline_ms, c.default_deadline_ms);
+        assert_eq!(back.degrade_at, c.degrade_at);
+        assert_eq!(back.reject_at, c.reject_at);
+        assert_eq!(back.faults, c.faults);
         assert_eq!(back.metrics, c.metrics);
         // Defaults (None tile, no stats path) round-trip too.
         let d = EngineConfig::default();
@@ -722,6 +853,10 @@ mod tests {
         assert_eq!(back.autotune, AutotuneMode::Off);
         assert!(back.fused, "fused defaults to on");
         assert_eq!(back.sparse_threshold, 0.25);
+        assert_eq!(back.default_deadline_ms, 0);
+        assert_eq!(back.degrade_at, 1.0);
+        assert_eq!(back.reject_at, 1.0);
+        assert_eq!(back.faults, None);
     }
 
     #[test]
@@ -746,6 +881,21 @@ mod tests {
             "{\"sparse_threshold\": 2.0}").is_err());
         assert!(EngineConfig::from_json(
             "{\"sparse_threshold\": \"low\"}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"degrade_at\": \"half\"}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"degrade_at\": 0.9, \"reject_at\": 0.5}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"faults\": \"shard_panic=2.0\"}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"faults\": 3}").is_err());
+        assert!(EngineConfig::from_json(
+            "{\"default_deadline_ms\": -5}").is_err());
+        let c = EngineConfig::from_json(
+            "{\"faults\": \"delay_ms=2@0.5\", \
+              \"default_deadline_ms\": 100}").unwrap();
+        assert_eq!(c.faults.unwrap().delay_rate, 0.5);
+        assert_eq!(c.default_deadline_ms, 100);
         // A minimal file overrides only what it names.
         let c = EngineConfig::from_json(
             "{\"shards\": 2, \"autotune\": \"first-use\", \

@@ -20,17 +20,24 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, CoordinatorConfig,
+use crate::coordinator::{lock_metrics, Coordinator,
+                         CoordinatorConfig, FaultPlan,
                          InferenceRequest, InferenceResponse, Metrics,
-                         MetricsConfig, Overloaded, RoutePolicy,
-                         ServeBackend, ShardAffinity};
+                         MetricsConfig, Overloaded, RequestResult,
+                         RoutePolicy, ServeBackend, ShardAffinity};
 use crate::engine::Mode;
 use crate::kernel::{self, autotune, AutotuneMode, DecodedPlan,
                     DispatchStats, InnerPath, KernelConfig,
                     TileConfig};
 use crate::nn::{Model, Session};
+use crate::util::SplitMix64;
 
 use super::config::EngineConfig;
+
+/// Cap on the [`Overloaded::retry_after_ms`] hint a
+/// [`ServeHandle::submit_with_retry`] sleep will honor — a server
+/// deep under water must not park its clients for seconds at a time.
+pub const RETRY_BACKOFF_CAP_MS: u64 = 250;
 
 /// Fluent constructor for [`Engine`]. Start from
 /// [`EngineBuilder::new`] (pure defaults) or
@@ -173,6 +180,37 @@ impl EngineBuilder {
     /// Max wait before a partial batch flushes.
     pub fn max_wait(mut self, d: Duration) -> Self {
         self.cfg.max_wait = d;
+        self
+    }
+
+    /// Default per-request deadline in milliseconds (0 = none; see
+    /// [`EngineConfig::default_deadline_ms`]). The programmatic form
+    /// of `SPADE_DEADLINE_MS`; a per-submit `deadline_ms` wins.
+    pub fn default_deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.default_deadline_ms = ms;
+        self
+    }
+
+    /// Degrade-under-load threshold as a fraction of fleet capacity
+    /// (see [`EngineConfig::degrade_at`]; the programmatic form of
+    /// `SPADE_DEGRADE_AT`). Validated to `[0, 1]` and
+    /// `degrade_at <= reject_at` at build.
+    pub fn degrade_at(mut self, fraction: f64) -> Self {
+        self.cfg.degrade_at = fraction;
+        self
+    }
+
+    /// Hard-reject threshold as a fraction of fleet capacity (see
+    /// [`EngineConfig::reject_at`]).
+    pub fn reject_at(mut self, fraction: f64) -> Self {
+        self.cfg.reject_at = fraction;
+        self
+    }
+
+    /// Install a deterministic fault-injection plan (see
+    /// [`FaultPlan`]; the programmatic form of `SPADE_FAULTS`).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.cfg.faults = Some(plan);
         self
     }
 
@@ -399,17 +437,57 @@ impl ServeHandle {
         self.coord.input_len()
     }
 
-    /// Submit a request; returns the response receiver, or a typed
-    /// [`Overloaded`] error when the configured
-    /// `max_queue` bound is hit (every shard full). With the default
-    /// unbounded queues this never fails.
+    /// Submit a request; returns the reply receiver (the reply itself
+    /// is a [`RequestResult`] — `Ok` logits, or a typed
+    /// [`crate::coordinator::RequestError`] for deadline expiry /
+    /// shard failure), or a typed [`Overloaded`] error when admission
+    /// is above the configured `reject_at` bound. With the default
+    /// unbounded queues admission never fails.
     pub fn submit(&self, req: InferenceRequest)
-                  -> Result<std::sync::mpsc::Receiver<InferenceResponse>,
+                  -> Result<std::sync::mpsc::Receiver<RequestResult>,
                             Overloaded> {
         self.coord.submit(req)
     }
 
-    /// Blocking convenience: submit and wait.
+    /// [`ServeHandle::submit`] with bounded retries on
+    /// [`Overloaded`]: sleeps the server's `retry_after_ms` hint
+    /// (capped at [`RETRY_BACKOFF_CAP_MS`]) plus deterministic jitter
+    /// seeded from the request id — a thundering herd of retriers
+    /// decorrelates without any global RNG, and a given request's
+    /// backoff schedule is exactly reproducible. Gives up after
+    /// `max_attempts` submissions (min 1), returning the last
+    /// [`Overloaded`].
+    pub fn submit_with_retry(&self, req: InferenceRequest,
+                             max_attempts: u32)
+                             -> Result<std::sync::mpsc::Receiver<RequestResult>,
+                                       Overloaded> {
+        let max_attempts = max_attempts.max(1);
+        let mut jitter =
+            SplitMix64::new(req.id ^ 0x7E7A_11CE_B0FF_5EED);
+        let mut attempt = 0u32;
+        loop {
+            match self.coord.submit(req.clone()) {
+                Ok(rx) => return Ok(rx),
+                Err(over) => {
+                    attempt += 1;
+                    if attempt >= max_attempts {
+                        return Err(over);
+                    }
+                    let base = over
+                        .retry_after_ms
+                        .min(RETRY_BACKOFF_CAP_MS)
+                        .max(1);
+                    let jit = jitter.below(base / 4 + 1);
+                    std::thread::sleep(
+                        Duration::from_millis(base + jit));
+                }
+            }
+        }
+    }
+
+    /// Blocking convenience: submit and wait. Flattens both failure
+    /// layers (admission [`Overloaded`], per-request
+    /// [`crate::coordinator::RequestError`]) into the `Result`.
     pub fn infer(&self, req: InferenceRequest)
                  -> Result<InferenceResponse> {
         self.coord.infer(req)
@@ -513,6 +591,7 @@ fn sleep_until_stop(stop: &AtomicBool, total: Duration) -> bool {
 struct StatsPrev {
     requests: u64,
     rejected: u64,
+    degraded: u64,
     elapsed: Duration,
 }
 
@@ -523,10 +602,11 @@ struct StatsPrev {
 fn write_stats(metrics: &Arc<Mutex<Metrics>>, path: &PathBuf,
                elapsed: Duration, prev: StatsPrev) -> StatsPrev {
     let (body, next) = {
-        let m = metrics.lock().unwrap();
+        let m = lock_metrics(metrics);
         (render_stats(&m, elapsed, prev),
          StatsPrev { requests: m.total_requests,
-                     rejected: m.rejected, elapsed })
+                     rejected: m.rejected,
+                     degraded: m.degraded_requests, elapsed })
     };
     let tmp = path.with_extension("json.tmp");
     if std::fs::write(&tmp, body).is_ok() {
@@ -547,21 +627,32 @@ fn pct_fields(p50: Option<u64>, p95: Option<u64>, p99: Option<u64>)
 }
 
 /// The machine-readable serve stats document (schema
-/// `spade-serve-stats-v2`): global counters, per-dump throughput
+/// `spade-serve-stats-v3`): global counters, per-dump throughput
 /// rates, per-mode and per-shard latency percentiles with reservoir
 /// snapshot counts (`seen` = everything recorded, `sampled` = held in
 /// the bounded reservoir right now), the last backpressure
 /// retry-after hint, and kernel dispatch/steal/fused-epilogue
-/// counters — the ROADMAP fleet-dashboard dump. Every v1 field is
-/// intact; v2 only adds.
+/// counters — the ROADMAP fleet-dashboard dump. Every v1/v2 field is
+/// intact; v3 only adds the fault-tolerance counters
+/// (`shard_restarts`, `deadline_timeouts`, `degraded_requests`,
+/// `faults_injected`, per-dump `degraded_per_s`, per-shard
+/// `restarts`).
 fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
                 -> String {
     let mut s = String::with_capacity(1024);
-    s.push_str("{\n  \"schema\": \"spade-serve-stats-v2\",\n");
+    s.push_str("{\n  \"schema\": \"spade-serve-stats-v3\",\n");
     s.push_str(&format!("  \"elapsed_s\": {:.3},\n",
                         elapsed.as_secs_f64()));
     s.push_str(&format!("  \"requests\": {},\n", m.total_requests));
     s.push_str(&format!("  \"rejected\": {},\n", m.rejected));
+    s.push_str(&format!("  \"shard_restarts\": {},\n",
+                        m.total_shard_restarts()));
+    s.push_str(&format!("  \"deadline_timeouts\": {},\n",
+                        m.deadline_timeouts));
+    s.push_str(&format!("  \"degraded_requests\": {},\n",
+                        m.degraded_requests));
+    s.push_str(&format!("  \"faults_injected\": {},\n",
+                        m.faults_injected));
     // Rates over the window since the previous dump (first window =
     // since start). A zero-length window reports 0 rather than inf.
     let dt = elapsed.saturating_sub(prev.elapsed).as_secs_f64();
@@ -576,6 +667,8 @@ fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
                         rate(m.total_requests, prev.requests)));
     s.push_str(&format!("  \"rejects_per_s\": {:.3},\n",
                         rate(m.rejected, prev.rejected)));
+    s.push_str(&format!("  \"degraded_per_s\": {:.3},\n",
+                        rate(m.degraded_requests, prev.degraded)));
     s.push_str(&format!("  \"last_retry_after_ms\": {},\n",
                         m.last_retry_after_ms));
     s.push_str(&format!("  \"mean_batch\": {:.3},\n", m.mean_batch()));
@@ -607,8 +700,10 @@ fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
             Some(r) => (r.percentiles(&PCTS), r.seen(), r.len()),
             None => (vec![None; 3], 0, 0),
         };
+        let restarts = m.shard_restarts.get(i).copied().unwrap_or(0);
         s.push_str(&format!(
             "{{\"requests\": {reqs}, \"batches\": {batches}, \
+             \"restarts\": {restarts}, \
              \"seen\": {seen}, \"sampled\": {sampled}, {}}}",
             pct_fields(p[0], p[1], p[2])));
     }
@@ -652,13 +747,18 @@ mod tests {
         m.record_shard(1, 4);
         m.record_rejected();
         m.last_retry_after_ms = 7;
+        m.record_degraded();
+        m.record_deadline_timeout();
+        m.record_fault();
+        m.record_fault();
+        m.record_shard_restart(1);
         let body = render_stats(&m, Duration::from_millis(1500),
                                 StatsPrev::default());
         let j = Json::parse(&body).unwrap_or_else(|e| {
             panic!("stats dump is not valid JSON ({e}):\n{body}")
         });
         assert_eq!(j.get("schema").unwrap().as_str(),
-                   Some("spade-serve-stats-v2"));
+                   Some("spade-serve-stats-v3"));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
         let modes = j.get("modes").unwrap();
         assert!(modes.get("p8").unwrap().get("p50_us").is_some());
@@ -690,6 +790,21 @@ mod tests {
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("last_retry_after_ms").unwrap().as_usize(),
                    Some(7));
+        // v3: fault-tolerance counters, global and per shard.
+        assert_eq!(j.get("shard_restarts").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("deadline_timeouts").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("degraded_requests").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("faults_injected").unwrap().as_usize(),
+                   Some(2));
+        assert_eq!(shards[0].get("restarts").unwrap().as_usize(),
+                   Some(0));
+        assert_eq!(shards[1].get("restarts").unwrap().as_usize(),
+                   Some(1));
+        let dps = j.get("degraded_per_s").unwrap().as_f64().unwrap();
+        assert!((dps - 1.0 / 1.5).abs() < 1e-6, "{dps}");
         // First dump: rates are over the whole 1.5 s window.
         let rps = j.get("requests_per_s").unwrap().as_f64().unwrap();
         assert!((rps - 2.0 / 1.5).abs() < 1e-6, "{rps}");
@@ -704,7 +819,7 @@ mod tests {
         m.record_rejected();
         // Previous dump saw 4 requests and 1 reject at t=1s; this one
         // runs at t=3s -> 6 new requests over a 2 s window.
-        let prev = StatsPrev { requests: 4, rejected: 1,
+        let prev = StatsPrev { requests: 4, rejected: 1, degraded: 0,
                                elapsed: Duration::from_secs(1) };
         let body = render_stats(&m, Duration::from_secs(3), prev);
         let j = Json::parse(&body).unwrap();
@@ -713,7 +828,7 @@ mod tests {
         let xps = j.get("rejects_per_s").unwrap().as_f64().unwrap();
         assert!(xps.abs() < 1e-6, "{xps}");
         // Degenerate zero-length window: rates report 0, not inf/NaN.
-        let same = StatsPrev { requests: 0, rejected: 0,
+        let same = StatsPrev { requests: 0, rejected: 0, degraded: 0,
                                elapsed: Duration::from_secs(3) };
         let body = render_stats(&m, Duration::from_secs(3), same);
         let j = Json::parse(&body).unwrap();

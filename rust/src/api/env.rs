@@ -16,12 +16,16 @@
 //! | `SPADE_KERNEL_AUTOTUNE` | [`kernel_autotune`] | `off` / `first-use` / `warmup` first-use autotuner mode |
 //! | `SPADE_FUSED` | [`fused`] | `0`/`off` selects the layer-wise escape hatch (fused planar pipeline is the default) |
 //! | `SPADE_SPARSE_THRESHOLD` | [`sparse_threshold`] | weight-density cutoff in `[0, 1]` below which a layer routes through the CSR SpGEMM (bit-identical; perf crossover only) |
+//! | `SPADE_DEADLINE_MS` | [`deadline_ms`] | default per-request deadline in ms (0 = none; per-submit override wins) |
+//! | `SPADE_DEGRADE_AT` | [`degrade_at`] | degrade-under-load threshold as a fraction `(0, 1]` of fleet capacity |
+//! | `SPADE_FAULTS` | [`faults`] | deterministic fault-injection spec, e.g. `shard_panic=0.01,delay_ms=5@0.02` ([`FaultPlan::parse`]) |
 //! | `SPADE_ARTIFACTS` | [`artifacts_override`] | artifact directory override |
 //! | `SPADE_BENCH_QUICK` | [`bench_quick`] | hotpath bench smoke mode |
 //! | `SPADE_FIG4_LIMIT` | [`fig4_limit`] | Fig. 4 bench image cap |
 
 use anyhow::Result;
 
+use crate::coordinator::FaultPlan;
 use crate::kernel::{AutotuneMode, TileConfig};
 
 /// Raw read; empty values count as unset (an `X=` line in a shell
@@ -106,6 +110,56 @@ pub fn sparse_threshold() -> Result<Option<f64>> {
             .ok_or_else(|| anyhow::anyhow!(
                 "SPADE_SPARSE_THRESHOLD={s:?}: expected a number \
                  in [0, 1]")),
+    }
+}
+
+/// `SPADE_DEADLINE_MS`: default per-request deadline in
+/// milliseconds. `0` explicitly disables deadlines (same as the
+/// config default); anything unparsable as a `u64` is a hard error.
+/// A per-submit `deadline_ms` on the request overrides this.
+pub fn deadline_ms() -> Result<Option<u64>> {
+    match raw("SPADE_DEADLINE_MS") {
+        None => Ok(None),
+        Some(s) => s
+            .trim()
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!(
+                "SPADE_DEADLINE_MS={s:?}: not a millisecond count")),
+    }
+}
+
+/// `SPADE_DEGRADE_AT`: degrade-under-load threshold as a fraction of
+/// the effective fleet capacity (`shards × max_queue`). Must be a
+/// finite number in `(0, 1]` — `1` disables the degrade band (the
+/// config default), and `0` would degrade *everything*, which is a
+/// policy choice (`--precision p8`), not a load response. The reject
+/// backstop stays at the config's `reject_at`.
+pub fn degrade_at() -> Result<Option<f64>> {
+    match raw("SPADE_DEGRADE_AT") {
+        None => Ok(None),
+        Some(s) => s
+            .trim()
+            .parse::<f64>()
+            .ok()
+            .filter(|v| v.is_finite() && *v > 0.0 && *v <= 1.0)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!(
+                "SPADE_DEGRADE_AT={s:?}: expected a number in \
+                 (0, 1]")),
+    }
+}
+
+/// `SPADE_FAULTS`: deterministic fault-injection plan, strictly
+/// parsed by [`FaultPlan::parse`] (e.g.
+/// `shard_panic=0.01,delay_ms=5@0.02,seed=42`). Compiled in always;
+/// unset means no injection.
+pub fn faults() -> Result<Option<FaultPlan>> {
+    match raw("SPADE_FAULTS") {
+        None => Ok(None),
+        Some(s) => FaultPlan::parse(&s).map(Some).map_err(|e| {
+            anyhow::anyhow!("SPADE_FAULTS: {e}")
+        }),
     }
 }
 

@@ -56,11 +56,13 @@ pub mod engine;
 pub mod env;
 
 pub use config::EngineConfig;
-pub use engine::{Engine, EngineBuilder, ServeHandle};
+pub use engine::{Engine, EngineBuilder, ServeHandle,
+                 RETRY_BACKOFF_CAP_MS};
 
 // The types an engine-facade caller composes with, re-exported so a
 // typical edge only imports `spade::api::*` plus the model layer.
-pub use crate::coordinator::{MetricsConfig, Overloaded, RoutePolicy,
+pub use crate::coordinator::{FaultPlan, MetricsConfig, Overloaded,
+                             RequestError, RequestResult, RoutePolicy,
                              ServeBackend, ShardAffinity};
 pub use crate::kernel::{AutotuneMode, InnerPath, KernelConfig,
                         TileConfig};

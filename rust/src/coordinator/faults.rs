@@ -1,0 +1,348 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] describes *which* faults to inject (shard panics,
+//! latency spikes) at *what* rates, driven by a seeded
+//! [`crate::util::SplitMix64`] — the same generator the Algorithm-R
+//! latency reservoirs use, so a chaos run is exactly reproducible
+//! from its seed. The plan is compiled in always and **default off**:
+//! production binaries carry the injection points at zero cost (one
+//! `Option` check per batch), and chaos tests exercise the *exact*
+//! recovery code that ships, not a test-only shim.
+//!
+//! Configure via [`crate::api::EngineConfig`]`::faults` or
+//! `SPADE_FAULTS` (parsed in `api/env.rs` only), e.g.
+//!
+//! ```text
+//! SPADE_FAULTS="shard_panic=0.01,delay_ms=5@0.02,seed=42"
+//! ```
+//!
+//! injects a shard panic on 1% of batches and a 5 ms latency spike on
+//! 2% of batches. Injection happens in the shard loop *after* the
+//! in-flight batch is stashed in the recovery slot, so every injected
+//! panic flows through the supervisor's re-queue/respawn path (see
+//! [`super`] module docs, "Fault tolerance").
+
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// Seed used when a fault spec does not name one.
+pub const DEFAULT_FAULT_SEED: u64 = 0x5EED_FA01;
+
+/// Largest accepted injected delay — a typo'd `delay_ms=500000` must
+/// not wedge a shard for minutes.
+pub const MAX_FAULT_DELAY_MS: u64 = 10_000;
+
+/// A deterministic fault-injection plan. Parse one with
+/// [`FaultPlan::parse`] (the `SPADE_FAULTS` / config-file grammar) or
+/// construct it directly; [`FaultPlan::validate`] enforces the same
+/// bounds either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Probability (per batch, per shard) of an injected shard panic.
+    pub shard_panic: f64,
+    /// Injected latency-spike magnitude, milliseconds.
+    pub delay_ms: u64,
+    /// Probability (per batch, per shard) of the latency spike.
+    pub delay_rate: f64,
+    /// RNG seed; per-shard streams are derived from it, so adding a
+    /// shard never perturbs another shard's fault sequence.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    /// The inactive plan: no faults, default seed. Useful as a
+    /// struct-update base when tests construct plans directly.
+    fn default() -> FaultPlan {
+        FaultPlan {
+            shard_panic: 0.0,
+            delay_ms: 0,
+            delay_rate: 0.0,
+            seed: DEFAULT_FAULT_SEED,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a fault spec: comma-separated `key=value` fragments with
+    /// keys `shard_panic=RATE`, `delay_ms=MS@RATE` and `seed=N`.
+    /// **Strict**, like every other engine knob: unknown keys,
+    /// duplicate keys, malformed numbers, rates outside `[0, 1]`, a
+    /// zero or oversized delay, and a spec naming no fault at all are
+    /// hard errors.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fault spec (expected e.g. \
+                        shard_panic=0.01,delay_ms=5@0.02)"
+                .into());
+        }
+        let (mut saw_panic, mut saw_delay, mut saw_seed) =
+            (false, false, false);
+        for frag in spec.split(',') {
+            let frag = frag.trim();
+            let (key, val) = frag.split_once('=').ok_or_else(|| {
+                format!("fault spec fragment {frag:?} is not \
+                         key=value")
+            })?;
+            match key.trim() {
+                "shard_panic" => {
+                    if saw_panic {
+                        return Err("duplicate shard_panic key".into());
+                    }
+                    saw_panic = true;
+                    plan.shard_panic = parse_rate("shard_panic", val)?;
+                }
+                "delay_ms" => {
+                    if saw_delay {
+                        return Err("duplicate delay_ms key".into());
+                    }
+                    saw_delay = true;
+                    let (ms, rate) =
+                        val.trim().split_once('@').ok_or_else(|| {
+                            format!("delay_ms={val:?}: expected \
+                                     MS@RATE (e.g. delay_ms=5@0.02)")
+                        })?;
+                    plan.delay_ms =
+                        ms.trim().parse::<u64>().map_err(|_| {
+                            format!("delay_ms={val:?}: {ms:?} is not \
+                                     a millisecond count")
+                        })?;
+                    plan.delay_rate = parse_rate("delay_ms rate",
+                                                 rate)?;
+                }
+                "seed" => {
+                    if saw_seed {
+                        return Err("duplicate seed key".into());
+                    }
+                    saw_seed = true;
+                    plan.seed =
+                        val.trim().parse::<u64>().map_err(|_| {
+                            format!("seed={val:?}: not a u64")
+                        })?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault key {other:?} (expected \
+                         shard_panic, delay_ms or seed)"));
+                }
+            }
+        }
+        if !saw_panic && !saw_delay {
+            return Err("fault spec names no fault (set shard_panic \
+                        and/or delay_ms)"
+                .into());
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Enforce the plan bounds (shared by [`FaultPlan::parse`] and
+    /// directly-constructed plans validated through
+    /// `EngineConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        check_rate("shard_panic", self.shard_panic)?;
+        check_rate("delay rate", self.delay_rate)?;
+        if self.delay_rate > 0.0 && self.delay_ms == 0 {
+            return Err("delay_ms=0 with a nonzero rate is a no-op \
+                        fault (set a delay of at least 1 ms)"
+                .into());
+        }
+        if self.delay_ms > MAX_FAULT_DELAY_MS {
+            return Err(format!(
+                "delay_ms={} exceeds the {MAX_FAULT_DELAY_MS} ms \
+                 sanity cap",
+                self.delay_ms));
+        }
+        Ok(())
+    }
+
+    /// True when the plan can actually inject something.
+    pub fn is_active(&self) -> bool {
+        self.shard_panic > 0.0 || self.delay_rate > 0.0
+    }
+
+    /// Canonical spec string — [`FaultPlan::parse`] round-trips it
+    /// (the config-file JSON carries plans in this form).
+    pub fn to_spec(&self) -> String {
+        format!("shard_panic={},delay_ms={}@{},seed={}",
+                self.shard_panic, self.delay_ms, self.delay_rate,
+                self.seed)
+    }
+}
+
+fn parse_rate(what: &str, s: &str) -> Result<f64, String> {
+    let v = s
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| format!("{what}={s:?}: not a number"))?;
+    check_rate(what, v)?;
+    Ok(v)
+}
+
+fn check_rate(what: &str, v: f64) -> Result<(), String> {
+    if v.is_finite() && (0.0..=1.0).contains(&v) {
+        Ok(())
+    } else {
+        Err(format!("{what}={v}: probability must be in [0, 1]"))
+    }
+}
+
+/// The fault decision for one batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    /// Sleep this long before computing (latency spike).
+    pub delay: Option<Duration>,
+    /// Panic after the (optional) delay — exercises the shard
+    /// supervisor's re-queue/respawn path.
+    pub panic: bool,
+}
+
+impl Fault {
+    /// A decision that injects nothing.
+    pub const NONE: Fault = Fault { delay: None, panic: false };
+
+    /// Number of faults this decision injects (0..=2).
+    pub fn count(&self) -> u64 {
+        u64::from(self.delay.is_some()) + u64::from(self.panic)
+    }
+}
+
+/// Per-shard fault stream: one seeded RNG whose draws are consumed in
+/// a fixed order (delay draw, then panic draw) on **every** batch, so
+/// the fault sequence depends only on (plan seed, shard id, batch
+/// ordinal) — never on which faults happened to be enabled.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: SplitMix64,
+}
+
+impl FaultInjector {
+    /// Injector for `shard`, derived from the plan seed so each shard
+    /// has an independent deterministic stream.
+    pub fn new(plan: &FaultPlan, shard: usize) -> FaultInjector {
+        let seed = plan.seed
+            ^ (shard as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        FaultInjector { plan: plan.clone(), rng: SplitMix64::new(seed) }
+    }
+
+    /// Decide the faults for the next batch. The injector survives
+    /// shard restarts (it lives in the supervisor, outside the
+    /// `catch_unwind` boundary), so a retried batch draws *fresh*
+    /// randomness — a `shard_panic` rate below 1 cannot pin a batch in
+    /// an eternal panic loop.
+    pub fn next(&mut self) -> Fault {
+        let delay_draw = self.rng.f64();
+        let panic_draw = self.rng.f64();
+        let delay = (self.plan.delay_rate > 0.0
+                     && delay_draw < self.plan.delay_rate)
+            .then(|| Duration::from_millis(self.plan.delay_ms));
+        let panic = self.plan.shard_panic > 0.0
+            && panic_draw < self.plan.shard_panic;
+        Fault { delay, panic }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "shard_panic=0.01,delay_ms=5@0.02,seed=42").unwrap();
+        assert_eq!(p.shard_panic, 0.01);
+        assert_eq!(p.delay_ms, 5);
+        assert_eq!(p.delay_rate, 0.02);
+        assert_eq!(p.seed, 42);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parse_partial_specs() {
+        let p = FaultPlan::parse("shard_panic=0.5").unwrap();
+        assert_eq!(p.delay_rate, 0.0);
+        assert_eq!(p.seed, DEFAULT_FAULT_SEED);
+        let p = FaultPlan::parse(" delay_ms=3@1.0 ").unwrap();
+        assert_eq!(p.shard_panic, 0.0);
+        assert_eq!(p.delay_ms, 3);
+        assert_eq!(p.delay_rate, 1.0);
+    }
+
+    #[test]
+    fn parse_error_matrix() {
+        for bad in ["",
+                    "   ",
+                    "bogus=1",
+                    "shard_panic",
+                    "shard_panic=",
+                    "shard_panic=high",
+                    "shard_panic=1.5",
+                    "shard_panic=-0.1",
+                    "shard_panic=NaN",
+                    "shard_panic=0.1,shard_panic=0.2",
+                    "delay_ms=5",
+                    "delay_ms=5@",
+                    "delay_ms=@0.5",
+                    "delay_ms=-1@0.5",
+                    "delay_ms=5@2.0",
+                    "delay_ms=0@0.5",
+                    "delay_ms=999999@0.5",
+                    "delay_ms=1@0.5,delay_ms=2@0.5",
+                    "seed=42",
+                    "seed=abc,shard_panic=0.1",
+                    "seed=1,seed=2,shard_panic=0.1"] {
+            assert!(FaultPlan::parse(bad).is_err(),
+                    "spec {bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in ["shard_panic=0.01,delay_ms=5@0.02,seed=42",
+                     "shard_panic=1",
+                     "delay_ms=10@0.25"] {
+            let p = FaultPlan::parse(spec).unwrap();
+            let back = FaultPlan::parse(&p.to_spec()).unwrap();
+            assert_eq!(p, back, "spec {spec:?} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn injector_is_deterministic_and_per_shard() {
+        let plan =
+            FaultPlan::parse("shard_panic=0.3,delay_ms=2@0.3,seed=7")
+                .unwrap();
+        let draws = |shard: usize| -> Vec<Fault> {
+            let mut inj = FaultInjector::new(&plan, shard);
+            (0..64).map(|_| inj.next()).collect()
+        };
+        assert_eq!(draws(0), draws(0), "same shard, same stream");
+        assert_ne!(draws(0), draws(1), "shards draw independently");
+        let n: u64 = draws(0).iter().map(|f| f.count()).sum();
+        assert!(n > 0, "a 30% dual-fault plan injects over 64 batches");
+    }
+
+    #[test]
+    fn inactive_plans_inject_nothing() {
+        let plan = FaultPlan { shard_panic: 0.0, delay_ms: 5,
+                               delay_rate: 0.0, seed: 1 };
+        assert!(plan.validate().is_ok());
+        assert!(!plan.is_active());
+        let mut inj = FaultInjector::new(&plan, 0);
+        for _ in 0..128 {
+            assert_eq!(inj.next(), Fault::NONE);
+        }
+    }
+
+    #[test]
+    fn certain_panic_always_fires() {
+        let plan = FaultPlan::parse("shard_panic=1").unwrap();
+        let mut inj = FaultInjector::new(&plan, 3);
+        for _ in 0..32 {
+            assert!(inj.next().panic);
+        }
+    }
+}

@@ -19,10 +19,20 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::engine::Mode;
 use crate::util::SplitMix64;
+
+/// Lock the shared metrics, recovering from poison: a panicking shard
+/// (injected fault or organic bug) may die while holding the metrics
+/// lock, but every structure inside is a plain counter or reservoir
+/// that is valid after any interrupted update — losing all future
+/// observability to a poisoned mutex would be strictly worse.
+pub fn lock_metrics(m: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Default per-distribution reservoir capacity: big enough that p99
 /// of any realistic serve window is sampled well, small enough that a
@@ -200,6 +210,20 @@ pub struct Metrics {
     /// the `--stats-json` dump so shed-and-retry behavior is
     /// observable fleet-wide.
     pub last_retry_after_ms: u64,
+    /// Requests answered [`super::RequestError::DeadlineExceeded`]
+    /// (expired in the batch window or a shard queue).
+    pub deadline_timeouts: u64,
+    /// Requests admitted through the degrade band
+    /// ([`super::CoordinatorConfig::degrade_at`]) and answered at a
+    /// cheaper precision than the policy default.
+    pub degraded_requests: u64,
+    /// Faults injected by the configured [`super::FaultPlan`] (each
+    /// delay and each panic counts one).
+    pub faults_injected: u64,
+    /// Supervisor restarts per shard (index = shard id; grows on
+    /// demand like the other per-shard vectors). Every entry is one
+    /// shard panic — injected or organic — that was absorbed.
+    pub shard_restarts: Vec<u64>,
 }
 
 impl Default for Metrics {
@@ -223,6 +247,10 @@ impl Metrics {
             shard_latencies_us: Vec::new(),
             reservoir_capacity: cap.max(1),
             last_retry_after_ms: 0,
+            deadline_timeouts: 0,
+            degraded_requests: 0,
+            faults_injected: 0,
+            shard_restarts: Vec::new(),
         }
     }
 
@@ -249,6 +277,34 @@ impl Metrics {
     /// Record one request rejected by the backpressure bound.
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Record one request answered `DeadlineExceeded`.
+    pub fn record_deadline_timeout(&mut self) {
+        self.deadline_timeouts += 1;
+    }
+
+    /// Record one request admitted degraded (overload band).
+    pub fn record_degraded(&mut self) {
+        self.degraded_requests += 1;
+    }
+
+    /// Record one injected fault (delay or panic).
+    pub fn record_fault(&mut self) {
+        self.faults_injected += 1;
+    }
+
+    /// Record one supervisor restart of `shard`.
+    pub fn record_shard_restart(&mut self, shard: usize) {
+        if self.shard_restarts.len() <= shard {
+            self.shard_restarts.resize(shard + 1, 0);
+        }
+        self.shard_restarts[shard] += 1;
+    }
+
+    /// Total supervisor restarts across the fleet.
+    pub fn total_shard_restarts(&self) -> u64 {
+        self.shard_restarts.iter().sum()
     }
 
     /// How long a rejected caller should plausibly wait before
@@ -339,6 +395,22 @@ impl Metrics {
             s += &format!("  rejected (overload): {}\n",
                           self.rejected);
         }
+        if self.degraded_requests > 0 {
+            s += &format!("  degraded (overload): {}\n",
+                          self.degraded_requests);
+        }
+        if self.deadline_timeouts > 0 {
+            s += &format!("  deadline timeouts: {}\n",
+                          self.deadline_timeouts);
+        }
+        if self.faults_injected > 0 {
+            s += &format!("  faults injected: {}\n",
+                          self.faults_injected);
+        }
+        let restarts = self.total_shard_restarts();
+        if restarts > 0 {
+            s += &format!("  shard restarts: {restarts}\n");
+        }
         for (mode, r) in &self.latencies_us {
             let p50 = r.percentile(50.0).unwrap_or(0);
             let p99 = r.percentile(99.0).unwrap_or(0);
@@ -369,6 +441,13 @@ impl Metrics {
                     );
                     s += &format!(
                         " p50={p50}us p95={p95}us p99={p99}us");
+                }
+                if let Some(&r) = self
+                    .shard_restarts
+                    .get(i)
+                    .filter(|&&r| r > 0)
+                {
+                    s += &format!(" restarts={r}");
                 }
                 s.push('\n');
             }
@@ -455,6 +534,60 @@ mod tests {
                 "summary was: {s}");
         assert!(s.contains("#2=3req/1b p50=7us p95=7us p99=7us"));
         assert!(s.contains("#1=0req/0b\n"));
+    }
+
+    #[test]
+    fn fault_tolerance_counters_and_summary_lines() {
+        let mut m = Metrics::default();
+        let quiet = m.summary();
+        for line in ["degraded", "deadline", "faults injected",
+                     "shard restarts"] {
+            assert!(!quiet.contains(line),
+                    "no '{line}' line until something happened");
+        }
+        m.record_degraded();
+        m.record_degraded();
+        m.record_deadline_timeout();
+        m.record_fault();
+        m.record_fault();
+        m.record_fault();
+        m.record_shard_restart(2);
+        m.record_shard_restart(2);
+        m.record_shard_restart(0);
+        assert_eq!(m.degraded_requests, 2);
+        assert_eq!(m.deadline_timeouts, 1);
+        assert_eq!(m.faults_injected, 3);
+        assert_eq!(m.shard_restarts, vec![1, 0, 2]);
+        assert_eq!(m.total_shard_restarts(), 3);
+        // Make the shard lines render, then check the suffixes.
+        m.record_shard(0, 1);
+        m.record_shard(2, 1);
+        let s = m.summary();
+        assert!(s.contains("degraded (overload): 2"), "{s}");
+        assert!(s.contains("deadline timeouts: 1"), "{s}");
+        assert!(s.contains("faults injected: 3"), "{s}");
+        assert!(s.contains("shard restarts: 3"), "{s}");
+        assert!(s.contains("#2=1req/1b restarts=2"), "{s}");
+        assert!(s.contains("#1=0req/0b\n"),
+                "untouched shard keeps a clean line: {s}");
+    }
+
+    #[test]
+    fn lock_metrics_recovers_from_poison() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            g.record_rejected();
+            panic!("poison the metrics lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        let mut g = lock_metrics(&m);
+        g.record_rejected();
+        assert_eq!(g.rejected, 2,
+                   "counter state survives the poisoned update");
     }
 
     #[test]

@@ -30,10 +30,45 @@
 //! weights (if on disk) or a deterministic synthetic model — `serve`
 //! therefore always comes up, artifacts or not.
 //!
-//! [`metrics`] records latency percentiles per mode, batch sizes, and
-//! per-shard request/batch counters plus per-shard latency
-//! percentiles (p50/p95/p99 — a slow shard shows up by name in the
-//! summary, not diluted into the global per-mode numbers).
+//! ## Fault tolerance
+//!
+//! Every accepted request terminates in exactly one typed reply
+//! ([`RequestResult`]) — the serving paths carry no `.unwrap()` /
+//! `.expect(` (grep-gated by `scripts/verify.sh`):
+//!
+//! * **Shard supervision.** Each planar shard runs its loop inside
+//!   `catch_unwind`. On a panic mid-batch the supervisor re-queues the
+//!   in-flight batch (each request carries an attempt counter;
+//!   [`CoordinatorConfig::shard_retries`] retries, then a typed
+//!   [`RequestError::ShardFailed`]), respawns the shard body with a
+//!   fresh plan-cached [`Session`], and counts the restart in
+//!   [`Metrics::shard_restarts`]. A retried batch returns logits
+//!   bit-identical to a clean run — the exact kernel makes recovery
+//!   invisible in the outputs.
+//! * **Request deadlines.** A per-request budget
+//!   ([`InferenceRequest::deadline_ms`], defaulted from
+//!   [`CoordinatorConfig::default_deadline_ms`]) is checked at the two
+//!   points where a request can grow stale: the front loop drops
+//!   expired requests before dispatch, and shards re-check before
+//!   starting a batch — both answer [`RequestError::DeadlineExceeded`]
+//!   instead of burning kernel time on dead work.
+//! * **Deterministic fault injection.** A seeded [`FaultPlan`]
+//!   (configured through `EngineConfig::faults` / `SPADE_FAULTS`)
+//!   injects shard panics and latency spikes at configured rates —
+//!   compiled in always, default off, so chaos tests exercise the
+//!   production recovery code. See [`faults`].
+//! * **Degrade-under-load.** With bounded queues, admissions between
+//!   `degrade_at` and `reject_at` (fractions of the fleet capacity)
+//!   are answered at one precision step cheaper than the policy
+//!   default (P32→P16→P8, [`router::degrade_step`]) instead of being
+//!   rejected; replies carry [`InferenceResponse::degraded`] and the
+//!   logits are bit-identical to a clean run at the cheaper mode.
+//!   [`Overloaded`] remains the backstop above `reject_at`.
+//!
+//! [`metrics`] records latency percentiles per mode, batch sizes,
+//! per-shard request/batch/restart counters plus per-shard latency
+//! percentiles, and the fault-tolerance counters
+//! (`deadline_timeouts`, `degraded_requests`, `faults_injected`).
 //!
 //! Threading: callers submit over an mpsc channel and wait on a
 //! oneshot-style channel. No tokio — the workload is compute-bound
@@ -41,24 +76,31 @@
 //! (and the offline build has no async runtime crates).
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod router;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::{Metrics, MetricsConfig};
+pub use faults::{Fault, FaultInjector, FaultPlan};
+pub use metrics::{lock_metrics, Metrics, MetricsConfig};
 pub use router::{RoutePolicy, Router, ShardAffinity, ShardRouter};
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::engine::Mode;
 use crate::nn::{Backend, Model, Precision, Session, Tensor};
 use crate::runtime::{Executable, Runtime};
+
+/// Default [`CoordinatorConfig::shard_retries`]: a panicked batch is
+/// re-queued twice (three attempts total) before failing typed.
+pub const DEFAULT_SHARD_RETRIES: u32 = 2;
 
 /// An inference request.
 #[derive(Debug, Clone)]
@@ -67,8 +109,13 @@ pub struct InferenceRequest {
     pub id: u64,
     /// Flattened input (model input shape, single example).
     pub input: Vec<f32>,
-    /// Client-pinned precision, if any.
+    /// Client-pinned precision, if any. Pinned requests are never
+    /// degraded under load (explicit beats adaptive).
     pub mode: Option<Mode>,
+    /// Per-request deadline override, milliseconds from submit.
+    /// `None` uses [`CoordinatorConfig::default_deadline_ms`]; an
+    /// effective budget of 0 means no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 /// The reply.
@@ -82,10 +129,88 @@ pub struct InferenceResponse {
     pub mode: Mode,
     /// End-to-end latency, microseconds.
     pub latency_us: u64,
+    /// True when overload admission routed this request to a cheaper
+    /// precision than the policy default ([`CoordinatorConfig::degrade_at`]).
+    /// The logits are still bit-exact for [`InferenceResponse::mode`].
+    pub degraded: bool,
 }
 
+/// Typed per-request failure: how an *accepted* request can end
+/// without logits. ([`Overloaded`] is different — it rejects at
+/// submit, before acceptance.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request's deadline expired before compute started (in the
+    /// batch window or in a shard queue).
+    DeadlineExceeded {
+        /// Request id.
+        id: u64,
+        /// The effective budget that was exceeded, ms.
+        deadline_ms: u64,
+        /// Observed queue time at expiry, ms.
+        waited_ms: u64,
+    },
+    /// The shard executing the batch panicked and every retry
+    /// ([`CoordinatorConfig::shard_retries`]) panicked again.
+    ShardFailed {
+        /// Request id.
+        id: u64,
+        /// Shard that failed the final attempt.
+        shard: usize,
+        /// Total attempts made (retries + 1).
+        attempts: u32,
+    },
+    /// The coordinator shut down in the submit race window — the
+    /// request was admitted but never enqueued.
+    Disconnected {
+        /// Request id.
+        id: u64,
+    },
+}
+
+impl RequestError {
+    /// The id of the request this error answers.
+    pub fn id(&self) -> u64 {
+        match *self {
+            RequestError::DeadlineExceeded { id, .. }
+            | RequestError::ShardFailed { id, .. }
+            | RequestError::Disconnected { id } => id,
+        }
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            RequestError::DeadlineExceeded { id, deadline_ms,
+                                             waited_ms } => {
+                write!(f,
+                       "request {id}: deadline of {deadline_ms} ms \
+                        exceeded after {waited_ms} ms in queue")
+            }
+            RequestError::ShardFailed { id, shard, attempts } => {
+                write!(f,
+                       "request {id}: shard {shard} panicked on all \
+                        {attempts} attempt(s) — giving up")
+            }
+            RequestError::Disconnected { id } => {
+                write!(f,
+                       "request {id}: coordinator shut down before \
+                        the request was enqueued")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// What a caller receives for an accepted request: logits, or a typed
+/// reason the request could not be served.
+pub type RequestResult = Result<InferenceResponse, RequestError>;
+
 enum Job {
-    Infer(InferenceRequest, Instant, mpsc::Sender<InferenceResponse>),
+    Infer(PendingRequest),
     Shutdown,
 }
 
@@ -110,14 +235,37 @@ pub struct CoordinatorConfig {
     pub affinity: ShardAffinity,
     /// Per-shard bound on accepted-but-uncompleted requests; 0
     /// (default) = unbounded, the pre-backpressure behavior. When the
-    /// whole fleet is full — pending requests ≥ shards × `max_queue`
-    /// (the PJRT engine counts as one shard) —
-    /// [`Coordinator::submit`] rejects with a typed [`Overloaded`]
-    /// instead of queueing without bound, and the reject is counted
-    /// in [`Metrics::rejected`]. The bound is *soft* by one in-flight
-    /// submit per racing caller thread: admission checks then
-    /// increments without a lock on the submit path.
+    /// whole fleet is full — pending requests ≥ the `reject_at`
+    /// fraction of shards × `max_queue` (the PJRT engine counts as
+    /// one shard) — [`Coordinator::submit`] rejects with a typed
+    /// [`Overloaded`] instead of queueing without bound, and the
+    /// reject is counted in [`Metrics::rejected`]. The bound is
+    /// *soft* by one in-flight submit per racing caller thread:
+    /// admission checks then increments without a lock on the submit
+    /// path.
     pub max_queue: usize,
+    /// Default per-request deadline, milliseconds from submit; 0
+    /// (default) = no deadline. Requests override it with
+    /// [`InferenceRequest::deadline_ms`].
+    pub default_deadline_ms: u64,
+    /// How many times a batch whose shard panicked is re-queued
+    /// before its requests fail with [`RequestError::ShardFailed`].
+    pub shard_retries: u32,
+    /// Degrade-under-load high-water mark as a fraction of the fleet
+    /// capacity (shards × `max_queue`). While pending ≥
+    /// `degrade_at × capacity` (and below the reject bound), unpinned
+    /// submissions are answered one precision step cheaper than the
+    /// policy default and tagged [`InferenceResponse::degraded`].
+    /// 1.0 (default) disables degradation; ignored when `max_queue`
+    /// is 0 (unbounded queues have no load signal).
+    pub degrade_at: f64,
+    /// Reject high-water mark as a fraction of the fleet capacity;
+    /// pending ≥ `reject_at × capacity` answers [`Overloaded`].
+    /// Default 1.0 — the full configured capacity.
+    pub reject_at: f64,
+    /// Deterministic fault injection ([`FaultPlan`]); `None` (default)
+    /// injects nothing. Planar shards only.
+    pub faults: Option<FaultPlan>,
     /// Explicit kernel config for the shard sessions' GEMMs; `None`
     /// uses the installed process default
     /// ([`crate::kernel::settings::current`]).
@@ -145,6 +293,11 @@ impl Default for CoordinatorConfig {
             shards: 0,
             affinity: ShardAffinity::LeastLoaded,
             max_queue: 0,
+            default_deadline_ms: 0,
+            shard_retries: DEFAULT_SHARD_RETRIES,
+            degrade_at: 1.0,
+            reject_at: 1.0,
+            faults: None,
             kernel: None,
             fused: true,
             sparse_threshold: 0.25,
@@ -153,15 +306,17 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Typed backpressure error: every shard's queue is full, so the
-/// request was rejected instead of enqueued
-/// ([`CoordinatorConfig::max_queue`]). Carries the observed load so
-/// callers can log or shed intelligently.
+/// Typed backpressure error: pending requests crossed the reject
+/// bound ([`CoordinatorConfig::reject_at`] ×
+/// [`CoordinatorConfig::max_queue`] × shards), so the request was
+/// rejected instead of enqueued. Carries the observed load so callers
+/// can log or shed intelligently.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Overloaded {
     /// Accepted-but-uncompleted requests at rejection time.
     pub pending: usize,
-    /// The fleet-wide bound (shards × max_queue).
+    /// The effective fleet-wide bound (`reject_at` × shards ×
+    /// max_queue).
     pub capacity: usize,
     /// How long the caller should plausibly wait before retrying:
     /// the pending backlog divided across the shards at the worst
@@ -209,8 +364,18 @@ pub struct Coordinator {
     /// decremented by the executing engine after replies are
     /// stamped) — the backpressure signal.
     pending: Arc<AtomicUsize>,
-    /// Fleet-wide pending bound (shards × max_queue; 0 = unbounded).
-    capacity: usize,
+    /// Pending count at which unpinned admissions degrade
+    /// (`usize::MAX` when degradation is off or queues unbounded).
+    degrade_limit: usize,
+    /// Pending count at which submits reject (`usize::MAX` when
+    /// unbounded).
+    reject_limit: usize,
+    /// One precision step below the policy default — the mode
+    /// degraded admissions pin (`None` when the policy already runs
+    /// the cheapest mode).
+    degrade_mode: Option<Mode>,
+    /// Default per-request deadline budget, ms (0 = none).
+    default_deadline_ms: u64,
     /// Worker count the retry-after hint divides the backlog across
     /// (1 on the single-worker PJRT engine).
     shards: usize,
@@ -234,7 +399,10 @@ impl Coordinator {
         let pending_w = pending.clone();
         // The PJRT engine is one executable-owning worker: its fleet
         // capacity is one shard's queue bound.
-        let capacity = cfg.max_queue;
+        let (degrade_limit, reject_limit) = admission_limits(
+            cfg.max_queue, cfg.degrade_at, cfg.reject_at);
+        let degrade_mode =
+            router::degrade_step(cfg.policy.default_mode());
 
         let worker = std::thread::spawn(move || {
             // Build the PJRT runtime on this thread.
@@ -278,7 +446,10 @@ impl Coordinator {
             .recv()
             .context("coordinator worker died during setup")??;
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
-                         pending, capacity, shards: 1 })
+                         pending, degrade_limit, reject_limit,
+                         degrade_mode,
+                         default_deadline_ms: cfg.default_deadline_ms,
+                         shards: 1 })
     }
 
     /// Start the sharded planar engine on an in-memory [`Model`] — no
@@ -287,7 +458,9 @@ impl Coordinator {
     /// [`Session`], so every (layer, mode) weight tensor is
     /// quantized+decoded once per shard and reused across all of that
     /// shard's batches (each shard clones the model: the weight-plan
-    /// caches are deliberately independent, one per core group).
+    /// caches are deliberately independent, one per core group). Each
+    /// shard body is supervised — see the module docs, "Fault
+    /// tolerance".
     pub fn start_with_model(model: Model, cfg: CoordinatorConfig)
                             -> Result<Coordinator> {
         model.validate()?;
@@ -305,36 +478,47 @@ impl Coordinator {
 
         let nshards = effective_shards(cfg.shards);
         let capacity = cfg.max_queue.saturating_mul(nshards);
-        let shards: Vec<ShardHandle> = (0..nshards)
-            .map(|sid| {
-                let m = model.clone();
-                let metrics = metrics.clone();
-                let (stx, srx) = mpsc::channel::<ShardJob>();
-                let inflight = Arc::new(AtomicUsize::new(0));
-                let inflight_w = inflight.clone();
-                let pending_w = pending.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("spade-shard-{sid}"))
-                    .spawn(move || {
-                        let mut sess = Session::owned(m);
-                        if let Some(kc) = kernel_cfg {
-                            sess.set_kernel_config(kc);
-                        }
-                        sess.set_fused(fused);
-                        sess.set_sparse_threshold(sparse_threshold);
-                        shard_loop(srx, sess, sid, inflight_w,
-                                   pending_w, metrics);
-                    })
-                    .expect("spawn coordinator shard");
-                ShardHandle { tx: stx, inflight, handle }
-            })
-            .collect();
+        let (degrade_limit, reject_limit) = admission_limits(
+            capacity, cfg.degrade_at, cfg.reject_at);
+        let degrade_mode =
+            router::degrade_step(cfg.policy.default_mode());
+        let mut shards: Vec<ShardHandle> =
+            Vec::with_capacity(nshards);
+        for sid in 0..nshards {
+            let m = model.clone();
+            let (stx, srx) = mpsc::channel::<ShardJob>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let ctx = ShardCtx {
+                sid,
+                inflight: inflight.clone(),
+                pending: pending.clone(),
+                metrics: metrics.clone(),
+                shard_retries: cfg.shard_retries,
+            };
+            let faults = cfg.faults.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("spade-shard-{sid}"))
+                .spawn(move || {
+                    supervise_shard(srx, m, kernel_cfg, fused,
+                                    sparse_threshold, faults, ctx);
+                })
+                .with_context(|| {
+                    format!("spawn coordinator shard {sid}")
+                })?;
+            shards.push(ShardHandle { tx: stx, inflight, handle });
+        }
 
+        let pending_f = pending.clone();
+        let metrics_f = metrics.clone();
         let worker = std::thread::spawn(move || {
-            planar_front_loop(rx, shards, bcfg, policy, affinity);
+            planar_front_loop(rx, shards, bcfg, policy, affinity,
+                              pending_f, metrics_f);
         });
         Ok(Coordinator { tx, worker: Some(worker), metrics, input_len,
-                         pending, capacity, shards: nshards })
+                         pending, degrade_limit, reject_limit,
+                         degrade_mode,
+                         default_deadline_ms: cfg.default_deadline_ms,
+                         shards: nshards })
     }
 
     /// Start serving `cfg.model` on the best engine available on this
@@ -376,60 +560,101 @@ impl Coordinator {
         self.input_len
     }
 
-    /// Submit a request; returns a receiver for the response, or a
-    /// typed [`Overloaded`] error when the configured queue bound
-    /// ([`CoordinatorConfig::max_queue`]) is hit — every shard full.
-    /// With the default unbounded queues this never fails. Rejects
-    /// are counted in [`Metrics::rejected`].
+    /// Submit a request; returns a receiver for the typed
+    /// [`RequestResult`], or an [`Overloaded`] error when pending
+    /// requests crossed the reject bound. With the default unbounded
+    /// queues this never fails. Rejects are counted in
+    /// [`Metrics::rejected`].
+    ///
+    /// In the degrade band (pending between the
+    /// [`CoordinatorConfig::degrade_at`] and
+    /// [`CoordinatorConfig::reject_at`] marks) unpinned requests are
+    /// admitted pinned to one precision step below the policy default
+    /// and their replies are tagged
+    /// [`InferenceResponse::degraded`]; explicitly pinned requests
+    /// are never degraded.
     ///
     /// Panics (in the calling thread) if the input length does not
     /// match [`Coordinator::input_len`] — a malformed request must
     /// neither kill the shared worker nor silently produce logits.
     pub fn submit(&self, req: InferenceRequest)
-                  -> Result<mpsc::Receiver<InferenceResponse>,
+                  -> Result<mpsc::Receiver<RequestResult>,
                             Overloaded> {
         assert_eq!(req.input.len(), self.input_len,
                    "request {}: input length {} != model input {}",
                    req.id, req.input.len(), self.input_len);
-        if self.capacity > 0 {
-            let now = self.pending.load(Ordering::Acquire);
-            if now >= self.capacity {
-                let mut m = self.metrics.lock().unwrap();
-                m.record_rejected();
-                let retry_after_ms =
-                    m.retry_after_hint(now, self.shards);
-                m.last_retry_after_ms = retry_after_ms;
-                drop(m);
-                return Err(Overloaded { pending: now,
-                                        capacity: self.capacity,
-                                        retry_after_ms });
+        let mut req = req;
+        let mut degraded = false;
+        let now_pending = self.pending.load(Ordering::Acquire);
+        if now_pending >= self.reject_limit {
+            let mut m = lock_metrics(&self.metrics);
+            m.record_rejected();
+            let retry_after_ms =
+                m.retry_after_hint(now_pending, self.shards);
+            m.last_retry_after_ms = retry_after_ms;
+            drop(m);
+            return Err(Overloaded { pending: now_pending,
+                                    capacity: self.reject_limit,
+                                    retry_after_ms });
+        }
+        if now_pending >= self.degrade_limit && req.mode.is_none() {
+            if let Some(dm) = self.degrade_mode {
+                req.mode = Some(dm);
+                degraded = true;
+                lock_metrics(&self.metrics).record_degraded();
             }
         }
+        let t0 = Instant::now();
+        let deadline_ms =
+            req.deadline_ms.unwrap_or(self.default_deadline_ms);
+        let deadline = if deadline_ms > 0 {
+            Some(t0 + Duration::from_millis(deadline_ms))
+        } else {
+            None
+        };
         self.pending.fetch_add(1, Ordering::AcqRel);
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Job::Infer(req, Instant::now(), tx))
-            .expect("coordinator worker gone");
+        let pr = PendingRequest { req, t0, deadline, deadline_ms,
+                                  attempts: 0, degraded, tx };
+        if let Err(mpsc::SendError(job)) =
+            self.tx.send(Job::Infer(pr))
+        {
+            // Front loop already gone (shutdown race): the request
+            // was never enqueued — undo the admission and answer
+            // typed instead of panicking the caller.
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+            if let Job::Infer(pr) = job {
+                let _ = pr.tx.send(Err(RequestError::Disconnected {
+                    id: pr.req.id,
+                }));
+            }
+        }
         Ok(rx)
     }
 
-    /// Blocking convenience: submit and wait. An [`Overloaded`]
-    /// reject surfaces as an error (callers that want to retry should
-    /// use [`Coordinator::submit`] and match on the typed error).
+    /// Blocking convenience: submit and wait. Both an [`Overloaded`]
+    /// reject and a typed [`RequestError`] surface as errors (callers
+    /// that want to retry or distinguish them should use
+    /// [`Coordinator::submit`] and match).
     pub fn infer(&self, req: InferenceRequest)
                  -> Result<InferenceResponse> {
-        self.submit(req)?
+        let reply = self
+            .submit(req)?
             .recv()
-            .context("worker dropped request")
+            .context("worker dropped request")?;
+        Ok(reply?)
     }
 
-    /// Stop the worker and join it.
+    /// Stop the worker and join it. Panic-safe drain: the front loop
+    /// closes every shard channel before joining any shard, and a
+    /// shard that died mid-drain cannot deadlock the join (see
+    /// [`drain_shards`]).
     pub fn shutdown(mut self) -> Metrics {
         let _ = self.tx.send(Job::Shutdown);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
-        self.metrics.lock().unwrap().clone()
+        lock_metrics(&self.metrics).clone()
     }
 }
 
@@ -454,11 +679,62 @@ fn effective_shards(requested: usize) -> usize {
     (hw / 2).clamp(1, 4)
 }
 
-type Pending = (InferenceRequest, Instant, mpsc::Sender<InferenceResponse>);
+/// Turn the (degrade_at, reject_at) fractions into absolute pending
+/// bounds. Capacity 0 (unbounded) disables both. The reject bound is
+/// at least 1 (a bounded coordinator must accept something before it
+/// can be full), and the degrade bound never exceeds it.
+fn admission_limits(capacity: usize, degrade_at: f64, reject_at: f64)
+                    -> (usize, usize) {
+    if capacity == 0 {
+        return (usize::MAX, usize::MAX);
+    }
+    let frac = |f: f64| -> usize {
+        let f = if f.is_finite() { f.clamp(0.0, 1.0) } else { 1.0 };
+        ((capacity as f64) * f).ceil() as usize
+    };
+    let reject = frac(reject_at).max(1);
+    let degrade = frac(degrade_at).min(reject);
+    (degrade, reject)
+}
+
+/// Recover a possibly-poisoned mutex: a panicking shard poisons locks
+/// it held, but every structure under them (the in-flight slot, plain
+/// counters) stays consistent — the supervisor takes the data and
+/// moves on.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// An accepted request riding through the pipeline: the caller's
+/// request plus the coordinator's bookkeeping (admission time,
+/// deadline, retry attempts, degraded tag, reply channel).
+struct PendingRequest {
+    req: InferenceRequest,
+    /// Admission time (latency stamps and deadline base).
+    t0: Instant,
+    /// Absolute expiry, if a deadline applies.
+    deadline: Option<Instant>,
+    /// The effective budget in ms (for the typed error message).
+    deadline_ms: u64,
+    /// Shard attempts so far (supervision re-queues bump this).
+    attempts: u32,
+    /// Admitted through the degrade band.
+    degraded: bool,
+    tx: mpsc::Sender<RequestResult>,
+}
+
+impl PendingRequest {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+}
 
 /// A routed batch on its way to a shard: the grouped requests and the
 /// MODE the router chose for them.
-type ShardJob = (Vec<Pending>, Mode);
+struct ShardJob {
+    items: Vec<PendingRequest>,
+    mode: Mode,
+}
 
 /// Front-loop handle to one shard thread.
 struct ShardHandle {
@@ -470,27 +746,38 @@ struct ShardHandle {
     handle: std::thread::JoinHandle<()>,
 }
 
+/// Everything a shard supervisor needs besides the job channel and
+/// the model: identity, the shared counters it settles per request,
+/// and the retry budget.
+struct ShardCtx {
+    sid: usize,
+    inflight: Arc<AtomicUsize>,
+    pending: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    shard_retries: u32,
+}
+
 /// Shared front-loop state machine: pull at least one job (blocking),
 /// drain greedily to fill the batch window (size target or deadline),
 /// then hand every flushed batch to `sink`. Returns when a shutdown is
 /// received or all submitters hung up, after draining the batcher —
 /// the one copy of the recv/deadline logic both engines run.
 fn batching_loop(rx: mpsc::Receiver<Job>, bcfg: BatcherConfig,
-                 mut sink: impl FnMut(Batch<Pending>)) {
-    let mut batcher: Batcher<Pending> = Batcher::new(bcfg);
+                 mut sink: impl FnMut(Batch<PendingRequest>)) {
+    let mut batcher: Batcher<PendingRequest> = Batcher::new(bcfg);
     let mut open = true;
 
     while open {
         match rx.recv() {
-            Ok(Job::Infer(r, t, tx)) => {
-                batcher.push((r, t, tx));
+            Ok(Job::Infer(pr)) => {
+                batcher.push(pr);
                 let deadline = Instant::now() + batcher.max_wait();
                 while !batcher.primary_full() {
                     let timeout = deadline
                         .saturating_duration_since(Instant::now());
                     match rx.recv_timeout(timeout) {
-                        Ok(Job::Infer(r, t, tx)) => {
-                            batcher.push((r, t, tx));
+                        Ok(Job::Infer(pr)) => {
+                            batcher.push(pr);
                         }
                         Ok(Job::Shutdown) => {
                             open = false;
@@ -514,6 +801,10 @@ fn batching_loop(rx: mpsc::Receiver<Job>, bcfg: BatcherConfig,
 
 /// PJRT engine loop: one thread owns the executables, batches, routes
 /// and executes inline (PJRT handles are not shared across threads).
+/// Deadlines and degrade partitioning apply exactly as on the planar
+/// path; shard supervision and fault injection do not (the PJRT
+/// worker executes inline — an execute error fails the batch typed
+/// instead).
 fn pjrt_worker_loop(rx: mpsc::Receiver<Job>,
                     exes: BTreeMap<(Mode, usize), Executable>,
                     bcfg: BatcherConfig, policy: RoutePolicy,
@@ -526,42 +817,115 @@ fn pjrt_worker_loop(rx: mpsc::Receiver<Job>,
 }
 
 /// Planar front loop: batches like the PJRT loop, but hands each
-/// formed batch to the least-loaded shard instead of executing inline.
-/// On shutdown it closes the shard channels and joins the shard
-/// threads (every accepted request gets its response before the
-/// coordinator exits).
+/// formed batch to the least-loaded shard instead of executing
+/// inline. On shutdown it drains the shards ([`drain_shards`]) so
+/// every accepted request gets its reply before the coordinator
+/// exits.
 fn planar_front_loop(rx: mpsc::Receiver<Job>, shards: Vec<ShardHandle>,
                      bcfg: BatcherConfig, policy: RoutePolicy,
-                     affinity: ShardAffinity) {
+                     affinity: ShardAffinity,
+                     pending: Arc<AtomicUsize>,
+                     metrics: Arc<Mutex<Metrics>>) {
     let router = Router::new(policy);
     let mut srouter = ShardRouter::new(shards.len());
     batching_loop(rx, bcfg, |batch| {
         dispatch_batch(batch, &shards, &mut srouter, &router,
-                       affinity);
+                       affinity, &pending, &metrics);
     });
+    drain_shards(shards);
+}
 
-    // Closing each shard's channel ends its loop after the queued
-    // batches drain; joining guarantees all responses are sent.
+/// Explicit, panic-safe drain order: close **every** shard channel
+/// first — all shards see end-of-input and drain their queues
+/// concurrently — then join them. A shard whose thread died during
+/// the drain (a supervisor-level failure; supervised bodies absorb
+/// ordinary panics) surfaces as a join `Err`, which is tolerated so
+/// the remaining shards still get joined instead of the shutdown
+/// deadlocking behind a corpse.
+fn drain_shards(shards: Vec<ShardHandle>) {
+    let mut handles = Vec::with_capacity(shards.len());
     for s in shards {
         let ShardHandle { tx, handle, .. } = s;
         drop(tx);
-        let _ = handle.join();
+        handles.push(handle);
+    }
+    for h in handles {
+        let _ = h.join();
     }
 }
 
-/// Route one batch (mode + shard) and enqueue it. Never blocks: shard
-/// queues are unbounded, and the in-flight counters keep dispatch
-/// steering toward idle shards (under [`ShardAffinity::PinnedMode`]
-/// the MODE decides instead, so each shard's plan cache specializes).
-fn dispatch_batch(batch: Batch<Pending>, shards: &[ShardHandle],
-                  srouter: &mut ShardRouter, router: &Router,
-                  affinity: ShardAffinity) {
-    let items = batch.items;
+/// Fail a set of expired requests with the typed deadline error,
+/// settling the fleet counters they still hold (`inflight` is `None`
+/// before dispatch — only shard-held requests count in-flight).
+fn fail_expired(expired: Vec<PendingRequest>,
+                pending: &AtomicUsize,
+                inflight: Option<&AtomicUsize>,
+                metrics: &Arc<Mutex<Metrics>>) {
+    if expired.is_empty() {
+        return;
+    }
+    let k = expired.len();
+    if let Some(fl) = inflight {
+        fl.fetch_sub(k, Ordering::AcqRel);
+    }
+    pending.fetch_sub(k, Ordering::AcqRel);
+    {
+        let mut m = lock_metrics(metrics);
+        for _ in 0..k {
+            m.record_deadline_timeout();
+        }
+    }
+    for p in expired {
+        let waited_ms = p.t0.elapsed().as_millis() as u64;
+        let _ = p.tx.send(Err(RequestError::DeadlineExceeded {
+            id: p.req.id,
+            deadline_ms: p.deadline_ms,
+            waited_ms,
+        }));
+    }
+}
+
+/// Split a batch into (still live, already expired) at `now`.
+fn split_expired(items: Vec<PendingRequest>)
+                 -> (Vec<PendingRequest>, Vec<PendingRequest>) {
+    let now = Instant::now();
+    items.into_iter().partition(|p| !p.expired(now))
+}
+
+/// Route one batch (mode + shard) and enqueue it. Expired requests
+/// are answered here instead of dispatched. Degraded admissions are
+/// dispatched apart from normal traffic: mixing them would let the
+/// degraded pin drag the whole batch to the cheap mode (the router
+/// takes the widest pin), silently degrading requests that were never
+/// flagged. Never blocks: shard queues are unbounded, and the
+/// in-flight counters keep dispatch steering toward idle shards
+/// (under [`ShardAffinity::PinnedMode`] the MODE decides instead, so
+/// each shard's plan cache specializes).
+fn dispatch_batch(batch: Batch<PendingRequest>,
+                  shards: &[ShardHandle], srouter: &mut ShardRouter,
+                  router: &Router, affinity: ShardAffinity,
+                  pending: &Arc<AtomicUsize>,
+                  metrics: &Arc<Mutex<Metrics>>) {
+    let (live, expired) = split_expired(batch.items);
+    fail_expired(expired, pending.as_ref(), None, metrics);
+    let (degraded, normal): (Vec<_>, Vec<_>) =
+        live.into_iter().partition(|p| p.degraded);
+    for items in [normal, degraded] {
+        dispatch_part(items, shards, srouter, router, affinity,
+                      pending);
+    }
+}
+
+/// Dispatch one already-partitioned group of requests to a shard.
+fn dispatch_part(items: Vec<PendingRequest>, shards: &[ShardHandle],
+                 srouter: &mut ShardRouter, router: &Router,
+                 affinity: ShardAffinity,
+                 pending: &Arc<AtomicUsize>) {
     if items.is_empty() {
         return;
     }
     let pinned: Vec<Option<Mode>> =
-        items.iter().map(|(r, _, _)| r.mode).collect();
+        items.iter().map(|p| p.req.mode).collect();
     let mode = router.route(&pinned);
     let sid = match affinity {
         ShardAffinity::PinnedMode => {
@@ -575,86 +939,253 @@ fn dispatch_batch(batch: Batch<Pending>, shards: &[ShardHandle],
             srouter.pick(&loads)
         }
     };
-    shards[sid].inflight.fetch_add(items.len(), Ordering::AcqRel);
-    shards[sid]
-        .tx
-        .send((items, mode))
-        .expect("coordinator shard gone");
+    let n = items.len();
+    shards[sid].inflight.fetch_add(n, Ordering::AcqRel);
+    if let Err(mpsc::SendError(job)) =
+        shards[sid].tx.send(ShardJob { items, mode })
+    {
+        // A supervised shard only stops receiving when its channel is
+        // dropped at shutdown; if a send still fails, answer typed
+        // rather than losing the replies.
+        shards[sid].inflight.fetch_sub(n, Ordering::AcqRel);
+        pending.fetch_sub(n, Ordering::AcqRel);
+        for p in job.items {
+            let _ = p.tx.send(Err(RequestError::ShardFailed {
+                id: p.req.id,
+                shard: sid,
+                attempts: p.attempts,
+            }));
+        }
+    }
+}
+
+/// Shard supervisor: runs the shard body under `catch_unwind`,
+/// forever. On a panic (injected or organic) it recovers the
+/// in-flight batch from the shared slot, re-queues each request up to
+/// `shard_retries` times (then fails it typed), counts the restart,
+/// and re-enters the body with a **fresh** plan-cached [`Session`].
+/// The fault injector lives out here, so its deterministic stream —
+/// and therefore a retried batch's *fresh* fault draw — survives
+/// restarts.
+fn supervise_shard(rx: mpsc::Receiver<ShardJob>, model: Model,
+                   kernel_cfg: Option<crate::kernel::KernelConfig>,
+                   fused: bool, sparse_threshold: f64,
+                   faults: Option<FaultPlan>, ctx: ShardCtx) {
+    let mut injector =
+        faults.as_ref().map(|p| FaultInjector::new(p, ctx.sid));
+    // Batches recovered from a panic, to run before new channel work.
+    let mut carry: Vec<ShardJob> = Vec::new();
+    // The batch currently being executed, shared with the body so an
+    // unwinding panic cannot lose it.
+    let inflight_slot: Mutex<Option<ShardJob>> = Mutex::new(None);
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let mut sess = Session::owned(model.clone());
+            if let Some(kc) = kernel_cfg {
+                sess.set_kernel_config(kc);
+            }
+            sess.set_fused(fused);
+            sess.set_sparse_threshold(sparse_threshold);
+            shard_loop(&rx, &mut sess, &inflight_slot, &mut carry,
+                       &mut injector, &ctx);
+        }));
+        match outcome {
+            // Clean exit: channel closed and every batch (including
+            // carried retries) served.
+            Ok(()) => return,
+            Err(_) => {
+                lock_metrics(&ctx.metrics)
+                    .record_shard_restart(ctx.sid);
+                if let Some(job) = lock_recover(&inflight_slot).take()
+                {
+                    let mut retry: Vec<PendingRequest> = Vec::new();
+                    for mut p in job.items {
+                        p.attempts += 1;
+                        if p.attempts > ctx.shard_retries {
+                            ctx.inflight.fetch_sub(1, Ordering::AcqRel);
+                            ctx.pending.fetch_sub(1, Ordering::AcqRel);
+                            let _ = p.tx.send(Err(
+                                RequestError::ShardFailed {
+                                    id: p.req.id,
+                                    shard: ctx.sid,
+                                    attempts: p.attempts,
+                                }));
+                        } else {
+                            retry.push(p);
+                        }
+                    }
+                    if !retry.is_empty() {
+                        carry.push(ShardJob { items: retry,
+                                              mode: job.mode });
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Shard body: each batch runs as one planar forward pass (the batch
 /// dimension rides the GEMM's m axis) on this shard's private
 /// [`Session`] — weight plans decoded on first use, reused forever.
-fn shard_loop(rx: mpsc::Receiver<ShardJob>, mut sess: Session<'static>,
-              shard: usize, inflight: Arc<AtomicUsize>,
-              pending: Arc<AtomicUsize>,
-              metrics: Arc<Mutex<Metrics>>) {
-    while let Ok((items, mode)) = rx.recv() {
-        let n = items.len();
-        let outputs = run_planar_batch(&items, mode, &mut sess);
-        // Publish idleness before replying: a caller reacting to its
-        // response must observe this shard as free again (both the
-        // shard-load signal and the fleet backpressure counter).
-        inflight.fetch_sub(n, Ordering::AcqRel);
-        pending.fetch_sub(n, Ordering::AcqRel);
-        // Stamp latencies before taking the metrics lock, and send
-        // replies after releasing it: shards must not serialize their
-        // reply path (or inflate each other's latency samples) on the
-        // shared mutex.
-        let replies: Vec<(mpsc::Sender<InferenceResponse>,
-                          InferenceResponse)> = items
-            .into_iter()
-            .zip(outputs)
-            .map(|((r, t0, tx), logits)| {
-                let latency_us = t0.elapsed().as_micros() as u64;
-                (tx, InferenceResponse { id: r.id, logits, mode,
-                                         latency_us })
-            })
-            .collect();
-        {
-            let mut m = metrics.lock().unwrap();
-            m.record_shard(shard, n);
-            for (_, resp) in &replies {
-                m.record(mode, resp.latency_us, n);
-                m.record_shard_latency(shard, resp.latency_us);
-            }
-        }
-        for (tx, resp) in replies {
-            let _ = tx.send(resp);
-        }
+/// Carried batches (recovered from a previous panic) run first, so a
+/// drain with a dying shard still terminates: the channel may already
+/// be closed while retries remain.
+fn shard_loop(rx: &mpsc::Receiver<ShardJob>,
+              sess: &mut Session<'static>,
+              slot: &Mutex<Option<ShardJob>>,
+              carry: &mut Vec<ShardJob>,
+              injector: &mut Option<FaultInjector>, ctx: &ShardCtx) {
+    while !carry.is_empty() {
+        let job = carry.remove(0);
+        run_shard_job(job, sess, slot, injector, ctx);
+    }
+    while let Ok(job) = rx.recv() {
+        run_shard_job(job, sess, slot, injector, ctx);
     }
 }
 
-/// Execute one batch on the PJRT engine and reply.
-fn run_pjrt_batch_job(batch: Batch<Pending>,
+/// Execute one routed batch on a shard: deadline re-check, fault
+/// injection, planar forward, counter settlement, replies.
+fn run_shard_job(job: ShardJob, sess: &mut Session<'static>,
+                 slot: &Mutex<Option<ShardJob>>,
+                 injector: &mut Option<FaultInjector>,
+                 ctx: &ShardCtx) {
+    let mode = job.mode;
+    // Deadline re-check at compute start: requests that went stale in
+    // the shard queue answer typed instead of burning kernel time.
+    let (live, expired) = split_expired(job.items);
+    fail_expired(expired, ctx.pending.as_ref(),
+                 Some(ctx.inflight.as_ref()), &ctx.metrics);
+    if live.is_empty() {
+        return;
+    }
+
+    // From here the batch lives in the recovery slot: a panic below
+    // (injected or organic) unwinds into the supervisor, which takes
+    // the slot and retries or fails the requests typed.
+    *lock_recover(slot) = Some(ShardJob { items: live, mode });
+
+    if let Some(inj) = injector.as_mut() {
+        let fault = inj.next();
+        if fault.count() > 0 {
+            let mut m = lock_metrics(&ctx.metrics);
+            for _ in 0..fault.count() {
+                m.record_fault();
+            }
+        }
+        if let Some(d) = fault.delay {
+            std::thread::sleep(d);
+        }
+        if fault.panic {
+            panic!("injected shard fault (FaultPlan shard_panic)");
+        }
+    }
+
+    // Compute while holding the slot: unwinding mid-forward poisons
+    // the lock, and the supervisor recovers the batch from it.
+    let outputs = {
+        let guard = lock_recover(slot);
+        match guard.as_ref() {
+            Some(j) => run_planar_batch(&j.items, mode, sess),
+            None => return,
+        }
+    };
+    let job = match lock_recover(slot).take() {
+        Some(j) => j,
+        None => return,
+    };
+    let items = job.items;
+    let n = items.len();
+    // Publish idleness before replying: a caller reacting to its
+    // response must observe this shard as free again (both the
+    // shard-load signal and the fleet backpressure counter).
+    ctx.inflight.fetch_sub(n, Ordering::AcqRel);
+    ctx.pending.fetch_sub(n, Ordering::AcqRel);
+    // Stamp latencies before taking the metrics lock, and send
+    // replies after releasing it: shards must not serialize their
+    // reply path (or inflate each other's latency samples) on the
+    // shared mutex.
+    let replies: Vec<(mpsc::Sender<RequestResult>,
+                      InferenceResponse)> = items
+        .into_iter()
+        .zip(outputs)
+        .map(|(p, logits)| {
+            let latency_us = p.t0.elapsed().as_micros() as u64;
+            let resp = InferenceResponse { id: p.req.id, logits,
+                                           mode, latency_us,
+                                           degraded: p.degraded };
+            (p.tx, resp)
+        })
+        .collect();
+    {
+        let mut m = lock_metrics(&ctx.metrics);
+        m.record_shard(ctx.sid, n);
+        for (_, resp) in &replies {
+            m.record(mode, resp.latency_us, n);
+            m.record_shard_latency(ctx.sid, resp.latency_us);
+        }
+    }
+    for (tx, resp) in replies {
+        let _ = tx.send(Ok(resp));
+    }
+}
+
+/// Execute one batch on the PJRT engine and reply. Expired requests
+/// answer typed; degraded admissions are partitioned like the planar
+/// path; an execute error fails the whole sub-batch with a typed
+/// [`RequestError::ShardFailed`] (the PJRT worker is not supervised —
+/// its executables live on this thread and survive the error).
+fn run_pjrt_batch_job(batch: Batch<PendingRequest>,
                       exes: &BTreeMap<(Mode, usize), Executable>,
                       router: &Router,
                       metrics: &Arc<Mutex<Metrics>>,
                       pending: &Arc<AtomicUsize>) {
-    let items = batch.items;
-    if items.is_empty() {
-        return;
-    }
-    let pinned: Vec<Option<Mode>> =
-        items.iter().map(|(r, _, _)| r.mode).collect();
-    let mode = router.route(&pinned);
-    let n = items.len();
-
-    let outputs = run_pjrt_batch(&items, mode, exes);
-    pending.fetch_sub(n, Ordering::AcqRel);
-
-    let mut m = metrics.lock().unwrap();
-    for ((r, t0, tx), logits) in items.into_iter().zip(outputs) {
-        let latency_us = t0.elapsed().as_micros() as u64;
-        m.record(mode, latency_us, n);
-        let _ = tx.send(InferenceResponse { id: r.id, logits, mode,
-                                            latency_us });
+    let (live, expired) = split_expired(batch.items);
+    fail_expired(expired, pending.as_ref(), None, metrics);
+    let (degraded, normal): (Vec<_>, Vec<_>) =
+        live.into_iter().partition(|p| p.degraded);
+    for items in [normal, degraded] {
+        if items.is_empty() {
+            continue;
+        }
+        let pinned: Vec<Option<Mode>> =
+            items.iter().map(|p| p.req.mode).collect();
+        let mode = router.route(&pinned);
+        let n = items.len();
+        match run_pjrt_batch(&items, mode, exes) {
+            Ok(outputs) => {
+                pending.fetch_sub(n, Ordering::AcqRel);
+                let mut m = lock_metrics(metrics);
+                for (p, logits) in items.into_iter().zip(outputs) {
+                    let latency_us =
+                        p.t0.elapsed().as_micros() as u64;
+                    m.record(mode, latency_us, n);
+                    let _ = p.tx.send(Ok(InferenceResponse {
+                        id: p.req.id,
+                        logits,
+                        mode,
+                        latency_us,
+                        degraded: p.degraded,
+                    }));
+                }
+            }
+            Err(_) => {
+                pending.fetch_sub(n, Ordering::AcqRel);
+                for p in items {
+                    let _ = p.tx.send(Err(RequestError::ShardFailed {
+                        id: p.req.id,
+                        shard: 0,
+                        attempts: p.attempts + 1,
+                    }));
+                }
+            }
+        }
     }
 }
 
-fn run_pjrt_batch(items: &[Pending], mode: Mode,
+fn run_pjrt_batch(items: &[PendingRequest], mode: Mode,
                   exes: &BTreeMap<(Mode, usize), Executable>)
-                  -> Vec<Vec<f32>> {
+                  -> Result<Vec<Vec<f32>>> {
     // Choose the best-fitting executable: batch-32 when full, else b1
     // loop (padding a partial batch wastes identical compute — we report
     // both paths in the metrics).
@@ -662,59 +1193,70 @@ fn run_pjrt_batch(items: &[Pending], mode: Mode,
     let exe32 = exes.get(&(mode, 32));
     let exe1 = exes.get(&(mode, 1));
 
-    let run_one = |input: &[f32]| -> Vec<f32> {
-        if let Some(e) = exe1 {
-            e.run(input).expect("pjrt execute failed")
-        } else {
-            // pad through the batch executable
-            let e = exe32.expect("no executable for mode");
-            let per: usize = e.input_shape().iter().skip(1).product();
-            let mut buf = vec![0.0f32; 32 * per];
-            buf[..per].copy_from_slice(input);
-            let out = e.run(&buf).expect("pjrt execute failed");
-            let oc = e.output_shape()[1];
-            out[..oc].to_vec()
-        }
-    };
-
     let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(n);
-    if n == 32 && exe32.is_some() {
-        let e = exe32.unwrap();
-        let per: usize = e.input_shape().iter().skip(1).product();
-        let mut buf = vec![0.0f32; 32 * per];
-        for (i, (r, _, _)) in items.iter().enumerate() {
-            buf[i * per..(i + 1) * per].copy_from_slice(&r.input);
-        }
-        let flat = e.run(&buf).expect("pjrt execute failed");
-        let oc = e.output_shape()[1];
-        for i in 0..n {
-            outputs.push(flat[i * oc..(i + 1) * oc].to_vec());
-        }
-    } else {
-        for (r, _, _) in items {
-            outputs.push(run_one(&r.input));
+    if n == 32 {
+        if let Some(e) = exe32 {
+            let per: usize =
+                e.input_shape().iter().skip(1).product();
+            let mut buf = vec![0.0f32; 32 * per];
+            for (i, p) in items.iter().enumerate() {
+                buf[i * per..(i + 1) * per]
+                    .copy_from_slice(&p.req.input);
+            }
+            let flat = e.run(&buf).context("pjrt execute failed")?;
+            let oc = e.output_shape()[1];
+            for i in 0..n {
+                outputs.push(flat[i * oc..(i + 1) * oc].to_vec());
+            }
+            return Ok(outputs);
         }
     }
-    outputs
+    for p in items {
+        outputs.push(run_pjrt_one(&p.req.input, exe1, exe32)?);
+    }
+    Ok(outputs)
+}
+
+/// Run one example: the b1 executable when present, else padded
+/// through the batch executable.
+fn run_pjrt_one(input: &[f32], exe1: Option<&Executable>,
+                exe32: Option<&Executable>) -> Result<Vec<f32>> {
+    if let Some(e) = exe1 {
+        return e.run(input).context("pjrt execute failed");
+    }
+    let e = exe32
+        .ok_or_else(|| anyhow::anyhow!("no executable for mode"))?;
+    let per: usize = e.input_shape().iter().skip(1).product();
+    let mut buf = vec![0.0f32; 32 * per];
+    buf[..per].copy_from_slice(input);
+    let out = e.run(&buf).context("pjrt execute failed")?;
+    let oc = e.output_shape()[1];
+    Ok(out[..oc].to_vec())
 }
 
 /// Execute a whole batch through the planar kernel in one forward pass
-/// (the batch dimension rides the GEMM's m axis).
-fn run_planar_batch(items: &[Pending], mode: Mode,
+/// (the batch dimension rides the GEMM's m axis). A forward error is
+/// handled exactly like a shard crash: it unwinds into the
+/// supervisor, which retries the batch on a fresh session or fails it
+/// typed.
+fn run_planar_batch(items: &[PendingRequest], mode: Mode,
                     sess: &mut Session<'static>) -> Vec<Vec<f32>> {
     let [h, w, c] = sess.model().spec.input;
     let per = h * w * c;
     let n = items.len();
     let mut buf = vec![0.0f32; n * per];
-    for (i, (r, _, _)) in items.iter().enumerate() {
+    for (i, p) in items.iter().enumerate() {
         // Lengths are validated at submit(); copy_from_slice would
         // panic on any mismatch rather than serve wrong logits.
-        buf[i * per..(i + 1) * per].copy_from_slice(&r.input);
+        buf[i * per..(i + 1) * per].copy_from_slice(&p.req.input);
     }
     let x = Tensor::from_vec(&[n, h, w, c], buf);
-    let (logits, _stats) = sess
-        .forward(&x, Precision::Posit(mode), Backend::Posit)
-        .expect("planar forward failed");
+    let (logits, _stats) =
+        match sess.forward(&x, Precision::Posit(mode), Backend::Posit)
+        {
+            Ok(out) => out,
+            Err(e) => panic!("planar forward failed: {e}"),
+        };
     let classes = logits.shape[1];
     (0..n)
         .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
@@ -732,6 +1274,7 @@ pub fn tensor_to_requests(x: &Tensor, start_id: u64)
             id: start_id + i as u64,
             input: x.data[i * per..(i + 1) * per].to_vec(),
             mode: None,
+            deadline_ms: None,
         })
         .collect()
 }
@@ -741,7 +1284,6 @@ mod tests {
     use super::*;
     use crate::nn::{ModelSpec, Tensor};
     use std::collections::BTreeMap as Map;
-    use std::time::Duration;
 
     fn have_artifacts() -> bool {
         crate::artifacts_dir().join("manifest.json").is_file()
@@ -783,6 +1325,23 @@ mod tests {
     }
 
     #[test]
+    fn admission_limits_partition_the_capacity() {
+        // Unbounded: both marks off.
+        assert_eq!(admission_limits(0, 0.5, 1.0),
+                   (usize::MAX, usize::MAX));
+        // Defaults: no degrade band, reject at full capacity.
+        assert_eq!(admission_limits(8, 1.0, 1.0), (8, 8));
+        // A band: degrade from 4 pending, reject from 8.
+        assert_eq!(admission_limits(8, 0.5, 1.0), (4, 8));
+        assert_eq!(admission_limits(8, 0.5, 0.75), (4, 6));
+        // Fractions round up (a bound of 0 would degrade/reject an
+        // idle fleet).
+        assert_eq!(admission_limits(3, 0.5, 1.0), (2, 3));
+        // Nonsense fractions clamp instead of exploding.
+        assert_eq!(admission_limits(8, 2.0, -1.0), (1, 1));
+    }
+
+    #[test]
     fn planar_backend_serves_without_artifacts() {
         let coord = Coordinator::start_with_model(
             tiny_model(), CoordinatorConfig::default()).unwrap();
@@ -791,14 +1350,21 @@ mod tests {
         for id in 0..6 {
             let input: Vec<f32> = (0..16).map(|_| rng.f32()).collect();
             let resp = coord
-                .infer(InferenceRequest { id, input, mode: None })
+                .infer(InferenceRequest { id, input, mode: None,
+                                          deadline_ms: None })
                 .unwrap();
             assert_eq!(resp.id, id);
             assert_eq!(resp.logits.len(), 3);
             assert!(resp.logits.iter().all(|v| v.is_finite()));
+            assert!(!resp.degraded,
+                    "unloaded default config never degrades");
         }
         let m = coord.shutdown();
         assert_eq!(m.total_requests, 6);
+        assert_eq!(m.total_shard_restarts(), 0);
+        assert_eq!(m.deadline_timeouts, 0);
+        assert_eq!(m.degraded_requests, 0);
+        assert_eq!(m.faults_injected, 0);
     }
 
     #[test]
@@ -810,6 +1376,7 @@ mod tests {
                 id: 1,
                 input: vec![0.5; 16],
                 mode: Some(Mode::P32x1),
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(resp.mode, Mode::P32x1);
@@ -846,13 +1413,14 @@ mod tests {
                             id: i as u64,
                             input: inp.clone(),
                             mode: None,
+                            deadline_ms: None,
                         })
                         .unwrap()
                 })
                 .collect();
             let out = rxs
                 .into_iter()
-                .map(|rx| rx.recv().unwrap().logits)
+                .map(|rx| rx.recv().unwrap().unwrap().logits)
                 .collect();
             coord.shutdown();
             out
@@ -885,6 +1453,7 @@ mod tests {
                     id,
                     input: vec![0.25; 16],
                     mode: None,
+                    deadline_ms: None,
                 })
                 .unwrap();
         }
@@ -928,6 +1497,7 @@ mod tests {
                     id,
                     input: vec![0.25; 16],
                     mode: Some(Mode::P16x2),
+                    deadline_ms: None,
                 })
                 .unwrap();
             assert_eq!(resp.mode, Mode::P16x2);
@@ -966,6 +1536,7 @@ mod tests {
             id,
             input: vec![0.25; 16],
             mode: None,
+            deadline_ms: None,
         };
         let rx0 = coord.submit(req(0)).unwrap();
         let rx1 = coord.submit(req(1)).unwrap();
@@ -983,8 +1554,8 @@ mod tests {
         // infer() surfaces the same reject as an error.
         assert!(coord.infer(req(3)).is_err());
         let m = coord.shutdown(); // flushes the held batch
-        assert_eq!(rx0.recv().unwrap().id, 0);
-        assert_eq!(rx1.recv().unwrap().id, 1);
+        assert_eq!(rx0.recv().unwrap().unwrap().id, 0);
+        assert_eq!(rx1.recv().unwrap().unwrap().id, 1);
         assert_eq!(m.total_requests, 2);
         assert_eq!(m.rejected, 2);
         assert!(m.summary().contains("rejected (overload): 2"));
@@ -1003,12 +1574,13 @@ mod tests {
                         id,
                         input: vec![0.1; 16],
                         mode: None,
+                        deadline_ms: None,
                     })
                     .expect("unbounded submit must always accept")
             })
             .collect();
         for rx in rxs {
-            let _ = rx.recv().unwrap();
+            assert!(rx.recv().unwrap().is_ok());
         }
         let m = coord.shutdown();
         assert_eq!(m.total_requests, 64);
@@ -1031,6 +1603,7 @@ mod tests {
                 id: 7,
                 input: vec![0.25; len],
                 mode: None,
+                deadline_ms: None,
             })
             .unwrap();
         assert!(!resp.logits.is_empty());
@@ -1052,7 +1625,8 @@ mod tests {
         for id in 0..8 {
             let input: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
             let resp = coord
-                .infer(InferenceRequest { id, input, mode: None })
+                .infer(InferenceRequest { id, input, mode: None,
+                                          deadline_ms: None })
                 .unwrap();
             assert_eq!(resp.id, id);
             assert_eq!(resp.logits.len(), 10);
@@ -1075,6 +1649,7 @@ mod tests {
                 id: 1,
                 input: vec![0.5; len],
                 mode: Some(Mode::P32x1),
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(resp.mode, Mode::P32x1);

@@ -63,6 +63,19 @@ fn wider(a: Mode, b: Mode) -> Mode {
     if a.lane_bits() >= b.lane_bits() { a } else { b }
 }
 
+/// One precision step cheaper than `mode` — the degrade-under-load
+/// ladder (P32 → P16 → P8). `None` when `mode` is already the
+/// cheapest: a fleet serving P8 by policy has nothing softer than a
+/// reject. Only *unpinned* requests ever take this step (the
+/// coordinator applies it at admission; explicit pins are sacred).
+pub fn degrade_step(mode: Mode) -> Option<Mode> {
+    match mode {
+        Mode::P32x1 => Some(Mode::P16x2),
+        Mode::P16x2 => Some(Mode::P8x4),
+        Mode::P8x4 => None,
+    }
+}
+
 /// How batches map onto planar shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardAffinity {
@@ -176,6 +189,19 @@ mod tests {
         let picks: Vec<usize> =
             Mode::ALL.iter().map(|&m| mode_shard(m, 3)).collect();
         assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn degrade_ladder_descends_and_terminates() {
+        assert_eq!(degrade_step(Mode::P32x1), Some(Mode::P16x2));
+        assert_eq!(degrade_step(Mode::P16x2), Some(Mode::P8x4));
+        assert_eq!(degrade_step(Mode::P8x4), None);
+        // Each step strictly narrows, so degrading can never loop.
+        for m in Mode::ALL {
+            if let Some(d) = degrade_step(m) {
+                assert!(d.lane_bits() < m.lane_bits());
+            }
+        }
     }
 
     #[test]

@@ -34,7 +34,13 @@
 //!   `std::thread::scope`, amortized).
 //! * Worker panics are caught per job and re-raised on the calling
 //!   thread after the scope completes; the workers themselves survive,
-//!   so one poisoned GEMM cannot shrink the pool.
+//!   so one poisoned GEMM cannot shrink the pool. As a second line of
+//!   defense, every worker carries a respawn guard: if a panic ever
+//!   *does* unwind a worker (a job that escaped the per-job catch),
+//!   the dying thread spawns its own replacement on the same queue
+//!   and the restart is counted
+//!   ([`WorkerPool::workers_respawned`]) — the pool's capacity
+//!   self-heals instead of silently shrinking.
 //! * Dispatch is **not re-entrant**: pool jobs must not call
 //!   [`WorkerPool::run_scoped`] themselves (deadlock hazard; debug
 //!   builds assert). The kernel's jobs are leaf row-block computations,
@@ -144,7 +150,7 @@ impl Latch {
     }
 
     fn count_down(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_recover(&self.remaining);
         *r -= 1;
         if *r == 0 {
             self.all_done.notify_all();
@@ -152,11 +158,22 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_recover(&self.remaining);
         while *r > 0 {
-            r = self.all_done.wait(r).unwrap();
+            r = match self.all_done.wait(r) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
+}
+
+/// Lock a pool mutex, recovering from poison: the data under every
+/// pool lock (a counter, a channel endpoint) is valid after any
+/// interrupted critical section, and a panicking worker must not be
+/// able to wedge every future GEMM by poisoning the queue.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Persistent pool of kernel worker threads. See module docs; most
@@ -167,32 +184,47 @@ pub struct WorkerPool {
     tx: Mutex<mpsc::Sender<Job>>,
     workers: usize,
     jobs_executed: Arc<AtomicU64>,
+    respawned: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
     /// Spawn a pool with `workers` long-lived threads (min 1). The
     /// threads are detached: they park on the empty queue and die with
     /// the process (or when the pool is dropped and the channel
-    /// closes).
+    /// closes). Panics only if not a single worker could be spawned —
+    /// a zero-worker pool would hang the first scope on its latch.
     pub fn new(workers: usize) -> WorkerPool {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let jobs_executed = Arc::new(AtomicU64::new(0));
+        let respawned = Arc::new(AtomicU64::new(0));
+        let mut spawned = 0usize;
         for i in 0..workers {
-            let rx = rx.clone();
-            std::thread::Builder::new()
-                .name(format!("spade-pool-{i}"))
-                .spawn(move || worker_loop(rx))
-                .expect("spawn kernel pool worker");
+            if spawn_worker(i, rx.clone(), respawned.clone()).is_ok() {
+                spawned += 1;
+            }
         }
-        WorkerPool { tx: Mutex::new(tx), workers, jobs_executed }
+        if spawned == 0 {
+            panic!("kernel pool: could not spawn any worker thread");
+        }
+        WorkerPool { tx: Mutex::new(tx), workers: spawned,
+                     jobs_executed, respawned }
     }
 
-    /// Number of worker threads (fixed at construction — the pool
-    /// never respawns, which the kernel tests assert).
+    /// Number of worker threads. The count is fixed at construction:
+    /// a worker that dies to an escaped panic is replaced in place by
+    /// its respawn guard (see [`WorkerPool::workers_respawned`]), so
+    /// capacity never shrinks.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// How many times a panicked worker has been replaced (0 in
+    /// healthy operation: per-job panic capture means ordinary job
+    /// panics never unwind a worker).
+    pub fn workers_respawned(&self) -> u64 {
+        self.respawned.load(Ordering::Acquire)
     }
 
     /// Total jobs executed **on pool workers** since construction
@@ -236,7 +268,7 @@ impl WorkerPool {
         let latch = Arc::new(Latch::new(jobs.len()));
         let panicked = Arc::new(AtomicBool::new(false));
         {
-            let tx = self.tx.lock().unwrap().clone();
+            let tx = lock_recover(&self.tx).clone();
             for job in jobs {
                 // SAFETY: the job may borrow data that only lives for
                 // 'scope. Erasing that lifetime is sound because this
@@ -254,7 +286,7 @@ impl WorkerPool {
                 let latch = latch.clone();
                 let panicked = panicked.clone();
                 let counter = self.jobs_executed.clone();
-                tx.send(Box::new(move || {
+                let wrapped: Job = Box::new(move || {
                     struct Done(Arc<Latch>);
                     impl Drop for Done {
                         fn drop(&mut self) {
@@ -266,8 +298,16 @@ impl WorkerPool {
                         panicked.store(true, Ordering::Release);
                     }
                     counter.fetch_add(1, Ordering::Release);
-                }))
-                .expect("kernel pool channel closed");
+                });
+                if let Err(mpsc::SendError(wrapped)) =
+                    tx.send(wrapped)
+                {
+                    // Queue closed (every worker and the pool's own
+                    // sender gone — cannot happen while the pool is
+                    // alive, but must not lose work if it does): run
+                    // the job inline so the latch still counts down.
+                    wrapped();
+                }
             }
         }
         // The caller works instead of idling; its panic (if any) is
@@ -283,14 +323,52 @@ impl WorkerPool {
     }
 }
 
+/// Spawn one pool worker on the shared queue. Each worker carries a
+/// [`RespawnGuard`] so an escaped panic replaces the thread instead
+/// of shrinking the pool.
+fn spawn_worker(idx: usize, rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+                respawned: Arc<AtomicU64>) -> std::io::Result<()> {
+    std::thread::Builder::new()
+        .name(format!("spade-pool-{idx}"))
+        .spawn(move || {
+            let _guard = RespawnGuard { idx, rx: rx.clone(),
+                                        respawned };
+            worker_loop(rx);
+        })
+        .map(|_| ())
+}
+
+/// Armed on every worker: if the thread unwinds (a job escaped the
+/// per-job `catch_unwind` — should never happen, but "should never"
+/// is what supervision is for), `Drop` runs during the unwind, counts
+/// the loss and spawns a replacement on the same queue. On a clean
+/// exit (channel closed) `std::thread::panicking()` is false and the
+/// guard does nothing.
+struct RespawnGuard {
+    idx: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    respawned: Arc<AtomicU64>,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.respawned.fetch_add(1, Ordering::AcqRel);
+            let _ = spawn_worker(self.idx, self.rx.clone(),
+                                 self.respawned.clone());
+        }
+    }
+}
+
 /// Worker body: pull jobs until the channel closes. Jobs arrive
-/// pre-wrapped with panic capture, so workers never unwind.
+/// pre-wrapped with panic capture, so workers never unwind (the
+/// respawn guard covers the day one does anyway).
 fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
     IS_POOL_WORKER.with(|f| f.set(true));
     loop {
         // Hold the queue lock only while dequeuing, never while
         // executing.
-        let job = { rx.lock().unwrap().recv() };
+        let job = { lock_recover(&rx).recv() };
         match job {
             Ok(job) => job(),
             Err(_) => return,
@@ -327,6 +405,19 @@ pub fn global() -> &'static WorkerPool {
 /// workers on a serve that never touched the planar kernel.
 pub fn try_global() -> Option<&'static WorkerPool> {
     GLOBAL.get()
+}
+
+#[cfg(test)]
+impl WorkerPool {
+    /// Push a **raw** job — no per-job panic capture, no latch — onto
+    /// the queue, simulating the impossible: a panic that escapes the
+    /// wrapper and unwinds a worker. Only the respawn-guard test uses
+    /// this; production jobs always go through `run_scoped`'s wrapper.
+    fn inject_unwinding_job(&self) {
+        let _ = lock_recover(&self.tx)
+            .clone()
+            .send(Box::new(|| panic!("injected raw worker panic")));
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +579,34 @@ mod tests {
             .sum();
         assert_eq!(total, q.chunks());
         assert_eq!(q.claimed(), q.chunks());
+    }
+
+    #[test]
+    fn panicked_worker_is_respawned() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.workers_respawned(), 0);
+        pool.inject_unwinding_job();
+        // The guard fires during the victim's unwind; give it a
+        // bounded spin to land.
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        while pool.workers_respawned() < 1 {
+            assert!(std::time::Instant::now() < deadline,
+                    "worker was never respawned");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.workers_respawned(), 1);
+        // The replacement serves the same queue: a full scope still
+        // completes with the pool back at capacity.
+        let mut ok = [false; 8];
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for slot in ok.iter_mut() {
+            jobs.push(Box::new(move || *slot = true));
+        }
+        pool.run_scoped(jobs);
+        assert!(ok.iter().all(|&b| b));
+        assert_eq!(pool.workers_respawned(), 1,
+                   "healthy jobs must not trigger further respawns");
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //!                     --policy, --shards, --batch, --affinity
 //!                     least-loaded|pinned-mode, --max-queue N
 //!                     backpressure bound (0 = unbounded),
+//!                     --deadline-ms N default request deadline,
+//!                     --degrade-at F degrade-under-load threshold,
+//!                     --faults SPEC deterministic fault injection
+//!                     (e.g. shard_panic=0.01,delay_ms=5@0.02),
 //!                     --autotune off|first-use|warmup,
 //!                     --config PATH fleet config JSON (merge order
 //!                     file < env < CLI), --stats-json PATH,
@@ -205,6 +209,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.options.contains_key("max-queue") {
         builder = builder.max_queue(args.num_or("max-queue", 0));
     }
+    if args.options.contains_key("deadline-ms") {
+        builder = builder
+            .default_deadline_ms(args.num_or("deadline-ms", 0u64));
+    }
+    if let Some(f) = args.options.get("degrade-at") {
+        let v = f.trim().parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--degrade-at {f}: not a number")
+        })?;
+        builder = builder.degrade_at(v);
+    }
+    if let Some(spec) = args.options.get("faults") {
+        builder = builder.faults(
+            spade::api::FaultPlan::parse(spec)
+                .map_err(anyhow::Error::msg)?);
+    }
     if let Some(mode) = args.options.get("autotune") {
         builder = builder.autotune(
             spade::api::EngineConfig::parse_autotune(mode)?);
@@ -260,6 +279,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             id: r.id,
             input: r.input,
             mode: r.mode,
+            deadline_ms: None,
         }) {
             Ok(rx) => rxs.push(rx),
             // Backpressure (--max-queue): shed the request and keep
@@ -267,14 +287,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(_) => rejected += 1,
         }
     }
+    let mut failed = 0usize;
     for rx in rxs {
-        let _ = rx.recv();
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            Ok(Err(_)) | Err(_) => failed += 1,
+        }
     }
     let wall = t0.elapsed();
     let m = handle.shutdown();
     println!("{}", m.summary());
     if rejected > 0 {
         println!("rejected at submit (overload): {rejected}");
+    }
+    if failed > 0 {
+        println!("failed typed (deadline/shard): {failed}");
     }
     println!("throughput: {:.0} req/s",
              requests as f64 / wall.as_secs_f64());

@@ -223,6 +223,7 @@ fn engine_serving_matches_direct_coordinator() {
                 id: i as u64,
                 input: inp.clone(),
                 mode: None,
+                deadline_ms: None,
             })
             .collect()
     };
@@ -243,7 +244,7 @@ fn engine_serving_matches_direct_coordinator() {
         .collect();
     let facade: Vec<Vec<f32>> = rxs
         .into_iter()
-        .map(|rx| rx.recv().unwrap().logits)
+        .map(|rx| rx.recv().unwrap().unwrap().logits)
         .collect();
     handle.shutdown();
 
@@ -264,7 +265,7 @@ fn engine_serving_matches_direct_coordinator() {
         .collect();
     let direct: Vec<Vec<f32>> = rxs
         .into_iter()
-        .map(|rx| rx.recv().unwrap().logits)
+        .map(|rx| rx.recv().unwrap().unwrap().logits)
         .collect();
     coord.shutdown();
 
@@ -381,6 +382,7 @@ fn stats_json_dump_is_written_and_parseable() {
                 id,
                 input: vec![0.5; 16],
                 mode: None,
+                deadline_ms: None,
             })
             .unwrap();
     }
@@ -391,13 +393,22 @@ fn stats_json_dump_is_written_and_parseable() {
         .expect("stats dump file must exist after shutdown");
     let j = Json::parse(&body).expect("dump must be valid JSON");
     assert_eq!(j.get("schema").unwrap().as_str(),
-               Some("spade-serve-stats-v2"));
+               Some("spade-serve-stats-v3"));
     // v2 additions: per-dump rates, the retry-after hint, and the
     // fused/plan kernel counters (always present for dashboards).
     assert!(j.get("requests_per_s").unwrap().as_f64().is_some());
     assert!(j.get("rejects_per_s").unwrap().as_f64().is_some());
     assert_eq!(j.get("last_retry_after_ms").unwrap().as_usize(),
                Some(0));
+    // v3 additions: fault-tolerance counters — all zero on this
+    // clean run, all always present for dashboards.
+    assert_eq!(j.get("shard_restarts").unwrap().as_usize(), Some(0));
+    assert_eq!(j.get("deadline_timeouts").unwrap().as_usize(),
+               Some(0));
+    assert_eq!(j.get("degraded_requests").unwrap().as_usize(),
+               Some(0));
+    assert_eq!(j.get("faults_injected").unwrap().as_usize(), Some(0));
+    assert!(j.get("degraded_per_s").unwrap().as_f64().is_some());
     // The final dump sees the fully-drained coordinator.
     assert_eq!(j.get("requests").unwrap().as_usize(), Some(8));
     let shards = j.get("shards").unwrap().as_arr().unwrap();
@@ -407,6 +418,10 @@ fn stats_json_dump_is_written_and_parseable() {
         .map(|s| s.get("requests").unwrap().as_usize().unwrap())
         .sum();
     assert_eq!(total, 8);
+    // v3: every shard entry carries its restart count.
+    for s in shards {
+        assert_eq!(s.get("restarts").unwrap().as_usize(), Some(0));
+    }
     // Kernel dispatch counters ride along for fleet dashboards.
     let k = j.get("kernel").unwrap();
     assert!(k.get("gemms").unwrap().as_usize().unwrap() > 0);
@@ -482,6 +497,7 @@ fn facade_backpressure_is_observable() {
         id,
         input: vec![0.5; 16],
         mode: None,
+        deadline_ms: None,
     };
     let rx0 = handle.submit(req(0)).unwrap();
     let rx1 = handle.submit(req(1)).unwrap();
@@ -489,8 +505,38 @@ fn facade_backpressure_is_observable() {
     assert_eq!(err.capacity, 2);
     assert_eq!(err.pending, 2);
     let m = handle.shutdown();
-    assert_eq!(rx0.recv().unwrap().id, 0);
-    assert_eq!(rx1.recv().unwrap().id, 1);
+    assert_eq!(rx0.recv().unwrap().unwrap().id, 0);
+    assert_eq!(rx1.recv().unwrap().unwrap().id, 1);
     assert_eq!(m.total_requests, 2);
     assert_eq!(m.rejected, 1);
+}
+
+#[test]
+fn submit_with_retry_gives_up_typed_after_max_attempts() {
+    // A full, *held* queue (huge batch target, long window, nothing
+    // draining) stays Overloaded through every retry — the helper
+    // must sleep the hinted backoff between attempts and return the
+    // final typed error rather than spinning or panicking.
+    let engine = Engine::builder()
+        .shards(1)
+        .max_queue(1)
+        .batch(64)
+        .max_wait(Duration::from_secs(30))
+        .build()
+        .unwrap();
+    let handle = engine.serve_model(tiny_model()).unwrap();
+    let req = |id: u64| InferenceRequest {
+        id,
+        input: vec![0.5; 16],
+        mode: None,
+        deadline_ms: None,
+    };
+    let _rx0 = handle.submit_with_retry(req(0), 3).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = handle.submit_with_retry(req(1), 3).unwrap_err();
+    assert_eq!(err.pending, 1);
+    assert!(t0.elapsed() >= Duration::from_millis(2),
+            "3 attempts must sleep at least the base hint twice");
+    let m = handle.shutdown();
+    assert_eq!(m.rejected, 3, "each failed attempt counts a reject");
 }

@@ -127,12 +127,13 @@ fn coordinator_serves_dataset_traffic_correctly() {
                     id: i as u64,
                     input: pix[i * per..(i + 1) * per].to_vec(),
                     mode: None,
+                    deadline_ms: None,
                 })
                 .unwrap()
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         let pred = resp
             .logits
             .iter()
@@ -174,13 +175,14 @@ fn serve_auto_fallback_is_sharded_and_consistent() {
                     .map(|j| ((id as usize * len + j) % 17) as f32 / 17.0)
                     .collect();
                 coord
-                    .submit(InferenceRequest { id, input, mode: None })
+                    .submit(InferenceRequest { id, input, mode: None,
+                                               deadline_ms: None })
                     .unwrap()
             })
             .collect();
         let logits = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().logits)
+            .map(|rx| rx.recv().unwrap().unwrap().logits)
             .collect();
         let m = coord.shutdown();
         assert_eq!(m.total_requests, 20);

@@ -1,0 +1,484 @@
+//! Fault-tolerance integration tests (PR 8): shard supervision,
+//! request deadlines, deterministic fault injection, and
+//! degrade-under-load — all through the public serving API.
+//!
+//! The central claim these tests pin down: **recovery is invisible in
+//! the outputs**. The planar kernel rounds each logit exactly once
+//! from an exact accumulator, so a batch that was panicked mid-flight
+//! and retried, or a request admitted through the degrade band at a
+//! cheaper precision, produces logits *bit-identical* to a clean run
+//! at the precision it actually executed. Every test that accepts a
+//! reply therefore holds it to a single-example oracle forward pass.
+//!
+//! The second claim: **counters reconcile exactly**. A panics-only
+//! fault plan records one `faults_injected` per panic and every panic
+//! is absorbed by exactly one supervisor restart, so
+//! `faults_injected == total_shard_restarts` — no fault is double
+//! counted, none goes missing.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use spade::api::Engine;
+use spade::coordinator::{Coordinator, CoordinatorConfig, BatcherConfig,
+                         FaultInjector, FaultPlan, InferenceRequest,
+                         RequestError, RoutePolicy};
+use spade::engine::Mode;
+use spade::nn::{self, Backend, Model, ModelSpec, Precision, Tensor};
+use spade::util::SplitMix64;
+
+/// Generous per-reply wait: a request that never terminates is the
+/// exact bug this suite exists to catch, so replies are collected
+/// with a timeout that turns a would-be hang into a test failure.
+const REPLY_WAIT: Duration = Duration::from_secs(10);
+
+/// Tiny hand-built model (mirrors the nn::exec / coordinator / api
+/// test fixture) so serving is testable without artifacts on disk.
+fn tiny_model() -> Model {
+    let spec = ModelSpec::parse(
+        r#"{"name": "tiny", "dataset": "d", "input": [4, 4, 1],
+            "classes": 3,
+            "layers": [
+              {"kind": "conv", "k": 3, "out": 2, "pad": "same",
+               "relu": true},
+              {"kind": "maxpool", "k": 2},
+              {"kind": "flatten"},
+              {"kind": "dense", "out": 3, "relu": false}]}"#,
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(55);
+    let mut params = BTreeMap::new();
+    params.insert(
+        "layer0/w".to_string(),
+        Tensor::from_vec(&[3, 3, 1, 2],
+                         (0..18).map(|_| rng.normal() as f32)
+                             .collect()),
+    );
+    params.insert("layer0/b".to_string(),
+                  Tensor::from_vec(&[2], vec![0.1, -0.1]));
+    params.insert(
+        "layer3/w".to_string(),
+        Tensor::from_vec(&[8, 3],
+                         (0..24).map(|_| rng.normal() as f32)
+                             .collect()),
+    );
+    params.insert("layer3/b".to_string(),
+                  Tensor::from_vec(&[3], vec![0.0, 0.05, -0.05]));
+    Model { spec, params }
+}
+
+/// Deterministic per-example inputs.
+fn inputs(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..16).map(|_| rng.f32()).collect()).collect()
+}
+
+/// Clean-run oracle: a single-example forward at `mode` on a fresh
+/// session. Batch composition cannot change planar results (exact
+/// accumulator, one rounding per output), so this is the bit-exact
+/// reference for a served reply at that mode regardless of how the
+/// coordinator batched, sharded, retried or degraded the request.
+fn oracle(model: &Model, input: &[f32], mode: Mode) -> Vec<f32> {
+    let x = Tensor::from_vec(&[1, 4, 4, 1], input.to_vec());
+    let (logits, _) = nn::exec::forward(
+        model, &x, Precision::Posit(mode), Backend::Posit).unwrap();
+    logits.data
+}
+
+#[test]
+fn chaos_run_completes_bit_correct_with_reconciled_counters() {
+    // A panics-only plan at a 30% batch rate, two shards, and a retry
+    // budget deep enough (10) that no request can realistically
+    // exhaust it: every accepted request must complete Ok with
+    // oracle-exact logits, and the fault ledger must balance —
+    // each injected panic was absorbed by exactly one restart.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 2,
+        batcher: BatcherConfig { target: 4,
+                                 max_wait: Duration::from_millis(1) },
+        shard_retries: 10,
+        faults: Some(FaultPlan::parse("shard_panic=0.3,seed=9")
+                         .unwrap()),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+
+    let n = 96;
+    let ins = inputs(n, 1001);
+    let rxs: Vec<_> = ins
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            coord
+                .submit(InferenceRequest {
+                    id: i as u64,
+                    input: input.clone(),
+                    // A third of the traffic pins P16 so batches run
+                    // in more than one mode under chaos.
+                    mode: (i % 3 == 0).then_some(Mode::P16x2),
+                    deadline_ms: None,
+                })
+                .unwrap()
+        })
+        .collect();
+
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // Exactly one terminal reply per accepted request.
+        let resp = rx
+            .recv_timeout(REPLY_WAIT)
+            .unwrap_or_else(|_| panic!("request {i}: no reply"))
+            .unwrap_or_else(|e| panic!("request {i}: {e}"));
+        assert_eq!(resp.id, i as u64);
+        if i % 3 == 0 {
+            assert_eq!(resp.mode, Mode::P16x2, "pin honored");
+        }
+        assert!(!resp.degraded, "unbounded queues never degrade");
+        assert_eq!(resp.logits, oracle(&model, &ins[i], resp.mode),
+                   "request {i}: recovery changed the logits");
+    }
+
+    let m = coord.shutdown();
+    assert_eq!(m.total_requests, n as u64);
+    // Panics-only ledger: every injected fault is a panic, every
+    // panic is one supervisor restart. Exact, not approximate.
+    assert_eq!(m.faults_injected, m.total_shard_restarts(),
+               "fault ledger out of balance");
+    assert!(m.total_shard_restarts() > 0,
+            "a 30% panic plan over ≥24 batches must fire");
+    assert_eq!(m.deadline_timeouts, 0);
+    assert_eq!(m.degraded_requests, 0);
+}
+
+#[test]
+fn delay_faults_spike_latency_without_restarts() {
+    // Delays exercise the injection point without touching the
+    // supervisor: faults are counted, nothing restarts, every reply
+    // is Ok and bit-exact.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        batcher: BatcherConfig { target: 4,
+                                 max_wait: Duration::from_millis(1) },
+        faults: Some(FaultPlan::parse("delay_ms=2@1.0,seed=3")
+                         .unwrap()),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+    let ins = inputs(4, 77);
+    let rxs: Vec<_> = ins
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            coord
+                .submit(InferenceRequest { id: i as u64,
+                                           input: input.clone(),
+                                           mode: None,
+                                           deadline_ms: None })
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(REPLY_WAIT).unwrap().unwrap();
+        assert_eq!(resp.logits, oracle(&model, &ins[i], resp.mode));
+    }
+    let m = coord.shutdown();
+    assert!(m.faults_injected >= 1, "rate-1.0 delay plan must fire");
+    assert_eq!(m.total_shard_restarts(), 0,
+               "delays must not restart shards");
+    assert_eq!(m.deadline_timeouts, 0);
+}
+
+#[test]
+fn shard_panic_mid_batch_is_retried_bit_identical() {
+    // Pick a seed whose shard-0 fault stream panics on the first
+    // batch and spares the retry — the injector API is public and
+    // deterministic, so the test *constructs* the exact panic-then-
+    // recover schedule instead of hoping for one.
+    let plan_for = |seed: u64| FaultPlan {
+        shard_panic: 0.5,
+        seed,
+        ..FaultPlan::default()
+    };
+    let seed = (0..10_000u64)
+        .find(|&s| {
+            let mut inj = FaultInjector::new(&plan_for(s), 0);
+            let first = inj.next();
+            let second = inj.next();
+            first.panic && !second.panic
+        })
+        .expect("some seed panics first and spares the retry");
+
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        batcher: BatcherConfig { target: 1,
+                                 max_wait: Duration::from_millis(1) },
+        faults: Some(plan_for(seed)),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+    let input = inputs(1, 5).remove(0);
+    let rx = coord
+        .submit(InferenceRequest { id: 0, input: input.clone(),
+                                   mode: None, deadline_ms: None })
+        .unwrap();
+    let resp = rx.recv_timeout(REPLY_WAIT).unwrap().unwrap();
+    // The retried batch ran on a *fresh* session after the respawn;
+    // its logits must be indistinguishable from a never-panicked run.
+    assert_eq!(resp.logits, oracle(&model, &input, resp.mode),
+               "post-restart logits differ from a clean run");
+
+    let m = coord.shutdown();
+    assert_eq!(m.total_shard_restarts(), 1, "exactly one restart");
+    assert_eq!(m.shard_restarts.first().copied(), Some(1),
+               "the restart is attributed to shard 0");
+    assert_eq!(m.faults_injected, 1,
+               "one injected panic, none on the retry");
+    assert_eq!(m.total_requests, 1);
+}
+
+#[test]
+fn deadline_expires_in_batch_queue() {
+    // A huge batch target and max_wait park requests in the batch
+    // window; the expired one must be answered typed at flush while
+    // its batchmate (no deadline) still completes bit-correct.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        batcher: BatcherConfig { target: 64,
+                                 max_wait: Duration::from_secs(30) },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+    let ins = inputs(2, 21);
+    let rx_dead = coord
+        .submit(InferenceRequest { id: 0, input: ins[0].clone(),
+                                   mode: None, deadline_ms: Some(5) })
+        .unwrap();
+    let rx_live = coord
+        .submit(InferenceRequest { id: 1, input: ins[1].clone(),
+                                   mode: None, deadline_ms: None })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let m = coord.shutdown(); // flushes the held batch
+
+    match rx_dead.recv_timeout(REPLY_WAIT).unwrap() {
+        Err(RequestError::DeadlineExceeded { id, deadline_ms,
+                                             waited_ms }) => {
+            assert_eq!(id, 0);
+            assert_eq!(deadline_ms, 5);
+            assert!(waited_ms >= 5, "waited {waited_ms} ms");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let resp = rx_live.recv_timeout(REPLY_WAIT).unwrap().unwrap();
+    assert_eq!(resp.logits, oracle(&model, &ins[1], resp.mode));
+    assert_eq!(m.deadline_timeouts, 1);
+    assert_eq!(m.total_requests, 1, "only the live request served");
+}
+
+#[test]
+fn deadline_expires_in_shard_queue() {
+    // A rate-1.0 latency spike wedges the shard for 50 ms; the
+    // request queued behind it carries a 15 ms budget and must be
+    // answered typed at the shard's pre-compute re-check — after the
+    // front loop already dispatched it alive.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        batcher: BatcherConfig { target: 1,
+                                 max_wait: Duration::from_millis(1) },
+        faults: Some(FaultPlan::parse("delay_ms=50@1.0,seed=1")
+                         .unwrap()),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+    let ins = inputs(2, 33);
+    let rx_front = coord
+        .submit(InferenceRequest { id: 0, input: ins[0].clone(),
+                                   mode: None, deadline_ms: None })
+        .unwrap();
+    let rx_stale = coord
+        .submit(InferenceRequest { id: 1, input: ins[1].clone(),
+                                   mode: None, deadline_ms: Some(15) })
+        .unwrap();
+
+    let resp = rx_front.recv_timeout(REPLY_WAIT).unwrap().unwrap();
+    assert_eq!(resp.logits, oracle(&model, &ins[0], resp.mode));
+    match rx_stale.recv_timeout(REPLY_WAIT).unwrap() {
+        Err(RequestError::DeadlineExceeded { id, deadline_ms,
+                                             waited_ms }) => {
+            assert_eq!(id, 1);
+            assert_eq!(deadline_ms, 15);
+            assert!(waited_ms >= 15, "waited {waited_ms} ms");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.deadline_timeouts, 1);
+    // The expired batch returns before the injection point: only the
+    // served batch drew a fault.
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.total_shard_restarts(), 0);
+}
+
+#[test]
+fn degrade_band_routes_to_cheaper_precision_bit_identical() {
+    // capacity = 1 shard x max_queue 4; degrade_at 0.5 -> degrade
+    // from 2 pending, reject from 4. Balanced policy defaults to P16,
+    // so degraded admissions pin P8. A huge batch window holds all
+    // admissions pending until shutdown flushes them, making the
+    // admission sequence exact: 2 normal, 2 degraded, then Overloaded.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        max_queue: 4,
+        degrade_at: 0.5,
+        policy: RoutePolicy::Balanced,
+        batcher: BatcherConfig { target: 64,
+                                 max_wait: Duration::from_secs(30) },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_with_model(model.clone(), cfg).unwrap();
+    let ins = inputs(5, 99);
+    let mut rxs = Vec::new();
+    for (i, input) in ins.iter().enumerate().take(4) {
+        rxs.push(
+            coord
+                .submit(InferenceRequest { id: i as u64,
+                                           input: input.clone(),
+                                           mode: None,
+                                           deadline_ms: None })
+                .unwrap(),
+        );
+    }
+    // Fifth submit crosses reject_at: typed backpressure, not queue.
+    let over = coord
+        .submit(InferenceRequest { id: 4, input: ins[4].clone(),
+                                   mode: None, deadline_ms: None })
+        .unwrap_err();
+    assert_eq!(over.pending, 4);
+    assert_eq!(over.capacity, 4);
+
+    let m = coord.shutdown(); // flush: one P16 batch + one P8 batch
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(REPLY_WAIT).unwrap().unwrap();
+        let want_mode =
+            if i < 2 { Mode::P16x2 } else { Mode::P8x4 };
+        assert_eq!(resp.mode, want_mode, "request {i}");
+        assert_eq!(resp.degraded, i >= 2, "request {i}");
+        // Degraded or not: bit-exact at the mode actually used.
+        assert_eq!(resp.logits, oracle(&model, &ins[i], want_mode),
+                   "request {i}: served logits diverge from a pure \
+                    {want_mode:?} run");
+    }
+    assert_eq!(m.degraded_requests, 2);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.total_requests, 4);
+}
+
+#[test]
+fn dying_shard_fails_typed_and_shutdown_drains() {
+    // shard_panic=1.0: every attempt panics. Each request must burn
+    // its full retry budget (attempts = shard_retries + 1), fail with
+    // the typed ShardFailed, and shutdown must still drain and join —
+    // the held batch is flushed into a shard that dies on every try.
+    let model = tiny_model();
+    let cfg = CoordinatorConfig {
+        shards: 1,
+        shard_retries: 2,
+        batcher: BatcherConfig { target: 64,
+                                 max_wait: Duration::from_secs(30) },
+        faults: Some(FaultPlan::parse("shard_panic=1.0").unwrap()),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with_model(model, cfg).unwrap();
+    let ins = inputs(3, 44);
+    let rxs: Vec<_> = ins
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            coord
+                .submit(InferenceRequest { id: i as u64,
+                                           input: input.clone(),
+                                           mode: None,
+                                           deadline_ms: None })
+                .unwrap()
+        })
+        .collect();
+    // Shutdown flushes the batch into the dying shard and must
+    // return (drain closes the channel first; the carried retries
+    // finish before the shard loop exits cleanly).
+    let m = coord.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(REPLY_WAIT).unwrap() {
+            Err(RequestError::ShardFailed { id, shard, attempts }) => {
+                assert_eq!(id, i as u64);
+                assert_eq!(shard, 0);
+                assert_eq!(attempts, 3, "retries + 1 attempts");
+            }
+            other => panic!("request {i}: expected ShardFailed, \
+                             got {other:?}"),
+        }
+    }
+    // One batch, three attempts, three panics: ledger balances.
+    assert_eq!(m.total_shard_restarts(), 3);
+    assert_eq!(m.faults_injected, 3);
+    assert_eq!(m.total_requests, 0, "nothing was served");
+}
+
+#[test]
+fn fault_plan_and_admission_validation_matrix() {
+    // The SPADE_FAULTS grammar, exercised through the public parse
+    // entry point the env/config layers call.
+    for bad in ["",
+                "bogus=1",
+                "shard_panic=1.5",
+                "shard_panic=-0.1",
+                "shard_panic=NaN",
+                "shard_panic=0.1,shard_panic=0.2",
+                "delay_ms=5",
+                "delay_ms=0@0.5",
+                "delay_ms=999999@0.5",
+                "seed=42",
+                "seed=abc,shard_panic=0.1"] {
+        assert!(FaultPlan::parse(bad).is_err(),
+                "spec {bad:?} must be rejected");
+    }
+    // Canonical specs round-trip through to_spec (the config-file
+    // representation).
+    for good in ["shard_panic=0.01,delay_ms=5@0.02,seed=42",
+                 "shard_panic=1",
+                 "delay_ms=10@0.25"] {
+        let p = FaultPlan::parse(good).unwrap();
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+    }
+
+    // The same bounds hold one layer up, at the engine builder.
+    assert!(Engine::builder().degrade_at(1.5).build().is_err());
+    assert!(Engine::builder().degrade_at(-0.1).build().is_err());
+    assert!(Engine::builder().reject_at(0.0).build().is_err());
+    assert!(Engine::builder()
+        .degrade_at(0.9)
+        .reject_at(0.5)
+        .build()
+        .is_err(), "inverted degrade/reject band");
+    assert!(Engine::builder()
+        .faults(FaultPlan { shard_panic: 2.0,
+                            ..FaultPlan::default() })
+        .build()
+        .is_err(), "invalid plan is caught at build");
+    assert!(Engine::builder()
+        .degrade_at(0.5)
+        .reject_at(0.75)
+        .faults(FaultPlan::parse("shard_panic=0.01,seed=1").unwrap())
+        .build()
+        .is_ok());
+}

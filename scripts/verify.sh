@@ -47,6 +47,35 @@ if [ -n "$exec_hits" ]; then
 fi
 echo "ok: nn::exec has no direct posit encodes (edge-only quantization)"
 
+echo "== serving-path gate (no unwrap/expect in supervised code) =="
+# PR 8 contract: every accepted request terminates in exactly one
+# typed reply, so the serving paths (coordinator + kernel pool) must
+# not carry `.unwrap()` / `.expect(` outside their test modules — a
+# poisoned lock or closed channel is recovered or answered typed,
+# never allowed to kill a shard for a second reason. The awk prefix
+# stops at the first `#[cfg(test)]` (test-module unwraps stay legal)
+# and skips comment lines (docs may *name* the forbidden calls).
+# Toolchain-free, like the gates above.
+unwrap_hits=""
+for f in rust/src/coordinator/*.rs rust/src/kernel/pool.rs; do
+  hits=$(awk '/#\[cfg\(test\)\]/{exit}
+              /^[[:space:]]*\/\//{next}
+              {print FILENAME":"FNR": "$0}' "$f" \
+         | grep -E '\.unwrap\(\)|\.expect\(' || true)
+  if [ -n "$hits" ]; then
+    unwrap_hits="${unwrap_hits}${hits}
+"
+  fi
+done
+if [ -n "$unwrap_hits" ]; then
+  echo "verify: unwrap/expect on a supervised serving path:" >&2
+  printf '%s' "$unwrap_hits" >&2
+  echo "        recover (lock_recover/lock_metrics), answer typed, or" >&2
+  echo "        move the assertion into the #[cfg(test)] module." >&2
+  exit 1
+fi
+echo "ok: coordinator + kernel pool carry no unwrap/expect outside tests"
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "verify: cargo not found on PATH — nothing was built or tested." >&2
   echo "verify: BENCH_hotpath.json stays a placeholder until" >&2
@@ -68,10 +97,12 @@ echo "== cargo bench --bench hotpath (smoke gate) =="
 SPADE_BENCH_QUICK="${SPADE_BENCH_QUICK:-1}" cargo bench --bench hotpath
 
 # The bench must have emitted the inner-loop, dispatch, self-tuning,
-# fused-pipeline, and sparse-vs-dense comparison sections — a silent
-# regression to the old loops (or a lost autotune/k-chunk/hybrid-LUT/
-# fusion/sparse measurement) would otherwise pass. The sparse gate
-# wants a speedup key at three sparsity levels per precision.
+# fused-pipeline, sparse-vs-dense, and degrade-vs-reject comparison
+# sections — a silent regression to the old loops (or a lost autotune/
+# k-chunk/hybrid-LUT/fusion/sparse/overload measurement) would
+# otherwise pass. The sparse gate wants a speedup key at three
+# sparsity levels per precision; the degrade gate wants goodput and
+# p99 under synthetic overload with degradation on vs off.
 for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
            steal_vs_fixed_split autotuned_vs_default \
            kchunk_vs_full_k p16_hybrid_lut_vs_exact \
@@ -81,7 +112,9 @@ for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
            sparse_vs_dense_p8_d50 sparse_vs_dense_p16_d1 \
            sparse_vs_dense_p16_d10 sparse_vs_dense_p16_d50 \
            sparse_vs_dense_p32_d1 sparse_vs_dense_p32_d10 \
-           sparse_vs_dense_p32_d50; do
+           sparse_vs_dense_p32_d50 \
+           degrade_vs_reject_goodput_on degrade_vs_reject_goodput_off \
+           degrade_vs_reject_p99us_on degrade_vs_reject_p99us_off; do
   if ! grep -q "\"$key\"" BENCH_hotpath.json; then
     echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
     echo "        (did benches/hotpath.rs lose a comparison?)" >&2
