@@ -627,20 +627,21 @@ fn pct_fields(p50: Option<u64>, p95: Option<u64>, p99: Option<u64>)
 }
 
 /// The machine-readable serve stats document (schema
-/// `spade-serve-stats-v3`): global counters, per-dump throughput
+/// `spade-serve-stats-v4`): global counters, per-dump throughput
 /// rates, per-mode and per-shard latency percentiles with reservoir
 /// snapshot counts (`seen` = everything recorded, `sampled` = held in
 /// the bounded reservoir right now), the last backpressure
 /// retry-after hint, and kernel dispatch/steal/fused-epilogue
 /// counters — the ROADMAP fleet-dashboard dump. Every v1/v2 field is
-/// intact; v3 only adds the fault-tolerance counters
-/// (`shard_restarts`, `deadline_timeouts`, `degraded_requests`,
-/// `faults_injected`, per-dump `degraded_per_s`, per-shard
-/// `restarts`).
+/// intact; v3 added the fault-tolerance counters (`shard_restarts`,
+/// `deadline_timeouts`, `degraded_requests`, `faults_injected`,
+/// per-dump `degraded_per_s`, per-shard `restarts`); v4 adds the
+/// kernel pool's respawn-guard counter (`pool_respawned` — flagged
+/// unexposed by spade-lint's counter-coverage rule).
 fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
                 -> String {
     let mut s = String::with_capacity(1024);
-    s.push_str("{\n  \"schema\": \"spade-serve-stats-v3\",\n");
+    s.push_str("{\n  \"schema\": \"spade-serve-stats-v4\",\n");
     s.push_str(&format!("  \"elapsed_s\": {:.3},\n",
                         elapsed.as_secs_f64()));
     s.push_str(&format!("  \"requests\": {},\n", m.total_requests));
@@ -713,21 +714,24 @@ fn render_stats(m: &Metrics, elapsed: Duration, prev: StatsPrev)
     // serve may legitimately never touch the planar kernel). 0/0
     // means "pool not created yet".
     let k = kernel::counters();
-    let (pool_workers, pool_jobs) = match kernel::pool::try_global() {
-        Some(p) => (p.workers(), p.jobs_executed()),
-        None => (0, 0),
-    };
+    let (pool_workers, pool_jobs, pool_respawned) =
+        match kernel::pool::try_global() {
+            Some(p) => (p.workers(), p.jobs_executed(),
+                        p.workers_respawned()),
+            None => (0, 0, 0),
+        };
     s.push_str(&format!(
         "  \"kernel\": {{\"gemms\": {}, \"chunks\": {}, \
          \"stolen_chunks\": {}, \"autotune_probes\": {}, \
          \"fused_gemms\": {}, \"fused_elems\": {}, \
          \"sparse_gemms\": {}, \
          \"plan_decodes\": {}, \"plan_encodes\": {}, \
-         \"pool_workers\": {}, \"pool_jobs\": {}}}\n",
+         \"pool_workers\": {}, \"pool_jobs\": {}, \
+         \"pool_respawned\": {}}}\n",
         k.gemms, k.chunks, k.stolen_chunks, k.autotune_probes,
         k.fused_gemms, k.fused_elems, k.sparse_gemms,
         k.plan_decodes, k.plan_encodes,
-        pool_workers, pool_jobs));
+        pool_workers, pool_jobs, pool_respawned));
     s.push_str("}\n");
     s
 }
@@ -758,7 +762,7 @@ mod tests {
             panic!("stats dump is not valid JSON ({e}):\n{body}")
         });
         assert_eq!(j.get("schema").unwrap().as_str(),
-                   Some("spade-serve-stats-v3"));
+                   Some("spade-serve-stats-v4"));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
         let modes = j.get("modes").unwrap();
         assert!(modes.get("p8").unwrap().get("p50_us").is_some());
@@ -786,6 +790,8 @@ mod tests {
         assert!(kernel.get("sparse_gemms").is_some());
         assert!(kernel.get("plan_decodes").is_some());
         assert!(kernel.get("plan_encodes").is_some());
+        // v4: the pool respawn-guard counter rides along.
+        assert!(kernel.get("pool_respawned").is_some());
         // Backpressure rejects ride along for dashboards.
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("last_retry_after_ms").unwrap().as_usize(),
@@ -808,6 +814,39 @@ mod tests {
         // First dump: rates are over the whole 1.5 s window.
         let rps = j.get("requests_per_s").unwrap().as_f64().unwrap();
         assert!((rps - 2.0 / 1.5).abs() < 1e-6, "{rps}");
+    }
+
+    #[test]
+    fn pool_respawn_counter_delta_reaches_stats_dump() {
+        // Counter-delta gate for the spade-lint counter-coverage
+        // rule: a worker respawn on the *global* pool must be
+        // observable in the stats dump, not just on the pool itself.
+        let pool = kernel::pool::global();
+        let before = pool.workers_respawned();
+        pool.inject_unwinding_job();
+        // The respawn guard fires during the victim's unwind; give
+        // it a bounded spin to land.
+        let deadline = std::time::Instant::now()
+            + Duration::from_secs(5);
+        while pool.workers_respawned() <= before {
+            assert!(std::time::Instant::now() < deadline,
+                    "global-pool worker was never respawned");
+            std::thread::yield_now();
+        }
+        assert!(pool.workers_respawned() > before,
+                "workers_respawned must move on a respawn");
+        let body = render_stats(&Metrics::default(),
+                                Duration::from_millis(100),
+                                StatsPrev::default());
+        let j = Json::parse(&body).unwrap_or_else(|e| {
+            panic!("stats dump is not valid JSON ({e}):\n{body}")
+        });
+        let dumped = j.get("kernel").unwrap()
+            .get("pool_respawned").unwrap()
+            .as_usize().unwrap() as u64;
+        assert!(dumped > before,
+                "pool_respawned in the dump ({dumped}) must reflect \
+                 the respawn delta (before: {before})");
     }
 
     #[test]

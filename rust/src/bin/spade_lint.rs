@@ -1,0 +1,77 @@
+//! `spade-lint` — walk the tree and enforce the project invariants.
+//!
+//! ```text
+//! cargo run --release --bin spade-lint [-- --root DIR] [--json PATH]
+//! ```
+//!
+//! Prints findings as `file:line [rule] message`, writes
+//! `LINT_report.json` (schema `spade-lint-v1`) at the repo root, and
+//! exits nonzero when any unsuppressed finding remains. See
+//! [`spade::lint`] for the rule catalog and suppression syntax.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json: Option<PathBuf> =
+        Some(PathBuf::from("LINT_report.json"));
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                if let Some(v) = args.next() {
+                    root = PathBuf::from(v);
+                }
+            }
+            "--json" => {
+                json = args.next().map(PathBuf::from);
+            }
+            "--no-json" => json = None,
+            "--help" | "-h" => {
+                eprintln!(
+                    "usage: spade-lint [--root DIR] [--json PATH | \
+                     --no-json]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("spade-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = match spade::lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("spade-lint: walking {}: {e}",
+                      root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if let Some(path) = json {
+        let path = if path.is_absolute() {
+            path
+        } else {
+            root.join(path)
+        };
+        if let Err(e) = std::fs::write(&path, report.to_json()) {
+            eprintln!("spade-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    eprintln!(
+        "spade-lint: {} files, {} finding(s), {} suppressed",
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressed.len());
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

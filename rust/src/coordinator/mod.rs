@@ -1077,6 +1077,9 @@ fn run_shard_job(job: ShardJob, sess: &mut Session<'static>,
             std::thread::sleep(d);
         }
         if fault.panic {
+            // lint: allow(no-unwrap): deliberate injected fault.
+            // The supervisor's catch_unwind + restart path is exactly
+            // the machinery under test here.
             panic!("injected shard fault (FaultPlan shard_panic)");
         }
     }
@@ -1255,6 +1258,9 @@ fn run_planar_batch(items: &[PendingRequest], mode: Mode,
         match sess.forward(&x, Precision::Posit(mode), Backend::Posit)
         {
             Ok(out) => out,
+            // lint: allow(no-unwrap): unwinding is the failure signal.
+            // The supervisor's catch_unwind re-queues the batch and
+            // restarts the shard rather than serving wrong logits.
             Err(e) => panic!("planar forward failed: {e}"),
         };
     let classes = logits.shape[1];

@@ -200,6 +200,9 @@ enum Dispatch {
 /// most once — so no two jobs ever alias a window, which is what makes
 /// the `Sync` claim sound.
 struct SharedOut(*mut u64);
+// SAFETY: see the type-level rationale — RowQueue hands out each row
+// chunk at most once, so concurrent jobs always write disjoint
+// windows behind this pointer.
 unsafe impl Sync for SharedOut {}
 
 fn check_shapes(a: &DecodedPlan, b: &DecodedPlan,
@@ -589,6 +592,9 @@ pub(super) struct PlanarSink {
     pub(super) w: *mut i32,
     pub(super) w8: *mut u8,
 }
+// SAFETY: see the type-level rationale — every window handed to a job
+// is derived from a RowQueue chunk claimed at most once, so the three
+// planar pointers are never aliased across threads.
 unsafe impl Sync for PlanarSink {}
 
 impl PlanarSink {

@@ -206,6 +206,9 @@ impl WorkerPool {
             }
         }
         if spawned == 0 {
+            // lint: allow(no-unwrap): construction-time fail-fast.
+            // No request has been accepted yet, and a pool with zero
+            // workers could only deadlock every later submit.
             panic!("kernel pool: could not spawn any worker thread");
         }
         WorkerPool { tx: Mutex::new(tx), workers: spawned,
@@ -318,6 +321,10 @@ impl WorkerPool {
             resume_unwind(payload);
         }
         if panicked.load(Ordering::Acquire) {
+            // lint: allow(no-unwrap): re-raises a worker job panic.
+            // It surfaces on the submitting thread; the shard
+            // supervisor's catch_unwind turns it into a restart +
+            // re-queue, so the request still gets a typed reply.
             panic!("kernel pool job panicked (see worker backtrace)");
         }
     }
@@ -411,9 +418,11 @@ pub fn try_global() -> Option<&'static WorkerPool> {
 impl WorkerPool {
     /// Push a **raw** job — no per-job panic capture, no latch — onto
     /// the queue, simulating the impossible: a panic that escapes the
-    /// wrapper and unwinds a worker. Only the respawn-guard test uses
-    /// this; production jobs always go through `run_scoped`'s wrapper.
-    fn inject_unwinding_job(&self) {
+    /// wrapper and unwinds a worker. Only the respawn-guard tests
+    /// (here and the stats-dump counter-delta test in `api::engine`)
+    /// use this; production jobs always go through `run_scoped`'s
+    /// wrapper.
+    pub(crate) fn inject_unwinding_job(&self) {
         let _ = lock_recover(&self.tx)
             .clone()
             .send(Box::new(|| panic!("injected raw worker panic")));

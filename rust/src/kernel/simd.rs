@@ -545,6 +545,11 @@ fn rows_p8_lanes(a: &DecodedPlan, b: &DecodedPlan,
 /// and the lane adds as two `vpaddq` — the literal hardware gather the
 /// portable loop autovectorizes toward. Bit-identical by construction
 /// (same integer sums); `tests/kernel_planar.rs` asserts it.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// (`is_x86_feature_detected!("avx2")`) before calling — the only
+/// call site, in the P8 row dispatch, does exactly that.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn rows_p8_avx2(a: &DecodedPlan, b: &DecodedPlan,

@@ -409,6 +409,9 @@ impl Scratch {
 /// as the dense dispatcher's: each claimed position maps to one row
 /// of a permutation, so no two jobs ever alias a row window.
 struct SharedOut(*mut u64);
+// SAFETY: see the rationale above — each claimed position maps to one
+// row of the nnz-sorted permutation, so concurrent jobs write disjoint
+// row windows behind this pointer.
 unsafe impl Sync for SharedOut {}
 
 // ---------------------------------------------------------------

@@ -55,6 +55,11 @@
 //!   plans, [`nn::exec::Session`]s and [`coordinator::Coordinator`]s
 //!   from that one validated config. `SPADE_*` environment variables
 //!   are parsed exactly once, in [`api::env`].
+//! * [`lint`] — `spade-lint`, a dependency-free static-analysis pass
+//!   (hand-rolled lexer + invariant rules) that enforces the
+//!   contracts above — env hygiene, edge-only encode, unwrap-free
+//!   serving paths, audited `unsafe`, lock ordering, spawn
+//!   discipline, counter coverage — as a hard verify gate.
 //!
 //! ## Quickstart
 //!
@@ -80,6 +85,7 @@ pub mod cost;
 pub mod data;
 pub mod engine;
 pub mod kernel;
+pub mod lint;
 pub mod nn;
 pub mod posit;
 pub mod runtime;

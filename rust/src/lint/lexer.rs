@@ -1,0 +1,633 @@
+//! A minimal hand-rolled Rust lexer for `spade-lint`.
+//!
+//! The legacy grep gates in `scripts/verify.sh` operate on raw lines,
+//! so a forbidden token inside a doc comment, a string literal, or a
+//! raw-string fixture trips them — and a `#[cfg(test)]` module in the
+//! middle of a file hides everything after it. This lexer fixes both
+//! failure classes at the root: rules operate on a **token stream**
+//! in which comments, strings (including raw / byte / raw-byte
+//! strings), char literals and lifetimes are each single classified
+//! tokens, and [`test_mask`] marks exactly the token ranges covered
+//! by `#[cfg(test)]` items (including nested and trailing test
+//! modules).
+//!
+//! It is deliberately not a full Rust parser: no macro expansion, no
+//! name resolution. Every rule built on it is lexical — precise about
+//! *where* a token is (code vs. comment vs. string vs. test module),
+//! approximate about *what* it refers to. That trade keeps the
+//! checker dependency-free and fast while still subsuming everything
+//! the grep gates could do.
+
+/// Token classification. Rules match on [`TokKind::Ident`] /
+/// [`TokKind::Punct`] sequences and ignore (or specifically target)
+/// the literal/comment kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `fn`, `env`, ...).
+    Ident,
+    /// Numeric literal (loosely lexed; never inspected by rules).
+    Num,
+    /// String literal of any flavor: `"…"`, `r"…"`, `r#"…"#`,
+    /// `b"…"`, `br#"…"#`. Text includes the delimiters.
+    Str,
+    /// Char or byte literal (`'a'`, `'\n'`, `b'x'`).
+    Char,
+    /// Lifetime (`'scope`) — distinct from [`TokKind::Char`].
+    Lifetime,
+    /// `// …` line comment (doc comments `///` / `//!` included).
+    LineComment,
+    /// `/* … */` block comment, nesting handled.
+    BlockComment,
+    /// Any single punctuation byte (`::` arrives as two tokens).
+    Punct,
+}
+
+/// One lexed token: kind, exact source slice, and 1-based line of its
+/// first byte.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok<'s> {
+    /// Classification.
+    pub kind: TokKind,
+    /// The exact source text (delimiters included for literals).
+    pub text: &'s str,
+    /// 1-based line number of the token's first byte.
+    pub line: usize,
+}
+
+impl<'s> Tok<'s> {
+    /// True for an identifier token spelling exactly `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True for a punctuation token spelling exactly `s`.
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+
+    /// True for comment tokens (line or block).
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind,
+                 TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Lex `src` into a token stream. Never fails: unterminated literals
+/// degrade to a token running to end-of-file (the compiler, not the
+/// linter, owns syntax errors).
+pub fn lex(src: &str) -> Vec<Tok<'_>> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::LineComment,
+                            text: &src[start..i], line });
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*'
+                {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/'
+                {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::BlockComment,
+                            text: &src[start..i], line: start_line });
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, br"…", b"…".
+        if c == b'r' || c == b'b' {
+            if let Some((end, end_line)) = raw_or_byte_str(b, i, line)
+            {
+                toks.push(Tok { kind: TokKind::Str,
+                                text: &src[i..end], line });
+                line = end_line;
+                i = end;
+                continue;
+            }
+            if c == b'b' && i + 1 < n && b[i + 1] == b'\'' {
+                let end = char_lit_end(b, i + 1);
+                toks.push(Tok { kind: TokKind::Char,
+                                text: &src[i..end], line });
+                i = end;
+                continue;
+            }
+        }
+        if c == b'"' {
+            let (start, start_line) = (i, line);
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => {
+                        // A backslash-newline continuation still ends
+                        // a source line — count it, or every line
+                        // number after this string drifts.
+                        if i + 1 < n && b[i + 1] == b'\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                    }
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str,
+                            text: &src[start..i.min(n)],
+                            line: start_line });
+            continue;
+        }
+        if c == b'\'' {
+            // Lifetime vs char: 'ident not followed by a closing
+            // quote is a lifetime; everything else is a char literal.
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' && j == i + 2 {
+                    // 'a' — single-ident-char literal.
+                    toks.push(Tok { kind: TokKind::Char,
+                                    text: &src[i..j + 1], line });
+                    i = j + 1;
+                    continue;
+                }
+                toks.push(Tok { kind: TokKind::Lifetime,
+                                text: &src[i..j], line });
+                i = j;
+                continue;
+            }
+            let end = char_lit_end(b, i);
+            toks.push(Tok { kind: TokKind::Char, text: &src[i..end],
+                            line });
+            i = end;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident,
+                            text: &src[start..i], line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_cont(b[i])) {
+                i += 1;
+            }
+            // Fraction only when '.' is followed by a digit — `0..k`
+            // ranges and `1.max(2)` method calls stay separate.
+            if i + 1 < n
+                && b[i] == b'.'
+                && b[i + 1].is_ascii_digit()
+            {
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num,
+                            text: &src[start..i], line });
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct,
+                        text: &src[i..i + 1], line });
+        i += 1;
+    }
+    toks
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Scan a char literal from the opening `'`; returns the byte index
+/// one past the closing quote (best-effort on malformed input).
+fn char_lit_end(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut i = start + 1;
+    if i < n && b[i] == b'\\' {
+        i += 2;
+    } else if i < n {
+        i += 1;
+    }
+    if i < n && b[i] == b'\'' {
+        i += 1;
+    }
+    i.min(n)
+}
+
+/// Try to match a raw or byte string starting at `i` (`r"`, `r#"`,
+/// `br#"`, `b"`). Returns `(end_index, end_line)` on a match.
+fn raw_or_byte_str(b: &[u8], i: usize, line: usize)
+                   -> Option<(usize, usize)> {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j < n && b[j] == b'r' {
+            j += 1;
+        } else if j < n && b[j] == b'"' {
+            // b"…" — plain byte string with escapes.
+            let mut k = j + 1;
+            let mut l = line;
+            while k < n {
+                match b[k] {
+                    b'\\' => {
+                        // Same backslash-newline accounting as the
+                        // plain string loop.
+                        if k + 1 < n && b[k + 1] == b'\n' {
+                            l += 1;
+                        }
+                        k += 2;
+                    }
+                    b'"' => return Some((k + 1, l)),
+                    b'\n' => {
+                        l += 1;
+                        k += 1;
+                    }
+                    _ => k += 1,
+                }
+            }
+            return Some((n, l));
+        } else {
+            return None;
+        }
+    } else if b[j] == b'r' {
+        j += 1;
+    } else {
+        return None;
+    }
+    let mut hashes = 0usize;
+    while j < n && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    // Raw string body: ends at '"' followed by `hashes` '#'s.
+    let mut k = j + 1;
+    let mut l = line;
+    while k < n {
+        if b[k] == b'\n' {
+            l += 1;
+            k += 1;
+            continue;
+        }
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && k + 1 + h < n && b[k + 1 + h] == b'#'
+            {
+                h += 1;
+            }
+            if h == hashes {
+                return Some((k + 1 + hashes, l));
+            }
+        }
+        k += 1;
+    }
+    Some((n, l))
+}
+
+/// Per-token `#[cfg(test)]` membership: `mask[i]` is true when token
+/// `i` belongs to a test-gated item (the attribute itself, any
+/// stacked attributes after it, and the item's full `{ … }` body or
+/// `…;` line).
+///
+/// Handles the cases the old awk prefix gate could not:
+/// * **trailing test modules** — code *after* a test module is
+///   non-test again (the awk gate stopped scanning at the first
+///   `#[cfg(test)]` forever);
+/// * **multiple regions** per file (`#[cfg(test)] impl` helpers next
+///   to `#[cfg(test)] mod tests`);
+/// * **nested braces** inside the test body.
+///
+/// `#[cfg(not(test))]` is correctly treated as *non*-test.
+pub fn test_mask(toks: &[Tok<'_>]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_punct("#")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct("[")
+        {
+            let attr_start = i;
+            let attr_end = match bracket_end(toks, i + 1) {
+                Some(e) => e,
+                None => break,
+            };
+            if attr_is_cfg_test(&toks[i + 2..attr_end]) {
+                let item_end = cfg_item_end(toks, attr_end + 1);
+                for m in mask
+                    .iter_mut()
+                    .take(item_end.min(toks.len()))
+                    .skip(attr_start)
+                {
+                    *m = true;
+                }
+                i = item_end;
+                continue;
+            }
+            i = attr_end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// True when the attribute tokens (between `#[` and `]`) are a
+/// `cfg(…)` whose condition mentions `test` outside a `not(…)`.
+fn attr_is_cfg_test(inner: &[Tok<'_>]) -> bool {
+    if !inner.first().is_some_and(|t| t.is_ident("cfg")) {
+        return false;
+    }
+    for (k, t) in inner.iter().enumerate() {
+        if t.is_ident("test") {
+            // Reject `not(test)`: identifier `not` two tokens back.
+            let negated = k >= 2
+                && inner[k - 1].is_punct("(")
+                && inner[k - 2].is_ident("not");
+            if !negated {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Index of the `]` matching the `[` at `open` (bracket-nesting
+/// aware).
+fn bracket_end(toks: &[Tok<'_>], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct("]") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// One past the end of the item following a `#[cfg(test)]`: skips
+/// stacked attributes and comments, then either the terminating `;`
+/// (use declarations etc.) or the matching `}` of the item's body.
+fn cfg_item_end(toks: &[Tok<'_>], mut i: usize) -> usize {
+    // Stacked attributes after the cfg — part of the same item.
+    while i + 1 < toks.len()
+        && toks[i].is_punct("#")
+        && toks[i + 1].is_punct("[")
+    {
+        match bracket_end(toks, i + 1) {
+            Some(e) => i = e + 1,
+            None => return toks.len(),
+        }
+    }
+    // Scan to the first top-level `{` or `;`.
+    let mut k = i;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.is_punct(";") {
+            return k + 1;
+        }
+        if t.is_punct("{") {
+            let mut depth = 0usize;
+            while k < toks.len() {
+                if toks[k].is_punct("{") {
+                    depth += 1;
+                } else if toks[k].is_punct("}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k + 1;
+                    }
+                }
+                k += 1;
+            }
+            return toks.len();
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+/// Line classification for comment-placement rules
+/// (`unsafe-audit`'s SAFETY lookback walks these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineClass {
+    /// No tokens at all.
+    Blank,
+    /// Only comment tokens.
+    CommentOnly,
+    /// First token is `#` — an attribute line.
+    Attr,
+    /// Code whose tokens include a `;` or `}` (a statement or item
+    /// ends here).
+    CodeStmtEnd,
+    /// Code tokens, but no statement terminator (a continued
+    /// expression).
+    CodeCont,
+}
+
+/// Classify every 1-based line of the file (`out[0]` is unused
+/// padding so `out[line]` indexes directly).
+pub fn classify_lines(src: &str, toks: &[Tok<'_>]) -> Vec<LineClass> {
+    let nlines = src.lines().count() + 1;
+    let mut class = vec![LineClass::Blank; nlines + 1];
+    for t in toks {
+        // Multi-line tokens (block comments, raw strings) classify
+        // every line they cover.
+        let span_lines = t.text.matches('\n').count();
+        for ln in t.line..=t.line + span_lines {
+            if ln >= class.len() {
+                break;
+            }
+            let cur = class[ln];
+            let next = match t.kind {
+                TokKind::LineComment | TokKind::BlockComment => {
+                    match cur {
+                        LineClass::Blank => LineClass::CommentOnly,
+                        other => other,
+                    }
+                }
+                TokKind::Punct if t.text == "#"
+                    && cur == LineClass::Blank =>
+                {
+                    LineClass::Attr
+                }
+                TokKind::Punct
+                    if t.text == ";" || t.text == "}" =>
+                {
+                    LineClass::CodeStmtEnd
+                }
+                _ => match cur {
+                    LineClass::Blank | LineClass::CommentOnly => {
+                        LineClass::CodeCont
+                    }
+                    LineClass::Attr => LineClass::Attr,
+                    other => other,
+                },
+            };
+            class[ln] = match (cur, next) {
+                // A statement end anywhere on the line wins.
+                (LineClass::CodeStmtEnd, _) => LineClass::CodeStmtEnd,
+                (_, n) => n,
+            };
+        }
+    }
+    class
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_idents() {
+        let src = r###"
+// a comment with unwrap() inside
+let s = "panic!(\"no\")";
+let r = r#"env::var("SPADE_X")"#;
+let c = 'x';
+let lt: &'scope str = s;
+foo.unwrap();
+"###;
+        let toks = lex(src);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect();
+        // The forbidden spellings inside the comment and the two
+        // strings never surface as identifiers.
+        assert_eq!(idents.iter().filter(|s| **s == "unwrap").count(),
+                   1);
+        assert!(!idents.contains(&"env"));
+        assert!(!idents.contains(&"panic"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime
+                                    && t.text == "'scope"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Char
+                                    && t.text == "'x'"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_byte_strings() {
+        let src = "/* outer /* inner */ still comment */ x b\"bytes\" \
+                   br#\"raw bytes\"#";
+        let toks = lex(src);
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert!(toks[1].is_ident("x"));
+        assert_eq!(toks[2].kind, TokKind::Str);
+        assert_eq!(toks[3].kind, TokKind::Str);
+    }
+
+    #[test]
+    fn test_mask_covers_trailing_and_nested_modules() {
+        let src = r#"
+fn live_before() { a.unwrap(); }
+#[cfg(test)]
+mod tests {
+    mod nested { fn f() { b.unwrap(); } }
+}
+fn live_after() { c.unwrap(); }
+#[cfg(test)]
+impl Helper { fn t(&self) { d.unwrap(); } }
+fn live_tail() { e.unwrap(); }
+"#;
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        let live: Vec<&str> = toks
+            .iter()
+            .zip(&mask)
+            .filter(|(t, m)| t.kind == TokKind::Ident && !**m)
+            .map(|(t, _)| t.text)
+            .collect();
+        assert!(live.contains(&"a"));
+        assert!(!live.contains(&"b"), "nested test module must mask");
+        assert!(live.contains(&"c"), "code after a test module is live");
+        assert!(!live.contains(&"d"), "cfg(test) impl must mask");
+        assert!(live.contains(&"e"));
+    }
+
+    #[test]
+    fn backslash_newline_in_string_keeps_line_numbers() {
+        // `format!("… \` continuations are common in this codebase;
+        // the escaped newline must still advance the line counter or
+        // every token after the string reports a drifted line.
+        let src = "let s = format!(\"a \\\n    b\");\nunsafe {}\n";
+        let toks = lex(src);
+        let uns = toks
+            .iter()
+            .find(|t| t.is_ident("unsafe"))
+            .expect("unsafe token");
+        assert_eq!(uns.line, 3,
+                   "line count must survive \\-newline escapes");
+    }
+
+    #[test]
+    fn cfg_not_test_stays_live() {
+        let src = "#[cfg(not(test))] fn prod() { x.unwrap(); }";
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        assert!(mask.iter().all(|m| !m));
+    }
+
+    #[test]
+    fn line_classes() {
+        let src = "\n// comment\n#[inline]\nlet x = foo\n    .bar();\n";
+        let toks = lex(src);
+        let class = classify_lines(src, &toks);
+        assert_eq!(class[1], LineClass::Blank);
+        assert_eq!(class[2], LineClass::CommentOnly);
+        assert_eq!(class[3], LineClass::Attr);
+        assert_eq!(class[4], LineClass::CodeCont);
+        assert_eq!(class[5], LineClass::CodeStmtEnd);
+    }
+}

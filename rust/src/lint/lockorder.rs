@@ -1,0 +1,346 @@
+//! **lock-order** — static Mutex/RwLock acquisition-order analysis
+//! over the coordinator.
+//!
+//! The rule extracts, per function, which locks are acquired while
+//! which others are held, unions the resulting edges across all
+//! `coordinator/` files into one directed graph, and fails on any
+//! cycle (`A` taken under `B` somewhere, `B` taken under `A`
+//! elsewhere — the classic ABBA deadlock shape) as well as on a
+//! direct re-acquisition of a lock already held in the same
+//! function (guaranteed self-deadlock for `std::sync::Mutex`).
+//!
+//! Acquisition sites recognized (all lexical):
+//! * `lock_metrics(&self.metrics)` / `lock_recover(&self.slot)` —
+//!   the project's poison-recovery helpers; the lock name is the
+//!   last identifier inside the call's parentheses;
+//! * `x.lock()` and zero-argument `x.read()` / `x.write()` — the
+//!   lock name is the receiver identifier (zero-argument only, so
+//!   `io::Read::read(&mut buf)` never matches).
+//!
+//! Guard lifetimes are approximated from the statement shape:
+//! `let`-bound guards live to the end of the enclosing block (or an
+//! explicit `drop(binding)`); guards acquired inside an
+//! `if`/`while`/`match` head live to the end of that construct;
+//! bare temporaries live to the end of the statement. Lock names
+//! are lexical — two bindings aliasing one mutex are not unified —
+//! so the rule is a heuristic: precise about the project's named
+//! field locks, silent about what it cannot see.
+
+use super::lexer::{Tok, TokKind};
+use super::rules::FileCtx;
+use super::Finding;
+
+/// One observed "acquired `to` while holding `from`" edge.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    /// Lock already held.
+    pub from: String,
+    /// Lock acquired under it.
+    pub to: String,
+    /// File of the inner acquisition.
+    pub file: String,
+    /// 1-based line of the inner acquisition.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Until {
+    /// Released at the next `;` (bare temporary).
+    Stmt,
+    /// Released when block depth drops below the recorded depth
+    /// (`let`-bound guard).
+    Block(usize),
+    /// Released when a `}` closes back to the recorded depth and is
+    /// not followed by `else` (guard in an `if`/`while`/`match`
+    /// head).
+    Construct(usize),
+}
+
+#[derive(Debug, Clone)]
+struct Held {
+    lock: String,
+    binding: Option<String>,
+    until: Until,
+}
+
+/// Scan one file for lock edges and immediate re-acquisition
+/// findings. Test modules are skipped: the serving contract is about
+/// production paths, and tests may stage lock patterns freely.
+pub fn collect_edges(ctx: &FileCtx<'_>)
+                     -> (Vec<LockEdge>, Vec<Finding>) {
+    let t = &ctx.toks;
+    let mut edges = Vec::new();
+    let mut findings = Vec::new();
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < t.len() {
+        if ctx.mask[i] || t[i].is_comment() {
+            i += 1;
+            continue;
+        }
+        let tok = &t[i];
+        if tok.is_ident("fn") {
+            // New function item (or nested fn): no guards carry over.
+            held.clear();
+        } else if tok.is_punct("{") {
+            depth += 1;
+        } else if tok.is_punct("}") {
+            depth = depth.saturating_sub(1);
+            let next_is_else = t
+                .get(i + 1)
+                .is_some_and(|n| n.is_ident("else"));
+            held.retain(|h| match h.until {
+                Until::Block(d) => depth >= d,
+                Until::Construct(d) => {
+                    depth > d || (depth == d && next_is_else)
+                }
+                Until::Stmt => true,
+            });
+        } else if tok.is_punct(";") {
+            held.retain(|h| h.until != Until::Stmt);
+        } else if tok.is_ident("drop")
+            && t.get(i + 1).is_some_and(|n| n.is_punct("("))
+            && t.get(i + 2)
+                .is_some_and(|n| n.kind == TokKind::Ident)
+            && t.get(i + 3).is_some_and(|n| n.is_punct(")"))
+        {
+            let name = t[i + 2].text;
+            held.retain(|h| {
+                h.binding.as_deref() != Some(name)
+                    && h.lock != name
+            });
+            i += 4;
+            continue;
+        } else if let Some(lock) = acquisition(t, i) {
+            if held.iter().any(|h| h.lock == lock) {
+                findings.push(Finding {
+                    rule: "lock-order",
+                    file: ctx.path.to_string(),
+                    line: tok.line,
+                    message: format!(
+                        "lock `{lock}` re-acquired while already \
+                         held in this function (self-deadlock for \
+                         std::sync::Mutex)"),
+                });
+            } else {
+                for h in &held {
+                    edges.push(LockEdge {
+                        from: h.lock.clone(),
+                        to: lock.clone(),
+                        file: ctx.path.to_string(),
+                        line: tok.line,
+                    });
+                }
+                let (binding, until) = stmt_shape(t, i, depth);
+                held.push(Held { lock, binding, until });
+            }
+        }
+        i += 1;
+    }
+    (edges, findings)
+}
+
+/// If token `i` starts a lock acquisition, return the lock name.
+fn acquisition(t: &[Tok<'_>], i: usize) -> Option<String> {
+    // A definition (`pub fn lock_metrics(m: &Mutex<…>)`) is not a
+    // call site — without this guard the helper's own signature
+    // would register a phantom acquisition named after the last
+    // type parameter.
+    let mut p = i;
+    while p > 0 && t[p - 1].is_comment() {
+        p -= 1;
+    }
+    if p > 0 && t[p - 1].is_ident("fn") {
+        return None;
+    }
+    // Helper calls: lock_metrics(…) / lock_recover(…).
+    if (t[i].is_ident("lock_metrics")
+        || t[i].is_ident("lock_recover"))
+        && t.get(i + 1).is_some_and(|n| n.is_punct("("))
+    {
+        let mut depth = 0usize;
+        let mut last_ident: Option<&str> = None;
+        for tok in &t[i + 1..] {
+            if tok.is_punct("(") {
+                depth += 1;
+            } else if tok.is_punct(")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if tok.kind == TokKind::Ident {
+                last_ident = Some(tok.text);
+            }
+        }
+        return Some(
+            last_ident
+                .unwrap_or(if t[i].is_ident("lock_metrics") {
+                    "metrics"
+                } else {
+                    "lock"
+                })
+                .to_string(),
+        );
+    }
+    // Method calls: recv.lock() / recv.read() / recv.write() with
+    // zero arguments.
+    if (t[i].is_ident("lock") || t[i].is_ident("read")
+        || t[i].is_ident("write"))
+        && i >= 2
+        && t[i - 1].is_punct(".")
+        && t[i - 2].kind == TokKind::Ident
+        && t.get(i + 1).is_some_and(|n| n.is_punct("("))
+        && t.get(i + 2).is_some_and(|n| n.is_punct(")"))
+    {
+        // Inside the helpers' own bodies this sees `m.lock()` under
+        // the parameter name — held is empty there (the `fn` keyword
+        // cleared it), so no spurious edge results.
+        return Some(t[i - 2].text.to_string());
+    }
+    None
+}
+
+/// Classify the statement containing the acquisition at token `i`:
+/// returns the `let` binding name (if any) and the guard's lifetime
+/// class.
+fn stmt_shape(t: &[Tok<'_>], i: usize, depth: usize)
+              -> (Option<String>, Until) {
+    // Walk back to the start of the statement.
+    let mut s = i;
+    while s > 0 {
+        let p = &t[s - 1];
+        if p.is_punct(";") || p.is_punct("{") || p.is_punct("}") {
+            break;
+        }
+        s -= 1;
+    }
+    let head = &t[s..i];
+    let mut binding = None;
+    for (k, tok) in head.iter().enumerate() {
+        if tok.is_ident("let") {
+            let mut b = k + 1;
+            if head.get(b).is_some_and(|n| n.is_ident("mut")) {
+                b += 1;
+            }
+            if let Some(n) = head.get(b) {
+                if n.kind == TokKind::Ident {
+                    binding = Some(n.text.to_string());
+                }
+            }
+        }
+    }
+    let is_construct = head.iter().any(|tok| {
+        tok.is_ident("if") || tok.is_ident("while")
+            || tok.is_ident("match")
+    });
+    if is_construct {
+        (binding, Until::Construct(depth))
+    } else if binding.is_some()
+        || head.iter().any(|tok| tok.is_ident("let"))
+    {
+        (binding, Until::Block(depth))
+    } else {
+        (None, Until::Stmt)
+    }
+}
+
+/// Union edges into a graph and report every distinct cycle (and
+/// none on diamonds: `a→b`, `a→c`, `b→d`, `c→d` is a legal partial
+/// order).
+pub fn cycle_findings(edges: &[LockEdge]) -> Vec<Finding> {
+    let mut nodes: Vec<&str> = Vec::new();
+    for e in edges {
+        if !nodes.contains(&e.from.as_str()) {
+            nodes.push(&e.from);
+        }
+        if !nodes.contains(&e.to.as_str()) {
+            nodes.push(&e.to);
+        }
+    }
+    let idx = |n: &str| {
+        nodes.iter().position(|m| *m == n).unwrap_or(0)
+    };
+    let n = nodes.len();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in edges {
+        let (f, to) = (idx(&e.from), idx(&e.to));
+        if !adj[f].contains(&to) {
+            adj[f].push(to);
+        }
+    }
+    // Iterative DFS with colors; on a back edge, reconstruct the
+    // cycle from the stack and report it once (deduped by its sorted
+    // node set).
+    let mut color = vec![0u8; n]; // 0 white, 1 gray, 2 black
+    let mut out = Vec::new();
+    let mut seen_cycles: Vec<Vec<usize>> = Vec::new();
+    for start in 0..n {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        color[start] = 1;
+        let mut path = vec![start];
+        while let Some(&(v, next)) = stack.last() {
+            if next < adj[v].len() {
+                if let Some(top) = stack.last_mut() {
+                    top.1 += 1;
+                }
+                let w = adj[v][next];
+                match color[w] {
+                    0 => {
+                        color[w] = 1;
+                        stack.push((w, 0));
+                        path.push(w);
+                    }
+                    1 => {
+                        let pos = path
+                            .iter()
+                            .position(|&x| x == w)
+                            .unwrap_or(0);
+                        let mut cyc: Vec<usize> =
+                            path[pos..].to_vec();
+                        let mut key = cyc.clone();
+                        key.sort_unstable();
+                        if !seen_cycles.contains(&key) {
+                            seen_cycles.push(key);
+                            cyc.push(w);
+                            let names: Vec<&str> = cyc
+                                .iter()
+                                .map(|&x| nodes[x])
+                                .collect();
+                            // Anchor the finding at the edge that
+                            // closes the cycle.
+                            let closing = edges
+                                .iter()
+                                .find(|e| {
+                                    e.from == nodes[v]
+                                        && e.to == nodes[w]
+                                });
+                            let (file, line) = closing
+                                .map(|e| (e.file.clone(), e.line))
+                                .unwrap_or_default();
+                            out.push(Finding {
+                                rule: "lock-order",
+                                file,
+                                line,
+                                message: format!(
+                                    "lock-order cycle: {} — pick \
+                                     one global order and release \
+                                     before crossing it",
+                                    names.join(" -> ")),
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            } else {
+                color[v] = 2;
+                stack.pop();
+                path.pop();
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,405 @@
+//! `spade-lint` — a dependency-free static-analysis pass enforcing
+//! the project's exactness and serving contracts.
+//!
+//! Eight PRs in, the invariants that make SPADE's numbers trustable
+//! (edge-only encode, env hygiene, unwrap-free serving paths,
+//! audited `unsafe`, counter observability) were policed by grep/awk
+//! one-liners in `scripts/verify.sh` — fooled by comments, raw
+//! strings, and `#[cfg(test)]` placement. This module replaces them
+//! with a lexer-accurate analysis ([`lexer`]) and first-class rules
+//! ([`rules`], [`lockorder`]):
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `env-hygiene` | `env::var("SPADE_*")` only in `api/env.rs` |
+//! | `edge-only-encode` | no `encode(`/`from_f64(` in `nn/exec.rs` |
+//! | `no-unwrap` | no `.unwrap()`/`.expect(`/`panic!`/`todo!` on serving paths |
+//! | `unsafe-audit` | every `unsafe` preceded by a `// SAFETY:` comment |
+//! | `lock-order` | no cycles in the coordinator's lock acquisition graph |
+//! | `spawn-audit` | OS threads only from the pool/coordinator/stats dumper |
+//! | `counter-coverage` | every counter emitted in stats-json and test-asserted |
+//!
+//! Run it with `cargo run --release --bin spade-lint`; findings
+//! print as `file:line [rule] message`, a machine-readable
+//! `LINT_report.json` is written, and the exit code is nonzero on
+//! any unsuppressed finding. A finding is suppressed by a line
+//! comment on, or directly above, the offending line:
+//!
+//! ```text
+//! // lint: allow(no-unwrap): supervisor catch_unwind converts this
+//! // into a shard restart; a typed reply already went out.
+//! ```
+//!
+//! The justification after the closing parenthesis is mandatory —
+//! an allow without one is itself reported (rule `suppression`).
+//! Rule engines operate on `&str` (see [`rules::FileCtx`]) so every
+//! rule is unit-testable without touching the filesystem
+//! (`rust/tests/lint_rules.rs`).
+
+pub mod lexer;
+pub mod lockorder;
+pub mod rules;
+
+use rules::FileCtx;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Identifiers of every enforced rule (what `lint: allow(...)` may
+/// name). The pseudo-rule `suppression` reports malformed allows and
+/// cannot itself be suppressed.
+pub const RULE_IDS: &[&str] = &[
+    "env-hygiene",
+    "edge-only-encode",
+    "no-unwrap",
+    "unsafe-audit",
+    "lock-order",
+    "spawn-audit",
+    "counter-coverage",
+];
+
+/// One lint violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule identifier (one of [`RULE_IDS`], or `suppression`).
+    pub rule: &'static str,
+    /// Repo-relative file path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule,
+               self.message)
+    }
+}
+
+/// A parsed `// lint: allow(<rule>): <justification>` comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// File the comment lives in.
+    pub file: String,
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// Last line covered: the comment's own line for a trailing
+    /// comment, or — for a comment-only block (the justification may
+    /// wrap over several `//` lines) — the first non-comment line
+    /// after the block.
+    pub end_line: usize,
+    /// Rule being allowed.
+    pub rule: String,
+    /// Mandatory justification text.
+    pub justification: String,
+}
+
+/// Scan a file's line comments for suppressions. Returns the valid
+/// allows plus `suppression` findings for malformed ones (unknown
+/// rule, or missing justification — those do **not** suppress
+/// anything).
+pub fn collect_allows(ctx: &FileCtx<'_>)
+                      -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for t in &ctx.toks {
+        if t.kind != lexer::TokKind::LineComment {
+            continue;
+        }
+        // Strip `//` / `///` / `//!` and leading whitespace; only a
+        // comment that *begins* with the marker is a suppression
+        // (docs may mention the syntax in backticks freely).
+        let body = t.text
+            .trim_start_matches('/')
+            .trim_start_matches('!')
+            .trim_start();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            findings.push(Finding {
+                rule: "suppression",
+                file: ctx.path.to_string(),
+                line: t.line,
+                message: "malformed lint comment: expected \
+                          `lint: allow(<rule>): <justification>`"
+                    .to_string(),
+            });
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding {
+                rule: "suppression",
+                file: ctx.path.to_string(),
+                line: t.line,
+                message: "unterminated `lint: allow(` — missing `)`"
+                    .to_string(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let justification = rest[close + 1..]
+            .trim_start_matches([':', '-', ','])
+            .trim()
+            .to_string();
+        if !RULE_IDS.contains(&rule.as_str()) {
+            findings.push(Finding {
+                rule: "suppression",
+                file: ctx.path.to_string(),
+                line: t.line,
+                message: format!(
+                    "`lint: allow({rule})` names an unknown rule \
+                     (known: {})",
+                    RULE_IDS.join(", ")),
+            });
+            continue;
+        }
+        if justification.is_empty() {
+            findings.push(Finding {
+                rule: "suppression",
+                file: ctx.path.to_string(),
+                line: t.line,
+                message: format!(
+                    "`lint: allow({rule})` needs a trailing \
+                     justification stating why the invariant holds \
+                     here"),
+            });
+            continue;
+        }
+        let mut end_line = t.line;
+        if ctx.classes.get(t.line).copied()
+            == Some(lexer::LineClass::CommentOnly)
+        {
+            let mut ln = t.line + 1;
+            while ctx.classes.get(ln).copied()
+                == Some(lexer::LineClass::CommentOnly)
+            {
+                ln += 1;
+            }
+            end_line = ln;
+        }
+        allows.push(Allow {
+            file: ctx.path.to_string(),
+            line: t.line,
+            end_line,
+            rule,
+            justification,
+        });
+    }
+    (allows, findings)
+}
+
+/// Split findings into (kept, suppressed) under the given allows.
+/// An allow matches a finding of its rule in the same file on any
+/// line from the comment through the first non-comment line after
+/// its block. `suppression` findings are never suppressible.
+pub fn apply_allows(findings: Vec<Finding>, allows: &[Allow])
+                    -> (Vec<Finding>, Vec<(Finding, String)>) {
+    let mut kept = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in findings {
+        let hit = (f.rule != "suppression")
+            .then(|| {
+                allows.iter().find(|a| {
+                    a.rule == f.rule
+                        && a.file == f.file
+                        && f.line >= a.line
+                        && f.line <= a.end_line
+                })
+            })
+            .flatten();
+        match hit {
+            Some(a) => {
+                suppressed.push((f, a.justification.clone()));
+            }
+            None => kept.push(f),
+        }
+    }
+    (kept, suppressed)
+}
+
+/// Run every per-file rule applicable to `path` on `src` and apply
+/// its inline suppressions. Cross-file rules (`counter-coverage`,
+/// cross-file `lock-order` cycles) need [`lint_tree`]; single-file
+/// lock cycles **are** reported here.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let ctx = FileCtx::new(path, src);
+    let mut findings = per_file_findings(&ctx);
+    if path.contains("src/coordinator/") {
+        let (edges, direct) = lockorder::collect_edges(&ctx);
+        findings.extend(direct);
+        findings.extend(lockorder::cycle_findings(&edges));
+    }
+    let (allows, allow_findings) = collect_allows(&ctx);
+    findings.extend(allow_findings);
+    let (kept, _suppressed) = apply_allows(findings, &allows);
+    kept
+}
+
+fn per_file_findings(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(rules::rule_env_hygiene(ctx));
+    out.extend(rules::rule_edge_only_encode(ctx));
+    out.extend(rules::rule_no_unwrap(ctx));
+    out.extend(rules::rule_unsafe_audit(ctx));
+    out.extend(rules::rule_spawn_audit(ctx));
+    out
+}
+
+/// Full-tree lint result.
+#[derive(Debug)]
+pub struct Report {
+    /// Unsuppressed findings (nonempty ⇒ nonzero exit).
+    pub findings: Vec<Finding>,
+    /// Suppressed findings with their justifications.
+    pub suppressed: Vec<(Finding, String)>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Render the machine-readable `LINT_report.json` payload
+    /// (schema `spade-lint-v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"spade-lint-v1\",\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n",
+                            self.files_scanned));
+        s.push_str("  \"rules\": [");
+        for (i, r) in RULE_IDS.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{r}\""));
+        }
+        s.push_str("],\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \
+                 \"line\": {}, \"message\": \"{}\"}}",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message)));
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n  \"suppressed\": [");
+        for (i, (f, why)) in self.suppressed.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \
+                 \"line\": {}, \"justification\": \"{}\"}}",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(why)));
+        }
+        if !self.suppressed.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Directories scanned relative to the repo root.
+pub const SCAN_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lint the whole tree under `root` (the repo root): walk
+/// [`SCAN_ROOTS`], run per-file rules + suppressions on every `.rs`
+/// file, then the cross-file rules (coordinator-wide lock-order
+/// graph, counter-coverage).
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, root, &mut files)?;
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    let ctxs: Vec<FileCtx<'_>> = files
+        .iter()
+        .map(|(p, s)| FileCtx::new(p, s))
+        .collect();
+
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    for ctx in &ctxs {
+        findings.extend(per_file_findings(ctx));
+        let (a, af) = collect_allows(ctx);
+        allows.extend(a);
+        findings.extend(af);
+    }
+    // Coordinator-wide lock graph.
+    let mut edges = Vec::new();
+    for ctx in &ctxs {
+        if ctx.path.contains("src/coordinator/") {
+            let (e, direct) = lockorder::collect_edges(ctx);
+            edges.extend(e);
+            findings.extend(direct);
+        }
+    }
+    findings.extend(lockorder::cycle_findings(&edges));
+    findings.extend(rules::rule_counter_coverage(&ctxs));
+
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    let (kept, suppressed) = apply_allows(findings, &allows);
+    Ok(Report {
+        findings: kept,
+        suppressed,
+        files_scanned: ctxs.len(),
+    })
+}
+
+fn walk(dir: &Path, root: &Path,
+        out: &mut Vec<(String, String)>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,483 @@
+//! Per-file lint rules operating on [`FileCtx`] token streams.
+//!
+//! Every rule is a pure function from lexed source to a list of
+//! [`Finding`]s — no filesystem access — so the fixture suite in
+//! `rust/tests/lint_rules.rs` can exercise each rule on inline
+//! strings, including the tricky negatives (forbidden spellings
+//! inside raw strings, comments, or `#[cfg(test)]` modules).
+
+use super::lexer::{classify_lines, lex, test_mask, LineClass, Tok,
+                   TokKind};
+use super::Finding;
+
+/// A lexed file plus the derived per-token and per-line facts every
+/// rule consumes: the `#[cfg(test)]` membership mask and the line
+/// classification used by the SAFETY lookback.
+pub struct FileCtx<'s> {
+    /// Repo-relative path with forward slashes (drives rule scoping).
+    pub path: &'s str,
+    /// Raw source text.
+    pub src: &'s str,
+    /// Token stream from [`lex`].
+    pub toks: Vec<Tok<'s>>,
+    /// `mask[i]` — token `i` lives inside a `#[cfg(test)]` item.
+    pub mask: Vec<bool>,
+    /// 1-based per-line classification ([`classify_lines`]).
+    pub classes: Vec<LineClass>,
+    /// 1-based line texts (`lines[0]` is unused padding).
+    pub lines: Vec<&'s str>,
+}
+
+impl<'s> FileCtx<'s> {
+    /// Lex `src` and derive the masks; `path` should be the
+    /// repo-relative path (used only for scoping and messages).
+    pub fn new(path: &'s str, src: &'s str) -> Self {
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        let classes = classify_lines(src, &toks);
+        let mut lines = Vec::with_capacity(src.lines().count() + 1);
+        lines.push("");
+        lines.extend(src.lines());
+        FileCtx { path, src, toks, mask, classes, lines }
+    }
+
+    fn finding(&self, rule: &'static str, line: usize,
+               message: String) -> Finding {
+        Finding { rule, file: self.path.to_string(), line, message }
+    }
+}
+
+/// Literal content of a string token: the text between the quotes,
+/// with any `b`/`r`/`#` prefix and closing hashes stripped (escape
+/// sequences are left as written — rules only substring-match).
+pub fn str_body(text: &str) -> &str {
+    let Some(open) = text.find('"') else { return text };
+    let rest = &text[open + 1..];
+    match rest.rfind('"') {
+        Some(close) => &rest[..close],
+        None => rest,
+    }
+}
+
+/// **env-hygiene** — `env::var("SPADE_…")` may appear only in
+/// `api/env.rs` (PR 4 contract: all knobs parse once at the process
+/// edge). Matches the token sequence `env :: var ( "SPADE_…"` so
+/// occurrences in comments, strings, and docs never trip it.
+pub fn rule_env_hygiene(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    if ctx.path.ends_with("api/env.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &ctx.toks;
+    for i in 3..t.len() {
+        if !(t[i].is_ident("var")
+             && t[i - 1].is_punct(":")
+             && t[i - 2].is_punct(":")
+             && t[i - 3].is_ident("env"))
+        {
+            continue;
+        }
+        let Some(next) = t.get(i + 1) else { continue };
+        let Some(arg) = t.get(i + 2) else { continue };
+        if next.is_punct("(")
+            && arg.kind == TokKind::Str
+            && str_body(arg.text).starts_with("SPADE_")
+        {
+            out.push(ctx.finding(
+                "env-hygiene",
+                t[i].line,
+                format!("SPADE_* environment read ({}) outside \
+                         rust/src/api/env.rs; route it through \
+                         api::env / EngineConfig::from_env",
+                        str_body(arg.text)),
+            ));
+        }
+    }
+    out
+}
+
+/// **edge-only-encode** — `nn/exec.rs` must stay in the planar
+/// domain: no `encode(` / `from_f64(` calls anywhere in the file
+/// (PR 6 contract: exactly one quantization at the input edge).
+pub fn rule_edge_only_encode(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    if !ctx.path.ends_with("nn/exec.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &ctx.toks;
+    for i in 0..t.len().saturating_sub(1) {
+        if (t[i].is_ident("encode") || t[i].is_ident("from_f64"))
+            && t[i + 1].is_punct("(")
+        {
+            out.push(ctx.finding(
+                "edge-only-encode",
+                t[i].line,
+                format!("direct posit encode (`{}(`) in nn/exec.rs; \
+                         layer bodies must stay planar — only \
+                         edge_quantize/materialize_f32 cross the \
+                         boundary",
+                        t[i].text),
+            ));
+        }
+    }
+    out
+}
+
+/// True when `path` is a supervised serving path (coordinator
+/// modules + the kernel worker pool).
+pub fn is_serving_path(path: &str) -> bool {
+    path.contains("src/coordinator/")
+        || path.ends_with("src/kernel/pool.rs")
+}
+
+/// **no-unwrap** — serving paths must not carry `.unwrap()`,
+/// `.expect(`, `panic!` or `todo!` outside `#[cfg(test)]` items
+/// (PR 8 contract: every accepted request terminates in exactly one
+/// typed reply). Token-accurate: `unwrap_or_else` is a different
+/// identifier and docs naming the calls are comment tokens.
+pub fn rule_no_unwrap(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    if !is_serving_path(ctx.path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &ctx.toks;
+    for i in 0..t.len() {
+        if ctx.mask[i] {
+            continue;
+        }
+        let next_is = |s: &str| {
+            t.get(i + 1).is_some_and(|n| n.is_punct(s))
+        };
+        let prev_is_dot =
+            i > 0 && t[i - 1].is_punct(".");
+        let bad = if (t[i].is_ident("unwrap")
+                      || t[i].is_ident("expect"))
+            && prev_is_dot
+            && next_is("(")
+        {
+            Some(format!(".{}(", t[i].text))
+        } else if (t[i].is_ident("panic") || t[i].is_ident("todo"))
+            && next_is("!")
+        {
+            Some(format!("{}!", t[i].text))
+        } else {
+            None
+        };
+        if let Some(what) = bad {
+            out.push(ctx.finding(
+                "no-unwrap",
+                t[i].line,
+                format!("`{what}` on a supervised serving path; \
+                         recover (lock_recover/lock_metrics), answer \
+                         typed, or move it into the test module"),
+            ));
+        }
+    }
+    out
+}
+
+/// **unsafe-audit** — every `unsafe` token (block, fn, or impl) must
+/// be immediately preceded by a comment carrying `SAFETY` (or a
+/// rustdoc `# Safety` section). The lookback walks upward over
+/// attribute lines and mid-statement continuation lines, then
+/// requires the first thing it meets to be a comment block with the
+/// marker; blank lines and completed statements break the chain.
+pub fn rule_unsafe_audit(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut last_line = 0usize;
+    for t in &ctx.toks {
+        if !t.is_ident("unsafe") || t.line == last_line {
+            continue;
+        }
+        last_line = t.line;
+        if !has_safety_above(ctx, t.line) {
+            out.push(ctx.finding(
+                "unsafe-audit",
+                t.line,
+                "`unsafe` without an immediately preceding \
+                 `// SAFETY:` comment stating the invariant"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+fn has_safety_above(ctx: &FileCtx<'_>, line: usize) -> bool {
+    let mut ln = line.saturating_sub(1);
+    let mut hops = 0usize;
+    while ln >= 1 && hops < 16 {
+        match ctx.classes.get(ln).copied()
+            .unwrap_or(LineClass::Blank)
+        {
+            // Attributes and mid-statement continuations sit between
+            // the comment and the `unsafe` token (e.g.
+            // `#[target_feature…]`, or `let (a, b) =` above
+            // `unsafe {`): keep walking.
+            LineClass::Attr | LineClass::CodeCont => {
+                ln -= 1;
+                hops += 1;
+            }
+            LineClass::CommentOnly => {
+                let mut l2 = ln;
+                let mut text = String::new();
+                while l2 >= 1
+                    && ctx.classes[l2] == LineClass::CommentOnly
+                {
+                    text.push_str(ctx.lines[l2]);
+                    text.push('\n');
+                    l2 -= 1;
+                }
+                return text.contains("SAFETY")
+                    || text.contains("# Safety");
+            }
+            LineClass::Blank | LineClass::CodeStmtEnd => return false,
+        }
+    }
+    false
+}
+
+/// Files allowed to spawn OS threads: the kernel worker pool, the
+/// coordinator (PJRT worker + shard supervisors + front loop), and
+/// the api stats dumper.
+pub const SPAWN_ALLOWLIST: &[&str] = &[
+    "src/kernel/pool.rs",
+    "src/coordinator/mod.rs",
+    "src/api/engine.rs",
+];
+
+/// **spawn-audit** — `thread::spawn` / `thread::Builder` only in the
+/// allowlisted modules (everything else must go through the worker
+/// pool so supervision and respawn counters stay accurate). Scoped
+/// `std::thread::scope` spawns (`s.spawn`) are not OS-thread leaks
+/// and do not match.
+pub fn rule_spawn_audit(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    if !ctx.path.contains("src/") || ctx.path.contains("tests/") {
+        return Vec::new();
+    }
+    if SPAWN_ALLOWLIST.iter().any(|p| ctx.path.ends_with(p)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &ctx.toks;
+    for i in 0..t.len().saturating_sub(3) {
+        if ctx.mask[i] {
+            continue;
+        }
+        if t[i].is_ident("thread")
+            && t[i + 1].is_punct(":")
+            && t[i + 2].is_punct(":")
+            && (t[i + 3].is_ident("spawn")
+                || t[i + 3].is_ident("Builder"))
+        {
+            out.push(ctx.finding(
+                "spawn-audit",
+                t[i + 3].line,
+                format!("thread::{} outside the spawn allowlist \
+                         (kernel/pool.rs, coordinator/mod.rs, api \
+                         stats dumper); submit work to the kernel \
+                         pool instead",
+                        t[i + 3].text),
+            ));
+        }
+    }
+    out
+}
+
+/// A counter definition site (struct field or `u64` getter).
+#[derive(Debug, Clone)]
+pub struct CounterDef {
+    /// Field / getter name.
+    pub name: String,
+    /// File it is defined in.
+    pub file: String,
+    /// 1-based definition line.
+    pub line: usize,
+}
+
+/// Extract the `pub` field names of `struct struct_name` from a
+/// lexed file.
+pub fn extract_pub_fields(ctx: &FileCtx<'_>, struct_name: &str)
+                          -> Vec<CounterDef> {
+    let t = &ctx.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < t.len() {
+        if t[i].is_ident("struct") && t[i + 1].is_ident(struct_name) {
+            // Seek the opening brace, then scan depth-1 fields.
+            let mut j = i + 2;
+            while j < t.len() && !t[j].is_punct("{") {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < t.len() {
+                if t[j].is_punct("{") {
+                    depth += 1;
+                } else if t[j].is_punct("}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1
+                    && t[j].is_ident("pub")
+                    && j + 2 < t.len()
+                    && t[j + 1].kind == TokKind::Ident
+                    && t[j + 2].is_punct(":")
+                {
+                    out.push(CounterDef {
+                        name: t[j + 1].text.to_string(),
+                        file: ctx.path.to_string(),
+                        line: t[j + 1].line,
+                    });
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Extract non-test `pub fn name(&self) -> u64` getters (the worker
+/// pool exposes its counters as methods, not fields).
+pub fn extract_u64_getters(ctx: &FileCtx<'_>) -> Vec<CounterDef> {
+    let t = &ctx.toks;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(10) {
+        if ctx.mask[i] {
+            continue;
+        }
+        if t[i].is_ident("pub")
+            && t[i + 1].is_ident("fn")
+            && t[i + 2].kind == TokKind::Ident
+            && t[i + 3].is_punct("(")
+            && t[i + 4].is_punct("&")
+            && t[i + 5].is_ident("self")
+            && t[i + 6].is_punct(")")
+            && t[i + 7].is_punct("-")
+            && t[i + 8].is_punct(">")
+            && t[i + 9].is_ident("u64")
+        {
+            out.push(CounterDef {
+                name: t[i + 2].text.to_string(),
+                file: ctx.path.to_string(),
+                line: t[i + 2].line,
+            });
+        }
+    }
+    out
+}
+
+/// Does the emitter file mention `name` in non-test code — as an
+/// identifier (`c.gemms`) or inside a string literal
+/// (`"pool_jobs"`)?
+pub fn emitter_mentions(ctx: &FileCtx<'_>, name: &str) -> bool {
+    ctx.toks.iter().zip(&ctx.mask).any(|(t, m)| {
+        !*m && ((t.kind == TokKind::Ident && t.text == name)
+                || (t.kind == TokKind::Str
+                    && str_body(t.text).contains(name)))
+    })
+}
+
+/// Does any `assert…!` / `debug_assert…!` macro span in the given
+/// token range mention `name`? `tests_only` restricts the scan to
+/// `#[cfg(test)]` tokens (used for unit-test modules inside src
+/// files; integration-test files pass `false`).
+pub fn asserts_mention(ctx: &FileCtx<'_>, tests_only: bool,
+                       name: &str) -> bool {
+    let t = &ctx.toks;
+    let mut i = 0usize;
+    while i + 1 < t.len() {
+        let is_assert = t[i].kind == TokKind::Ident
+            && (t[i].text.starts_with("assert")
+                || t[i].text.starts_with("debug_assert"))
+            && t[i + 1].is_punct("!");
+        if !is_assert || (tests_only && !ctx.mask[i]) {
+            i += 1;
+            continue;
+        }
+        // Span: from the macro's open delimiter to its close.
+        let mut j = i + 2;
+        let mut depth = 0usize;
+        while j < t.len() {
+            if t[j].is_punct("(") || t[j].is_punct("[")
+                || t[j].is_punct("{")
+            {
+                depth += 1;
+            } else if t[j].is_punct(")") || t[j].is_punct("]")
+                || t[j].is_punct("}")
+            {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if (t[j].kind == TokKind::Ident
+                       && t[j].text == name)
+                || (t[j].kind == TokKind::Str
+                    && str_body(t[j].text).contains(name))
+            {
+                return true;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    false
+}
+
+/// **counter-coverage** — every counter surfaced by the engine
+/// (`KernelCounters` fields, `Metrics` fields, worker-pool `u64`
+/// getters) must (a) appear in the stats-json emitter
+/// (`api/engine.rs`) and (b) be asserted by at least one test.
+/// A counter nobody emits is invisible in production; a counter
+/// nobody asserts can silently stop counting.
+pub fn rule_counter_coverage(ctxs: &[FileCtx<'_>]) -> Vec<Finding> {
+    let by_suffix = |s: &str| {
+        ctxs.iter().find(|c| c.path.ends_with(s))
+    };
+    let mut defs: Vec<CounterDef> = Vec::new();
+    if let Some(c) = by_suffix("src/kernel/gemm.rs") {
+        defs.extend(extract_pub_fields(c, "KernelCounters"));
+    }
+    if let Some(c) = by_suffix("src/coordinator/metrics.rs") {
+        defs.extend(extract_pub_fields(c, "Metrics"));
+    }
+    if let Some(c) = by_suffix("src/kernel/pool.rs") {
+        defs.extend(extract_u64_getters(c));
+    }
+    let emitter = by_suffix("src/api/engine.rs");
+    let mut out = Vec::new();
+    for d in &defs {
+        let emitted = emitter
+            .map(|e| emitter_mentions(e, &d.name))
+            .unwrap_or(false);
+        if !emitted {
+            out.push(Finding {
+                rule: "counter-coverage",
+                file: d.file.clone(),
+                line: d.line,
+                message: format!(
+                    "counter `{}` is not exposed by the stats-json \
+                     emitter (api/engine.rs render_stats)",
+                    d.name),
+            });
+        }
+        let asserted = ctxs.iter().any(|c| {
+            let tests_only = !c.path.contains("tests/");
+            asserts_mention(c, tests_only, &d.name)
+        });
+        if !asserted {
+            out.push(Finding {
+                rule: "counter-coverage",
+                file: d.file.clone(),
+                line: d.line,
+                message: format!(
+                    "counter `{}` is not asserted by any test \
+                     (unit or integration)",
+                    d.name),
+            });
+        }
+    }
+    out
+}

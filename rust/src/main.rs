@@ -297,6 +297,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed();
     let m = handle.shutdown();
     println!("{}", m.summary());
+    // try_global: reporting must never create the pool (a PJRT serve
+    // may legitimately never touch the planar kernel).
+    if let Some(p) = spade::kernel::pool::try_global() {
+        let respawned = p.workers_respawned();
+        if respawned > 0 {
+            println!("kernel pool: {respawned} worker respawn(s) \
+                      (escaped panics; see --stats-json \
+                      pool_respawned)");
+        }
+    }
     if rejected > 0 {
         println!("rejected at submit (overload): {rejected}");
     }

@@ -393,7 +393,7 @@ fn stats_json_dump_is_written_and_parseable() {
         .expect("stats dump file must exist after shutdown");
     let j = Json::parse(&body).expect("dump must be valid JSON");
     assert_eq!(j.get("schema").unwrap().as_str(),
-               Some("spade-serve-stats-v3"));
+               Some("spade-serve-stats-v4"));
     // v2 additions: per-dump rates, the retry-after hint, and the
     // fused/plan kernel counters (always present for dashboards).
     assert!(j.get("requests_per_s").unwrap().as_f64().is_some());

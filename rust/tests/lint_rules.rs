@@ -1,0 +1,499 @@
+//! Fixture suite for the `spade-lint` rule engines.
+//!
+//! Every rule runs on inline `&str` fixtures — no filesystem — and
+//! each case checks both directions: the rule fires on a violation
+//! and stays silent on the tricky negatives (forbidden spellings in
+//! raw strings/comments, `#[cfg(test)]` placement, diamond-shaped
+//! lock orders, SAFETY-comment placement variants).
+
+use spade::lint::lockorder::{collect_edges, cycle_findings};
+use spade::lint::rules::{
+    rule_counter_coverage, rule_edge_only_encode, rule_env_hygiene,
+    rule_no_unwrap, rule_spawn_audit, rule_unsafe_audit, FileCtx,
+};
+use spade::lint::{lint_source, Finding};
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------- env-hygiene
+
+#[test]
+fn env_hygiene_fires_outside_env_rs() {
+    let src = r#"
+fn knobs() {
+    let t = std::env::var("SPADE_THREADS").ok();
+}
+"#;
+    let ctx = FileCtx::new("rust/src/kernel/gemm2.rs", src);
+    let f = rule_env_hygiene(&ctx);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].line, 3);
+
+    // The same read inside api/env.rs is the sanctioned edge.
+    let ctx = FileCtx::new("rust/src/api/env.rs", src);
+    assert!(rule_env_hygiene(&ctx).is_empty());
+}
+
+#[test]
+fn env_hygiene_ignores_comments_strings_and_non_spade_vars() {
+    let src = r##"
+// docs may say env::var("SPADE_THREADS") freely
+fn f() {
+    let doc = "env::var(\"SPADE_THREADS\")";
+    let raw = r#"env::var("SPADE_THREADS")"#;
+    let other = std::env::var("PATH");
+}
+"##;
+    let ctx = FileCtx::new("rust/src/kernel/gemm2.rs", src);
+    assert!(rule_env_hygiene(&ctx).is_empty());
+}
+
+// ------------------------------------------------------ edge-only-encode
+
+#[test]
+fn edge_only_encode_scopes_to_exec_rs() {
+    let src = r#"
+fn layer(x: F) -> F {
+    let a = x.encode(cfg);
+    let b = from_f64(0.5);
+    a + b
+}
+"#;
+    let ctx = FileCtx::new("rust/src/nn/exec.rs", src);
+    let f = rule_edge_only_encode(&ctx);
+    assert_eq!(rules_of(&f),
+               vec!["edge-only-encode", "edge-only-encode"]);
+
+    // Same tokens elsewhere are legal (the kernel encodes freely).
+    let ctx = FileCtx::new("rust/src/kernel/gemm2.rs", src);
+    assert!(rule_edge_only_encode(&ctx).is_empty());
+}
+
+#[test]
+fn edge_only_encode_ignores_comments_and_strings() {
+    let src = r##"
+// edge_quantize wraps encode( exactly once
+fn doc() {
+    let s = "never call from_f64( here";
+    let r = r#"encode(x)"#;
+}
+"##;
+    let ctx = FileCtx::new("rust/src/nn/exec.rs", src);
+    assert!(rule_edge_only_encode(&ctx).is_empty());
+}
+
+// ------------------------------------------------------------ no-unwrap
+
+#[test]
+fn no_unwrap_fires_on_live_serving_code_only() {
+    let src = r#"
+fn live() {
+    let x = chan.recv().unwrap();
+    let y = opt.expect("present");
+    panic!("boom");
+    todo!();
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let f = rule_no_unwrap(&ctx);
+    assert_eq!(f.len(), 4, "{f:?}");
+
+    // Outside the serving paths the rule does not apply at all.
+    let ctx = FileCtx::new("rust/src/kernel/gemm2.rs", src);
+    assert!(rule_no_unwrap(&ctx).is_empty());
+}
+
+#[test]
+fn no_unwrap_skips_similar_identifiers_comments_strings() {
+    let src = r##"
+fn live() {
+    let a = m.lock().unwrap_or_else(|p| p.into_inner());
+    // .unwrap() in a comment is fine
+    let s = "call .unwrap() and panic!(now)";
+    let r = r#"x.expect("msg")"#;
+}
+"##;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    assert!(rule_no_unwrap(&ctx).is_empty());
+}
+
+#[test]
+fn no_unwrap_sees_code_after_and_between_test_modules() {
+    // The legacy awk gate stopped scanning at the first
+    // #[cfg(test)]; the lexer-accurate rule must not.
+    let src = r#"
+#[cfg(test)]
+mod early_tests {
+    fn t() { a.unwrap(); }
+}
+fn live_after() { b.unwrap(); }
+#[cfg(test)]
+mod tests {
+    mod nested { fn u() { c.unwrap(); } }
+}
+fn live_tail() { d.unwrap(); }
+"#;
+    let ctx = FileCtx::new("rust/src/kernel/pool.rs", src);
+    let f = rule_no_unwrap(&ctx);
+    let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+    assert_eq!(lines, vec![6, 11], "{f:?}");
+}
+
+// ---------------------------------------------------------- unsafe-audit
+
+#[test]
+fn unsafe_audit_accepts_safety_placements() {
+    let ok = r#"
+fn a() {
+    // SAFETY: the window is disjoint per worker.
+    let p = unsafe { ptr.add(off) };
+}
+
+/// Gather rows.
+///
+/// # Safety
+/// Caller checked AVX2 at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather() {}
+
+fn b() {
+    // SAFETY: bounds were validated above; the lookback walks
+    // through the mid-statement continuation line.
+    let (x, y) =
+        unsafe { split(buf) };
+}
+
+// SAFETY: field is plain-old-data shared read-only.
+unsafe impl Sync for Shared {}
+"#;
+    let ctx = FileCtx::new("rust/src/kernel/fake.rs", ok);
+    let f = rule_unsafe_audit(&ctx);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn unsafe_audit_flags_missing_or_detached_comments() {
+    let bad = r#"
+fn a() {
+    let p = unsafe { ptr.add(off) };
+}
+
+fn b() {
+    // SAFETY: a blank line below breaks the attachment.
+
+    let q = unsafe { ptr.add(off) };
+}
+
+fn c() {
+    // SAFETY: a completed statement below breaks it too.
+    let done = 1;
+    let r = unsafe { ptr.add(off) };
+}
+"#;
+    let ctx = FileCtx::new("rust/src/kernel/fake.rs", bad);
+    let f = rule_unsafe_audit(&ctx);
+    assert_eq!(f.len(), 3, "{f:?}");
+}
+
+// ------------------------------------------------------------ lock-order
+
+#[test]
+fn lock_order_flags_abba_cycle() {
+    let src = r#"
+fn forward(&self) {
+    let m = lock_metrics(&self.metrics);
+    let s = lock_recover(&self.inflight_slot);
+}
+fn backward(&self) {
+    let s = lock_recover(&self.inflight_slot);
+    let m = lock_metrics(&self.metrics);
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (edges, direct) = collect_edges(&ctx);
+    assert!(direct.is_empty(), "{direct:?}");
+    assert_eq!(edges.len(), 2);
+    let f = cycle_findings(&edges);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("cycle"), "{}", f[0].message);
+}
+
+#[test]
+fn lock_order_diamond_is_not_a_cycle() {
+    let src = r#"
+fn f1(&self) { let a = la.lock(); let b = lb.lock(); }
+fn f2(&self) { let a = la.lock(); let c = lc.lock(); }
+fn f3(&self) { let b = lb.lock(); let d = ld.lock(); }
+fn f4(&self) { let c = lc.lock(); let d = ld.lock(); }
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (edges, direct) = collect_edges(&ctx);
+    assert!(direct.is_empty());
+    assert_eq!(edges.len(), 4);
+    assert!(cycle_findings(&edges).is_empty());
+}
+
+#[test]
+fn lock_order_drop_releases_the_guard() {
+    // forward() releases la before taking lb, so the reverse order
+    // in backward() is legal — no edge, no cycle.
+    let src = r#"
+fn forward(&self) {
+    let a = la.lock();
+    drop(a);
+    let b = lb.lock();
+}
+fn backward(&self) {
+    let b = lb.lock();
+    let a = la.lock();
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (edges, _direct) = collect_edges(&ctx);
+    assert_eq!(edges.len(), 1, "{edges:?}");
+    assert!(cycle_findings(&edges).is_empty());
+}
+
+#[test]
+fn lock_order_reacquire_is_flagged() {
+    let src = r#"
+fn twice(&self) {
+    let a = lock_metrics(&self.metrics);
+    let b = lock_metrics(&self.metrics);
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (_edges, direct) = collect_edges(&ctx);
+    assert_eq!(direct.len(), 1, "{direct:?}");
+    assert!(direct[0].message.contains("re-acquired"));
+}
+
+#[test]
+fn lock_order_statement_temporary_does_not_leak() {
+    // A bare temporary guard dies at the `;`, so the next lock is
+    // not "under" it.
+    let src = r#"
+fn counts(&self) {
+    lock_metrics(&self.metrics).total += 1;
+    let s = lock_recover(&self.slot);
+}
+fn other(&self) {
+    let s = lock_recover(&self.slot);
+    lock_metrics(&self.metrics).total += 1;
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (edges, _direct) = collect_edges(&ctx);
+    // Only other() holds slot across the metrics bump.
+    assert_eq!(edges.len(), 1, "{edges:?}");
+    assert_eq!(edges[0].from, "slot");
+    assert_eq!(edges[0].to, "metrics");
+    assert!(cycle_findings(&edges).is_empty());
+}
+
+#[test]
+fn lock_order_helper_definition_is_not_an_acquisition() {
+    // The poison-recovery helper's own definition must not register
+    // a phantom lock named after its last type parameter; the
+    // `.lock()` in its body runs with nothing held.
+    let src = r#"
+pub fn lock_metrics(m: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+"#;
+    let ctx = FileCtx::new("rust/src/coordinator/fake.rs", src);
+    let (edges, direct) = collect_edges(&ctx);
+    assert!(edges.is_empty(), "{edges:?}");
+    assert!(direct.is_empty(), "{direct:?}");
+}
+
+// ----------------------------------------------------------- spawn-audit
+
+#[test]
+fn spawn_audit_allowlists_and_test_modules() {
+    let src = r#"
+fn live() {
+    std::thread::spawn(|| {});
+    let h = std::thread::Builder::new();
+}
+#[cfg(test)]
+mod tests {
+    fn t() { std::thread::spawn(|| {}); }
+}
+"#;
+    let ctx = FileCtx::new("rust/src/nn/exec2.rs", src);
+    let f = rule_spawn_audit(&ctx);
+    assert_eq!(f.len(), 2, "{f:?}");
+
+    let ctx = FileCtx::new("rust/src/kernel/pool.rs", src);
+    assert!(rule_spawn_audit(&ctx).is_empty());
+}
+
+#[test]
+fn spawn_audit_ignores_scoped_spawns() {
+    let src = r#"
+fn live() {
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+    });
+}
+"#;
+    let ctx = FileCtx::new("rust/src/nn/exec2.rs", src);
+    // `thread::scope` is not spawn/Builder; `s.spawn` has no
+    // `thread::` path prefix.
+    assert!(rule_spawn_audit(&ctx).is_empty());
+}
+
+// ------------------------------------------------------ counter-coverage
+
+#[test]
+fn counter_coverage_requires_emitter_and_assert() {
+    let gemm = r#"
+pub struct KernelCounters {
+    pub gemms: u64,
+    pub lost_counter: u64,
+}
+"#;
+    let engine = r#"
+fn render_stats() -> String {
+    format!("\"gemms\": {}", c.gemms)
+}
+"#;
+    let test_file = r#"
+fn checks() {
+    assert_eq!(c.gemms, 1);
+}
+"#;
+    let ctxs = vec![
+        FileCtx::new("rust/src/kernel/gemm.rs", gemm),
+        FileCtx::new("rust/src/api/engine.rs", engine),
+        FileCtx::new("rust/tests/fake.rs", test_file),
+    ];
+    let f = rule_counter_coverage(&ctxs);
+    // `gemms` is emitted and asserted; `lost_counter` is neither.
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().all(|x| x.message.contains("lost_counter")));
+    assert!(f.iter().any(|x| x.message.contains("not exposed")));
+    assert!(f.iter().any(|x| x.message.contains("not asserted")));
+}
+
+#[test]
+fn counter_coverage_sees_pool_getters_and_unit_test_asserts() {
+    let pool = r#"
+impl Pool {
+    pub fn respawn_total(&self) -> u64 { 0 }
+    pub fn workers(&self) -> usize { 0 }
+}
+#[cfg(test)]
+mod tests {
+    fn t() { assert_eq!(p.respawn_total(), 0); }
+}
+"#;
+    let engine = r#"
+fn render_stats() -> String {
+    format!("\"pool_respawned\": {}", p.respawn_total())
+}
+"#;
+    let ctxs = vec![
+        FileCtx::new("rust/src/kernel/pool.rs", pool),
+        FileCtx::new("rust/src/api/engine.rs", engine),
+    ];
+    // u64 getter respawn_total: emitted + asserted (in the unit-test
+    // module) => clean; usize getter `workers` is out of scope.
+    let f = rule_counter_coverage(&ctxs);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ----------------------------------------------------------- suppression
+
+#[test]
+fn allow_with_justification_suppresses() {
+    let src = r#"
+fn live() {
+    // lint: allow(no-unwrap): the supervisor's catch_unwind turns
+    // this into a shard restart; a typed reply already went out.
+    panic!("deliberate");
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn allow_without_justification_is_itself_a_finding() {
+    let src = r#"
+fn live() {
+    // lint: allow(no-unwrap)
+    panic!("deliberate");
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    let rules = rules_of(&f);
+    assert!(rules.contains(&"suppression"), "{f:?}");
+    // And the naked allow does NOT suppress the violation.
+    assert!(rules.contains(&"no-unwrap"), "{f:?}");
+}
+
+#[test]
+fn allow_unknown_rule_is_reported() {
+    let src = r#"
+fn live() {
+    // lint: allow(no-such-rule): because reasons
+    let x = 1;
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), vec!["suppression"], "{f:?}");
+    assert!(f[0].message.contains("unknown rule"));
+}
+
+#[test]
+fn allow_only_covers_adjacent_line() {
+    let src = r#"
+fn live() {
+    // lint: allow(no-unwrap): only shields the next line.
+    let a = x.unwrap();
+    let b = y.unwrap();
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].line, 5);
+}
+
+#[test]
+fn docs_mentioning_the_syntax_do_not_parse_as_allows() {
+    let src = r#"
+/// Suppress with `// lint: allow(no-unwrap): why` on the line
+/// above. This doc comment is not itself a suppression.
+fn live() {
+    let a = x.unwrap();
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    assert_eq!(rules_of(&f), vec!["no-unwrap"], "{f:?}");
+}
+
+// --------------------------------------------------- end-to-end behavior
+
+#[test]
+fn lint_source_runs_all_applicable_rules() {
+    let src = r#"
+fn serve(&self) {
+    let m = lock_metrics(&self.metrics);
+    let s = lock_recover(&self.slot);
+    s.take().unwrap();
+}
+fn drain(&self) {
+    let s = lock_recover(&self.slot);
+    let m = lock_metrics(&self.metrics);
+}
+"#;
+    let f = lint_source("rust/src/coordinator/fake.rs", src);
+    let rules = rules_of(&f);
+    assert!(rules.contains(&"no-unwrap"), "{f:?}");
+    assert!(rules.contains(&"lock-order"), "{f:?}");
+}
