@@ -1,0 +1,34 @@
+//! Toolchain probe: AVX-512 integer intrinsics, `avx512f` runtime
+//! detection, and `#[target_feature(enable = "avx512f")]` only
+//! stabilized in Rust 1.89. The crate pins no minimum toolchain, so
+//! the zmm gather body is compiled conditionally: this script parses
+//! `rustc --version` and emits `spade_avx512` when the compiler is new
+//! enough. On older toolchains the body simply does not exist —
+//! `kernel::isa` then reports AVX-512 unavailable and the forced-body
+//! test names it as skipped.
+
+use std::env;
+use std::process::Command;
+
+fn rustc_minor() -> Option<(u32, u32)> {
+    let rustc = env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.91.0-nightly (abc 2026-01-01)" → ["1", "91", ...]
+    let ver = text.split_whitespace().nth(1)?;
+    let ver = ver.split('-').next()?;
+    let mut parts = ver.split('.');
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rustc-check-cfg=cfg(spade_avx512)");
+    if let Some((major, minor)) = rustc_minor() {
+        if major > 1 || (major == 1 && minor >= 89) {
+            println!("cargo:rustc-cfg=spade_avx512");
+        }
+    }
+}

@@ -9,7 +9,9 @@
 //! throughput, the fused planar pipeline vs the layer-wise session
 //! (per-precision speedup + plan decode/encode ops avoided), the
 //! sparse CSR SpGEMM vs the dense kernel at three densities (bit
-//! identity asserted on the bench operands), PJRT dispatch. Each prints ops/s so before/after deltas
+//! identity asserted on the bench operands), the per-ISA-body forced
+//! P8 matrix (`isa_body_*`), tuned-table cold-vs-warm persistence,
+//! PJRT dispatch. Each prints ops/s so before/after deltas
 //! are one diff away, and every metric is also written to
 //! `BENCH_hotpath.json` (op name -> M/s, `*_us` entries are
 //! microseconds, `*_req_s` are requests/s, `*_vs_*` are dimensionless
@@ -758,6 +760,66 @@ fn main() {
             log.record(&format!("degrade_vs_reject_p99us_{tag}"),
                        p99 as f64);
         }
+    }
+
+    common::banner(
+        "ISA body matrix: forced P8 inner-loop bodies (host's \
+         available set; unavailable bodies named, not measured)");
+    {
+        use spade::kernel::IsaBody;
+        let avail = kernel::available_bodies();
+        for body in IsaBody::ALL {
+            if !kernel::host_has(body) {
+                println!("{:>9}: unavailable on this host",
+                         body.tag());
+                continue;
+            }
+            let t = common::time_median(r3, || {
+                let _ = kernel::gemm_single_body(&pa8, &pb8, None,
+                                                 body, None)
+                    .unwrap();
+            });
+            let mps = macs / t / 1e6;
+            println!("{:>9}: {mps:>8.1} M MAC/s", body.tag());
+            log.record(&format!("isa_body_p8_{}", body.tag()), mps);
+        }
+        println!("preferred body: {} ({} available)",
+                 kernel::preferred().tag(), avail.len());
+        log.record("isa_body_matrix_bodies", avail.len() as f64);
+    }
+
+    common::banner(
+        "tuned-table persistence: cold vs second-process warm-up \
+         (spade-tuned-v1 sidecar)");
+    {
+        use spade::api::AutotuneMode;
+        let path = std::env::temp_dir().join(format!(
+            "spade_bench_tuned_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let engine = spade::api::EngineBuilder::new()
+            .autotune(AutotuneMode::Warmup)
+            .tuned_path(&path)
+            .build()
+            .unwrap();
+        let shapes = [(64usize, 256usize, 64usize), (8, 2048, 32),
+                      (4, 256, 64)];
+        // Cold process: empty tuned table, sidecar absent.
+        spade::kernel::settings::tuned_clear();
+        let cold = engine.warm_up(&shapes).unwrap();
+        // "Second process": same sidecar, fresh in-process table.
+        spade::kernel::settings::tuned_clear();
+        let before = kernel::counters().autotune_probes;
+        let warm = engine.warm_up(&shapes).unwrap();
+        assert_eq!(kernel::counters().autotune_probes, before,
+                   "second-process warm-up must probe zero times");
+        assert_eq!(warm, 0);
+        println!("cold: {cold} probe(s)   second process (sidecar \
+                  loaded): {warm} probe(s)");
+        log.record("tuned_persist_cold_probes", cold as f64);
+        log.record("tuned_persist_warm_probes", warm as f64);
+        log.record("tuned_persist_cold_vs_warm",
+                   (cold - warm) as f64);
+        let _ = std::fs::remove_file(&path);
     }
 
     common::banner("PJRT artifact dispatch (mlp_p16_b32)");

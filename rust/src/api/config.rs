@@ -19,6 +19,7 @@
 //! (the file is the base, [`EngineConfig::from_env_over`] lays the
 //! `SPADE_*` overrides on top, explicit CLI flags win last).
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
@@ -26,8 +27,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::coordinator::{BatcherConfig, CoordinatorConfig, FaultPlan,
                          MetricsConfig, RoutePolicy, ShardAffinity};
 use crate::engine::Mode;
-use crate::kernel::{gather_available, AutotuneMode, InnerPath,
-                    KernelConfig, TileConfig};
+use crate::kernel::{gather_available, isa, AutotuneMode, InnerPath,
+                    IsaBody, KernelConfig, TileConfig};
 use crate::util::Json;
 
 use super::env;
@@ -61,9 +62,23 @@ pub struct EngineConfig {
     /// the autotuned winner when [`EngineConfig::autotune`] enables
     /// probing. An explicit tile **always wins** over the autotuner.
     pub tile: Option<TileConfig>,
-    /// Inner-loop body: `Auto` (default), `Portable` (the old
-    /// `SPADE_KERNEL_GATHER=0`), or a pinned body for benching.
+    /// Inner-loop shape: `Auto` (default), `Portable` (the old
+    /// `SPADE_KERNEL_GATHER=0`), or a pinned shape for benching.
     pub path: InnerPath,
+    /// Explicit ISA-body pin for the P8 inner loops
+    /// ([`crate::kernel::IsaBody`]; `SPADE_KERNEL_ISA` at the env
+    /// edge). `None` (= `auto`) lets dispatch use the autotuned
+    /// winner, else the best body the host detects; a pinned body
+    /// must be available on this host
+    /// ([`EngineConfig::validate`]).
+    pub isa: Option<IsaBody>,
+    /// Persisted tuned-table path (`SPADE_TUNED_PATH` at the env
+    /// edge; schema `spade-tuned-v1`). When set,
+    /// [`super::Engine::warm_up`] loads the table before probing —
+    /// a fully covering table means zero probes — and saves the
+    /// merged winners back via atomic tmp+rename, so a fleet of
+    /// identical machines probes once, not per process.
+    pub tuned_path: Option<PathBuf>,
     /// First-use kernel autotuning ([`AutotuneMode`]; default `Off`).
     /// `FirstUse` probes inline at the first GEMM of an untuned
     /// (precision, shape class); `Warmup` probes only inside
@@ -143,6 +158,8 @@ impl Default for EngineConfig {
             pool_workers: None,
             tile: None,
             path: InnerPath::Auto,
+            isa: None,
+            tuned_path: None,
             autotune: AutotuneMode::Off,
             fused: true,
             sparse_threshold: 0.25,
@@ -195,6 +212,12 @@ impl EngineConfig {
         if let Some(mode) = env::kernel_autotune()? {
             cfg.autotune = mode;
         }
+        if let Some(body) = env::kernel_isa()? {
+            cfg.isa = Some(body);
+        }
+        if let Some(path) = env::tuned_path() {
+            cfg.tuned_path = Some(PathBuf::from(path));
+        }
         if let Some(fused) = env::fused()? {
             cfg.fused = fused;
         }
@@ -234,6 +257,22 @@ impl EngineConfig {
                     "inner path Gather requires AVX2, which this CPU \
                      does not have (use Auto, which falls back \
                      portably)");
+        }
+        if let Some(body) = self.isa {
+            ensure!(isa::host_has(body),
+                    "isa={} is not available on this host (available: \
+                     {}; use auto, which picks the best detected \
+                     body)",
+                    body.tag(),
+                    isa::available_bodies()
+                        .iter()
+                        .map(|b| b.tag())
+                        .collect::<Vec<_>>()
+                        .join(", "));
+        }
+        if let Some(p) = &self.tuned_path {
+            ensure!(!p.as_os_str().is_empty(),
+                    "tuned_path must be a non-empty path when set");
         }
         ensure!(self.sparse_threshold.is_finite()
                 && (0.0..=1.0).contains(&self.sparse_threshold),
@@ -275,6 +314,7 @@ impl EngineConfig {
             tile: self.tile,
             path: self.path,
             autotune: self.autotune,
+            isa: self.isa,
         }
     }
 
@@ -365,6 +405,14 @@ impl EngineConfig {
             }
         });
         m.insert("path".into(), s(path_str(self.path)));
+        m.insert("isa".into(), match self.isa {
+            Some(body) => s(body.tag()),
+            None => s("auto"),
+        });
+        m.insert("tuned_path".into(), match &self.tuned_path {
+            Some(p) => s(&p.display().to_string()),
+            None => Json::Null,
+        });
         m.insert("autotune".into(), s(autotune_str(self.autotune)));
         m.insert("fused".into(), Json::Bool(self.fused));
         m.insert("sparse_threshold".into(),
@@ -488,6 +536,22 @@ impl EngineConfig {
                 "path" => {
                     cfg.path = path_from_str(
                         v.as_str().unwrap_or_default())?;
+                }
+                "isa" => {
+                    cfg.isa = match v.as_str().unwrap_or_default() {
+                        "auto" => None,
+                        tag => Some(IsaBody::from_tag(tag)
+                            .map_err(anyhow::Error::msg)?),
+                    };
+                }
+                "tuned_path" => {
+                    cfg.tuned_path = match v {
+                        Json::Null => None,
+                        _ => Some(PathBuf::from(
+                            v.as_str().ok_or_else(|| anyhow!(
+                                "engine config tuned_path must be a \
+                                 string or null"))?)),
+                    };
                 }
                 "autotune" => {
                     cfg.autotune = autotune_from_str(
@@ -757,6 +821,26 @@ mod tests {
     }
 
     #[test]
+    fn validation_checks_isa_pin_against_host() {
+        // Portable is available everywhere.
+        let mut c = EngineConfig::default();
+        c.isa = Some(IsaBody::Portable);
+        c.validate().unwrap();
+        // A pinned body the host lacks must be rejected loudly; one
+        // it has must pass. Exercise every compiled-in body.
+        for body in IsaBody::ALL {
+            let mut c = EngineConfig::default();
+            c.isa = Some(body);
+            assert_eq!(c.validate().is_ok(), isa::host_has(body),
+                       "isa pin {} vs host", body.tag());
+        }
+        // An empty tuned path is a config error, not a later I/O one.
+        let mut c = EngineConfig::default();
+        c.tuned_path = Some(PathBuf::new());
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn precision_pin_maps_to_policy_and_mode() {
         let mut c = EngineConfig::default();
         assert_eq!(c.default_mode(), Mode::P8x4); // EnergyFirst
@@ -781,10 +865,12 @@ mod tests {
         c.batch = 7;
         c.affinity = ShardAffinity::PinnedMode;
         c.sparse_threshold = 0.5;
+        c.isa = Some(IsaBody::Portable);
         let kc = c.kernel_config();
         assert_eq!(kc.threads, Some(3));
         assert_eq!(kc.tile.unwrap().steal_rows, 2);
         assert_eq!(kc.autotune, AutotuneMode::Warmup);
+        assert_eq!(kc.isa, Some(IsaBody::Portable));
         let cc = c.coordinator_config();
         assert_eq!(cc.sparse_threshold, 0.5);
         assert_eq!(cc.shards, 2);
@@ -805,6 +891,9 @@ mod tests {
         c.tile = Some(TileConfig { p16_panel: 48, p32_panel: 16,
                                    steal_rows: 2, k_chunk: 256 });
         c.path = InnerPath::Portable;
+        // Portable is the one body every host can validate a pin of.
+        c.isa = Some(IsaBody::Portable);
+        c.tuned_path = Some("artifacts/tuned.json".into());
         c.autotune = AutotuneMode::Warmup;
         c.fused = false;
         c.sparse_threshold = 0.05;
@@ -831,6 +920,8 @@ mod tests {
         assert_eq!(back.pool_workers, c.pool_workers);
         assert_eq!(back.tile, c.tile);
         assert_eq!(back.path, c.path);
+        assert_eq!(back.isa, c.isa);
+        assert_eq!(back.tuned_path, c.tuned_path);
         assert_eq!(back.autotune, c.autotune);
         assert_eq!(back.fused, c.fused);
         assert_eq!(back.sparse_threshold, c.sparse_threshold);
@@ -851,6 +942,8 @@ mod tests {
         assert_eq!(back.precision, None);
         assert_eq!(back.metrics.stats_json, None);
         assert_eq!(back.autotune, AutotuneMode::Off);
+        assert_eq!(back.isa, None, "auto round-trips to None");
+        assert_eq!(back.tuned_path, None);
         assert!(back.fused, "fused defaults to on");
         assert_eq!(back.sparse_threshold, 0.25);
         assert_eq!(back.default_deadline_ms, 0);
@@ -870,6 +963,10 @@ mod tests {
         assert!(EngineConfig::from_json(
             "{\"tile\": {\"nope\": 1}}").is_err());
         assert!(EngineConfig::from_json("{\"fused\": \"yes\"}")
+            .is_err());
+        assert!(EngineConfig::from_json("{\"isa\": \"sse9\"}")
+            .is_err());
+        assert!(EngineConfig::from_json("{\"tuned_path\": 3}")
             .is_err());
         assert!(EngineConfig::from_json("[1, 2]").is_err());
         assert!(EngineConfig::from_json(

@@ -27,7 +27,7 @@ use crate::coordinator::{lock_metrics, Coordinator,
                          RoutePolicy, ServeBackend, ShardAffinity};
 use crate::engine::Mode;
 use crate::kernel::{self, autotune, AutotuneMode, DecodedPlan,
-                    DispatchStats, InnerPath, KernelConfig,
+                    DispatchStats, InnerPath, IsaBody, KernelConfig,
                     TileConfig};
 use crate::nn::{Model, Session};
 use crate::util::SplitMix64;
@@ -121,6 +121,24 @@ impl EngineBuilder {
     /// `SPADE_KERNEL_GATHER=0`).
     pub fn inner_path(mut self, path: InnerPath) -> Self {
         self.cfg.path = path;
+        self
+    }
+
+    /// Pin the kernel ISA body (see [`EngineConfig::isa`]; the
+    /// programmatic form of `SPADE_KERNEL_ISA`). Validated against
+    /// the running host at build — pinning a body the CPU lacks is a
+    /// config error, not a silent fallback.
+    pub fn isa(mut self, body: IsaBody) -> Self {
+        self.cfg.isa = Some(body);
+        self
+    }
+
+    /// Tuned-table sidecar path (see [`EngineConfig::tuned_path`];
+    /// the programmatic form of `SPADE_TUNED_PATH`).
+    /// [`Engine::warm_up`] loads the `spade-tuned-v1` table before
+    /// probing and atomically saves the winners back after.
+    pub fn tuned_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.tuned_path = Some(path.into());
         self
     }
 
@@ -292,17 +310,28 @@ impl Engine {
     ///
     /// * forces the lazily-built kernel LUTs (decode, P8 product, and
     ///   the P16 hybrid table when the path can reach it);
+    /// * when [`EngineConfig::tuned_path`] names an existing
+    ///   `spade-tuned-v1` sidecar, loads its winners **before**
+    ///   probing (strict parse — a corrupt file is a hard error, not
+    ///   a silent re-probe; entries naming a body this host lacks are
+    ///   skipped and re-probed);
     /// * runs the autotune micro-probe for every untuned
     ///   (precision, shape class) the shapes cover — the engine's
-    ///   pinned precision, or all three when unpinned.
+    ///   pinned precision, or all three when unpinned;
+    /// * when `tuned_path` is set, atomically saves the winners back
+    ///   (tmp + rename, like the stats dump) so the next process — or
+    ///   an identical machine sharing the file — probes **zero**
+    ///   times.
     ///
     /// Returns the number of probes actually run (0 when everything
-    /// was already tuned, when a tile is explicitly pinned, or when
-    /// [`AutotuneMode::Off`] — off leaves the defaults untouched).
-    /// After a warm-up covering the serve's shapes, the kernel's
-    /// `autotune_probes` counter stays flat under traffic
-    /// (`tests/api_facade.rs` asserts it).
-    pub fn warm_up(&self, shapes: &[(usize, usize, usize)]) -> usize {
+    /// was already tuned or loaded, when a tile is explicitly pinned,
+    /// or when [`AutotuneMode::Off`] — off leaves the defaults
+    /// untouched). After a warm-up covering the serve's shapes, the
+    /// kernel's `autotune_probes` counter stays flat under traffic
+    /// (`tests/api_facade.rs` asserts it, and asserts the
+    /// second-process zero-probe reload).
+    pub fn warm_up(&self, shapes: &[(usize, usize, usize)])
+                   -> Result<usize> {
         // Lazy tables: build them now, not under the first request.
         let _ = kernel::p8_prod_lut();
         let _ = kernel::p8_decode_lut();
@@ -311,6 +340,18 @@ impl Engine {
             || self.kcfg.autotune != AutotuneMode::Off
         {
             let _ = kernel::p16_hyb_lut();
+        }
+        // Load the persisted winners first so already-covered shape
+        // classes satisfy ensure_tuned without a probe.
+        if let Some(path) = &self.cfg.tuned_path {
+            if path.exists() {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!(
+                        "tuned table {}: {e}", path.display()))?;
+                kernel::settings::tuned_merge_json(&text)
+                    .map_err(|e| anyhow::anyhow!(
+                        "tuned table {}: {e}", path.display()))?;
+            }
         }
         let modes: Vec<Mode> = match self.cfg.precision {
             Some(mode) => vec![mode],
@@ -325,7 +366,21 @@ impl Engine {
                 }
             }
         }
-        probes
+        // Persist the (possibly merged) table back. Atomic tmp+rename
+        // so a concurrent reader never sees a torn file; skipped when
+        // nothing changed and the sidecar already exists.
+        if let Some(path) = &self.cfg.tuned_path {
+            if probes > 0 || !path.exists() {
+                let tmp = path.with_extension("json.tmp");
+                std::fs::write(&tmp, kernel::settings::tuned_to_json())
+                    .map_err(|e| anyhow::anyhow!(
+                        "tuned table {}: {e}", tmp.display()))?;
+                std::fs::rename(&tmp, path)
+                    .map_err(|e| anyhow::anyhow!(
+                        "tuned table {}: {e}", path.display()))?;
+            }
+        }
+        Ok(probes)
     }
 
     /// Decode an f32 matrix into a planar operand plan in the

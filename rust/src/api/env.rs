@@ -14,6 +14,8 @@
 //! | `SPADE_KERNEL_TILE` | [`kernel_tile`] | explicit tile pin, strictly parsed ([`TileConfig::parse`]; disables autotuning of the tile) |
 //! | `SPADE_KERNEL_GATHER` | [`kernel_gather_disabled`] | `0`/`off` pins the portable P8 loop |
 //! | `SPADE_KERNEL_AUTOTUNE` | [`kernel_autotune`] | `off` / `first-use` / `warmup` first-use autotuner mode |
+//! | `SPADE_KERNEL_ISA` | [`kernel_isa`] | ISA body pin: `auto` (default) or `portable` / `avx2` / `avx512` / `neon` ([`IsaBody::from_tag`]) |
+//! | `SPADE_TUNED_PATH` | [`tuned_path`] | tuned-table JSON path (`spade-tuned-v1`): loaded at `warm_up`, winners saved back atomically |
 //! | `SPADE_FUSED` | [`fused`] | `0`/`off` selects the layer-wise escape hatch (fused planar pipeline is the default) |
 //! | `SPADE_SPARSE_THRESHOLD` | [`sparse_threshold`] | weight-density cutoff in `[0, 1]` below which a layer routes through the CSR SpGEMM (bit-identical; perf crossover only) |
 //! | `SPADE_DEADLINE_MS` | [`deadline_ms`] | default per-request deadline in ms (0 = none; per-submit override wins) |
@@ -26,7 +28,7 @@
 use anyhow::Result;
 
 use crate::coordinator::FaultPlan;
-use crate::kernel::{AutotuneMode, TileConfig};
+use crate::kernel::{AutotuneMode, IsaBody, TileConfig};
 
 /// Raw read; empty values count as unset (an `X=` line in a shell
 /// wrapper should behave like no override).
@@ -74,6 +76,30 @@ pub fn kernel_autotune() -> Result<Option<AutotuneMode>> {
             .map(Some)
             .map_err(|e| anyhow::anyhow!("SPADE_KERNEL_AUTOTUNE: {e}")),
     }
+}
+
+/// `SPADE_KERNEL_ISA`: explicit ISA-body pin for the P8 inner loops.
+/// `auto` (or unset) lets dispatch use the autotuned winner, else the
+/// best detected body; a named body (`portable`, `avx2`, `avx512`,
+/// `neon`) is a pin, validated against the host at
+/// [`super::EngineConfig::validate`] time. Unknown tags are a hard
+/// error.
+pub fn kernel_isa() -> Result<Option<IsaBody>> {
+    match raw("SPADE_KERNEL_ISA").as_deref().map(str::trim) {
+        None | Some("auto") => Ok(None),
+        Some(s) => IsaBody::from_tag(s).map(Some).map_err(|e| {
+            anyhow::anyhow!("SPADE_KERNEL_ISA: {e}")
+        }),
+    }
+}
+
+/// `SPADE_TUNED_PATH`: path of the persisted tuned-table JSON
+/// (schema `spade-tuned-v1`). When set, `Engine::warm_up` loads the
+/// table before probing (a fully covering table means **zero**
+/// probes) and saves the merged winners back via atomic tmp+rename.
+/// The value is a plain path — no parsing to fail.
+pub fn tuned_path() -> Option<String> {
+    raw("SPADE_TUNED_PATH")
 }
 
 /// `SPADE_FUSED`: the fused planar pipeline switch. `0`/`off`/`false`

@@ -5,10 +5,14 @@
 //! hierarchy but ran it on fixed, hand-picked defaults. This module
 //! closes the loop: a **micro-probe** times a small candidate grid of
 //! [`TileConfig`] (P16/P32 panel widths, steal chunk, k-chunk depth)
-//! × [`InnerPath`] (AVX2 gather on/off where the CPU has it, the P16
-//! hybrid product LUT behind a margin) per **(precision,
-//! shape class)**, and caches the winner in a process-wide table
-//! ([`super::settings`]). Shapes are classified coarsely
+//! × [`InnerPath`] (the P16 hybrid product LUT behind a margin)
+//! × [`IsaBody`] (every hand-written P8 SIMD body the host can run —
+//! AVX-512 / AVX2 / NEON / portable, see [`super::isa`]) per
+//! **(precision, shape class)**, and caches the winner in a
+//! process-wide table ([`super::settings`]), optionally persisted
+//! across processes as `spade-tuned-v1` JSON
+//! ([`super::settings::tuned_to_json`] /
+//! [`crate::api::EngineConfig::tuned_path`]). Shapes are classified coarsely
 //! ([`ShapeClass`]: skinny / square / deep-k) because panel and chunk
 //! choices depend on the *regime* a GEMM is in, not its exact
 //! dimensions — and a coarse key means a handful of probes tunes the
@@ -52,10 +56,11 @@ use crate::posit::{from_f64, PositFormat, P16_FMT, P8_FMT};
 use crate::util::SplitMix64;
 
 use super::gemm;
+use super::isa::{self, IsaBody};
 use super::plan::DecodedPlan;
 use super::settings::{self, KernelConfig};
 use super::sparse;
-use super::simd::{gather_available, InnerPath, TileConfig};
+use super::simd::{InnerPath, TileConfig};
 
 /// When the autotuner is allowed to probe. See the module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -90,6 +95,39 @@ pub enum ShapeClass {
     /// are row-scheduled with per-row adaptive bodies, so the grid
     /// sweeps the steal granularity rather than panel widths.
     Sparse(u8),
+}
+
+impl ShapeClass {
+    /// Stable string tag used by the `spade-tuned-v1` sidecar schema:
+    /// `skinny` / `square` / `deep-k` / `sparse-<bucket>`.
+    pub fn tag_string(self) -> String {
+        match self {
+            ShapeClass::Skinny => "skinny".to_string(),
+            ShapeClass::Square => "square".to_string(),
+            ShapeClass::DeepK => "deep-k".to_string(),
+            ShapeClass::Sparse(d) => format!("sparse-{d}"),
+        }
+    }
+
+    /// Inverse of [`tag_string`](Self::tag_string); strict like the
+    /// rest of the persisted-config grammar.
+    pub fn from_tag(s: &str) -> Result<ShapeClass, String> {
+        match s {
+            "skinny" => Ok(ShapeClass::Skinny),
+            "square" => Ok(ShapeClass::Square),
+            "deep-k" => Ok(ShapeClass::DeepK),
+            other => match other.strip_prefix("sparse-") {
+                Some(d) => d
+                    .parse::<u8>()
+                    .map(ShapeClass::Sparse)
+                    .map_err(|_| format!(
+                        "bad sparse bucket in shape class {other:?}")),
+                None => Err(format!(
+                    "unknown shape class {other:?} (expected skinny, \
+                     square, deep-k, or sparse-<bucket>)")),
+            },
+        }
+    }
 }
 
 /// Output-dimension bound for [`ShapeClass::Skinny`].
@@ -135,13 +173,19 @@ pub fn classify_sparse(rows: usize, cols: usize, nnz: usize)
     }
 }
 
-/// A tuned winner: the tile geometry and inner path to dispatch with.
+/// A tuned winner: the tile geometry, inner path, and ISA body to
+/// dispatch with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Tuned {
     /// Winning tile geometry.
     pub tile: TileConfig,
-    /// Winning inner path (`Auto` unless a specific body won).
+    /// Winning inner path (`Auto` unless a specific loop shape won).
     pub path: InnerPath,
+    /// Winning ISA body ([`super::isa::IsaBody`]); only P8 dispatch
+    /// consults it today (P16/P32 winners carry `Portable`), but it
+    /// is persisted for every entry so the sidecar schema never needs
+    /// to change when another precision grows SIMD bodies.
+    pub body: IsaBody,
 }
 
 /// One probe candidate: a configuration plus the relative advantage
@@ -154,6 +198,8 @@ pub struct Candidate {
     pub tile: TileConfig,
     /// Inner path under test.
     pub path: InnerPath,
+    /// ISA body under test (pinned for the probe's timed GEMMs).
+    pub body: IsaBody,
     /// Required advantage in percent: the candidate's cost is
     /// inflated by this much before comparison, so e.g. 10 means it
     /// only wins with a ≥ 1.1x measured speedup (the P16 hybrid LUT
@@ -170,7 +216,13 @@ const NOISE_MARGIN_PCT: u32 = 3;
 
 impl Candidate {
     fn new(tile: TileConfig, path: InnerPath) -> Candidate {
-        Candidate { tile, path, margin_pct: NOISE_MARGIN_PCT }
+        Candidate { tile, path, body: IsaBody::Portable,
+                    margin_pct: NOISE_MARGIN_PCT }
+    }
+
+    fn with_body(tile: TileConfig, path: InnerPath, body: IsaBody)
+                 -> Candidate {
+        Candidate { tile, path, body, margin_pct: NOISE_MARGIN_PCT }
     }
 }
 
@@ -205,23 +257,34 @@ pub fn candidates(fmt: PositFormat, class: ShapeClass)
         // heavy skewed rows, coarser ones when claims dominate.
         return vec![
             Candidate { tile: d, path: InnerPath::Auto,
-                        margin_pct: 0 },
+                        body: IsaBody::Portable, margin_pct: 0 },
             Candidate::new(TileConfig { steal_rows: 1, ..d },
                            InnerPath::Auto),
             Candidate::new(TileConfig { steal_rows: 4, ..d },
                            InnerPath::Auto),
         ];
     }
-    // Candidate 0: the untouched default (Auto path), margin 0 — the
-    // incumbent every challenger must beat by NOISE_MARGIN_PCT.
+    // Candidate 0: the untouched default (Auto path; for P8 the
+    // host's preferred ISA body), margin 0 — the incumbent every
+    // challenger must beat by NOISE_MARGIN_PCT.
+    let body0 = if fmt == P8_FMT {
+        isa::preferred()
+    } else {
+        IsaBody::Portable
+    };
     let mut v = vec![Candidate { tile: d, path: InnerPath::Auto,
-                                 margin_pct: 0 }];
+                                 body: body0, margin_pct: 0 }];
     if fmt == P8_FMT {
         // Tile geometry barely touches the P8 LUT-gather lanes; the
-        // probe decides the gather-vs-portable body question.
-        v.push(Candidate::new(d, InnerPath::Portable));
-        if gather_available() {
-            v.push(Candidate::new(d, InnerPath::Gather));
+        // probe decides the *body* question: every other body the
+        // host can run competes against the preferred incumbent.
+        // "Detected widest" is a static prior, not a measurement —
+        // e.g. downclock-prone AVX-512 parts can genuinely lose to
+        // ymm gathers, and the probe is what notices.
+        for b in isa::available_bodies() {
+            if b != body0 {
+                v.push(Candidate::with_body(d, InnerPath::Auto, b));
+            }
         }
     } else if class == ShapeClass::Square {
         // Panel sweeps bracket the default from both sides; the
@@ -247,6 +310,7 @@ pub fn candidates(fmt: PositFormat, class: ShapeClass)
         v.push(Candidate {
             tile: d,
             path: InnerPath::Hybrid,
+            body: IsaBody::Portable,
             margin_pct: 10,
         });
     }
@@ -254,25 +318,23 @@ pub fn candidates(fmt: PositFormat, class: ShapeClass)
         ShapeClass::DeepK => {
             // Sweep the streaming chunk depth: shallower than the
             // auto default, and effectively off (a chunk no real k
-            // exceeds). For P8 the chunked loop only replaces the
-            // *portable* body (an AVX2 `Auto` keeps the gather), so
-            // the chunk candidates pin Portable to actually measure
-            // chunking against the gather default.
-            let path = if fmt == P8_FMT {
-                InnerPath::Portable
-            } else {
-                InnerPath::Auto
-            };
+            // exceeds). The chunk candidates keep the incumbent body:
+            // since the chunked P8 k-loop grew SIMD variants
+            // (`rows_p8_kchunk_avx2`), chunking composes with the
+            // gather instead of replacing it, so it is measured
+            // body-for-body against the unchunked default.
             for kc in [256usize, usize::MAX] {
-                v.push(Candidate::new(
-                    TileConfig { k_chunk: kc, ..d }, path));
+                v.push(Candidate::with_body(
+                    TileConfig { k_chunk: kc, ..d }, InnerPath::Auto,
+                    body0));
             }
         }
         ShapeClass::Skinny => {
             // One-row steal chunks: finest-grained dispatch for the
             // few-row GEMMs serving traffic produces.
-            v.push(Candidate::new(
-                TileConfig { steal_rows: 1, ..d }, InnerPath::Auto));
+            v.push(Candidate::with_body(
+                TileConfig { steal_rows: 1, ..d }, InnerPath::Auto,
+                body0));
         }
         ShapeClass::Square => {}
         // Handled by the early return above.
@@ -376,6 +438,7 @@ pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
                 tile: Some(c.tile),
                 path: c.path,
                 autotune: AutotuneMode::Off,
+                isa: Some(c.body),
             };
             let mut best = u64::MAX;
             for _ in 0..PROBE_REPS {
@@ -397,15 +460,36 @@ pub fn probe(cfg: &KernelConfig, fmt: PositFormat, class: ShapeClass)
         })
         .collect();
     let w = pick_winner(&cands, &costs);
-    Tuned { tile: cands[w].tile, path: cands[w].path }
+    Tuned { tile: cands[w].tile, path: cands[w].path,
+            body: cands[w].body }
 }
 
-/// Resolve the effective (tile, path) for one GEMM dispatch under
-/// `cfg`. Precedence: explicit tile > cached tuned winner (probing
-/// inline only in [`AutotuneMode::FirstUse`]) > built-in defaults.
-/// An explicit non-`Auto` path pin always overrides the tuned path.
+/// The ISA body a dispatch should run: an explicit
+/// [`KernelConfig::isa`] pin always wins; otherwise a tuned winner
+/// (re-checked against the host — a persisted table may have crossed
+/// machines); otherwise the best body the host detects.
+fn effective_body(cfg: &KernelConfig, tuned: Option<IsaBody>)
+                  -> IsaBody {
+    if let Some(b) = cfg.isa {
+        return b;
+    }
+    if let Some(b) = tuned {
+        if isa::host_has(b) {
+            return b;
+        }
+    }
+    isa::preferred()
+}
+
+/// Resolve the effective (tile, path, body) for one GEMM dispatch
+/// under `cfg`. Precedence: explicit tile > cached tuned winner
+/// (probing inline only in [`AutotuneMode::FirstUse`]) > built-in
+/// defaults. An explicit non-`Auto` path pin always overrides the
+/// tuned path, and an explicit [`KernelConfig::isa`] pin always
+/// overrides the tuned body.
 pub(super) fn resolve(cfg: &KernelConfig, fmt: PositFormat, m: usize,
-                      k: usize, n: usize) -> (TileConfig, InnerPath) {
+                      k: usize, n: usize)
+                      -> (TileConfig, InnerPath, IsaBody) {
     resolve_class(cfg, fmt, classify(m, k, n))
 }
 
@@ -415,19 +499,21 @@ pub(super) fn resolve(cfg: &KernelConfig, fmt: PositFormat, m: usize,
 /// of the dense shape regime.
 pub(super) fn resolve_sparse(cfg: &KernelConfig, fmt: PositFormat,
                              rows: usize, cols: usize, nnz: usize)
-                             -> (TileConfig, InnerPath) {
+                             -> (TileConfig, InnerPath, IsaBody) {
     resolve_class(cfg, fmt, classify_sparse(rows, cols, nnz))
 }
 
 /// The precedence chain shared by [`resolve`] and [`resolve_sparse`]
 /// once the tuning class is known.
 fn resolve_class(cfg: &KernelConfig, fmt: PositFormat,
-                 class: ShapeClass) -> (TileConfig, InnerPath) {
+                 class: ShapeClass)
+                 -> (TileConfig, InnerPath, IsaBody) {
     if let Some(tile) = cfg.tile {
-        return (tile, cfg.path);
+        return (tile, cfg.path, effective_body(cfg, None));
     }
     if cfg.autotune == AutotuneMode::Off {
-        return (TileConfig::DEFAULT, cfg.path);
+        return (TileConfig::DEFAULT, cfg.path,
+                effective_body(cfg, None));
     }
     let key = (fmt.nbits, class);
     let tuned = match settings::tuned_lookup(key) {
@@ -437,14 +523,17 @@ fn resolve_class(cfg: &KernelConfig, fmt: PositFormat,
             settings::tuned_install(key, t);
             t
         }
-        None => return (TileConfig::DEFAULT, cfg.path),
+        None => {
+            return (TileConfig::DEFAULT, cfg.path,
+                    effective_body(cfg, None));
+        }
     };
     let path = if cfg.path == InnerPath::Auto {
         tuned.path
     } else {
         cfg.path
     };
-    (tuned.tile, path)
+    (tuned.tile, path, effective_body(cfg, Some(tuned.body)))
 }
 
 /// Make sure a (precision, shape class) is tuned, probing if needed —
@@ -535,17 +624,28 @@ mod tests {
         let sq = candidates(P32_FMT, ShapeClass::Square);
         assert!(sq.iter().any(|c| c.tile.p32_panel
                               != TileConfig::DEFAULT.p32_panel));
-        // P8 deep-k chunk candidates pin Portable: chunking only
-        // replaces the portable body, so measuring it under Auto on
-        // an AVX2 host would time the gather twice.
+        // P8 deep-k chunk candidates keep the incumbent body: the
+        // chunked loop has SIMD variants now, so chunking competes
+        // body-for-body instead of pinning Portable.
         let p8_deep =
             candidates(crate::posit::P8_FMT, ShapeClass::DeepK);
         assert!(p8_deep
             .iter()
             .filter(|c| c.tile.k_chunk > 0)
-            .all(|c| c.path == InnerPath::Portable));
+            .all(|c| c.body == isa::preferred()
+                 && c.path == InnerPath::Auto));
+        // The P8 grid sweeps the ISA-body axis: exactly one
+        // default-tile candidate per available body, the preferred
+        // body as the margin-0 incumbent, and nothing the host
+        // cannot run.
         let p8 = candidates(crate::posit::P8_FMT, ShapeClass::Square);
-        assert!(p8.iter().any(|c| c.path == InnerPath::Portable));
+        assert_eq!(p8[0].body, isa::preferred());
+        for b in isa::available_bodies() {
+            assert_eq!(
+                p8.iter().filter(|c| c.body == b).count(), 1,
+                "one candidate per available body ({})", b.tag());
+        }
+        assert!(p8.iter().all(|c| isa::host_has(c.body)));
         // No hybrid candidate outside P16.
         assert!(p8.iter().all(|c| c.path != InnerPath::Hybrid));
         let skinny = candidates(P16_FMT, ShapeClass::Skinny);
@@ -598,10 +698,11 @@ mod tests {
         let cfg = KernelConfig::DEFAULT; // autotune: Off
         let before = settings::tuned_count();
         let probes_before = probes();
-        let (tile, path) =
+        let (tile, path, body) =
             resolve(&cfg, P16_FMT, 128, 128, 128);
         assert_eq!(tile, TileConfig::DEFAULT);
         assert_eq!(path, InnerPath::Auto);
+        assert_eq!(body, isa::preferred());
         assert!(!ensure_tuned(&cfg, P16_FMT, 128, 128, 128));
         assert_eq!(settings::tuned_count(), before,
                    "Off must not grow the tuned table");
@@ -619,10 +720,42 @@ mod tests {
             ..KernelConfig::DEFAULT
         };
         let probes_before = probes();
-        let (got, path) = resolve(&cfg, P16_FMT, 64, 64, 64);
+        let (got, path, _body) = resolve(&cfg, P16_FMT, 64, 64, 64);
         assert_eq!(got, tile, "explicit tile always wins");
         assert_eq!(path, InnerPath::Auto);
         assert!(!ensure_tuned(&cfg, P16_FMT, 64, 64, 64));
         assert_eq!(probes(), probes_before);
+    }
+
+    #[test]
+    fn shape_class_tags_round_trip() {
+        for class in [ShapeClass::Skinny, ShapeClass::Square,
+                      ShapeClass::DeepK, ShapeClass::Sparse(1),
+                      ShapeClass::Sparse(10), ShapeClass::Sparse(50)] {
+            assert_eq!(ShapeClass::from_tag(&class.tag_string()),
+                       Ok(class));
+        }
+        assert!(ShapeClass::from_tag("oblong").is_err());
+        assert!(ShapeClass::from_tag("sparse-").is_err());
+        assert!(ShapeClass::from_tag("sparse-lots").is_err());
+    }
+
+    #[test]
+    fn isa_pin_overrides_tuned_body() {
+        // An explicit isa pin must win over anything the tuner
+        // cached, at every precedence branch.
+        let cfg = KernelConfig {
+            isa: Some(IsaBody::Portable),
+            ..KernelConfig::DEFAULT
+        };
+        let (_, _, body) = resolve(&cfg, P16_FMT, 64, 64, 64);
+        assert_eq!(body, IsaBody::Portable);
+        let pinned_tile = KernelConfig {
+            tile: Some(TileConfig::DEFAULT),
+            isa: Some(IsaBody::Portable),
+            ..KernelConfig::DEFAULT
+        };
+        let (_, _, body) = resolve(&pinned_tile, P16_FMT, 64, 64, 64);
+        assert_eq!(body, IsaBody::Portable);
     }
 }

@@ -31,9 +31,11 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::posit::{encode_from_parts, from_f64, Parts, PositFormat};
+use crate::posit::{encode_from_parts, from_f64, to_f64, Parts,
+                   PositFormat};
 
 use super::autotune;
+use super::isa::{self, IsaBody};
 use super::plan::{self, DecodedPlan};
 use super::pool::{self, RowQueue};
 use super::settings::{self, KernelConfig};
@@ -155,6 +157,39 @@ pub fn gemm_single_path(a: &DecodedPlan, b: &DecodedPlan,
     if path == InnerPath::Gather && !simd::gather_available() {
         return None;
     }
+    // The path pins predate the body axis; map them onto it the same
+    // way the row dispatch does so the pinned run uses exactly the
+    // body its name promises.
+    let body = match path {
+        InnerPath::Gather => IsaBody::Avx2,
+        InnerPath::Portable => IsaBody::Portable,
+        _ => isa::preferred(),
+    };
+    gemm_forced(a, b, bias, path, body, None)
+}
+
+/// Single-threaded GEMM with an explicitly pinned **ISA body** — the
+/// forced-body bit-identity sweep's entry point
+/// (`tests/isa_bodies.rs`, and the `isa_body_matrix` bench section).
+/// Returns `None` when the host cannot run `body`, so callers skip
+/// loudly instead of silently measuring a fallback. An explicit
+/// `tile` (e.g. a small `k_chunk`) reaches the chunked variants of
+/// the body; `None` uses the installed process default.
+pub fn gemm_single_body(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&[u64]>, body: IsaBody,
+                        tile: Option<TileConfig>)
+                        -> Option<Vec<u64>> {
+    if !isa::host_has(body) {
+        return None;
+    }
+    gemm_forced(a, b, bias, InnerPath::Auto, body, tile)
+}
+
+/// Shared single-threaded forced-(path, body) GEMM behind the two
+/// pinned entries above.
+fn gemm_forced(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
+               path: InnerPath, body: IsaBody,
+               tile: Option<TileConfig>) -> Option<Vec<u64>> {
     check_shapes(a, b, bias);
     let (m, n) = (a.rows, b.cols);
     if m == 0 || n == 0 {
@@ -162,8 +197,10 @@ pub fn gemm_single_path(a: &DecodedPlan, b: &DecodedPlan,
     }
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let mut out = vec![0u64; m * n];
-    simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path,
-                    settings::current().tile_or_default());
+    let tile =
+        tile.unwrap_or_else(|| settings::current().tile_or_default());
+    simd::gemm_rows(a, b, bias_dec.as_ref(), 0, &mut out, path, body,
+                    tile);
     apply_nar(a, b, bias_dec.as_ref(), &mut out);
     Some(out)
 }
@@ -335,9 +372,10 @@ type ChunkHook<'h> = &'h (dyn Fn(usize, &mut [u64]) + Sync);
 /// after it is written. Chunking never changes results — exact
 /// integer accumulation is associative and the epilogue is
 /// element-wise.
+#[allow(clippy::too_many_arguments)]
 fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
             out: &mut [u64], threads: usize, dispatch: Dispatch,
-            tile: TileConfig, path: InnerPath,
+            tile: TileConfig, path: InnerPath, body: IsaBody,
             hook: Option<ChunkHook>) -> DispatchStats {
     let (m, n) = (a.rows, b.cols);
     let t = threads.clamp(1, m);
@@ -351,7 +389,8 @@ fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
             while r0 < m {
                 let r1 = (r0 + chunk_rows).min(m);
                 let win = &mut out[r0 * n..r1 * n];
-                simd::gemm_rows(a, b, bd, r0, win, path, tile);
+                simd::gemm_rows(a, b, bd, r0, win, path, body,
+                                tile);
                 h(r0, win);
                 r0 = r1;
             }
@@ -361,7 +400,7 @@ fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
                 per_job_claims: vec![m.div_ceil(chunk_rows)],
             };
         }
-        simd::gemm_rows(a, b, bd, 0, out, path, tile);
+        simd::gemm_rows(a, b, bd, 0, out, path, body, tile);
         return DispatchStats { chunk_rows: m, chunks: 1,
                                per_job_claims: vec![1] };
     }
@@ -392,7 +431,7 @@ fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
                                     (r1 - r0) * n)
                             };
                             simd::gemm_rows(a, b, bd, r0, chunk,
-                                            path, tile);
+                                            path, body, tile);
                             if let Some(h) = hook {
                                 h(r0, chunk);
                             }
@@ -423,7 +462,7 @@ fn run_rows(a: &DecodedPlan, b: &DecodedPlan, bd: Option<&BiasDec>,
                 {
                     s.spawn(move || {
                         simd::gemm_rows(a, b, bd, ti * rows_per,
-                                        chunk, path, tile);
+                                        chunk, path, body, tile);
                     });
                 }
             });
@@ -454,9 +493,10 @@ fn gemm_impl(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&[u64]>,
     // Effective geometry: explicit pin > autotuned winner > defaults
     // (probing inline only under AutotuneMode::FirstUse). Any outcome
     // is bit-identical — resolution only retunes speed.
-    let (tile, path) = autotune::resolve(cfg, a.fmt, m, a.cols, n);
+    let (tile, path, body) =
+        autotune::resolve(cfg, a.fmt, m, a.cols, n);
     let stats = run_rows(a, b, bias_dec.as_ref(), &mut out, threads,
-                         dispatch, tile, path, None);
+                         dispatch, tile, path, body, None);
 
     apply_nar(a, b, bias_dec.as_ref(), &mut out);
     (out, stats)
@@ -515,11 +555,35 @@ impl Epilogue {
     }
 }
 
+/// An exact dyadic rational `sig · 2^exp` — the only bound values
+/// [`Activation::HardTanh`] accepts, because a clamp bound must be a
+/// *fixed point of posit rounding* for the clamp to commute with the
+/// kernel's single rounding (the same argument that makes ReLU6's
+/// `6 = 1.5·2²` exact). [`Activation::validate`] checks the bound is
+/// exactly representable in the target format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Dyadic {
+    /// Signed integer significand.
+    pub sig: i32,
+    /// Power-of-two exponent: the value is `sig * 2^exp`.
+    pub exp: i32,
+}
+
+impl Dyadic {
+    /// The exact `f64` value: `sig` is inside `f64`'s exact-integer
+    /// range and scaling by a power of two only shifts the exponent,
+    /// so no rounding happens here (validated posit bounds keep `exp`
+    /// far from `f64`'s subnormal/overflow edges).
+    pub fn value(self) -> f64 {
+        self.sig as f64 * 2f64.powi(self.exp)
+    }
+}
+
 /// Word-level activation of the fused epilogue (and of
 /// [`activate_words`], its layer-wise oracle). Every variant commutes
-/// with the kernel's single rounding — see [`Epilogue`] for the
-/// argument — so fusing it after the rounding is bit-identical to
-/// applying it to the exact accumulator before.
+/// with the kernel's single rounding where stated on the variant —
+/// see [`Epilogue`] for the base argument — so fusing it after the
+/// rounding matches applying it to the exact accumulator before.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Activation {
     /// Identity: the rounded sum passes through untouched.
@@ -535,14 +599,103 @@ pub enum Activation {
     /// it either way, and a sum ≤ 6 rounds below it and is untouched
     /// either way.
     Relu6,
+    /// Leaky ReLU with a power-of-two slope `2^-shift` on the
+    /// negative side (NaR passes through). The multiply is exact in
+    /// `f64` (posit values are dyadic, the slope is a power of two),
+    /// so the word chain performs exactly one extra posit rounding of
+    /// the exact product `round(x)·2^-shift`.
+    ///
+    /// **Commutation is scoped, not universal**: when the rounded
+    /// negative input is exact (`round(x) = x`, e.g. the
+    /// maxpos/minpos/zero boundaries the tests pin), the chain equals
+    /// `round(x·2^-shift)` — the ideal single-rounding result. For
+    /// inexact inputs the two roundings can differ from the
+    /// one-rounding ideal near saturation (an exact sum below
+    /// `-maxpos·2^shift` would ideally scale back inside range, but
+    /// the word chain has already clamped to `-maxpos`), which is why
+    /// this variant — unlike the clamps — documents the fused and
+    /// layer-wise paths as *each other's* oracle rather than the
+    /// exact accumulator's: both run the identical word chain, so
+    /// they stay bit-identical everywhere.
+    LeakyRelu {
+        /// Negative-side slope exponent: slope = `2^-shift`,
+        /// `1 ..= 16` ([`Activation::validate`]).
+        shift: u32,
+    },
+    /// Hard-tanh: clamp to `[lo, hi]` (NaR passes through). Both
+    /// bounds must be exactly representable dyadics
+    /// ([`Activation::validate`]), so the commutation argument is
+    /// ReLU6's on both sides: rounding is monotone and fixes each
+    /// bound, hence clamping rounded words equals rounding the
+    /// clamped exact sum — for **every** input, not just exact ones.
+    HardTanh {
+        /// Lower clamp bound (≤ `hi`).
+        lo: Dyadic,
+        /// Upper clamp bound.
+        hi: Dyadic,
+    },
 }
 
-/// Word-level activation dispatch: no-op for identity, [`relu_words`]
-/// for ReLU, the added positive clamp for ReLU6. This is the
-/// layer-wise oracle the fused epilogue is tested against at every
-/// activation. Positive posit words of one format order like their
-/// values as plain unsigned integers, so the ReLU6 clamp is a word
-/// compare against the encoding of 6.
+/// Sign-extend a posit word to the full `i64` two's-complement key:
+/// posit words of one format compare like their values when read as
+/// sign-extended integers (NaR, the most-negative key, is excluded by
+/// the callers), which is what makes word-level clamps exact.
+#[inline]
+fn sext_key(w: u64, fmt: PositFormat) -> i64 {
+    let sh = 64 - fmt.nbits;
+    ((w << sh) as i64) >> sh
+}
+
+impl Activation {
+    /// Check the activation's parameters make the word-level
+    /// implementation exact for `fmt`: `LeakyRelu` shifts stay in
+    /// `1 ..= 16` (the slope must stay a nonzero power of two well
+    /// inside every format's dynamic range), and `HardTanh` bounds
+    /// must be exactly representable (`round(bound) = bound` — the
+    /// fixed-point property the commutation proof needs) with
+    /// `lo ≤ hi`. Called at the engine's config edge; the kernel
+    /// assumes validated parameters.
+    pub fn validate(self, fmt: PositFormat) -> Result<(), String> {
+        match self {
+            Activation::None | Activation::Relu
+            | Activation::Relu6 => Ok(()),
+            Activation::LeakyRelu { shift } => {
+                if !(1..=16).contains(&shift) {
+                    return Err(format!(
+                        "LeakyRelu shift {shift} out of range (1..=16)"
+                    ));
+                }
+                Ok(())
+            }
+            Activation::HardTanh { lo, hi } => {
+                if lo.value() > hi.value() {
+                    return Err(format!(
+                        "HardTanh bounds inverted: lo {} > hi {}",
+                        lo.value(), hi.value()));
+                }
+                for (name, d) in [("lo", lo), ("hi", hi)] {
+                    let v = d.value();
+                    let w = from_f64(v, fmt);
+                    if w == fmt.nar() || to_f64(w, fmt) != v {
+                        return Err(format!(
+                            "HardTanh {name} bound {v} is not exactly \
+                             representable in posit({}, {})",
+                            fmt.nbits, fmt.es));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Word-level activation dispatch — the **single** implementation
+/// both the layer-wise path and the fused epilogue
+/// ([`super::simd::epilogue_window`]) run, so their bit-identity is
+/// structural. No-op for identity, [`relu_words`] for ReLU, word
+/// compares for the clamps (posit words of one format order like
+/// their values as sign-extended integers), and one exact `f64`
+/// multiply + re-round for the Leaky negative side.
 pub fn activate_words(words: &mut [u64], act: Activation,
                       fmt: PositFormat) {
     match act {
@@ -560,6 +713,38 @@ pub fn activate_words(words: &mut [u64], act: Activation,
                     *wd = 0;
                 } else if *wd > six {
                     *wd = six;
+                }
+            }
+        }
+        Activation::LeakyRelu { shift } => {
+            let nar = fmt.nar();
+            let sign_bit = 1u64 << (fmt.nbits - 1);
+            // 2^-shift is exact in f64 for every validated shift, and
+            // a posit value times a power of two is still dyadic, so
+            // the only rounding below is `from_f64`'s — the posit
+            // re-round of the exact scaled value.
+            let scale = ((1u64 << shift) as f64).recip();
+            for wd in words.iter_mut() {
+                if *wd & sign_bit != 0 && *wd != nar {
+                    *wd = from_f64(to_f64(*wd, fmt) * scale, fmt);
+                }
+            }
+        }
+        Activation::HardTanh { lo, hi } => {
+            let nar = fmt.nar();
+            let lo_w = from_f64(lo.value(), fmt);
+            let hi_w = from_f64(hi.value(), fmt);
+            let lo_k = sext_key(lo_w, fmt);
+            let hi_k = sext_key(hi_w, fmt);
+            for wd in words.iter_mut() {
+                if *wd == nar {
+                    continue;
+                }
+                let k = sext_key(*wd, fmt);
+                if k < lo_k {
+                    *wd = lo_w;
+                } else if k > hi_k {
+                    *wd = hi_w;
                 }
             }
         }
@@ -658,7 +843,8 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
     CTR_FUSED_GEMMS.fetch_add(1, Ordering::Relaxed);
     CTR_FUSED_ELEMS.fetch_add((m * n) as u64, Ordering::Relaxed);
     let bias_dec = bias.map(|bs| BiasDec::new(bs, a.fmt));
-    let (tile, path) = autotune::resolve(cfg, a.fmt, m, a.cols, n);
+    let (tile, path, body) =
+        autotune::resolve(cfg, a.fmt, m, a.cols, n);
     let t = threads_for(m, a.cols, n, cfg);
 
     let nar_possible = a.has_nar
@@ -668,7 +854,7 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
         // Slow path (rare): words first, NaR poisoning, then the
         // activation + planar pass with mask building.
         run_rows(a, b, bias_dec.as_ref(), &mut out.words, t,
-                 Dispatch::Pool, tile, path, None);
+                 Dispatch::Pool, tile, path, body, None);
         apply_nar(a, b, bias_dec.as_ref(), &mut out.words);
         activate_words(&mut out.words, epi.act, a.fmt);
         out.refill_planar_from_words();
@@ -698,7 +884,7 @@ pub fn gemm_fused_into(a: &DecodedPlan, b: &DecodedPlan,
         simd::epilogue_window(fmt, act, win, sig_w, w_w, w8_w);
     };
     run_rows(a, b, bias_dec.as_ref(), words, t, Dispatch::Pool, tile,
-             path, Some(&hook));
+             path, body, Some(&hook));
 }
 
 /// NaR poisoning pass: any NaR operand in the reduction (or bias)
@@ -966,6 +1152,7 @@ mod tests {
                                         steal_rows: 1, k_chunk: 4 }),
                 path: InnerPath::Portable,
                 autotune: crate::kernel::AutotuneMode::Off,
+                isa: None,
             };
             assert_eq!(gemm_with_config(&pa, &pb, None, &cfg), base,
                        "{fmt:?}");
@@ -1145,6 +1332,7 @@ mod tests {
                                         steal_rows: 2, k_chunk: 4 }),
                 path: InnerPath::Portable,
                 autotune: crate::kernel::AutotuneMode::Off,
+                isa: None,
             };
             let got = gemm_fused(&pa, &pb, None, Epilogue::RELU, &cfg);
             assert_eq!(got.words, base.words, "threads={threads}");

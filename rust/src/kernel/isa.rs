@@ -1,0 +1,221 @@
+//! Runtime ISA feature detection and per-host kernel-body dispatch.
+//!
+//! SPADE's architectural claim is one lane-fused datapath reused
+//! across precisions; the software mirror of that claim is one
+//! *dispatch point* reused across instruction sets. This module is
+//! that point: it centralizes every runtime CPU-feature probe the
+//! kernel performs and names the hand-written inner-loop bodies as a
+//! small closed enum, [`IsaBody`], that the rest of the tree treats
+//! as data — the autotuner sweeps it as a candidate axis, the tuned
+//! table persists it as a string tag, and `SPADE_KERNEL_ISA` pins it
+//! from the environment (through [`crate::api::env`] only, like every
+//! other knob).
+//!
+//! ## The bodies
+//!
+//! | body | ISA | what it is |
+//! |---|---|---|
+//! | [`IsaBody::Portable`] | any | scalar lane loop (and the autovectorized chunked k-loop) |
+//! | [`IsaBody::Avx2`] | x86-64 AVX2 | ymm `vpgatherqq` P8 product-LUT gather, 8 lanes/step |
+//! | [`IsaBody::Avx512`] | x86-64 AVX-512F | zmm `vpgatherqq` P8 gather, 16 lanes/step |
+//! | [`IsaBody::Neon`] | aarch64 NEON | 128-bit table-gather P8 body, 8 lanes/step |
+//!
+//! Every body accumulates the same exact `i64` products from the same
+//! P8 product LUT and finishes through the same single
+//! `encode_acc_i64` rounding, so they are bit-identical to the scalar
+//! quire oracle by the associativity contract (integer addition is
+//! associative; reordering lanes cannot change the exact sum, hence
+//! not the rounding either). `rust/tests/isa_bodies.rs` force-runs
+//! every compiled-in body against the oracle.
+//!
+//! ## Detection → candidate grid → persisted winners
+//!
+//! [`host_has`] answers "can this process run body X right now"
+//! (cached after the first query — feature detection is a CPUID read,
+//! but the kernel asks per GEMM). [`available_bodies`] lists the
+//! host's bodies best-first and [`preferred`] names the default
+//! choice. The autotuner ([`crate::kernel::autotune`]) widens its P8
+//! candidate grids over `available_bodies()` so `Engine::warm_up`
+//! probes (precision, shape class, body) triples and installs the
+//! measured winner per host; `EngineConfig::tuned_path` then persists
+//! those winners as `spade-tuned-v1` JSON so a fleet of identical
+//! machines probes once, not per process. Entries naming a body the
+//! loading host lacks are skipped (and re-probed) rather than trusted.
+//!
+//! ## Hygiene
+//!
+//! `is_x86_feature_detected!` / `std::arch` use is confined to this
+//! module and [`crate::kernel::simd`] (where the intrinsic bodies
+//! live) by the `spade-lint` `isa-hygiene` rule — a feature check
+//! anywhere else would fragment the dispatch decision this module
+//! exists to centralize.
+
+use std::sync::OnceLock;
+
+/// A hand-written kernel inner-loop body, named as data.
+///
+/// `Portable` is always available; the rest require the matching ISA
+/// at runtime ([`host_has`]). The enum is deliberately closed and
+/// `Copy` so configs, tuned-table entries, and autotune candidates
+/// can carry a body by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum IsaBody {
+    /// Scalar lane loop; the universal fallback and the body the
+    /// chunked k-loop autovectorizes from.
+    Portable,
+    /// AVX2 ymm `vpgatherqq` product-LUT gather (8 P8 lanes/step).
+    Avx2,
+    /// AVX-512F zmm `vpgatherqq` gather (16 P8 lanes/step — two zmm
+    /// index/result pairs per iteration).
+    Avx512,
+    /// aarch64 NEON 128-bit table-gather body (8 P8 lanes/step).
+    Neon,
+}
+
+impl IsaBody {
+    /// Every compiled-in body, in declaration order (not preference
+    /// order — see [`available_bodies`] for best-first).
+    pub const ALL: [IsaBody; 4] =
+        [IsaBody::Portable, IsaBody::Avx2, IsaBody::Avx512,
+         IsaBody::Neon];
+
+    /// Stable string tag used by `SPADE_KERNEL_ISA`, config JSON, the
+    /// tuned-table schema, and bench keys.
+    pub fn tag(self) -> &'static str {
+        match self {
+            IsaBody::Portable => "portable",
+            IsaBody::Avx2 => "avx2",
+            IsaBody::Avx512 => "avx512",
+            IsaBody::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag). Strict: unknown tags are an
+    /// error naming the full grammar, like every other engine knob.
+    pub fn from_tag(s: &str) -> Result<IsaBody, String> {
+        match s {
+            "portable" => Ok(IsaBody::Portable),
+            "avx2" => Ok(IsaBody::Avx2),
+            "avx512" => Ok(IsaBody::Avx512),
+            "neon" => Ok(IsaBody::Neon),
+            other => Err(format!(
+                "unknown ISA body {other:?} (expected auto, \
+                 portable, avx2, avx512, or neon)")),
+        }
+    }
+}
+
+/// Cached result of the one-time host feature probe.
+struct HostIsa {
+    avx2: bool,
+    avx512: bool,
+    neon: bool,
+}
+
+fn host() -> &'static HostIsa {
+    static HOST: OnceLock<HostIsa> = OnceLock::new();
+    HOST.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // The zmm body (and the `avx512f` detection macro itself)
+            // needs Rust ≥ 1.89; `build.rs` probes the toolchain and
+            // sets `spade_avx512`. Without it the body is not
+            // compiled, so detection must say "no" too.
+            #[cfg(spade_avx512)]
+            let avx512 = is_x86_feature_detected!("avx512f");
+            #[cfg(not(spade_avx512))]
+            let avx512 = false;
+            HostIsa {
+                avx2: is_x86_feature_detected!("avx2"),
+                avx512,
+                neon: false,
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON (ASIMD) is architecturally mandatory on aarch64.
+            HostIsa { avx2: false, avx512: false, neon: true }
+        }
+        #[cfg(not(any(target_arch = "x86_64",
+                      target_arch = "aarch64")))]
+        {
+            HostIsa { avx2: false, avx512: false, neon: false }
+        }
+    })
+}
+
+/// Can this host execute `body` right now? `Portable` is always
+/// `true`; the rest reflect the cached runtime feature probe.
+pub fn host_has(body: IsaBody) -> bool {
+    match body {
+        IsaBody::Portable => true,
+        IsaBody::Avx2 => host().avx2,
+        IsaBody::Avx512 => host().avx512,
+        IsaBody::Neon => host().neon,
+    }
+}
+
+/// The host's available bodies, best-first (widest gather first,
+/// `Portable` always last). This is the autotuner's sweep order and
+/// the order the forced-body test names bodies in.
+pub fn available_bodies() -> Vec<IsaBody> {
+    let mut out = Vec::with_capacity(4);
+    for b in [IsaBody::Avx512, IsaBody::Avx2, IsaBody::Neon] {
+        if host_has(b) {
+            out.push(b);
+        }
+    }
+    out.push(IsaBody::Portable);
+    out
+}
+
+/// The body dispatch uses when nothing pins or tunes one: the best
+/// the host has.
+pub fn preferred() -> IsaBody {
+    available_bodies()[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip_and_reject_junk() {
+        for b in IsaBody::ALL {
+            assert_eq!(IsaBody::from_tag(b.tag()), Ok(b));
+        }
+        assert!(IsaBody::from_tag("sse9").is_err());
+        assert!(IsaBody::from_tag("AVX2").is_err(),
+                "tags are case-sensitive like the rest of the \
+                 config grammar");
+        assert!(IsaBody::from_tag("").is_err());
+    }
+
+    #[test]
+    fn portable_is_always_available_and_last() {
+        assert!(host_has(IsaBody::Portable));
+        let avail = available_bodies();
+        assert_eq!(*avail.last().expect("nonempty"),
+                   IsaBody::Portable);
+        // Every listed body must actually be runnable, and the
+        // preferred body is the head of the list.
+        for b in &avail {
+            assert!(host_has(*b), "{} listed but unavailable",
+                    b.tag());
+        }
+        assert_eq!(preferred(), avail[0]);
+    }
+
+    #[test]
+    fn detection_is_consistent_with_arch() {
+        // A body from a foreign architecture can never be detected.
+        #[cfg(target_arch = "x86_64")]
+        assert!(!host_has(IsaBody::Neon));
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert!(host_has(IsaBody::Neon));
+            assert!(!host_has(IsaBody::Avx2));
+            assert!(!host_has(IsaBody::Avx512));
+        }
+    }
+}

@@ -47,8 +47,10 @@
 //!                   P16 folds each exact i128 chunk sum into a
 //!                   quire with one mac_raw               (simd.rs)
 //!          └─ lane   independent register accumulators:
-//!                    P8  — P8_LANES i64 LUT-gather lanes (+ optional
-//!                          AVX2 vpgatherqq body, runtime-detected)
+//!                    P8  — P8_LANES i64 LUT-gather lanes, filled by
+//!                          the host's best IsaBody (portable /
+//!                          AVX2 ymm / AVX-512 zmm / NEON — detected
+//!                          and ranked by isa.rs)
 //!                    P16 — P16_MR × P16_NR i128 micro-tile (+ the
 //!                          default-off hybrid product LUT)
 //!                    P32 — a panel of reused quires      (simd.rs)
@@ -79,14 +81,16 @@
 //! | [`settings::KernelConfig::threads`] | absolute per-GEMM worker-count override (`None` = size heuristic) |
 //! | [`settings::KernelConfig::pool_workers`] | pool size, latched at first pool use (`None` = available parallelism) |
 //! | [`settings::KernelConfig::tile`] | explicit tile pin — see [`simd::TileConfig`] (strictly validated); `None` = defaults or autotuned |
-//! | [`settings::KernelConfig::path`] | inner-loop body; `Portable` disables the AVX2 gather |
+//! | [`settings::KernelConfig::path`] | inner-loop shape; `Portable` disables all `std::arch` bodies |
+//! | [`settings::KernelConfig::isa`] | explicit [`IsaBody`] pin (`None` = tuned winner, else best detected — see [`isa`]) |
 //! | [`settings::KernelConfig::autotune`] | first-use micro-probe autotuning ([`autotune::AutotuneMode`]; default `Off`) |
 //!
 //! When no tile is pinned and autotuning is enabled, dispatch
 //! resolves the geometry through [`autotune`]: a one-time micro-probe
 //! per (precision, shape class) picks panel widths, steal/k-chunk
-//! depths and the inner path, cached process-wide in [`settings`].
-//! `Engine::warm_up` runs the probes ahead of traffic.
+//! depths, the inner path and the ISA body, cached process-wide in
+//! [`settings`]. `Engine::warm_up` runs the probes ahead of traffic
+//! (and can persist/load the winners — `EngineConfig::tuned_path`).
 //!
 //! Callers either thread a config explicitly
 //! ([`gemm::gemm_with_config`], `Session::set_kernel_config`,
@@ -142,6 +146,7 @@
 
 pub mod autotune;
 pub mod gemm;
+pub mod isa;
 pub mod lut;
 pub mod plan;
 pub mod pool;
@@ -152,10 +157,12 @@ pub mod sparse;
 pub use autotune::{classify_sparse, AutotuneMode, ShapeClass};
 pub use gemm::{activate_words, auto_threads, counters,
                encode_acc_i128, encode_acc_i64, gemm, gemm_fused,
-               gemm_fused_into, gemm_single_path, gemm_with_config,
-               gemm_with_config_stats, gemm_with_scope,
-               gemm_with_stats, gemm_with_threads, relu_words,
-               Activation, DispatchStats, Epilogue, KernelCounters};
+               gemm_fused_into, gemm_single_body, gemm_single_path,
+               gemm_with_config, gemm_with_config_stats,
+               gemm_with_scope, gemm_with_stats, gemm_with_threads,
+               relu_words, Activation, DispatchStats, Dyadic,
+               Epilogue, KernelCounters};
+pub use isa::{available_bodies, host_has, preferred, IsaBody};
 pub use sparse::{classify_row, spgemm, spgemm_bt, spgemm_bt_fused_into,
                  spgemm_fused, spgemm_fused_into, spgemm_with_config,
                  RowClass, SparsePlan};

@@ -38,7 +38,9 @@ use std::collections::BTreeMap;
 use std::sync::RwLock;
 
 use super::autotune::{AutotuneMode, ShapeClass, Tuned};
+use super::isa::{self, IsaBody};
 use super::simd::{InnerPath, TileConfig};
+use crate::util::Json;
 
 /// Explicit kernel configuration: everything the GEMM dispatch and
 /// inner loops need to know, in one copyable value.
@@ -71,6 +73,14 @@ pub struct KernelConfig {
     /// When the first-use autotuner may probe
     /// ([`super::autotune::AutotuneMode`]; default `Off`).
     pub autotune: AutotuneMode,
+    /// ISA-body pin ([`super::isa::IsaBody`]). `None` (= `auto`, the
+    /// default) lets dispatch pick: the tuned winner when one exists,
+    /// otherwise the best body the host detects. `Some` is an
+    /// explicit pin — validated against the host at the config edge
+    /// ([`crate::api::EngineConfig::validate`]) and honored by every
+    /// P8 dispatch (including autotune probes, which pin the body
+    /// they are timing).
+    pub isa: Option<IsaBody>,
 }
 
 impl KernelConfig {
@@ -82,6 +92,7 @@ impl KernelConfig {
         tile: None,
         path: InnerPath::Auto,
         autotune: AutotuneMode::Off,
+        isa: None,
     };
 
     /// The tile geometry this config pins, or the built-in defaults —
@@ -147,6 +158,178 @@ pub fn tuned_clear() {
     TUNED.write().unwrap().clear();
 }
 
+/// Snapshot of the whole tuned table, key-sorted (the `BTreeMap`
+/// order), so serialization is deterministic.
+pub fn tuned_snapshot() -> Vec<((u32, ShapeClass), Tuned)> {
+    TUNED.read().unwrap().iter().map(|(k, v)| (*k, *v)).collect()
+}
+
+/// `k_chunk` can legitimately be `usize::MAX` (the autotuner's
+/// "never chunk" candidate). JSON numbers are f64 and cannot hold
+/// that exactly, so the schema spells it `"max"`.
+fn k_chunk_json(v: usize) -> String {
+    if v == usize::MAX {
+        "\"max\"".to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+fn k_chunk_from_json(j: &Json) -> Result<usize, String> {
+    if let Some(s) = j.as_str() {
+        return if s == "max" {
+            Ok(usize::MAX)
+        } else {
+            Err(format!("\"k_chunk\": unknown string {s:?} \
+                         (expected a count or \"max\")"))
+        };
+    }
+    j.as_usize()
+        .ok_or_else(|| "\"k_chunk\": expected a count or \"max\""
+            .to_string())
+}
+
+/// Render the tuned table as `spade-tuned-v1` JSON — the sidecar
+/// `Engine::warm_up` persists next to the `EngineConfig` JSON so a
+/// fleet of identical machines probes once, not per process.
+///
+/// One entry per (nbits, shape class) key; tile fields are flattened,
+/// `path`/`body`/`class` use the same string grammar as the config
+/// layer. Deterministic (key-sorted) output.
+pub fn tuned_to_json() -> String {
+    let snap = tuned_snapshot();
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"spade-tuned-v1\",\n");
+    s.push_str("  \"entries\": [");
+    for (i, ((nbits, class), t)) in snap.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"nbits\": {nbits}, \"class\": \"{}\", \
+             \"p16_panel\": {}, \"p32_panel\": {}, \
+             \"steal_rows\": {}, \"k_chunk\": {}, \
+             \"path\": \"{}\", \"body\": \"{}\"}}",
+            class.tag_string(),
+            t.tile.p16_panel,
+            t.tile.p32_panel,
+            t.tile.steal_rows,
+            k_chunk_json(t.tile.k_chunk),
+            t.path.tag(),
+            t.body.tag()));
+    }
+    if !snap.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+/// Parse `spade-tuned-v1` JSON and install its entries into the
+/// process-wide tuned table. **Strict**: a wrong schema tag, unknown
+/// or missing keys, bad types, or an unknown `class`/`path`/`body`
+/// tag is a hard error — a corrupt sidecar must fail loudly, not
+/// half-tune a fleet. The one *soft* case is an entry whose `body`
+/// the loading host cannot run (the file came from a different
+/// machine): that entry is **skipped** — the shape class re-probes
+/// here — and the skip count is returned alongside the install count.
+pub fn tuned_merge_json(src: &str)
+                        -> Result<(usize, usize), String> {
+    let root = Json::parse(src)?;
+    let obj = root.as_obj()
+        .ok_or("tuned table: top level must be an object")?;
+    match root.get("schema").and_then(Json::as_str) {
+        Some("spade-tuned-v1") => {}
+        Some(other) => {
+            return Err(format!(
+                "tuned table: schema {other:?} (expected \
+                 \"spade-tuned-v1\")"));
+        }
+        None => {
+            return Err("tuned table: missing \"schema\"".to_string());
+        }
+    }
+    for key in obj.keys() {
+        if key != "schema" && key != "entries" {
+            return Err(format!("tuned table: unknown key {key:?}"));
+        }
+    }
+    let entries = root.get("entries").and_then(Json::as_arr)
+        .ok_or("tuned table: \"entries\" must be an array")?;
+
+    const ENTRY_KEYS: &[&str] =
+        &["nbits", "class", "p16_panel", "p32_panel", "steal_rows",
+          "k_chunk", "path", "body"];
+    let mut parsed: Vec<((u32, ShapeClass), Tuned)> = Vec::new();
+    let mut skipped = 0usize;
+    for (i, e) in entries.iter().enumerate() {
+        let eobj = e.as_obj().ok_or_else(|| {
+            format!("tuned table: entry {i} must be an object")
+        })?;
+        for key in eobj.keys() {
+            if !ENTRY_KEYS.contains(&key.as_str()) {
+                return Err(format!(
+                    "tuned table: entry {i}: unknown key {key:?}"));
+            }
+        }
+        let field = |name: &str| {
+            e.get(name).ok_or_else(|| {
+                format!("tuned table: entry {i}: missing {name:?}")
+            })
+        };
+        let count = |name: &str| -> Result<usize, String> {
+            field(name)?.as_usize().ok_or_else(|| {
+                format!("tuned table: entry {i}: {name:?} must be a \
+                         non-negative count")
+            })
+        };
+        let tag = |name: &str| -> Result<&str, String> {
+            field(name)?.as_str().ok_or_else(|| {
+                format!("tuned table: entry {i}: {name:?} must be a \
+                         string")
+            })
+        };
+        let nbits = count("nbits")?;
+        if nbits == 0 || nbits > 64 {
+            return Err(format!(
+                "tuned table: entry {i}: \"nbits\" {nbits} out of \
+                 range"));
+        }
+        let class = ShapeClass::from_tag(tag("class")?)
+            .map_err(|e| format!("tuned table: entry {i}: {e}"))?;
+        let tile = TileConfig {
+            p16_panel: count("p16_panel")?,
+            p32_panel: count("p32_panel")?,
+            steal_rows: count("steal_rows")?,
+            k_chunk: k_chunk_from_json(field("k_chunk")?)
+                .map_err(|e| format!("tuned table: entry {i}: {e}"))?,
+        };
+        if tile.p16_panel == 0 || tile.p32_panel == 0 {
+            return Err(format!(
+                "tuned table: entry {i}: zero panel width"));
+        }
+        let path = InnerPath::from_tag(tag("path")?)
+            .map_err(|e| format!("tuned table: entry {i}: {e}"))?;
+        let body = IsaBody::from_tag(tag("body")?)
+            .map_err(|e| format!("tuned table: entry {i}: {e}"))?;
+        if !isa::host_has(body) {
+            // Tuned on a different host; its winner is meaningless
+            // (and possibly unrunnable) here. Skip → re-probe.
+            skipped += 1;
+            continue;
+        }
+        parsed.push(((nbits as u32, class),
+                     Tuned { tile, path, body }));
+    }
+    // Strictness first, installation second: nothing lands unless the
+    // whole file parsed.
+    let installed = parsed.len();
+    for (key, t) in parsed {
+        tuned_install(key, t);
+    }
+    Ok((installed, skipped))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,9 +356,99 @@ mod tests {
         let t = Tuned {
             tile: TileConfig { p16_panel: 16, ..TileConfig::DEFAULT },
             path: InnerPath::Portable,
+            body: IsaBody::Portable,
         };
         tuned_install(key, t);
         assert_eq!(tuned_lookup(key), Some(t));
         assert!(tuned_count() >= 1);
+    }
+
+    #[test]
+    fn tuned_json_merge_installs_and_skips_foreign_bodies() {
+        // Distinct fake nbits keys so this test cannot collide with
+        // real tuning done by concurrent tests.
+        let src = r#"{
+  "schema": "spade-tuned-v1",
+  "entries": [
+    {"nbits": 61, "class": "deep-k", "p16_panel": 64,
+     "p32_panel": 32, "steal_rows": 0, "k_chunk": "max",
+     "path": "portable", "body": "portable"},
+    {"nbits": 61, "class": "sparse-10", "p16_panel": 64,
+     "p32_panel": 32, "steal_rows": 4, "k_chunk": 0,
+     "path": "auto", "body": "portable"}
+  ]
+}"#;
+        let (installed, skipped) =
+            tuned_merge_json(src).expect("valid v1 file");
+        assert_eq!((installed, skipped), (2, 0));
+        let t = tuned_lookup((61, ShapeClass::DeepK)).unwrap();
+        assert_eq!(t.tile.k_chunk, usize::MAX);
+        assert_eq!(t.path, InnerPath::Portable);
+        assert_eq!(t.body, IsaBody::Portable);
+        let s = tuned_lookup((61, ShapeClass::Sparse(10))).unwrap();
+        assert_eq!(s.tile.steal_rows, 4);
+
+        // An entry tuned for a body this host lacks is skipped, not
+        // installed and not an error (different machine's sidecar).
+        let foreign = IsaBody::ALL
+            .into_iter()
+            .find(|b| !super::isa::host_has(*b))
+            .map(|b| b.tag());
+        if let Some(tag) = foreign {
+            let src = format!(
+                r#"{{"schema": "spade-tuned-v1", "entries": [
+    {{"nbits": 62, "class": "skinny", "p16_panel": 64,
+     "p32_panel": 32, "steal_rows": 1, "k_chunk": 0,
+     "path": "auto", "body": "{tag}"}}]}}"#);
+            assert_eq!(tuned_merge_json(&src), Ok((0, 1)));
+            assert_eq!(tuned_lookup((62, ShapeClass::Skinny)), None);
+        }
+    }
+
+    #[test]
+    fn tuned_json_is_strict_about_corruption() {
+        for (bad, why) in [
+            ("{}", "missing schema"),
+            (r#"{"schema": "spade-tuned-v2", "entries": []}"#,
+             "wrong schema"),
+            (r#"{"schema": "spade-tuned-v1"}"#, "missing entries"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [], "x": 1}"#,
+             "unknown top-level key"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "square", "p16_panel": 64,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": 0,
+                 "path": "auto"}]}"#,
+             "missing body"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "square", "p16_panel": 64,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": 0,
+                 "path": "auto", "body": "mmx"}]}"#,
+             "unknown body tag"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "oblong", "p16_panel": 64,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": 0,
+                 "path": "auto", "body": "portable"}]}"#,
+             "unknown class tag"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "square", "p16_panel": 0,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": 0,
+                 "path": "auto", "body": "portable"}]}"#,
+             "zero panel"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "square", "p16_panel": 64,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": "lots",
+                 "path": "auto", "body": "portable"}]}"#,
+             "bad k_chunk string"),
+            (r#"{"schema": "spade-tuned-v1", "entries": [
+                {"nbits": 8, "class": "square", "p16_panel": 64,
+                 "p32_panel": 32, "steal_rows": 0, "k_chunk": 0,
+                 "path": "auto", "body": "portable",
+                 "speed": "yes"}]}"#,
+             "unknown entry key"),
+            ("not json at all", "parse failure"),
+        ] {
+            assert!(tuned_merge_json(bad).is_err(),
+                    "corrupt tuned table accepted: {why}");
+        }
     }
 }

@@ -37,10 +37,13 @@
 //!
 //! ## Inner-loop selection
 //!
-//! [`InnerPath`] names the selectable loop bodies. `Auto` (what
-//! [`super::gemm::gemm`] uses) picks the lane-fused portable loops,
-//! upgrading P8 to the `std::arch` AVX2 LUT-gather when the CPU has it
-//! (runtime-detected; `SPADE_KERNEL_GATHER=0` forces portable).
+//! [`InnerPath`] names the selectable loop *shapes* (lane-fused,
+//! forced gather, hybrid LUT, unblocked baseline); the orthogonal
+//! [`IsaBody`] axis names which hand-written instruction-set body
+//! fills the P8 lane loops — portable scalar, AVX2 ymm gather,
+//! AVX-512 zmm gather, or NEON — detected and ranked by
+//! [`super::isa`] and swept by the autotuner. `Auto` (what
+//! [`super::gemm::gemm`] uses) runs the dispatched body;
 //! `Unblocked` keeps the PR-1 element-at-a-time loops as the measured
 //! baseline for `benches/hotpath.rs` — see
 //! [`super::gemm::gemm_single_path`].
@@ -58,7 +61,9 @@
 
 use crate::posit::{decode, PositClass, PositFormat, Quire};
 
-use super::gemm::{encode_acc_i128, encode_acc_i64, Activation};
+use super::gemm::{activate_words, encode_acc_i128, encode_acc_i64,
+                  Activation};
+use super::isa::{self, IsaBody};
 use super::lut::{self, P16_ACC_FRAC_OFFSET, P8_ACC_FRAC_OFFSET};
 use super::plan::DecodedPlan;
 
@@ -99,6 +104,35 @@ pub enum InnerPath {
     /// unblocked P16, full-width quire row for P32. Kept as the bench
     /// baseline (`simd_vs_scalar_gather`, `blocked_vs_unblocked_p16`).
     Unblocked,
+}
+
+impl InnerPath {
+    /// Stable string tag shared by the config grammar
+    /// (`SPADE_KERNEL_PATH`) and the persisted tuned-table schema.
+    pub fn tag(self) -> &'static str {
+        match self {
+            InnerPath::Auto => "auto",
+            InnerPath::Portable => "portable",
+            InnerPath::Gather => "gather",
+            InnerPath::Hybrid => "hybrid",
+            InnerPath::Unblocked => "unblocked",
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag); strict (unknown tags are an
+    /// error naming the grammar).
+    pub fn from_tag(s: &str) -> Result<InnerPath, String> {
+        match s {
+            "auto" => Ok(InnerPath::Auto),
+            "portable" => Ok(InnerPath::Portable),
+            "gather" => Ok(InnerPath::Gather),
+            "hybrid" => Ok(InnerPath::Hybrid),
+            "unblocked" => Ok(InnerPath::Unblocked),
+            other => Err(format!(
+                "unknown inner path {other:?} (expected auto, \
+                 portable, gather, hybrid, or unblocked)")),
+        }
+    }
 }
 
 /// Runtime-tunable tile parameters. Defaults suit ~32 KiB L1d;
@@ -250,17 +284,11 @@ impl Default for TileConfig {
 }
 
 /// True when the `std::arch` AVX2 LUT-gather P8 loop can run on this
-/// machine (always false off x86_64).
-#[cfg(target_arch = "x86_64")]
+/// machine (always false off x86_64). Thin alias over the central
+/// detection in [`super::isa`] — kept because the `Gather` pin and
+/// its config validation predate the body axis.
 pub fn gather_available() -> bool {
-    is_x86_feature_detected!("avx2")
-}
-
-/// True when the `std::arch` AVX2 LUT-gather P8 loop can run on this
-/// machine (always false off x86_64).
-#[cfg(not(target_arch = "x86_64"))]
-pub fn gather_available() -> bool {
-    false
+    isa::host_has(IsaBody::Avx2)
 }
 
 /// Bias row decoded once into planar fields (shared by every inner
@@ -302,34 +330,11 @@ pub(super) fn epilogue_window(fmt: PositFormat, act: Activation,
     debug_assert_eq!(words.len(), sig.len());
     debug_assert_eq!(words.len(), w.len());
     let nar = fmt.nar();
-    let sign_bit = 1u64 << (fmt.nbits - 1);
-    match act {
-        Activation::None => {}
-        Activation::Relu => {
-            // Negative word ⇔ negative value (words are value-monotone
-            // two's-complement integers); NaR (sign bit, zero payload)
-            // passes through like NaN does through an f32 ReLU.
-            for wd in words.iter_mut() {
-                if *wd & sign_bit != 0 && *wd != nar {
-                    *wd = 0;
-                }
-            }
-        }
-        Activation::Relu6 => {
-            // Positive posit words of one format order like their
-            // values as plain unsigned integers, so the upper clamp
-            // is a word compare against the encoding of 6 (exactly
-            // representable: 1.5·2²).
-            let six = crate::posit::from_f64(6.0, fmt);
-            for wd in words.iter_mut() {
-                if *wd & sign_bit != 0 && *wd != nar {
-                    *wd = 0;
-                } else if *wd & sign_bit == 0 && *wd > six {
-                    *wd = six;
-                }
-            }
-        }
-    }
+    // One shared activation implementation (`gemm::activate_words`)
+    // for the fused and layerwise paths — the bit-identity contract
+    // between them is then structural, not a parallel-maintenance
+    // promise.
+    activate_words(words, act, fmt);
     if fmt == crate::posit::P8_FMT || fmt == crate::posit::P16_FMT {
         let t = if fmt == crate::posit::P8_FMT {
             lut::p8_decode_lut()
@@ -379,30 +384,27 @@ pub(super) fn epilogue_window(fmt: PositFormat, act: Activation,
 pub(super) fn gemm_rows(a: &DecodedPlan, b: &DecodedPlan,
                         bias: Option<&BiasDec>, i0: usize,
                         out: &mut [u64], path: InnerPath,
-                        tile: TileConfig) {
+                        body: IsaBody, tile: TileConfig) {
     let n = b.cols;
     let k = a.cols;
     let nrows = out.len() / n;
     let kc = tile.k_chunk_for(k);
     if a.fmt == crate::posit::P8_FMT {
-        // Deep-k chunking only replaces the *portable* lane loop: on
-        // an AVX2 host, `Auto` keeps the measured vpgatherqq body
-        // (swapping it for a scalar chunked loop by default would be
-        // an unmeasured regime change). The autotuner's P8 deep-k
-        // grid pits (k_chunk, Portable) against the gather default by
-        // measurement, and an explicit Portable pin chunks as soon as
-        // the threshold engages.
-        let chunkable = match path {
-            InnerPath::Unblocked | InnerPath::Gather => false,
-            InnerPath::Auto => !gather_available(),
-            InnerPath::Portable | InnerPath::Hybrid => true,
-        };
+        // Deep-k chunking streams A in L2-sized slices; since PR 10
+        // the chunked loop has its own SIMD bodies (the AVX2 variant
+        // of the lane block), so `Auto` chunks too — the gather
+        // upgrade and the chunking compose instead of excluding each
+        // other. Only the pinned baselines (`Unblocked`, `Gather`)
+        // keep their unchunked shape.
+        let chunkable =
+            !matches!(path, InnerPath::Unblocked | InnerPath::Gather);
         if chunkable {
             if let Some(kc) = kc {
-                return rows_p8_kchunk(a, b, bias, i0, nrows, out, kc);
+                return rows_p8_kchunk(a, b, bias, i0, nrows, out, kc,
+                                      body);
             }
         }
-        rows_p8(a, b, bias, i0, nrows, out, path);
+        rows_p8(a, b, bias, i0, nrows, out, path, body);
     } else if a.fmt == crate::posit::P16_FMT {
         if path == InnerPath::Unblocked {
             if k <= lut::P16_CHUNK {
@@ -449,25 +451,46 @@ fn p8_bias_term(bias: Option<&BiasDec>, j: usize) -> i64 {
     }
 }
 
-/// P8 dispatch: unblocked baseline, forced/auto AVX2 gather, or the
-/// portable lane loop.
+/// P8 dispatch: unblocked baseline, or the lane loop filled with the
+/// requested [`IsaBody`]. The path pins dominate the body axis —
+/// `Gather` means "the AVX2 body, specifically" and `Portable` means
+/// "no `std::arch` at all" (the old `SPADE_KERNEL_GATHER=0` kill
+/// switch) — and every ISA body is availability-checked here, right
+/// before the one `unsafe` call that needs it.
+#[allow(unused_variables)] // `body` is fully consumed only on x86_64/aarch64
 fn rows_p8(a: &DecodedPlan, b: &DecodedPlan, bias: Option<&BiasDec>,
-           i0: usize, nrows: usize, out: &mut [u64], path: InnerPath) {
+           i0: usize, nrows: usize, out: &mut [u64], path: InnerPath,
+           body: IsaBody) {
     if path == InnerPath::Unblocked {
         return rows_p8_unblocked(a, b, bias, i0, nrows, out);
     }
+    let body = match path {
+        InnerPath::Gather => IsaBody::Avx2,
+        InnerPath::Portable => IsaBody::Portable,
+        _ => body,
+    };
+    #[cfg(all(target_arch = "x86_64", spade_avx512))]
+    if body == IsaBody::Avx512 && isa::host_has(IsaBody::Avx512) {
+        // SAFETY: AVX-512F presence was just runtime-checked.
+        unsafe { rows_p8_avx512(a, b, bias, i0, nrows, out) };
+        return;
+    }
     #[cfg(target_arch = "x86_64")]
+    if matches!(body, IsaBody::Avx2 | IsaBody::Avx512)
+        && isa::host_has(IsaBody::Avx2)
     {
-        // `Auto` takes the gather body whenever the CPU has it; the
-        // old `SPADE_KERNEL_GATHER=0` kill switch is now expressed as
-        // `path = Portable` in the kernel config.
-        let want_gather =
-            path == InnerPath::Gather || path == InnerPath::Auto;
-        if want_gather && gather_available() {
-            // SAFETY: AVX2 presence was just runtime-checked.
-            unsafe { rows_p8_avx2(a, b, bias, i0, nrows, out) };
-            return;
-        }
+        // An AVX-512 request on a host without it (or without the
+        // compiled-in body) degrades to the ymm gather, then scalar.
+        // SAFETY: AVX2 presence was just runtime-checked.
+        unsafe { rows_p8_avx2(a, b, bias, i0, nrows, out) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if body == IsaBody::Neon && isa::host_has(IsaBody::Neon) {
+        // SAFETY: NEON (ASIMD) is architecturally mandatory on
+        // aarch64, and `host_has` confirms it.
+        unsafe { rows_p8_neon(a, b, bias, i0, nrows, out) };
+        return;
     }
     rows_p8_lanes(a, b, bias, i0, nrows, out)
 }
@@ -501,6 +524,29 @@ fn p8_tail(arow: &[u8], b8: &[u8], bias: Option<&BiasDec>, j0: usize,
     }
 }
 
+/// One register-resident lane block: accumulate `arow`'s exact
+/// LUT products for columns `j0 .. j0 + P8_LANES` into `lanes`.
+/// `k0` offsets the B row index (nonzero when a k-chunk walk hands
+/// in a sub-slice of A). One shared copy feeds the portable lane
+/// loop, the chunked loop, and the AVX-512 body's 8-wide remainder —
+/// divergence between them is structurally impossible.
+#[inline]
+fn p8_lane_block(arow: &[u8], b8: &[u8], n: usize, k0: usize,
+                 j0: usize, lanes: &mut [i64; P8_LANES]) {
+    let lut = lut::p8_prod_lut();
+    for (kk, &aw) in arow.iter().enumerate() {
+        if aw == 0 {
+            continue;
+        }
+        let base = (aw as usize) << 8;
+        let row = (k0 + kk) * n + j0;
+        let brow = &b8[row..row + P8_LANES];
+        for (slot, &bw) in lanes.iter_mut().zip(brow) {
+            *slot += lut[base | bw as usize];
+        }
+    }
+}
+
 /// P8 lane-fused portable loop: [`P8_LANES`] independent `i64`
 /// accumulators walk the k dimension together, one exact-product LUT
 /// gather per lane per step. The lanes live in a fixed array the
@@ -511,7 +557,6 @@ fn rows_p8_lanes(a: &DecodedPlan, b: &DecodedPlan,
                  out: &mut [u64]) {
     let (k, n) = (a.cols, b.cols);
     let fmt = a.fmt;
-    let lut = lut::p8_prod_lut();
     let (a8, b8) = (&a.words8, &b.words8);
     for r in 0..nrows {
         let i = i0 + r;
@@ -520,16 +565,7 @@ fn rows_p8_lanes(a: &DecodedPlan, b: &DecodedPlan,
         let mut j0 = 0usize;
         while j0 + P8_LANES <= n {
             let mut lanes = p8_lane_bias(bias, j0);
-            for (kk, &aw) in arow.iter().enumerate() {
-                if aw == 0 {
-                    continue;
-                }
-                let base = (aw as usize) << 8;
-                let brow = &b8[kk * n + j0..kk * n + j0 + P8_LANES];
-                for (slot, &bw) in lanes.iter_mut().zip(brow) {
-                    *slot += lut[base | bw as usize];
-                }
-            }
+            p8_lane_block(arow, b8, n, 0, j0, &mut lanes);
             for (jj, &v) in lanes.iter().enumerate() {
                 orow[j0 + jj] =
                     encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
@@ -614,6 +650,169 @@ unsafe fn rows_p8_avx2(a: &DecodedPlan, b: &DecodedPlan,
     }
 }
 
+/// P8 AVX-512 loop: the gather body widened to 16 lanes per step —
+/// two zmm accumulators, each fed by a `vpmovzxbq`-extended half of a
+/// 16-byte B slice OR'd with the A word's LUT-row base and one zmm
+/// `vpgatherqq`. After the 16-wide loop an 8-wide block runs through
+/// the shared [`p8_lane_block`], then the shared scalar tail —
+/// identical integer sums, so bit-identical by associativity (the
+/// forced-body sweep in `tests/isa_bodies.rs` asserts it against the
+/// quire oracle). Compiled only when `build.rs` finds a toolchain
+/// with stable AVX-512 support (`spade_avx512`).
+///
+/// # Safety
+/// The caller must have verified AVX-512F support at runtime
+/// (`isa::host_has(IsaBody::Avx512)`) before calling — the only call
+/// site, in the P8 row dispatch, does exactly that.
+#[cfg(all(target_arch = "x86_64", spade_avx512))]
+#[target_feature(enable = "avx512f")]
+unsafe fn rows_p8_avx512(a: &DecodedPlan, b: &DecodedPlan,
+                         bias: Option<&BiasDec>, i0: usize,
+                         nrows: usize, out: &mut [u64]) {
+    use std::arch::x86_64::{
+        __m512i, _mm512_add_epi64, _mm512_cvtepu8_epi64,
+        _mm512_i64gather_epi64, _mm512_or_si512, _mm512_set1_epi64,
+        _mm_cvtsi64_si128,
+    };
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let lp = lut.as_ptr() as *const u8;
+    let (a8, b8) = (&a.words8, &b.words8);
+    const W: usize = 2 * P8_LANES;
+    for r in 0..nrows {
+        let i = i0 + r;
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let mut j0 = 0usize;
+        while j0 + W <= n {
+            // `[i64; P8_LANES]` and `__m512i` are both 64 bytes, so
+            // the bias-seeded lane arrays transmute straight into the
+            // accumulator registers (and back out below) — no
+            // load/store intrinsic whose signature drifted across
+            // toolchains.
+            let mut vlo: __m512i =
+                core::mem::transmute(p8_lane_bias(bias, j0));
+            let mut vhi: __m512i =
+                core::mem::transmute(p8_lane_bias(bias, j0 + P8_LANES));
+            for (kk, &aw) in arow.iter().enumerate() {
+                if aw == 0 {
+                    continue;
+                }
+                let base = _mm512_set1_epi64((aw as i64) << 8);
+                let row = kk * n + j0;
+                let blo = u64::from_le_bytes(
+                    b8[row..row + 8].try_into().unwrap());
+                let bhi = u64::from_le_bytes(
+                    b8[row + 8..row + 16].try_into().unwrap());
+                let ilo = _mm512_or_si512(
+                    _mm512_cvtepu8_epi64(_mm_cvtsi64_si128(blo as i64)),
+                    base);
+                let ihi = _mm512_or_si512(
+                    _mm512_cvtepu8_epi64(_mm_cvtsi64_si128(bhi as i64)),
+                    base);
+                vlo = _mm512_add_epi64(
+                    vlo, _mm512_i64gather_epi64::<8>(ilo, lp));
+                vhi = _mm512_add_epi64(
+                    vhi, _mm512_i64gather_epi64::<8>(ihi, lp));
+            }
+            let lo: [i64; P8_LANES] = core::mem::transmute(vlo);
+            let hi: [i64; P8_LANES] = core::mem::transmute(vhi);
+            for (jj, &v) in lo.iter().chain(hi.iter()).enumerate() {
+                orow[j0 + jj] =
+                    encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+            }
+            j0 += W;
+        }
+        while j0 + P8_LANES <= n {
+            let mut lanes = p8_lane_bias(bias, j0);
+            p8_lane_block(arow, b8, n, 0, j0, &mut lanes);
+            for (jj, &v) in lanes.iter().enumerate() {
+                orow[j0 + jj] =
+                    encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+            }
+            j0 += P8_LANES;
+        }
+        p8_tail(arow, b8, bias, j0, n, fmt, orow);
+    }
+}
+
+/// P8 NEON body: the eight `i64` lanes held in four 128-bit
+/// `int64x2_t` registers. NEON has no 64-bit gather instruction, so
+/// the product-LUT reads stay scalar (the 64 KiB table is
+/// cache-resident); what the body makes explicit is the lane *adds* —
+/// `vaddq_s64` pairs — the serial chain the portable loop leaves to
+/// the autovectorizer. Same integer sums, same single rounding:
+/// bit-identical to the scalar quire oracle by associativity.
+///
+/// # Safety
+/// The caller must have confirmed NEON via
+/// `isa::host_has(IsaBody::Neon)` — trivially true on aarch64, where
+/// ASIMD is architecturally mandatory, but the dispatch checks anyway
+/// so every body crosses the same guarded gate.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn rows_p8_neon(a: &DecodedPlan, b: &DecodedPlan,
+                       bias: Option<&BiasDec>, i0: usize, nrows: usize,
+                       out: &mut [u64]) {
+    use core::arch::aarch64::{
+        vaddq_s64, vcombine_s64, vcreate_s64, vld1q_s64, vst1q_s64,
+    };
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let (a8, b8) = (&a.words8, &b.words8);
+    for r in 0..nrows {
+        let i = i0 + r;
+        let arow = &a8[i * k..(i + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let mut j0 = 0usize;
+        while j0 + P8_LANES <= n {
+            let seed = p8_lane_bias(bias, j0);
+            let sp = seed.as_ptr();
+            let mut v0 = vld1q_s64(sp);
+            let mut v1 = vld1q_s64(sp.add(2));
+            let mut v2 = vld1q_s64(sp.add(4));
+            let mut v3 = vld1q_s64(sp.add(6));
+            for (kk, &aw) in arow.iter().enumerate() {
+                if aw == 0 {
+                    continue;
+                }
+                let base = (aw as usize) << 8;
+                let brow = &b8[kk * n + j0..kk * n + j0 + P8_LANES];
+                let p0 = vcombine_s64(
+                    vcreate_s64(lut[base | brow[0] as usize] as u64),
+                    vcreate_s64(lut[base | brow[1] as usize] as u64));
+                let p1 = vcombine_s64(
+                    vcreate_s64(lut[base | brow[2] as usize] as u64),
+                    vcreate_s64(lut[base | brow[3] as usize] as u64));
+                let p2 = vcombine_s64(
+                    vcreate_s64(lut[base | brow[4] as usize] as u64),
+                    vcreate_s64(lut[base | brow[5] as usize] as u64));
+                let p3 = vcombine_s64(
+                    vcreate_s64(lut[base | brow[6] as usize] as u64),
+                    vcreate_s64(lut[base | brow[7] as usize] as u64));
+                v0 = vaddq_s64(v0, p0);
+                v1 = vaddq_s64(v1, p1);
+                v2 = vaddq_s64(v2, p2);
+                v3 = vaddq_s64(v3, p3);
+            }
+            let mut lanes = [0i64; P8_LANES];
+            let mp = lanes.as_mut_ptr();
+            vst1q_s64(mp, v0);
+            vst1q_s64(mp.add(2), v1);
+            vst1q_s64(mp.add(4), v2);
+            vst1q_s64(mp.add(6), v3);
+            for (jj, &v) in lanes.iter().enumerate() {
+                orow[j0 + jj] =
+                    encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+            }
+            j0 += P8_LANES;
+        }
+        p8_tail(arow, b8, bias, j0, n, fmt, orow);
+    }
+}
+
 /// P8 element-at-a-time baseline (PR 1): one scalar LUT gather per MAC
 /// into a heap accumulator row. Kept callable so
 /// `benches/hotpath.rs`'s `simd_vs_scalar_gather` section measures the
@@ -652,23 +851,34 @@ fn rows_p8_unblocked(a: &DecodedPlan, b: &DecodedPlan,
     }
 }
 
-/// P8 streaming k-chunked loop (k above the tile's chunk threshold):
-/// the reduction is carved into chunks of `kc` elements and the tile's
-/// rows re-walk one chunk's B slice (`kc`×n bytes — L2-sized) before
-/// the next chunk streams in, instead of dragging the whole k-deep B
-/// panel through cache once per row. Lane accumulators persist across
-/// chunks in a heap buffer (loaded into the register lane block for
-/// the chunk's k-walk, stored after) — partial `i64` sums are exact
-/// and associative, so the chunking is bit-identical to
-/// [`rows_p8_lanes`].
+/// P8 streaming k-chunked dispatch (k above the tile's chunk
+/// threshold): picks the instruction-set variant of the chunked lane
+/// walk — the AVX2 gather version when the body asks for (and the
+/// host has) it, else the portable one. The chunked k-loop used to
+/// lean entirely on autovectorization; the explicit ymm variant is
+/// the PR 10 body the autotuner can now measure against it.
 fn rows_p8_kchunk(a: &DecodedPlan, b: &DecodedPlan,
                   bias: Option<&BiasDec>, i0: usize, nrows: usize,
-                  out: &mut [u64], kc: usize) {
-    let (k, n) = (a.cols, b.cols);
-    let fmt = a.fmt;
-    let lut = lut::p8_prod_lut();
-    let (a8, b8) = (&a.words8, &b.words8);
-    // Persistent accumulators (value = acc * 2^-12), bias-seeded once.
+                  out: &mut [u64], kc: usize, body: IsaBody) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(body, IsaBody::Avx2 | IsaBody::Avx512)
+        && isa::host_has(IsaBody::Avx2)
+    {
+        // SAFETY: AVX2 presence was just runtime-checked.
+        unsafe {
+            rows_p8_kchunk_avx2(a, b, bias, i0, nrows, out, kc);
+        }
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = body;
+    rows_p8_kchunk_lanes(a, b, bias, i0, nrows, out, kc)
+}
+
+/// Heap accumulator buffer for the chunked P8 walk (value = acc ×
+/// 2^-12), bias-seeded once before the first chunk.
+fn p8_chunk_acc(bias: Option<&BiasDec>, nrows: usize,
+                n: usize) -> Vec<i64> {
     let mut acc = vec![0i64; nrows * n];
     if bias.is_some() {
         for row in acc.chunks_mut(n) {
@@ -677,6 +887,43 @@ fn rows_p8_kchunk(a: &DecodedPlan, b: &DecodedPlan,
             }
         }
     }
+    acc
+}
+
+/// Scalar column tail of one row's chunk walk: columns past the last
+/// full lane block accumulate straight into the heap buffer.
+#[inline]
+fn p8_chunk_tail(arow: &[u8], b8: &[u8], n: usize, k0: usize,
+                 j0: usize, arow_acc: &mut [i64]) {
+    let lut = lut::p8_prod_lut();
+    for (j, slot) in arow_acc.iter_mut().enumerate().skip(j0) {
+        let mut s = *slot;
+        for (kk, &aw) in arow.iter().enumerate() {
+            if aw != 0 {
+                s += lut[((aw as usize) << 8)
+                    | b8[(k0 + kk) * n + j] as usize];
+            }
+        }
+        *slot = s;
+    }
+}
+
+/// P8 streaming k-chunked loop, portable variant: the reduction is
+/// carved into chunks of `kc` elements and the tile's rows re-walk
+/// one chunk's B slice (`kc`×n bytes — L2-sized) before the next
+/// chunk streams in, instead of dragging the whole k-deep B panel
+/// through cache once per row. Lane accumulators persist across
+/// chunks in a heap buffer (loaded into the register lane block for
+/// the chunk's k-walk, stored after) — partial `i64` sums are exact
+/// and associative, so the chunking is bit-identical to
+/// [`rows_p8_lanes`].
+fn rows_p8_kchunk_lanes(a: &DecodedPlan, b: &DecodedPlan,
+                        bias: Option<&BiasDec>, i0: usize,
+                        nrows: usize, out: &mut [u64], kc: usize) {
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let (a8, b8) = (&a.words8, &b.words8);
+    let mut acc = p8_chunk_acc(bias, nrows, n);
     let mut k0 = 0usize;
     while k0 < k {
         let k1 = (k0 + kc).min(k);
@@ -690,32 +937,89 @@ fn rows_p8_kchunk(a: &DecodedPlan, b: &DecodedPlan,
                     [j0..j0 + P8_LANES]
                     .try_into()
                     .unwrap();
+                p8_lane_block(arow, b8, n, k0, j0, &mut lanes);
+                arow_acc[j0..j0 + P8_LANES].copy_from_slice(&lanes);
+                j0 += P8_LANES;
+            }
+            p8_chunk_tail(arow, b8, n, k0, j0, arow_acc);
+        }
+        k0 = k1;
+    }
+    for (o, &v) in out.iter_mut().zip(&acc) {
+        *o = encode_acc_i64(v, P8_ACC_FRAC_OFFSET, fmt);
+    }
+}
+
+/// P8 streaming k-chunked loop, AVX2 variant: the same chunk walk as
+/// [`rows_p8_kchunk_lanes`] with each lane block's gathers issued as
+/// two `vpgatherqq` and the adds as two `vpaddq` — the explicit form
+/// of what the autovectorizer was trusted to do before. Partial sums
+/// are the same exact integers in the same heap buffer, so the
+/// variant is bit-identical by associativity.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// (`isa::host_has(IsaBody::Avx2)`) before calling — the chunked
+/// dispatch above does exactly that.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn rows_p8_kchunk_avx2(a: &DecodedPlan, b: &DecodedPlan,
+                              bias: Option<&BiasDec>, i0: usize,
+                              nrows: usize, out: &mut [u64],
+                              kc: usize) {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi64, _mm256_cvtepu8_epi64,
+        _mm256_i64gather_epi64, _mm256_loadu_si256, _mm256_or_si256,
+        _mm256_set1_epi64x, _mm256_storeu_si256, _mm_cvtsi32_si128,
+    };
+    let (k, n) = (a.cols, b.cols);
+    let fmt = a.fmt;
+    let lut = lut::p8_prod_lut();
+    let lp = lut.as_ptr();
+    let (a8, b8) = (&a.words8, &b.words8);
+    let mut acc = p8_chunk_acc(bias, nrows, n);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + kc).min(k);
+        for r in 0..nrows {
+            let i = i0 + r;
+            let arow = &a8[i * k + k0..i * k + k1];
+            let arow_acc = &mut acc[r * n..(r + 1) * n];
+            let mut j0 = 0usize;
+            while j0 + P8_LANES <= n {
+                let ap = arow_acc.as_ptr().add(j0);
+                let mut vlo =
+                    _mm256_loadu_si256(ap as *const __m256i);
+                let mut vhi =
+                    _mm256_loadu_si256(ap.add(4) as *const __m256i);
                 for (kk, &aw) in arow.iter().enumerate() {
                     if aw == 0 {
                         continue;
                     }
-                    let base = (aw as usize) << 8;
-                    let brow = &b8[(k0 + kk) * n + j0
-                        ..(k0 + kk) * n + j0 + P8_LANES];
-                    for (slot, &bw) in lanes.iter_mut().zip(brow) {
-                        *slot += lut[base | bw as usize];
-                    }
+                    let base = _mm256_set1_epi64x((aw as i64) << 8);
+                    let row = (k0 + kk) * n + j0;
+                    let bytes: [u8; 8] =
+                        b8[row..row + P8_LANES].try_into().unwrap();
+                    let bv = u64::from_le_bytes(bytes);
+                    let lo: __m128i =
+                        _mm_cvtsi32_si128(bv as u32 as i32);
+                    let hi: __m128i =
+                        _mm_cvtsi32_si128((bv >> 32) as u32 as i32);
+                    let ilo = _mm256_or_si256(
+                        _mm256_cvtepu8_epi64(lo), base);
+                    let ihi = _mm256_or_si256(
+                        _mm256_cvtepu8_epi64(hi), base);
+                    vlo = _mm256_add_epi64(
+                        vlo, _mm256_i64gather_epi64::<8>(lp, ilo));
+                    vhi = _mm256_add_epi64(
+                        vhi, _mm256_i64gather_epi64::<8>(lp, ihi));
                 }
-                arow_acc[j0..j0 + P8_LANES].copy_from_slice(&lanes);
+                let mp = arow_acc.as_mut_ptr().add(j0);
+                _mm256_storeu_si256(mp as *mut __m256i, vlo);
+                _mm256_storeu_si256(mp.add(4) as *mut __m256i, vhi);
                 j0 += P8_LANES;
             }
-            for (j, slot) in
-                arow_acc.iter_mut().enumerate().skip(j0)
-            {
-                let mut s = *slot;
-                for (kk, &aw) in arow.iter().enumerate() {
-                    if aw != 0 {
-                        s += lut[((aw as usize) << 8)
-                            | b8[(k0 + kk) * n + j] as usize];
-                    }
-                }
-                *slot = s;
-            }
+            p8_chunk_tail(arow, b8, n, k0, j0, arow_acc);
         }
         k0 = k1;
     }
@@ -1285,6 +1589,18 @@ mod tests {
         assert!(TileConfig { p32_panel: 0, ..TileConfig::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn inner_path_tags_round_trip() {
+        for p in [InnerPath::Auto, InnerPath::Portable,
+                  InnerPath::Gather, InnerPath::Hybrid,
+                  InnerPath::Unblocked] {
+            assert_eq!(InnerPath::from_tag(p.tag()), Ok(p));
+        }
+        assert!(InnerPath::from_tag("fast").is_err());
+        assert!(InnerPath::from_tag("Auto").is_err(),
+                "tags are case-sensitive");
     }
 
     #[test]

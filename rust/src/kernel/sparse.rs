@@ -944,7 +944,7 @@ pub fn spgemm_with_config(a: &SparsePlan, b: &DecodedPlan,
     gemm::record_gemm();
     CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
     let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
-    let (tile, _path) =
+    let (tile, _path, _body) =
         autotune::resolve_sparse(cfg, a.fmt, a.rows, a.cols, a.nnz());
     let eff_k = (a.nnz() / m).max(1);
     let t = gemm::threads_for(m, eff_k, n, cfg);
@@ -989,7 +989,7 @@ pub fn spgemm_fused_into(a: &SparsePlan, b: &DecodedPlan,
     gemm::record_fused((m * n) as u64);
     let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let bd_ref = bd.as_ref();
-    let (tile, _path) =
+    let (tile, _path, _body) =
         autotune::resolve_sparse(cfg, a.fmt, a.rows, a.cols, a.nnz());
     let eff_k = (a.nnz() / m).max(1);
     let t = gemm::threads_for(m, eff_k, n, cfg);
@@ -1051,7 +1051,7 @@ pub fn spgemm_bt(a: &DecodedPlan, bt: &SparsePlan,
     CTR_SPARSE_GEMMS.fetch_add(1, Ordering::Relaxed);
     let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let bd_ref = bd.as_ref();
-    let (tile, _path) = autotune::resolve_sparse(
+    let (tile, _path, _body) = autotune::resolve_sparse(
         cfg, a.fmt, bt.rows, bt.cols, bt.nnz());
     let eff_k = (bt.nnz() / n).max(1);
     let t = gemm::threads_for(m, eff_k, n, cfg);
@@ -1082,7 +1082,7 @@ pub fn spgemm_bt_fused_into(a: &DecodedPlan, bt: &SparsePlan,
     gemm::record_fused((m * n) as u64);
     let bd = bias.map(|bs| BiasDec::new(bs, a.fmt));
     let bd_ref = bd.as_ref();
-    let (tile, _path) = autotune::resolve_sparse(
+    let (tile, _path, _body) = autotune::resolve_sparse(
         cfg, a.fmt, bt.rows, bt.cols, bt.nnz());
     let eff_k = (bt.nnz() / n).max(1);
     let t = gemm::threads_for(m, eff_k, n, cfg);

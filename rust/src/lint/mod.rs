@@ -17,6 +17,7 @@
 //! | `unsafe-audit` | every `unsafe` preceded by a `// SAFETY:` comment |
 //! | `lock-order` | no cycles in the coordinator's lock acquisition graph |
 //! | `spawn-audit` | OS threads only from the pool/coordinator/stats dumper |
+//! | `isa-hygiene` | CPU-feature detection / `std::arch` only in `kernel/{isa,simd}.rs` |
 //! | `counter-coverage` | every counter emitted in stats-json and test-asserted |
 //!
 //! Run it with `cargo run --release --bin spade-lint`; findings
@@ -56,6 +57,7 @@ pub const RULE_IDS: &[&str] = &[
     "unsafe-audit",
     "lock-order",
     "spawn-audit",
+    "isa-hygiene",
     "counter-coverage",
 ];
 
@@ -247,6 +249,7 @@ fn per_file_findings(ctx: &FileCtx<'_>) -> Vec<Finding> {
     out.extend(rules::rule_no_unwrap(ctx));
     out.extend(rules::rule_unsafe_audit(ctx));
     out.extend(rules::rule_spawn_audit(ctx));
+    out.extend(rules::rule_isa_hygiene(ctx));
     out
 }
 

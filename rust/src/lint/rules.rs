@@ -284,6 +284,59 @@ pub fn rule_spawn_audit(ctx: &FileCtx<'_>) -> Vec<Finding> {
     out
 }
 
+/// Files allowed to touch `std::arch` / runtime CPU-feature
+/// detection: the dispatch point ([`crate::kernel::isa`]) and the
+/// module holding the intrinsic bodies it dispatches to.
+pub const ISA_ALLOWLIST: &[&str] = &[
+    "src/kernel/isa.rs",
+    "src/kernel/simd.rs",
+];
+
+/// **isa-hygiene** — `is_x86_feature_detected!` /
+/// `is_aarch64_feature_detected!` and `std::arch` / `core::arch`
+/// paths only in `kernel/isa.rs` (detection) and `kernel/simd.rs`
+/// (the intrinsic bodies) — PR 10 contract: a feature probe anywhere
+/// else fragments the per-host dispatch decision `kernel::isa`
+/// exists to centralize. Token-accurate: docs and strings naming the
+/// macros never trip it.
+pub fn rule_isa_hygiene(ctx: &FileCtx<'_>) -> Vec<Finding> {
+    if ISA_ALLOWLIST.iter().any(|p| ctx.path.ends_with(p)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = &ctx.toks;
+    for i in 0..t.len() {
+        if t[i].is_ident("is_x86_feature_detected")
+            || t[i].is_ident("is_aarch64_feature_detected")
+        {
+            out.push(ctx.finding(
+                "isa-hygiene",
+                t[i].line,
+                format!("{}! outside kernel/isa.rs; ask \
+                         kernel::isa::host_has / available_bodies so \
+                         the dispatch decision stays centralized",
+                        t[i].text),
+            ));
+        }
+        if i + 3 < t.len()
+            && (t[i].is_ident("std") || t[i].is_ident("core"))
+            && t[i + 1].is_punct(":")
+            && t[i + 2].is_punct(":")
+            && t[i + 3].is_ident("arch")
+        {
+            out.push(ctx.finding(
+                "isa-hygiene",
+                t[i].line,
+                format!("{}::arch outside kernel/{{isa,simd}}.rs; \
+                         intrinsic bodies live in kernel/simd.rs \
+                         behind the kernel::isa dispatch point",
+                        t[i].text),
+            ));
+        }
+    }
+    out
+}
+
 /// A counter definition site (struct field or `u64` getter).
 #[derive(Debug, Clone)]
 pub struct CounterDef {

@@ -247,7 +247,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (b, 256, 64),  // square: filled batches
             (b, 2048, 64), // deep-k: deep reductions
             (4, 256, 64),  // skinny: under-filled batches
-        ]);
+        ])?;
         println!("warm-up: {probes} autotune probe(s)");
     }
 

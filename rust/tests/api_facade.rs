@@ -453,13 +453,13 @@ fn warm_up_pretunes_so_requests_never_probe() {
         .unwrap();
     let shapes = [(16usize, 32usize, 16usize), (2, 2048, 4)];
     let before = kernel::counters().autotune_probes;
-    let probes = engine.warm_up(&shapes);
+    let probes = engine.warm_up(&shapes).unwrap();
     let after = kernel::counters().autotune_probes;
     assert_eq!(after - before, probes as u64,
                "warm_up reports exactly the probes it ran");
     // Classes covered: (square + deep-k) × 3 precisions on first
     // call; a second warm-up finds everything cached.
-    assert_eq!(engine.warm_up(&shapes), 0,
+    assert_eq!(engine.warm_up(&shapes).unwrap(), 0,
                "everything already tuned");
     // Post-warm-up traffic of the covered classes never probes, and
     // tuned results stay bit-identical to the default config.

@@ -1,0 +1,313 @@
+//! Forced-ISA-body bit-identity sweep (PR 10).
+//!
+//! Every compiled-in kernel body — portable, AVX2 ymm gather, AVX-512
+//! zmm gather, NEON, and their chunked k-loop variants — is forced
+//! through [`spade::kernel::gemm_single_body`] and asserted
+//! bit-identical to the scalar decode-per-MAC quire oracle, across
+//! all three precisions and with NaR-poisoned operands. A body the
+//! host cannot run is skipped **loudly** (named in the test output)
+//! and its entry point must return `None` — never a silent fallback
+//! measurement.
+//!
+//! The second half pins the new epilogue activations' commutation
+//! contract: `HardTanh` commutes with the single rounding for every
+//! input (monotone rounding + exactly-representable dyadic bounds),
+//! `LeakyRelu` at the exact-input boundaries (maxpos/minpos/zero) its
+//! rustdoc scopes the claim to — and both stay fused == layer-wise
+//! everywhere because the two paths share one word-level
+//! implementation.
+
+use spade::kernel::{self, activate_words, gemm_fused, gemm_with_config,
+                    Activation, DecodedPlan, Dyadic, Epilogue, IsaBody,
+                    KernelConfig, TileConfig};
+use spade::posit::{from_f64, to_f64, PositFormat, Quire, P16_FMT,
+                   P32_FMT, P8_FMT};
+use spade::util::SplitMix64;
+
+/// Scalar reference: decode-per-MAC through one quire per output —
+/// the exact semantics every forced body must reproduce bit-for-bit.
+fn scalar_ref(aw: &[u64], bw: &[u64], bias: Option<&[u64]>, m: usize,
+              k: usize, n: usize, fmt: PositFormat) -> Vec<u64> {
+    let mut out = vec![0u64; m * n];
+    let mut q = Quire::new(fmt);
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for kk in 0..k {
+                q.mac(aw[i * k + kk], bw[kk * n + j]);
+            }
+            if let Some(bs) = bias {
+                q.add_posit(bs[j]);
+            }
+            out[i * n + j] = q.to_posit();
+        }
+    }
+    out
+}
+
+fn rand_words(rng: &mut SplitMix64, len: usize, fmt: PositFormat)
+              -> Vec<u64> {
+    (0..len)
+        .map(|_| match rng.below(4) {
+            // raw bit patterns: exercises NaR, maxpos/minpos, tapered
+            // extremes
+            0 => rng.next_u64() & fmt.mask(),
+            1 => from_f64(rng.wide(-12, 12), fmt),
+            2 => from_f64(rng.normal(), fmt),
+            _ => 0,
+        })
+        .collect()
+}
+
+/// Force `body` through a batch of random shapes (NaR-poisoned rows
+/// included) under `tile` and compare to the oracle. Panics with the
+/// body's name on the first mismatch.
+fn sweep_body(body: IsaBody, tile: Option<TileConfig>, seed: u64,
+              min_k: usize) {
+    let mut rng = SplitMix64::new(seed);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for trial in 0..6u64 {
+            let m = rng.below(5) as usize + 1;
+            let k = min_k + rng.below(24) as usize;
+            let n = rng.below(9) as usize + 1;
+            let mut aw = rand_words(&mut rng, m * k, fmt);
+            let bw = rand_words(&mut rng, k * n, fmt);
+            if trial % 2 == 0 {
+                // Poison a row so the NaR path runs under this body.
+                let row = rng.below(m as u64) as usize;
+                let col = rng.below(k as u64) as usize;
+                aw[row * k + col] = fmt.nar();
+            }
+            let bias = (trial % 3 == 0)
+                .then(|| rand_words(&mut rng, n, fmt));
+            let pa = DecodedPlan::from_words(aw.clone(), m, k, fmt);
+            let pb = DecodedPlan::from_words(bw.clone(), k, n, fmt);
+            let got = kernel::gemm_single_body(
+                &pa, &pb, bias.as_deref(), body, tile)
+                .expect("host_has said this body is available");
+            let want =
+                scalar_ref(&aw, &bw, bias.as_deref(), m, k, n, fmt);
+            assert_eq!(got, want,
+                       "body {} {fmt:?} ({m},{k},{n}) tile {tile:?}",
+                       body.tag());
+        }
+    }
+}
+
+#[test]
+fn every_available_body_matches_the_quire_oracle() {
+    let mut skipped = Vec::new();
+    for body in IsaBody::ALL {
+        if !kernel::host_has(body) {
+            // Loud skip: the body's name goes to the test output and
+            // the forced entry must refuse rather than fall back.
+            println!("SKIP: body {} unavailable on this host",
+                     body.tag());
+            skipped.push(body.tag());
+            let pa = DecodedPlan::from_words(vec![0u64; 4], 2, 2,
+                                             P8_FMT);
+            let pb = DecodedPlan::from_words(vec![0u64; 4], 2, 2,
+                                             P8_FMT);
+            assert!(kernel::gemm_single_body(&pa, &pb, None, body,
+                                             None).is_none(),
+                    "unavailable body {} must return None, not a \
+                     silent fallback", body.tag());
+            continue;
+        }
+        sweep_body(body, None, 0x1907 + body as u64, 1);
+    }
+    println!("skipped bodies: [{}]", skipped.join(", "));
+    assert!(kernel::host_has(IsaBody::Portable),
+            "portable can never be skipped");
+}
+
+#[test]
+fn chunked_k_loop_variants_match_the_quire_oracle() {
+    // A tiny explicit k_chunk with k well beyond it forces the
+    // streaming chunked loops (the AVX2 chunked body on x86, the
+    // autovectorized portable one elsewhere) instead of the one-shot
+    // lane loop.
+    let tile = TileConfig { k_chunk: 16, ..TileConfig::DEFAULT };
+    for body in IsaBody::ALL {
+        if !kernel::host_has(body) {
+            println!("SKIP: chunked {} unavailable on this host",
+                     body.tag());
+            continue;
+        }
+        sweep_body(body, Some(tile), 0x2026 + body as u64, 48);
+    }
+}
+
+#[test]
+fn available_bodies_agree_with_the_forced_entry() {
+    // available_bodies() is the autotuner's sweep set; every listed
+    // body must actually run and the list must match host_has.
+    let avail = kernel::available_bodies();
+    for body in IsaBody::ALL {
+        assert_eq!(avail.contains(&body), kernel::host_has(body),
+                   "{} listing / host_has mismatch", body.tag());
+    }
+    assert_eq!(*avail.last().unwrap(), IsaBody::Portable);
+}
+
+// --------------------------------------------------- tuned-table sidecar
+
+#[test]
+fn tuned_sidecar_lets_a_second_process_warm_up_with_zero_probes() {
+    use spade::api::{AutotuneMode, Engine};
+    // This binary's only autotune-probing test (the probe counter is
+    // process-wide; api_facade owns its own counter-flatness test for
+    // the same reason).
+    let path = std::env::temp_dir().join(format!(
+        "spade_tuned_test_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let shapes = [(16usize, 32usize, 16usize), (2, 2048, 4)];
+    let engine = Engine::builder()
+        .autotune(AutotuneMode::Warmup)
+        .tuned_path(&path)
+        .build()
+        .unwrap();
+    // Cold process: empty table, so warm_up probes and then writes
+    // the sidecar.
+    spade::kernel::settings::tuned_clear();
+    let cold = engine.warm_up(&shapes).unwrap();
+    assert!(cold > 0, "cold warm-up must probe");
+    assert!(path.exists(), "warm_up persists the tuned table");
+    // "Second process": wipe the in-process table (that is all
+    // another process of this fleet would lack) and warm up pointed
+    // at the sidecar — zero probes, counter-asserted.
+    spade::kernel::settings::tuned_clear();
+    let before = spade::kernel::counters().autotune_probes;
+    let warm = engine.warm_up(&shapes).unwrap();
+    let after = spade::kernel::counters().autotune_probes;
+    assert_eq!(warm, 0, "persisted winners satisfy every class");
+    assert_eq!(after, before, "zero probes, by the counter too");
+    // A corrupt sidecar is a hard error — never a silent re-probe.
+    std::fs::write(&path, "{\"schema\": \"bogus\"}").unwrap();
+    spade::kernel::settings::tuned_clear();
+    let err = engine.warm_up(&shapes);
+    assert!(err.is_err(), "corrupt tuned table must fail loudly");
+    assert!(format!("{:#}", err.unwrap_err()).contains("schema"));
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------- activation commutation
+
+#[test]
+fn leaky_relu_commutes_at_exact_boundaries() {
+    // The scoped claim: at inputs that are fixed points of rounding
+    // (maxpos, ±minpos, zero — the boundary words), the word chain
+    // round(x)·2^-shift equals the ideal single rounding of the exact
+    // scaled accumulator. NaR passes through untouched.
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for shift in [1u32, 4, 8, 16] {
+            let act = Activation::LeakyRelu { shift };
+            act.validate(fmt).expect("in-range shift");
+            let scale = ((1u64 << shift) as f64).recip();
+            let maxpos = fmt.maxpos_word();
+            let words = vec![0u64, maxpos, fmt.negate(maxpos), 1,
+                             fmt.negate(1), fmt.nar()];
+            let mut got = words.clone();
+            activate_words(&mut got, act, fmt);
+            for (i, &w) in words.iter().enumerate() {
+                let want = if w == fmt.nar() {
+                    fmt.nar()
+                } else {
+                    let x = to_f64(w, fmt);
+                    if x < 0.0 {
+                        // to_f64 is exact and x·2^-shift is one exact
+                        // f64 product, so this IS the one-rounding
+                        // ideal of the exact accumulator value.
+                        from_f64(x * scale, fmt)
+                    } else {
+                        w
+                    }
+                };
+                assert_eq!(got[i], want,
+                           "{fmt:?} shift {shift} word {w:#x}");
+            }
+        }
+    }
+    assert!(Activation::LeakyRelu { shift: 0 }
+                .validate(P8_FMT).is_err());
+    assert!(Activation::LeakyRelu { shift: 17 }
+                .validate(P8_FMT).is_err());
+}
+
+#[test]
+fn hard_tanh_commutes_with_rounding_universally() {
+    // The ReLU6 argument on both sides: rounding is monotone and
+    // fixes each dyadic bound, so clamp(round(x)) == round(clamp(x))
+    // for EVERY exact accumulator value x — sampled wide here, plus
+    // the boundary values themselves.
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        for (lo, hi) in [
+            (Dyadic { sig: -1, exp: 0 }, Dyadic { sig: 1, exp: 0 }),
+            (Dyadic { sig: -1, exp: -1 }, Dyadic { sig: 3, exp: -1 }),
+        ] {
+            let act = Activation::HardTanh { lo, hi };
+            act.validate(fmt).expect("representable dyadic bounds");
+            let mut rng = SplitMix64::new(0xF00D);
+            let mut xs = vec![0.0, lo.value(), hi.value(),
+                              to_f64(fmt.maxpos_word(), fmt),
+                              -to_f64(fmt.maxpos_word(), fmt),
+                              to_f64(1, fmt), -to_f64(1, fmt)];
+            for _ in 0..64 {
+                xs.push(rng.wide(-14, 14));
+            }
+            for x in xs {
+                let ideal = from_f64(x.clamp(lo.value(), hi.value()),
+                                     fmt);
+                let mut w = [from_f64(x, fmt)];
+                activate_words(&mut w, act, fmt);
+                assert_eq!(w[0], ideal,
+                           "{fmt:?} clamp [{}, {}] at x = {x}",
+                           lo.value(), hi.value());
+            }
+            // NaR passes through.
+            let mut w = [fmt.nar()];
+            activate_words(&mut w, act, fmt);
+            assert_eq!(w[0], fmt.nar());
+        }
+    }
+    // Inverted bounds and bounds outside the format are rejected.
+    let one = Dyadic { sig: 1, exp: 0 };
+    let minus = Dyadic { sig: -1, exp: 0 };
+    assert!(Activation::HardTanh { lo: one, hi: minus }
+                .validate(P8_FMT).is_err());
+    let huge = Dyadic { sig: 1, exp: 40 };
+    assert!(Activation::HardTanh { lo: minus, hi: huge }
+                .validate(P8_FMT).is_err(),
+            "2^40 is not representable in posit(8,0)");
+}
+
+#[test]
+fn fused_epilogue_matches_layerwise_for_new_activations() {
+    // Structural bit-identity: the fused epilogue and the layer-wise
+    // chain run the SAME activate_words, so their outputs must match
+    // word-for-word for the new variants too.
+    let cfg = KernelConfig::DEFAULT;
+    let mut rng = SplitMix64::new(0xAC71);
+    for fmt in [P8_FMT, P16_FMT, P32_FMT] {
+        let (m, k, n) = (5usize, 33usize, 7usize);
+        let aw = rand_words(&mut rng, m * k, fmt);
+        let bw = rand_words(&mut rng, k * n, fmt);
+        let bias = rand_words(&mut rng, n, fmt);
+        let pa = DecodedPlan::from_words(aw, m, k, fmt);
+        let pb = DecodedPlan::from_words(bw, k, n, fmt);
+        for act in [
+            Activation::LeakyRelu { shift: 3 },
+            Activation::HardTanh {
+                lo: Dyadic { sig: -1, exp: 0 },
+                hi: Dyadic { sig: 1, exp: 0 },
+            },
+        ] {
+            let fused = gemm_fused(&pa, &pb, Some(&bias),
+                                   Epilogue { act }, &cfg);
+            let mut words =
+                gemm_with_config(&pa, &pb, Some(&bias), &cfg);
+            activate_words(&mut words, act, fmt);
+            assert_eq!(fused.words, words, "{fmt:?} {act:?}");
+        }
+    }
+}

@@ -9,7 +9,8 @@
 use spade::lint::lockorder::{collect_edges, cycle_findings};
 use spade::lint::rules::{
     rule_counter_coverage, rule_edge_only_encode, rule_env_hygiene,
-    rule_no_unwrap, rule_spawn_audit, rule_unsafe_audit, FileCtx,
+    rule_isa_hygiene, rule_no_unwrap, rule_spawn_audit,
+    rule_unsafe_audit, FileCtx,
 };
 use spade::lint::{lint_source, Finding};
 
@@ -345,6 +346,48 @@ fn live() {
     // `thread::scope` is not spawn/Builder; `s.spawn` has no
     // `thread::` path prefix.
     assert!(rule_spawn_audit(&ctx).is_empty());
+}
+
+// ------------------------------------------------------------ isa-hygiene
+
+#[test]
+fn isa_hygiene_confines_detection_and_arch_to_kernel() {
+    let src = r#"
+fn pick() {
+    if is_x86_feature_detected!("avx2") {
+        use std::arch::x86_64::_mm256_i64gather_epi64;
+    }
+    if std::arch::is_aarch64_feature_detected!("neon") {}
+    let _ = core::arch::x86_64::_mm_setzero_si128();
+}
+"#;
+    // Rogue feature probes outside the dispatch point: the two macro
+    // idents fire, plus each of the three `{std,core}::arch` paths.
+    let ctx = FileCtx::new("rust/src/kernel/gemm2.rs", src);
+    let f = rule_isa_hygiene(&ctx);
+    assert_eq!(f.len(), 5, "{f:?}");
+    assert!(f.iter().all(|x| x.rule == "isa-hygiene"));
+
+    // The sanctioned homes: detection in isa.rs, bodies in simd.rs.
+    let ctx = FileCtx::new("rust/src/kernel/isa.rs", src);
+    assert!(rule_isa_hygiene(&ctx).is_empty());
+    let ctx = FileCtx::new("rust/src/kernel/simd.rs", src);
+    assert!(rule_isa_hygiene(&ctx).is_empty());
+}
+
+#[test]
+fn isa_hygiene_ignores_comments_strings_and_lookalikes() {
+    let src = r##"
+// docs may say is_x86_feature_detected!("avx2") or std::arch freely
+fn f() {
+    let doc = "is_x86_feature_detected!(\"avx2\")";
+    let raw = r#"std::arch::x86_64"#;
+    let arch = my::arch::probe();      // not std/core::arch
+    let std_arch = stdx::arch::get();  // different leading ident
+}
+"##;
+    let ctx = FileCtx::new("rust/src/nn/exec2.rs", src);
+    assert!(rule_isa_hygiene(&ctx).is_empty());
 }
 
 // ------------------------------------------------------ counter-coverage

@@ -148,7 +148,9 @@ for key in simd_vs_scalar_gather blocked_vs_unblocked_p16 \
            sparse_vs_dense_p32_d1 sparse_vs_dense_p32_d10 \
            sparse_vs_dense_p32_d50 \
            degrade_vs_reject_goodput_on degrade_vs_reject_goodput_off \
-           degrade_vs_reject_p99us_on degrade_vs_reject_p99us_off; do
+           degrade_vs_reject_p99us_on degrade_vs_reject_p99us_off \
+           isa_body_p8_portable isa_body_matrix_bodies \
+           tuned_persist_cold_vs_warm; do
   if ! grep -q "\"$key\"" BENCH_hotpath.json; then
     echo "verify: BENCH_hotpath.json is missing the '$key' section" >&2
     echo "        (did benches/hotpath.rs lose a comparison?)" >&2
